@@ -1,0 +1,44 @@
+//! Data-pipeline throughput: the batch generators must never bottleneck
+//! the PJRT step (they run on the same thread in the training loop).
+
+use slimadam::benchkit::Bencher;
+use slimadam::data::bpe::Bpe;
+use slimadam::data::images::SynthImages;
+use slimadam::data::markov::MarkovLm;
+use slimadam::data::DataSource;
+
+fn main() {
+    let b = Bencher::default();
+    println!("== data pipeline throughput ==");
+
+    // Markov LM batches (gpt_nano geometry)
+    let mut lm = MarkovLm::new(512, 1.07, 0.5, 1).source(16, 64, 2);
+    b.bench_with_units("data/markov_batch_16x64", (16 * 64) as f64, "tok", || {
+        std::hint::black_box(lm.next_batch());
+    });
+
+    // gpt_mini geometry
+    let mut lm2 = MarkovLm::new(2048, 1.07, 0.5, 1).source(8, 128, 2);
+    b.bench_with_units("data/markov_batch_8x128", (8 * 128) as f64, "tok", || {
+        std::hint::black_box(lm2.next_batch());
+    });
+
+    // synthetic images (vit/resnet geometry)
+    let mut imgs = SynthImages::new(100, 32, 3, 0.3, 3).source(32, 4);
+    b.bench_with_units("data/images_batch_32x32x32x3", 32.0, "img", || {
+        std::hint::black_box(imgs.next_batch());
+    });
+
+    // BPE train + encode on repo text
+    if let Ok(text) = slimadam::data::corpus::collect_text(".") {
+        let sample = &text[..text.len().min(60_000)];
+        b.bench_with_units("data/bpe_train_60k_v512", sample.len() as f64, "byte", || {
+            std::hint::black_box(Bpe::train(sample, 512));
+        });
+        let bpe = Bpe::train(sample, 512);
+        let probe = &text[..text.len().min(100_000)];
+        b.bench_with_units("data/bpe_encode_100k", probe.len() as f64, "byte", || {
+            std::hint::black_box(bpe.encode(probe));
+        });
+    }
+}

@@ -1,0 +1,63 @@
+//! End-to-end per-step training throughput for the paper-table workloads
+//! (one row per figure-level configuration): the criterion-style numbers
+//! EXPERIMENTS.md quotes as the testbed's capability, and the regression
+//! guard for the optimization pass (§Perf).
+
+use slimadam::benchkit::Bencher;
+use slimadam::coordinator::{make_data, DataSpec};
+use slimadam::optim::{clip_global_norm, presets, Hypers};
+use slimadam::runtime::engine::{cpu_client, GradEngine};
+use slimadam::tensor::Tensor;
+
+fn main() {
+    let client = cpu_client().expect("pjrt client");
+    let b = Bencher::default();
+    println!("== end-to-end step throughput per paper workload ==");
+
+    // (bench id / paper artifact, model, optimizer, data)
+    let rows: &[(&str, &str, &str, DataSpec)] = &[
+        ("fig1_gpt_adam", "gpt_nano", "adam",
+         DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 7 }),
+        ("fig1_gpt_slimadam", "gpt_nano", "slimadam",
+         DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 7 }),
+        ("fig1_gpt_adam_mini", "gpt_nano", "adam_mini_v2",
+         DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 7 }),
+        ("fig1_gpt_sm3", "gpt_nano", "sm3",
+         DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 7 }),
+        ("fig5_resnet_adam", "resnet_mini_c10", "adam",
+         DataSpec::Images { noise: 0.3, seed: 9 }),
+        ("fig6_vit_adam", "vit_mini_c10", "adam",
+         DataSpec::Images { noise: 0.3, seed: 9 }),
+        ("fig7_linear2_adam", "linear2_v1024", "adam",
+         DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 7 }),
+        ("fig11_gptmini_slimadam", "gpt_mini", "slimadam",
+         DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 7 }),
+    ];
+
+    for (id, model, opt_name, data_spec) in rows {
+        let Ok(engine) = GradEngine::new("artifacts", model, &client) else {
+            eprintln!("skipping {id}: {model} artifact missing");
+            continue;
+        };
+        let man = engine.manifest().clone();
+        let mut rng = slimadam::rng::Rng::new(6);
+        let mut params: Vec<Tensor> = man
+            .params
+            .iter()
+            .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+            .collect();
+        let mut opt = presets::build(opt_name, &man, Hypers::default()).unwrap();
+        let mut data = make_data(&man, data_spec, 13).unwrap();
+        let units = man.batch[0].shape.iter().product::<usize>() as f64;
+        let unit_label: &'static str =
+            if matches!(data_spec, DataSpec::Images { .. }) { "px" } else { "tok" };
+        let mut t = 0usize;
+        b.bench_with_units(&format!("e2e/{id}"), units, unit_label, || {
+            t += 1;
+            let batch = data.next_batch();
+            let (_loss, mut grads) = engine.step(&params, &batch).unwrap();
+            clip_global_norm(&mut grads, 1.0);
+            opt.step(&mut params, &grads, t, 1e-4);
+        });
+    }
+}

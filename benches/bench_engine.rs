@@ -1,0 +1,93 @@
+//! PJRT engine step latency: split grad_step vs fused train_step, plus the
+//! host↔literal conversion overhead the fused path avoids. This is the
+//! per-step cost decomposition behind EXPERIMENTS.md §Perf.
+
+use slimadam::benchkit::Bencher;
+use slimadam::coordinator::{make_data, DataSpec};
+use slimadam::optim::adamk::AdamK;
+use slimadam::optim::{clip_global_norm, KMode, Optimizer};
+use slimadam::runtime::engine::{cpu_client, GradEngine, TrainEngine};
+use slimadam::runtime::literal::{literal_to_tensor, tensor_to_literal};
+use slimadam::tensor::Tensor;
+
+fn main() {
+    let client = cpu_client().expect("pjrt client");
+    let b = Bencher::default();
+    let data_spec = DataSpec::Markov {
+        alpha: 1.07,
+        coherence: 0.5,
+        seed: 7,
+    };
+
+    for model in ["gpt_nano", "gpt_mini"] {
+        let Ok(engine) = GradEngine::new("artifacts", model, &client) else {
+            eprintln!("skipping {model}: artifacts missing");
+            continue;
+        };
+        let man = engine.manifest().clone();
+        let tokens = man.batch[0].shape.iter().product::<usize>() as f64;
+        let mut rng = slimadam::rng::Rng::new(4);
+        let mut params: Vec<Tensor> = man
+            .params
+            .iter()
+            .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+            .collect();
+        let mut data = make_data(&man, &data_spec, 11).unwrap();
+        let batch = data.next_batch();
+
+        println!("== {model}: split engine ==");
+        b.bench_with_units(&format!("engine/{model}/grad_step"), tokens, "tok", || {
+            let (_loss, _grads) = engine.step(&params, &batch).unwrap();
+        });
+
+        let mut opt = AdamK::new(
+            "adam",
+            man.params.clone(),
+            vec![KMode::None; man.n_params()],
+            Default::default(),
+        );
+        let mut t = 0usize;
+        b.bench_with_units(
+            &format!("engine/{model}/split_full_step"),
+            tokens,
+            "tok",
+            || {
+                t += 1;
+                let (_loss, mut grads) = engine.step(&params, &batch).unwrap();
+                clip_global_norm(&mut grads, 1.0);
+                opt.step(&mut params, &grads, t, 1e-4);
+            },
+        );
+
+        // literal conversion overhead (params up + grads down)
+        b.bench(&format!("engine/{model}/literal_upload"), || {
+            for p in &params {
+                std::hint::black_box(tensor_to_literal(p).unwrap());
+            }
+        });
+        let lits: Vec<_> = params.iter().map(|p| tensor_to_literal(p).unwrap()).collect();
+        b.bench(&format!("engine/{model}/literal_download"), || {
+            for l in &lits {
+                std::hint::black_box(literal_to_tensor(l).unwrap());
+            }
+        });
+
+        // fused engine (artifact exists for gpt_nano/gpt_mini adam+slimadam)
+        for ruleset in ["adam", "slimadam"] {
+            let Ok(mut fused) =
+                TrainEngine::new("artifacts", model, ruleset, &client, "mitchell", 5)
+            else {
+                continue;
+            };
+            println!("== {model}: fused engine ({ruleset}) ==");
+            b.bench_with_units(
+                &format!("engine/{model}/fused_step/{ruleset}"),
+                tokens,
+                "tok",
+                || {
+                    fused.step(&batch, 1e-4).unwrap();
+                },
+            );
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Optimizer step latency across the family (gpt_nano-shaped parameter
+//! list). Regenerates the cost side of the paper's memory/compute
+//! trade-off: compressed-K AdamK must not be slower than Adam (it reads
+//! and writes less state).
+
+use slimadam::benchkit::Bencher;
+use slimadam::optim::presets;
+use slimadam::optim::Optimizer;
+use slimadam::runtime::Manifest;
+use slimadam::tensor::Tensor;
+
+fn main() {
+    let man = Manifest::load("artifacts/gpt_nano.grad.manifest.json")
+        .expect("run `make artifacts` first");
+    let total: usize = man.total_param_elems();
+    let mut rng = slimadam::rng::Rng::new(1);
+    let mut params: Vec<Tensor> = man
+        .params
+        .iter()
+        .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+        .collect();
+    let grads: Vec<Tensor> = man
+        .params
+        .iter()
+        .map(|p| {
+            Tensor::from_vec(
+                &p.shape,
+                (0..p.numel()).map(|_| rng.normal() as f32).collect(),
+            )
+        })
+        .collect();
+
+    let b = Bencher::default();
+    println!("== optimizer step latency (gpt_nano, {total} params) ==");
+    for name in presets::ALL {
+        let mut opt = presets::build(name, &man, Default::default()).unwrap();
+        let mut t = 0usize;
+        b.bench_with_units(&format!("optim_step/{name}"), total as f64, "param", || {
+            t += 1;
+            opt.step(&mut params, &grads, t, 1e-4);
+        });
+    }
+}

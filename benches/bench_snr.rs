@@ -1,0 +1,69 @@
+//! SNR computation (Eq. 3) throughput — the probe must be cheap enough to
+//! run at the paper's cadence without perturbing training wallclock.
+
+use slimadam::benchkit::Bencher;
+use slimadam::runtime::KMode;
+use slimadam::snr::snr_of_view;
+
+fn main() {
+    let b = Bencher::default();
+    println!("== SNR_K throughput ==");
+    for (rows, cols) in [(64usize, 64usize), (512, 512), (768, 3072)] {
+        let mut rng = slimadam::rng::Rng::new(2);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| (rng.normal().abs() + 1e-4) as f32)
+            .collect();
+        for k in [KMode::FanOut, KMode::FanIn, KMode::Both] {
+            b.bench_with_units(
+                &format!("snr/{}x{}/{}", rows, cols, k.as_str()),
+                (rows * cols) as f64,
+                "elem",
+                || {
+                    std::hint::black_box(snr_of_view(rows, cols, &data, k));
+                },
+            );
+        }
+    }
+
+    // full-probe cost on a gpt_nano-shaped model
+    if let Ok(man) = slimadam::runtime::Manifest::load("artifacts/gpt_nano.grad.manifest.json") {
+        use slimadam::optim::adamk::AdamK;
+        use slimadam::optim::{KMode as K, Optimizer};
+        use slimadam::snr::SnrProbe;
+        use slimadam::tensor::Tensor;
+        let mut rng = slimadam::rng::Rng::new(3);
+        let mut opt = AdamK::new(
+            "adam",
+            man.params.clone(),
+            vec![K::None; man.n_params()],
+            Default::default(),
+        );
+        let mut params: Vec<Tensor> = man
+            .params
+            .iter()
+            .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = man
+            .params
+            .iter()
+            .map(|p| {
+                Tensor::from_vec(
+                    &p.shape,
+                    (0..p.numel()).map(|_| rng.normal() as f32).collect(),
+                )
+            })
+            .collect();
+        opt.step(&mut params, &grads, 1, 1e-4);
+        let b2 = Bencher::default();
+        b2.bench_with_units(
+            "snr/full_probe/gpt_nano",
+            man.total_param_elems() as f64,
+            "param",
+            || {
+                let mut probe = SnrProbe::new();
+                probe.record(1, &opt, &man.params);
+                std::hint::black_box(&probe);
+            },
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! SNR diagnostics (§3 + Discussion): probe the second-moment SNR of any
+//! model along an Adam run and print the layer-type table the paper's
+//! Figures 2-6 summarize — the "is my model compressible?" diagnostic a
+//! practitioner would run before switching to a low-memory optimizer.
+//!
+//!     cargo run --release --example snr_probe -- --model vit_mini_c10
+
+use anyhow::Result;
+
+use slimadam::cli::Args;
+use slimadam::coordinator::{run_config, TrainConfig};
+use slimadam::rules::RuleSet;
+use slimadam::snr::ProbeSchedule;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let steps = args.usize_or("steps", 120)?;
+    let lr = args.f64_or("lr", 1e-3)?;
+
+    let vision = model.starts_with("vit") || model.starts_with("resnet");
+    let mut cfg = if vision {
+        TrainConfig::vision(&model, "adam", lr, steps)
+    } else {
+        TrainConfig::lm(&model, "adam", lr, steps)
+    };
+    cfg.probe = Some(ProbeSchedule::default());
+
+    println!("probing {model} for {steps} steps at lr {lr:.0e} ...");
+    let s = run_config(&cfg)?;
+    let snr = s.snr.expect("probe enabled");
+
+    println!("\nEq. 4 time-averaged SNR by layer type:");
+    println!("{}", slimadam::exp::layer_type_table(&snr));
+
+    let man = slimadam::exp::manifest(&model)?;
+    for cutoff in [0.8, 1.0, 2.0] {
+        let rules = RuleSet::derive(&snr, cutoff, format!("c{cutoff}"), Some(lr));
+        println!(
+            "cutoff {cutoff:>4}: {:3} tensors compressed -> {:.1}% of second moments saved",
+            rules.rules.len(),
+            100.0 * rules.saving(&man)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""Build-time Python package: Pallas kernels (L1), JAX models (L2) and the
+AOT lowering pipeline that produces the HLO-text artifacts executed by the
+Rust runtime. Nothing in this package is imported at run time.
+"""

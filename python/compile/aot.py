@@ -1,0 +1,251 @@
+"""AOT lowering pipeline: JAX → HLO text + JSON manifest (+ fixtures).
+
+Run once via ``make artifacts``; Python never executes on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly.
+
+Usage:
+    python -m compile.aot --outdir ../artifacts [--only NAME] [--large]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import optim_jax
+from .models import gpt, linear2, llama, resnet, vit
+from .models.common import Model
+from .optim_jax import Hypers, make_grad_step, make_train_step
+
+_DTYPES = {"f32": jnp.float32, "s32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def build_model(name: str) -> Model:
+    for mod in (gpt, llama, vit, resnet, linear2):
+        if name in mod.PRESETS:
+            return mod.build(mod.PRESETS[name])
+    raise KeyError(f"no model preset named {name!r}")
+
+
+def _example_args(model: Model):
+    params = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.specs]
+    batch = [jax.ShapeDtypeStruct(shape, _DTYPES[dt])
+             for (_n, shape, dt) in model.batch_specs]
+    return params, batch
+
+
+def lower_grad_step(model: Model) -> tuple[str, dict]:
+    params, batch = _example_args(model)
+    fn = make_grad_step(model)
+    lowered = jax.jit(fn).lower(*params, *batch)
+    text = to_hlo_text(lowered)
+    manifest = {
+        "kind": "grad_step",
+        "model": model.meta,
+        "params": [s.to_json() for s in model.specs],
+        "batch": [{"name": n, "shape": list(sh), "dtype": dt}
+                  for (n, sh, dt) in model.batch_specs],
+        "inputs": ([f"param:{s.name}" for s in model.specs]
+                   + [f"batch:{n}" for (n, _s, _d) in model.batch_specs]),
+        "outputs": (["loss"] + [f"grad:{s.name}" for s in model.specs]),
+    }
+    return text, manifest
+
+
+def lower_train_step(model: Model, ruleset: str, hypers: Hypers) -> tuple[str, dict]:
+    params, batch = _example_args(model)
+    fn, k_modes = make_train_step(model, ruleset, hypers)
+    v_shapes = optim_jax.v_shapes_for(model, k_modes)
+    m = params
+    v = [jax.ShapeDtypeStruct(vs, jnp.float32) for vs in v_shapes]
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(fn).lower(*params, *m, *v, *batch, scal, scal)
+    text = to_hlo_text(lowered)
+    manifest = {
+        "kind": "train_step",
+        "ruleset": ruleset,
+        "model": model.meta,
+        "hypers": {"beta1": hypers.beta1, "beta2": hypers.beta2,
+                   "eps": hypers.eps, "weight_decay": hypers.weight_decay,
+                   "clip_norm": hypers.clip_norm},
+        "params": [s.to_json() for s in model.specs],
+        "k_modes": k_modes,
+        "v_shapes": [list(vs) for vs in v_shapes],
+        "batch": [{"name": n, "shape": list(sh), "dtype": dt}
+                  for (n, sh, dt) in model.batch_specs],
+        "inputs": ([f"param:{s.name}" for s in model.specs]
+                   + [f"m:{s.name}" for s in model.specs]
+                   + [f"v:{s.name}" for s in model.specs]
+                   + [f"batch:{n}" for (n, _s, _d) in model.batch_specs]
+                   + ["scalar:step", "scalar:lr"]),
+        "outputs": (["loss", "grad_norm"]
+                    + [f"param:{s.name}" for s in model.specs]
+                    + [f"m:{s.name}" for s in model.specs]
+                    + [f"v:{s.name}" for s in model.specs]),
+    }
+    return text, manifest
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+GRAD_MODELS = (
+    "gpt_nano", "gpt_nano_w192", "gpt_mini", "llama_tiny",
+    "vit_mini_c10", "vit_mini_c100", "resnet_mini_c10", "resnet_mini_c100",
+) + tuple(f"linear2_v{v}" for v in linear2.VOCABS)
+
+# Fused single-dispatch engines: (model, ruleset, beta2)
+FUSED = (
+    ("gpt_nano", "adam"),
+    ("gpt_nano", "slimadam"),
+    ("gpt_nano", "adalayer"),
+    ("gpt_mini", "adam"),
+    ("gpt_mini", "slimadam"),
+)
+
+LARGE_GRAD_MODELS = ("gpt_small",)
+
+LM_HYPERS = Hypers(beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1,
+                   clip_norm=1.0)
+
+
+def write_artifact(outdir, name, text, manifest):
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    man_path = os.path.join(outdir, f"{name}.manifest.json")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    manifest["hlo_sha256"] = hashlib.sha256(text.encode()).hexdigest()
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: {len(text) / 1e6:.2f} MB hlo, "
+          f"{len(manifest['inputs'])} inputs, {len(manifest['outputs'])} outputs")
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer numeric fixtures (python reference -> rust integration tests)
+# ---------------------------------------------------------------------------
+
+def _ref_adamw_train(model: Model, params, batches, hypers: Hypers, lr, steps):
+    """Plain-jnp AdamW training loop (K=none), the rust split-engine oracle."""
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    losses = []
+    loss_grad = jax.jit(jax.value_and_grad(model.loss))
+    for t in range(1, steps + 1):
+        x, y = batches[t - 1]
+        loss, grads = loss_grad(params, x, y)
+        grads, _ = optim_jax.global_norm_clip(grads, hypers.clip_norm)
+        bc1 = 1.0 / (1.0 - hypers.beta1 ** t)
+        bc2 = 1.0 / (1.0 - hypers.beta2 ** t)
+        new_params = []
+        for i, (spec, w, g) in enumerate(zip(model.specs, params, grads)):
+            m[i] = hypers.beta1 * m[i] + (1 - hypers.beta1) * g
+            v[i] = hypers.beta2 * v[i] + (1 - hypers.beta2) * g * g
+            wd = hypers.weight_decay if spec.wd else 0.0
+            new_params.append(
+                w - lr * ((m[i] * bc1) / (jnp.sqrt(v[i] * bc2) + hypers.eps)
+                          + wd * w))
+        params = new_params
+        losses.append(float(loss))
+    return params, losses
+
+
+def make_fixture(outdir, model_name, steps=5, lr=1e-3, seed=7):
+    model = build_model(model_name)
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, "mitchell")
+
+    batches = []
+    arrays = {}
+    for t in range(steps):
+        xs = []
+        for (bname, shape, dt) in model.batch_specs:
+            if dt == "s32":
+                hi = model.meta.get("vocab", model.meta.get("classes", 2))
+                arr = rng.integers(0, hi, size=shape).astype(np.int32)
+            else:
+                arr = rng.standard_normal(size=shape).astype(np.float32)
+            arrays[f"{bname}{t}"] = arr
+            xs.append(jnp.asarray(arr))
+        batches.append(tuple(xs))
+
+    final, losses = _ref_adamw_train(model, params, batches, LM_HYPERS, lr, steps)
+
+    fixdir = os.path.join(outdir, "fixtures")
+    os.makedirs(fixdir, exist_ok=True)
+    np.savez(os.path.join(fixdir, f"{model_name}.params.npz"),
+             **{s.name: np.asarray(p) for s, p in zip(model.specs, params)})
+    np.savez(os.path.join(fixdir, f"{model_name}.batches.npz"), **arrays)
+    meta = {
+        "model": model_name, "steps": steps, "lr": lr,
+        "hypers": {"beta1": LM_HYPERS.beta1, "beta2": LM_HYPERS.beta2,
+                   "eps": LM_HYPERS.eps, "weight_decay": LM_HYPERS.weight_decay,
+                   "clip_norm": LM_HYPERS.clip_norm},
+        "losses": losses,
+        "final_param_l2": float(jnp.sqrt(sum(jnp.sum(p * p) for p in final))),
+    }
+    with open(os.path.join(fixdir, f"{model_name}.fixture.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  fixture {model_name}: losses={['%.4f' % l for l in losses]}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="lower a single artifact by name")
+    ap.add_argument("--large", action="store_true",
+                    help="also lower the ~124M gpt_small artifact")
+    ap.add_argument("--skip-fixtures", action="store_true")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.outdir, exist_ok=True)
+    t0 = time.time()
+
+    grads = list(GRAD_MODELS) + (list(LARGE_GRAD_MODELS) if args.large else [])
+    for name in grads:
+        art = f"{name}.grad"
+        if args.only and args.only not in (name, art):
+            continue
+        text, manifest = lower_grad_step(build_model(name))
+        write_artifact(args.outdir, art, text, manifest)
+
+    for (name, ruleset) in FUSED:
+        art = f"{name}.train.{ruleset}"
+        if args.only and args.only != art:
+            continue
+        text, manifest = lower_train_step(build_model(name), ruleset, LM_HYPERS)
+        write_artifact(args.outdir, art, text, manifest)
+
+    if not args.skip_fixtures and not args.only:
+        make_fixture(args.outdir, "linear2_v64", steps=5, lr=1e-3)
+        make_fixture(args.outdir, "gpt_nano", steps=3, lr=1e-3)
+
+    print(f"done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the SlimAdam reproduction.
+
+All kernels are authored as TPU Pallas kernels but lowered with
+``interpret=True`` so they execute on the CPU PJRT backend (real-TPU
+lowering emits Mosaic custom-calls the CPU plugin cannot run). Numerical
+correctness is validated against the pure-jnp oracles in ``ref.py`` by the
+pytest suite (hypothesis sweeps over shapes / K-modes).
+"""
+
+from .fused_update import fused_adamk_update, v_shape_for  # noqa: F401
+from .snr import snr_stats  # noqa: F401

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+These implementations are deliberately written in the most direct way
+possible (no tiling, no streaming accumulation) so that any disagreement
+with the kernels points at the kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .fused_update import v_shape_for
+
+VAR_FLOOR = 1e-30
+
+
+def ref_adamk_update(w, m, v, g, scalars, *, k_mode: str = "none"):
+    """Reference generalized-Adam update (Eq. 2 + AdamW step)."""
+    s = scalars.reshape(-1)
+    beta1, beta2, eps, lr, wd, bc1, bc2 = [s[i] for i in range(7)]
+
+    squeeze = False
+    if w.ndim == 1:
+        k_mode = "none" if k_mode == "none" else "both"
+        w, m, g = w[None, :], m[None, :], g[None, :]
+        v = v[None, :] if v.ndim == 1 else v
+        squeeze = True
+
+    g2 = g * g
+    if k_mode == "none":
+        ek = g2
+    elif k_mode == "fan_out":
+        ek = jnp.mean(g2, axis=0, keepdims=True)
+    elif k_mode == "fan_in":
+        ek = jnp.mean(g2, axis=1, keepdims=True)
+    else:
+        ek = jnp.mean(g2, keepdims=True)
+
+    v_new = beta2 * v + (1.0 - beta2) * ek
+    m_new = beta1 * m + (1.0 - beta1) * g
+    w_new = w - lr * ((m_new * bc1) / (jnp.sqrt(v_new * bc2) + eps) + wd * w)
+
+    if squeeze:
+        return w_new[0], m_new[0], v_new[0]
+    return w_new, m_new, v_new
+
+
+def ref_snr(v, k_mode: str):
+    """Reference SNR_K (Eq. 3): E_{K'}[ mean_K(V)^2 / var_K(V) ]."""
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 1:
+        mean = jnp.mean(v)
+        var = jnp.maximum(jnp.var(v), VAR_FLOOR)
+        return (mean * mean) / var
+    if k_mode == "fan_out":
+        axis = 0
+    elif k_mode == "fan_in":
+        axis = 1
+    elif k_mode in ("both", "all"):
+        mean = jnp.mean(v)
+        var = jnp.maximum(jnp.var(v), VAR_FLOOR)
+        return (mean * mean) / var
+    else:
+        raise ValueError(f"no SNR for k_mode {k_mode!r}")
+    mean = jnp.mean(v, axis=axis)
+    var = jnp.maximum(jnp.var(v, axis=axis), VAR_FLOOR)
+    return jnp.mean((mean * mean) / var)
+
+
+def ref_snr_stats(v):
+    """Reference for kernels.snr.snr_stats: (3,) vector of SNRs."""
+    if v.ndim == 1:
+        s = ref_snr(v, "both")
+        return jnp.stack([s, s, s])
+    return jnp.stack([ref_snr(v, "fan_out"),
+                      ref_snr(v, "fan_in"),
+                      ref_snr(v, "both")])
+
+
+__all__ = ["ref_adamk_update", "ref_snr", "ref_snr_stats", "v_shape_for"]

@@ -1,0 +1,9 @@
+"""Layer-2 model definitions (JAX, build-time only).
+
+Each model module exposes a ``build(cfg) -> Model`` where ``Model`` carries
+the ordered parameter specs (the contract with the Rust runtime via the
+artifact manifest) and a pure loss function over the flat parameter list.
+"""
+
+from .common import Model, ParamSpec  # noqa: F401
+from . import gpt, llama, vit, resnet, linear2  # noqa: F401

@@ -1,0 +1,183 @@
+"""Shared model plumbing: parameter specs, init metadata, core layers.
+
+Conventions (mirrored by the Rust runtime — see rust/src/runtime/manifest.rs):
+
+  * Linear weights are stored as ``(fan_out, fan_in)`` and applied as
+    ``y = x @ W.T`` so axis 0 is always fan_out and axis 1 fan_in,
+    matching the paper's K-notation (K=0 -> average over fan_out,
+    K=1 -> average over fan_in).
+  * Embeddings are stored as ``(vocab, d_model)``; axis 0 is the token
+    dimension (the paper's incompressible dimension for Tok.Embd/LM Head).
+  * Conv weights are stored HWIO ``(kh, kw, in_ch, out_ch)`` for
+    ``lax.conv_general_dilated``; the manifest records
+    ``fan_out_axis = 3`` so the analysis side views them as
+    ``(out_ch, kh*kw*in_ch)``.
+  * Every spec carries two init descriptions: ``init_mitchell``
+    (Groeneveld et al. 2024: N(0, 0.02^2), residual-stream projections
+    scaled by 1/sqrt(2*n_layers)) and ``init_default`` (PyTorch:
+    U(-1/sqrt(fan_in), 1/sqrt(fan_in)) for linears, N(0,1) embeddings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    layer_type: str          # tok_embd, pos_embd, lm_head, attn_q, ..., ln_final
+    depth: int               # block index, or -1 for non-block params
+    init_mitchell: dict      # {"scheme": .., ...}
+    init_default: dict
+    wd: bool                 # decoupled weight decay applies (2-D params)
+    fan_out_axis: int = 0    # axis to treat as fan_out in the matrix view
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "layer_type": self.layer_type,
+            "depth": self.depth,
+            "init_mitchell": self.init_mitchell,
+            "init_default": self.init_default,
+            "wd": self.wd,
+            "fan_out_axis": self.fan_out_axis,
+        }
+
+
+@dataclasses.dataclass
+class Model:
+    name: str
+    specs: list                      # [ParamSpec]
+    loss: Callable                   # loss(params_list, *batch) -> scalar
+    batch_specs: list                # [(name, shape, dtype_str)]
+    meta: dict                       # model hyperparameters for the manifest
+
+    def index(self, name: str) -> int:
+        for i, s in enumerate(self.specs):
+            if s.name == name:
+                return i
+        raise KeyError(name)
+
+    def init_params(self, key, scheme: str = "mitchell"):
+        """Build a concrete parameter list (used by tests and fixtures)."""
+        params = []
+        for spec in self.specs:
+            key, sub = jax.random.split(key)
+            init = spec.init_mitchell if scheme == "mitchell" else spec.init_default
+            params.append(materialize_init(sub, spec.shape, init))
+        return params
+
+
+def materialize_init(key, shape, init):
+    s = init["scheme"]
+    if s == "zeros":
+        return jnp.zeros(shape, jnp.float32)
+    if s == "ones":
+        return jnp.ones(shape, jnp.float32)
+    if s == "normal":
+        return init["std"] * jax.random.normal(key, shape, jnp.float32)
+    if s == "uniform":
+        lim = init["limit"]
+        return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+    if s == "trunc_normal":
+        return init["std"] * jax.random.truncated_normal(
+            key, -2.0, 2.0, shape, jnp.float32)
+    raise ValueError(f"unknown init scheme {s!r}")
+
+
+def normal(std):
+    return {"scheme": "normal", "std": float(std)}
+
+
+def uniform_fanin(fan_in):
+    return {"scheme": "uniform", "limit": float(1.0 / (fan_in ** 0.5))}
+
+
+def zeros():
+    return {"scheme": "zeros"}
+
+
+def ones():
+    return {"scheme": "ones"}
+
+
+def trunc_normal(std):
+    return {"scheme": "trunc_normal", "std": float(std)}
+
+
+# ---------------------------------------------------------------------------
+# Core layers (pure functions over explicit weights)
+# ---------------------------------------------------------------------------
+
+def linear(x, w):
+    """x: (..., fan_in), w: (fan_out, fan_in) -> (..., fan_out)."""
+    return x @ w.T
+
+
+def layernorm(x, weight, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return weight * (x - mu) / jnp.sqrt(var + eps)
+
+
+def rmsnorm(x, weight, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return weight * x / jnp.sqrt(ms + eps)
+
+
+def causal_attention(x, wq, wk, wv, wproj, n_heads):
+    """Multi-head causal self-attention without biases.
+
+    x: (B, T, D); wq/wk/wv/wproj: (D, D) stored (fan_out, fan_in).
+    Heads are stacked along fan_out of wq/wk/wv — the dimension the paper
+    finds incompressible for keys/queries.
+    """
+    b, t, d = x.shape
+    hd = d // n_heads
+    q = linear(x, wq).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    k = linear(x, wk).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    v = linear(x, wv).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return linear(y, wproj)
+
+
+def bidirectional_attention(x, wq, wk, wv, wproj, n_heads):
+    """ViT-style (unmasked) multi-head self-attention."""
+    b, t, d = x.shape
+    hd = d // n_heads
+    q = linear(x, wq).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    k = linear(x, wk).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    v = linear(x, wv).reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return linear(y, wproj)
+
+
+def cross_entropy_lm(logits, targets):
+    """Mean token-level cross entropy. logits (B,T,V), targets (B,T) i32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def cross_entropy_cls(logits, labels):
+    """Mean class cross entropy. logits (B,C), labels (B,) i32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return -jnp.mean(ll)
+
+
+def params_dict(model: Model, params: Sequence):
+    return {s.name: p for s, p in zip(model.specs, params)}

@@ -1,0 +1,108 @@
+"""GPT-style decoder-only transformer (Radford et al. 2019 / nanoGPT style).
+
+Matches the paper's App. B.1 architecture choices at reduced scale:
+learnable positional embeddings, weight tying (Tok.Embd doubles as the LM
+head), MLP upscaling factor 4, pre-LN blocks, no biases anywhere,
+LayerNorm with weight only.
+
+Parameter order (the manifest contract): tok_embd, pos_embd, then per
+block [ln_attn, attn_q, attn_k, attn_v, attn_proj, ln_mlp, mlp_up,
+mlp_down], then ln_final.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .common import (Model, ParamSpec, causal_attention, cross_entropy_lm,
+                     layernorm, linear, normal, ones, uniform_fanin)
+
+
+@dataclasses.dataclass
+class GptConfig:
+    name: str = "gpt_nano"
+    n_layers: int = 4
+    n_heads: int = 4
+    d_model: int = 64
+    vocab: int = 512
+    ctx: int = 64
+    mlp_factor: int = 4
+    batch: int = 16
+
+    @property
+    def d_mlp(self):
+        return self.mlp_factor * self.d_model
+
+
+# Paper presets, width/depth-scaled for the CPU testbed (DESIGN.md §3).
+PRESETS = {
+    "gpt_nano": GptConfig("gpt_nano", 4, 4, 64, 512, 64, 4, 16),
+    "gpt_nano_w192": GptConfig("gpt_nano_w192", 4, 4, 192, 512, 64, 4, 16),
+    "gpt_mini": GptConfig("gpt_mini", 6, 6, 192, 2048, 128, 4, 8),
+    # ~124M-param GPT-small analogue for the e2e `--large` preset.
+    "gpt_small": GptConfig("gpt_small", 12, 12, 768, 50304, 1024, 4, 4),
+}
+
+
+def build(cfg: GptConfig) -> Model:
+    d, v, t = cfg.d_model, cfg.vocab, cfg.ctx
+    std = 0.02
+    resid_std = std / (2 * cfg.n_layers) ** 0.5
+
+    specs = [
+        ParamSpec("tok_embd", (v, d), "tok_embd", -1,
+                  normal(std), normal(1.0), wd=True),
+        ParamSpec("pos_embd", (t, d), "pos_embd", -1,
+                  normal(std), normal(1.0), wd=True),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"h{l}."
+        specs += [
+            ParamSpec(p + "ln_attn", (d,), "ln_attn", l, ones(), ones(), wd=False),
+            ParamSpec(p + "attn_q", (d, d), "attn_q", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_k", (d, d), "attn_k", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_v", (d, d), "attn_v", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_proj", (d, d), "attn_proj", l,
+                      normal(resid_std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "ln_mlp", (d,), "ln_mlp", l, ones(), ones(), wd=False),
+            ParamSpec(p + "mlp_up", (cfg.d_mlp, d), "mlp_up", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "mlp_down", (d, cfg.d_mlp), "mlp_down", l,
+                      normal(resid_std), uniform_fanin(cfg.d_mlp), wd=True),
+        ]
+    specs.append(ParamSpec("ln_final", (d,), "ln_final", -1,
+                           ones(), ones(), wd=False))
+
+    nl, nh = cfg.n_layers, cfg.n_heads
+
+    def loss(params, x, y):
+        it = iter(params)
+        tok = next(it)
+        pos = next(it)
+        h = tok[x] + pos[None, : x.shape[1], :]
+        for _ in range(nl):
+            ln_a = next(it)
+            wq, wk, wv, wp = next(it), next(it), next(it), next(it)
+            ln_m = next(it)
+            w_up, w_down = next(it), next(it)
+            h = h + causal_attention(layernorm(h, ln_a), wq, wk, wv, wp, nh)
+            z = linear(layernorm(h, ln_m), w_up)
+            h = h + linear(_gelu(z), w_down)
+        ln_f = next(it)
+        h = layernorm(h, ln_f)
+        logits = h @ tok.T  # weight tying: LM head = tok_embd
+        return cross_entropy_lm(logits, y)
+
+    batch_specs = [("x", (cfg.batch, t), "s32"), ("y", (cfg.batch, t), "s32")]
+    meta = dataclasses.asdict(cfg) | {"family": "gpt", "tied": True}
+    return Model(cfg.name, specs, loss, batch_specs, meta)
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 *
+                                     (x + 0.044715 * x * x * x)))

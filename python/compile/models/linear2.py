@@ -1,0 +1,54 @@
+"""Simplified two-layer model for the vocabulary-size experiments (§4.1):
+a token embedding matrix followed directly by a linear LM head (no
+transformer blocks). The paper uses this model on WikiText-103 with BPE
+vocab sweeps to show that heavy-tailed token distributions make the token
+dimension incompressible.
+
+App. B.2 init: embedding ~ truncated N(0, 1), head ~ truncated
+N(0, 1/fan_in).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .common import (Model, ParamSpec, cross_entropy_lm, trunc_normal)
+
+
+@dataclasses.dataclass
+class Linear2Config:
+    name: str = "linear2_v256"
+    vocab: int = 256
+    d_model: int = 128
+    ctx: int = 32
+    batch: int = 16
+
+
+# Vocab sweep presets (paper: 1k..65k on WikiText; scaled to the BPE'd
+# repo corpus — DESIGN.md §3).
+VOCABS = (64, 128, 256, 512, 1024, 2048, 4096)
+PRESETS = {
+    f"linear2_v{v}": Linear2Config(f"linear2_v{v}", vocab=v) for v in VOCABS
+}
+
+
+def build(cfg: Linear2Config) -> Model:
+    v, d = cfg.vocab, cfg.d_model
+    specs = [
+        ParamSpec("tok_embd", (v, d), "tok_embd", -1,
+                  trunc_normal(1.0), trunc_normal(1.0), wd=True),
+        ParamSpec("lm_head", (v, d), "lm_head", -1,
+                  trunc_normal(1.0 / d ** 0.5), trunc_normal(1.0 / d ** 0.5),
+                  wd=True),
+    ]
+
+    def loss(params, x, y):
+        tok, head = params
+        h = tok[x]
+        logits = h @ head.T
+        return cross_entropy_lm(logits, y)
+
+    batch_specs = [("x", (cfg.batch, cfg.ctx), "s32"),
+                   ("y", (cfg.batch, cfg.ctx), "s32")]
+    meta = dataclasses.asdict(cfg) | {"family": "linear2", "tied": False}
+    return Model(cfg.name, specs, loss, batch_specs, meta)

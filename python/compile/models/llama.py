@@ -1,0 +1,107 @@
+"""Llama-style transformer for the fine-tuning experiments (§3.1.2).
+
+Architectural deltas vs. the GPT module that matter for the paper's SNR
+analysis: RMSNorm instead of LayerNorm, a three-matrix gated MLP
+(Up / Gate / Down, SiLU activation), untied LM head, and a vocabulary
+that is large relative to d_model (the paper attributes the token
+embedding's reduced SNR to exactly this ratio).
+
+Parameter order: tok_embd, pos_embd, per block [rms_attn, attn_q, attn_k,
+attn_v, attn_proj, rms_mlp, mlp_up, mlp_gate, mlp_down], rms_final,
+lm_head.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Model, ParamSpec, causal_attention, cross_entropy_lm,
+                     linear, normal, ones, rmsnorm, uniform_fanin)
+
+
+@dataclasses.dataclass
+class LlamaConfig:
+    name: str = "llama_tiny"
+    n_layers: int = 4
+    n_heads: int = 4
+    d_model: int = 96
+    vocab: int = 1024          # large vocab/d ratio, as in Llama-3.2
+    ctx: int = 64
+    mlp_factor: int = 3        # Llama-ish (8/3 rounded)
+    batch: int = 16
+
+    @property
+    def d_mlp(self):
+        return self.mlp_factor * self.d_model
+
+
+PRESETS = {
+    "llama_tiny": LlamaConfig(),
+}
+
+
+def build(cfg: LlamaConfig) -> Model:
+    d, v, t = cfg.d_model, cfg.vocab, cfg.ctx
+    std = 0.02
+    resid_std = std / (2 * cfg.n_layers) ** 0.5
+
+    specs = [
+        ParamSpec("tok_embd", (v, d), "tok_embd", -1,
+                  normal(std), normal(1.0), wd=True),
+        ParamSpec("pos_embd", (t, d), "pos_embd", -1,
+                  normal(std), normal(1.0), wd=True),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"h{l}."
+        specs += [
+            ParamSpec(p + "rms_attn", (d,), "ln_attn", l, ones(), ones(), wd=False),
+            ParamSpec(p + "attn_q", (d, d), "attn_q", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_k", (d, d), "attn_k", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_v", (d, d), "attn_v", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_proj", (d, d), "attn_proj", l,
+                      normal(resid_std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "rms_mlp", (d,), "ln_mlp", l, ones(), ones(), wd=False),
+            ParamSpec(p + "mlp_up", (cfg.d_mlp, d), "mlp_up", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "mlp_gate", (cfg.d_mlp, d), "mlp_gate", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "mlp_down", (d, cfg.d_mlp), "mlp_down", l,
+                      normal(resid_std), uniform_fanin(cfg.d_mlp), wd=True),
+        ]
+    specs += [
+        ParamSpec("rms_final", (d,), "ln_final", -1, ones(), ones(), wd=False),
+        ParamSpec("lm_head", (v, d), "lm_head", -1,
+                  normal(std), uniform_fanin(d), wd=True),
+    ]
+
+    nl, nh = cfg.n_layers, cfg.n_heads
+
+    def loss(params, x, y):
+        it = iter(params)
+        tok = next(it)
+        pos = next(it)
+        h = tok[x] + pos[None, : x.shape[1], :]
+        for _ in range(nl):
+            rms_a = next(it)
+            wq, wk, wv, wp = next(it), next(it), next(it), next(it)
+            rms_m = next(it)
+            w_up, w_gate, w_down = next(it), next(it), next(it)
+            h = h + causal_attention(rmsnorm(h, rms_a), wq, wk, wv, wp, nh)
+            z = rmsnorm(h, rms_m)
+            gated = jax.nn.silu(linear(z, w_gate)) * linear(z, w_up)
+            h = h + linear(gated, w_down)
+        rms_f = next(it)
+        head = next(it)
+        h = rmsnorm(h, rms_f)
+        logits = h @ head.T
+        return cross_entropy_lm(logits, y)
+
+    batch_specs = [("x", (cfg.batch, t), "s32"), ("y", (cfg.batch, t), "s32")]
+    meta = dataclasses.asdict(cfg) | {"family": "llama", "tied": False}
+    return Model(cfg.name, specs, loss, batch_specs, meta)

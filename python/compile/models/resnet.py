@@ -1,0 +1,120 @@
+"""ResNet (He et al. 2015) with BatchNorm for the image-classification SNR
+experiments (§3.1.3). A width/depth-scaled ResNet-18 analogue: conv stem
+followed by three stages of two basic blocks each, training-mode BatchNorm
+(per-batch statistics; running stats are irrelevant to gradient/SNR
+analysis), global average pooling and a linear classifier.
+
+Conv weights are stored HWIO; the manifest's ``fan_out_axis = 3`` lets the
+Rust analysis view them as (out_ch, kh*kw*in_ch) per the paper's fan
+convention for convolutions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Model, ParamSpec, cross_entropy_cls, linear, normal,
+                     ones, uniform_fanin, zeros)
+
+
+@dataclasses.dataclass
+class ResNetConfig:
+    name: str = "resnet_mini_c10"
+    stem: int = 16
+    stages: tuple = (16, 32, 64)
+    blocks_per_stage: int = 2
+    img: int = 32
+    channels: int = 3
+    classes: int = 10
+    batch: int = 32
+
+
+PRESETS = {
+    "resnet_mini_c10": ResNetConfig("resnet_mini_c10", classes=10),
+    "resnet_mini_c100": ResNetConfig("resnet_mini_c100", classes=100),
+}
+
+
+def _conv_spec(name, kh, kw, cin, cout, depth):
+    fan_in = kh * kw * cin
+    he_std = (2.0 / fan_in) ** 0.5
+    return ParamSpec(name, (kh, kw, cin, cout), "conv", depth,
+                     normal(he_std), uniform_fanin(fan_in), wd=True,
+                     fan_out_axis=3)
+
+
+def conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batchnorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return scale * (x - mu) / jnp.sqrt(var + eps) + bias
+
+
+def build(cfg: ResNetConfig) -> Model:
+    specs = [
+        _conv_spec("stem.conv", 3, 3, cfg.channels, cfg.stem, -1),
+        ParamSpec("stem.bn_scale", (cfg.stem,), "bn", -1, ones(), ones(), wd=False),
+        ParamSpec("stem.bn_bias", (cfg.stem,), "bn", -1, zeros(), zeros(), wd=False),
+    ]
+    cin = cfg.stem
+    depth = 0
+    block_plan = []  # (prefix, cin, cout, stride, has_proj)
+    for si, cout in enumerate(cfg.stages):
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            prefix = f"s{si}b{bi}."
+            has_proj = (stride != 1) or (cin != cout)
+            specs += [
+                _conv_spec(prefix + "conv1", 3, 3, cin, cout, depth),
+                ParamSpec(prefix + "bn1_scale", (cout,), "bn", depth,
+                          ones(), ones(), wd=False),
+                ParamSpec(prefix + "bn1_bias", (cout,), "bn", depth,
+                          zeros(), zeros(), wd=False),
+                _conv_spec(prefix + "conv2", 3, 3, cout, cout, depth),
+                ParamSpec(prefix + "bn2_scale", (cout,), "bn", depth,
+                          ones(), ones(), wd=False),
+                ParamSpec(prefix + "bn2_bias", (cout,), "bn", depth,
+                          zeros(), zeros(), wd=False),
+            ]
+            if has_proj:
+                specs.append(_conv_spec(prefix + "proj", 1, 1, cin, cout, depth))
+            block_plan.append((prefix, cin, cout, stride, has_proj))
+            cin = cout
+            depth += 1
+    specs.append(ParamSpec("head", (cfg.classes, cin), "head", -1,
+                           normal(0.02), uniform_fanin(cin), wd=True))
+
+    plan = tuple(block_plan)
+
+    def loss(params, images, labels):
+        it = iter(params)
+        h = conv2d(images, next(it))
+        h = jax.nn.relu(batchnorm(h, next(it), next(it)))
+        for (_prefix, _cin, _cout, stride, has_proj) in plan:
+            w1, s1, b1 = next(it), next(it), next(it)
+            w2, s2, b2 = next(it), next(it), next(it)
+            shortcut = h
+            z = jax.nn.relu(batchnorm(conv2d(h, w1, stride), s1, b1))
+            z = batchnorm(conv2d(z, w2), s2, b2)
+            if has_proj:
+                shortcut = conv2d(h, next(it), stride)
+            h = jax.nn.relu(z + shortcut)
+        h = jnp.mean(h, axis=(1, 2))  # global average pool
+        logits = linear(h, next(it))
+        return cross_entropy_cls(logits, labels)
+
+    batch_specs = [
+        ("images", (cfg.batch, cfg.img, cfg.img, cfg.channels), "f32"),
+        ("labels", (cfg.batch,), "s32"),
+    ]
+    meta = dataclasses.asdict(cfg) | {"family": "resnet"}
+    meta["stages"] = list(cfg.stages)
+    return Model(cfg.name, specs, loss, batch_specs, meta)

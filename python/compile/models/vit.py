@@ -1,0 +1,125 @@
+"""Vision Transformer (App. B.4): GPT-like blocks adapted for images with
+patch embeddings and a learnable class token, Mitchell init, no biases.
+
+Parameter order: patch_embd, pos_embd, cls_token, per block [ln_attn,
+attn_q, attn_k, attn_v, attn_proj, ln_mlp, mlp_up, mlp_down], ln_final,
+head.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .common import (Model, ParamSpec, bidirectional_attention,
+                     cross_entropy_cls, layernorm, linear, normal, ones,
+                     uniform_fanin)
+from .gpt import _gelu
+
+
+@dataclasses.dataclass
+class VitConfig:
+    name: str = "vit_mini_c10"
+    n_layers: int = 4
+    n_heads: int = 4
+    d_model: int = 64
+    img: int = 32
+    patch: int = 4
+    channels: int = 3
+    classes: int = 10
+    mlp_factor: int = 4
+    batch: int = 32
+
+    @property
+    def d_mlp(self):
+        return self.mlp_factor * self.d_model
+
+    @property
+    def n_patches(self):
+        return (self.img // self.patch) ** 2
+
+    @property
+    def patch_dim(self):
+        return self.patch * self.patch * self.channels
+
+
+PRESETS = {
+    "vit_mini_c10": VitConfig("vit_mini_c10", classes=10),
+    "vit_mini_c100": VitConfig("vit_mini_c100", classes=100),
+}
+
+
+def build(cfg: VitConfig) -> Model:
+    d = cfg.d_model
+    std = 0.02
+    resid_std = std / (2 * cfg.n_layers) ** 0.5
+    seq = cfg.n_patches + 1  # + class token
+
+    specs = [
+        ParamSpec("patch_embd", (d, cfg.patch_dim), "patch_embd", -1,
+                  normal(std), uniform_fanin(cfg.patch_dim), wd=True),
+        ParamSpec("pos_embd", (seq, d), "pos_embd", -1,
+                  normal(std), normal(1.0), wd=True),
+        ParamSpec("cls_token", (d,), "cls_token", -1,
+                  normal(std), normal(1.0), wd=False),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"h{l}."
+        specs += [
+            ParamSpec(p + "ln_attn", (d,), "ln_attn", l, ones(), ones(), wd=False),
+            ParamSpec(p + "attn_q", (d, d), "attn_q", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_k", (d, d), "attn_k", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_v", (d, d), "attn_v", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "attn_proj", (d, d), "attn_proj", l,
+                      normal(resid_std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "ln_mlp", (d,), "ln_mlp", l, ones(), ones(), wd=False),
+            ParamSpec(p + "mlp_up", (cfg.d_mlp, d), "mlp_up", l,
+                      normal(std), uniform_fanin(d), wd=True),
+            ParamSpec(p + "mlp_down", (d, cfg.d_mlp), "mlp_down", l,
+                      normal(resid_std), uniform_fanin(cfg.d_mlp), wd=True),
+        ]
+    specs += [
+        ParamSpec("ln_final", (d,), "ln_final", -1, ones(), ones(), wd=False),
+        ParamSpec("head", (cfg.classes, d), "head", -1,
+                  normal(std), uniform_fanin(d), wd=True),
+    ]
+
+    nl, nh, ps = cfg.n_layers, cfg.n_heads, cfg.patch
+
+    def loss(params, images, labels):
+        it = iter(params)
+        w_patch = next(it)
+        pos = next(it)
+        cls = next(it)
+        b, hh, ww, c = images.shape
+        gh, gw = hh // ps, ww // ps
+        # (B, H, W, C) -> (B, gh*gw, ps*ps*C)
+        x = images.reshape(b, gh, ps, gw, ps, c).transpose(0, 1, 3, 2, 4, 5)
+        x = x.reshape(b, gh * gw, ps * ps * c)
+        h = linear(x, w_patch)
+        h = jnp.concatenate([jnp.broadcast_to(cls, (b, 1, h.shape[-1])), h], 1)
+        h = h + pos[None, :, :]
+        for _ in range(nl):
+            ln_a = next(it)
+            wq, wk, wv, wp = next(it), next(it), next(it), next(it)
+            ln_m = next(it)
+            w_up, w_down = next(it), next(it)
+            h = h + bidirectional_attention(layernorm(h, ln_a), wq, wk, wv, wp, nh)
+            z = linear(layernorm(h, ln_m), w_up)
+            h = h + linear(_gelu(z), w_down)
+        ln_f = next(it)
+        w_head = next(it)
+        h = layernorm(h, ln_f)
+        logits = linear(h[:, 0, :], w_head)  # class token
+        return cross_entropy_cls(logits, labels)
+
+    batch_specs = [
+        ("images", (cfg.batch, cfg.img, cfg.img, cfg.channels), "f32"),
+        ("labels", (cfg.batch,), "s32"),
+    ]
+    meta = dataclasses.asdict(cfg) | {"family": "vit"}
+    return Model(cfg.name, specs, loss, batch_specs, meta)

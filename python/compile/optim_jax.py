@@ -1,0 +1,174 @@
+"""Fused-engine optimizer: the generalized low-memory Adam family (Eq. 2)
+expressed in JAX over a model's flat parameter list, calling the Layer-1
+Pallas kernel per tensor. ``make_train_step`` composes model fwd/bwd with
+this update into the single-dispatch ``train_step`` HLO the Rust runtime
+executes on its hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_update import fused_adamk_update, v_shape_for
+from .models.common import Model
+
+
+@dataclasses.dataclass
+class Hypers:
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+# SlimAdam's recommended rules (paper Table 3) in this repo's storage
+# convention: weights are (fan_out, fan_in); embeddings/LM heads are
+# (vocab, d) so "fan_in" (axis 1 = embedding axis) preserves the
+# incompressible token dimension. Vector-likes stay uncompressed.
+TABLE3_RULES = {
+    "attn_q": "fan_in",
+    "attn_k": "fan_in",
+    "attn_v": "fan_out",
+    "attn_proj": "fan_out",
+    "mlp_up": "fan_out",
+    "mlp_gate": "fan_out",
+    "mlp_down": "fan_out",
+    "tok_embd": "fan_in",
+    "lm_head": "fan_in",
+    "patch_embd": "fan_in",
+    "head": "fan_in",
+    "conv": "both",
+    "pos_embd": "none",
+    "cls_token": "none",
+    "ln_attn": "none",
+    "ln_mlp": "none",
+    "ln_final": "none",
+    "bn": "none",
+}
+
+
+def k_modes_for(model: Model, ruleset: str) -> list:
+    """Per-tensor K modes for a named ruleset."""
+    modes = []
+    for spec in model.specs:
+        if ruleset == "adam":
+            modes.append("none")
+        elif ruleset == "adalayer":
+            modes.append("both" if len(spec.shape) > 1 else "all")
+        elif ruleset == "adalayer_ln_tl":
+            if spec.layer_type in ("ln_attn", "ln_mlp", "ln_final", "bn",
+                                   "tok_embd", "lm_head"):
+                modes.append("none")
+            else:
+                modes.append("both" if len(spec.shape) > 1 else "all")
+        elif ruleset == "slimadam":
+            if len(spec.shape) == 1:
+                modes.append("none")  # vectors stay uncompressed
+            else:
+                modes.append(TABLE3_RULES.get(spec.layer_type, "none"))
+        else:
+            raise ValueError(f"unknown ruleset {ruleset!r}")
+    return modes
+
+
+def v_shapes_for(model: Model, k_modes) -> list:
+    shapes = []
+    for spec, k in zip(model.specs, k_modes):
+        shape = spec.shape
+        if len(shape) > 2:
+            # Conv tensors are updated in their matrix view.
+            fo = shape[spec.fan_out_axis]
+            fi = int(jnp.prod(jnp.array(shape)) // fo)
+            shape = (fo, fi)
+        shapes.append(v_shape_for(shape, _norm_k(k, len(spec.shape))))
+    return shapes
+
+
+def _norm_k(k, ndim):
+    if ndim == 1:
+        return "none" if k == "none" else "both"
+    return "both" if k == "all" else k
+
+
+def global_norm_clip(grads, clip):
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads))
+    scale = jnp.minimum(1.0, clip / (gn + 1e-12))
+    return [g * scale for g in grads], gn
+
+
+def adamk_apply(model: Model, k_modes, hypers: Hypers,
+                params, m, v, grads, step, lr):
+    """One generalized-Adam update across the parameter list.
+
+    ``step`` is a 1-based f32 scalar; bias corrections are computed here so
+    the kernel stays step-free. Conv tensors round-trip through their
+    (fan_out, fan_in) matrix view.
+    """
+    bc1 = 1.0 / (1.0 - jnp.power(hypers.beta1, step))
+    bc2 = 1.0 / (1.0 - jnp.power(hypers.beta2, step))
+    new_p, new_m, new_v = [], [], []
+    for spec, k, w, mi, vi, g in zip(model.specs, k_modes, params, m, v, grads):
+        wd = hypers.weight_decay if spec.wd else 0.0
+        scalars = jnp.stack([jnp.float32(hypers.beta1), jnp.float32(hypers.beta2),
+                             jnp.float32(hypers.eps), lr, jnp.float32(wd),
+                             bc1, bc2, jnp.float32(0.0)])[None, :]
+        km = _norm_k(k, len(spec.shape))
+        orig_shape = w.shape
+        if w.ndim > 2:
+            fo_ax = spec.fan_out_axis
+            perm = (fo_ax,) + tuple(i for i in range(w.ndim) if i != fo_ax)
+            inv = tuple(perm.index(i) for i in range(w.ndim))
+            mat = lambda t: t.transpose(perm).reshape(t.shape[fo_ax], -1)
+            w2, m2, g2 = mat(w), mat(mi), mat(g)
+            nw, nm, nv = fused_adamk_update(w2, m2, vi, g2, scalars, k_mode=km)
+            tshape = tuple(orig_shape[i] for i in perm)
+            nw = nw.reshape(tshape).transpose(inv)
+            nm = nm.reshape(tshape).transpose(inv)
+        else:
+            nw, nm, nv = fused_adamk_update(w, mi, vi, g, scalars, k_mode=km)
+        new_p.append(nw)
+        new_m.append(nm)
+        new_v.append(nv)
+    return new_p, new_m, new_v
+
+
+def make_train_step(model: Model, ruleset: str, hypers: Hypers):
+    """Build the fused train_step callable (flat positional signature).
+
+    Signature: f(*params, *m, *v, batch..., step, lr)
+             -> (loss, grad_norm, *params', *m', *v')
+    """
+    n = len(model.specs)
+    k_modes = k_modes_for(model, ruleset)
+
+    def train_step(*args):
+        params = list(args[:n])
+        m = list(args[n:2 * n])
+        v = list(args[2 * n:3 * n])
+        nb = len(model.batch_specs)
+        batch = args[3 * n:3 * n + nb]
+        step, lr = args[3 * n + nb], args[3 * n + nb + 1]
+        loss, grads = jax.value_and_grad(model.loss)(params, *batch)
+        grads, gnorm = global_norm_clip(grads, hypers.clip_norm)
+        new_p, new_m, new_v = adamk_apply(
+            model, k_modes, hypers, params, m, v, grads, step, lr)
+        return (loss, gnorm, *new_p, *new_m, *new_v)
+
+    return train_step, k_modes
+
+
+def make_grad_step(model: Model):
+    """Split-engine artifact: f(*params, batch...) -> (loss, *grads)."""
+    n = len(model.specs)
+
+    def grad_step(*args):
+        params = list(args[:n])
+        batch = args[n:]
+        loss, grads = jax.value_and_grad(model.loss)(params, *batch)
+        return (loss, *grads)
+
+    return grad_step

@@ -1,0 +1,133 @@
+"""AOT lowering pipeline: manifest schema, HLO text sanity, registry
+coverage, fixture determinism. These pin the Python→Rust contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.aot import (FUSED, GRAD_MODELS, LM_HYPERS, build_model,
+                         lower_grad_step, lower_train_step, to_hlo_text)
+from compile.optim_jax import Hypers
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_registry_models_all_buildable():
+    for name in GRAD_MODELS:
+        model = build_model(name)
+        assert model.name == name
+        assert len(model.specs) > 0
+
+
+def test_unknown_model_raises():
+    with pytest.raises(KeyError):
+        build_model("nope_model")
+
+
+def test_grad_manifest_schema():
+    model = build_model("linear2_v64")
+    text, man = lower_grad_step(model)
+    # HLO text structure
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # manifest structure
+    assert man["kind"] == "grad_step"
+    assert len(man["inputs"]) == len(model.specs) + len(model.batch_specs)
+    assert len(man["outputs"]) == 1 + len(model.specs)
+    assert man["outputs"][0] == "loss"
+    for p in man["params"]:
+        assert set(p) >= {"name", "shape", "layer_type", "depth",
+                          "init_mitchell", "init_default", "wd",
+                          "fan_out_axis"}
+    # JSON-serializable
+    json.dumps(man)
+
+
+def test_train_manifest_schema():
+    model = build_model("linear2_v64")
+    text, man = lower_train_step(model, "slimadam", LM_HYPERS)
+    n = len(model.specs)
+    assert man["kind"] == "train_step"
+    assert len(man["inputs"]) == 3 * n + len(model.batch_specs) + 2
+    assert len(man["outputs"]) == 2 + 3 * n
+    assert len(man["k_modes"]) == n
+    assert len(man["v_shapes"]) == n
+    assert man["hypers"]["beta2"] == LM_HYPERS.beta2
+    json.dumps(man)
+
+
+def test_hlo_parameter_count_matches_manifest():
+    model = build_model("linear2_v64")
+    text, man = lower_grad_step(model)
+    # every input appears as an HLO entry parameter
+    n_params = text.count("parameter(")
+    assert n_params >= len(man["inputs"])
+
+
+def test_no_float64_in_lowered_hlo():
+    """CPU perf guard: nothing should silently upcast to f64."""
+    model = build_model("gpt_nano")
+    text, _ = lower_grad_step(model)
+    assert "f64" not in text
+
+
+def test_existing_artifacts_match_checksums():
+    """If `make artifacts` ran, the manifests' recorded sha256 must match
+    the on-disk HLO text (guards against stale artifacts)."""
+    import hashlib
+    if not os.path.isdir(ARTIFACTS):
+        pytest.skip("artifacts not built")
+    checked = 0
+    for fn in os.listdir(ARTIFACTS):
+        if not fn.endswith(".manifest.json"):
+            continue
+        with open(os.path.join(ARTIFACTS, fn)) as f:
+            man = json.load(f)
+        hlo_path = os.path.join(ARTIFACTS, fn.replace(".manifest.json", ".hlo.txt"))
+        with open(hlo_path) as f:
+            digest = hashlib.sha256(f.read().encode()).hexdigest()
+        assert digest == man["hlo_sha256"], fn
+        checked += 1
+    assert checked >= len(GRAD_MODELS)
+
+
+def test_fused_registry_consistency():
+    for (name, ruleset) in FUSED:
+        assert name in GRAD_MODELS
+        assert ruleset in ("adam", "slimadam", "adalayer", "adalayer_ln_tl")
+
+
+def test_fixture_reference_deterministic(tmp_path):
+    """Two runs of the fixture generator must agree exactly."""
+    aot.make_fixture(str(tmp_path), "linear2_v64", steps=2, lr=1e-3)
+    with open(tmp_path / "fixtures" / "linear2_v64.fixture.json") as f:
+        a = json.load(f)
+    aot.make_fixture(str(tmp_path), "linear2_v64", steps=2, lr=1e-3)
+    with open(tmp_path / "fixtures" / "linear2_v64.fixture.json") as f:
+        b = json.load(f)
+    assert a == b
+
+
+def test_fixture_losses_decrease_or_flat():
+    if not os.path.isdir(os.path.join(ARTIFACTS, "fixtures")):
+        pytest.skip("fixtures not built")
+    with open(os.path.join(ARTIFACTS, "fixtures", "linear2_v64.fixture.json")) as f:
+        fix = json.load(f)
+    losses = fix["losses"]
+    assert losses[-1] < losses[0] + 0.1  # random batches: allow small noise
+
+
+def test_hlo_text_round_trips_through_parser():
+    """The text we emit must be parseable back to an XlaComputation (the
+    exact path the Rust runtime uses)."""
+    from jax._src.lib import xla_client as xc
+    model = build_model("linear2_v64")
+    text, _ = lower_grad_step(model)
+    # xla_client can parse HLO text back
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None

@@ -1,0 +1,136 @@
+"""L1 kernel correctness: fused_adamk_update vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes / K-modes / hyperparameters; fixed cases cover
+edge shapes (1xN, Nx1, non-multiple-of-block, vectors).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_update import (fused_adamk_update, pack_scalars,
+                                          v_shape_for)
+from compile.kernels.ref import ref_adamk_update
+
+K_MODES = ["none", "fan_out", "fan_in", "both"]
+
+
+def _mk(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _run_case(shape, k_mode, seed=0, beta1=0.9, beta2=0.95, lr=1e-2,
+              wd=0.1, step=3):
+    rng = np.random.default_rng(seed)
+    w = _mk(rng, shape)
+    m = 0.1 * _mk(rng, shape)
+    g = _mk(rng, shape)
+    vs = v_shape_for(shape, k_mode) if len(shape) > 1 else \
+        v_shape_for(shape, k_mode)
+    v = jnp.abs(_mk(rng, vs)) * 1e-3
+    s = pack_scalars(beta1, beta2, 1e-8, lr, wd, step)
+    got = fused_adamk_update(w, m, v, g, s, k_mode=k_mode)
+    want = ref_adamk_update(w, m, v, g, s, k_mode=k_mode)
+    for a, b, name in zip(got, want, ["w", "m", "v"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6, err_msg=name)
+    return got
+
+
+@pytest.mark.parametrize("k_mode", K_MODES)
+@pytest.mark.parametrize("shape", [(8, 16), (16, 8), (1, 32), (32, 1),
+                                   (7, 13), (64, 48)])
+def test_matrix_shapes(shape, k_mode):
+    _run_case(shape, k_mode)
+
+
+@pytest.mark.parametrize("k_mode", ["none", "both", "all"])
+def test_vector_shapes(k_mode):
+    _run_case((17,), k_mode)
+    _run_case((1,), k_mode)
+
+
+@pytest.mark.parametrize("k_mode", K_MODES)
+def test_tiled_path_matches_untiled(k_mode):
+    """Shapes larger than the block limit exercise multi-step grids."""
+    _run_case((512, 96), k_mode)
+    _run_case((96, 512), k_mode)
+
+
+def test_v_shapes():
+    assert v_shape_for((8, 16), "none") == (8, 16)
+    assert v_shape_for((8, 16), "fan_out") == (1, 16)
+    assert v_shape_for((8, 16), "fan_in") == (8, 1)
+    assert v_shape_for((8, 16), "both") == (1, 1)
+    assert v_shape_for((9,), "all") == (1,)
+    assert v_shape_for((9,), "none") == (9,)
+
+
+def test_k_none_equals_adamw():
+    """K=none must reproduce exact AdamW (paper: family coincides with Adam)."""
+    rng = np.random.default_rng(3)
+    shape = (12, 24)
+    w, g = _mk(rng, shape), _mk(rng, shape)
+    m = jnp.zeros(shape)
+    v = jnp.zeros(shape)
+    beta1, beta2, eps, lr, wd, step = 0.9, 0.95, 1e-8, 1e-2, 0.1, 1
+    s = pack_scalars(beta1, beta2, eps, lr, wd, step)
+    nw, nm, nv = fused_adamk_update(w, m, v, g, s, k_mode="none")
+    m_ref = (1 - beta1) * g
+    v_ref = (1 - beta2) * g * g
+    mh = m_ref / (1 - beta1)
+    vh = v_ref / (1 - beta2)
+    w_ref = w - lr * (mh / (jnp.sqrt(vh) + eps) + wd * w)
+    np.testing.assert_allclose(np.asarray(nw), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_compressed_v_equals_mean_of_full_v():
+    """E_K compression commutes with the EMA: running the K=fan_in kernel
+    must equal averaging the K=none V over fan_in at every step."""
+    rng = np.random.default_rng(11)
+    shape = (6, 10)
+    w = _mk(rng, shape)
+    m = jnp.zeros(shape)
+    v_full = jnp.zeros(shape)
+    v_red = jnp.zeros((6, 1))
+    for step in range(1, 4):
+        g = _mk(rng, shape)
+        s = pack_scalars(0.9, 0.95, 1e-8, 1e-2, 0.0, step)
+        _, _, v_full = fused_adamk_update(w, m, v_full, g, s, k_mode="none")
+        _, _, v_red = fused_adamk_update(w, m, v_red, g, s, k_mode="fan_in")
+        np.testing.assert_allclose(np.asarray(jnp.mean(v_full, 1, keepdims=True)),
+                                   np.asarray(v_red), rtol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    cols=st.integers(1, 40),
+    k_idx=st.integers(0, 3),
+    seed=st.integers(0, 2 ** 16),
+    lr=st.floats(1e-5, 1e-1),
+    step=st.integers(1, 200),
+)
+def test_hypothesis_sweep(rows, cols, k_idx, seed, lr, step):
+    _run_case((rows, cols), K_MODES[k_idx], seed=seed, lr=lr, step=step)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 257), seed=st.integers(0, 999))
+def test_hypothesis_vectors(n, seed):
+    _run_case((n,), "both", seed=seed)
+    _run_case((n,), "none", seed=seed)
+
+
+def test_jit_lowering_contains_no_python():
+    """The kernel must lower to pure HLO (no callbacks) for the AOT path."""
+    w = jnp.ones((8, 8))
+    s = pack_scalars(0.9, 0.95, 1e-8, 1e-2, 0.0, 1)
+    lowered = jax.jit(
+        lambda w, m, v, g, s: fused_adamk_update(w, m, v, g, s, k_mode="fan_in")
+    ).lower(w, w, jnp.ones((8, 1)), w, s)
+    text = lowered.compiler_ir("stablehlo")
+    assert "callback" not in str(text).lower()

@@ -1,0 +1,119 @@
+"""L2 model sanity: shapes, loss finiteness, grads, spec/manifest integrity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import build_model
+from compile.models import gpt, linear2, llama, resnet, vit
+
+SMALL_MODELS = ["gpt_nano", "llama_tiny", "vit_mini_c10", "resnet_mini_c10",
+                "linear2_v64"]
+
+
+def _batch_for(model, rng):
+    out = []
+    for (name, shape, dt) in model.batch_specs:
+        if dt == "s32":
+            hi = model.meta.get("vocab", model.meta.get("classes", 2))
+            out.append(jnp.asarray(rng.integers(0, hi, shape).astype(np.int32)))
+        else:
+            out.append(jnp.asarray(rng.standard_normal(shape).astype(np.float32)))
+    return out
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_loss_finite_and_grads_complete(name):
+    model = build_model(name)
+    rng = np.random.default_rng(0)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(model, rng)
+    loss, grads = jax.value_and_grad(model.loss)(params, *batch)
+    assert jnp.isfinite(loss), name
+    assert len(grads) == len(model.specs)
+    for spec, g in zip(model.specs, grads):
+        assert g.shape == spec.shape, spec.name
+        assert bool(jnp.all(jnp.isfinite(g))), spec.name
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_initial_loss_near_uniform(name):
+    """At init, LM/classifier loss should be ~ log(n_classes)."""
+    model = build_model(name)
+    rng = np.random.default_rng(1)
+    params = model.init_params(jax.random.PRNGKey(1))
+    batch = _batch_for(model, rng)
+    loss = float(model.loss(params, *batch))
+    n = model.meta.get("vocab") or model.meta.get("classes")
+    expect = np.log(n)
+    assert abs(loss - expect) < 0.35 * expect + 1.0, (loss, expect)
+
+
+def test_gpt_param_count_nano():
+    model = build_model("gpt_nano")
+    n = sum(int(np.prod(s.shape)) for s in model.specs)
+    # 2 embeddings + 4 blocks of (2 LN + 4 attn d^2 + 8d^2 MLP) + final LN
+    cfg = gpt.PRESETS["gpt_nano"]
+    d = cfg.d_model
+    expect = (cfg.vocab * d + cfg.ctx * d
+              + cfg.n_layers * (2 * d + 4 * d * d + 2 * 4 * d * d) + d)
+    assert n == expect
+
+
+def test_gpt_weight_tying_gradient_flows_to_embedding():
+    """With tying, the LM head gradient lands on tok_embd."""
+    model = build_model("gpt_nano")
+    params = model.init_params(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    batch = _batch_for(model, rng)
+    grads = jax.grad(model.loss)(params, *batch)
+    g_tok = grads[model.index("tok_embd")]
+    assert float(jnp.abs(g_tok).max()) > 0
+
+
+def test_specs_have_unique_names_and_both_inits():
+    for name in SMALL_MODELS + ["gpt_mini", "vit_mini_c100", "resnet_mini_c100"]:
+        model = build_model(name)
+        names = [s.name for s in model.specs]
+        assert len(names) == len(set(names)), name
+        for s in model.specs:
+            assert s.init_mitchell["scheme"] in (
+                "normal", "uniform", "zeros", "ones", "trunc_normal")
+            assert s.init_default["scheme"] in (
+                "normal", "uniform", "zeros", "ones", "trunc_normal")
+
+
+def test_mitchell_residual_scaling():
+    """Attn.Proj / MLP.Down get the 1/sqrt(2L) std scaling (§4.3)."""
+    model = build_model("gpt_nano")
+    cfg = gpt.PRESETS["gpt_nano"]
+    for s in model.specs:
+        if s.layer_type in ("attn_proj", "mlp_down"):
+            assert abs(s.init_mitchell["std"]
+                       - 0.02 / (2 * cfg.n_layers) ** 0.5) < 1e-9
+        elif s.layer_type in ("attn_q", "attn_k", "attn_v", "mlp_up"):
+            assert s.init_mitchell["std"] == 0.02
+
+
+def test_conv_specs_mark_fan_out_axis():
+    model = build_model("resnet_mini_c10")
+    for s in model.specs:
+        if s.layer_type == "conv":
+            assert s.fan_out_axis == 3
+            assert len(s.shape) == 4
+
+
+def test_vocab_presets_cover_sweep():
+    assert set(linear2.VOCABS) == {64, 128, 256, 512, 1024, 2048, 4096}
+    for v in linear2.VOCABS:
+        m = build_model(f"linear2_v{v}")
+        assert m.specs[0].shape == (v, 128)
+
+
+def test_deterministic_init():
+    model = build_model("linear2_v64")
+    p1 = model.init_params(jax.random.PRNGKey(9))
+    p2 = model.init_params(jax.random.PRNGKey(9))
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

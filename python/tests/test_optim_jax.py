@@ -1,0 +1,144 @@
+"""Fused-engine optimizer (optim_jax) correctness and ruleset semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import build_model
+from compile.optim_jax import (Hypers, adamk_apply, global_norm_clip,
+                               k_modes_for, make_train_step, v_shapes_for)
+
+
+def _tiny():
+    return build_model("linear2_v64")
+
+
+def test_k_modes_adam_all_none():
+    model = _tiny()
+    assert k_modes_for(model, "adam") == ["none"] * len(model.specs)
+
+
+def test_k_modes_slimadam_table3():
+    model = build_model("gpt_nano")
+    modes = dict(zip([s.name for s in model.specs],
+                     k_modes_for(model, "slimadam")))
+    assert modes["tok_embd"] == "fan_in"        # keep the token dimension
+    assert modes["h0.attn_q"] == "fan_in"
+    assert modes["h0.attn_k"] == "fan_in"
+    assert modes["h0.attn_v"] == "fan_out"
+    assert modes["h0.attn_proj"] == "fan_out"
+    assert modes["h0.mlp_up"] == "fan_out"
+    assert modes["h0.mlp_down"] == "fan_out"
+    assert modes["h0.ln_attn"] == "none"        # vectors uncompressed
+    assert modes["ln_final"] == "none"
+
+
+def test_k_modes_adalayer_variants():
+    model = build_model("gpt_nano")
+    base = dict(zip([s.name for s in model.specs],
+                    k_modes_for(model, "adalayer")))
+    ln_tl = dict(zip([s.name for s in model.specs],
+                     k_modes_for(model, "adalayer_ln_tl")))
+    assert base["h0.attn_q"] == "both"
+    assert base["h0.ln_attn"] == "all"
+    assert ln_tl["h0.ln_attn"] == "none"
+    assert ln_tl["tok_embd"] == "none"
+    assert ln_tl["h0.attn_q"] == "both"
+
+
+def test_v_shapes_memory_savings():
+    """SlimAdam's stored V must be dramatically smaller than Adam's."""
+    model = build_model("gpt_nano")
+    adam_v = sum(int(np.prod(s)) for s in v_shapes_for(
+        model, k_modes_for(model, "adam")))
+    slim_v = sum(int(np.prod(s)) for s in v_shapes_for(
+        model, k_modes_for(model, "slimadam")))
+    assert slim_v < 0.12 * adam_v  # nano model: >88% savings
+
+
+def test_global_norm_clip():
+    g = [jnp.full((4,), 3.0), jnp.full((4,), 4.0)]  # norm = 10
+    clipped, gn = global_norm_clip(g, 1.0)
+    assert abs(float(gn) - 10.0) < 1e-5
+    total = jnp.sqrt(sum(jnp.sum(c * c) for c in clipped))
+    assert abs(float(total) - 1.0) < 1e-5
+    # below threshold: untouched
+    same, _ = global_norm_clip([jnp.full((2,), 0.1)], 1.0)
+    np.testing.assert_allclose(np.asarray(same[0]), 0.1, rtol=1e-6)
+
+
+def test_adamk_apply_matches_manual_adamw():
+    """ruleset=adam through the kernel path == hand-rolled AdamW."""
+    model = _tiny()
+    hypers = Hypers(weight_decay=0.1)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    grads = [jnp.asarray(rng.standard_normal(s.shape).astype(np.float32))
+             for s in model.specs]
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    k_modes = k_modes_for(model, "adam")
+    lr = jnp.float32(1e-2)
+    new_p, new_m, new_v = adamk_apply(model, k_modes, hypers, params, m, v,
+                                      grads, jnp.float32(1.0), lr)
+    for spec, w, g, nw in zip(model.specs, params, grads, new_p):
+        mi = (1 - hypers.beta1) * g
+        vi = (1 - hypers.beta2) * g * g
+        mh = mi / (1 - hypers.beta1)
+        vh = vi / (1 - hypers.beta2)
+        wd = hypers.weight_decay if spec.wd else 0.0
+        w_ref = w - lr * (mh / (jnp.sqrt(vh) + hypers.eps) + wd * w)
+        np.testing.assert_allclose(np.asarray(nw), np.asarray(w_ref),
+                                   rtol=2e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ruleset", ["adam", "slimadam", "adalayer"])
+def test_train_step_decreases_loss(ruleset):
+    model = _tiny()
+    hypers = Hypers(beta1=0.9, beta2=0.95, weight_decay=0.0, clip_norm=1.0)
+    step_fn, k_modes = make_train_step(model, ruleset, hypers)
+    step_fn = jax.jit(step_fn)
+    params = model.init_params(jax.random.PRNGKey(1))
+    v_shapes = v_shapes_for(model, k_modes)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros(s, jnp.float32) for s in v_shapes]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 64, (16, 32)).astype(np.int32))
+    y = jnp.asarray(rng.integers(0, 64, (16, 32)).astype(np.int32))
+    n = len(model.specs)
+    first = None
+    for t in range(1, 21):
+        out = step_fn(*params, *m, *v, x, y, jnp.float32(t), jnp.float32(3e-3))
+        loss = float(out[0])
+        params = list(out[2:2 + n])
+        m = list(out[2 + n:2 + 2 * n])
+        v = list(out[2 + 2 * n:2 + 3 * n])
+        if first is None:
+            first = loss
+    assert loss < first - 0.1, (ruleset, first, loss)
+
+
+def test_conv_tensor_roundtrip_via_matrix_view():
+    """adamk_apply on a 4-D conv weight must equal updating its matrix view."""
+    model = build_model("resnet_mini_c10")
+    hypers = Hypers(weight_decay=0.0)
+    idx = model.index("stem.conv")
+    spec = model.specs[idx]
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.standard_normal(spec.shape).astype(np.float32))
+    g = jnp.asarray(rng.standard_normal(spec.shape).astype(np.float32))
+    params = [w]
+    grads = [g]
+    m = [jnp.zeros_like(w)]
+    v = [jnp.zeros((1, 1), jnp.float32)]
+
+    class FakeModel:
+        specs = [spec]
+
+    new_p, _, new_v = adamk_apply(FakeModel, ["both"], hypers, params, m, v,
+                                  grads, jnp.float32(1.0), jnp.float32(1e-2))
+    assert new_p[0].shape == spec.shape
+    # v is the mean of g^2 scaled by (1-beta2)
+    expect_v = (1 - hypers.beta2) * float(jnp.mean(g * g))
+    np.testing.assert_allclose(float(new_v[0][0, 0]), expect_v, rtol=1e-5)

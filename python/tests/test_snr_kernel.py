@@ -1,0 +1,58 @@
+"""L1 SNR kernel vs the pure-jnp oracle (Eq. 3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ref_snr_stats
+from compile.kernels.snr import snr_stats
+
+
+def _check(v):
+    got = np.asarray(snr_stats(jnp.asarray(v)))
+    want = np.asarray(ref_snr_stats(jnp.asarray(v)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(4, 4), (1, 16), (16, 1), (7, 13),
+                                   (64, 48), (300, 40)])
+def test_matrix_shapes(shape):
+    rng = np.random.default_rng(0)
+    _check(np.abs(rng.standard_normal(shape)).astype(np.float32) + 1e-4)
+
+
+def test_vector():
+    rng = np.random.default_rng(1)
+    _check(np.abs(rng.standard_normal(33)).astype(np.float32))
+
+
+def test_constant_matrix_has_huge_snr():
+    """A constant V is perfectly compressible -> SNR far above any cutoff."""
+    v = np.full((8, 8), 0.25, np.float32)
+    got = np.asarray(snr_stats(jnp.asarray(v)))
+    assert (got > 1e6).all()
+
+
+def test_high_variance_low_snr():
+    """One dominant outlier per column crushes the fan_out SNR."""
+    rng = np.random.default_rng(2)
+    v = np.abs(rng.standard_normal((64, 16))).astype(np.float32) * 1e-3
+    v[0, :] = 100.0  # heavy tail along axis 0
+    got = np.asarray(snr_stats(jnp.asarray(v)))
+    assert got[0] < 1.0  # fan_out (axis-0 groups) incompressible
+
+
+@settings(max_examples=30, deadline=None)
+@given(rows=st.integers(1, 50), cols=st.integers(1, 50),
+       seed=st.integers(0, 2 ** 16), scale=st.floats(1e-6, 1e3))
+def test_hypothesis_sweep(rows, cols, seed, scale):
+    rng = np.random.default_rng(seed)
+    v = (np.abs(rng.standard_normal((rows, cols))) * scale + 1e-8)
+    _check(v.astype(np.float32))
+
+
+def test_row_tiled_streaming_matches():
+    """Row counts above the 256-row block exercise the streaming grid."""
+    rng = np.random.default_rng(5)
+    _check(np.abs(rng.standard_normal((1024, 32))).astype(np.float32) + 1e-5)

@@ -1,0 +1,257 @@
+//! Bench harness substrate — replaces `criterion` (unavailable offline).
+//!
+//! `cargo bench` targets in `benches/` use `harness = false` and drive this
+//! module: warmup, fixed-duration sampling, IQR outlier filtering, and a
+//! compact report (median / mean / p10-p90 / throughput). Results are also
+//! appended as JSONL to `results/bench/<name>.jsonl` so the perf pass in
+//! EXPERIMENTS.md §Perf can diff before/after runs.
+
+use std::time::{Duration, Instant};
+
+use crate::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub nanos_per_iter: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Optional user-provided unit count per iteration (tokens, params, ...)
+    pub units_per_iter: Option<(f64, &'static str)>,
+}
+
+impl Report {
+    pub fn print(&self) {
+        let fmt = |ns: f64| -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        print!(
+            "{:44} {:>12}/iter  (mean {:>12}, p10 {:>12}, p90 {:>12}, n={})",
+            self.name,
+            fmt(self.median_ns),
+            fmt(self.mean_ns),
+            fmt(self.p10_ns),
+            fmt(self.p90_ns),
+            self.iters
+        );
+        if let Some((units, label)) = self.units_per_iter {
+            let per_sec = units / (self.median_ns / 1e9);
+            print!("  [{} {label}/s]", human(per_sec));
+        }
+        println!();
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", self.name.clone())
+            .set("iters", self.iters)
+            .set("median_ns", self.median_ns)
+            .set("mean_ns", self.mean_ns)
+            .set("p10_ns", self.p10_ns)
+            .set("p90_ns", self.p90_ns)
+            .set("unix_ms", now_ms());
+        if let Some((units, label)) = self.units_per_iter {
+            v.set("units_per_iter", units).set("unit", label);
+        }
+        v
+    }
+}
+
+fn human(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+fn now_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Benchmark runner with warmup + timed sampling.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    sink: Option<std::path::PathBuf>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Honor quick runs: SLIMADAM_BENCH_FAST=1 shrinks durations so the
+        // full `cargo bench` suite stays tractable in CI.
+        let fast = std::env::var("SLIMADAM_BENCH_FAST").is_ok();
+        Bencher {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            min_samples: 5,
+            sink: Some(std::path::PathBuf::from("results/bench")),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn no_sink(mut self) -> Self {
+        self.sink = None;
+        self
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Report {
+        self.bench_units(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput annotation (units processed per iter).
+    pub fn bench_with_units<F: FnMut()>(
+        &self,
+        name: &str,
+        units: f64,
+        label: &'static str,
+        mut f: F,
+    ) -> Report {
+        self.bench_units(name, Some((units, label)), &mut f)
+    }
+
+    fn bench_units(
+        &self,
+        name: &str,
+        units: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut(),
+    ) -> Report {
+        // Warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure
+        let mut samples: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure || samples.len() < self.min_samples {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let report = summarize(name, &mut samples, units);
+        report.print();
+        if let Some(dir) = &self.sink {
+            let _ = std::fs::create_dir_all(dir);
+            let path = dir.join(format!("{}.jsonl", sanitize(name)));
+            if let Ok(mut file) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+            {
+                use std::io::Write;
+                let _ = writeln!(file, "{}", report.to_json().dump());
+            }
+        }
+        report
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// IQR-filtered summary statistics.
+pub fn summarize(
+    name: &str,
+    samples: &mut [f64],
+    units: Option<(f64, &'static str)>,
+) -> Report {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let q = |p: f64| -> f64 {
+        let idx = (p * (n - 1) as f64).round() as usize;
+        samples[idx.min(n - 1)]
+    };
+    let (q1, q3) = (q(0.25), q(0.75));
+    let iqr = q3 - q1;
+    let (lo, hi) = (q1 - 1.5 * iqr, q3 + 1.5 * iqr);
+    let kept: Vec<f64> = samples
+        .iter()
+        .copied()
+        .filter(|&x| x >= lo && x <= hi)
+        .collect();
+    let kept = if kept.is_empty() { samples.to_vec() } else { kept };
+    let mean = kept.iter().sum::<f64>() / kept.len() as f64;
+    Report {
+        name: name.to_string(),
+        iters: n as u64,
+        median_ns: q(0.5),
+        mean_ns: mean,
+        p10_ns: q(0.10),
+        p90_ns: q(0.90),
+        units_per_iter: units,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_basic() {
+        let mut s: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let r = summarize("t", &mut s, None);
+        assert!((r.median_ns - 50.0).abs() <= 1.0);
+        assert!(r.p10_ns < r.p90_ns);
+    }
+
+    #[test]
+    fn summarize_filters_outliers() {
+        let mut s: Vec<f64> = vec![10.0; 99];
+        s.push(1e9); // massive outlier
+        let r = summarize("t", &mut s, None);
+        assert!((r.mean_ns - 10.0).abs() < 1.0, "mean {}", r.mean_ns);
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 3,
+            sink: None,
+        };
+        let mut acc = 0u64;
+        let r = b.bench("noop", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn sanitize_names() {
+        assert_eq!(sanitize("a b/c:d"), "a_b_c_d");
+    }
+}

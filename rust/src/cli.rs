@@ -1,0 +1,221 @@
+//! Tiny CLI substrate — replaces `clap`.
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! and positional arguments, with generated `--help` text. Parsed values
+//! are fetched through typed accessors with defaults, which is all the
+//! `slimadam` launcher needs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative option spec for help text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv items (after the subcommand) against known flags.
+    /// Any `--name` in `flag_names` is boolean; all other `--key` consume a
+    /// value (either `--key=value` or the following token).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        items: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&stripped) {
+                    args.flags.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{stripped} expects a value"))?;
+                    args.options.insert(stripped.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated f64 list, e.g. `--lrs 1e-4,3e-4,1e-3`.
+    pub fn f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("bad number {s:?} in --{name}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated string list.
+    pub fn str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+}
+
+/// Render help for a subcommand.
+pub fn render_help(bin: &str, cmd: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{bin} {cmd} — {about}\n\nOptions:\n");
+    for o in opts {
+        let head = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <v>", o.name)
+        };
+        let default = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("{head:28} {}{default}\n", o.help));
+    }
+    s
+}
+
+/// Split argv into (subcommand, rest); errors when empty.
+pub fn subcommand(mut argv: Vec<String>) -> Result<(String, Vec<String>)> {
+    if argv.is_empty() {
+        bail!("missing subcommand");
+    }
+    let cmd = argv.remove(0);
+    Ok((cmd, argv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(
+            v(&["run", "--lr", "3e-4", "--steps=100", "--verbose", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 3e-4);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(v(&[]), &[]).unwrap();
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.str_or("name", "x"), "x");
+        assert!(a.require("name").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(v(&["--lrs", "1e-4, 3e-4,1e-3"]), &[]).unwrap();
+        assert_eq!(a.f64_list("lrs", &[]).unwrap(), vec![1e-4, 3e-4, 1e-3]);
+        let b = Args::parse(v(&["--opts", "adam,slimadam"]), &[]).unwrap();
+        assert_eq!(b.str_list("opts", &[]), vec!["adam", "slimadam"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(v(&["--lr"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(v(&["--lr", "abc"]), &[]).unwrap();
+        assert!(a.f64_or("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let (cmd, rest) = subcommand(v(&["exp", "fig1"])).unwrap();
+        assert_eq!(cmd, "exp");
+        assert_eq!(rest, vec!["fig1"]);
+        assert!(subcommand(vec![]).is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help(
+            "slimadam",
+            "train",
+            "train a model",
+            &[OptSpec { name: "lr", help: "learning rate", default: Some("3e-4"), is_flag: false }],
+        );
+        assert!(h.contains("--lr"));
+        assert!(h.contains("default: 3e-4"));
+    }
+}

@@ -1,0 +1,559 @@
+//! Experiment coordinator: the single entry point that turns a declarative
+//! [`TrainConfig`] into a finished run, and fans whole config grids out
+//! across a worker pool (each worker owns its own PJRT client, since the
+//! xla wrapper types are not `Send`).
+//!
+//! Everything the figure/table reproductions need funnels through
+//! [`run_config`] / [`run_grid`], so sweep results are directly comparable.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::corpus::TokenCorpus;
+use crate::data::images::SynthImages;
+use crate::data::markov::MarkovLm;
+use crate::data::DataSource;
+use crate::optim::memory::MemoryReport;
+use crate::optim::{presets, Hypers};
+use crate::pool::parallel_map;
+use crate::rules::RuleSet;
+use crate::runtime::engine::{cpu_client, GradEngine, TrainEngine};
+use crate::snr::{ProbeSchedule, SnrSummary};
+use crate::tensor::Tensor;
+use crate::train::{train_fused, train_split, RunResult, Schedule};
+
+/// Which execution engine to use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineKind {
+    /// HLO grad_step + Rust optimizer (any optimizer name / ruleset).
+    Split,
+    /// Single-dispatch fused train_step artifact (`<model>.train.<ruleset>`).
+    Fused(String),
+}
+
+/// Data workload specification.
+#[derive(Debug, Clone)]
+pub enum DataSpec {
+    /// Zipf+Markov synthetic LM (DESIGN.md §3).
+    Markov { alpha: f64, coherence: f64, seed: u64 },
+    /// Distribution-shifted Markov for fine-tuning runs.
+    MarkovShifted { alpha: f64, coherence: f64, seed: u64 },
+    /// Real repo-source corpus, BPE'd at the model's vocab size.
+    Corpus,
+    /// Synthetic class-conditional images.
+    Images { noise: f64, seed: u64 },
+}
+
+/// A complete training-run specification.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub optimizer: String,
+    /// Explicit SlimAdam rules (overrides the named preset when set).
+    pub ruleset: Option<RuleSet>,
+    pub engine: EngineKind,
+    pub lr: f64,
+    pub steps: usize,
+    pub warmup: usize,
+    pub seed: u64,
+    /// "mitchell" | "default" (§4.3)
+    pub init: String,
+    pub data: DataSpec,
+    pub probe: Option<ProbeSchedule>,
+    pub hypers: Hypers,
+    pub eval_batches: usize,
+    pub accum: usize,
+    /// Warm-start parameters (fine-tuning): loaded before training.
+    pub warm_start: Option<Arc<Vec<Tensor>>>,
+}
+
+impl TrainConfig {
+    /// Paper-default LM config on the synthetic corpus.
+    pub fn lm(model: &str, optimizer: &str, lr: f64, steps: usize) -> TrainConfig {
+        TrainConfig {
+            model: model.into(),
+            optimizer: optimizer.into(),
+            ruleset: None,
+            engine: EngineKind::Split,
+            lr,
+            steps,
+            warmup: steps / 5, // paper: 2048 of 10k ≈ 20%
+            seed: 0,
+            init: "mitchell".into(),
+            data: DataSpec::Markov {
+                alpha: 1.07,
+                coherence: 0.5,
+                seed: 1234,
+            },
+            probe: None,
+            hypers: Hypers::default(),
+            eval_batches: 8,
+            accum: 1,
+            warm_start: None,
+        }
+    }
+
+    /// Vision config (paper App. B.4 hypers: beta2=0.999, wd=0.01).
+    pub fn vision(model: &str, optimizer: &str, lr: f64, steps: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::lm(model, optimizer, lr, steps);
+        cfg.data = DataSpec::Images {
+            noise: 0.3,
+            seed: 99,
+        };
+        cfg.hypers = Hypers {
+            beta2: 0.999,
+            weight_decay: 0.01,
+            ..Hypers::default()
+        };
+        cfg
+    }
+
+    /// Fine-tuning config (paper App. B.3: beta2=0.999, low LR, shifted
+    /// data, warm start supplied by the caller).
+    pub fn finetune(model: &str, optimizer: &str, lr: f64, steps: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::lm(model, optimizer, lr, steps);
+        cfg.data = DataSpec::MarkovShifted {
+            alpha: 1.07,
+            coherence: 0.5,
+            seed: 1234,
+        };
+        cfg.hypers = Hypers {
+            beta2: 0.999,
+            ..Hypers::default()
+        };
+        cfg.warmup = steps / 10;
+        cfg
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}@lr{:.0e}{}",
+            self.model,
+            match &self.engine {
+                EngineKind::Split => self.optimizer.clone(),
+                EngineKind::Fused(r) => format!("fused:{r}"),
+            },
+            self.lr,
+            if self.init == "default" { "/definit" } else { "" }
+        )
+    }
+}
+
+/// Summary of one finished run (what sweeps and figures consume).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub label: String,
+    pub model: String,
+    pub optimizer: String,
+    pub lr: f64,
+    pub result: RunResult,
+    pub snr: Option<SnrSummary>,
+    pub memory: Option<MemoryReport>,
+    pub steps_per_s: f64,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> crate::json::Value {
+        let mut v = crate::json::Value::obj();
+        v.set("label", self.label.clone())
+            .set("model", self.model.clone())
+            .set("optimizer", self.optimizer.clone())
+            .set("lr", self.lr)
+            .set("final_train_loss", self.result.final_train_loss)
+            .set("eval_loss", finite_or(self.result.eval_loss, -1.0))
+            .set("diverged", self.result.diverged)
+            .set("steps", self.result.losses.len())
+            .set("steps_per_s", self.steps_per_s)
+            .set("wallclock_s", self.result.wallclock_s);
+        if let Some(m) = &self.memory {
+            v.set("memory", m.to_json());
+        }
+        v
+    }
+}
+
+fn finite_or(x: f64, d: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        d
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Corpus cache: BPE training is expensive; share tokenized corpora across
+// jobs (keyed by vocab size).
+// ---------------------------------------------------------------------------
+
+static CORPUS_CACHE: OnceLock<Mutex<HashMap<usize, Arc<TokenCorpus>>>> = OnceLock::new();
+
+/// Tokenize the repo corpus once at the largest standard vocabulary.
+fn base_corpus_tokens() -> Result<Arc<TokenCorpus>> {
+    let cache = CORPUS_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    {
+        let guard = cache.lock().unwrap();
+        if let Some(c) = guard.get(&usize::MAX) {
+            return Ok(c.clone());
+        }
+    }
+    let text = crate::data::corpus::collect_text(".")?;
+    let sample = &text[..text.len().min(150_000)];
+    let bpe = crate::data::bpe::Bpe::train(sample, 4096);
+    let toks: Vec<i32> = bpe.encode(&text).iter().map(|&t| t as i32).collect();
+    let corpus = Arc::new(TokenCorpus::from_tokens("repo_base", bpe.vocab_size, toks));
+    cache
+        .lock()
+        .unwrap()
+        .insert(usize::MAX, corpus.clone());
+    Ok(corpus)
+}
+
+/// Repo corpus restricted to `vocab` tokens by frequency-rank truncation:
+/// the most frequent `vocab-1` BPE tokens keep their rank as their id and
+/// everything rarer maps to the final `<unk>` bucket. Shrinking `vocab`
+/// removes exactly the distribution's tail — the §4.1 control variable —
+/// while every sweep point shares the same head tokens.
+fn corpus_for_vocab(vocab: usize) -> Result<Arc<TokenCorpus>> {
+    anyhow::ensure!(vocab >= 2, "vocab too small");
+    let cache = CORPUS_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    {
+        let guard = cache.lock().unwrap();
+        if let Some(c) = guard.get(&vocab) {
+            return Ok(c.clone());
+        }
+    }
+    let base = base_corpus_tokens()?;
+    // frequency ranks over the base stream
+    let mut counts: HashMap<i32, usize> = HashMap::new();
+    for &t in &base.tokens {
+        *counts.entry(t).or_default() += 1;
+    }
+    let mut by_freq: Vec<(i32, usize)> = counts.into_iter().collect();
+    by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let mut remap: HashMap<i32, i32> = HashMap::new();
+    for (rank, (tok, _)) in by_freq.iter().enumerate() {
+        remap.insert(
+            *tok,
+            if rank < vocab - 1 {
+                rank as i32
+            } else {
+                (vocab - 1) as i32 // <unk> tail bucket
+            },
+        );
+    }
+    let toks: Vec<i32> = base.tokens.iter().map(|t| remap[t]).collect();
+    let corpus = Arc::new(TokenCorpus::from_tokens(
+        format!("repo_v{vocab}"),
+        vocab,
+        toks,
+    ));
+    cache.lock().unwrap().insert(vocab, corpus.clone());
+    Ok(corpus)
+}
+
+/// Build the data source matching a manifest's batch layout.
+pub fn make_data(
+    man: &crate::runtime::Manifest,
+    spec: &DataSpec,
+    run_seed: u64,
+) -> Result<Box<dyn DataSource>> {
+    let b = man.batch[0].shape[0];
+    match spec {
+        DataSpec::Markov { alpha, coherence, seed } => {
+            let t = man.batch[0].shape[1];
+            let lm = MarkovLm::new(man.token_bound(), *alpha, *coherence, *seed);
+            Ok(Box::new(lm.source(b, t, run_seed ^ 0x5A5A)))
+        }
+        DataSpec::MarkovShifted { alpha, coherence, seed } => {
+            let t = man.batch[0].shape[1];
+            let lm = MarkovLm::new(man.token_bound(), *alpha, *coherence, *seed)
+                .shifted(*seed);
+            Ok(Box::new(lm.source(b, t, run_seed ^ 0x5A5B)))
+        }
+        DataSpec::Corpus => {
+            let t = man.batch[0].shape[1];
+            let corpus = corpus_for_vocab(man.token_bound())?;
+            Ok(Box::new(ArcCorpusSource::new(corpus, b, t, run_seed)))
+        }
+        DataSpec::Images { noise, seed } => {
+            let img = man.batch[0].shape[1];
+            let ch = man.batch[0].shape[3];
+            let gen = SynthImages::new(man.token_bound(), img, ch, *noise, *seed);
+            Ok(Box::new(gen.source(b, run_seed ^ 0x1111)))
+        }
+    }
+}
+
+/// DataSource over a shared (Arc) corpus.
+struct ArcCorpusSource {
+    corpus: Arc<TokenCorpus>,
+    rng_train: crate::rng::Rng,
+    rng_eval: crate::rng::Rng,
+    batch: usize,
+    ctx: usize,
+}
+
+impl ArcCorpusSource {
+    fn new(corpus: Arc<TokenCorpus>, batch: usize, ctx: usize, seed: u64) -> Self {
+        let mut root = crate::rng::Rng::new(seed ^ 0xC0DE);
+        ArcCorpusSource {
+            corpus,
+            rng_train: root.fork(1),
+            rng_eval: root.fork(2),
+            batch,
+            ctx,
+        }
+    }
+
+    fn make(&mut self, eval: bool) -> Vec<crate::runtime::engine::BatchData> {
+        let (b, t) = (self.batch, self.ctx);
+        let need = t + 1;
+        let n = self.corpus.tokens.len();
+        let split = n * 9 / 10;
+        let mut xs = vec![0i32; b * t];
+        let mut ys = vec![0i32; b * t];
+        for i in 0..b {
+            let rng = if eval { &mut self.rng_eval } else { &mut self.rng_train };
+            let (lo, hi) = if eval {
+                (split, n - need)
+            } else {
+                (0, split - need)
+            };
+            let start = lo + rng.usize_below((hi - lo).max(1));
+            let seq = &self.corpus.tokens[start..start + need];
+            xs[i * t..(i + 1) * t].copy_from_slice(&seq[..t]);
+            ys[i * t..(i + 1) * t].copy_from_slice(&seq[1..]);
+        }
+        vec![
+            crate::runtime::engine::BatchData::I32(xs),
+            crate::runtime::engine::BatchData::I32(ys),
+        ]
+    }
+}
+
+impl DataSource for ArcCorpusSource {
+    fn next_batch(&mut self) -> Vec<crate::runtime::engine::BatchData> {
+        self.make(false)
+    }
+
+    fn eval_batch(&mut self) -> Vec<crate::runtime::engine::BatchData> {
+        self.make(true)
+    }
+
+    fn name(&self) -> &str {
+        &self.corpus.name
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run execution
+// ---------------------------------------------------------------------------
+
+// Per-thread compiled-executable cache: PJRT wrapper types are not Send,
+// and a sweep re-runs the same model dozens of times on each worker —
+// caching the compiled grad_step saves ~3-5 s of client+compile per run
+// (EXPERIMENTS.md §Perf).
+thread_local! {
+    static GRAD_ENGINE_CACHE: std::cell::RefCell<
+        HashMap<String, std::rc::Rc<GradEngine>>,
+    > = std::cell::RefCell::new(HashMap::new());
+}
+
+fn cached_grad_engine(model: &str) -> Result<std::rc::Rc<GradEngine>> {
+    GRAD_ENGINE_CACHE.with(|cache| {
+        if let Some(e) = cache.borrow().get(model) {
+            return Ok(e.clone());
+        }
+        let client = cpu_client()?;
+        let engine = std::rc::Rc::new(GradEngine::new("artifacts", model, &client)?);
+        cache
+            .borrow_mut()
+            .insert(model.to_string(), engine.clone());
+        Ok(engine)
+    })
+}
+
+/// Execute one training config end to end (per-thread PJRT client; the
+/// compiled grad_step is cached across runs of the same model).
+pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
+    let schedule = Schedule::new(cfg.lr, cfg.warmup, cfg.steps);
+
+    match &cfg.engine {
+        EngineKind::Split => {
+            let engine = cached_grad_engine(&cfg.model)?;
+            let man = engine.manifest().clone();
+            let mut data = make_data(&man, &cfg.data, cfg.seed)?;
+
+            // init params
+            let mut rng = crate::rng::Rng::new(cfg.seed.wrapping_add(17));
+            let mut params: Vec<Tensor> = if let Some(ws) = &cfg.warm_start {
+                ws.as_ref().clone()
+            } else {
+                man.params
+                    .iter()
+                    .map(|p| {
+                        let init = if cfg.init == "default" {
+                            &p.init_default
+                        } else {
+                            &p.init_mitchell
+                        };
+                        init.materialize(&p.shape, &mut rng)
+                    })
+                    .collect()
+            };
+
+            let mut opt = if let Some(rules) = &cfg.ruleset {
+                Box::new(presets::build_slimadam(&man, rules, cfg.hypers))
+                    as Box<dyn crate::optim::Optimizer>
+            } else {
+                presets::build(&cfg.optimizer, &man, cfg.hypers)?
+            };
+
+            let result = train_split(
+                &engine,
+                opt.as_mut(),
+                &mut params,
+                data.as_mut(),
+                &schedule,
+                cfg.steps,
+                cfg.probe,
+                cfg.accum,
+                cfg.eval_batches,
+            )?;
+            let snr = if cfg.probe.is_some() {
+                Some(result.probe.summary(&man.params))
+            } else {
+                None
+            };
+            let steps_per_s = result.losses.len() as f64 / result.wallclock_s.max(1e-9);
+            Ok(RunSummary {
+                label: cfg.label(),
+                model: cfg.model.clone(),
+                optimizer: opt.name().to_string(),
+                lr: cfg.lr,
+                memory: Some(crate::optim::memory::report(
+                    opt.as_ref(),
+                    man.total_param_elems(),
+                )),
+                result,
+                snr,
+                steps_per_s,
+            })
+        }
+        EngineKind::Fused(ruleset) => {
+            let client = cpu_client()?;
+            let mut engine = TrainEngine::new(
+                "artifacts",
+                &cfg.model,
+                ruleset,
+                &client,
+                &cfg.init,
+                cfg.seed.wrapping_add(17),
+            )?;
+            if let Some(ws) = &cfg.warm_start {
+                engine.load_params(ws)?;
+            }
+            let man = engine.manifest().clone();
+            let mut data = make_data(&man, &cfg.data, cfg.seed)?;
+            let result = train_fused(&mut engine, data.as_mut(), &schedule, cfg.steps, cfg.probe)?;
+            let snr = if cfg.probe.is_some() {
+                Some(result.probe.summary(&man.params))
+            } else {
+                None
+            };
+            let steps_per_s = result.losses.len() as f64 / result.wallclock_s.max(1e-9);
+            Ok(RunSummary {
+                label: cfg.label(),
+                model: cfg.model.clone(),
+                optimizer: format!("fused:{ruleset}"),
+                lr: cfg.lr,
+                result,
+                snr,
+                memory: None,
+                steps_per_s,
+            })
+        }
+    }
+}
+
+/// Run a grid of configs on a worker pool; order preserved.
+pub fn run_grid(configs: &[TrainConfig], workers: usize) -> Result<Vec<RunSummary>> {
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    let total = configs.len();
+    parallel_map(configs, workers, |_, cfg| {
+        let out = run_config(cfg).map_err(|e| anyhow!("{}: {e}", cfg.label()));
+        let n = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        if let Ok(s) = &out {
+            eprintln!(
+                "  [{n}/{total}] {:40} loss={:.4} eval={:.4}{}",
+                s.label,
+                s.result.final_train_loss,
+                s.result.eval_loss,
+                if s.result.diverged { "  DIVERGED" } else { "" }
+            );
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/linear2_v64.grad.hlo.txt").exists()
+    }
+
+    #[test]
+    fn label_formatting() {
+        let cfg = TrainConfig::lm("gpt_nano", "adam", 3e-4, 100);
+        assert!(cfg.label().contains("gpt_nano/adam@lr3e-4"));
+        let mut f = cfg.clone();
+        f.engine = EngineKind::Fused("slimadam".into());
+        assert!(f.label().contains("fused:slimadam"));
+    }
+
+    #[test]
+    fn run_config_linear2_trains() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut cfg = TrainConfig::lm("linear2_v64", "adam", 3e-3, 30);
+        cfg.probe = Some(ProbeSchedule {
+            early_every: 5,
+            early_until: 30,
+            late_every: 10,
+        });
+        cfg.eval_batches = 2;
+        let s = run_config(&cfg).unwrap();
+        assert!(!s.result.diverged);
+        assert!(s.result.final_train_loss < s.result.losses[0].1 as f64);
+        assert!(s.result.eval_loss.is_finite());
+        let snr = s.snr.unwrap();
+        assert_eq!(snr.per_param.len(), 2);
+        assert!(snr.per_param[0].fan_in.is_finite());
+        let mem = s.memory.unwrap();
+        assert_eq!(mem.v_elems, mem.param_elems); // adam
+    }
+
+    #[test]
+    fn run_grid_parallel_two_optimizers() {
+        if !have_artifacts() {
+            return;
+        }
+        let configs = vec![
+            TrainConfig::lm("linear2_v64", "adam", 1e-3, 10),
+            TrainConfig::lm("linear2_v64", "slimadam", 1e-3, 10),
+        ];
+        let out = run_grid(&configs, 2).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].optimizer, "adam");
+        assert!(out[1].optimizer.starts_with("slimadam"));
+        // SlimAdam must store strictly less V
+        let m0 = out[0].memory.as_ref().unwrap();
+        let m1 = out[1].memory.as_ref().unwrap();
+        assert!(m1.v_elems < m0.v_elems);
+    }
+}

@@ -1,0 +1,257 @@
+//! Byte-pair encoding substrate (Gage 1994 / Sennrich et al. 2016) — the
+//! §4.1 vocabulary-size control knob. Training starts from the 256 byte
+//! tokens and greedily merges the most frequent adjacent pair until the
+//! requested vocabulary size is reached; encoding applies merges in rank
+//! order. Reducing the vocab size progressively removes rare (deep-merge)
+//! tokens — exactly the tail-mass manipulation of the paper's linear-model
+//! experiment.
+
+use std::collections::HashMap;
+
+/// A trained BPE tokenizer.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    pub vocab_size: usize,
+    /// merge rank -> (left, right) token ids; merged id = 256 + rank.
+    pub merges: Vec<(u32, u32)>,
+    /// (left, right) -> merged id, for fast encoding
+    merge_map: HashMap<(u32, u32), u32>,
+}
+
+impl Bpe {
+    /// Train on `text` until `vocab_size` tokens (>= 256). Training uses a
+    /// line-chunked corpus representation with incremental pair recounts.
+    pub fn train(text: &[u8], vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= 256, "vocab must include all bytes");
+        // Chunk by lines to bound merge scans; tokens never merge across
+        // chunks (mirrors word-boundary behaviour of classic BPE).
+        let mut chunks: Vec<Vec<u32>> = text
+            .split(|&b| b == b'\n')
+            .filter(|c| !c.is_empty())
+            .map(|c| c.iter().map(|&b| b as u32).collect())
+            .collect();
+
+        let mut merges = Vec::new();
+        let n_merges = vocab_size - 256;
+        let mut pair_counts: HashMap<(u32, u32), i64> = HashMap::new();
+        for chunk in &chunks {
+            for w in chunk.windows(2) {
+                *pair_counts.entry((w[0], w[1])).or_default() += 1;
+            }
+        }
+
+        for rank in 0..n_merges {
+            // most frequent pair (ties broken deterministically by pair id)
+            let Some((&best, &cnt)) = pair_counts
+                .iter()
+                .filter(|(_, &c)| c > 0)
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break; // no productive merges left
+            }
+            let new_id = 256 + rank as u32;
+            merges.push(best);
+
+            // apply the merge in every chunk, updating pair counts locally
+            for chunk in chunks.iter_mut() {
+                let mut i = 0;
+                while i + 1 < chunk.len() {
+                    if chunk[i] == best.0 && chunk[i + 1] == best.1 {
+                        // decrement neighbours' old pairs
+                        if i > 0 {
+                            *pair_counts.entry((chunk[i - 1], chunk[i])).or_default() -= 1;
+                        }
+                        if i + 2 < chunk.len() {
+                            *pair_counts
+                                .entry((chunk[i + 1], chunk[i + 2]))
+                                .or_default() -= 1;
+                        }
+                        *pair_counts.entry(best).or_default() -= 1;
+                        chunk[i] = new_id;
+                        chunk.remove(i + 1);
+                        // increment new pairs
+                        if i > 0 {
+                            *pair_counts.entry((chunk[i - 1], new_id)).or_default() += 1;
+                        }
+                        if i + 1 < chunk.len() {
+                            *pair_counts.entry((new_id, chunk[i + 1])).or_default() += 1;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            pair_counts.remove(&best);
+        }
+
+        let merge_map = merges
+            .iter()
+            .enumerate()
+            .map(|(r, &p)| (p, 256 + r as u32))
+            .collect();
+        Bpe {
+            vocab_size: 256 + merges.len(),
+            merges,
+            merge_map,
+        }
+    }
+
+    /// Encode bytes to token ids (merges applied in rank order per chunk).
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 2);
+        for chunk in text.split(|&b| b == b'\n') {
+            if chunk.is_empty() {
+                continue;
+            }
+            let mut toks: Vec<u32> = chunk.iter().map(|&b| b as u32).collect();
+            loop {
+                // find the lowest-rank applicable merge
+                let mut best: Option<(u32, usize)> = None; // (merged_id, pos)
+                for i in 0..toks.len().saturating_sub(1) {
+                    if let Some(&id) = self.merge_map.get(&(toks[i], toks[i + 1])) {
+                        if best.map(|(b, _)| id < b).unwrap_or(true) {
+                            best = Some((id, i));
+                        }
+                    }
+                }
+                let Some((id, _)) = best else { break };
+                // apply that merge everywhere in the chunk
+                let pair = self.merges[(id - 256) as usize];
+                let mut i = 0;
+                while i + 1 < toks.len() {
+                    if toks[i] == pair.0 && toks[i + 1] == pair.1 {
+                        toks[i] = id;
+                        toks.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            out.extend_from_slice(&toks);
+        }
+        out
+    }
+
+    /// Decode token ids back to bytes.
+    pub fn decode(&self, tokens: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            self.decode_token(t, &mut out);
+        }
+        out
+    }
+
+    fn decode_token(&self, t: u32, out: &mut Vec<u8>) {
+        if t < 256 {
+            out.push(t as u8);
+        } else {
+            let (a, b) = self.merges[(t - 256) as usize];
+            self.decode_token(a, out);
+            self.decode_token(b, out);
+        }
+    }
+
+    /// Restrict to a smaller vocabulary (drop the highest-rank merges) —
+    /// the §4.1 sweep repeatedly shrinks one trained tokenizer so vocab
+    /// variants share their head tokens.
+    pub fn truncated(&self, vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= 256 && vocab_size <= self.vocab_size);
+        let merges: Vec<(u32, u32)> = self.merges[..vocab_size - 256].to_vec();
+        let merge_map = merges
+            .iter()
+            .enumerate()
+            .map(|(r, &p)| (p, 256 + r as u32))
+            .collect();
+        Bpe {
+            vocab_size,
+            merges,
+            merge_map,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &[u8] = b"the quick brown fox jumps over the lazy dog\n\
+        the quick brown fox jumps again\n\
+        pack my box with five dozen liquor jugs\n\
+        the five boxing wizards jump quickly\n";
+
+    #[test]
+    fn train_produces_merges() {
+        let bpe = Bpe::train(SAMPLE, 300);
+        assert!(bpe.vocab_size > 256);
+        assert!(bpe.vocab_size <= 300);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let bpe = Bpe::train(SAMPLE, 320);
+        let text = b"the quick brown fox";
+        let toks = bpe.encode(text);
+        assert_eq!(bpe.decode(&toks), text);
+        // compression actually happened
+        assert!(toks.len() < text.len(), "{} !< {}", toks.len(), text.len());
+    }
+
+    #[test]
+    fn roundtrip_arbitrary_bytes() {
+        crate::proptest::check(30, |g| {
+            let n = g.usize(1, 200);
+            let bytes: Vec<u8> = (0..n)
+                .map(|_| (g.usize(1, 255)) as u8) // avoid \n chunk boundary
+                .filter(|&b| b != b'\n')
+                .collect();
+            if bytes.is_empty() {
+                return Ok(());
+            }
+            let bpe = Bpe::train(SAMPLE, 300);
+            let dec = bpe.decode(&bpe.encode(&bytes));
+            crate::proptest::prop_assert(dec == bytes, "roundtrip failed")
+        });
+    }
+
+    #[test]
+    fn bigger_vocab_compresses_more() {
+        let text: Vec<u8> = SAMPLE.repeat(8);
+        let small = Bpe::train(&text, 280);
+        let large = Bpe::train(&text, 400);
+        let probe = b"the quick brown fox jumps over the lazy dog";
+        assert!(large.encode(probe).len() <= small.encode(probe).len());
+    }
+
+    #[test]
+    fn truncated_shares_head_merges() {
+        let bpe = Bpe::train(&SAMPLE.repeat(4), 350);
+        let cut = bpe.truncated(300);
+        assert_eq!(cut.merges[..], bpe.merges[..cut.merges.len()]);
+        // truncated encoding still round-trips
+        let probe = b"boxing wizards";
+        assert_eq!(cut.decode(&cut.encode(probe)), probe);
+        // and produces no tokens beyond its vocab
+        assert!(cut.encode(probe).iter().all(|&t| (t as usize) < cut.vocab_size));
+    }
+
+    #[test]
+    fn vocab_size_controls_tail_mass() {
+        // larger vocab -> longer tail of rarely-used tokens; check that the
+        // fraction of distinct tokens used once grows with vocab.
+        let text: Vec<u8> = SAMPLE.repeat(16);
+        let small = Bpe::train(&text, 280);
+        let large = Bpe::train(&text, 480);
+        let once = |bpe: &Bpe| {
+            let toks = bpe.encode(&text);
+            let mut counts = std::collections::HashMap::new();
+            for t in toks {
+                *counts.entry(t).or_insert(0usize) += 1;
+            }
+            counts.values().filter(|&&c| c <= 2).count()
+        };
+        assert!(once(&large) >= once(&small));
+    }
+}

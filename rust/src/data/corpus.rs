@@ -1,0 +1,236 @@
+//! Real-text corpus built from this repository's own source tree — genuine
+//! natural data (code + prose) with genuine Zipf token statistics, used by
+//! the §4.1 vocabulary sweep and as the "real small workload" of the
+//! end-to-end example.
+//!
+//! The corpus walks the repo for text files (rs/py/md/toml), concatenates
+//! them, trains one BPE tokenizer at the largest requested vocabulary and
+//! derives smaller vocab variants by truncation so every sweep point sees
+//! the same head tokens.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use super::bpe::Bpe;
+use super::{DataSource, LmBatcher};
+use crate::rng::Rng;
+
+const EXTS: &[&str] = &["rs", "py", "md", "toml", "txt"];
+const MAX_FILE: u64 = 512 * 1024;
+const MAX_TOTAL: usize = 2 * 1024 * 1024;
+
+/// Collect the raw corpus bytes from a directory tree.
+pub fn collect_text(root: impl AsRef<Path>) -> Result<Vec<u8>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    walk(root.as_ref(), &mut files)?;
+    files.sort(); // determinism
+    let mut out = Vec::new();
+    for f in files {
+        if out.len() >= MAX_TOTAL {
+            break;
+        }
+        if let Ok(bytes) = std::fs::read(&f) {
+            if std::str::from_utf8(&bytes).is_ok() {
+                out.extend_from_slice(&bytes);
+                out.push(b'\n');
+            }
+        }
+    }
+    ensure!(!out.is_empty(), "no text files under {:?}", root.as_ref());
+    out.truncate(MAX_TOTAL);
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {dir:?}"))? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with('.') || name == "target" || name == "artifacts"
+            || name == "results" || name == "__pycache__" || name == "vendor"
+        {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if let Some(ext) = path.extension() {
+            if EXTS.contains(&ext.to_string_lossy().as_ref())
+                && entry.metadata().map(|m| m.len() <= MAX_FILE).unwrap_or(false)
+            {
+                out.push(path);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A tokenized corpus with random-window batch sampling.
+pub struct TokenCorpus {
+    pub name: String,
+    pub vocab: usize,
+    pub tokens: Vec<i32>,
+    /// split point: windows before it are training data, after it eval
+    split: usize,
+}
+
+impl TokenCorpus {
+    pub fn from_tokens(name: impl Into<String>, vocab: usize, tokens: Vec<i32>) -> TokenCorpus {
+        let split = tokens.len() * 9 / 10;
+        TokenCorpus {
+            name: name.into(),
+            vocab,
+            tokens,
+            split,
+        }
+    }
+
+    /// Build from repo text with a trained tokenizer at `vocab` size.
+    pub fn from_dir(root: impl AsRef<Path>, bpe: &Bpe) -> Result<TokenCorpus> {
+        let text = collect_text(root)?;
+        let toks: Vec<i32> = bpe.encode(&text).iter().map(|&t| t as i32).collect();
+        ensure!(toks.len() > 1024, "corpus too small: {} tokens", toks.len());
+        Ok(TokenCorpus::from_tokens(
+            format!("repo_v{}", bpe.vocab_size),
+            bpe.vocab_size,
+            toks,
+        ))
+    }
+
+    fn sample_window(&self, rng: &mut Rng, eval: bool, seq: &mut [i32]) {
+        let need = seq.len();
+        let (lo, hi) = if eval {
+            (self.split, self.tokens.len() - need)
+        } else {
+            (0, self.split - need)
+        };
+        let start = lo + rng.usize_below((hi - lo).max(1));
+        seq.copy_from_slice(&self.tokens[start..start + need]);
+    }
+
+    pub fn source(self, batch: usize, ctx: usize, seed: u64) -> impl DataSource {
+        let name = self.name.clone();
+        LmBatcher::new(name, batch, ctx, seed, move |rng, seq| {
+            // eval-vs-train is selected by the batcher's two RNG streams;
+            // the window split is handled here by convention: the train
+            // stream draws from the head 90%, eval stream tags via high bit
+            self.sample_window(rng, false, seq)
+        })
+    }
+
+    /// Paired train/eval sources honoring the 90/10 split.
+    pub fn split_sources(
+        self,
+        batch: usize,
+        ctx: usize,
+        seed: u64,
+    ) -> (CorpusSource, CorpusSource) {
+        let corpus = std::sync::Arc::new(self);
+        (
+            CorpusSource {
+                corpus: corpus.clone(),
+                rng: Rng::new(seed ^ 0xA),
+                eval: false,
+                batch,
+                ctx,
+            },
+            CorpusSource {
+                corpus,
+                rng: Rng::new(seed ^ 0xB),
+                eval: true,
+                batch,
+                ctx,
+            },
+        )
+    }
+}
+
+/// DataSource over a shared token corpus (train or eval slice).
+pub struct CorpusSource {
+    corpus: std::sync::Arc<TokenCorpus>,
+    rng: Rng,
+    eval: bool,
+    batch: usize,
+    ctx: usize,
+}
+
+impl DataSource for CorpusSource {
+    fn next_batch(&mut self) -> Vec<crate::runtime::engine::BatchData> {
+        let (b, t) = (self.batch, self.ctx);
+        let mut xs = vec![0i32; b * t];
+        let mut ys = vec![0i32; b * t];
+        let mut seq = vec![0i32; t + 1];
+        for i in 0..b {
+            self.corpus.sample_window(&mut self.rng, self.eval, &mut seq);
+            xs[i * t..(i + 1) * t].copy_from_slice(&seq[..t]);
+            ys[i * t..(i + 1) * t].copy_from_slice(&seq[1..]);
+        }
+        vec![
+            crate::runtime::engine::BatchData::I32(xs),
+            crate::runtime::engine::BatchData::I32(ys),
+        ]
+    }
+
+    fn eval_batch(&mut self) -> Vec<crate::runtime::engine::BatchData> {
+        self.next_batch()
+    }
+
+    fn name(&self) -> &str {
+        &self.corpus.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_repo_text() {
+        // this test runs from the repo root
+        let text = collect_text(".").unwrap();
+        assert!(text.len() > 10_000, "{}", text.len());
+        // contains actual source from this crate
+        let s = String::from_utf8_lossy(&text);
+        assert!(s.contains("SlimAdam") || s.contains("slimadam"));
+    }
+
+    #[test]
+    fn corpus_tokenizes_and_batches() {
+        let text = collect_text(".").unwrap();
+        let bpe = Bpe::train(&text[..60_000.min(text.len())], 300);
+        let corpus = TokenCorpus::from_dir(".", &bpe).unwrap();
+        assert!(corpus.vocab <= 300);
+        let (mut train, mut eval) = corpus.split_sources(2, 16, 1);
+        let tb = train.next_batch();
+        let eb = eval.next_batch();
+        let crate::runtime::engine::BatchData::I32(x) = &tb[0] else { panic!() };
+        assert_eq!(x.len(), 32);
+        assert!(x.iter().all(|&t| t >= 0 && (t as usize) < 300));
+        let crate::runtime::engine::BatchData::I32(xe) = &eb[0] else { panic!() };
+        assert_ne!(x, xe);
+    }
+
+    #[test]
+    fn real_corpus_is_heavy_tailed() {
+        // the repo corpus should show Zipf-like statistics: top tokens
+        // carry disproportionate mass.
+        let text = collect_text(".").unwrap();
+        let bpe = Bpe::train(&text[..60_000.min(text.len())], 400);
+        let toks = bpe.encode(&text[..200_000.min(text.len())]);
+        let mut counts = std::collections::HashMap::new();
+        for t in &toks {
+            *counts.entry(*t).or_insert(0usize) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = freqs.iter().sum();
+        let top10: usize = freqs.iter().take(10).sum();
+        // natural data: top-10 tokens carry > 15% of mass
+        assert!(
+            top10 as f64 / total as f64 > 0.15,
+            "top10 frac {}",
+            top10 as f64 / total as f64
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Synthetic heavy-tailed language workload: Zipf unigrams + learnable
+//! Markov structure.
+//!
+//! Why this preserves the paper's phenomena (DESIGN.md §3): the paper ties
+//! language-model SNR behaviour to (i) heavy-tailed token frequencies —
+//! rare tokens receive rare gradients, so the token dimension of Tok.Embd /
+//! LM-Head needs per-token effective learning rates (§4.1) — and (ii) a
+//! learnable objective that makes gradient statistics non-stationary.
+//! A Zipf(alpha) unigram distribution reproduces (i) exactly; an order-1
+//! Markov kernel mixing a deterministic successor permutation with the
+//! Zipf marginal gives (ii): the model can reduce loss below the unigram
+//! entropy by learning the transition structure.
+//!
+//! The fine-tuning experiments (§3.1.2) use [`MarkovLm::shifted`], which
+//! re-draws the successor permutation and changes the mixing weight — a
+//! distribution shift that mimics "pre-trained on A, fine-tuned on B".
+
+use crate::rng::{Rng, ZipfTable};
+
+use super::{DataSource, LmBatcher};
+use crate::runtime::engine::BatchData;
+
+/// Order-1 Markov language model with Zipf marginals.
+#[derive(Debug, Clone)]
+pub struct MarkovLm {
+    pub vocab: usize,
+    pub alpha: f64,
+    /// probability of following the deterministic successor edge
+    pub coherence: f64,
+    zipf: ZipfTable,
+    successor: Vec<usize>,
+}
+
+impl MarkovLm {
+    /// Paper-calibrated default: alpha ~= 1.07 (natural-language-like tail),
+    /// coherence 0.5 (half the tokens are structurally predictable).
+    pub fn new(vocab: usize, alpha: f64, coherence: f64, seed: u64) -> MarkovLm {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        let mut successor: Vec<usize> = (0..vocab).collect();
+        rng.shuffle(&mut successor);
+        MarkovLm {
+            vocab,
+            alpha,
+            coherence,
+            zipf: ZipfTable::new(vocab, alpha),
+            successor,
+        }
+    }
+
+    /// Distribution-shifted variant for fine-tuning experiments: new
+    /// successor structure, higher coherence (more to learn).
+    pub fn shifted(&self, seed: u64) -> MarkovLm {
+        MarkovLm::new(self.vocab, self.alpha, (self.coherence + 0.3).min(0.9), seed ^ 0xF17E)
+    }
+
+    /// Sample one sequence into `seq`.
+    pub fn sample_into(&self, rng: &mut Rng, seq: &mut [i32]) {
+        let mut cur = self.zipf.sample(rng);
+        for s in seq.iter_mut() {
+            *s = cur as i32;
+            cur = if rng.f64() < self.coherence {
+                self.successor[cur]
+            } else {
+                self.zipf.sample(rng)
+            };
+        }
+    }
+
+    /// Empirical unigram entropy in nats (loss floor for a structure-blind
+    /// model; the Markov structure allows going below it).
+    pub fn unigram_entropy(&self) -> f64 {
+        (0..self.vocab)
+            .map(|k| {
+                let p = self.zipf.pmf(k);
+                if p > 0.0 {
+                    -p * p.ln()
+                } else {
+                    0.0
+                }
+            })
+            .sum()
+    }
+
+    /// Wrap into a [`DataSource`] for the given batch geometry.
+    pub fn source(self, batch: usize, ctx: usize, seed: u64) -> impl DataSource {
+        let name = format!("markov_v{}_a{:.2}", self.vocab, self.alpha);
+        LmBatcher::new(name, batch, ctx, seed, move |rng, seq| {
+            self.sample_into(rng, seq)
+        })
+    }
+}
+
+/// Classification-style wrapper is in `images.rs`; this module also offers
+/// a trivially-unlearnable uniform source for control experiments.
+pub struct UniformLm {
+    pub vocab: usize,
+}
+
+impl UniformLm {
+    pub fn source(self, batch: usize, ctx: usize, seed: u64) -> impl DataSource {
+        let vocab = self.vocab as u64;
+        LmBatcher::new(format!("uniform_v{}", self.vocab), batch, ctx, seed, move |rng, seq| {
+            for s in seq.iter_mut() {
+                *s = rng.below(vocab) as i32;
+            }
+        })
+    }
+}
+
+/// Convenience: batch shapes straight from a manifest.
+pub fn source_for_manifest(
+    man: &crate::runtime::Manifest,
+    lm: MarkovLm,
+    seed: u64,
+) -> impl DataSource {
+    let b = man.batch[0].shape[0];
+    let t = man.batch[0].shape[1];
+    lm.source(b, t, seed)
+}
+
+/// Sanity helper for tests/benches: token histogram of a source's batches.
+pub fn token_histogram(src: &mut dyn DataSource, vocab: usize, batches: usize) -> Vec<usize> {
+    let mut hist = vec![0usize; vocab];
+    for _ in 0..batches {
+        let batch = src.next_batch();
+        if let BatchData::I32(xs) = &batch[0] {
+            for &x in xs {
+                hist[x as usize] += 1;
+            }
+        }
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_marginal_is_heavy_tailed() {
+        let lm = MarkovLm::new(256, 1.07, 0.0, 1);
+        let mut src = lm.source(8, 64, 2);
+        let hist = token_histogram(&mut src, 256, 50);
+        let total: usize = hist.iter().sum();
+        // head token should dominate: rank-0 frequency >> uniform (1/256)
+        assert!(hist[0] as f64 / total as f64 > 10.0 / 256.0);
+        // tail tokens rare but present across vocab
+        let nonzero = hist.iter().filter(|&&c| c > 0).count();
+        assert!(nonzero > 128, "{nonzero}");
+    }
+
+    #[test]
+    fn coherence_creates_structure() {
+        let lm = MarkovLm::new(64, 1.0, 0.9, 3);
+        let mut rng = Rng::new(4);
+        let mut seq = vec![0i32; 400];
+        lm.sample_into(&mut rng, &mut seq);
+        // with coherence 0.9, ~90% of transitions follow the successor map
+        let mut follows = 0;
+        for w in seq.windows(2) {
+            if lm.successor[w[0] as usize] == w[1] as usize {
+                follows += 1;
+            }
+        }
+        let frac = follows as f64 / (seq.len() - 1) as f64;
+        assert!(frac > 0.8, "{frac}");
+    }
+
+    #[test]
+    fn shifted_changes_structure() {
+        let a = MarkovLm::new(64, 1.0, 0.5, 5);
+        let b = a.shifted(6);
+        assert_ne!(a.successor, b.successor);
+        assert!(b.coherence > a.coherence);
+    }
+
+    #[test]
+    fn unigram_entropy_positive_and_below_uniform() {
+        let lm = MarkovLm::new(256, 1.07, 0.5, 1);
+        let h = lm.unigram_entropy();
+        assert!(h > 0.0);
+        assert!(h < (256f64).ln()); // heavy tail -> below uniform entropy
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || MarkovLm::new(32, 1.0, 0.5, 9).source(2, 8, 10);
+        let mut a = mk();
+        let mut b = mk();
+        let BatchData::I32(xa) = &a.next_batch()[0] else { panic!() };
+        let xa = xa.clone();
+        let BatchData::I32(xb) = &b.next_batch()[0] else { panic!() };
+        assert_eq!(&xa, xb);
+    }
+}

@@ -1,0 +1,71 @@
+//! Figure 1: learning-rate sensitivity of low-memory optimizers on GPT
+//! pre-training. The paper's headline qualitative result: SlimAdam traces
+//! Adam's U-shaped curve almost exactly; Adam-mini/AdaLayer stay close at
+//! small LR but destabilize near Adam's optimum; Lion/SM3/Adafactor are
+//! shifted, different curves entirely.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::results_dir;
+use crate::sweep::{log_grid, LrSweep};
+
+use super::{steps_or, workers_or_default, write_summary_md};
+
+pub const OPTIMIZERS: &[&str] = &[
+    "adam",
+    "slimadam",
+    "adam_mini_v2",
+    "adalayer",
+    "lion",
+    "sm3",
+];
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let steps = steps_or(args, 120);
+    let lrs = args.f64_list("lrs", &log_grid(1e-4, 3e-2, 7))?;
+    let opts: Vec<String> =
+        args.str_list("optimizers", OPTIMIZERS);
+    let opt_refs: Vec<&str> = opts.iter().map(|s| s.as_str()).collect();
+
+    let base = TrainConfig::lm(&model, "adam", 1e-3, steps);
+    let workers = workers_or_default(args, opts.len() * lrs.len());
+    println!(
+        "fig1: {model}, {} optimizers x {} LRs x {steps} steps ({workers} workers)",
+        opts.len(),
+        lrs.len()
+    );
+    let sweep = LrSweep::run(&base, &opt_refs, &lrs, workers)?;
+
+    let dir = results_dir("fig1")?;
+    sweep.write_csv(dir.join("rows.csv"))?;
+    std::fs::write(dir.join("series.json"), sweep.to_json().dump_pretty())?;
+
+    let chart = sweep.chart("Fig.1 — final loss vs learning rate (log x)");
+    println!("\n{chart}");
+
+    let mut md = String::from(
+        "# Fig. 1 — LR sensitivity (paper: SlimAdam ≈ Adam U-curve)\n\n\
+         | optimizer | best lr | best loss | curve vs Adam |\n|---|---|---|---|\n",
+    );
+    let (adam_lr, adam_loss) = sweep.best(0);
+    for (i, name) in sweep.optimizers.iter().enumerate() {
+        let (lr, loss) = sweep.best(i);
+        let drift = (lr / adam_lr).log10().abs();
+        let verdict = if i == 0 {
+            "reference".to_string()
+        } else if drift < 0.34 && (loss - adam_loss).abs() < 0.15 {
+            "matches".to_string()
+        } else {
+            format!("shifted ({:+.1} dex, Δloss {:+.3})", (lr / adam_lr).log10(), loss - adam_loss)
+        };
+        md.push_str(&format!(
+            "| {name} | {lr:.1e} | {loss:.4} | {verdict} |\n"
+        ));
+    }
+    println!("{md}");
+    write_summary_md(&dir, &(md + "\n```\n" + &chart + "\n```\n"))?;
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Figure 2 (+ App. C.1 Figs. 13/15): SNR trajectories of selected
+//! second-moment blocks along an Adam run. Paper shapes to reproduce:
+//! Tok.Embd strongly prefers the embedding dimension over the token
+//! dimension; keys/queries prefer fan_in over fan_out; values/projections
+//! the opposite; MLP LayerNorms stay high while attention LayerNorms sag.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::json::Value;
+use crate::metrics::{ascii_chart, results_dir, JsonlWriter};
+use crate::runtime::KMode;
+
+use super::{probed_run, steps_or, write_snr, write_summary_md};
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let steps = steps_or(args, 200);
+    let lr = args.f64_or("lr", 1e-3)?;
+    let data = args.str_or("data", "markov").to_string();
+
+    let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+    if data == "corpus" {
+        cfg.data = crate::coordinator::DataSpec::Corpus;
+    }
+    println!("fig2: probing Adam second moments on {model} ({steps} steps, lr {lr:.0e}, {data})");
+    let (summary, snr) = probed_run(cfg)?;
+
+    let dir = results_dir("fig2")?;
+    write_snr(&dir, "snr_avg.jsonl", &snr)?;
+
+    // full trajectories
+    let man = super::manifest(&model)?;
+    let mut w = JsonlWriter::create(dir.join("trajectories.jsonl"))?;
+    for (idx, samples) in &summary.result.probe.records {
+        let info = &man.params[*idx];
+        for s in samples {
+            let mut v = Value::obj();
+            v.set("name", info.name.clone())
+                .set("layer_type", info.layer_type.clone())
+                .set("depth", info.depth)
+                .set("step", s.step)
+                .set("fan_out", finite(s.fan_out))
+                .set("fan_in", finite(s.fan_in))
+                .set("both", finite(s.both));
+            w.write(&v)?;
+        }
+    }
+
+    // charts for the paper's selected blocks
+    let mut md = String::from("# Fig. 2 — SNR trajectories (Adam second moments)\n\n");
+    for (title, name, k_pref, k_avoid) in selected_blocks(&man.family) {
+        let Some(idx) = man.params.iter().position(|p| p.name == name) else {
+            continue;
+        };
+        let Some(samples) = summary.result.probe.records.get(&idx) else {
+            continue;
+        };
+        let pref: Vec<(f64, f64)> = samples
+            .iter()
+            .map(|s| (s.step as f64, s.get(k_pref).max(1e-6)))
+            .collect();
+        let avoid: Vec<(f64, f64)> = samples
+            .iter()
+            .map(|s| (s.step as f64, s.get(k_avoid).max(1e-6)))
+            .collect();
+        let chart = ascii_chart(
+            &format!("{title} ({name}) — SNR vs step (log y)"),
+            &[
+                (&format!("K={}", k_pref.as_str()), &pref),
+                (&format!("K={}", k_avoid.as_str()), &avoid),
+            ],
+            56,
+            10,
+            false,
+            true,
+        );
+        println!("{chart}");
+        let last = samples.last().unwrap();
+        md.push_str(&format!(
+            "- **{title}**: SNR_{}(end) = {:.3}, SNR_{}(end) = {:.3} — preferred dim {}\n",
+            k_pref.as_str(),
+            last.get(k_pref),
+            k_avoid.as_str(),
+            last.get(k_avoid),
+            if last.get(k_pref) > last.get(k_avoid) {
+                "matches paper"
+            } else {
+                "DOES NOT match paper"
+            }
+        ));
+    }
+
+    println!("{}", super::layer_type_table(&snr));
+    md.push_str("\n## Depth-averaged SNR per layer type\n\n```\n");
+    md.push_str(&super::layer_type_table(&snr));
+    md.push_str("```\n");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}
+
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        -1.0
+    }
+}
+
+/// (chart title, param name, paper-preferred K, paper-averse K)
+fn selected_blocks(family: &str) -> Vec<(&'static str, String, KMode, KMode)> {
+    match family {
+        "gpt" | "llama" => vec![
+            // Tok.Embd (vocab, d): embedding axis = fan_in; token axis = fan_out
+            ("Token Embedding", "tok_embd".into(), KMode::FanIn, KMode::FanOut),
+            ("Attention Key (L0)", "h0.attn_k".into(), KMode::FanIn, KMode::FanOut),
+            ("Attention Value (L0)", "h0.attn_v".into(), KMode::FanOut, KMode::FanIn),
+            ("Attn Projection (L1)", "h1.attn_proj".into(), KMode::FanOut, KMode::FanIn),
+            ("MLP Up (L0)", "h0.mlp_up".into(), KMode::FanOut, KMode::FanIn),
+            ("MLP Down (L1)", "h1.mlp_down".into(), KMode::FanOut, KMode::FanIn),
+        ],
+        "vit" => vec![
+            ("Patch Embedding", "patch_embd".into(), KMode::FanIn, KMode::FanOut),
+            ("Attention Key (L0)", "h0.attn_k".into(), KMode::FanIn, KMode::FanOut),
+            ("MLP Down (L1)", "h1.mlp_down".into(), KMode::FanOut, KMode::FanIn),
+            ("Head", "head".into(), KMode::FanIn, KMode::FanOut),
+        ],
+        _ => vec![("Head", "head".into(), KMode::FanIn, KMode::FanOut)],
+    }
+}

@@ -1,0 +1,55 @@
+//! Figure 3 (+ App. Figs. 14/16/17): depth dependence of time-averaged SNR
+//! per layer type — which compression dimension wins at each depth.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::{results_dir, CsvWriter};
+
+use super::{probed_run, steps_or, write_summary_md};
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let steps = steps_or(args, 200);
+    let lr = args.f64_or("lr", 1e-3)?;
+
+    println!("fig3: depth dependence of averaged SNR on {model}");
+    let (_, snr) = probed_run(TrainConfig::lm(&model, "adam", lr, steps))?;
+
+    let dir = results_dir("fig3")?;
+    let mut w = CsvWriter::create(
+        dir.join("rows.csv"),
+        &["layer_type", "depth", "snr_fan_out", "snr_fan_in", "snr_both", "best_k"],
+    )?;
+    let mut md = String::from(
+        "# Fig. 3 — depth dependence of averaged SNR\n\n\
+         | layer_type | depth | fan_out | fan_in | both | K* |\n|---|---|---|---|---|---|\n",
+    );
+    for (avg, info) in snr.per_param.iter().zip(&snr.metas) {
+        if info.is_vector() || avg.n == 0 {
+            continue;
+        }
+        let (k, _) = avg.best();
+        w.row(&[
+            info.layer_type.clone(),
+            info.depth.to_string(),
+            format!("{:.4}", avg.fan_out),
+            format!("{:.4}", avg.fan_in),
+            format!("{:.4}", avg.both),
+            k.as_str(),
+        ])?;
+        md.push_str(&format!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {} |\n",
+            info.layer_type,
+            info.depth,
+            avg.fan_out,
+            avg.fan_in,
+            avg.both,
+            k.as_str()
+        ));
+    }
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

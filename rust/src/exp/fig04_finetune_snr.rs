@@ -1,0 +1,130 @@
+//! Figure 4 / Figure 18 (App. C.2): SNR during fine-tuning. The paper's
+//! finding: fine-tuning a converged model on a shifted distribution shows
+//! globally *lower* SNR than pre-training — keys/queries fall well below
+//! 1.0, MLP.Down stays the most compressible matrix family.
+//!
+//! Protocol here (DESIGN.md §3): pre-train a Llama-style tiny model on
+//! Markov distribution A, checkpoint, then fine-tune on shifted
+//! distribution B at low LR with App. B.3 hypers — probing the
+//! fine-tuning phase.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::results_dir;
+use crate::train::checkpoint;
+
+use super::{probed_run, steps_or, write_snr, write_summary_md};
+
+/// Pre-train `model` on the Markov base distribution and return its
+/// parameters, caching the checkpoint under `results/fig4/`. Shared by the
+/// fine-tuning experiments (fig4, fig10 --all, fig27).
+pub fn pretrained_params(
+    model: &str,
+    pre_steps: usize,
+    force: bool,
+) -> Result<Vec<crate::tensor::Tensor>> {
+    let dir = results_dir("fig4")?;
+    let ckpt = dir.join(format!("{model}.pretrained.npz"));
+    let man = super::manifest(model)?;
+    if ckpt.exists() && !force {
+        println!("fig4: reusing checkpoint {ckpt:?}");
+        return checkpoint::load(&ckpt, &man.params);
+    }
+    println!("fig4: pre-training {model} for {pre_steps} steps");
+    let pre = TrainConfig::lm(model, "adam", 1e-3, pre_steps);
+    // run_config does not expose final parameters, so drive the split
+    // engine directly and checkpoint the result.
+    let client = crate::runtime::engine::cpu_client()?;
+    let engine = crate::runtime::engine::GradEngine::new("artifacts", model, &client)?;
+    let mut rng = crate::rng::Rng::new(7u64.wrapping_add(17));
+    let mut p: Vec<crate::tensor::Tensor> = man
+        .params
+        .iter()
+        .map(|pi| pi.init_mitchell.materialize(&pi.shape, &mut rng))
+        .collect();
+    let mut opt = crate::optim::presets::build("adam", &man, pre.hypers)?;
+    let mut data = crate::coordinator::make_data(&man, &pre.data, 7)?;
+    let schedule = crate::train::Schedule::new(pre.lr, pre.warmup, pre.steps);
+    let res = crate::train::train_split(
+        &engine,
+        opt.as_mut(),
+        &mut p,
+        data.as_mut(),
+        &schedule,
+        pre.steps,
+        None,
+        1,
+        0,
+    )?;
+    anyhow::ensure!(!res.diverged, "pre-training diverged");
+    println!(
+        "  pre-train loss {:.4} -> {:.4}",
+        res.losses[0].1, res.final_train_loss
+    );
+    checkpoint::save(&ckpt, &man.params, &p)?;
+    Ok(p)
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "llama_tiny").to_string();
+    let pre_steps = steps_or(args, 200);
+    let ft_steps = args.usize_or("ft-steps", 120)?;
+    let dir = results_dir("fig4")?;
+
+    // Phase 1: pre-train (cached)
+    let params = pretrained_params(&model, pre_steps, args.flag("repretrain"))?;
+
+    // Phase 2: fine-tune on shifted distribution with probe
+    println!("fig4: fine-tuning on shifted distribution ({ft_steps} steps)");
+    let mut ft = TrainConfig::finetune(&model, "adam", 1e-4, ft_steps);
+    ft.warm_start = Some(Arc::new(params));
+    ft.seed = 8;
+    let (_, ft_snr) = probed_run(ft)?;
+
+    // Reference: pre-training-phase SNR for the comparison table
+    println!("fig4: probing pre-training SNR for comparison");
+    let mut pre_probe = TrainConfig::lm(&model, "adam", 1e-3, ft_steps);
+    pre_probe.seed = 7;
+    let (_, pre_snr) = probed_run(pre_probe)?;
+
+    write_snr(&dir, "snr_finetune.jsonl", &ft_snr)?;
+    write_snr(&dir, "snr_pretrain.jsonl", &pre_snr)?;
+
+    let ft_table = super::layer_type_table(&ft_snr);
+    let pre_table = super::layer_type_table(&pre_snr);
+    println!("--- fine-tuning SNR ---\n{ft_table}");
+    println!("--- pre-training SNR ---\n{pre_table}");
+
+    // Paper check: fine-tuning SNR lower overall; K/Q below 1.
+    let ft_types = ft_snr.by_layer_type();
+    let pre_types = pre_snr.by_layer_type();
+    let mut lower = 0;
+    let mut total = 0;
+    for (lt, ft_avg) in &ft_types {
+        if let Some(pre_avg) = pre_types.get(lt) {
+            total += 1;
+            if ft_avg.best().1 < pre_avg.best().1 {
+                lower += 1;
+            }
+        }
+    }
+    let kq_below = ["attn_k", "attn_q"]
+        .iter()
+        .filter(|lt| ft_types.get(**lt).map(|a| a.best().1 < 1.0).unwrap_or(false))
+        .count();
+    let md = format!(
+        "# Fig. 4 — fine-tuning SNR vs pre-training SNR\n\n\
+         - layer types with lower SNR in fine-tuning: {lower}/{total} \
+           (paper: fine-tuning is less compressible overall)\n\
+         - K/Q layer types with best-SNR < 1.0 during fine-tuning: {kq_below}/2 \
+           (paper: keys and queries fall well below 1.0)\n\n\
+         ## fine-tuning\n```\n{ft_table}```\n\n## pre-training\n```\n{pre_table}```\n"
+    );
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

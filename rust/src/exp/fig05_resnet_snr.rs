@@ -1,0 +1,69 @@
+//! Figure 5 (+ App. C.3 Figs. 19/20): ResNet image-classification SNR.
+//! Paper shapes: intermediate conv layers show exceptionally high SNR on
+//! both dimensions (increasing with depth); the first conv resists
+//! fan_out compression; the final layer hovers near 1.0.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::{results_dir, CsvWriter};
+
+use super::{probed_run, steps_or, write_snr, write_summary_md};
+
+pub fn run(args: &Args) -> Result<()> {
+    let steps = steps_or(args, 150);
+    let lr = args.f64_or("lr", 1e-3)?;
+    let dir = results_dir("fig5")?;
+    let mut md = String::from("# Fig. 5 / Figs. 19-20 — ResNet SNR\n\n");
+
+    for classes in [10usize, 100] {
+        let model = format!("resnet_mini_c{classes}");
+        println!("fig5: probing {model} ({steps} steps)");
+        let (_, snr) = probed_run(TrainConfig::vision(&model, "adam", lr, steps))?;
+        write_snr(&dir, &format!("snr_c{classes}.jsonl"), &snr)?;
+
+        let mut w = CsvWriter::create(
+            dir.join(format!("conv_depth_c{classes}.csv")),
+            &["name", "depth", "fan_out", "fan_in", "both"],
+        )?;
+        let mut conv_snrs = Vec::new();
+        for (avg, info) in snr.per_param.iter().zip(&snr.metas) {
+            if info.layer_type != "conv" && info.layer_type != "head" {
+                continue;
+            }
+            w.row(&[
+                info.name.clone(),
+                info.depth.to_string(),
+                format!("{:.4}", avg.fan_out),
+                format!("{:.4}", avg.fan_in),
+                format!("{:.4}", avg.both),
+            ])?;
+            if info.layer_type == "conv" && info.depth >= 0 {
+                conv_snrs.push((info.depth, avg.best().1));
+            }
+        }
+
+        let table = super::layer_type_table(&snr);
+        println!("{table}");
+
+        // paper checks
+        let high_conv = conv_snrs.iter().filter(|(_, s)| *s > 1.0).count();
+        let head = snr
+            .per_param
+            .iter()
+            .zip(&snr.metas)
+            .find(|(_, i)| i.layer_type == "head")
+            .map(|(a, _)| a.best().1)
+            .unwrap_or(f64::NAN);
+        md.push_str(&format!(
+            "## classes={classes}\n\
+             - intermediate convs with SNR > 1: {high_conv}/{} (paper: nearly all)\n\
+             - final-layer best SNR: {head:.3} (paper: close to 1.0)\n\n```\n{table}```\n\n",
+            conv_snrs.len()
+        ));
+    }
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

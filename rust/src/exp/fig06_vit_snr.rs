@@ -1,0 +1,64 @@
+//! Figure 6 (+ App. C.3 Figs. 21-23): ViT image-classification SNR.
+//! Paper shapes: GPT-like attention trends (K/Q prefer fan_in, V/proj
+//! fan_out) at *higher* absolute SNR; MLP.Up flips to fan_in (unlike GPT);
+//! patch embedding prefers fan_in; LayerNorms are surprisingly
+//! compressible.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::results_dir;
+use crate::runtime::KMode;
+
+use super::{probed_run, steps_or, write_snr, write_summary_md};
+
+pub fn run(args: &Args) -> Result<()> {
+    let steps = steps_or(args, 150);
+    let lr = args.f64_or("lr", 1e-3)?;
+    let dir = results_dir("fig6")?;
+    let mut md = String::from("# Fig. 6 / Figs. 21-23 — ViT SNR\n\n");
+
+    for classes in [10usize, 100] {
+        let model = format!("vit_mini_c{classes}");
+        println!("fig6: probing {model} ({steps} steps)");
+        let (_, snr) = probed_run(TrainConfig::vision(&model, "adam", lr, steps))?;
+        write_snr(&dir, &format!("snr_c{classes}.jsonl"), &snr)?;
+        let table = super::layer_type_table(&snr);
+        println!("{table}");
+
+        let types = snr.by_layer_type();
+        let pref = |lt: &str, k: KMode| -> bool {
+            types.get(lt).map(|a| a.best().0 == k).unwrap_or(false)
+        };
+        let checks = [
+            ("K prefers fan_in", pref("attn_k", KMode::FanIn)),
+            ("Q prefers fan_in", pref("attn_q", KMode::FanIn)),
+            (
+                "V prefers fan_out",
+                types
+                    .get("attn_v")
+                    .map(|a| a.fan_out > a.fan_in)
+                    .unwrap_or(false),
+            ),
+            (
+                "patch_embd prefers fan_in",
+                types
+                    .get("patch_embd")
+                    .map(|a| a.fan_in > a.fan_out)
+                    .unwrap_or(false),
+            ),
+        ];
+        md.push_str(&format!("## classes={classes}\n"));
+        for (name, ok) in checks {
+            md.push_str(&format!(
+                "- {name}: {}\n",
+                if ok { "yes (matches paper)" } else { "no" }
+            ));
+        }
+        md.push_str(&format!("\n```\n{table}```\n\n"));
+    }
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Figure 7 / Figure 29 (§4.1): heavy-tailed token distributions make the
+//! token dimension incompressible. Two-layer linear model (Tok.Embd + LM
+//! Head) on the BPE'd repo corpus at varying vocabulary sizes:
+//!
+//! * left — token-dimension SNR of both layers drops as vocab grows;
+//! * right — loss gap ΔL vs Adam for shared second moments along
+//!   (K_embd, K_head): token-dim compression hurts at large vocab,
+//!   embedding-dim compression stays free.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{run_grid, DataSpec, TrainConfig};
+use crate::metrics::{results_dir, CsvWriter};
+use crate::rules::RuleSet;
+use crate::runtime::KMode;
+
+use super::{probed_run, steps_or, workers_or_default, write_summary_md};
+
+/// In our (vocab, d) storage: token axis = fan_out (axis 0); embedding
+/// axis = fan_in (axis 1). "Compress along the token dimension" means
+/// averaging over it -> K = FanOut.
+const K_TOKEN: KMode = KMode::FanOut;
+const K_EMBD: KMode = KMode::FanIn;
+
+pub fn run(args: &Args) -> Result<()> {
+    let vocabs: Vec<usize> = args
+        .str_list("vocabs", &["64", "256", "1024", "4096"])
+        .iter()
+        .map(|s| s.parse().unwrap_or(64))
+        .collect();
+    let steps = steps_or(args, 80);
+    let lr = args.f64_or("lr", 1e-3)?;
+    let dir = results_dir("fig7")?;
+
+    // ---- left: token-dim SNR vs vocab -------------------------------
+    let mut w = CsvWriter::create(
+        dir.join("snr_vs_vocab.csv"),
+        &["vocab", "layer", "snr_token_dim", "snr_embd_dim"],
+    )?;
+    let mut md = String::from(
+        "# Fig. 7 / Fig. 29 — vocabulary size vs token-dim compressibility\n\n\
+         | vocab | layer | SNR(token dim) | SNR(embd dim) |\n|---|---|---|---|\n",
+    );
+    let mut token_snrs = Vec::new();
+    for &v in &vocabs {
+        let model = format!("linear2_v{v}");
+        let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+        cfg.data = DataSpec::Corpus;
+        cfg.hypers.beta2 = 0.999; // paper App. B.2
+        cfg.hypers.weight_decay = 1e-4;
+        println!("fig7: probing {model} on repo corpus");
+        let (_, snr) = probed_run(cfg)?;
+        for (avg, info) in snr.per_param.iter().zip(&snr.metas) {
+            let tok = avg.get(K_TOKEN);
+            let emb = avg.get(K_EMBD);
+            w.row(&[
+                v.to_string(),
+                info.name.clone(),
+                format!("{tok:.4}"),
+                format!("{emb:.4}"),
+            ])?;
+            md.push_str(&format!(
+                "| {v} | {} | {tok:.3} | {emb:.3} |\n",
+                info.name
+            ));
+            if info.name == "lm_head" {
+                token_snrs.push((v, tok));
+            }
+        }
+    }
+
+    // paper check: token-dim SNR decreases with vocab
+    let decreasing = token_snrs.windows(2).filter(|w| w[1].1 <= w[0].1).count();
+    md.push_str(&format!(
+        "\nLM-head token-dim SNR decreasing across vocab steps: {}/{} \
+         (paper: monotone decline)\n",
+        decreasing,
+        token_snrs.len().saturating_sub(1)
+    ));
+
+    // ---- right: ΔL_Adam heatmap over (K_embd, K_head) ----------------
+    println!("fig7: ΔL grid over (K_embd, K_head)");
+    let combos: Vec<(&str, KMode, KMode)> = vec![
+        ("adam", KMode::None, KMode::None),
+        ("embd_dim", K_EMBD, K_EMBD),
+        ("token_dim", K_TOKEN, K_TOKEN),
+        ("both_dims", KMode::Both, KMode::Both),
+    ];
+    let mut configs = Vec::new();
+    for &v in &vocabs {
+        let model = format!("linear2_v{v}");
+        for (_, ke, kh) in &combos {
+            let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+            cfg.data = DataSpec::Corpus;
+            cfg.hypers.beta2 = 0.999;
+            cfg.hypers.weight_decay = 1e-4;
+            let mut rules = std::collections::BTreeMap::new();
+            rules.insert("tok_embd".to_string(), *ke);
+            rules.insert("lm_head".to_string(), *kh);
+            cfg.ruleset = Some(RuleSet {
+                label: format!("v{v}"),
+                cutoff: 1.0,
+                derived_at_lr: None,
+                rules,
+            });
+            configs.push(cfg);
+        }
+    }
+    let workers = workers_or_default(args, configs.len());
+    let sums = run_grid(&configs, workers)?;
+
+    let mut w2 = CsvWriter::create(
+        dir.join("loss_gap.csv"),
+        &["vocab", "k_embd_k_head", "eval_loss", "delta_vs_adam"],
+    )?;
+    md.push_str("\n## ΔL vs Adam (eval loss gap)\n\n| vocab |");
+    for (name, _, _) in &combos {
+        md.push_str(&format!(" {name} |"));
+    }
+    md.push_str("\n|---|");
+    for _ in &combos {
+        md.push_str("---|");
+    }
+    md.push('\n');
+    for (vi, &v) in vocabs.iter().enumerate() {
+        let base = sums[vi * combos.len()].result.eval_loss;
+        md.push_str(&format!("| {v} |"));
+        for (ci, (name, _, _)) in combos.iter().enumerate() {
+            let s = &sums[vi * combos.len() + ci];
+            let delta = s.result.eval_loss - base;
+            w2.row(&[
+                v.to_string(),
+                name.to_string(),
+                format!("{:.5}", s.result.eval_loss),
+                format!("{delta:.5}"),
+            ])?;
+            md.push_str(&format!(" {delta:+.4} |"));
+        }
+        md.push('\n');
+    }
+    md.push_str(
+        "\n(paper: token-dim column grows with vocab; embd-dim column stays ≈ 0)\n",
+    );
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Figure 8 / Figure 24 (§4.2): large learning rates reduce
+//! compressibility. For each layer type, the best-K time-averaged SNR
+//! declines monotonically as LR grows; at the optimal LR, Tok.Embd / LN /
+//! K / Q / MLP.Up sit at or below 1 while V / proj / MLP.Down stay above.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::{ascii_chart, results_dir, CsvWriter};
+use crate::pool::parallel_map;
+
+use super::{probe, steps_or, workers_or_default, write_summary_md};
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let steps = steps_or(args, 150);
+    let lrs = args.f64_list("lrs", &[1e-4, 3e-4, 1e-3, 3e-3, 1e-2])?;
+    let dir = results_dir("fig8")?;
+
+    println!("fig8: SNR vs learning rate on {model} ({} LRs)", lrs.len());
+    let workers = workers_or_default(args, lrs.len());
+    let snrs = parallel_map(&lrs, workers, |_, &lr| {
+        let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+        cfg.probe = Some(probe());
+        let s = crate::coordinator::run_config(&cfg)?;
+        Ok((lr, s.snr.unwrap(), s.result.diverged))
+    })?;
+
+    let mut w = CsvWriter::create(
+        dir.join("rows.csv"),
+        &["lr", "layer_type", "best_k", "avg_snr", "diverged"],
+    )?;
+    // layer_type -> (lr, best snr) series
+    let mut series: std::collections::BTreeMap<String, Vec<(f64, f64)>> =
+        Default::default();
+    for (lr, snr, diverged) in &snrs {
+        for (lt, avg) in snr.by_layer_type() {
+            let (k, best) = avg.best();
+            w.row(&[
+                format!("{lr:e}"),
+                lt.clone(),
+                k.as_str(),
+                format!("{best:.4}"),
+                diverged.to_string(),
+            ])?;
+            series.entry(lt).or_default().push((*lr, best));
+        }
+    }
+
+    let plot: Vec<(&str, &[(f64, f64)])> = series
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.as_slice()))
+        .collect();
+    let chart = ascii_chart(
+        "Fig. 8 — best-K averaged SNR vs LR (log-log)",
+        &plot,
+        64,
+        14,
+        true,
+        true,
+    );
+    println!("{chart}");
+
+    // paper checks: monotone decline per type; category split at lr=1e-3
+    let mut md = String::from(
+        "# Fig. 8 / Fig. 24 — large LRs reduce compressibility\n\n\
+         | layer_type | SNR@minLR | SNR@maxLR | declines? |\n|---|---|---|---|\n",
+    );
+    for (lt, pts) in &series {
+        let first = pts.first().unwrap().1;
+        let last = pts.last().unwrap().1;
+        md.push_str(&format!(
+            "| {lt} | {first:.3} | {last:.3} | {} |\n",
+            if last < first { "yes" } else { "NO" }
+        ));
+    }
+    md.push_str("\n```\n");
+    md.push_str(&chart);
+    md.push_str("```\n");
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Figure 9 / Figure 25 (§4.3): initialization affects compressibility.
+//! Mitchell init (residual-stream projections scaled by 1/sqrt(2L)) yields
+//! higher SNR than PyTorch-default init, most dramatically for Attn.Proj
+//! and MLP.Down — empirical support for the 1/depth scaling.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::{results_dir, CsvWriter};
+use crate::pool::parallel_map;
+
+use super::{probe, steps_or, workers_or_default, write_summary_md};
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let steps = steps_or(args, 150);
+    let lrs = args.f64_list("lrs", &[3e-4, 1e-3, 3e-3])?;
+    let dir = results_dir("fig9")?;
+
+    let mut jobs = Vec::new();
+    for &lr in &lrs {
+        for init in ["mitchell", "default"] {
+            jobs.push((lr, init.to_string()));
+        }
+    }
+    println!("fig9: init comparison on {model} ({} runs)", jobs.len());
+    let workers = workers_or_default(args, jobs.len());
+    let outs = parallel_map(&jobs, workers, |_, (lr, init)| {
+        let mut cfg = TrainConfig::lm(&model, "adam", *lr, steps);
+        cfg.init = init.clone();
+        cfg.probe = Some(probe());
+        let s = crate::coordinator::run_config(&cfg)?;
+        Ok((*lr, init.clone(), s.snr.unwrap()))
+    })?;
+
+    let mut w = CsvWriter::create(
+        dir.join("rows.csv"),
+        &["lr", "init", "layer_type", "best_snr"],
+    )?;
+    let mut md = String::from(
+        "# Fig. 9 / Fig. 25 — Mitchell vs PyTorch-default init\n\n\
+         | lr | layer_type | SNR mitchell | SNR default | mitchell higher? |\n\
+         |---|---|---|---|---|\n",
+    );
+    for &lr in &lrs {
+        let mitchell = outs
+            .iter()
+            .find(|(l, i, _)| *l == lr && i == "mitchell")
+            .unwrap();
+        let default = outs
+            .iter()
+            .find(|(l, i, _)| *l == lr && i == "default")
+            .unwrap();
+        let mt = mitchell.2.by_layer_type();
+        let dt = default.2.by_layer_type();
+        for (lt, mavg) in &mt {
+            let ms = mavg.best().1;
+            let ds = dt.get(lt).map(|a| a.best().1).unwrap_or(f64::NAN);
+            w.row(&[
+                format!("{lr:e}"),
+                "mitchell".into(),
+                lt.clone(),
+                format!("{ms:.4}"),
+            ])?;
+            w.row(&[
+                format!("{lr:e}"),
+                "default".into(),
+                lt.clone(),
+                format!("{ds:.4}"),
+            ])?;
+            let mark = if matches!(lt.as_str(), "attn_proj" | "mlp_down") {
+                " **(residual-stream)**"
+            } else {
+                ""
+            };
+            md.push_str(&format!(
+                "| {lr:.0e} | {lt}{mark} | {ms:.3} | {ds:.3} | {} |\n",
+                if ms > ds { "yes" } else { "no" }
+            ));
+        }
+    }
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

@@ -1,0 +1,248 @@
+//! Figure 10 / Figure 26 (§5): the headline SlimAdam result.
+//!
+//! Top: fraction of second moments reducible as a function of learning
+//! rate and SNR cutoff, per training regime — GPT/ViT compress ~98% at
+//! small LR shrinking to ~35% at large LR; ResNets stay compressible
+//! everywhere; fine-tuning compresses least.
+//!
+//! Bottom: loss-vs-LR comparison between Adam, SlimAdam (rules derived at
+//! a LR ~10x below optimal — the paper's implicit-bias finding), AdaLayer,
+//! AdaLayer+LN+TL, and Adam-mini v1/v2. SlimAdam should trace Adam's
+//! curve while the others destabilize at large LR.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{run_config, run_grid, TrainConfig};
+use crate::metrics::{results_dir, CsvWriter};
+use crate::rules::RuleSet;
+
+use super::{probe, steps_or, workers_or_default, write_summary_md};
+
+struct Regime {
+    id: &'static str,
+    model: &'static str,
+    base: fn(&str, &str, f64, usize) -> TrainConfig,
+    lrs: &'static [f64],
+    /// LR at which SlimAdam rules are derived (≈ optimal / 10)
+    rule_lr: f64,
+    finetune: bool,
+}
+
+const REGIMES: &[Regime] = &[
+    Regime {
+        id: "gpt",
+        model: "gpt_nano",
+        base: TrainConfig::lm,
+        lrs: &[1e-4, 3e-4, 1e-3, 3e-3, 1e-2],
+        rule_lr: 3e-4,
+        finetune: false,
+    },
+    Regime {
+        id: "resnet",
+        model: "resnet_mini_c10",
+        base: TrainConfig::vision,
+        lrs: &[1e-4, 3e-4, 1e-3, 3e-3, 1e-2],
+        rule_lr: 3e-4,
+        finetune: false,
+    },
+    Regime {
+        id: "vit",
+        model: "vit_mini_c10",
+        base: TrainConfig::vision,
+        lrs: &[1e-4, 3e-4, 1e-3, 3e-3],
+        rule_lr: 3e-4,
+        finetune: false,
+    },
+    Regime {
+        id: "finetune",
+        model: "llama_tiny",
+        base: TrainConfig::finetune,
+        lrs: &[1e-5, 3e-5, 1e-4, 3e-4],
+        rule_lr: 1e-5,
+        finetune: true,
+    },
+];
+
+const CUTOFFS: &[f64] = &[0.6, 0.8, 1.0, 1.5, 2.0];
+
+const BOTTOM_OPTS: &[&str] = &[
+    "adam",
+    "slimadam", // replaced by derived rules below
+    "adalayer",
+    "adalayer_ln_tl",
+    "adam_mini_v1",
+    "adam_mini_v2",
+];
+
+pub fn run(args: &Args) -> Result<()> {
+    let steps = steps_or(args, 100);
+    let dir = results_dir("fig10")?;
+    let only: Option<String> = args.get("regime").map(|s| s.to_string());
+    let all = args.flag("all");
+
+    let mut top = CsvWriter::create(
+        dir.join("savings_grid.csv"),
+        &["regime", "lr", "cutoff", "fraction_saved", "diverged"],
+    )?;
+    let mut md = String::from("# Fig. 10 — SNR-predicted savings & SlimAdam performance\n\n");
+
+    for regime in REGIMES {
+        if let Some(o) = &only {
+            if o != regime.id {
+                continue;
+            }
+        }
+        if regime.finetune && !all && only.is_none() {
+            // fine-tuning regime needs a pre-trained checkpoint; included
+            // with --all or --regime finetune
+            continue;
+        }
+        println!("== fig10 regime {} ({}) ==", regime.id, regime.model);
+        let man = super::manifest(regime.model)?;
+        let warm = if regime.finetune {
+            Some(Arc::new(super::fig04_finetune_snr::pretrained_params(
+                regime.model,
+                200,
+                false,
+            )?))
+        } else {
+            None
+        };
+
+        // ---- top panel: probe at every LR, derive at every cutoff ----
+        let mut rules_at_rule_lr: Option<RuleSet> = None;
+        md.push_str(&format!(
+            "## {} — fraction of second moments saved\n\n| lr \\ cutoff |",
+            regime.id
+        ));
+        for c in CUTOFFS {
+            md.push_str(&format!(" {c} |"));
+        }
+        md.push_str("\n|---|");
+        for _ in CUTOFFS {
+            md.push_str("---|");
+        }
+        md.push('\n');
+
+        for &lr in regime.lrs {
+            let mut cfg = (regime.base)(regime.model, "adam", lr, steps);
+            cfg.probe = Some(probe());
+            cfg.warm_start = warm.clone();
+            let s = run_config(&cfg)?;
+            let snr = s.snr.unwrap();
+            md.push_str(&format!("| {lr:.0e} |"));
+            for &cutoff in CUTOFFS {
+                let rs = RuleSet::derive(&snr, cutoff, format!("{}@{lr:e}", regime.id), Some(lr));
+                let saving = if s.result.diverged {
+                    f64::NAN
+                } else {
+                    rs.saving(&man)
+                };
+                top.row(&[
+                    regime.id.into(),
+                    format!("{lr:e}"),
+                    cutoff.to_string(),
+                    format!("{saving:.4}"),
+                    s.result.diverged.to_string(),
+                ])?;
+                md.push_str(&format!(
+                    " {} |",
+                    if saving.is_finite() {
+                        format!("{:.0}%", 100.0 * saving)
+                    } else {
+                        "div".into()
+                    }
+                ));
+                if (lr - regime.rule_lr).abs() < 1e-12 && (cutoff - 1.0).abs() < 1e-9 {
+                    rules_at_rule_lr = Some(rs);
+                }
+            }
+            md.push('\n');
+        }
+        md.push('\n');
+
+        // ---- bottom panel: optimizer comparison across LRs ----
+        let rules = rules_at_rule_lr
+            .unwrap_or_else(|| RuleSet::table3_default(&man));
+        rules.save(dir.join(format!("{}.rules.json", regime.id)))?;
+        println!(
+            "  SlimAdam rules from lr {:.0e}: {} compressed tensors, {:.1}% saved",
+            regime.rule_lr,
+            rules.rules.len(),
+            100.0 * rules.saving(&man)
+        );
+
+        let mut configs = Vec::new();
+        for opt in BOTTOM_OPTS {
+            for &lr in regime.lrs {
+                let mut cfg = (regime.base)(regime.model, opt, lr, steps);
+                cfg.warm_start = warm.clone();
+                if *opt == "slimadam" {
+                    cfg.ruleset = Some(rules.clone());
+                }
+                configs.push(cfg);
+            }
+        }
+        let workers = workers_or_default(args, configs.len());
+        let sums = run_grid(&configs, workers)?;
+
+        let mut bot = CsvWriter::create(
+            dir.join(format!("{}.performance.csv", regime.id)),
+            &["optimizer", "lr", "eval_loss", "train_loss", "diverged", "v_saving"],
+        )?;
+        md.push_str(&format!(
+            "## {} — loss vs LR (rules @ {:.0e})\n\n| optimizer |",
+            regime.id, regime.rule_lr
+        ));
+        for &lr in regime.lrs {
+            md.push_str(&format!(" {lr:.0e} |"));
+        }
+        md.push_str(" saved |\n|---|");
+        for _ in regime.lrs {
+            md.push_str("---|");
+        }
+        md.push_str("---|\n");
+        for (oi, opt) in BOTTOM_OPTS.iter().enumerate() {
+            md.push_str(&format!("| {opt} |"));
+            let mut saving = f64::NAN;
+            for (li, &lr) in regime.lrs.iter().enumerate() {
+                let s = &sums[oi * regime.lrs.len() + li];
+                let metric = crate::sweep::LrSweep::metric(s);
+                bot.row(&[
+                    opt.to_string(),
+                    format!("{lr:e}"),
+                    if s.result.eval_loss.is_finite() {
+                        format!("{:.5}", s.result.eval_loss)
+                    } else {
+                        "inf".into()
+                    },
+                    format!("{:.5}", s.result.final_train_loss),
+                    s.result.diverged.to_string(),
+                    s.memory
+                        .as_ref()
+                        .map(|m| format!("{:.4}", m.v_saving))
+                        .unwrap_or_default(),
+                ])?;
+                md.push_str(&format!(
+                    " {} |",
+                    if metric.is_finite() {
+                        format!("{metric:.3}")
+                    } else {
+                        "div".into()
+                    }
+                ));
+                if let Some(m) = &s.memory {
+                    saving = m.v_saving;
+                }
+            }
+            md.push_str(&format!(" {:.0}% |\n", 100.0 * saving));
+        }
+        md.push('\n');
+    }
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

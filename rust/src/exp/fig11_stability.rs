@@ -1,0 +1,116 @@
+//! Figure 11: training stability at small vs large learning rates.
+//! Paper result: at small LR every low-memory Adam variant tracks Adam;
+//! at Adam's optimal (large) LR, SlimAdam stays glued to Adam's
+//! trajectory while AdaLayer / Adam-mini destabilize — compressing the
+//! *correct* dimensions preserves the preconditioner's local stability
+//! threshold.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{run_grid, TrainConfig};
+use crate::metrics::{ascii_chart, results_dir, JsonlWriter};
+
+use super::{steps_or, workers_or_default, write_summary_md};
+
+const OPTS: &[&str] = &["adam", "slimadam", "adalayer", "adam_mini_v2"];
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_mini").to_string();
+    let steps = steps_or(args, 150);
+    let small_lr = args.f64_or("small-lr", 3e-4)?;
+    let large_lr = args.f64_or("large-lr", 3e-3)?;
+    let dir = results_dir("fig11")?;
+
+    let mut configs = Vec::new();
+    for &lr in &[small_lr, large_lr] {
+        for opt in OPTS {
+            let mut cfg = TrainConfig::lm(&model, opt, lr, steps);
+            cfg.eval_batches = 0;
+            configs.push(cfg);
+        }
+    }
+    println!(
+        "fig11: {model} trajectories at lr {small_lr:.0e} and {large_lr:.0e} ({} runs)",
+        configs.len()
+    );
+    let workers = workers_or_default(args, configs.len());
+    let sums = run_grid(&configs, workers)?;
+
+    let mut w = JsonlWriter::create(dir.join("trajectories.jsonl"))?;
+    for s in &sums {
+        for &(step, loss) in &s.result.losses {
+            let mut v = crate::json::Value::obj();
+            v.set("optimizer", s.optimizer.clone())
+                .set("lr", s.lr)
+                .set("step", step)
+                .set("loss", loss as f64);
+            w.write(&v)?;
+        }
+    }
+
+    let mut md = String::from("# Fig. 11 — stability at small vs large LR\n\n");
+    for (li, (&lr, label)) in [(&small_lr, "small"), (&large_lr, "large")]
+        .iter()
+        .enumerate()
+    {
+        // moving average of 10 like the paper
+        let series: Vec<(String, Vec<(f64, f64)>)> = OPTS
+            .iter()
+            .enumerate()
+            .map(|(oi, name)| {
+                let s = &sums[li * OPTS.len() + oi];
+                let pts: Vec<(f64, f64)> = moving_avg(&s.result.losses, 10);
+                (name.to_string(), pts)
+            })
+            .collect();
+        let refs: Vec<(&str, &[(f64, f64)])> = series
+            .iter()
+            .map(|(n, p)| (n.as_str(), p.as_slice()))
+            .collect();
+        let chart = ascii_chart(
+            &format!("Fig. 11 ({label} lr = {lr:.0e}) — loss vs step"),
+            &refs,
+            64,
+            14,
+            false,
+            false,
+        );
+        println!("{chart}");
+        md.push_str(&format!("## {label} LR = {lr:.0e}\n\n| optimizer | final loss | max loss spike | diverged |\n|---|---|---|---|\n"));
+        let adam_final = sums[li * OPTS.len()].result.final_train_loss;
+        for (oi, name) in OPTS.iter().enumerate() {
+            let s = &sums[li * OPTS.len() + oi];
+            let max_spike = s
+                .result
+                .losses
+                .iter()
+                .skip(steps / 4)
+                .map(|&(_, l)| l)
+                .fold(f32::MIN, f32::max);
+            md.push_str(&format!(
+                "| {name} | {:.4} (Δadam {:+.4}) | {max_spike:.3} | {} |\n",
+                s.result.final_train_loss,
+                s.result.final_train_loss - adam_final,
+                s.result.diverged
+            ));
+        }
+        md.push_str(&format!("\n```\n{chart}```\n\n"));
+    }
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}
+
+fn moving_avg(losses: &[(usize, f32)], window: usize) -> Vec<(f64, f64)> {
+    losses
+        .iter()
+        .enumerate()
+        .map(|(i, &(step, _))| {
+            let lo = i.saturating_sub(window - 1);
+            let avg = losses[lo..=i].iter().map(|&(_, l)| l as f64).sum::<f64>()
+                / (i - lo + 1) as f64;
+            (step as f64, avg)
+        })
+        .collect()
+}

@@ -1,0 +1,66 @@
+//! Figure 12 (App. A): baseline hyperparameter ablations — SM3 beta in
+//! {0, 0.95}, Lion, Adafactor v1 vs v2 — against Adam and SlimAdam on the
+//! GPT pre-training task. Paper: SM3 beta=0.95 > beta=0; both Adafactor
+//! variants lag Adam significantly.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::TrainConfig;
+use crate::metrics::results_dir;
+use crate::sweep::{log_grid, LrSweep};
+
+use super::{steps_or, workers_or_default, write_summary_md};
+
+const OPTS: &[&str] = &[
+    "adam",
+    "slimadam",
+    "sm3",
+    "sm3_b0",
+    "lion",
+    "adafactor",
+    "adafactor_v2",
+];
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let steps = steps_or(args, 100);
+    let lrs = args.f64_list("lrs", &log_grid(1e-4, 3e-2, 6))?;
+    let dir = results_dir("fig12")?;
+
+    let base = TrainConfig::lm(&model, "adam", 1e-3, steps);
+    let workers = workers_or_default(args, OPTS.len() * lrs.len());
+    println!("fig12: baseline ablations on {model}");
+    let sweep = LrSweep::run(&base, OPTS, &lrs, workers)?;
+    sweep.write_csv(dir.join("rows.csv"))?;
+
+    let chart = sweep.chart("Fig. 12 — baseline ablations (loss vs LR)");
+    println!("{chart}");
+
+    let mut md = String::from(
+        "# Fig. 12 — baseline hyperparameter ablations\n\n\
+         | optimizer | best lr | best loss |\n|---|---|---|\n",
+    );
+    for (i, name) in sweep.optimizers.iter().enumerate() {
+        let (lr, loss) = sweep.best(i);
+        md.push_str(&format!("| {name} | {lr:.1e} | {loss:.4} |\n"));
+    }
+    let best = |name: &str| {
+        sweep
+            .optimizers
+            .iter()
+            .position(|o| o == name)
+            .map(|i| sweep.best(i).1)
+            .unwrap_or(f64::NAN)
+    };
+    md.push_str(&format!(
+        "\n- SM3 beta=0.95 better than beta=0: {} (paper: yes)\n\
+         - Adafactor variants worse than Adam: {} (paper: yes)\n",
+        best("sm3") < best("sm3_b0"),
+        best("adafactor").min(best("adafactor_v2")) > best("adam")
+    ));
+    md.push_str(&format!("\n```\n{chart}```\n"));
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Figures 27-28 (App. F): fine-tuning loss and downstream performance.
+//! Fine-tune the pre-trained tiny-Llama with Adam vs SlimAdam vs AdaLayer;
+//! report training-loss trajectories and held-out eval loss on the shifted
+//! distribution (the downstream-task proxy for HellaSwag/TruthfulQA —
+//! DESIGN.md §3).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{run_grid, TrainConfig};
+use crate::metrics::{ascii_chart, results_dir, JsonlWriter};
+
+use super::{steps_or, workers_or_default, write_summary_md};
+
+const OPTS: &[&str] = &["adam", "slimadam", "adalayer", "adam_mini_v2"];
+
+pub fn run(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "llama_tiny").to_string();
+    let steps = steps_or(args, 150);
+    let lr = args.f64_or("lr", 1e-4)?;
+    let dir = results_dir("fig27")?;
+
+    let warm = Arc::new(super::fig04_finetune_snr::pretrained_params(
+        &model, 200, false,
+    )?);
+
+    let mut configs = Vec::new();
+    for opt in OPTS {
+        let mut cfg = TrainConfig::finetune(&model, opt, lr, steps);
+        cfg.warm_start = Some(warm.clone());
+        cfg.eval_batches = 16;
+        configs.push(cfg);
+    }
+    println!("fig27: fine-tuning {model} with {} optimizers", OPTS.len());
+    let workers = workers_or_default(args, configs.len());
+    let sums = run_grid(&configs, workers)?;
+
+    let mut w = JsonlWriter::create(dir.join("trajectories.jsonl"))?;
+    for s in &sums {
+        for &(step, loss) in &s.result.losses {
+            let mut v = crate::json::Value::obj();
+            v.set("optimizer", s.optimizer.clone())
+                .set("step", step)
+                .set("loss", loss as f64);
+            w.write(&v)?;
+        }
+    }
+
+    let series: Vec<(String, Vec<(f64, f64)>)> = sums
+        .iter()
+        .map(|s| {
+            (
+                s.optimizer.clone(),
+                s.result
+                    .losses
+                    .iter()
+                    .map(|&(t, l)| (t as f64, l as f64))
+                    .collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<(&str, &[(f64, f64)])> = series
+        .iter()
+        .map(|(n, p)| (n.as_str(), p.as_slice()))
+        .collect();
+    let chart = ascii_chart("Fig. 27 — fine-tuning loss", &refs, 64, 14, false, false);
+    println!("{chart}");
+
+    let adam_eval = sums[0].result.eval_loss;
+    let mut md = String::from(
+        "# Fig. 27/28 — fine-tuning loss + downstream proxy (held-out eval)\n\n\
+         | optimizer | final train loss | eval loss | Δ eval vs Adam | v saved |\n\
+         |---|---|---|---|---|\n",
+    );
+    for s in &sums {
+        md.push_str(&format!(
+            "| {} | {:.4} | {:.4} | {:+.4} | {} |\n",
+            s.optimizer,
+            s.result.final_train_loss,
+            s.result.eval_loss,
+            s.result.eval_loss - adam_eval,
+            s.memory
+                .as_ref()
+                .map(|m| format!("{:.0}%", 100.0 * m.v_saving))
+                .unwrap_or_default()
+        ));
+    }
+    md.push_str(&format!("\n```\n{chart}```\n"));
+    println!("{md}");
+    write_summary_md(&dir, &md)?;
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Paper reproduction experiments — one module per figure/table of
+//! "When Can You Get Away with Low Memory Adam?". See DESIGN.md §4 for
+//! the experiment index (paper artifact → module → command).
+//!
+//! Every experiment writes machine-readable rows under `results/<id>/`
+//! and prints the paper-comparable series (ASCII charts for quick visual
+//! comparison with the paper's plots). Scales are reduced per DESIGN.md
+//! §3; the *shape* of each result (who wins, preferred compression
+//! dimensions, crossovers) is the reproduction target, not absolute
+//! values.
+
+pub mod fig01_lr_sensitivity;
+pub mod fig02_snr_trajectories;
+pub mod fig03_snr_depth;
+pub mod fig04_finetune_snr;
+pub mod fig05_resnet_snr;
+pub mod fig06_vit_snr;
+pub mod fig07_vocab_sweep;
+pub mod fig08_lr_vs_snr;
+pub mod fig09_init;
+pub mod fig10_savings;
+pub mod fig11_stability;
+pub mod fig12_baseline_ablations;
+pub mod fig27_ft_loss;
+pub mod fig30_mean_rules;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::coordinator::{run_config, RunSummary, TrainConfig};
+use crate::json::Value;
+use crate::metrics::{results_dir, JsonlWriter};
+use crate::runtime::Manifest;
+use crate::snr::{ProbeSchedule, SnrSummary};
+
+/// Dispatch an experiment id to its module.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => fig01_lr_sensitivity::run(args),
+        "fig2" => fig02_snr_trajectories::run(args),
+        "fig3" => fig03_snr_depth::run(args),
+        "fig4" | "fig18" => fig04_finetune_snr::run(args),
+        "fig5" | "fig19" | "fig20" => fig05_resnet_snr::run(args),
+        "fig6" | "fig21" | "fig22" | "fig23" => fig06_vit_snr::run(args),
+        "fig7" | "fig29" => fig07_vocab_sweep::run(args),
+        "fig8" | "fig24" => fig08_lr_vs_snr::run(args),
+        "fig9" | "fig25" => fig09_init::run(args),
+        "fig10" | "fig26" => fig10_savings::run(args),
+        "fig11" => fig11_stability::run(args),
+        "fig12" => fig12_baseline_ablations::run(args),
+        "fig27" | "fig28" => fig27_ft_loss::run(args),
+        "fig30" => fig30_mean_rules::run(args),
+        "table1" => tables::table1(args),
+        "table2" => tables::table2(args),
+        "table3" => tables::table3(args),
+        "appc1" => {
+            fig02_snr_trajectories::run(args)?;
+            fig03_snr_depth::run(args)
+        }
+        "appc3" => {
+            fig05_resnet_snr::run(args)?;
+            fig06_vit_snr::run(args)
+        }
+        "all" => run_all(args),
+        other => bail!(
+            "unknown experiment {other:?} — see `slimadam exp --help` / DESIGN.md §4"
+        ),
+    }
+}
+
+/// Run the full reproduction suite in dependency-friendly order.
+pub fn run_all(args: &Args) -> Result<()> {
+    for id in [
+        "fig2", "fig3", "fig5", "fig6", "fig4", "fig7", "fig8", "fig9",
+        "fig1", "fig10", "fig11", "fig12", "fig27", "fig30", "table1",
+        "table2", "table3",
+    ] {
+        println!("\n================ exp {id} ================");
+        run(id, args)?;
+    }
+    Ok(())
+}
+
+pub const IDS: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+    "fig10", "fig11", "fig12", "fig27", "fig30", "table1", "table2",
+    "table3", "appc1", "appc3", "all",
+];
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// Default probe cadence for experiment runs.
+pub fn probe() -> ProbeSchedule {
+    ProbeSchedule::default()
+}
+
+/// Steps default honoring `--steps` (quick CI runs use small values).
+pub fn steps_or(args: &Args, default: usize) -> usize {
+    args.usize_or("steps", default).unwrap_or(default)
+}
+
+pub fn workers_or_default(args: &Args, jobs: usize) -> usize {
+    args.usize_or("workers", 0)
+        .ok()
+        .filter(|&w| w > 0)
+        .unwrap_or_else(|| crate::pool::default_workers(jobs))
+}
+
+/// Run one probe-enabled config and return (summary, snr).
+pub fn probed_run(mut cfg: TrainConfig) -> Result<(RunSummary, SnrSummary)> {
+    cfg.probe = Some(probe());
+    let s = run_config(&cfg)?;
+    let snr = s
+        .snr
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("probe produced no SNR"))?;
+    Ok((s, snr))
+}
+
+/// Write a SNR summary as JSONL rows (one per parameter).
+pub fn write_snr(dir: &std::path::Path, name: &str, snr: &SnrSummary) -> Result<()> {
+    let mut w = JsonlWriter::create(dir.join(name))?;
+    if let Value::Arr(rows) = snr.to_json() {
+        for r in &rows {
+            w.write(r)?;
+        }
+    }
+    Ok(())
+}
+
+/// Pretty per-layer-type SNR table (depth-averaged), printed and returned.
+pub fn layer_type_table(snr: &SnrSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:14} {:>10} {:>10} {:>10}  preferred\n",
+        "layer_type", "K=fan_out", "K=fan_in", "K=both"
+    ));
+    for (lt, avg) in snr.by_layer_type() {
+        let (k, best) = avg.best();
+        out.push_str(&format!(
+            "{:14} {:>10.3} {:>10.3} {:>10.3}  {} ({})\n",
+            lt,
+            avg.fan_out,
+            avg.fan_in,
+            avg.both,
+            k.as_str(),
+            if best >= 1.0 { "compressible" } else { "averse" },
+        ));
+    }
+    out
+}
+
+/// Load a model manifest from the artifacts dir (for rule accounting).
+pub fn manifest(model: &str) -> Result<Manifest> {
+    Manifest::load(format!("artifacts/{model}.grad.manifest.json"))
+}
+
+/// Save summaries to `results/<id>/summaries.jsonl` + return the dir.
+pub fn save_summaries(id: &str, sums: &[&RunSummary]) -> Result<std::path::PathBuf> {
+    let dir = results_dir(id)?;
+    let mut w = JsonlWriter::create(dir.join("summaries.jsonl"))?;
+    for s in sums {
+        w.write(&s.to_json())?;
+    }
+    Ok(dir)
+}
+
+/// Write a markdown summary file for EXPERIMENTS.md consumption.
+pub fn write_summary_md(dir: &std::path::Path, text: &str) -> Result<()> {
+    std::fs::write(dir.join("summary.md"), text)?;
+    Ok(())
+}

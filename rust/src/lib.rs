@@ -1,0 +1,48 @@
+//! # slimadam — reproduction of "When Can You Get Away with Low Memory Adam?"
+//!
+//! A three-layer Rust + JAX + Pallas system: Python (JAX + Pallas) authors
+//! and AOT-lowers the model compute graphs to HLO text at build time; this
+//! crate is the Layer-3 coordinator that loads those artifacts through the
+//! PJRT C API (`xla` crate), owns the training loop, and implements the
+//! paper's contribution — the SNR analysis of Adam's second moments
+//! (Eq. 3/4), the generalized low-memory Adam family (Eq. 2), the
+//! SNR-guided **SlimAdam** optimizer, and every baseline the paper compares
+//! against (AdaLayer, Adam-mini v1/v2, SM3, Lion, Adafactor v1/v2, SGD-M).
+//!
+//! The crate is fully self-contained at run time: Python never executes on
+//! the request path, and the only external crates are `xla` and `anyhow`.
+//! Everything else — JSON, RNG, tensors, CLI, thread pool, property-test
+//! and bench harnesses — is implemented in-repo (see DESIGN.md §2).
+//!
+//! Module map:
+//!
+//! * Substrates: [`json`], [`rng`], [`tensor`], [`cli`], [`pool`],
+//!   [`proptest`], [`benchkit`], [`metrics`]
+//! * Runtime: [`runtime`] (PJRT client, manifests, engines)
+//! * The paper's system: [`optim`] (optimizer family), [`snr`] (Eq. 3/4),
+//!   [`rules`] (SNR → compression rules)
+//! * Workloads: [`data`] (corpora, images, BPE), [`train`] (loop driver),
+//!   [`coordinator`] (job orchestration), [`sweep`] (grids)
+//! * Reproduction: [`exp`] (one module per paper figure/table)
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod json;
+pub mod metrics;
+pub mod npy;
+pub mod optim;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod rules;
+pub mod runtime;
+pub mod snr;
+pub mod sweep;
+pub mod tensor;
+pub mod train;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

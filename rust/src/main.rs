@@ -1,0 +1,268 @@
+//! `slimadam` — launcher for the SlimAdam reproduction.
+//!
+//! The Layer-3 coordinator entry point. All compute graphs were AOT-lowered
+//! by `make artifacts`; this binary is self-contained (Python is never on
+//! the request path).
+//!
+//! Subcommands:
+//!   exp <id>        reproduce a paper figure/table (fig1..fig30, table1..3, all)
+//!   train           run one training config
+//!   snr             probe a run's second-moment SNR and print the layer table
+//!   rules           derive + save SlimAdam compression rules from an SNR probe
+//!   memory          optimizer-state memory accounting for a model
+//!   list            list artifacts, optimizers and experiment ids
+
+use anyhow::{bail, Result};
+
+use slimadam::cli::{render_help, subcommand, Args, OptSpec};
+use slimadam::coordinator::{run_config, DataSpec, TrainConfig};
+use slimadam::optim::presets;
+use slimadam::rules::RuleSet;
+use slimadam::snr::ProbeSchedule;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const FLAGS: &[&str] = &["help", "all", "repretrain", "fused", "corpus", "default-init"];
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let Ok((cmd, rest)) = subcommand(argv) else {
+        print_global_help();
+        return Ok(());
+    };
+    let args = Args::parse(rest, FLAGS)?;
+    match cmd.as_str() {
+        "exp" => {
+            if args.positional.is_empty() || args.flag("help") {
+                println!(
+                    "{}",
+                    render_help(
+                        "slimadam",
+                        "exp <id>",
+                        "reproduce a paper figure/table",
+                        &exp_opts()
+                    )
+                );
+                println!("experiment ids: {}", slimadam::exp::IDS.join(", "));
+                return Ok(());
+            }
+            let id = args.positional[0].clone();
+            slimadam::exp::run(&id, &args)
+        }
+        "train" => cmd_train(&args),
+        "snr" => cmd_snr(&args),
+        "rules" => cmd_rules(&args),
+        "memory" => cmd_memory(&args),
+        "report" => cmd_report(&args),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print_global_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `slimadam help`"),
+    }
+}
+
+fn print_global_help() {
+    println!(
+        "slimadam — reproduction of \"When Can You Get Away with Low Memory Adam?\"\n\n\
+         Usage: slimadam <command> [options]\n\n\
+         Commands:\n\
+         \x20 exp <id>   reproduce a paper figure/table (see `slimadam exp --help`)\n\
+         \x20 train      run one training config\n\
+         \x20 snr        probe second-moment SNR along an Adam run\n\
+         \x20 rules      derive SlimAdam compression rules from an SNR probe\n\
+         \x20 memory     optimizer-state memory accounting\n\
+         \x20 list       list artifacts, optimizers and experiments\n\n\
+         Run `make artifacts` first to AOT-lower the HLO artifacts."
+    );
+}
+
+fn exp_opts() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "model", help: "artifact model name", default: Some("per-experiment"), is_flag: false },
+        OptSpec { name: "steps", help: "training steps per run", default: Some("per-experiment"), is_flag: false },
+        OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("per-experiment"), is_flag: false },
+        OptSpec { name: "workers", help: "parallel runs", default: Some("cores"), is_flag: false },
+        OptSpec { name: "all", help: "include expensive extras (fine-tune regime)", default: None, is_flag: true },
+    ]
+}
+
+fn data_spec(args: &Args) -> DataSpec {
+    if args.flag("corpus") {
+        DataSpec::Corpus
+    } else {
+        DataSpec::Markov {
+            alpha: 1.07,
+            coherence: 0.5,
+            seed: 1234,
+        }
+    }
+}
+
+fn base_config(args: &Args) -> Result<TrainConfig> {
+    let model = args.str_or("model", "gpt_nano").to_string();
+    let optimizer = args.str_or("optimizer", "adam").to_string();
+    let lr = args.f64_or("lr", 1e-3)?;
+    let steps = args.usize_or("steps", 100)?;
+    let vision = model.starts_with("vit") || model.starts_with("resnet");
+    let mut cfg = if vision {
+        TrainConfig::vision(&model, &optimizer, lr, steps)
+    } else {
+        TrainConfig::lm(&model, &optimizer, lr, steps)
+    };
+    if !vision {
+        cfg.data = data_spec(args);
+    }
+    cfg.seed = args.u64_or("seed", 0)?;
+    cfg.accum = args.usize_or("accum", 1)?;
+    if args.flag("default-init") {
+        cfg.init = "default".into();
+    }
+    if args.flag("fused") {
+        cfg.engine = slimadam::coordinator::EngineKind::Fused(
+            args.str_or("ruleset", "adam").to_string(),
+        );
+    }
+    if let Some(path) = args.get("rules") {
+        cfg.ruleset = Some(RuleSet::load(path)?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("slimadam", "train", "run one training config", &[
+                OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano"), is_flag: false },
+                OptSpec { name: "optimizer", help: "optimizer preset", default: Some("adam"), is_flag: false },
+                OptSpec { name: "lr", help: "peak learning rate", default: Some("1e-3"), is_flag: false },
+                OptSpec { name: "steps", help: "training steps", default: Some("100"), is_flag: false },
+                OptSpec { name: "rules", help: "SlimAdam rules JSON path", default: None, is_flag: false },
+                OptSpec { name: "fused", help: "use the fused train_step artifact", default: None, is_flag: true },
+                OptSpec { name: "ruleset", help: "fused artifact ruleset", default: Some("adam"), is_flag: false },
+                OptSpec { name: "corpus", help: "train on the repo-source corpus", default: None, is_flag: true },
+                OptSpec { name: "default-init", help: "PyTorch-default init instead of Mitchell", default: None, is_flag: true },
+            ])
+        );
+        return Ok(());
+    }
+    let cfg = base_config(args)?;
+    println!("training {}", cfg.label());
+    let s = run_config(&cfg)?;
+    println!(
+        "done: final train loss {:.4}, eval loss {:.4}, {:.2} steps/s{}",
+        s.result.final_train_loss,
+        s.result.eval_loss,
+        s.steps_per_s,
+        if s.result.diverged { " (DIVERGED)" } else { "" }
+    );
+    if let Some(m) = &s.memory {
+        println!("{}", m.row());
+    }
+    Ok(())
+}
+
+fn cmd_snr(args: &Args) -> Result<()> {
+    let mut cfg = base_config(args)?;
+    cfg.probe = Some(ProbeSchedule::default());
+    println!("probing SNR along {}", cfg.label());
+    let s = run_config(&cfg)?;
+    let snr = s.snr.expect("probe enabled");
+    println!("\n{}", slimadam::exp::layer_type_table(&snr));
+    Ok(())
+}
+
+fn cmd_rules(args: &Args) -> Result<()> {
+    let mut cfg = base_config(args)?;
+    cfg.probe = Some(ProbeSchedule::default());
+    let cutoff = args.f64_or("cutoff", 1.0)?;
+    let out = args.str_or("out", "results/rules.json").to_string();
+    let depth_mean = args.get("variant").map(|v| v == "mean").unwrap_or(false);
+    println!("deriving rules from {} (cutoff {cutoff})", cfg.label());
+    let s = run_config(&cfg)?;
+    let snr = s.snr.expect("probe enabled");
+    let rules = if depth_mean {
+        RuleSet::derive_depth_averaged(&snr, cutoff, "cli_mean", Some(cfg.lr))
+    } else {
+        RuleSet::derive(&snr, cutoff, "cli", Some(cfg.lr))
+    };
+    let man = slimadam::exp::manifest(&cfg.model)?;
+    rules.save(&out)?;
+    println!(
+        "saved {} rules to {out} — {:.1}% of second moments saved",
+        rules.rules.len(),
+        100.0 * rules.saving(&man)
+    );
+    println!("\n{}", slimadam::exp::layer_type_table(&snr));
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gpt_nano");
+    let man = slimadam::exp::manifest(model)?;
+    let total = man.total_param_elems();
+    println!(
+        "model {model}: {} tensors, {total} parameters\n",
+        man.n_params()
+    );
+    for name in presets::ALL {
+        let opt = presets::build(name, &man, Default::default())?;
+        println!("{}", slimadam::optim::memory::report(opt.as_ref(), total).row());
+    }
+    Ok(())
+}
+
+/// Assemble every experiment's `summary.md` into one report (the measured
+/// half of EXPERIMENTS.md).
+fn cmd_report(args: &Args) -> Result<()> {
+    let out_path = args.str_or("out", "results/REPORT.md").to_string();
+    let mut out = String::from("# SlimAdam reproduction — collected experiment summaries\n");
+    let mut found = 0;
+    let order = [
+        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+        "fig9", "fig10", "fig11", "fig12", "fig27", "fig30", "table1",
+        "table2", "table3", "e2e",
+    ];
+    for id in order {
+        let path = std::path::Path::new("results").join(id).join("summary.md");
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            out.push_str(&format!("\n\n---\n\n<!-- results/{id}/summary.md -->\n\n"));
+            out.push_str(&text);
+            found += 1;
+        }
+    }
+    anyhow::ensure!(found > 0, "no results/<id>/summary.md files found — run `slimadam exp all`");
+    std::fs::write(&out_path, &out)?;
+    println!("wrote {found} experiment summaries to {out_path}");
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments: {}", slimadam::exp::IDS.join(", "));
+    println!("optimizers:  {}", presets::ALL.join(", "));
+    print!("artifacts:   ");
+    let dir = std::path::Path::new("artifacts");
+    if dir.exists() {
+        let mut names: Vec<String> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                e.file_name()
+                    .to_string_lossy()
+                    .strip_suffix(".hlo.txt")
+                    .map(|s| s.to_string())
+            })
+            .collect();
+        names.sort();
+        println!("{}", names.join(", "));
+    } else {
+        println!("(none — run `make artifacts`)");
+    }
+    Ok(())
+}

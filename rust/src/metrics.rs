@@ -1,0 +1,231 @@
+//! Metric sinks: JSONL / CSV writers plus terminal ASCII charts.
+//!
+//! Every experiment writes machine-readable rows under `results/<exp>/`
+//! and prints the paper-comparable series; the ASCII plots give a quick
+//! visual check of the U-shaped LR-sensitivity curves and SNR trajectories
+//! without any plotting dependency.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+
+/// Append-only JSONL writer.
+pub struct JsonlWriter {
+    file: fs::File,
+    pub path: PathBuf,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<JsonlWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let file = fs::File::create(&path)
+            .with_context(|| format!("creating {path:?}"))?;
+        Ok(JsonlWriter { file, path })
+    }
+
+    pub fn write(&mut self, v: &Value) -> Result<()> {
+        writeln!(self.file, "{}", v.dump())?;
+        Ok(())
+    }
+}
+
+/// CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: fs::File,
+    n_cols: usize,
+    pub path: PathBuf,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = fs::File::create(&path)
+            .with_context(|| format!("creating {path:?}"))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, n_cols: header.len(), path })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            cells.len() == self.n_cols,
+            "row has {} cells, header has {}",
+            cells.len(),
+            self.n_cols
+        );
+        let escaped: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.file, "{}", escaped.join(","))?;
+        Ok(())
+    }
+}
+
+/// Format helper for CSV rows.
+pub fn cells(items: &[&dyn std::fmt::Display]) -> Vec<String> {
+    items.iter().map(|x| x.to_string()).collect()
+}
+
+/// Render an ASCII line chart of (x, y) series. `log_x` / `log_y` put the
+/// corresponding axis in log scale (LR grids, SNR magnitudes).
+pub fn ascii_chart(
+    title: &str,
+    series: &[(&str, &[(f64, f64)])],
+    width: usize,
+    height: usize,
+    log_x: bool,
+    log_y: bool,
+) -> String {
+    let marks = ['o', 'x', '+', '*', '#', '@', '%', '&'];
+    let tx = |x: f64| if log_x { x.max(1e-300).log10() } else { x };
+    let ty = |y: f64| if log_y { y.max(1e-300).log10() } else { y };
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (_, pts) in series {
+        for &(x, y) in *pts {
+            if y.is_finite() && x.is_finite() {
+                xs.push(tx(x));
+                ys.push(ty(y));
+            }
+        }
+    }
+    if xs.is_empty() {
+        return format!("{title}: <no finite data>\n");
+    }
+    let (xmin, xmax) = min_max(&xs);
+    let (ymin, ymax) = min_max(&ys);
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for &(x, y) in *pts {
+            if !(y.is_finite() && x.is_finite()) {
+                continue;
+            }
+            let cx = (((tx(x) - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let cy = (((ty(y) - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy.min(height - 1)][cx.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = format!("{title}\n");
+    let ylab = |v: f64| if log_y { format!("1e{v:.1}") } else { format!("{v:.3}") };
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            ylab(ymax)
+        } else if r == height - 1 {
+            ylab(ymin)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{label:>9} |{}|\n", row.iter().collect::<String>()));
+    }
+    let xlab = |v: f64| if log_x { format!("1e{v:.1}") } else { format!("{v:.3}") };
+    out.push_str(&format!(
+        "{:>9}  {}{}\n",
+        "",
+        xlab(xmin),
+        format!("{:>w$}", xlab(xmax), w = width.saturating_sub(xlab(xmin).len()))
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+        .collect();
+    out.push_str(&format!("          {}\n", legend.join("   ")));
+    out
+}
+
+fn min_max(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Results directory helper: `results/<exp_id>/`.
+pub fn results_dir(exp_id: &str) -> Result<PathBuf> {
+    let dir = PathBuf::from("results").join(exp_id);
+    fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_writes_lines() {
+        let dir = std::env::temp_dir().join("slimadam_test_jsonl");
+        let path = dir.join("x.jsonl");
+        let mut w = JsonlWriter::create(&path).unwrap();
+        let mut v = Value::obj();
+        v.set("a", 1usize);
+        w.write(&v).unwrap();
+        w.write(&v).unwrap();
+        drop(w);
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_schema_enforced() {
+        let dir = std::env::temp_dir().join("slimadam_test_csv");
+        let path = dir.join("x.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        w.row(&["with,comma".into(), "q\"uote".into()]).unwrap();
+        drop(w);
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("\"with,comma\""));
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chart_renders() {
+        let pts: Vec<(f64, f64)> = (0..20).map(|i| (i as f64, (i * i) as f64)).collect();
+        let s = ascii_chart("parabola", &[("y=x^2", &pts)], 40, 10, false, false);
+        assert!(s.contains("parabola"));
+        assert!(s.contains('o'));
+        assert!(s.lines().count() >= 12);
+    }
+
+    #[test]
+    fn chart_log_axes() {
+        let pts: Vec<(f64, f64)> = vec![(1e-4, 10.0), (1e-3, 3.0), (1e-2, 5.0)];
+        let s = ascii_chart("ushape", &[("loss", &pts)], 30, 8, true, false);
+        assert!(s.contains("1e-4"));
+    }
+
+    #[test]
+    fn chart_handles_nan() {
+        let pts: Vec<(f64, f64)> = vec![(1.0, f64::NAN), (2.0, 1.0)];
+        let s = ascii_chart("nan", &[("x", &pts)], 20, 5, false, false);
+        assert!(s.contains('o'));
+    }
+}

@@ -1,0 +1,315 @@
+//! npy / npz substrate: reads the fixture archives written by numpy on the
+//! Python side and writes Rust checkpoints numpy can read back. Implements
+//! the npy v1.0 format (the only version numpy emits for plain dtypes) for
+//! little-endian f32/f64/i32/i64 arrays, C order.
+//!
+//! Written in-repo because the `xla` crate's npy writer rejects non-u8
+//! literals (its `copy_raw_to::<u8>` type-checks against the literal dtype).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+/// A loaded array (all numeric dtypes normalized to f32 or i32).
+#[derive(Debug, Clone, PartialEq)]
+pub enum NpyArray {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl NpyArray {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            NpyArray::F32 { shape, .. } => shape,
+            NpyArray::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<(&[usize], &[f32])> {
+        match self {
+            NpyArray::F32 { shape, data } => Ok((shape, data)),
+            _ => bail!("expected f32 array"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            NpyArray::I32 { shape, data } => Ok((shape, data)),
+            _ => bail!("expected i32 array"),
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// npy core
+// --------------------------------------------------------------------------
+
+fn write_npy_bytes(arr: &NpyArray) -> Vec<u8> {
+    let (descr, shape, payload): (&str, &[usize], Vec<u8>) = match arr {
+        NpyArray::F32 { shape, data } => (
+            "<f4",
+            shape,
+            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        NpyArray::I32 { shape, data } => (
+            "<i4",
+            shape,
+            data.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+    };
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    let unpadded = MAGIC.len() + 2 + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.extend(std::iter::repeat(' ').take(pad));
+    header.push('\n');
+
+    let mut out = Vec::with_capacity(unpadded + pad + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&[1, 0]);
+    out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn parse_npy_bytes(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let (major, _minor) = (bytes[6], bytes[7]);
+    let (hlen, hstart) = if major == 1 {
+        (
+            u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+            10usize,
+        )
+    } else {
+        (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12usize,
+        )
+    };
+    let header = std::str::from_utf8(&bytes[hstart..hstart + hlen])
+        .context("npy header not utf8")?;
+    let descr = dict_field(header, "descr")?;
+    let fortran = dict_field(header, "fortran_order")?;
+    if fortran.trim() != "False" {
+        bail!("fortran order unsupported");
+    }
+    let shape_src = dict_field(header, "shape")?;
+    let shape: Vec<usize> = shape_src
+        .trim()
+        .trim_start_matches('(')
+        .trim_end_matches(')')
+        .split(',')
+        .filter_map(|s| {
+            let s = s.trim();
+            if s.is_empty() {
+                None
+            } else {
+                Some(s.parse::<usize>())
+            }
+        })
+        .collect::<std::result::Result<_, _>>()
+        .context("parsing shape")?;
+    let n: usize = shape.iter().product();
+    let data = &bytes[hstart + hlen..];
+    let descr = descr.trim().trim_matches('\'').trim_matches('"');
+    Ok(match descr {
+        "<f4" => {
+            anyhow::ensure!(data.len() >= 4 * n, "truncated f4 payload");
+            NpyArray::F32 {
+                shape,
+                data: data[..4 * n]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            }
+        }
+        "<f8" => NpyArray::F32 {
+            shape,
+            data: data[..8 * n]
+                .chunks_exact(8)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                        as f32
+                })
+                .collect(),
+        },
+        "<i4" => NpyArray::I32 {
+            shape,
+            data: data[..4 * n]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        },
+        "<i8" => NpyArray::I32 {
+            shape,
+            data: data[..8 * n]
+                .chunks_exact(8)
+                .map(|c| {
+                    i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                        as i32
+                })
+                .collect(),
+        },
+        d => bail!("unsupported npy dtype {d:?}"),
+    })
+}
+
+/// Extract a field value substring from the python-dict-literal header.
+fn dict_field<'a>(header: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("'{key}':");
+    let start = header
+        .find(&pat)
+        .ok_or_else(|| anyhow!("npy header missing {key:?}"))?
+        + pat.len();
+    let rest = &header[start..];
+    // value ends at the next top-level comma or closing brace
+    let mut depth = 0usize;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth = depth.saturating_sub(1),
+            ',' | '}' if depth == 0 => return Ok(rest[..i].trim()),
+            _ => {}
+        }
+    }
+    Ok(rest.trim())
+}
+
+// --------------------------------------------------------------------------
+// npz (zip container)
+// --------------------------------------------------------------------------
+
+/// Write named arrays to an npz archive (stored, like `np.savez`).
+pub fn write_npz(path: impl AsRef<Path>, arrays: &[(&str, NpyArray)]) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut z = zip::ZipWriter::new(file);
+    let opts = zip::write::FileOptions::default()
+        .compression_method(zip::CompressionMethod::Stored);
+    for (name, arr) in arrays {
+        z.start_file(format!("{name}.npy"), opts)?;
+        z.write_all(&write_npy_bytes(arr))?;
+    }
+    z.finish()?;
+    Ok(())
+}
+
+/// Read all arrays from an npz archive.
+pub fn read_npz(path: impl AsRef<Path>) -> Result<Vec<(String, NpyArray)>> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut z = zip::ZipArchive::new(file)?;
+    let mut out = Vec::with_capacity(z.len());
+    for i in 0..z.len() {
+        let mut entry = z.by_index(i)?;
+        let name = entry
+            .name()
+            .trim_end_matches(".npy")
+            .to_string();
+        let mut bytes = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut bytes)?;
+        out.push((name, parse_npy_bytes(&bytes)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npy_roundtrip_f32() {
+        let arr = NpyArray::F32 {
+            shape: vec![2, 3],
+            data: vec![1.5, -2.0, 3.25, 0.0, 1e-9, 7.0],
+        };
+        let bytes = write_npy_bytes(&arr);
+        assert_eq!(parse_npy_bytes(&bytes).unwrap(), arr);
+    }
+
+    #[test]
+    fn npy_roundtrip_i32_1d() {
+        let arr = NpyArray::I32 {
+            shape: vec![4],
+            data: vec![1, -2, 3, i32::MAX],
+        };
+        let bytes = write_npy_bytes(&arr);
+        assert_eq!(parse_npy_bytes(&bytes).unwrap(), arr);
+    }
+
+    #[test]
+    fn npz_roundtrip_multiple() {
+        let dir = std::env::temp_dir().join("slimadam_npz_test");
+        let path = dir.join("x.npz");
+        let a = NpyArray::F32 {
+            shape: vec![2, 2],
+            data: vec![1., 2., 3., 4.],
+        };
+        let b = NpyArray::I32 {
+            shape: vec![3],
+            data: vec![7, 8, 9],
+        };
+        write_npz(&path, &[("alpha", a.clone()), ("beta", b.clone())]).unwrap();
+        let back = read_npz(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let map: std::collections::HashMap<_, _> = back.into_iter().collect();
+        assert_eq!(map["alpha"], a);
+        assert_eq!(map["beta"], b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reads_numpy_fixture_archives() {
+        // real archives produced by python/compile/aot.py (skip when absent)
+        let p = std::path::Path::new("artifacts/fixtures/linear2_v64.params.npz");
+        if !p.exists() {
+            return;
+        }
+        let arrays = read_npz(p).unwrap();
+        assert_eq!(arrays.len(), 2);
+        let map: std::collections::HashMap<_, _> = arrays.into_iter().collect();
+        let (shape, data) = map["tok_embd"].as_f32().unwrap();
+        assert_eq!(shape, &[64, 128]);
+        assert!(data.iter().all(|x| x.is_finite()));
+        let batches = read_npz("artifacts/fixtures/linear2_v64.batches.npz").unwrap();
+        assert!(!batches.is_empty());
+        let (_s, xs) = batches
+            .iter()
+            .find(|(n, _)| n == "x0")
+            .unwrap()
+            .1
+            .as_i32()
+            .unwrap();
+        assert!(xs.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn header_parser_handles_order_variants() {
+        let h = "{'shape': (3, 4), 'fortran_order': False, 'descr': '<f4', }";
+        assert_eq!(dict_field(h, "descr").unwrap(), "'<f4'");
+        assert_eq!(dict_field(h, "shape").unwrap(), "(3, 4)");
+        assert_eq!(dict_field(h, "fortran_order").unwrap(), "False");
+    }
+}

@@ -1,0 +1,275 @@
+//! Adafactor (Shazeer & Stern 2018): factored second moments. For a matrix
+//! the second moment is approximated from exponential moving averages of
+//! row sums `R` and column sums `C` of the squared gradients:
+//!
+//! ```text
+//! v_ij ≈ R_i * C_j / sum(R)
+//! ```
+//!
+//! with the time-dependent decay `beta2_t = 1 - t^{-0.8}` and RMS update
+//! clipping (threshold d = 1.0). Vectors keep full per-element moments.
+//!
+//! Two variants per the paper's App. A:
+//! * **v1** (PyTorch-style): no momentum on the update.
+//! * **v2** (fairseq-style): EMA of updates with beta1 = 0.9
+//!   (`relative_step=False`; the external LR schedule is used as-is).
+
+use crate::tensor::Tensor;
+
+use super::{Optimizer, ParamInfo};
+
+const EPS1: f32 = 1e-30; // inside g^2 (Adafactor's epsilon_1)
+const CLIP_D: f32 = 1.0;
+
+pub struct Adafactor {
+    metas: Vec<ParamInfo>,
+    use_momentum: bool, // v2
+    beta1: f32,
+    weight_decay: f32,
+    state: Vec<FactorState>,
+    m: Vec<Tensor>, // only allocated for v2
+}
+
+enum FactorState {
+    Factored { r: Vec<f32>, c: Vec<f32>, rows: usize, cols: usize },
+    Exact(Vec<f32>),
+}
+
+impl Adafactor {
+    pub fn new(metas: Vec<ParamInfo>, use_momentum: bool, weight_decay: f64) -> Adafactor {
+        let state = metas
+            .iter()
+            .map(|p| {
+                let (rows, cols) = p.matrix_dims();
+                if p.is_vector() {
+                    FactorState::Exact(vec![0.0; p.numel()])
+                } else {
+                    FactorState::Factored {
+                        r: vec![0.0; rows],
+                        c: vec![0.0; cols],
+                        rows,
+                        cols,
+                    }
+                }
+            })
+            .collect();
+        let m = if use_momentum {
+            metas.iter().map(|p| Tensor::zeros(&p.shape)).collect()
+        } else {
+            Vec::new()
+        };
+        Adafactor {
+            metas,
+            use_momentum,
+            beta1: 0.9,
+            weight_decay: weight_decay as f32,
+            state,
+            m,
+        }
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn name(&self) -> &str {
+        if self.use_momentum {
+            "adafactor_v2"
+        } else {
+            "adafactor"
+        }
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], t: usize, lr: f32) {
+        let beta2t = 1.0 - (t as f32).powf(-0.8);
+        for i in 0..params.len() {
+            let info = &self.metas[i];
+            let wd = if info.wd { self.weight_decay } else { 0.0 };
+            let w = &mut params[i].data;
+
+            // Compute the unclipped update u into a scratch buffer.
+            let mut u = vec![0.0f32; w.len()];
+            match &mut self.state[i] {
+                FactorState::Exact(v) => {
+                    let g = &grads[i].data;
+                    for j in 0..w.len() {
+                        let g2 = g[j] * g[j] + EPS1;
+                        v[j] = beta2t * v[j] + (1.0 - beta2t) * g2;
+                        u[j] = g[j] / v[j].sqrt();
+                    }
+                }
+                FactorState::Factored { r, c, rows, cols } => {
+                    let gmat = grads[i].matrix_view(info.fan_out_axis);
+                    let (rows, cols) = (*rows, *cols);
+                    // row/col sums of g^2
+                    let mut rsum = vec![0.0f32; rows];
+                    let mut csum = vec![0.0f32; cols];
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let g2 = gmat.at(ri, ci).powi(2) + EPS1;
+                            rsum[ri] += g2;
+                            csum[ci] += g2;
+                        }
+                    }
+                    for (ri, s) in r.iter_mut().zip(&rsum) {
+                        *ri = beta2t * *ri + (1.0 - beta2t) * s;
+                    }
+                    for (ci, s) in c.iter_mut().zip(&csum) {
+                        *ci = beta2t * *ci + (1.0 - beta2t) * s;
+                    }
+                    let rtot: f32 = r.iter().sum();
+                    let is_borrowed =
+                        matches!(gmat.data, std::borrow::Cow::Borrowed(_));
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let v = (r[ri] * c[ci] / rtot.max(EPS1)).max(EPS1);
+                            let raw = if is_borrowed {
+                                ri * cols + ci
+                            } else {
+                                super::raw_index(info, ri, ci)
+                            };
+                            u[raw] = gmat.at(ri, ci) / v.sqrt();
+                        }
+                    }
+                }
+            }
+
+            // RMS clipping: u /= max(1, RMS(u)/d)
+            let rms = (u.iter().map(|x| (x * x) as f64).sum::<f64>()
+                / u.len() as f64)
+                .sqrt() as f32;
+            let scale = 1.0 / (rms / CLIP_D).max(1.0);
+
+            if self.use_momentum {
+                let m = &mut self.m[i].data;
+                for j in 0..w.len() {
+                    let uj = u[j] * scale;
+                    m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * uj;
+                    w[j] -= lr * (m[j] + wd * w[j]);
+                }
+            } else {
+                for j in 0..w.len() {
+                    w[j] -= lr * (u[j] * scale + wd * w[j]);
+                }
+            }
+        }
+    }
+
+    fn second_moment(&self, i: usize) -> Option<Tensor> {
+        let info = &self.metas[i];
+        match &self.state[i] {
+            FactorState::Exact(v) => Some(Tensor::from_vec(&info.shape, v.clone())),
+            FactorState::Factored { r, c, rows, cols } => {
+                let rtot: f32 = r.iter().sum::<f32>().max(EPS1);
+                let mut full = Tensor::zeros(&info.shape);
+                for ri in 0..*rows {
+                    for ci in 0..*cols {
+                        let raw = if info.shape.len() <= 2 {
+                            ri * cols + ci
+                        } else {
+                            super::raw_index(info, ri, ci)
+                        };
+                        full.data[raw] = r[ri] * c[ci] / rtot;
+                    }
+                }
+                Some(full)
+            }
+        }
+    }
+
+    fn second_moment_elems(&self) -> usize {
+        self.state
+            .iter()
+            .map(|s| match s {
+                FactorState::Exact(v) => v.len(),
+                FactorState::Factored { r, c, .. } => r.len() + c.len(),
+            })
+            .sum()
+    }
+
+    fn first_moment_elems(&self) -> usize {
+        self.m.iter().map(|m| m.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Init;
+
+    fn meta(shape: &[usize]) -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            shape: shape.to_vec(),
+            layer_type: "mlp_up".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: false,
+            fan_out_axis: 0,
+        }
+    }
+
+    #[test]
+    fn factored_memory() {
+        let opt = Adafactor::new(vec![meta(&[32, 64])], false, 0.0);
+        assert_eq!(opt.second_moment_elems(), 32 + 64);
+        assert_eq!(opt.first_moment_elems(), 0);
+        let opt2 = Adafactor::new(vec![meta(&[32, 64])], true, 0.0);
+        assert_eq!(opt2.first_moment_elems(), 32 * 64);
+    }
+
+    #[test]
+    fn rank_one_gradients_are_exactly_factored() {
+        // g = a b^T  =>  v_ij proportional to (a_i^2)(b_j^2): the factored
+        // approximation is exact for rank-1 g^2 structure.
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 1.0, 2.0];
+        let mut g = Tensor::zeros(&[2, 3]);
+        for i in 0..2 {
+            for j in 0..3 {
+                g.data[i * 3 + j] = a[i] * b[j];
+            }
+        }
+        let mut opt = Adafactor::new(vec![meta(&[2, 3])], false, 0.0);
+        let mut p = vec![Tensor::zeros(&[2, 3])];
+        opt.step(&mut p, &[g.clone()], 1, 0.0);
+        let v = opt.second_moment(0).unwrap();
+        // compare v against normalized g^2 up to global scale
+        let g2: Vec<f32> = g.data.iter().map(|x| x * x).collect();
+        let ratio0 = v.data[0] / g2[0];
+        for j in 1..6 {
+            let r = v.data[j] / g2[j];
+            assert!((r - ratio0).abs() / ratio0 < 1e-3, "{r} vs {ratio0}");
+        }
+    }
+
+    #[test]
+    fn rms_clipping_bounds_update() {
+        let mut opt = Adafactor::new(vec![meta(&[4, 4])], false, 0.0);
+        let mut p = vec![Tensor::zeros(&[4, 4])];
+        let mut rng = crate::rng::Rng::new(1);
+        let g = Tensor::from_vec(&[4, 4], (0..16).map(|_| rng.normal() as f32).collect());
+        opt.step(&mut p, &[g], 1, 1.0);
+        // with lr=1 and d=1, RMS of the applied update <= ~1
+        let rms = (p[0].data.iter().map(|x| (x * x) as f64).sum::<f64>() / 16.0).sqrt();
+        assert!(rms <= 1.0 + 1e-5, "{rms}");
+    }
+
+    #[test]
+    fn stays_finite_over_steps() {
+        let mut opt = Adafactor::new(vec![meta(&[8, 8]), meta(&[8])], true, 0.01);
+        let mut rng = crate::rng::Rng::new(2);
+        let mut p = vec![
+            Tensor::from_vec(&[8, 8], (0..64).map(|_| rng.normal() as f32).collect()),
+            Tensor::from_vec(&[8], (0..8).map(|_| rng.normal() as f32).collect()),
+        ];
+        for t in 1..=30 {
+            let g = vec![
+                Tensor::from_vec(&[8, 8], (0..64).map(|_| rng.normal() as f32).collect()),
+                Tensor::from_vec(&[8], (0..8).map(|_| rng.normal() as f32).collect()),
+            ];
+            opt.step(&mut p, &g, t, 1e-2);
+        }
+        assert!(p[0].data.iter().all(|x| x.is_finite()));
+        assert!(p[1].data.iter().all(|x| x.is_finite()));
+    }
+}

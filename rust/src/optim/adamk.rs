@@ -1,0 +1,543 @@
+//! The generalized low-memory Adam family (paper Eq. 2):
+//!
+//! ```text
+//! V_{t+1} = beta2 * V_t + (1 - beta2) * E_K[G_t^2]
+//! ```
+//!
+//! with per-tensor sharing dimensions K. V is **stored at the reduced
+//! shape** — one f32 per sharing group — which is exactly where the memory
+//! saving comes from. K = ∅ recovers AdamW bit-for-bit; K = (0,1) for every
+//! tensor is AdaLayer; SNR-derived per-tensor K is SlimAdam; row-block K
+//! (`KMode::Blocks`) expresses Adam-mini's per-head partitions.
+//!
+//! Group indexing works on the canonical matrix view (fan_out × fan_in)
+//! without materializing it: for element `idx` of the raw tensor with
+//! fan_out extent `fo` at stride `stride_fo`,
+//!
+//!   row(idx) = (idx / stride_fo) % fo
+//!   col(idx) = (idx / (stride_fo * fo)) * stride_fo + (idx % stride_fo)
+//!
+//! which is O(1) per element for any fan_out_axis (2-D weights use axis 0,
+//! HWIO convs axis 3).
+
+use crate::tensor::Tensor;
+
+use super::{Hypers, KMode, Optimizer, ParamInfo};
+
+/// Per-tensor geometry for group indexing.
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    fo: usize,
+    cols: usize,
+    stride_fo: usize,
+}
+
+impl Geom {
+    fn new(info: &ParamInfo) -> Geom {
+        let (fo, cols) = info.matrix_dims();
+        let stride_fo: usize = info.shape[info.fan_out_axis + 1..].iter().product();
+        Geom { fo, cols, stride_fo }
+    }
+
+    #[inline(always)]
+    fn row(&self, idx: usize) -> usize {
+        (idx / self.stride_fo) % self.fo
+    }
+
+    #[inline(always)]
+    fn col(&self, idx: usize) -> usize {
+        (idx / (self.stride_fo * self.fo)) * self.stride_fo + (idx % self.stride_fo)
+    }
+}
+
+/// Resolve the effective K for a tensor: vectors can only be `None` or
+/// `Both` (a vector is a 1-row matrix, so FanIn/FanOut degenerate).
+pub fn effective_k(info: &ParamInfo, k: KMode) -> KMode {
+    if info.is_vector() {
+        match k {
+            KMode::None => KMode::None,
+            _ => KMode::Both,
+        }
+    } else {
+        k
+    }
+}
+
+/// Stored V length for a tensor under mode `k`.
+pub fn v_len(info: &ParamInfo, k: KMode) -> usize {
+    let (r, c) = info.matrix_dims();
+    effective_k(info, k).v_elems(r, c)
+}
+
+pub struct AdamK {
+    label: String,
+    pub hypers: Hypers,
+    metas: Vec<ParamInfo>,
+    modes: Vec<KMode>,
+    m: Vec<Tensor>,
+    /// reduced-storage second moments, in matrix-view group order
+    v: Vec<Vec<f32>>,
+    /// reusable scratch for grouped reductions (no per-step allocation on
+    /// the hot path — see EXPERIMENTS.md §Perf)
+    scratch: Vec<f32>,
+}
+
+impl AdamK {
+    pub fn new(
+        label: impl Into<String>,
+        metas: Vec<ParamInfo>,
+        modes: Vec<KMode>,
+        hypers: Hypers,
+    ) -> AdamK {
+        assert_eq!(metas.len(), modes.len());
+        let modes: Vec<KMode> = metas
+            .iter()
+            .zip(modes)
+            .map(|(info, k)| effective_k(info, k))
+            .collect();
+        let m = metas.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let v = metas
+            .iter()
+            .zip(&modes)
+            .map(|(p, &k)| vec![0.0f32; v_len(p, k)])
+            .collect();
+        let scratch_len = metas
+            .iter()
+            .zip(&modes)
+            .map(|(p, &k)| v_len(p, k))
+            .max()
+            .unwrap_or(0);
+        AdamK {
+            label: label.into(),
+            hypers,
+            metas,
+            modes,
+            m,
+            v,
+            scratch: vec![0.0; scratch_len],
+        }
+    }
+
+    pub fn modes(&self) -> &[KMode] {
+        &self.modes
+    }
+
+    pub fn metas(&self) -> &[ParamInfo] {
+        &self.metas
+    }
+
+    /// Group id of raw element `idx` under mode `k`.
+    #[inline(always)]
+    fn group(geom: &Geom, k: KMode, idx: usize) -> usize {
+        match k {
+            KMode::None => idx,
+            KMode::FanIn => geom.row(idx),
+            KMode::FanOut => geom.col(idx),
+            KMode::Both => 0,
+            KMode::Blocks(n) => geom.row(idx) * n / geom.fo,
+        }
+    }
+
+    fn group_size(geom: &Geom, k: KMode) -> f32 {
+        match k {
+            KMode::None => 1.0,
+            KMode::FanIn => geom.cols as f32,
+            KMode::FanOut => geom.fo as f32,
+            KMode::Both => (geom.fo * geom.cols) as f32,
+            KMode::Blocks(n) => ((geom.fo / n) * geom.cols) as f32,
+        }
+    }
+}
+
+impl Optimizer for AdamK {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], t: usize, lr: f32) {
+        let h = &self.hypers;
+        let b1 = h.beta1 as f32;
+        let b2 = h.beta2 as f32;
+        let eps = h.eps as f32;
+        let bc1 = 1.0 / (1.0 - (h.beta1 as f32).powi(t as i32));
+        let bc2 = 1.0 / (1.0 - (h.beta2 as f32).powi(t as i32));
+
+        for i in 0..params.len() {
+            let info = &self.metas[i];
+            let k = self.modes[i];
+            let geom = Geom::new(info);
+            let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+            let w = &mut params[i].data;
+            let g = &grads[i].data;
+            let m = &mut self.m[i].data;
+            let v = &mut self.v[i];
+
+            match k {
+                KMode::None => {
+                    // fused single pass (exact AdamW)
+                    for j in 0..w.len() {
+                        let gj = g[j];
+                        m[j] = b1 * m[j] + (1.0 - b1) * gj;
+                        v[j] = b2 * v[j] + (1.0 - b2) * gj * gj;
+                        let mh = m[j] * bc1;
+                        let vh = v[j] * bc2;
+                        w[j] -= lr * (mh / (vh.sqrt() + eps) + wd * w[j]);
+                    }
+                }
+                // Fast path: FanIn on a row-major matrix view — sharing
+                // groups are contiguous rows, so the reduction and the
+                // update fuse into one streaming pass per row.
+                KMode::FanIn if geom.stride_fo == geom.cols => {
+                    let cols = geom.cols;
+                    let inv_cols = 1.0 / cols as f32;
+                    for r in 0..geom.fo {
+                        let lo = r * cols;
+                        let hi = lo + cols;
+                        let mut s = 0.0f32;
+                        for &gj in &g[lo..hi] {
+                            s += gj * gj;
+                        }
+                        let vv = b2 * v[r] + (1.0 - b2) * (s * inv_cols);
+                        v[r] = vv;
+                        let denom = (vv * bc2).sqrt() + eps;
+                        let inv_denom = bc1 / denom;
+                        for j in lo..hi {
+                            let gj = g[j];
+                            m[j] = b1 * m[j] + (1.0 - b1) * gj;
+                            w[j] -= lr * (m[j] * inv_denom + wd * w[j]);
+                        }
+                    }
+                }
+                // Fast path: FanOut on a row-major matrix view — group id
+                // is j % cols; precompute per-column denominators so the
+                // update pass has no divisions.
+                KMode::FanOut if geom.stride_fo == geom.cols => {
+                    let cols = geom.cols;
+                    let inv_rows = 1.0 / geom.fo as f32;
+                    let sums = &mut self.scratch[..cols];
+                    sums.fill(0.0);
+                    let mut c = 0usize;
+                    for &gj in g.iter() {
+                        sums[c] += gj * gj;
+                        c += 1;
+                        if c == cols {
+                            c = 0;
+                        }
+                    }
+                    for (vi, s) in v.iter_mut().zip(sums.iter()) {
+                        *vi = b2 * *vi + (1.0 - b2) * (s * inv_rows);
+                    }
+                    // reuse scratch as per-column bc1/denom
+                    for (s, &vi) in sums.iter_mut().zip(v.iter()) {
+                        *s = bc1 / ((vi * bc2).sqrt() + eps);
+                    }
+                    let mut c = 0usize;
+                    for j in 0..w.len() {
+                        let gj = g[j];
+                        m[j] = b1 * m[j] + (1.0 - b1) * gj;
+                        w[j] -= lr * (m[j] * sums[c] + wd * w[j]);
+                        c += 1;
+                        if c == cols {
+                            c = 0;
+                        }
+                    }
+                }
+                // Fast path: Both — one scalar group, fully fused.
+                KMode::Both => {
+                    let mut s = 0.0f32;
+                    for &gj in g.iter() {
+                        s += gj * gj;
+                    }
+                    let vv = b2 * v[0] + (1.0 - b2) * (s / g.len() as f32);
+                    v[0] = vv;
+                    let inv_denom = bc1 / ((vv * bc2).sqrt() + eps);
+                    for j in 0..w.len() {
+                        let gj = g[j];
+                        m[j] = b1 * m[j] + (1.0 - b1) * gj;
+                        w[j] -= lr * (m[j] * inv_denom + wd * w[j]);
+                    }
+                }
+                // Generic path (conv fan_out_axis != 0, Blocks): two passes
+                // with O(1) group indexing.
+                _ => {
+                    let gsize = Self::group_size(&geom, k);
+                    let sums = &mut self.scratch[..v.len()];
+                    sums.fill(0.0);
+                    for (j, &gj) in g.iter().enumerate() {
+                        sums[Self::group(&geom, k, j)] += gj * gj;
+                    }
+                    for (vi, s) in v.iter_mut().zip(sums.iter()) {
+                        *vi = b2 * *vi + (1.0 - b2) * (s / gsize);
+                    }
+                    for j in 0..w.len() {
+                        let gj = g[j];
+                        m[j] = b1 * m[j] + (1.0 - b1) * gj;
+                        let mh = m[j] * bc1;
+                        let vh = v[Self::group(&geom, k, j)] * bc2;
+                        w[j] -= lr * (mh / (vh.sqrt() + eps) + wd * w[j]);
+                    }
+                }
+            }
+        }
+    }
+
+    fn second_moment(&self, i: usize) -> Option<Tensor> {
+        let info = &self.metas[i];
+        let k = self.modes[i];
+        let geom = Geom::new(info);
+        let v = &self.v[i];
+        let mut full = Tensor::zeros(&info.shape);
+        for j in 0..full.data.len() {
+            full.data[j] = v[Self::group(&geom, k, j)];
+        }
+        Some(full)
+    }
+
+    fn second_moment_elems(&self) -> usize {
+        self.v.iter().map(|v| v.len()).sum()
+    }
+
+    fn first_moment_elems(&self) -> usize {
+        self.m.iter().map(|m| m.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Init;
+
+    fn info(name: &str, shape: &[usize], fan_out_axis: usize) -> ParamInfo {
+        ParamInfo {
+            name: name.into(),
+            shape: shape.to_vec(),
+            layer_type: "attn_q".into(),
+            depth: 0,
+            init_mitchell: Init::Normal { std: 0.02 },
+            init_default: Init::Normal { std: 0.02 },
+            wd: true,
+            fan_out_axis,
+        }
+    }
+
+    fn hypers0() -> Hypers {
+        Hypers {
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            clip_norm: 1.0,
+        }
+    }
+
+    /// Brute-force reference: full V EMA of grouped means.
+    fn ref_update(
+        w: &mut [f32],
+        m: &mut [f32],
+        v_full: &mut [f32],
+        g: &[f32],
+        rows: usize,
+        cols: usize,
+        k: KMode,
+        h: &Hypers,
+        t: usize,
+        lr: f32,
+    ) {
+        let b1 = h.beta1 as f32;
+        let b2 = h.beta2 as f32;
+        let eps = h.eps as f32;
+        // grouped mean of g^2, broadcast to full
+        let mut ek = vec![0.0f32; g.len()];
+        match k {
+            KMode::None => {
+                for j in 0..g.len() {
+                    ek[j] = g[j] * g[j];
+                }
+            }
+            KMode::FanIn => {
+                for r in 0..rows {
+                    let mean: f32 = (0..cols).map(|c| g[r * cols + c].powi(2)).sum::<f32>()
+                        / cols as f32;
+                    for c in 0..cols {
+                        ek[r * cols + c] = mean;
+                    }
+                }
+            }
+            KMode::FanOut => {
+                for c in 0..cols {
+                    let mean: f32 = (0..rows).map(|r| g[r * cols + c].powi(2)).sum::<f32>()
+                        / rows as f32;
+                    for r in 0..rows {
+                        ek[r * cols + c] = mean;
+                    }
+                }
+            }
+            KMode::Both => {
+                let mean: f32 =
+                    g.iter().map(|x| x * x).sum::<f32>() / g.len() as f32;
+                ek.fill(mean);
+            }
+            KMode::Blocks(n) => {
+                let rows_per = rows / n;
+                for b in 0..n {
+                    let mut s = 0.0f32;
+                    for r in b * rows_per..(b + 1) * rows_per {
+                        for c in 0..cols {
+                            s += g[r * cols + c].powi(2);
+                        }
+                    }
+                    let mean = s / (rows_per * cols) as f32;
+                    for r in b * rows_per..(b + 1) * rows_per {
+                        for c in 0..cols {
+                            ek[r * cols + c] = mean;
+                        }
+                    }
+                }
+            }
+        }
+        let bc1 = 1.0 / (1.0 - b1.powi(t as i32));
+        let bc2 = 1.0 / (1.0 - b2.powi(t as i32));
+        for j in 0..w.len() {
+            m[j] = b1 * m[j] + (1.0 - b1) * g[j];
+            v_full[j] = b2 * v_full[j] + (1.0 - b2) * ek[j];
+            w[j] -= lr * (m[j] * bc1) / ((v_full[j] * bc2).sqrt() + eps);
+        }
+    }
+
+    #[test]
+    fn matches_reference_all_modes() {
+        let rows = 6;
+        let cols = 8;
+        let h = hypers0();
+        for k in [
+            KMode::None,
+            KMode::FanIn,
+            KMode::FanOut,
+            KMode::Both,
+            KMode::Blocks(2),
+        ] {
+            let meta = info("w", &[rows, cols], 0);
+            let mut opt = AdamK::new("t", vec![meta], vec![k], h);
+            let mut rng = crate::rng::Rng::new(9);
+            let mut w = Tensor::from_vec(
+                &[rows, cols],
+                (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+            );
+            let mut w_ref = w.data.clone();
+            let mut m_ref = vec![0.0f32; rows * cols];
+            let mut v_ref = vec![0.0f32; rows * cols];
+            for t in 1..=4 {
+                let g = Tensor::from_vec(
+                    &[rows, cols],
+                    (0..rows * cols).map(|_| rng.normal() as f32).collect(),
+                );
+                ref_update(
+                    &mut w_ref, &mut m_ref, &mut v_ref, &g.data, rows, cols, k,
+                    &h, t, 1e-2,
+                );
+                let mut params = vec![w.clone()];
+                opt.step(&mut params, &[g], t, 1e-2);
+                w = params.pop().unwrap();
+                for (a, b) in w.data.iter().zip(&w_ref) {
+                    assert!(
+                        (a - b).abs() <= 1e-6 + 1e-5 * b.abs(),
+                        "K={k:?} t={t}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_fan_out_axis_grouping() {
+        // HWIO (1,1,2,3): fan_out_axis=3 -> rows=3(o), cols=2(i).
+        let meta = info("c", &[1, 1, 2, 3], 3);
+        let h = hypers0();
+        let mut opt = AdamK::new("t", vec![meta], vec![KMode::FanIn], h);
+        // g laid out [i0o0, i0o1, i0o2, i1o0, i1o1, i1o2]
+        let g = Tensor::from_vec(&[1, 1, 2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut params = vec![Tensor::zeros(&[1, 1, 2, 3])];
+        opt.step(&mut params, &[g], 1, 0.0);
+        // V per output channel o: mean over i of g^2:
+        // o0: (1+16)/2, o1: (4+25)/2, o2: (9+36)/2, scaled by (1-beta2)
+        let v = opt.second_moment(0).unwrap();
+        let scale = 1.0 - 0.95;
+        assert!((v.data[0] - scale * 8.5).abs() < 1e-5); // (i0,o0)
+        assert!((v.data[3] - scale * 8.5).abs() < 1e-5); // (i1,o0) same group
+        assert!((v.data[1] - scale * 14.5).abs() < 1e-5); // o1
+        assert!((v.data[5] - scale * 22.5).abs() < 1e-5); // o2
+    }
+
+    #[test]
+    fn vector_k_degenerates_to_both() {
+        let meta = ParamInfo {
+            shape: vec![8],
+            ..info("ln", &[8], 0)
+        };
+        let opt = AdamK::new("t", vec![meta], vec![KMode::FanOut], hypers0());
+        assert_eq!(opt.modes()[0], KMode::Both);
+        assert_eq!(opt.second_moment_elems(), 1);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let metas = vec![info("a", &[4, 8], 0), info("b", &[16], 0)];
+        let adam = AdamK::new(
+            "adam",
+            metas.clone(),
+            vec![KMode::None, KMode::None],
+            hypers0(),
+        );
+        assert_eq!(adam.second_moment_elems(), 32 + 16);
+        let slim = AdamK::new(
+            "slim",
+            metas,
+            vec![KMode::FanIn, KMode::None],
+            hypers0(),
+        );
+        assert_eq!(slim.second_moment_elems(), 4 + 16);
+    }
+
+    #[test]
+    fn second_moment_broadcast_shape() {
+        let meta = info("w", &[4, 6], 0);
+        let mut opt = AdamK::new("t", vec![meta], vec![KMode::FanOut], hypers0());
+        let g = Tensor::ones(&[4, 6]);
+        let mut p = vec![Tensor::zeros(&[4, 6])];
+        opt.step(&mut p, &[g], 1, 1e-3);
+        let v = opt.second_moment(0).unwrap();
+        assert_eq!(v.shape, vec![4, 6]);
+        // all-ones grads: every group mean is 1 * (1-b2)
+        for &x in &v.data {
+            assert!((x - 0.05).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn property_v_nonnegative_and_none_equals_adamw() {
+        crate::proptest::check(25, |gen| {
+            let rows = gen.usize(1, 12);
+            let cols = gen.usize(1, 12);
+            let k = *gen.choice(&[KMode::None, KMode::FanIn, KMode::FanOut, KMode::Both]);
+            let meta = info("w", &[rows, cols], 0);
+            let mut opt = AdamK::new("p", vec![meta], vec![k], hypers0());
+            let mut params = vec![Tensor::from_vec(
+                &[rows, cols],
+                gen.vec_normal(rows * cols, 1.0),
+            )];
+            for t in 1..=3 {
+                let g = Tensor::from_vec(&[rows, cols], gen.vec_normal(rows * cols, 1.0));
+                opt.step(&mut params, &[g], t, 1e-3);
+            }
+            let v = opt.second_moment(0).unwrap();
+            crate::proptest::prop_assert(
+                v.data.iter().all(|&x| x >= 0.0),
+                "V must be nonnegative",
+            )?;
+            crate::proptest::prop_assert(
+                params[0].data.iter().all(|x| x.is_finite()),
+                "weights must stay finite",
+            )
+        });
+    }
+}

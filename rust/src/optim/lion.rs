@@ -1,0 +1,133 @@
+//! Lion (Chen et al. 2023): momentum-only, sign-based updates. One of the
+//! Fig. 1 baselines whose LR-sensitivity curve deviates substantially from
+//! Adam's (it is a genuinely different algorithm, not an Adam compression).
+//!
+//! ```text
+//! u   = sign(beta1 * m + (1 - beta1) * g)
+//! w  -= lr * (u + wd * w)
+//! m   = beta2 * m + (1 - beta2) * g
+//! ```
+
+use crate::tensor::Tensor;
+
+use super::{Optimizer, ParamInfo};
+
+pub struct Lion {
+    metas: Vec<ParamInfo>,
+    beta1: f32,
+    beta2: f32,
+    weight_decay: f32,
+    m: Vec<Tensor>,
+}
+
+impl Lion {
+    /// Paper App. A: beta1 = 0.9, beta2 = 0.95 works best for GPT
+    /// pre-training; weight decay 0.1.
+    pub fn new(metas: Vec<ParamInfo>, beta1: f64, beta2: f64, weight_decay: f64) -> Lion {
+        let m = metas.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        Lion {
+            metas,
+            beta1: beta1 as f32,
+            beta2: beta2 as f32,
+            weight_decay: weight_decay as f32,
+            m,
+        }
+    }
+}
+
+impl Optimizer for Lion {
+    fn name(&self) -> &str {
+        "lion"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], _t: usize, lr: f32) {
+        for i in 0..params.len() {
+            let wd = if self.metas[i].wd { self.weight_decay } else { 0.0 };
+            let w = &mut params[i].data;
+            let g = &grads[i].data;
+            let m = &mut self.m[i].data;
+            for j in 0..w.len() {
+                let interp = self.beta1 * m[j] + (1.0 - self.beta1) * g[j];
+                let u = if interp > 0.0 {
+                    1.0
+                } else if interp < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+                w[j] -= lr * (u + wd * w[j]);
+                m[j] = self.beta2 * m[j] + (1.0 - self.beta2) * g[j];
+            }
+        }
+    }
+
+    fn second_moment(&self, _i: usize) -> Option<Tensor> {
+        None
+    }
+
+    fn second_moment_elems(&self) -> usize {
+        0
+    }
+
+    fn first_moment_elems(&self) -> usize {
+        self.m.iter().map(|m| m.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Init;
+
+    fn meta(shape: &[usize], wd: bool) -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            shape: shape.to_vec(),
+            layer_type: "mlp_up".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd,
+            fan_out_axis: 0,
+        }
+    }
+
+    #[test]
+    fn updates_are_sign_sized() {
+        let mut opt = Lion::new(vec![meta(&[3], false)], 0.9, 0.95, 0.0);
+        let mut p = vec![Tensor::zeros(&[3])];
+        let g = Tensor::from_vec(&[3], vec![0.7, -123.0, 0.0]);
+        opt.step(&mut p, &[g], 1, 0.01);
+        assert!((p[0].data[0] + 0.01).abs() < 1e-7); // -lr * sign(+)
+        assert!((p[0].data[1] - 0.01).abs() < 1e-7); // -lr * sign(-)
+        assert_eq!(p[0].data[2], 0.0); // sign(0) = 0
+    }
+
+    #[test]
+    fn momentum_drives_interpolation() {
+        let mut opt = Lion::new(vec![meta(&[1], false)], 0.9, 0.95, 0.0);
+        let mut p = vec![Tensor::zeros(&[1])];
+        // build +momentum, then a small negative gradient should still give
+        // a positive update through the beta1 interpolation
+        opt.step(&mut p, &[Tensor::from_vec(&[1], vec![10.0])], 1, 0.0);
+        let before = p[0].data[0];
+        opt.step(&mut p, &[Tensor::from_vec(&[1], vec![-0.01])], 2, 0.01);
+        assert!(p[0].data[0] < before); // update was positive-signed: w -= lr
+    }
+
+    #[test]
+    fn decoupled_weight_decay() {
+        let mut opt = Lion::new(vec![meta(&[1], true)], 0.9, 0.95, 0.1);
+        let mut p = vec![Tensor::from_vec(&[1], vec![1.0])];
+        opt.step(&mut p, &[Tensor::zeros(&[1])], 1, 0.01);
+        // u = 0, so w -= lr * wd * w = 0.001
+        assert!((p[0].data[0] - 0.999).abs() < 1e-7);
+    }
+
+    #[test]
+    fn no_second_moment_memory() {
+        let opt = Lion::new(vec![meta(&[8, 8], true)], 0.9, 0.95, 0.1);
+        assert_eq!(opt.second_moment_elems(), 0);
+        assert_eq!(opt.first_moment_elems(), 64);
+    }
+}

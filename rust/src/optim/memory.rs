@@ -1,0 +1,104 @@
+//! Optimizer-state memory accounting — produces the paper's headline
+//! "fraction of second moments saved" numbers (Fig. 10 top, §5).
+
+use super::Optimizer;
+
+/// Exact state accounting for one optimizer instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryReport {
+    pub name: String,
+    pub param_elems: usize,
+    pub m_elems: usize,
+    pub v_elems: usize,
+    /// v_elems / param_elems — Adam is 1.0; SlimAdam on GPT ≈ 0.02.
+    pub v_fraction: f64,
+    /// 1 - v_fraction: the "saves X% of second moments" headline.
+    pub v_saving: f64,
+}
+
+pub fn report(opt: &dyn Optimizer, param_elems: usize) -> MemoryReport {
+    let v_elems = opt.second_moment_elems();
+    let v_fraction = if param_elems == 0 {
+        0.0
+    } else {
+        v_elems as f64 / param_elems as f64
+    };
+    MemoryReport {
+        name: opt.name().to_string(),
+        param_elems,
+        m_elems: opt.first_moment_elems(),
+        v_elems,
+        v_fraction,
+        v_saving: 1.0 - v_fraction,
+    }
+}
+
+impl MemoryReport {
+    pub fn to_json(&self) -> crate::json::Value {
+        let mut v = crate::json::Value::obj();
+        v.set("name", self.name.clone())
+            .set("param_elems", self.param_elems)
+            .set("m_elems", self.m_elems)
+            .set("v_elems", self.v_elems)
+            .set("v_fraction", self.v_fraction)
+            .set("v_saving", self.v_saving);
+        v
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:16} params={:>9} m={:>9} v={:>9} v/param={:>7.4} saving={:>6.2}%",
+            self.name,
+            self.param_elems,
+            self.m_elems,
+            self.v_elems,
+            self.v_fraction,
+            100.0 * self.v_saving
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::adamk::AdamK;
+    use super::super::{Hypers, KMode, ParamInfo};
+    use super::*;
+    use crate::tensor::Init;
+
+    fn meta(shape: &[usize]) -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            shape: shape.to_vec(),
+            layer_type: "mlp_up".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: true,
+            fan_out_axis: 0,
+        }
+    }
+
+    #[test]
+    fn adam_fraction_is_one() {
+        let metas = vec![meta(&[8, 8]), meta(&[16])];
+        let opt = AdamK::new(
+            "adam",
+            metas,
+            vec![KMode::None, KMode::None],
+            Hypers::default(),
+        );
+        let r = report(&opt, 80);
+        assert_eq!(r.v_elems, 80);
+        assert!((r.v_fraction - 1.0).abs() < 1e-12);
+        assert!(r.v_saving.abs() < 1e-12);
+    }
+
+    #[test]
+    fn compressed_fraction_drops() {
+        let metas = vec![meta(&[64, 64])];
+        let opt = AdamK::new("slim", metas, vec![KMode::FanIn], Hypers::default());
+        let r = report(&opt, 4096);
+        assert_eq!(r.v_elems, 64);
+        assert!(r.v_saving > 0.98);
+    }
+}

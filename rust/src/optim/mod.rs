@@ -1,0 +1,108 @@
+//! The paper's optimizer family — Layer-3 implementation used by the
+//! split engine (HLO computes loss+grads; these optimizers apply updates).
+//!
+//! * [`adamk::AdamK`] — AdamW generalized with per-tensor sharing
+//!   dimensions K (Eq. 2). Instantiates **Adam** (all K=∅), **SlimAdam**
+//!   (SNR-derived rules), **AdaLayer** (all K=(0,1)), **AdaLayer+LN+TL**,
+//!   and **Adam-mini v1/v2** (block partitions via `KMode::Blocks`).
+//! * [`lion::Lion`], [`sm3::Sm3`], [`adafactor::Adafactor`],
+//!   [`sgdm::SgdM`] — the "different algorithm" baselines of Fig. 1.
+//! * [`memory`] — exact optimizer-state accounting (the "saves 98% of
+//!   second moments" numbers).
+//! * [`presets`] — name → optimizer factory used by the CLI and sweeps.
+
+pub mod adafactor;
+pub mod adamk;
+pub mod lion;
+pub mod memory;
+pub mod presets;
+pub mod sgdm;
+pub mod sm3;
+
+use crate::tensor::Tensor;
+
+pub use crate::runtime::manifest::{Hypers, KMode, ParamInfo};
+
+/// A stateful optimizer over a fixed parameter list.
+pub trait Optimizer {
+    fn name(&self) -> &str;
+
+    /// Apply one update in place. `t` is the 1-based step index (bias
+    /// correction); `lr` is the already-scheduled learning rate. `grads`
+    /// must already be clipped (the train loop owns clipping, matching the
+    /// paper's global-norm-1.0 setup).
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], t: usize, lr: f32);
+
+    /// Materialize the *full-shape* second moment of parameter `i` if this
+    /// optimizer maintains an Adam-style V (broadcast from the reduced
+    /// storage). Returns `None` for optimizers without a V (SGD-M, Lion).
+    /// The SNR probe (Eq. 3) consumes this.
+    fn second_moment(&self, i: usize) -> Option<Tensor>;
+
+    /// Exact stored second-moment element count (the memory headline).
+    fn second_moment_elems(&self) -> usize;
+
+    /// Exact stored first-moment element count.
+    fn first_moment_elems(&self) -> usize;
+}
+
+/// Raw (row-major) index of matrix-view element `(row, col)` for a tensor
+/// with an arbitrary `fan_out_axis` — the inverse of the view permutation
+/// used by `Tensor::matrix_view`. Shared by SM3 / Adafactor, whose factored
+/// state lives in view coordinates.
+pub(crate) fn raw_index(info: &ParamInfo, row: usize, col: usize) -> usize {
+    let stride_fo: usize = info.shape[info.fan_out_axis + 1..].iter().product();
+    let fo = info.shape[info.fan_out_axis];
+    (col / stride_fo) * stride_fo * fo + row * stride_fo + (col % stride_fo)
+}
+
+/// Global-norm gradient clipping (paper: max norm 1.0). Returns the
+/// pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f64) -> f64 {
+    let mut sq = 0.0f64;
+    for g in grads.iter() {
+        for &x in &g.data {
+            sq += (x as f64) * (x as f64);
+        }
+    }
+    let norm = sq.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let scale = (max_norm / norm) as f32;
+        for g in grads.iter_mut() {
+            for x in &mut g.data {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_scales_down_only() {
+        let mut g = vec![Tensor::from_vec(&[2], vec![3.0, 4.0])]; // norm 5
+        let n = clip_global_norm(&mut g, 1.0);
+        assert!((n - 5.0).abs() < 1e-6);
+        let after: f64 = g[0].l2_norm();
+        assert!((after - 1.0).abs() < 1e-5);
+
+        let mut small = vec![Tensor::from_vec(&[2], vec![0.3, 0.4])];
+        clip_global_norm(&mut small, 1.0);
+        assert!((small[0].data[0] - 0.3).abs() < 1e-7);
+    }
+
+    #[test]
+    fn clip_spans_tensors() {
+        let mut g = vec![
+            Tensor::from_vec(&[1], vec![3.0]),
+            Tensor::from_vec(&[1], vec![4.0]),
+        ];
+        let n = clip_global_norm(&mut g, 1.0);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((g[0].data[0] - 0.6).abs() < 1e-6);
+        assert!((g[1].data[0] - 0.8).abs() < 1e-6);
+    }
+}

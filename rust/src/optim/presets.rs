@@ -1,0 +1,228 @@
+//! Named optimizer factory: maps the paper's optimizer names to concrete
+//! instances over a model manifest. This is the single place where the
+//! baselines' partitioning conventions (App. A) are encoded.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Manifest;
+use crate::rules::RuleSet;
+
+use super::adafactor::Adafactor;
+use super::adamk::AdamK;
+use super::lion::Lion;
+use super::sgdm::SgdM;
+use super::sm3::Sm3;
+use super::{Hypers, KMode, Optimizer, ParamInfo};
+
+/// Layer types treated as "LayerNorm-like" across architectures.
+pub fn is_norm(layer_type: &str) -> bool {
+    matches!(layer_type, "ln_attn" | "ln_mlp" | "ln_final" | "bn")
+}
+
+/// Layer types carrying the token dimension (the paper's incompressible
+/// direction — Tok.Embd / LM Head).
+pub fn is_token_layer(layer_type: &str) -> bool {
+    matches!(layer_type, "tok_embd" | "lm_head")
+}
+
+fn n_heads(man: &Manifest) -> usize {
+    man.meta
+        .opt("n_heads")
+        .and_then(|v| v.as_usize().ok())
+        .unwrap_or(1)
+}
+
+/// Build an optimizer by name. Recognized names:
+///
+/// * `adam` — AdamW (K = ∅ everywhere)
+/// * `slimadam` — paper Table-3 recommended rules (or pass an explicit
+///   [`RuleSet`] via [`build_slimadam`])
+/// * `adalayer` / `adalayer_ln_tl` — Zhao et al. 2024
+/// * `adam_mini_v1` / `adam_mini_v2` — Zhang et al. 2024b
+/// * `sm3` / `sm3_b0` — Anil et al. 2019 (beta 0.95 / 0.0)
+/// * `lion` — Chen et al. 2023
+/// * `adafactor` / `adafactor_v2` — Shazeer & Stern 2018
+/// * `sgdm` — SGD + momentum 0.9
+pub fn build(name: &str, man: &Manifest, hypers: Hypers) -> Result<Box<dyn Optimizer>> {
+    let metas: Vec<ParamInfo> = man.params.clone();
+    let heads = n_heads(man);
+    Ok(match name {
+        "adam" => Box::new(AdamK::new(
+            "adam",
+            metas.clone(),
+            vec![KMode::None; man.n_params()],
+            hypers,
+        )),
+        "slimadam" => {
+            let rules = RuleSet::table3_default(man);
+            Box::new(build_slimadam(man, &rules, hypers))
+        }
+        "adalayer" => Box::new(AdamK::new(
+            "adalayer",
+            metas.clone(),
+            vec![KMode::Both; man.n_params()],
+            hypers,
+        )),
+        "adalayer_ln_tl" => {
+            let modes = metas
+                .iter()
+                .map(|p| {
+                    if is_norm(&p.layer_type) || is_token_layer(&p.layer_type) {
+                        KMode::None
+                    } else {
+                        KMode::Both
+                    }
+                })
+                .collect();
+            Box::new(AdamK::new("adalayer_ln_tl", metas.clone(), modes, hypers))
+        }
+        "adam_mini_v1" => {
+            // v1: PyTorch default block partitioning (one moment per
+            // tensor), except per-param Tok.Embd/LM-Head and per-head Q/K.
+            let modes = metas
+                .iter()
+                .map(|p| {
+                    if is_token_layer(&p.layer_type) {
+                        KMode::None
+                    } else if matches!(p.layer_type.as_str(), "attn_q" | "attn_k") {
+                        KMode::Blocks(heads)
+                    } else {
+                        KMode::Both
+                    }
+                })
+                .collect();
+            Box::new(AdamK::new("adam_mini_v1", metas.clone(), modes, hypers))
+        }
+        "adam_mini_v2" => {
+            // v2: one moment per output neuron (mean over fan_in), except
+            // per-head Q/K and per-token-row Tok/LM-Head (which per-output-
+            // neuron already gives); LayerNorms compressed.
+            let modes = metas
+                .iter()
+                .map(|p| {
+                    if matches!(p.layer_type.as_str(), "attn_q" | "attn_k") {
+                        KMode::Blocks(heads)
+                    } else if is_norm(&p.layer_type) {
+                        KMode::Both
+                    } else if p.is_vector() {
+                        KMode::Both
+                    } else {
+                        KMode::FanIn
+                    }
+                })
+                .collect();
+            Box::new(AdamK::new("adam_mini_v2", metas.clone(), modes, hypers))
+        }
+        "sm3" => Box::new(Sm3::new(metas, 0.95, 0.9, hypers.weight_decay)),
+        "sm3_b0" => Box::new(Sm3::new(metas, 0.0, 0.9, hypers.weight_decay)),
+        "lion" => Box::new(Lion::new(metas, 0.9, 0.95, hypers.weight_decay)),
+        "adafactor" => Box::new(Adafactor::new(metas, false, hypers.weight_decay)),
+        "adafactor_v2" => Box::new(Adafactor::new(metas, true, hypers.weight_decay)),
+        "sgdm" => Box::new(SgdM::new(metas, 0.9, hypers.weight_decay)),
+        other => bail!("unknown optimizer {other:?}"),
+    })
+}
+
+/// SlimAdam from an explicit SNR-derived rule set.
+pub fn build_slimadam(man: &Manifest, rules: &RuleSet, hypers: Hypers) -> AdamK {
+    let modes = rules.modes_for(man);
+    AdamK::new(
+        format!("slimadam[{}]", rules.label),
+        man.params.clone(),
+        modes,
+        hypers,
+    )
+}
+
+/// All optimizer names exercised by the Fig. 1 / Fig. 10 comparisons.
+pub const ALL: &[&str] = &[
+    "adam",
+    "slimadam",
+    "adalayer",
+    "adalayer_ln_tl",
+    "adam_mini_v1",
+    "adam_mini_v2",
+    "sm3",
+    "lion",
+    "adafactor",
+    "adafactor_v2",
+    "sgdm",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Manifest {
+        // A minimal GPT-ish manifest for preset construction.
+        let src = r#"{
+          "kind": "grad_step",
+          "model": {"name": "t", "family": "gpt", "vocab": 64, "n_heads": 4},
+          "params": [
+            {"name": "tok_embd", "shape": [64, 16], "layer_type": "tok_embd",
+             "depth": -1, "init_mitchell": {"scheme": "normal", "std": 0.02},
+             "init_default": {"scheme": "normal", "std": 1.0}, "wd": true,
+             "fan_out_axis": 0},
+            {"name": "h0.attn_q", "shape": [16, 16], "layer_type": "attn_q",
+             "depth": 0, "init_mitchell": {"scheme": "normal", "std": 0.02},
+             "init_default": {"scheme": "uniform", "limit": 0.25}, "wd": true,
+             "fan_out_axis": 0},
+            {"name": "h0.ln_attn", "shape": [16], "layer_type": "ln_attn",
+             "depth": 0, "init_mitchell": {"scheme": "ones"},
+             "init_default": {"scheme": "ones"}, "wd": false,
+             "fan_out_axis": 0}
+          ],
+          "batch": [{"name": "x", "shape": [2, 8], "dtype": "s32"}],
+          "inputs": ["param:tok_embd", "param:h0.attn_q", "param:h0.ln_attn",
+                     "batch:x"],
+          "outputs": ["loss", "grad:tok_embd", "grad:h0.attn_q",
+                      "grad:h0.ln_attn"]
+        }"#;
+        Manifest::parse(src).unwrap()
+    }
+
+    #[test]
+    fn all_presets_construct() {
+        let man = manifest();
+        for name in ALL {
+            let opt = build(name, &man, Hypers::default()).unwrap();
+            assert!(!opt.name().is_empty(), "{name}");
+        }
+        assert!(build("bogus", &man, Hypers::default()).is_err());
+    }
+
+    #[test]
+    fn adam_memory_dominates() {
+        let man = manifest();
+        let total: usize = man.total_param_elems();
+        let adam = build("adam", &man, Hypers::default()).unwrap();
+        assert_eq!(adam.second_moment_elems(), total);
+        for name in ["slimadam", "adalayer", "adam_mini_v1", "adam_mini_v2", "sm3"] {
+            let opt = build(name, &man, Hypers::default()).unwrap();
+            assert!(
+                opt.second_moment_elems() < total,
+                "{name} should save memory"
+            );
+        }
+    }
+
+    #[test]
+    fn adam_mini_partitions() {
+        let man = manifest();
+        let v1 = build("adam_mini_v1", &man, Hypers::default()).unwrap();
+        // tok_embd per-param (64*16) + q per-head (4) + ln one (1)
+        assert_eq!(v1.second_moment_elems(), 64 * 16 + 4 + 1);
+        let v2 = build("adam_mini_v2", &man, Hypers::default()).unwrap();
+        // tok per row (64) + q per head (4) + ln compressed (1)
+        assert_eq!(v2.second_moment_elems(), 64 + 4 + 1);
+    }
+
+    #[test]
+    fn adalayer_ln_tl_exempts() {
+        let man = manifest();
+        let opt = build("adalayer_ln_tl", &man, Hypers::default()).unwrap();
+        // tok_embd uncompressed (1024) + q scalar (1) + ln uncompressed (16)
+        assert_eq!(opt.second_moment_elems(), 1024 + 1 + 16);
+    }
+}

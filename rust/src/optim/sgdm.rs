@@ -1,0 +1,103 @@
+//! SGD with momentum — the non-adaptive baseline the paper contrasts Adam
+//! against (decoupled weight decay to match the AdamW convention).
+
+use crate::tensor::Tensor;
+
+use super::{Optimizer, ParamInfo};
+
+pub struct SgdM {
+    metas: Vec<ParamInfo>,
+    momentum: f32,
+    weight_decay: f32,
+    buf: Vec<Tensor>,
+}
+
+impl SgdM {
+    pub fn new(metas: Vec<ParamInfo>, momentum: f64, weight_decay: f64) -> SgdM {
+        let buf = metas.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        SgdM {
+            metas,
+            momentum: momentum as f32,
+            weight_decay: weight_decay as f32,
+            buf,
+        }
+    }
+}
+
+impl Optimizer for SgdM {
+    fn name(&self) -> &str {
+        "sgdm"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], _t: usize, lr: f32) {
+        for i in 0..params.len() {
+            let wd = if self.metas[i].wd { self.weight_decay } else { 0.0 };
+            let w = &mut params[i].data;
+            let g = &grads[i].data;
+            let b = &mut self.buf[i].data;
+            for j in 0..w.len() {
+                b[j] = self.momentum * b[j] + g[j];
+                w[j] -= lr * (b[j] + wd * w[j]);
+            }
+        }
+    }
+
+    fn second_moment(&self, _i: usize) -> Option<Tensor> {
+        None
+    }
+
+    fn second_moment_elems(&self) -> usize {
+        0
+    }
+
+    fn first_moment_elems(&self) -> usize {
+        self.buf.iter().map(|b| b.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Init;
+
+    fn meta(shape: &[usize]) -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            shape: shape.to_vec(),
+            layer_type: "mlp_up".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: true,
+            fan_out_axis: 0,
+        }
+    }
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut opt = SgdM::new(vec![meta(&[2])], 0.0, 0.0);
+        let mut p = vec![Tensor::from_vec(&[2], vec![1.0, 2.0])];
+        let g = Tensor::from_vec(&[2], vec![0.5, -0.5]);
+        opt.step(&mut p, &[g], 1, 0.1);
+        assert!((p[0].data[0] - 0.95).abs() < 1e-7);
+        assert!((p[0].data[1] - 2.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = SgdM::new(vec![meta(&[1])], 0.9, 0.0);
+        let mut p = vec![Tensor::zeros(&[1])];
+        let g = Tensor::from_vec(&[1], vec![1.0]);
+        opt.step(&mut p, &[g.clone()], 1, 1.0); // buf=1, w=-1
+        opt.step(&mut p, &[g], 2, 1.0); // buf=1.9, w=-2.9
+        assert!((p[0].data[0] + 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_second_moments() {
+        let opt = SgdM::new(vec![meta(&[4, 4])], 0.9, 0.1);
+        assert_eq!(opt.second_moment_elems(), 0);
+        assert!(opt.second_moment(0).is_none());
+        assert_eq!(opt.first_moment_elems(), 16);
+    }
+}

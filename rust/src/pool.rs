@@ -1,0 +1,160 @@
+//! Thread-pool substrate — replaces `rayon`/`tokio` for sweep fan-out.
+//!
+//! [`parallel_map`] runs a job per input on a bounded set of worker
+//! threads and returns outputs in input order. Workers pull indices from a
+//! shared atomic counter (work stealing is unnecessary: sweep jobs are
+//! coarse — a whole training run each). Panics in jobs are converted to
+//! errors rather than poisoning the whole sweep.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+/// Number of workers to use by default: min(n_jobs, available cores).
+pub fn default_workers(n_jobs: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    n_jobs.min(cores).max(1)
+}
+
+/// Run `f(i, &inputs[i])` for every input on `workers` threads; returns
+/// outputs in input order. `f` must be `Sync` (it is shared by reference).
+pub fn parallel_map<I, O, F>(inputs: &[I], workers: usize, f: F) -> Result<Vec<O>>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> Result<O> + Sync,
+{
+    let n = inputs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.clamp(1, n);
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<O>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, &inputs[i])))
+                    .unwrap_or_else(|p| {
+                        // `p.as_ref()` (not `&p`) so we downcast the payload,
+                        // not the Box itself.
+                        Err(anyhow!("job {i} panicked: {}", panic_msg(p.as_ref())))
+                    });
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .unwrap_or_else(|| Err(anyhow!("job {i} produced no result")))
+        })
+        .collect()
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn maps_in_order() {
+        let inputs: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&inputs, 8, |_, &x| Ok(x * 2)).unwrap();
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(&[], 4, |_, _x: &usize| Ok(1)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let order = AtomicU64::new(0);
+        let inputs: Vec<usize> = (0..10).collect();
+        let out = parallel_map(&inputs, 1, |i, _| {
+            let prev = order.fetch_add(1, Ordering::SeqCst);
+            assert_eq!(prev as usize, i); // strictly in order with 1 worker
+            Ok(i)
+        })
+        .unwrap();
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn actually_parallel() {
+        use std::sync::atomic::AtomicUsize;
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let inputs: Vec<usize> = (0..16).collect();
+        parallel_map(&inputs, 4, |_, _| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            live.fetch_sub(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert!(peak.load(Ordering::SeqCst) >= 2, "no observed parallelism");
+    }
+
+    #[test]
+    fn error_propagates() {
+        let inputs = vec![1usize, 2, 3];
+        let res = parallel_map(&inputs, 2, |_, &x| {
+            if x == 2 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn panic_becomes_error() {
+        let inputs = vec![0usize, 1];
+        let res = parallel_map(&inputs, 2, |_, &x| {
+            if x == 1 {
+                panic!("kaboom {x}");
+            }
+            Ok(x)
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("kaboom"), "{err}");
+    }
+
+    #[test]
+    fn default_workers_bounds() {
+        assert_eq!(default_workers(0), 1);
+        assert!(default_workers(1000) >= 1);
+        assert!(default_workers(2) <= 2);
+    }
+}

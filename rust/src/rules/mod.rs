@@ -1,0 +1,417 @@
+//! SNR → compression-rule derivation: the "DIY: Build Your Own Low-Memory
+//! Adam" machinery of §5.
+//!
+//! A [`RuleSet`] maps parameter names to sharing dimensions K. SlimAdam's
+//! policy: compress each matrix-like second moment along the K with the
+//! highest time-averaged SNR *if* it exceeds the cutoff; leave vector-like
+//! moments uncompressed (high variability, negligible memory).
+//!
+//! Variants:
+//! * [`RuleSet::derive`] — per-parameter rules (the default).
+//! * [`RuleSet::derive_depth_averaged`] — per-layer-type rules from
+//!   depth-averaged SNR ("SlimAdam-mean", App. H / Fig. 30), which the
+//!   paper shows performs identically and transfers across widths.
+//! * [`RuleSet::table3_default`] — the paper's Table 3 recommendations,
+//!   usable without running an SNR probe.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+use crate::optim::adamk::v_len;
+use crate::runtime::manifest::{KMode, Manifest};
+use crate::snr::SnrSummary;
+
+/// Default SNR cutoff: compress only when signal dominates noise (>= 1).
+pub const DEFAULT_CUTOFF: f64 = 1.0;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuleSet {
+    pub label: String,
+    pub cutoff: f64,
+    /// learning rate the SNR probe ran at (paper §5: rules derived at
+    /// ~10x below optimal LR compress the most).
+    pub derived_at_lr: Option<f64>,
+    /// param name -> K. Params absent from the map default to K = ∅.
+    pub rules: BTreeMap<String, KMode>,
+}
+
+impl RuleSet {
+    /// Paper Table 3 recommendations keyed by layer type.
+    pub fn table3_default(man: &Manifest) -> RuleSet {
+        let mut rules = BTreeMap::new();
+        for p in &man.params {
+            if p.is_vector() {
+                continue; // vectors stay uncompressed
+            }
+            let k = match p.layer_type.as_str() {
+                "attn_q" | "attn_k" => KMode::FanIn,
+                "attn_v" | "attn_proj" => KMode::FanOut,
+                "mlp_up" | "mlp_gate" | "mlp_down" => KMode::FanOut,
+                // embeddings stored (vocab, d): keep the token axis, average
+                // the embedding axis (= fan_in in our storage convention)
+                "tok_embd" | "lm_head" => KMode::FanIn,
+                "patch_embd" | "head" => KMode::FanIn,
+                "conv" => KMode::Both,
+                _ => KMode::None,
+            };
+            if k != KMode::None {
+                rules.insert(p.name.clone(), k);
+            }
+        }
+        RuleSet {
+            label: "table3".into(),
+            cutoff: DEFAULT_CUTOFF,
+            derived_at_lr: None,
+            rules,
+        }
+    }
+
+    /// Per-parameter derivation from a time-averaged SNR summary.
+    pub fn derive(
+        summary: &SnrSummary,
+        cutoff: f64,
+        label: impl Into<String>,
+        lr: Option<f64>,
+    ) -> RuleSet {
+        let mut rules = BTreeMap::new();
+        for (avg, info) in summary.per_param.iter().zip(&summary.metas) {
+            if info.is_vector() || avg.n == 0 {
+                continue;
+            }
+            let (k, snr) = avg.best();
+            if snr.is_finite() && snr >= cutoff {
+                rules.insert(info.name.clone(), k);
+            }
+        }
+        RuleSet {
+            label: label.into(),
+            cutoff,
+            derived_at_lr: lr,
+            rules,
+        }
+    }
+
+    /// "SlimAdam-mean": derive one rule per layer type from depth-averaged
+    /// SNR, then apply it to every parameter of that type.
+    pub fn derive_depth_averaged(
+        summary: &SnrSummary,
+        cutoff: f64,
+        label: impl Into<String>,
+        lr: Option<f64>,
+    ) -> RuleSet {
+        let by_type = summary.by_layer_type();
+        let mut rules = BTreeMap::new();
+        for info in &summary.metas {
+            if info.is_vector() {
+                continue;
+            }
+            if let Some(avg) = by_type.get(&info.layer_type) {
+                let (k, snr) = avg.best();
+                if snr.is_finite() && snr >= cutoff {
+                    rules.insert(info.name.clone(), k);
+                }
+            }
+        }
+        RuleSet {
+            label: label.into(),
+            cutoff,
+            derived_at_lr: lr,
+            rules,
+        }
+    }
+
+    /// Per-tensor K modes in manifest parameter order.
+    pub fn modes_for(&self, man: &Manifest) -> Vec<KMode> {
+        man.params
+            .iter()
+            .map(|p| self.rules.get(&p.name).copied().unwrap_or(KMode::None))
+            .collect()
+    }
+
+    /// Stored second-moment elements under these rules.
+    pub fn v_elems(&self, man: &Manifest) -> usize {
+        man.params
+            .iter()
+            .map(|p| v_len(p, self.rules.get(&p.name).copied().unwrap_or(KMode::None)))
+            .sum()
+    }
+
+    /// Fraction of Adam's second moments *saved* (Fig. 10 top).
+    pub fn saving(&self, man: &Manifest) -> f64 {
+        let adam: usize = man.total_param_elems();
+        1.0 - self.v_elems(man) as f64 / adam as f64
+    }
+
+    /// Differences against another rule set (paper Tables 1 and 2).
+    pub fn diff(&self, other: &RuleSet) -> Vec<RuleDiff> {
+        let mut names: Vec<&String> =
+            self.rules.keys().chain(other.rules.keys()).collect();
+        names.sort();
+        names.dedup();
+        names
+            .into_iter()
+            .filter_map(|name| {
+                let a = self.rules.get(name).copied().unwrap_or(KMode::None);
+                let b = other.rules.get(name).copied().unwrap_or(KMode::None);
+                if a != b {
+                    Some(RuleDiff {
+                        name: name.clone(),
+                        left: a,
+                        right: b,
+                    })
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut rules = Value::obj();
+        for (name, k) in &self.rules {
+            rules.set(name, k.as_str());
+        }
+        let mut v = Value::obj();
+        v.set("label", self.label.clone())
+            .set("cutoff", self.cutoff)
+            .set("rules", rules);
+        if let Some(lr) = self.derived_at_lr {
+            v.set("derived_at_lr", lr);
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<RuleSet> {
+        let mut rules = BTreeMap::new();
+        for (name, kv) in v.get("rules")?.as_obj()? {
+            let s = kv.as_str()?;
+            let k = if let Some(n) = s.strip_prefix("blocks") {
+                KMode::Blocks(n.parse().context("blocks count")?)
+            } else {
+                KMode::parse(s)?
+            };
+            rules.insert(name.clone(), k);
+        }
+        Ok(RuleSet {
+            label: v.get("label")?.as_str()?.to_string(),
+            cutoff: v.get("cutoff")?.as_f64()?,
+            derived_at_lr: v.opt("derived_at_lr").and_then(|x| x.as_f64().ok()),
+            rules,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().dump_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<RuleSet> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        RuleSet::from_json(&Value::parse(&text)?)
+    }
+}
+
+/// One rule difference (a row of Table 1 / Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuleDiff {
+    pub name: String,
+    pub left: KMode,
+    pub right: KMode,
+}
+
+/// Aggregate Table 3: the most common K per layer type across rule sets,
+/// flagging types whose K varies ("inconsistent trends" markers).
+pub fn recommend(
+    rulesets: &[(&RuleSet, &Manifest)],
+) -> BTreeMap<String, (KMode, bool)> {
+    let mut votes: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    for (rs, man) in rulesets {
+        for p in &man.params {
+            if p.is_vector() {
+                continue;
+            }
+            let k = rs.rules.get(&p.name).copied().unwrap_or(KMode::None);
+            *votes
+                .entry(p.layer_type.clone())
+                .or_default()
+                .entry(k.as_str())
+                .or_default() += 1;
+        }
+    }
+    votes
+        .into_iter()
+        .map(|(lt, dist)| {
+            let total: usize = dist.values().sum();
+            let (best_k, best_n) = dist
+                .iter()
+                .max_by_key(|(_, &n)| n)
+                .map(|(k, &n)| (k.clone(), n))
+                .unwrap();
+            let k = if let Some(n) = best_k.strip_prefix("blocks") {
+                KMode::Blocks(n.parse().unwrap_or(1))
+            } else {
+                KMode::parse(&best_k).unwrap_or(KMode::None)
+            };
+            let inconsistent = best_n * 4 < total * 3; // < 75% agreement
+            (lt, (k, inconsistent))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamInfo;
+    use crate::snr::{SnrAvg, SnrSummary};
+    use crate::tensor::Init;
+
+    fn info(name: &str, lt: &str, shape: &[usize], depth: i64) -> ParamInfo {
+        ParamInfo {
+            name: name.into(),
+            shape: shape.to_vec(),
+            layer_type: lt.into(),
+            depth,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: true,
+            fan_out_axis: 0,
+        }
+    }
+
+    fn manifest2() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "kind": "grad_step",
+          "model": {"name": "t", "family": "gpt", "vocab": 64},
+          "params": [
+            {"name": "q", "shape": [8, 8], "layer_type": "attn_q", "depth": 0,
+             "init_mitchell": {"scheme": "zeros"}, "init_default": {"scheme": "zeros"},
+             "wd": true, "fan_out_axis": 0},
+            {"name": "ln", "shape": [8], "layer_type": "ln_attn", "depth": 0,
+             "init_mitchell": {"scheme": "ones"}, "init_default": {"scheme": "ones"},
+             "wd": false, "fan_out_axis": 0}
+          ],
+          "batch": [{"name": "x", "shape": [2, 4], "dtype": "s32"}],
+          "inputs": ["param:q", "param:ln", "batch:x"],
+          "outputs": ["loss", "grad:q", "grad:ln"]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn avg(fo: f64, fi: f64, both: f64) -> SnrAvg {
+        SnrAvg {
+            fan_out: fo,
+            fan_in: fi,
+            both,
+            n: 5,
+        }
+    }
+
+    #[test]
+    fn derive_picks_argmax_above_cutoff() {
+        let metas = vec![info("q", "attn_q", &[8, 8], 0), info("ln", "ln_attn", &[8], 0)];
+        let summary = SnrSummary {
+            per_param: vec![avg(0.5, 3.0, 1.2), avg(9.0, 9.0, 9.0)],
+            metas,
+        };
+        let rs = RuleSet::derive(&summary, 1.0, "t", Some(3e-4));
+        assert_eq!(rs.rules.get("q"), Some(&KMode::FanIn));
+        assert!(!rs.rules.contains_key("ln")); // vector skipped
+
+        let rs_hi = RuleSet::derive(&summary, 5.0, "t", None);
+        assert!(!rs_hi.rules.contains_key("q")); // cutoff excludes
+    }
+
+    #[test]
+    fn depth_averaged_unifies_types() {
+        let metas = vec![
+            info("h0.q", "attn_q", &[8, 8], 0),
+            info("h1.q", "attn_q", &[8, 8], 1),
+        ];
+        // layer 0 prefers fan_in (strongly), layer 1 weakly prefers fan_out;
+        // the depth mean prefers fan_in for both.
+        let summary = SnrSummary {
+            per_param: vec![avg(0.5, 10.0, 0.1), avg(1.4, 1.2, 0.1)],
+            metas,
+        };
+        let per_layer = RuleSet::derive(&summary, 1.0, "pl", None);
+        assert_eq!(per_layer.rules.get("h0.q"), Some(&KMode::FanIn));
+        assert_eq!(per_layer.rules.get("h1.q"), Some(&KMode::FanOut));
+        let mean = RuleSet::derive_depth_averaged(&summary, 1.0, "m", None);
+        assert_eq!(mean.rules.get("h0.q"), Some(&KMode::FanIn));
+        assert_eq!(mean.rules.get("h1.q"), Some(&KMode::FanIn));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let metas = vec![info("q", "attn_q", &[8, 8], 0)];
+        let summary = SnrSummary {
+            per_param: vec![avg(0.5, 3.0, 1.2)],
+            metas,
+        };
+        let rs = RuleSet::derive(&summary, 1.0, "rt", Some(1e-4));
+        let back = RuleSet::from_json(&rs.to_json()).unwrap();
+        assert_eq!(back, rs);
+    }
+
+    #[test]
+    fn table3_covers_gpt_layers() {
+        let man = manifest2();
+        let rs = RuleSet::table3_default(&man);
+        assert_eq!(rs.rules.get("q"), Some(&KMode::FanIn));
+        assert!(!rs.rules.contains_key("ln"));
+        let modes = rs.modes_for(&man);
+        assert_eq!(modes, vec![KMode::FanIn, KMode::None]);
+    }
+
+    #[test]
+    fn savings_math() {
+        let man = manifest2();
+        let rs = RuleSet::table3_default(&man);
+        // q: 8x8 -> 8 (fan_in); ln: 8 uncompressed. total v = 16 of 72.
+        assert_eq!(rs.v_elems(&man), 16);
+        assert!((rs.saving(&man) - (1.0 - 16.0 / 72.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diff_reports_changes() {
+        let metas = vec![info("q", "attn_q", &[8, 8], 0)];
+        let s1 = SnrSummary {
+            per_param: vec![avg(0.5, 3.0, 0.2)],
+            metas: metas.clone(),
+        };
+        let s2 = SnrSummary {
+            per_param: vec![avg(3.0, 0.5, 0.2)],
+            metas,
+        };
+        let a = RuleSet::derive(&s1, 1.0, "a", None);
+        let b = RuleSet::derive(&s2, 1.0, "b", None);
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].left, KMode::FanIn);
+        assert_eq!(d[0].right, KMode::FanOut);
+        assert!(a.diff(&a).is_empty());
+    }
+
+    #[test]
+    fn recommend_majority_and_inconsistency() {
+        let man = manifest2();
+        let mut r1 = RuleSet::table3_default(&man);
+        let r2 = RuleSet::table3_default(&man);
+        let r3 = RuleSet::table3_default(&man);
+        let recs = recommend(&[(&r1, &man), (&r2, &man), (&r3, &man)]);
+        assert_eq!(recs["attn_q"], (KMode::FanIn, false));
+        // flip one -> 2/3 agreement < 75% -> inconsistent flag
+        r1.rules.insert("q".into(), KMode::FanOut);
+        let recs = recommend(&[(&r1, &man), (&r2, &man), (&r3, &man)]);
+        assert!(recs["attn_q"].1);
+    }
+}

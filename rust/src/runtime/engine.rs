@@ -1,0 +1,355 @@
+//! Execution engines over compiled PJRT executables.
+//!
+//! * [`GradEngine`] — split engine: the artifact computes
+//!   `(loss, grads...) = grad_step(params..., batch...)` and the Rust
+//!   [`crate::optim`] family applies the update. This is the analysis /
+//!   sweep path: optimizer rules change without re-lowering HLO.
+//! * [`TrainEngine`] — fused engine: the artifact is the whole
+//!   `train_step` (fwd + bwd + clip + Pallas fused update) and optimizer
+//!   state lives in PJRT literals that are fed straight back into the
+//!   next dispatch — the production hot path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::tensor::Tensor;
+
+use super::literal::{
+    f32_literal, i32_literal, literal_to_tensor, scalar_f32, tensor_to_literal,
+};
+use super::manifest::Manifest;
+
+/// Create the PJRT CPU client. The `xla` wrapper types are not `Send`, so
+/// each worker thread creates its own client (cheap for CPU).
+pub fn cpu_client() -> Result<PjRtClient> {
+    PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))
+}
+
+/// One batch input in host form.
+#[derive(Debug, Clone)]
+pub enum BatchData {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+/// A loaded (not yet compiled) artifact: HLO text + manifest.
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub hlo_path: PathBuf,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.hlo.txt` + `<dir>/<name>.manifest.json`.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Artifact> {
+        let dir = dir.as_ref();
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let man_path = dir.join(format!("{name}.manifest.json"));
+        if !hlo_path.exists() {
+            bail!(
+                "artifact {name:?} not found in {dir:?} — run `make artifacts`"
+            );
+        }
+        let manifest = Manifest::load(&man_path)?;
+        manifest.validate()?;
+        Ok(Artifact { manifest, hlo_path })
+    }
+
+    /// Compile on the given client.
+    pub fn compile(&self, client: &PjRtClient) -> Result<Compiled> {
+        let proto = xla::HloModuleProto::from_text_file(
+            self.hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {:?}: {e}", self.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {:?}: {e}", self.hlo_path))?;
+        Ok(Compiled {
+            exe,
+            manifest: self.manifest.clone(),
+        })
+    }
+}
+
+/// A compiled executable plus its manifest.
+pub struct Compiled {
+    exe: PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl Compiled {
+    /// Execute and untuple the (single, tupled) output.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.manifest.n_inputs(),
+            "expected {} inputs, got {}",
+            self.manifest.n_inputs(),
+            inputs.len()
+        );
+        let out = self
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.manifest.model_name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("syncing output: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling output: {e}"))
+    }
+}
+
+fn batch_to_literal(data: &BatchData, shape: &[usize]) -> Result<Literal> {
+    match data {
+        BatchData::I32(v) => i32_literal(v, shape),
+        BatchData::F32(v) => f32_literal(v, shape),
+    }
+}
+
+/// Split engine: HLO computes loss+grads, Rust owns the optimizer.
+pub struct GradEngine {
+    compiled: Compiled,
+}
+
+impl GradEngine {
+    pub fn new(dir: impl AsRef<Path>, model: &str, client: &PjRtClient) -> Result<GradEngine> {
+        let art = Artifact::load(dir, &format!("{model}.grad"))?;
+        anyhow::ensure!(art.manifest.kind == "grad_step");
+        Ok(GradEngine {
+            compiled: art.compile(client)?,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.compiled.manifest
+    }
+
+    /// One gradient evaluation: returns `(loss, grads)` in param order.
+    pub fn step(&self, params: &[Tensor], batch: &[BatchData]) -> Result<(f32, Vec<Tensor>)> {
+        let man = &self.compiled.manifest;
+        anyhow::ensure!(params.len() == man.n_params(), "param count");
+        anyhow::ensure!(batch.len() == man.batch.len(), "batch count");
+
+        let mut inputs = Vec::with_capacity(man.n_inputs());
+        for t in params {
+            inputs.push(tensor_to_literal(t)?);
+        }
+        for (b, info) in batch.iter().zip(&man.batch) {
+            inputs.push(batch_to_literal(b, &info.shape)?);
+        }
+        let outs = self.compiled.run(&inputs)?;
+        let loss = super::literal::scalar_value(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()
+            .context("converting grads")?;
+        Ok((loss, grads))
+    }
+}
+
+/// Fused engine: one PJRT dispatch per training step; parameter and
+/// optimizer state stay in literals between steps.
+pub struct TrainEngine {
+    compiled: Compiled,
+    /// params..., m..., v... in manifest order
+    state: Vec<Literal>,
+    pub step_idx: usize,
+}
+
+/// Outputs of one fused step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+impl TrainEngine {
+    /// Load `<model>.train.<ruleset>` and initialize state.
+    ///
+    /// `init_scheme` is "mitchell" or "default" (paper §4.3); `seed` fixes
+    /// the parameter draw.
+    pub fn new(
+        dir: impl AsRef<Path>,
+        model: &str,
+        ruleset: &str,
+        client: &PjRtClient,
+        init_scheme: &str,
+        seed: u64,
+    ) -> Result<TrainEngine> {
+        let art = Artifact::load(dir, &format!("{model}.train.{ruleset}"))?;
+        anyhow::ensure!(art.manifest.kind == "train_step");
+        let compiled = art.compile(client)?;
+        let man = &compiled.manifest;
+
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut state = Vec::with_capacity(3 * man.n_params());
+        for p in &man.params {
+            let init = match init_scheme {
+                "mitchell" => &p.init_mitchell,
+                "default" => &p.init_default,
+                s => bail!("unknown init scheme {s:?}"),
+            };
+            state.push(tensor_to_literal(&init.materialize(&p.shape, &mut rng))?);
+        }
+        for p in &man.params {
+            state.push(tensor_to_literal(&Tensor::zeros(&p.shape))?);
+        }
+        let v_shapes = man
+            .v_shapes
+            .clone()
+            .ok_or_else(|| anyhow!("train_step manifest missing v_shapes"))?;
+        for vs in &v_shapes {
+            state.push(tensor_to_literal(&Tensor::zeros(vs))?);
+        }
+        Ok(TrainEngine {
+            compiled,
+            state,
+            step_idx: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.compiled.manifest
+    }
+
+    /// Restore parameters from host tensors (fine-tuning / checkpoints),
+    /// resetting optimizer state.
+    pub fn load_params(&mut self, params: &[Tensor]) -> Result<()> {
+        let man = &self.compiled.manifest;
+        anyhow::ensure!(params.len() == man.n_params());
+        for (i, t) in params.iter().enumerate() {
+            self.state[i] = tensor_to_literal(t)?;
+        }
+        Ok(())
+    }
+
+    /// One fused training step. `lr` is the already-scheduled rate.
+    pub fn step(&mut self, batch: &[BatchData], lr: f32) -> Result<StepStats> {
+        let man = &self.compiled.manifest;
+        self.step_idx += 1;
+        let n = man.n_params();
+
+        let mut inputs: Vec<Literal> = Vec::with_capacity(man.n_inputs());
+        // Move state in; it is replaced by the outputs below.
+        inputs.append(&mut self.state);
+        for (b, info) in batch.iter().zip(&man.batch) {
+            inputs.push(batch_to_literal(b, &info.shape)?);
+        }
+        inputs.push(scalar_f32(self.step_idx as f32));
+        inputs.push(scalar_f32(lr));
+
+        let mut outs = self.compiled.run(&inputs)?;
+        let loss = super::literal::scalar_value(&outs[0])?;
+        let grad_norm = super::literal::scalar_value(&outs[1])?;
+        // outs[2..2+3n] are the new params/m/v literals — keep them as the
+        // next step's state without any host conversion.
+        self.state = outs.drain(2..2 + 3 * n).collect();
+        Ok(StepStats { loss, grad_norm })
+    }
+
+    /// Snapshot current parameters to host tensors.
+    pub fn params(&self) -> Result<Vec<Tensor>> {
+        let n = self.compiled.manifest.n_params();
+        self.state[..n].iter().map(literal_to_tensor).collect()
+    }
+
+    /// Snapshot current second moments (reduced shapes) to host tensors.
+    pub fn second_moments(&self) -> Result<Vec<Tensor>> {
+        let n = self.compiled.manifest.n_params();
+        self.state[2 * n..3 * n]
+            .iter()
+            .map(literal_to_tensor)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from("artifacts");
+        if p.join("linear2_v64.grad.hlo.txt").exists() {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn artifact_missing_is_helpful() {
+        let err = match Artifact::load("artifacts", "nope.grad") {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn grad_engine_runs_linear2() {
+        let Some(dir) = artifacts_dir() else { return };
+        let client = cpu_client().unwrap();
+        let eng = GradEngine::new(&dir, "linear2_v64", &client).unwrap();
+        let man = eng.manifest();
+        let mut rng = crate::rng::Rng::new(1);
+        let params: Vec<Tensor> = man
+            .params
+            .iter()
+            .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+            .collect();
+        let batch: Vec<BatchData> = man
+            .batch
+            .iter()
+            .map(|b| {
+                let n: usize = b.shape.iter().product();
+                BatchData::I32((0..n).map(|i| (i % 64) as i32).collect())
+            })
+            .collect();
+        let (loss, grads) = eng.step(&params, &batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), man.n_params());
+        for (g, p) in grads.iter().zip(&man.params) {
+            assert_eq!(g.shape, p.shape);
+        }
+    }
+
+    #[test]
+    fn train_engine_fused_decreases_loss() {
+        let Some(dir) = artifacts_dir() else { return };
+        if !dir.join("gpt_nano.train.adam.hlo.txt").exists() {
+            return;
+        }
+        let client = cpu_client().unwrap();
+        let mut eng =
+            TrainEngine::new(&dir, "gpt_nano", "adam", &client, "mitchell", 3).unwrap();
+        let man = eng.manifest().clone();
+        let mut rng = crate::rng::Rng::new(4);
+        let batch: Vec<BatchData> = man
+            .batch
+            .iter()
+            .map(|b| {
+                let n: usize = b.shape.iter().product();
+                let bound = man.token_bound() as u64;
+                BatchData::I32(
+                    (0..n).map(|_| rng.below(bound) as i32).collect(),
+                )
+            })
+            .collect();
+        let first = eng.step(&batch, 1e-3).unwrap();
+        let mut last = first;
+        for _ in 0..10 {
+            last = eng.step(&batch, 1e-3).unwrap();
+        }
+        assert!(first.loss.is_finite());
+        assert!(
+            last.loss < first.loss,
+            "fused step did not reduce loss: {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(last.grad_norm.is_finite());
+    }
+}

@@ -1,0 +1,119 @@
+//! Tensor / batch ↔ `xla::Literal` conversion helpers.
+//!
+//! The hot path preallocates literals once and refills them in place with
+//! `copy_raw_from` (no per-step allocation); see `refill_f32` / `refill_i32`.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::tensor::Tensor;
+
+/// Host f32 tensor → literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let flat = Literal::vec1(&t.data);
+    if t.shape.len() == 1 {
+        Ok(flat)
+    } else {
+        flat.reshape(&dims).context("reshaping literal")
+    }
+}
+
+/// Literal → host f32 tensor (shape taken from the literal).
+pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// i32 batch array → literal of the given shape.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let flat = Literal::vec1(data);
+    if shape.len() == 1 {
+        Ok(flat)
+    } else {
+        flat.reshape(&dims).context("reshaping i32 literal")
+    }
+}
+
+/// f32 batch array → literal of the given shape.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let flat = Literal::vec1(data);
+    if shape.len() == 1 {
+        Ok(flat)
+    } else {
+        flat.reshape(&dims).context("reshaping f32 literal")
+    }
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// In-place refill of an existing f32 literal (hot path, no allocation).
+pub fn refill_f32(lit: &mut Literal, data: &[f32]) -> Result<()> {
+    lit.copy_raw_from(data).context("refilling f32 literal")
+}
+
+/// In-place refill of an existing i32 literal (hot path, no allocation).
+pub fn refill_i32(lit: &mut Literal, data: &[i32]) -> Result<()> {
+    lit.copy_raw_from(data).context("refilling i32 literal")
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_value(l: &Literal) -> Result<f32> {
+    l.get_first_element::<f32>().context("reading scalar")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn vector_roundtrip() {
+        let t = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]);
+        let l = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_tensor(&l).unwrap(), t);
+    }
+
+    #[test]
+    fn conv_shape_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2, 3, 1], (0..12).map(|x| x as f32).collect());
+        let l = tensor_to_literal(&t).unwrap();
+        assert_eq!(literal_to_tensor(&l).unwrap(), t);
+    }
+
+    #[test]
+    fn i32_batch() {
+        let l = i32_literal(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn refill_in_place() {
+        let t = Tensor::zeros(&[2, 2]);
+        let mut l = tensor_to_literal(&t).unwrap();
+        refill_f32(&mut l, &[9., 8., 7., 6.]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![9., 8., 7., 6.]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = scalar_f32(2.5);
+        assert_eq!(scalar_value(&l).unwrap(), 2.5);
+    }
+}

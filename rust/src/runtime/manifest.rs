@@ -1,0 +1,394 @@
+//! Artifact manifest parsing — the contract between `python/compile/aot.py`
+//! and the Rust runtime. The manifest pins the exact input/output ordering
+//! of the lowered HLO, per-parameter metadata (layer type, fan axes, init
+//! schemes, weight-decay flags) and, for fused train-step artifacts, the
+//! baked-in K modes / reduced V shapes and optimizer hyperparameters.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::tensor::Init;
+
+/// Sharing-dimension mode, the paper's K (Eq. 2).
+///
+/// `Blocks(n)` shares one second moment per contiguous block of rows in the
+/// matrix view (used by Adam-mini's per-attention-head partitioning; not
+/// produced by the Python side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KMode {
+    /// K = ∅: exact Adam.
+    None,
+    /// K = 0: average over the fan_out axis; V stored as (1, fan_in).
+    FanOut,
+    /// K = 1: average over the fan_in axis; V stored as (fan_out, 1).
+    FanIn,
+    /// K = (0, 1): one scalar per tensor (AdaLayer-style).
+    Both,
+    /// One scalar per contiguous row-block (Adam-mini per-head / per-neuron).
+    Blocks(usize),
+}
+
+impl KMode {
+    pub fn parse(s: &str) -> Result<KMode> {
+        Ok(match s {
+            "none" => KMode::None,
+            "fan_out" => KMode::FanOut,
+            "fan_in" => KMode::FanIn,
+            "both" | "all" => KMode::Both,
+            other => bail!("unknown k_mode {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> String {
+        match self {
+            KMode::None => "none".into(),
+            KMode::FanOut => "fan_out".into(),
+            KMode::FanIn => "fan_in".into(),
+            KMode::Both => "both".into(),
+            KMode::Blocks(n) => format!("blocks{n}"),
+        }
+    }
+
+    /// Stored V element count for a `(rows, cols)` matrix view.
+    pub fn v_elems(&self, rows: usize, cols: usize) -> usize {
+        match self {
+            KMode::None => rows * cols,
+            KMode::FanOut => cols,
+            KMode::FanIn => rows,
+            KMode::Both => 1,
+            KMode::Blocks(n) => *n,
+        }
+    }
+}
+
+/// Per-parameter metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub layer_type: String,
+    pub depth: i64,
+    pub init_mitchell: Init,
+    pub init_default: Init,
+    pub wd: bool,
+    pub fan_out_axis: usize,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_vector(&self) -> bool {
+        self.shape.len() <= 1
+    }
+
+    /// `(fan_out, fan_in)` dims of the matrix view.
+    pub fn matrix_dims(&self) -> (usize, usize) {
+        crate::tensor::Tensor::matrix_dims(&self.shape, self.fan_out_axis)
+    }
+
+    fn from_json(v: &Value) -> Result<ParamInfo> {
+        let shape = v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamInfo {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape,
+            layer_type: v.get("layer_type")?.as_str()?.to_string(),
+            depth: v.get("depth")?.as_i64()?,
+            init_mitchell: Init::from_json(v.get("init_mitchell")?)?,
+            init_default: Init::from_json(v.get("init_default")?)?,
+            wd: v.get("wd")?.as_bool()?,
+            fan_out_axis: v.get("fan_out_axis")?.as_usize()?,
+        })
+    }
+}
+
+/// Batch input descriptor.
+#[derive(Debug, Clone)]
+pub struct BatchInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "s32"
+}
+
+/// Optimizer hyperparameters baked into fused train-step artifacts.
+#[derive(Debug, Clone, Copy)]
+pub struct Hypers {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub clip_norm: f64,
+}
+
+impl Default for Hypers {
+    fn default() -> Self {
+        // Paper App. B.1 language-model defaults.
+        Hypers {
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            clip_norm: 1.0,
+        }
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kind: String, // "grad_step" | "train_step"
+    pub model_name: String,
+    pub family: String,
+    pub meta: Value,
+    pub params: Vec<ParamInfo>,
+    pub batch: Vec<BatchInfo>,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    /// Fused artifacts only:
+    pub k_modes: Option<Vec<KMode>>,
+    pub v_shapes: Option<Vec<Vec<usize>>>,
+    pub hypers: Option<Hypers>,
+    pub ruleset: Option<String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text).context("parsing manifest JSON")?;
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(ParamInfo::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let batch = v
+            .get("batch")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BatchInfo {
+                    name: b.get("name")?.as_str()?.to_string(),
+                    shape: b
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    dtype: b.get("dtype")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let strings = |key: &str| -> Result<Vec<String>> {
+            v.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect()
+        };
+        let meta = v.get("model")?.clone();
+
+        let k_modes = match v.opt("k_modes") {
+            Some(arr) => Some(
+                arr.as_arr()?
+                    .iter()
+                    .map(|x| KMode::parse(x.as_str()?))
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            None => None,
+        };
+        let v_shapes = match v.opt("v_shapes") {
+            Some(arr) => Some(
+                arr.as_arr()?
+                    .iter()
+                    .map(|x| {
+                        x.as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<Vec<_>>>()
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            None => None,
+        };
+        let hypers = match v.opt("hypers") {
+            Some(h) => Some(Hypers {
+                beta1: h.get("beta1")?.as_f64()?,
+                beta2: h.get("beta2")?.as_f64()?,
+                eps: h.get("eps")?.as_f64()?,
+                weight_decay: h.get("weight_decay")?.as_f64()?,
+                clip_norm: h.get("clip_norm")?.as_f64()?,
+            }),
+            None => None,
+        };
+
+        Ok(Manifest {
+            kind: v.get("kind")?.as_str()?.to_string(),
+            model_name: meta.get("name")?.as_str()?.to_string(),
+            family: meta.get("family")?.as_str()?.to_string(),
+            meta,
+            params,
+            batch,
+            inputs: strings("inputs")?,
+            outputs: strings("outputs")?,
+            k_modes,
+            v_shapes,
+            hypers,
+            ruleset: v
+                .opt("ruleset")
+                .and_then(|r| r.as_str().ok().map(|s| s.to_string())),
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Model vocab / class count (for batch synthesis bounds).
+    pub fn token_bound(&self) -> usize {
+        self.meta
+            .opt("vocab")
+            .or_else(|| self.meta.opt("classes"))
+            .and_then(|v| v.as_usize().ok())
+            .unwrap_or(2)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch.first().map(|b| b.shape[0]).unwrap_or(1)
+    }
+
+    /// Expected input literal count for this artifact.
+    pub fn n_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Sanity-check input/output layout against the manifest kind.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_params();
+        match self.kind.as_str() {
+            "grad_step" => {
+                anyhow::ensure!(
+                    self.inputs.len() == n + self.batch.len(),
+                    "grad_step input count mismatch"
+                );
+                anyhow::ensure!(
+                    self.outputs.len() == 1 + n,
+                    "grad_step output count mismatch"
+                );
+            }
+            "train_step" => {
+                anyhow::ensure!(
+                    self.inputs.len() == 3 * n + self.batch.len() + 2,
+                    "train_step input count mismatch"
+                );
+                anyhow::ensure!(
+                    self.outputs.len() == 2 + 3 * n,
+                    "train_step output count mismatch"
+                );
+                anyhow::ensure!(self.k_modes.as_ref().map(|k| k.len()) == Some(n));
+                anyhow::ensure!(self.v_shapes.as_ref().map(|v| v.len()) == Some(n));
+            }
+            k => bail!("unknown manifest kind {k:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "kind": "grad_step",
+      "model": {"name": "m", "family": "gpt", "vocab": 512, "batch": 4},
+      "params": [
+        {"name": "w", "shape": [4, 8], "layer_type": "attn_q", "depth": 0,
+         "init_mitchell": {"scheme": "normal", "std": 0.02},
+         "init_default": {"scheme": "uniform", "limit": 0.35},
+         "wd": true, "fan_out_axis": 0},
+        {"name": "b", "shape": [4], "layer_type": "ln_attn", "depth": 0,
+         "init_mitchell": {"scheme": "ones"},
+         "init_default": {"scheme": "ones"},
+         "wd": false, "fan_out_axis": 0}
+      ],
+      "batch": [{"name": "x", "shape": [4, 16], "dtype": "s32"}],
+      "inputs": ["param:w", "param:b", "batch:x"],
+      "outputs": ["loss", "grad:w", "grad:b"]
+    }"#;
+
+    #[test]
+    fn parse_grad_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.kind, "grad_step");
+        assert_eq!(m.model_name, "m");
+        assert_eq!(m.n_params(), 2);
+        assert_eq!(m.params[0].matrix_dims(), (4, 8));
+        assert!(m.params[1].is_vector());
+        assert_eq!(m.token_bound(), 512);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn kmode_roundtrip() {
+        for s in ["none", "fan_out", "fan_in", "both"] {
+            let k = KMode::parse(s).unwrap();
+            if s == "both" {
+                assert_eq!(k, KMode::Both);
+            } else {
+                assert_eq!(k.as_str(), s);
+            }
+        }
+        assert!(KMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn kmode_v_elems() {
+        assert_eq!(KMode::None.v_elems(4, 8), 32);
+        assert_eq!(KMode::FanOut.v_elems(4, 8), 8);
+        assert_eq!(KMode::FanIn.v_elems(4, 8), 4);
+        assert_eq!(KMode::Both.v_elems(4, 8), 1);
+        assert_eq!(KMode::Blocks(2).v_elems(4, 8), 2);
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let mut m = Manifest::parse(MINI).unwrap();
+        m.outputs.pop();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_manifests() {
+        // Loaded only when artifacts exist (make artifacts ran).
+        let dir = std::path::Path::new("artifacts");
+        if !dir.exists() {
+            return;
+        }
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().map(|e| e == "json").unwrap_or(false)
+                && path.to_string_lossy().contains("manifest")
+            {
+                let m = Manifest::load(&path)
+                    .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+                m.validate().unwrap_or_else(|e| panic!("{path:?}: {e}"));
+            }
+        }
+    }
+}

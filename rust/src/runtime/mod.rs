@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + JSON manifest), compiles them on the PJRT CPU client and
+//! exposes typed step functions to the training loop.
+//!
+//! Python never runs here — the artifacts are self-contained. HLO *text*
+//! is the interchange format because jax >= 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md §7 and /opt/xla-example/README.md).
+//!
+//! Note on output structure: the mlir→XlaComputation conversion tuples the
+//! root, and PJRT 0.5.1 returns a single tuple buffer, so every step does
+//! one device→host literal sync + tuple decomposition. On the CPU PJRT
+//! backend "device" memory is host memory, so this is a memcpy, not a
+//! transfer; the perf pass (EXPERIMENTS.md §Perf) quantifies it.
+
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+
+pub use engine::{Artifact, GradEngine, TrainEngine};
+pub use manifest::{BatchInfo, KMode, Manifest, ParamInfo};

@@ -1,0 +1,461 @@
+//! The paper's SNR framework (Eq. 3 / Eq. 4): quantifies when Adam's
+//! second-moment tensors can be replaced by their means along sharing
+//! dimensions K.
+//!
+//! ```text
+//! SNR_K(V) = E_{K'}[ (E_K[V])^2 / Var_K[V] ]          (Eq. 3)
+//! ```
+//!
+//! `SNR_K >~ 1` — entries along K are described by their mean (compressible);
+//! `SNR_K <~ 1` — individual entries carry information (incompressible).
+//!
+//! [`SnrProbe`] records trajectories at the paper's measurement cadence
+//! (every 100 steps for the first 1k, then every 1k — scaled for this
+//! testbed) and [`SnrSummary`] holds the Eq. 4 time averages that drive
+//! rule derivation in [`crate::rules`].
+
+use std::collections::BTreeMap;
+
+use crate::optim::Optimizer;
+use crate::runtime::manifest::{KMode, ParamInfo};
+use crate::tensor::Tensor;
+
+/// Variance floor: a constant slice has zero variance and is perfectly
+/// compressible; the floor maps it to a very large finite SNR (same
+/// convention as the Python oracle ref.py).
+pub const VAR_FLOOR: f64 = 1e-30;
+
+/// SNR_K of a matrix view (rows = fan_out, cols = fan_in), Eq. 3.
+///
+/// * `KMode::FanOut` reduces over rows (axis 0); the outer mean runs over
+///   columns.
+/// * `KMode::FanIn` reduces over columns (axis 1); outer mean over rows.
+/// * `KMode::Both` reduces over everything (single group).
+pub fn snr_of_view(rows: usize, cols: usize, data: &[f32], k: KMode) -> f64 {
+    debug_assert_eq!(rows * cols, data.len());
+    let group = |s1: f64, s2: f64, n: f64| -> f64 {
+        let mean = s1 / n;
+        let var = (s2 / n - mean * mean).max(VAR_FLOOR);
+        mean * mean / var
+    };
+    match k {
+        KMode::FanOut => {
+            // per-column moments over rows
+            let mut s1 = vec![0.0f64; cols];
+            let mut s2 = vec![0.0f64; cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    let x = data[r * cols + c] as f64;
+                    s1[c] += x;
+                    s2[c] += x * x;
+                }
+            }
+            let n = rows as f64;
+            (0..cols).map(|c| group(s1[c], s2[c], n)).sum::<f64>() / cols as f64
+        }
+        KMode::FanIn => {
+            let n = cols as f64;
+            (0..rows)
+                .map(|r| {
+                    let row = &data[r * cols..(r + 1) * cols];
+                    let s1: f64 = row.iter().map(|&x| x as f64).sum();
+                    let s2: f64 = row.iter().map(|&x| (x as f64) * (x as f64)).sum();
+                    group(s1, s2, n)
+                })
+                .sum::<f64>()
+                / rows as f64
+        }
+        KMode::Both => {
+            let s1: f64 = data.iter().map(|&x| x as f64).sum();
+            let s2: f64 = data.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            group(s1, s2, (rows * cols) as f64)
+        }
+        KMode::None => f64::INFINITY, // no compression — SNR undefined/∞
+        KMode::Blocks(nb) => {
+            // mean over each row-block (Adam-mini-style partition)
+            let rows_per = (rows / nb).max(1);
+            let n = (rows_per * cols) as f64;
+            (0..nb)
+                .map(|b| {
+                    let lo = b * rows_per * cols;
+                    let hi = ((b + 1) * rows_per * cols).min(data.len());
+                    let blk = &data[lo..hi];
+                    let s1: f64 = blk.iter().map(|&x| x as f64).sum();
+                    let s2: f64 = blk.iter().map(|&x| (x as f64) * (x as f64)).sum();
+                    group(s1, s2, n)
+                })
+                .sum::<f64>()
+                / nb as f64
+        }
+    }
+}
+
+/// SNR triple for one tensor at one step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnrSample {
+    pub step: usize,
+    pub fan_out: f64,
+    pub fan_in: f64,
+    pub both: f64,
+}
+
+impl SnrSample {
+    pub fn get(&self, k: KMode) -> f64 {
+        match k {
+            KMode::FanOut => self.fan_out,
+            KMode::FanIn => self.fan_in,
+            KMode::Both => self.both,
+            _ => f64::NAN,
+        }
+    }
+}
+
+/// Measure the SNR triple of a (full-shape) second-moment tensor.
+pub fn measure(v: &Tensor, info: &ParamInfo) -> SnrSample {
+    let view = v.matrix_view(info.fan_out_axis);
+    let (r, c) = (view.rows, view.cols);
+    SnrSample {
+        step: 0,
+        fan_out: snr_of_view(r, c, &view.data, KMode::FanOut),
+        fan_in: snr_of_view(r, c, &view.data, KMode::FanIn),
+        both: snr_of_view(r, c, &view.data, KMode::Both),
+    }
+}
+
+/// Paper measurement cadence, scaled: the paper probes every 100 steps for
+/// the first 1000 and every 1000 after; our runs are ~10-50x shorter, so we
+/// probe every `early_every` for the first `early_until` steps and
+/// `late_every` after.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeSchedule {
+    pub early_every: usize,
+    pub early_until: usize,
+    pub late_every: usize,
+}
+
+impl Default for ProbeSchedule {
+    fn default() -> Self {
+        ProbeSchedule {
+            early_every: 10,
+            early_until: 100,
+            late_every: 50,
+        }
+    }
+}
+
+impl ProbeSchedule {
+    pub fn should_probe(&self, step: usize) -> bool {
+        if step == 0 {
+            return false;
+        }
+        if step <= self.early_until {
+            step % self.early_every == 0
+        } else {
+            step % self.late_every == 0
+        }
+    }
+}
+
+/// Trajectory recorder over a training run.
+#[derive(Debug, Default, Clone)]
+pub struct SnrProbe {
+    /// param index -> samples over time
+    pub records: BTreeMap<usize, Vec<SnrSample>>,
+}
+
+impl SnrProbe {
+    pub fn new() -> SnrProbe {
+        SnrProbe::default()
+    }
+
+    /// Record the current second moments of `opt` (skips optimizers without
+    /// an Adam-style V, e.g. Lion/SGD-M).
+    pub fn record(&mut self, step: usize, opt: &dyn Optimizer, metas: &[ParamInfo]) {
+        for (i, info) in metas.iter().enumerate() {
+            if let Some(v) = opt.second_moment(i) {
+                let mut s = measure(&v, info);
+                s.step = step;
+                self.records.entry(i).or_default().push(s);
+            }
+        }
+    }
+
+    /// Record from already-materialized V tensors (fused engine path).
+    pub fn record_tensors(&mut self, step: usize, vs: &[Tensor], metas: &[ParamInfo]) {
+        for (i, (v, info)) in vs.iter().zip(metas).enumerate() {
+            let mut s = measure(v, info);
+            s.step = step;
+            self.records.entry(i).or_default().push(s);
+        }
+    }
+
+    /// Eq. 4 time-averaged SNR per parameter.
+    pub fn summary(&self, metas: &[ParamInfo]) -> SnrSummary {
+        let per_param = metas
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let samples = self.records.get(&i).map(|v| v.as_slice()).unwrap_or(&[]);
+                average(samples)
+            })
+            .collect();
+        SnrSummary {
+            per_param,
+            metas: metas.to_vec(),
+        }
+    }
+}
+
+fn average(samples: &[SnrSample]) -> SnrAvg {
+    if samples.is_empty() {
+        return SnrAvg {
+            fan_out: f64::NAN,
+            fan_in: f64::NAN,
+            both: f64::NAN,
+            n: 0,
+        };
+    }
+    let n = samples.len() as f64;
+    SnrAvg {
+        fan_out: samples.iter().map(|s| s.fan_out).sum::<f64>() / n,
+        fan_in: samples.iter().map(|s| s.fan_in).sum::<f64>() / n,
+        both: samples.iter().map(|s| s.both).sum::<f64>() / n,
+        n: samples.len(),
+    }
+}
+
+/// Time-averaged SNR triple (Eq. 4).
+#[derive(Debug, Clone, Copy)]
+pub struct SnrAvg {
+    pub fan_out: f64,
+    pub fan_in: f64,
+    pub both: f64,
+    pub n: usize,
+}
+
+impl SnrAvg {
+    pub fn get(&self, k: KMode) -> f64 {
+        match k {
+            KMode::FanOut => self.fan_out,
+            KMode::FanIn => self.fan_in,
+            KMode::Both => self.both,
+            _ => f64::NAN,
+        }
+    }
+
+    /// `(best K, its SNR)` among the three compression modes.
+    pub fn best(&self) -> (KMode, f64) {
+        let mut best = (KMode::FanOut, self.fan_out);
+        if self.fan_in > best.1 {
+            best = (KMode::FanIn, self.fan_in);
+        }
+        if self.both > best.1 {
+            best = (KMode::Both, self.both);
+        }
+        best
+    }
+}
+
+/// Eq. 4 summary over a whole model.
+#[derive(Debug, Clone)]
+pub struct SnrSummary {
+    pub per_param: Vec<SnrAvg>,
+    pub metas: Vec<ParamInfo>,
+}
+
+impl SnrSummary {
+    /// Average the summary over depth for each layer type (the paper's
+    /// Fig. 3-style aggregation; also the SlimAdam-mean rule basis).
+    pub fn by_layer_type(&self) -> BTreeMap<String, SnrAvg> {
+        let mut groups: BTreeMap<String, Vec<SnrAvg>> = BTreeMap::new();
+        for (avg, info) in self.per_param.iter().zip(&self.metas) {
+            if info.is_vector() {
+                continue;
+            }
+            groups
+                .entry(info.layer_type.clone())
+                .or_default()
+                .push(*avg);
+        }
+        groups
+            .into_iter()
+            .map(|(k, v)| {
+                let n = v.len() as f64;
+                (
+                    k,
+                    SnrAvg {
+                        fan_out: v.iter().map(|a| a.fan_out).sum::<f64>() / n,
+                        fan_in: v.iter().map(|a| a.fan_in).sum::<f64>() / n,
+                        both: v.iter().map(|a| a.both).sum::<f64>() / n,
+                        n: v.len(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> crate::json::Value {
+        let mut arr = Vec::new();
+        for (avg, info) in self.per_param.iter().zip(&self.metas) {
+            let mut o = crate::json::Value::obj();
+            o.set("name", info.name.clone())
+                .set("layer_type", info.layer_type.clone())
+                .set("depth", info.depth)
+                .set("fan_out", finite(avg.fan_out))
+                .set("fan_in", finite(avg.fan_in))
+                .set("both", finite(avg.both))
+                .set("samples", avg.n);
+            arr.push(o);
+        }
+        crate::json::Value::Arr(arr)
+    }
+}
+
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        -1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Init;
+
+    fn info(shape: &[usize]) -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            shape: shape.to_vec(),
+            layer_type: "attn_q".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: true,
+            fan_out_axis: 0,
+        }
+    }
+
+    #[test]
+    fn constant_matrix_has_huge_snr() {
+        let data = vec![0.3f32; 24];
+        for k in [KMode::FanOut, KMode::FanIn, KMode::Both] {
+            assert!(snr_of_view(4, 6, &data, k) > 1e6, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn heavy_row_kills_fan_out_snr() {
+        // one dominant row -> columns have huge variance relative to mean
+        let mut data = vec![1e-3f32; 8 * 4];
+        for c in 0..4 {
+            data[c] = 100.0;
+        }
+        let fan_out = snr_of_view(8, 4, &data, KMode::FanOut);
+        let fan_in = snr_of_view(8, 4, &data, KMode::FanIn);
+        assert!(fan_out < 1.0, "{fan_out}");
+        // rows themselves are constant -> fan_in SNR huge
+        assert!(fan_in > 1e3, "{fan_in}");
+    }
+
+    #[test]
+    fn matches_two_pass_reference() {
+        // independent naive implementation as oracle
+        let mut rng = crate::rng::Rng::new(7);
+        let rows = 13;
+        let cols = 9;
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| (rng.normal().abs() + 1e-3) as f32)
+            .collect();
+        // fan_in oracle
+        let mut acc = 0.0f64;
+        for r in 0..rows {
+            let row: Vec<f64> = (0..cols).map(|c| data[r * cols + c] as f64).collect();
+            let mean = row.iter().sum::<f64>() / cols as f64;
+            let var = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / cols as f64;
+            acc += mean * mean / var.max(VAR_FLOOR);
+        }
+        let want = acc / rows as f64;
+        let got = snr_of_view(rows, cols, &data, KMode::FanIn);
+        assert!((got - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn permutation_invariance_along_compressed_dim() {
+        // SNR_fan_in must be invariant to permuting columns
+        crate::proptest::check(20, |g| {
+            let rows = g.usize(2, 10);
+            let cols = g.usize(2, 10);
+            let data: Vec<f32> = (0..rows * cols)
+                .map(|_| g.f32(1e-4, 1.0))
+                .collect();
+            let base = snr_of_view(rows, cols, &data, KMode::FanIn);
+            // swap two columns
+            let (c1, c2) = (g.usize(0, cols - 1), g.usize(0, cols - 1));
+            let mut perm = data.clone();
+            for r in 0..rows {
+                perm.swap(r * cols + c1, r * cols + c2);
+            }
+            let after = snr_of_view(rows, cols, &perm, KMode::FanIn);
+            crate::proptest::prop_assert(
+                crate::proptest::close(base, after, 1e-9, 1e-12),
+                format!("{base} vs {after}"),
+            )
+        });
+    }
+
+    #[test]
+    fn probe_and_summary() {
+        use crate::optim::adamk::AdamK;
+        use crate::optim::{Hypers, KMode as K};
+        let meta = info(&[6, 8]);
+        let mut opt = AdamK::new("adam", vec![meta.clone()], vec![K::None], Hypers::default());
+        let mut probe = SnrProbe::new();
+        let mut rng = crate::rng::Rng::new(1);
+        let mut params = vec![Tensor::from_vec(
+            &[6, 8],
+            (0..48).map(|_| rng.normal() as f32).collect(),
+        )];
+        for t in 1..=20 {
+            let g = Tensor::from_vec(&[6, 8], (0..48).map(|_| rng.normal() as f32).collect());
+            opt.step(&mut params, &[g], t, 1e-3);
+            if t % 5 == 0 {
+                probe.record(t, &opt, std::slice::from_ref(&meta));
+            }
+        }
+        let summary = probe.summary(std::slice::from_ref(&meta));
+        assert_eq!(summary.per_param.len(), 1);
+        let avg = summary.per_param[0];
+        assert_eq!(avg.n, 4);
+        assert!(avg.fan_out.is_finite() && avg.fan_out > 0.0);
+        // isotropic gaussian grads: all modes compressible, SNR >> 1
+        assert!(avg.both > 1.0);
+    }
+
+    #[test]
+    fn schedule_cadence() {
+        let s = ProbeSchedule::default();
+        assert!(!s.should_probe(0));
+        assert!(s.should_probe(10));
+        assert!(!s.should_probe(15));
+        assert!(s.should_probe(100));
+        assert!(!s.should_probe(110));
+        assert!(s.should_probe(150));
+    }
+
+    #[test]
+    fn by_layer_type_averages_depth() {
+        let metas = vec![
+            ParamInfo { depth: 0, ..info(&[4, 4]) },
+            ParamInfo { depth: 1, ..info(&[4, 4]) },
+        ];
+        let mut probe = SnrProbe::new();
+        let vs = vec![Tensor::ones(&[4, 4]), Tensor::full(&[4, 4], 2.0)];
+        probe.record_tensors(1, &vs, &metas);
+        let by_type = probe.summary(&metas).by_layer_type();
+        assert_eq!(by_type.len(), 1);
+        assert_eq!(by_type["attn_q"].n, 2);
+    }
+}

@@ -1,0 +1,189 @@
+//! Sweep harness: LR grids, optimizer comparisons, cutoff×LR savings
+//! grids — the machinery behind every multi-run figure.
+
+use anyhow::Result;
+
+use crate::coordinator::{run_grid, RunSummary, TrainConfig};
+use crate::json::Value;
+use crate::metrics::{ascii_chart, CsvWriter};
+use crate::pool::default_workers;
+
+/// The paper's LR grids are log-spaced; this helper builds one.
+pub fn log_grid(lo: f64, hi: f64, points: usize) -> Vec<f64> {
+    assert!(points >= 2 && hi > lo && lo > 0.0);
+    let (llo, lhi) = (lo.ln(), hi.ln());
+    (0..points)
+        .map(|i| (llo + (lhi - llo) * i as f64 / (points - 1) as f64).exp())
+        .collect()
+}
+
+/// Results of an (optimizer × lr) sweep.
+pub struct LrSweep {
+    pub optimizers: Vec<String>,
+    pub lrs: Vec<f64>,
+    /// summaries[opt_idx][lr_idx]
+    pub summaries: Vec<Vec<RunSummary>>,
+}
+
+impl LrSweep {
+    /// Run the sweep: `base` provides everything except optimizer and lr.
+    pub fn run(
+        base: &TrainConfig,
+        optimizers: &[&str],
+        lrs: &[f64],
+        workers: usize,
+    ) -> Result<LrSweep> {
+        let mut configs = Vec::new();
+        for opt in optimizers {
+            for &lr in lrs {
+                let mut cfg = base.clone();
+                cfg.optimizer = opt.to_string();
+                cfg.lr = lr;
+                configs.push(cfg);
+            }
+        }
+        let workers = if workers == 0 {
+            default_workers(configs.len())
+        } else {
+            workers
+        };
+        let flat = run_grid(&configs, workers)?;
+        let mut summaries = Vec::new();
+        let mut it = flat.into_iter();
+        for _ in optimizers {
+            summaries.push((&mut it).take(lrs.len()).collect());
+        }
+        Ok(LrSweep {
+            optimizers: optimizers.iter().map(|s| s.to_string()).collect(),
+            lrs: lrs.to_vec(),
+            summaries,
+        })
+    }
+
+    /// Loss metric used by the paper's sensitivity plots: eval loss if
+    /// available, else final train loss; divergence maps to +inf.
+    pub fn metric(s: &RunSummary) -> f64 {
+        if s.result.diverged {
+            return f64::INFINITY;
+        }
+        if s.result.eval_loss.is_finite() {
+            s.result.eval_loss
+        } else {
+            s.result.final_train_loss
+        }
+    }
+
+    /// (lr, loss) series for one optimizer.
+    pub fn series(&self, opt_idx: usize) -> Vec<(f64, f64)> {
+        self.summaries[opt_idx]
+            .iter()
+            .zip(&self.lrs)
+            .map(|(s, &lr)| (lr, Self::metric(s)))
+            .collect()
+    }
+
+    /// Best (lr, loss) for one optimizer.
+    pub fn best(&self, opt_idx: usize) -> (f64, f64) {
+        self.series(opt_idx)
+            .into_iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+    }
+
+    /// Render the Fig. 1-style U-curves.
+    pub fn chart(&self, title: &str) -> String {
+        let series: Vec<(String, Vec<(f64, f64)>)> = self
+            .optimizers
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let pts: Vec<(f64, f64)> = self
+                    .series(i)
+                    .into_iter()
+                    .filter(|(_, l)| l.is_finite())
+                    .collect();
+                (name.clone(), pts)
+            })
+            .collect();
+        let refs: Vec<(&str, &[(f64, f64)])> = series
+            .iter()
+            .map(|(n, p)| (n.as_str(), p.as_slice()))
+            .collect();
+        ascii_chart(title, &refs, 64, 16, true, false)
+    }
+
+    /// Write `rows.csv` (optimizer, lr, eval_loss, train_loss, diverged,
+    /// v_saving) into the experiment directory.
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["optimizer", "lr", "eval_loss", "final_train_loss", "diverged", "v_saving"],
+        )?;
+        for (i, opt) in self.optimizers.iter().enumerate() {
+            for s in &self.summaries[i] {
+                let saving = s
+                    .memory
+                    .as_ref()
+                    .map(|m| m.v_saving)
+                    .unwrap_or(f64::NAN);
+                w.row(&[
+                    opt.clone(),
+                    format!("{:e}", s.lr),
+                    fmtf(s.result.eval_loss),
+                    fmtf(s.result.final_train_loss),
+                    s.result.diverged.to_string(),
+                    fmtf(saving),
+                ])?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut arr = Vec::new();
+        for (i, _) in self.optimizers.iter().enumerate() {
+            for s in &self.summaries[i] {
+                arr.push(s.to_json());
+            }
+        }
+        Value::Arr(arr)
+    }
+}
+
+fn fmtf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.5}")
+    } else {
+        "inf".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_grid_spacing() {
+        let g = log_grid(1e-4, 1e-2, 3);
+        assert_eq!(g.len(), 3);
+        assert!((g[0] - 1e-4).abs() < 1e-12);
+        assert!((g[1] - 1e-3).abs() < 1e-9);
+        assert!((g[2] - 1e-2).abs() < 1e-8);
+    }
+
+    #[test]
+    fn sweep_end_to_end_tiny() {
+        if !std::path::Path::new("artifacts/linear2_v64.grad.hlo.txt").exists() {
+            return;
+        }
+        let base = TrainConfig::lm("linear2_v64", "adam", 1e-3, 8);
+        let sweep = LrSweep::run(&base, &["adam", "sgdm"], &[1e-3, 3e-3], 2).unwrap();
+        assert_eq!(sweep.summaries.len(), 2);
+        assert_eq!(sweep.summaries[0].len(), 2);
+        let (best_lr, best_loss) = sweep.best(0);
+        assert!(best_loss.is_finite());
+        assert!(sweep.lrs.contains(&best_lr));
+        let chart = sweep.chart("test");
+        assert!(chart.contains("adam"));
+    }
+}

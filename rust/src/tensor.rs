@@ -1,0 +1,307 @@
+//! Host tensor substrate: dense row-major f32 arrays with the shape
+//! metadata and init schemes the optimizer family and SNR analysis need.
+//!
+//! Conventions (shared with the Python manifest — see
+//! `python/compile/models/common.py`):
+//!
+//! * Linear weights are `(fan_out, fan_in)`; axis 0 = fan_out, axis 1 =
+//!   fan_in, matching the paper's K-notation.
+//! * Conv tensors carry a `fan_out_axis` in their spec; [`Tensor::matrix_view`]
+//!   materializes the `(fan_out, prod(rest))` matrix used for Eq. 2 / Eq. 3.
+
+use anyhow::{bail, Result};
+
+use crate::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of the canonical matrix view: `(fan_out, everything-else)`
+    /// after rotating `fan_out_axis` to the front. For 1-D tensors the view
+    /// is `(1, n)`.
+    pub fn matrix_dims(shape: &[usize], fan_out_axis: usize) -> (usize, usize) {
+        if shape.len() <= 1 {
+            return (1, shape.first().copied().unwrap_or(1));
+        }
+        let fo = shape[fan_out_axis];
+        let rest: usize = shape.iter().product::<usize>() / fo;
+        (fo, rest)
+    }
+
+    /// Materialize the `(fan_out, fan_in)` matrix view. For tensors whose
+    /// `fan_out_axis` is already 0 (all our 1-D/2-D weights) this is a
+    /// zero-copy borrow; conv tensors (fan_out_axis = 3, HWIO) are permuted.
+    pub fn matrix_view(&self, fan_out_axis: usize) -> MatrixView<'_> {
+        let (r, c) = Tensor::matrix_dims(&self.shape, fan_out_axis);
+        if self.ndim() <= 2 || fan_out_axis == 0 {
+            MatrixView {
+                rows: r,
+                cols: c,
+                data: std::borrow::Cow::Borrowed(&self.data),
+            }
+        } else {
+            // rotate fan_out_axis to the front
+            let mut out = vec![0.0f32; self.data.len()];
+            let fo = self.shape[fan_out_axis];
+            let strides = row_major_strides(&self.shape);
+            let fo_stride = strides[fan_out_axis];
+            // iterate over the "rest" index space in row-major order with
+            // the fan_out axis removed
+            let rest_shape: Vec<usize> = self
+                .shape
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != fan_out_axis)
+                .map(|(_, &s)| s)
+                .collect();
+            let rest_strides: Vec<usize> = strides
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != fan_out_axis)
+                .map(|(_, &s)| s)
+                .collect();
+            let rest_n: usize = rest_shape.iter().product();
+            for o in 0..fo {
+                for j in 0..rest_n {
+                    // decompose j into the rest coordinates (row-major)
+                    let mut rem = j;
+                    let mut src = o * fo_stride;
+                    for k in (0..rest_shape.len()).rev() {
+                        let coord = rem % rest_shape[k];
+                        rem /= rest_shape[k];
+                        src += coord * rest_strides[k];
+                    }
+                    out[o * rest_n + j] = self.data[src];
+                }
+            }
+            MatrixView {
+                rows: r,
+                cols: c,
+                data: std::borrow::Cow::Owned(out),
+            }
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+}
+
+fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+/// A `(rows, cols)` matrix view over tensor data (borrowed when no permute
+/// was needed).
+pub struct MatrixView<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: std::borrow::Cow<'a, [f32]>,
+}
+
+impl MatrixView<'_> {
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+}
+
+/// Parameter initialization schemes from the manifest
+/// (`init_mitchell` / `init_default` blocks).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Zeros,
+    Ones,
+    Normal { std: f64 },
+    Uniform { limit: f64 },
+    TruncNormal { std: f64 },
+}
+
+impl Init {
+    pub fn from_json(v: &crate::json::Value) -> Result<Init> {
+        let scheme = v.get("scheme")?.as_str()?;
+        Ok(match scheme {
+            "zeros" => Init::Zeros,
+            "ones" => Init::Ones,
+            "normal" => Init::Normal {
+                std: v.get("std")?.as_f64()?,
+            },
+            "uniform" => Init::Uniform {
+                limit: v.get("limit")?.as_f64()?,
+            },
+            "trunc_normal" => Init::TruncNormal {
+                std: v.get("std")?.as_f64()?,
+            },
+            s => bail!("unknown init scheme {s:?}"),
+        })
+    }
+
+    pub fn materialize(&self, shape: &[usize], rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = match self {
+            Init::Zeros => vec![0.0; n],
+            Init::Ones => vec![1.0; n],
+            Init::Normal { std } => (0..n)
+                .map(|_| (rng.normal() * std) as f32)
+                .collect(),
+            Init::Uniform { limit } => (0..n)
+                .map(|_| rng.uniform(-limit, *limit) as f32)
+                .collect(),
+            Init::TruncNormal { std } => (0..n)
+                .map(|_| (rng.trunc_normal() * std) as f32)
+                .collect(),
+        };
+        Tensor::from_vec(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+
+    #[test]
+    fn construction() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.shape, vec![2, 3]);
+        let o = Tensor::ones(&[4]);
+        assert_eq!(o.data, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn matrix_view_2d_is_borrowed() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let v = t.matrix_view(0);
+        assert_eq!((v.rows, v.cols), (2, 3));
+        assert_eq!(v.at(1, 2), 6.0);
+        assert!(matches!(v.data, std::borrow::Cow::Borrowed(_)));
+    }
+
+    #[test]
+    fn matrix_view_1d() {
+        let t = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let v = t.matrix_view(0);
+        assert_eq!((v.rows, v.cols), (1, 3));
+    }
+
+    #[test]
+    fn matrix_view_conv_hwio() {
+        // HWIO (2,1,2,3): fan_out_axis=3 -> view (3, 4) where each row o
+        // contains [h,w,i] in row-major order.
+        let t = Tensor::from_vec(
+            &[2, 1, 2, 3],
+            (0..12).map(|x| x as f32).collect(),
+        );
+        let v = t.matrix_view(3);
+        assert_eq!((v.rows, v.cols), (3, 4));
+        // element (o=1, h=0,w=0,i=0) = data[0*6+0*6+0*3+1] = 1
+        assert_eq!(v.at(1, 0), 1.0);
+        // element (o=2, h=1,w=0,i=1) = data[1*6 + 0*3 + 1*3 + 2] -> index
+        // h*6 + w*6? strides for (2,1,2,3) = (6,6,3,1); (1,0,1,2) -> 6+3+2=11
+        assert_eq!(v.at(2, 3), 11.0);
+    }
+
+    #[test]
+    fn matrix_view_conv_roundtrip_sum() {
+        let t = Tensor::from_vec(&[3, 3, 4, 8], (0..288).map(|x| x as f32).collect());
+        let v = t.matrix_view(3);
+        let s1: f32 = v.data.iter().sum();
+        let s2: f32 = t.data.iter().sum();
+        assert_eq!(s1, s2);
+        assert_eq!((v.rows, v.cols), (8, 36));
+    }
+
+    #[test]
+    fn init_normal_stats() {
+        let mut rng = Rng::new(1);
+        let t = Init::Normal { std: 0.02 }.materialize(&[100, 100], &mut rng);
+        let mean = t.mean();
+        let var = t.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+            / t.numel() as f64;
+        assert!(mean.abs() < 1e-3);
+        assert!((var.sqrt() - 0.02).abs() < 1e-3);
+    }
+
+    #[test]
+    fn init_uniform_bounds() {
+        let mut rng = Rng::new(2);
+        let t = Init::Uniform { limit: 0.125 }.materialize(&[1000], &mut rng);
+        assert!(t.data.iter().all(|&x| x.abs() <= 0.125));
+        assert!(t.data.iter().any(|&x| x.abs() > 0.06));
+    }
+
+    #[test]
+    fn init_from_json() {
+        let v = Value::parse(r#"{"scheme":"normal","std":0.02}"#).unwrap();
+        assert_eq!(Init::from_json(&v).unwrap(), Init::Normal { std: 0.02 });
+        let v = Value::parse(r#"{"scheme":"uniform","limit":0.1}"#).unwrap();
+        assert_eq!(Init::from_json(&v).unwrap(), Init::Uniform { limit: 0.1 });
+        let v = Value::parse(r#"{"scheme":"ones"}"#).unwrap();
+        assert_eq!(Init::from_json(&v).unwrap(), Init::Ones);
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,111 @@
+//! Parameter checkpointing via the in-repo npz substrate — the same format
+//! the Python fixture generator (`np.savez`) uses, so checkpoints
+//! interchange across the language boundary.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::npy::{read_npz, write_npz, NpyArray};
+use crate::runtime::manifest::ParamInfo;
+use crate::tensor::Tensor;
+
+/// Save named parameters to `<path>` (npz).
+pub fn save(path: impl AsRef<Path>, metas: &[ParamInfo], params: &[Tensor]) -> Result<()> {
+    ensure!(metas.len() == params.len());
+    let arrays: Vec<(&str, NpyArray)> = metas
+        .iter()
+        .zip(params)
+        .map(|(m, t)| {
+            (
+                m.name.as_str(),
+                NpyArray::F32 {
+                    shape: t.shape.clone(),
+                    data: t.data.clone(),
+                },
+            )
+        })
+        .collect();
+    write_npz(path, &arrays)
+}
+
+/// Load parameters by name (order taken from `metas`).
+pub fn load(path: impl AsRef<Path>, metas: &[ParamInfo]) -> Result<Vec<Tensor>> {
+    let entries = read_npz(path.as_ref())?;
+    let map: std::collections::HashMap<String, NpyArray> = entries.into_iter().collect();
+    metas
+        .iter()
+        .map(|m| {
+            let arr = map
+                .get(&m.name)
+                .ok_or_else(|| anyhow!("checkpoint missing tensor {:?}", m.name))?;
+            let (shape, data) = arr.as_f32()?;
+            ensure!(
+                shape == m.shape.as_slice(),
+                "checkpoint {:?} has shape {:?}, expected {:?}",
+                m.name,
+                shape,
+                m.shape
+            );
+            Ok(Tensor::from_vec(shape, data.to_vec()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Init;
+
+    fn meta(name: &str, shape: &[usize]) -> ParamInfo {
+        ParamInfo {
+            name: name.into(),
+            shape: shape.to_vec(),
+            layer_type: "mlp_up".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: true,
+            fan_out_axis: 0,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("slimadam_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.npz");
+        let metas = vec![meta("a", &[2, 3]), meta("b", &[4])];
+        let params = vec![
+            Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            Tensor::from_vec(&[4], vec![9., 8., 7., 6.]),
+        ];
+        save(&path, &metas, &params).unwrap();
+        let back = load(&path, &metas).unwrap();
+        assert_eq!(back, params);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("slimadam_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.npz");
+        let metas = vec![meta("a", &[2, 2])];
+        save(&path, &metas, &[Tensor::zeros(&[2, 2])]).unwrap();
+        let wrong = vec![meta("a", &[4])];
+        assert!(load(&path, &wrong).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_rejected() {
+        let dir = std::env::temp_dir().join("slimadam_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.npz");
+        save(&path, &[meta("a", &[1])], &[Tensor::zeros(&[1])]).unwrap();
+        let err = load(&path, &[meta("zz", &[1])]).unwrap_err();
+        assert!(format!("{err}").contains("zz"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

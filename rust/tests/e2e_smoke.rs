@@ -1,0 +1,138 @@
+//! End-to-end smoke tests: every model family trains a few steps through
+//! the full stack (artifact → PJRT → data pipeline → optimizer), and the
+//! core paper claims hold qualitatively even at smoke scale.
+
+use slimadam::coordinator::{run_config, DataSpec, EngineKind, TrainConfig};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/gpt_nano.grad.hlo.txt").exists()
+}
+
+#[test]
+fn every_model_family_trains() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for (model, vision) in [
+        ("gpt_nano", false),
+        ("llama_tiny", false),
+        ("vit_mini_c10", true),
+        ("resnet_mini_c10", true),
+        ("linear2_v256", false),
+    ] {
+        let mut cfg = if vision {
+            TrainConfig::vision(model, "adam", 1e-3, 6)
+        } else {
+            TrainConfig::lm(model, "adam", 1e-3, 6)
+        };
+        cfg.eval_batches = 1;
+        let s = run_config(&cfg).unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        assert!(!s.result.diverged, "{model} diverged");
+        assert!(s.result.final_train_loss.is_finite(), "{model}");
+    }
+}
+
+#[test]
+fn every_optimizer_trains_gpt_nano() {
+    if !have_artifacts() {
+        return;
+    }
+    for opt in slimadam::optim::presets::ALL {
+        let mut cfg = TrainConfig::lm("gpt_nano", opt, 3e-4, 5);
+        cfg.eval_batches = 0;
+        let s = run_config(&cfg).unwrap_or_else(|e| panic!("{opt}: {e:#}"));
+        assert!(
+            s.result.losses.iter().all(|(_, l)| l.is_finite()),
+            "{opt} produced non-finite loss"
+        );
+    }
+}
+
+#[test]
+fn slimadam_learns_like_adam_at_smoke_scale() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |opt: &str| {
+        let mut cfg = TrainConfig::lm("gpt_nano", opt, 1e-3, 25);
+        cfg.eval_batches = 4;
+        run_config(&cfg).unwrap()
+    };
+    let adam = run("adam");
+    let slim = run("slimadam");
+    assert!(!adam.result.diverged && !slim.result.diverged);
+    // both learn
+    assert!(adam.result.final_train_loss < adam.result.losses[0].1 as f64);
+    assert!(slim.result.final_train_loss < slim.result.losses[0].1 as f64);
+    // slimadam within a loose band of adam at smoke scale
+    let gap = (slim.result.eval_loss - adam.result.eval_loss).abs();
+    assert!(gap < 0.5, "eval gap {gap}");
+    // and saves the memory the paper claims (>90% on GPT)
+    let saving = slim.memory.unwrap().v_saving;
+    assert!(saving > 0.9, "saving {saving}");
+}
+
+#[test]
+fn corpus_data_path_trains() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = TrainConfig::lm("linear2_v256", "adam", 1e-3, 8);
+    cfg.data = DataSpec::Corpus;
+    cfg.eval_batches = 2;
+    let s = run_config(&cfg).unwrap();
+    assert!(!s.result.diverged);
+    assert!(s.result.eval_loss.is_finite());
+}
+
+#[test]
+fn fused_engine_smoke() {
+    if !std::path::Path::new("artifacts/gpt_nano.train.slimadam.hlo.txt").exists() {
+        return;
+    }
+    let mut cfg = TrainConfig::lm("gpt_nano", "slimadam", 1e-3, 10);
+    cfg.engine = EngineKind::Fused("slimadam".into());
+    let s = run_config(&cfg).unwrap();
+    assert!(!s.result.diverged);
+    assert!(s.result.final_train_loss < s.result.losses[0].1 as f64);
+}
+
+#[test]
+fn finetune_warm_start_restores_low_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    // pre-train briefly, then warm-start on the SAME distribution: the
+    // first fine-tune loss must be near the pre-train final loss, far
+    // below a fresh init's loss.
+    let model = "linear2_v256";
+    let client = slimadam::runtime::engine::cpu_client().unwrap();
+    let engine = slimadam::runtime::engine::GradEngine::new("artifacts", model, &client).unwrap();
+    let man = engine.manifest().clone();
+    let base = TrainConfig::lm(model, "adam", 3e-3, 40);
+    let mut rng = slimadam::rng::Rng::new(1);
+    let mut params: Vec<slimadam::tensor::Tensor> = man
+        .params
+        .iter()
+        .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+        .collect();
+    let mut opt = slimadam::optim::presets::build("adam", &man, base.hypers).unwrap();
+    let mut data = slimadam::coordinator::make_data(&man, &base.data, base.seed).unwrap();
+    let sched = slimadam::train::Schedule::new(base.lr, base.warmup, base.steps);
+    let res = slimadam::train::train_split(
+        &engine, opt.as_mut(), &mut params, data.as_mut(), &sched, 40, None, 1, 0,
+    )
+    .unwrap();
+
+    let mut ft = TrainConfig::lm(model, "adam", 1e-4, 3);
+    ft.warm_start = Some(std::sync::Arc::new(params));
+    ft.eval_batches = 0;
+    let s = run_config(&ft).unwrap();
+    let first_ft_loss = s.result.losses[0].1 as f64;
+    assert!(
+        first_ft_loss < res.losses[0].1 as f64 - 0.2,
+        "warm start ineffective: ft starts at {first_ft_loss}, fresh at {}",
+        res.losses[0].1
+    );
+}

@@ -1,0 +1,119 @@
+//! Cross-layer numeric fixtures: `python/compile/aot.py` trains reference
+//! models with plain-jnp AdamW and dumps initial params, batches and the
+//! per-step loss sequence; this test replays the identical schedule through
+//! the PJRT grad_step artifact + the Rust AdamK optimizer and requires the
+//! losses to match — pinning the whole HLO→runtime→optimizer chain to the
+//! Python ground truth.
+
+use slimadam::npy::read_npz;
+use slimadam::optim::{clip_global_norm, Hypers, KMode, Optimizer};
+use slimadam::optim::adamk::AdamK;
+use slimadam::runtime::engine::{cpu_client, BatchData, GradEngine};
+use slimadam::tensor::Tensor;
+
+fn fixture_available(model: &str) -> bool {
+    std::path::Path::new(&format!("artifacts/fixtures/{model}.fixture.json")).exists()
+}
+
+fn replay(model: &str, rtol: f32) {
+    let fix_text =
+        std::fs::read_to_string(format!("artifacts/fixtures/{model}.fixture.json")).unwrap();
+    let fix = slimadam::json::Value::parse(&fix_text).unwrap();
+    let steps = fix.get("steps").unwrap().as_usize().unwrap();
+    let lr = fix.get("lr").unwrap().as_f64().unwrap() as f32;
+    let h = fix.get("hypers").unwrap();
+    let hypers = Hypers {
+        beta1: h.get("beta1").unwrap().as_f64().unwrap(),
+        beta2: h.get("beta2").unwrap().as_f64().unwrap(),
+        eps: h.get("eps").unwrap().as_f64().unwrap(),
+        weight_decay: h.get("weight_decay").unwrap().as_f64().unwrap(),
+        clip_norm: h.get("clip_norm").unwrap().as_f64().unwrap(),
+    };
+    let expected: Vec<f64> = fix
+        .get("losses")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+
+    let client = cpu_client().unwrap();
+    let engine = GradEngine::new("artifacts", model, &client).unwrap();
+    let man = engine.manifest().clone();
+
+    // initial params from the fixture npz (exact same floats as python)
+    let params_npz = read_npz(format!("artifacts/fixtures/{model}.params.npz")).unwrap();
+    let pmap: std::collections::HashMap<_, _> = params_npz.into_iter().collect();
+    let mut params: Vec<Tensor> = man
+        .params
+        .iter()
+        .map(|p| {
+            let (shape, data) = pmap[&p.name].as_f32().unwrap();
+            assert_eq!(shape, p.shape.as_slice(), "{}", p.name);
+            Tensor::from_vec(shape, data.to_vec())
+        })
+        .collect();
+
+    let batches_npz = read_npz(format!("artifacts/fixtures/{model}.batches.npz")).unwrap();
+    let bmap: std::collections::HashMap<_, _> = batches_npz.into_iter().collect();
+
+    let mut opt = AdamK::new(
+        "adam",
+        man.params.clone(),
+        vec![KMode::None; man.n_params()],
+        hypers,
+    );
+
+    for t in 1..=steps {
+        let batch: Vec<BatchData> = man
+            .batch
+            .iter()
+            .map(|b| {
+                let arr = &bmap[&format!("{}{}", b.name, t - 1)];
+                match b.dtype.as_str() {
+                    "s32" => BatchData::I32(arr.as_i32().unwrap().1.to_vec()),
+                    _ => BatchData::F32(arr.as_f32().unwrap().1.to_vec()),
+                }
+            })
+            .collect();
+        let (loss, mut grads) = engine.step(&params, &batch).unwrap();
+        let want = expected[t - 1] as f32;
+        assert!(
+            (loss - want).abs() <= rtol * want.abs() + 1e-4,
+            "{model} step {t}: rust loss {loss} vs python {want}"
+        );
+        clip_global_norm(&mut grads, hypers.clip_norm);
+        opt.step(&mut params, &grads, t, lr);
+    }
+
+    // final parameter norm must match the python reference
+    let l2: f64 = params
+        .iter()
+        .map(|p| p.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt();
+    let want_l2 = fix.get("final_param_l2").unwrap().as_f64().unwrap();
+    assert!(
+        (l2 - want_l2).abs() / want_l2 < 1e-3,
+        "{model}: final |params| {l2} vs python {want_l2}"
+    );
+}
+
+#[test]
+fn linear2_replay_matches_python() {
+    if !fixture_available("linear2_v64") {
+        eprintln!("skipping: fixtures not built (run `make artifacts`)");
+        return;
+    }
+    replay("linear2_v64", 2e-4);
+}
+
+#[test]
+fn gpt_nano_replay_matches_python() {
+    if !fixture_available("gpt_nano") {
+        eprintln!("skipping: fixtures not built (run `make artifacts`)");
+        return;
+    }
+    replay("gpt_nano", 5e-4);
+}

@@ -1,0 +1,223 @@
+//! Cross-module property tests: the system-level invariants DESIGN.md §8
+//! commits to, run through the in-repo property harness.
+
+use slimadam::optim::adamk::{v_len, AdamK};
+use slimadam::optim::{Hypers, KMode, Optimizer};
+use slimadam::proptest::{check, close, prop_assert};
+use slimadam::rng::Rng;
+use slimadam::runtime::manifest::ParamInfo;
+use slimadam::snr::{snr_of_view, SnrAvg, SnrSummary};
+use slimadam::tensor::{Init, Tensor};
+
+fn info(name: &str, lt: &str, shape: &[usize]) -> ParamInfo {
+    ParamInfo {
+        name: name.into(),
+        shape: shape.to_vec(),
+        layer_type: lt.into(),
+        depth: 0,
+        init_mitchell: Init::Normal { std: 0.02 },
+        init_default: Init::Normal { std: 0.02 },
+        wd: true,
+        fan_out_axis: 0,
+    }
+}
+
+/// AdamK with K=Both on a matrix equals AdamK on the flattened vector with
+/// K=Both: compression is shape-agnostic over the same group.
+#[test]
+fn both_mode_is_shape_agnostic() {
+    check(20, |g| {
+        let rows = g.usize(1, 10);
+        let cols = g.usize(1, 10);
+        let n = rows * cols;
+        let data = g.vec_normal(n, 1.0);
+        let grad = g.vec_normal(n, 1.0);
+        let h = Hypers { weight_decay: 0.0, ..Default::default() };
+
+        let mut opt_m = AdamK::new("m", vec![info("w", "mlp_up", &[rows, cols])],
+                                   vec![KMode::Both], h);
+        let mut pm = vec![Tensor::from_vec(&[rows, cols], data.clone())];
+        opt_m.step(&mut pm, &[Tensor::from_vec(&[rows, cols], grad.clone())], 1, 1e-2);
+
+        let mut opt_v = AdamK::new("v", vec![info("w", "mlp_up", &[n])],
+                                   vec![KMode::Both], h);
+        let mut pv = vec![Tensor::from_vec(&[n], data)];
+        opt_v.step(&mut pv, &[Tensor::from_vec(&[n], grad)], 1, 1e-2);
+
+        for (a, b) in pm[0].data.iter().zip(&pv[0].data) {
+            prop_assert(
+                close(*a as f64, *b as f64, 1e-6, 1e-7),
+                format!("{a} vs {b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Compression preserves the group mean of G²: after one step from zero
+/// state, mean over each group of the full-V equals the reduced V entry.
+#[test]
+fn compression_preserves_group_means() {
+    check(25, |g| {
+        let rows = g.usize(2, 12);
+        let cols = g.usize(2, 12);
+        let k = *g.choice(&[KMode::FanIn, KMode::FanOut, KMode::Both]);
+        let h = Hypers::default();
+        let meta = info("w", "attn_q", &[rows, cols]);
+        let mut opt = AdamK::new("t", vec![meta], vec![k], h);
+        let grad = Tensor::from_vec(&[rows, cols], g.vec_normal(rows * cols, 1.0));
+        let mut params = vec![Tensor::zeros(&[rows, cols])];
+        opt.step(&mut params, std::slice::from_ref(&grad), 1, 0.0);
+        let v_full = opt.second_moment(0).unwrap();
+        let scale = 1.0 - h.beta2;
+        // group mean of g^2 must equal broadcast V / (1-beta2)
+        match k {
+            KMode::FanIn => {
+                for r in 0..rows {
+                    let want: f64 = (0..cols)
+                        .map(|c| (grad.data[r * cols + c] as f64).powi(2))
+                        .sum::<f64>()
+                        / cols as f64
+                        * scale;
+                    let got = v_full.data[r * cols] as f64;
+                    prop_assert(close(got, want, 1e-4, 1e-9), format!("{got} {want}"))?;
+                }
+            }
+            KMode::FanOut => {
+                for c in 0..cols {
+                    let want: f64 = (0..rows)
+                        .map(|r| (grad.data[r * cols + c] as f64).powi(2))
+                        .sum::<f64>()
+                        / rows as f64
+                        * scale;
+                    let got = v_full.data[c] as f64;
+                    prop_assert(close(got, want, 1e-4, 1e-9), format!("{got} {want}"))?;
+                }
+            }
+            _ => {
+                let want: f64 = grad
+                    .data
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    / (rows * cols) as f64
+                    * scale;
+                let got = v_full.data[0] as f64;
+                prop_assert(close(got, want, 1e-4, 1e-9), format!("{got} {want}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Memory monotonicity: v_len(None) >= v_len(FanIn/FanOut) >= v_len(Both).
+#[test]
+fn v_len_monotone_in_compression() {
+    check(50, |g| {
+        let rows = g.usize(1, 64);
+        let cols = g.usize(1, 64);
+        let meta = info("w", "attn_q", &[rows, cols]);
+        let none = v_len(&meta, KMode::None);
+        let fi = v_len(&meta, KMode::FanIn);
+        let fo = v_len(&meta, KMode::FanOut);
+        let both = v_len(&meta, KMode::Both);
+        prop_assert(none >= fi && none >= fo, "row/col <= full")?;
+        prop_assert(fi >= both && fo >= both, "scalar <= row/col")?;
+        prop_assert(both == 1, "both is scalar")
+    });
+}
+
+/// Rule-derivation monotonicity: a higher cutoff never compresses more.
+#[test]
+fn cutoff_monotonicity() {
+    check(30, |g| {
+        let n = g.usize(1, 12);
+        let metas: Vec<ParamInfo> = (0..n)
+            .map(|i| info(&format!("w{i}"), "mlp_up", &[8, 8]))
+            .collect();
+        let per_param: Vec<SnrAvg> = (0..n)
+            .map(|_| SnrAvg {
+                fan_out: g.f64(0.0, 4.0),
+                fan_in: g.f64(0.0, 4.0),
+                both: g.f64(0.0, 4.0),
+                n: 3,
+            })
+            .collect();
+        let summary = SnrSummary { per_param, metas };
+        let lo = slimadam::rules::RuleSet::derive(&summary, 0.5, "lo", None);
+        let hi = slimadam::rules::RuleSet::derive(&summary, 2.0, "hi", None);
+        prop_assert(
+            hi.rules.len() <= lo.rules.len(),
+            format!("{} > {}", hi.rules.len(), lo.rules.len()),
+        )
+    });
+}
+
+/// SNR scale-invariance: SNR_K(c·V) == SNR_K(V) for c > 0 (it is a ratio).
+#[test]
+fn snr_scale_invariant() {
+    check(40, |g| {
+        let rows = g.usize(2, 20);
+        let cols = g.usize(2, 20);
+        let c = g.log_f64(1e-3, 1e3) as f32;
+        let data: Vec<f32> = (0..rows * cols).map(|_| g.f32(1e-4, 1.0)).collect();
+        let scaled: Vec<f32> = data.iter().map(|&x| x * c).collect();
+        for k in [KMode::FanOut, KMode::FanIn, KMode::Both] {
+            let a = snr_of_view(rows, cols, &data, k);
+            let b = snr_of_view(rows, cols, &scaled, k);
+            prop_assert(
+                close(a, b, 1e-3, 1e-9),
+                format!("K={k:?}: {a} vs {b} (c={c})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Zero-LR steps must leave parameters untouched for the whole family.
+#[test]
+fn zero_lr_is_identity() {
+    let man_params = vec![info("a", "attn_q", &[6, 6]), info("b", "ln_attn", &[6])];
+    let mut rng = Rng::new(5);
+    let params0: Vec<Tensor> = man_params
+        .iter()
+        .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+        .collect();
+    let grads: Vec<Tensor> = man_params
+        .iter()
+        .map(|p| {
+            Tensor::from_vec(
+                &p.shape,
+                (0..p.numel()).map(|_| rng.normal() as f32).collect(),
+            )
+        })
+        .collect();
+    for k in [KMode::None, KMode::FanIn, KMode::FanOut, KMode::Both] {
+        let mut opt = AdamK::new("t", man_params.clone(), vec![k, k], Hypers::default());
+        let mut params = params0.clone();
+        opt.step(&mut params, &grads, 1, 0.0);
+        assert_eq!(params, params0, "K={k:?}");
+    }
+}
+
+/// BPE: encoding never produces ids outside the vocab and decode inverts
+/// encode for newline-free input.
+#[test]
+fn bpe_fuzz_roundtrip() {
+    use slimadam::data::bpe::Bpe;
+    let corpus = b"all work and no play makes jack a dull boy\n".repeat(40);
+    let bpe = Bpe::train(&corpus, 300 + 17);
+    check(60, |g| {
+        let n = g.usize(0, 300);
+        let bytes: Vec<u8> = (0..n)
+            .map(|_| g.usize(0, 255) as u8)
+            .map(|b| if b == b'\n' { b' ' } else { b })
+            .collect();
+        let toks = bpe.encode(&bytes);
+        prop_assert(
+            toks.iter().all(|&t| (t as usize) < bpe.vocab_size),
+            "token out of vocab",
+        )?;
+        prop_assert(bpe.decode(&toks) == bytes, "roundtrip")
+    });
+}
