@@ -1,0 +1,23 @@
+# Build entry points. `make artifacts` is the one the Rust error
+# messages reference: it AOT-lowers every model to HLO text + manifest
+# (requires Python + JAX; the Rust side never does).
+
+.PHONY: artifacts artifacts-large build test bench doc
+
+artifacts:
+	cd python && python -m compile.aot --outdir ../artifacts
+
+artifacts-large:
+	cd python && python -m compile.aot --outdir ../artifacts --large
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,73 @@
+//! Sweep-scheduler throughput: serial vs work-stealing parallel dispatch.
+//!
+//! The acceptance bar for the parallel scheduler is ≥2x wall-clock
+//! speedup at 4 workers on compute-bound jobs; the synthetic section
+//! measures exactly that with SNR evaluations sized like a real probe.
+//! When artifacts exist, the second section times a real 8-point LR
+//! sweep serial-vs-parallel and prints the executable-cache counters
+//! (each distinct artifact must compile at most once per worker).
+
+use slimadam::benchkit::bench_sweep;
+use slimadam::coordinator::{exec_cache, SweepScheduler, TrainConfig};
+use slimadam::runtime::KMode;
+use slimadam::snr::snr_of_view;
+
+fn main() {
+    println!("== synthetic compute-bound sweep jobs (512x512 SNR probes) ==");
+    let data: Vec<f32> = (0..512 * 512)
+        .map(|i| (i % 97) as f32 * 0.01 + 1.0)
+        .collect();
+    let cores = slimadam::pool::default_workers(usize::MAX);
+    for workers in [2, 4, cores] {
+        bench_sweep(&format!("sweep_snr_w{workers}"), 16, workers, |_| {
+            for k in [KMode::FanOut, KMode::FanIn, KMode::Both] {
+                std::hint::black_box(snr_of_view(512, 512, &data, k));
+            }
+        });
+    }
+
+    if !std::path::Path::new("artifacts/linear2_v64.grad.hlo.txt").exists() {
+        println!("(skipping real-artifact sweep: run `make artifacts` first)");
+        return;
+    }
+
+    println!("\n== real 8-point LR sweep, linear2_v64 ==");
+    let configs: Vec<TrainConfig> = (0..8)
+        .map(|i| {
+            let mut cfg = TrainConfig::lm("linear2_v64", "adam", 1e-3, 12);
+            cfg.lr = 1e-3 * (1.0 + 0.2 * i as f64);
+            cfg.eval_batches = 2;
+            cfg
+        })
+        .collect();
+
+    exec_cache::reset_stats();
+    let t0 = std::time::Instant::now();
+    SweepScheduler::new(1)
+        .quiet()
+        .run(&configs)
+        .expect("serial sweep");
+    let serial = t0.elapsed().as_secs_f64();
+    let serial_stats = exec_cache::stats();
+
+    exec_cache::reset_stats();
+    let t1 = std::time::Instant::now();
+    SweepScheduler::new(4)
+        .quiet()
+        .run(&configs)
+        .expect("parallel sweep");
+    let parallel = t1.elapsed().as_secs_f64();
+    let parallel_stats = exec_cache::stats();
+
+    println!(
+        "serial   {serial:.2} s  (cache: {} hits / {} compiles)",
+        serial_stats.hits,
+        serial_stats.compiles()
+    );
+    println!(
+        "parallel {parallel:.2} s  (cache: {} hits / {} compiles)  [{:.2}x]",
+        parallel_stats.hits,
+        parallel_stats.compiles(),
+        serial / parallel.max(1e-12)
+    );
+}

@@ -175,6 +175,115 @@ impl Bencher {
     }
 }
 
+/// Result of one serial-vs-parallel sweep comparison (see [`bench_sweep`]).
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub name: String,
+    pub jobs: usize,
+    pub workers: usize,
+    pub serial_s: f64,
+    pub parallel_s: f64,
+}
+
+impl SweepReport {
+    /// Wall-clock speedup of the parallel run over the serial run.
+    pub fn speedup(&self) -> f64 {
+        self.serial_s / self.parallel_s.max(1e-12)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:44} {} jobs: serial {:.3} s, {} workers {:.3} s  [{:.2}x]",
+            self.name,
+            self.jobs,
+            self.serial_s,
+            self.workers,
+            self.parallel_s,
+            self.speedup()
+        );
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", self.name.clone())
+            .set("jobs", self.jobs)
+            .set("workers", self.workers)
+            .set("serial_s", self.serial_s)
+            .set("parallel_s", self.parallel_s)
+            .set("speedup", self.speedup())
+            .set("unix_ms", now_ms());
+        v
+    }
+}
+
+/// Wall-clock comparison for coarse job sets (sweep scheduling): run
+/// `n_jobs` invocations of `job` once serially, then once on a
+/// `workers`-thread work-stealing pool, and report the speedup. Results
+/// append to `results/bench/<name>.jsonl` like [`Bencher`] runs; use
+/// [`bench_sweep_sink`] to redirect or suppress the sink.
+pub fn bench_sweep<F>(name: &str, n_jobs: usize, workers: usize, job: F) -> SweepReport
+where
+    F: Fn(usize) + Sync,
+{
+    bench_sweep_sink(
+        name,
+        n_jobs,
+        workers,
+        Some(std::path::Path::new("results/bench")),
+        job,
+    )
+}
+
+/// [`bench_sweep`] with an explicit JSONL sink directory (`None` = no file).
+pub fn bench_sweep_sink<F>(
+    name: &str,
+    n_jobs: usize,
+    workers: usize,
+    sink: Option<&std::path::Path>,
+    job: F,
+) -> SweepReport
+where
+    F: Fn(usize) + Sync,
+{
+    let jobs: Vec<usize> = (0..n_jobs).collect();
+
+    let t0 = Instant::now();
+    for &i in &jobs {
+        job(i);
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    crate::pool::parallel_map_sharded(&jobs, workers, |i, _| i as u64, |_, &i| {
+        job(i);
+        Ok(())
+    })
+    .expect("bench jobs do not fail");
+    let parallel_s = t1.elapsed().as_secs_f64();
+
+    let report = SweepReport {
+        name: name.to_string(),
+        jobs: n_jobs,
+        workers,
+        serial_s,
+        parallel_s,
+    };
+    report.print();
+    if let Some(dir) = sink {
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.jsonl", sanitize(name)));
+        if let Ok(mut file) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            use std::io::Write;
+            let _ = writeln!(file, "{}", report.to_json().dump());
+        }
+    }
+    report
+}
+
 fn sanitize(name: &str) -> String {
     name.chars()
         .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
@@ -253,5 +362,17 @@ mod tests {
     #[test]
     fn sanitize_names() {
         assert_eq!(sanitize("a b/c:d"), "a_b_c_d");
+    }
+
+    #[test]
+    fn bench_sweep_measures_speedup() {
+        // sleep-bound jobs: parallelism is limited only by worker count,
+        // so even a loaded CI box shows > 1x
+        let r = bench_sweep_sink("test_sweep", 8, 4, None, |_| {
+            std::thread::sleep(Duration::from_millis(15));
+        });
+        assert_eq!(r.jobs, 8);
+        assert!(r.serial_s >= 8.0 * 0.015);
+        assert!(r.speedup() > 1.3, "speedup {:.2}", r.speedup());
     }
 }

@@ -19,6 +19,18 @@ pub struct OptSpec {
 }
 
 /// Parsed arguments for one (sub)command.
+///
+/// ```
+/// use slimadam::cli::Args;
+///
+/// let argv = ["--workers", "4", "--lrs=1e-4,1e-3", "--fused", "fig1"]
+///     .map(String::from);
+/// let args = Args::parse(argv, &["fused"]).unwrap();
+/// assert_eq!(args.usize_or("workers", 0).unwrap(), 4);
+/// assert_eq!(args.f64_list("lrs", &[]).unwrap(), vec![1e-4, 1e-3]);
+/// assert!(args.flag("fused"));
+/// assert_eq!(args.positional, vec!["fig1"]);
+/// ```
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub positional: Vec<String>,

@@ -1,0 +1,144 @@
+//! Compile-once executable cache (DESIGN.md §9).
+//!
+//! PJRT wrapper types are not `Send`, so compiled executables cannot be
+//! shared across sweep workers. Instead each worker thread owns exactly
+//! one PJRT CPU client ([`thread_client`]) plus a thread-local cache of
+//! compiled executables keyed by `(artifact name, manifest hash)`. A
+//! 50-point LR sweep on a 4-worker pool therefore compiles each distinct
+//! artifact at most 4 times (once per worker that touches it) instead of
+//! 50 — and because the sweep scheduler shards jobs by artifact
+//! (`SweepScheduler::artifact_key`), usually exactly once.
+//!
+//! Keying on the manifest hash, not just the name, means re-running
+//! `make artifacts` mid-process can never serve a stale executable: a
+//! re-lowered artifact has a new manifest digest and misses the cache.
+//!
+//! The global [`stats`] counters aggregate hits/misses across all worker
+//! threads so tests and benches can assert the compile-once property.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Result;
+use xla::PjRtClient;
+
+use crate::runtime::engine::{cpu_client, Artifact, Compiled, GradEngine};
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the global cache counters (all worker threads combined).
+/// Every miss is exactly one PJRT compilation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Compilations performed (alias for `misses`, named for intent).
+    pub fn compiles(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// Read the global hit/miss counters.
+pub fn stats() -> CacheStats {
+    CacheStats {
+        hits: HITS.load(Ordering::Relaxed),
+        misses: MISSES.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero the global counters (tests and benches bracket sweeps with this).
+pub fn reset_stats() {
+    HITS.store(0, Ordering::Relaxed);
+    MISSES.store(0, Ordering::Relaxed);
+}
+
+thread_local! {
+    static CLIENT: RefCell<Option<Rc<PjRtClient>>> = RefCell::new(None);
+    static GRAD: RefCell<HashMap<(String, u64), Rc<GradEngine>>> =
+        RefCell::new(HashMap::new());
+    static TRAIN: RefCell<HashMap<(String, u64), Rc<Compiled>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// This worker thread's PJRT CPU client, created on first use. One client
+/// per worker is the PJRT threading contract here: the wrapper types are
+/// not `Send`, and a CPU client is cheap.
+pub fn thread_client() -> Result<Rc<PjRtClient>> {
+    CLIENT.with(|slot| {
+        if let Some(client) = slot.borrow().as_ref() {
+            return Ok(client.clone());
+        }
+        let client = Rc::new(cpu_client()?);
+        *slot.borrow_mut() = Some(client.clone());
+        Ok(client)
+    })
+}
+
+/// Cached split engine for `<model>.grad`: compiled at most once per
+/// worker thread per manifest revision.
+pub fn grad_engine(dir: &str, model: &str) -> Result<Rc<GradEngine>> {
+    let name = format!("{model}.grad");
+    let art = Artifact::load(dir, &name)?;
+    let key = (name, art.manifest_hash);
+    GRAD.with(|cache| {
+        if let Some(engine) = cache.borrow().get(&key) {
+            HITS.fetch_add(1, Ordering::Relaxed);
+            return Ok(engine.clone());
+        }
+        MISSES.fetch_add(1, Ordering::Relaxed);
+        let client = thread_client()?;
+        let engine = Rc::new(GradEngine::from_artifact(&art, &client)?);
+        cache.borrow_mut().insert(key, engine.clone());
+        Ok(engine)
+    })
+}
+
+/// Cached compiled fused train-step executable `<model>.train.<ruleset>`.
+/// The caller wraps it in a fresh `TrainEngine` per run (state is per-run;
+/// the compilation is what's expensive and shareable).
+pub fn train_compiled(dir: &str, model: &str, ruleset: &str) -> Result<Rc<Compiled>> {
+    let name = format!("{model}.train.{ruleset}");
+    let art = Artifact::load(dir, &name)?;
+    anyhow::ensure!(
+        art.manifest.kind == "train_step",
+        "artifact {} is not a train_step",
+        name
+    );
+    let key = (name, art.manifest_hash);
+    TRAIN.with(|cache| {
+        if let Some(compiled) = cache.borrow().get(&key) {
+            HITS.fetch_add(1, Ordering::Relaxed);
+            return Ok(compiled.clone());
+        }
+        MISSES.fetch_add(1, Ordering::Relaxed);
+        let client = thread_client()?;
+        let compiled = Rc::new(art.compile(&client)?);
+        cache.borrow_mut().insert(key, compiled.clone());
+        Ok(compiled)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_count_and_missing_artifact_errors() {
+        // Counters are global and other tests may bump them concurrently,
+        // so assert only monotonic deltas we caused ourselves.
+        let before = stats();
+        assert!(grad_engine("artifacts", "no_such_model_xyz").is_err());
+        HITS.fetch_add(2, Ordering::Relaxed);
+        MISSES.fetch_add(1, Ordering::Relaxed);
+        let after = stats();
+        assert!(after.hits >= before.hits + 2);
+        assert!(after.misses >= before.misses + 1);
+        assert_eq!(after.compiles(), after.misses);
+    }
+}

@@ -1,15 +1,32 @@
 //! Experiment coordinator: the single entry point that turns a declarative
 //! [`TrainConfig`] into a finished run, and fans whole config grids out
-//! across a worker pool (each worker owns its own PJRT client, since the
-//! xla wrapper types are not `Send`).
+//! across a work-stealing worker pool.
+//!
+//! Layering (DESIGN.md §9):
+//!
+//! * [`run_config`] — one config, end to end, on the calling thread. All
+//!   randomness derives from `TrainConfig::seed`, so a run is a pure
+//!   function of its config.
+//! * [`exec_cache`] — per-worker-thread compile-once executable cache
+//!   keyed by `(artifact name, manifest hash)`. Each worker owns its own
+//!   PJRT CPU client (the `xla` wrapper types are not `Send`).
+//! * [`scheduler`] / [`SweepScheduler`] — shards a config grid across
+//!   workers by artifact, steals work across shards, streams per-job
+//!   JSONL rows as jobs finish, and guarantees parallel == serial
+//!   results job-for-job.
 //!
 //! Everything the figure/table reproductions need funnels through
 //! [`run_config`] / [`run_grid`], so sweep results are directly comparable.
 
+pub mod exec_cache;
+pub mod scheduler;
+
+pub use scheduler::SweepScheduler;
+
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::data::corpus::TokenCorpus;
 use crate::data::images::SynthImages;
@@ -17,9 +34,8 @@ use crate::data::markov::MarkovLm;
 use crate::data::DataSource;
 use crate::optim::memory::MemoryReport;
 use crate::optim::{presets, Hypers};
-use crate::pool::parallel_map;
 use crate::rules::RuleSet;
-use crate::runtime::engine::{cpu_client, GradEngine, TrainEngine};
+use crate::runtime::engine::TrainEngine;
 use crate::snr::{ProbeSchedule, SnrSummary};
 use crate::tensor::Tensor;
 use crate::train::{train_fused, train_split, RunResult, Schedule};
@@ -351,38 +367,19 @@ impl DataSource for ArcCorpusSource {
 // Run execution
 // ---------------------------------------------------------------------------
 
-// Per-thread compiled-executable cache: PJRT wrapper types are not Send,
-// and a sweep re-runs the same model dozens of times on each worker —
-// caching the compiled grad_step saves ~3-5 s of client+compile per run
-// (EXPERIMENTS.md §Perf).
-thread_local! {
-    static GRAD_ENGINE_CACHE: std::cell::RefCell<
-        HashMap<String, std::rc::Rc<GradEngine>>,
-    > = std::cell::RefCell::new(HashMap::new());
-}
-
-fn cached_grad_engine(model: &str) -> Result<std::rc::Rc<GradEngine>> {
-    GRAD_ENGINE_CACHE.with(|cache| {
-        if let Some(e) = cache.borrow().get(model) {
-            return Ok(e.clone());
-        }
-        let client = cpu_client()?;
-        let engine = std::rc::Rc::new(GradEngine::new("artifacts", model, &client)?);
-        cache
-            .borrow_mut()
-            .insert(model.to_string(), engine.clone());
-        Ok(engine)
-    })
-}
-
-/// Execute one training config end to end (per-thread PJRT client; the
-/// compiled grad_step is cached across runs of the same model).
+/// Execute one training config end to end on the calling thread.
+///
+/// Compiled executables come from [`exec_cache`] (per-worker PJRT client,
+/// compile-once per `(artifact, manifest hash)`), and every random draw —
+/// init, data order, eval batches — derives from `cfg.seed`, so the
+/// result is a pure function of the config: the scheduler can run it on
+/// any worker, in any order, and produce identical metrics.
 pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
     let schedule = Schedule::new(cfg.lr, cfg.warmup, cfg.steps);
 
     match &cfg.engine {
         EngineKind::Split => {
-            let engine = cached_grad_engine(&cfg.model)?;
+            let engine = exec_cache::grad_engine("artifacts", &cfg.model)?;
             let man = engine.manifest().clone();
             let mut data = make_data(&man, &cfg.data, cfg.seed)?;
 
@@ -443,15 +440,9 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
             })
         }
         EngineKind::Fused(ruleset) => {
-            let client = cpu_client()?;
-            let mut engine = TrainEngine::new(
-                "artifacts",
-                &cfg.model,
-                ruleset,
-                &client,
-                &cfg.init,
-                cfg.seed.wrapping_add(17),
-            )?;
+            let compiled = exec_cache::train_compiled("artifacts", &cfg.model, ruleset)?;
+            let mut engine =
+                TrainEngine::with_compiled(compiled, &cfg.init, cfg.seed.wrapping_add(17))?;
             if let Some(ws) = &cfg.warm_start {
                 engine.load_params(ws)?;
             }
@@ -478,24 +469,11 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
     }
 }
 
-/// Run a grid of configs on a worker pool; order preserved.
+/// Run a grid of configs on the work-stealing sweep scheduler; order
+/// preserved. Shorthand for `SweepScheduler::new(workers).run(configs)` —
+/// build a [`SweepScheduler`] directly for streaming or derived seeds.
 pub fn run_grid(configs: &[TrainConfig], workers: usize) -> Result<Vec<RunSummary>> {
-    let done = std::sync::atomic::AtomicUsize::new(0);
-    let total = configs.len();
-    parallel_map(configs, workers, |_, cfg| {
-        let out = run_config(cfg).map_err(|e| anyhow!("{}: {e}", cfg.label()));
-        let n = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
-        if let Ok(s) = &out {
-            eprintln!(
-                "  [{n}/{total}] {:40} loss={:.4} eval={:.4}{}",
-                s.label,
-                s.result.final_train_loss,
-                s.result.eval_loss,
-                if s.result.diverged { "  DIVERGED" } else { "" }
-            );
-        }
-        out
-    })
+    SweepScheduler::new(workers).run(configs)
 }
 
 #[cfg(test)]

@@ -1,0 +1,171 @@
+//! Work-stealing parallel sweep scheduler (DESIGN.md §9).
+//!
+//! [`SweepScheduler`] turns a grid of [`TrainConfig`]s into finished
+//! [`RunSummary`]s:
+//!
+//! * **Sharded dispatch** — jobs are assigned to workers by the artifact
+//!   they compile ([`SweepScheduler::artifact_key`]), so each worker's
+//!   thread-local executable cache (`exec_cache`) compiles every distinct
+//!   artifact once; idle workers steal across shards, so a one-artifact
+//!   sweep still uses the whole pool.
+//! * **Streaming results** — with [`SweepScheduler::stream_to`], each job
+//!   appends one JSONL row the moment it finishes (tail -f friendly; a
+//!   crashed sweep keeps every completed row) instead of reporting at
+//!   barrier end.
+//! * **Scheduling-invariant metrics** — every job's result is a pure
+//!   function of its config; seeds come from the config (or, with
+//!   [`SweepScheduler::run_seeded`], from `rng::job_seed(base, index)`),
+//!   never from worker identity. Serial and parallel runs of the same
+//!   grid are byte-identical, job for job.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::JsonlWriter;
+use crate::pool::{default_workers, parallel_map_sharded};
+use crate::rng::{job_seed, stable_hash64};
+
+use super::{run_config, EngineKind, RunSummary, TrainConfig};
+
+/// Parallel sweep scheduler; build with [`SweepScheduler::new`], then
+/// chain [`stream_to`](SweepScheduler::stream_to) /
+/// [`quiet`](SweepScheduler::quiet) and call [`run`](SweepScheduler::run).
+#[derive(Debug, Default)]
+pub struct SweepScheduler {
+    workers: usize,
+    stream: Option<PathBuf>,
+    quiet: bool,
+}
+
+impl SweepScheduler {
+    /// `workers == 0` means one worker per core (capped by job count).
+    pub fn new(workers: usize) -> SweepScheduler {
+        SweepScheduler {
+            workers,
+            stream: None,
+            quiet: false,
+        }
+    }
+
+    /// Append one JSONL row per job to `path` as jobs finish. Rows carry
+    /// the job's grid index and a metrics fingerprint, so partial sweeps
+    /// are resumable/diffable.
+    pub fn stream_to(mut self, path: impl Into<PathBuf>) -> SweepScheduler {
+        self.stream = Some(path.into());
+        self
+    }
+
+    /// Suppress the per-job progress lines on stderr.
+    pub fn quiet(mut self) -> SweepScheduler {
+        self.quiet = true;
+        self
+    }
+
+    /// The artifact a config will compile — the scheduler's shard key, so
+    /// same-artifact jobs land on the same worker's executable cache.
+    pub fn artifact_key(cfg: &TrainConfig) -> String {
+        match &cfg.engine {
+            EngineKind::Split => format!("{}.grad", cfg.model),
+            EngineKind::Fused(ruleset) => format!("{}.train.{ruleset}", cfg.model),
+        }
+    }
+
+    /// Run every config; summaries return in input order. Worker count
+    /// never changes results (`rust/tests/scheduler_determinism.rs`).
+    pub fn run(&self, configs: &[TrainConfig]) -> Result<Vec<RunSummary>> {
+        let total = configs.len();
+        let workers = if self.workers == 0 {
+            default_workers(total)
+        } else {
+            self.workers
+        };
+        // Append, never truncate: a crashed sweep keeps every completed
+        // row, which is what makes the streamed file resumable/diffable.
+        let sink: Option<Mutex<JsonlWriter>> = match &self.stream {
+            Some(path) => Some(Mutex::new(JsonlWriter::append(path)?)),
+            None => None,
+        };
+        let done = AtomicUsize::new(0);
+        parallel_map_sharded(
+            configs,
+            workers,
+            |_, cfg| stable_hash64(Self::artifact_key(cfg).as_bytes()),
+            |i, cfg| {
+                let summary =
+                    run_config(cfg).map_err(|e| anyhow!("{}: {e}", cfg.label()))?;
+                let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if !self.quiet {
+                    eprintln!(
+                        "  [{n}/{total}] {:40} loss={:.4} eval={:.4}{}",
+                        summary.label,
+                        summary.result.final_train_loss,
+                        summary.result.eval_loss,
+                        if summary.result.diverged { "  DIVERGED" } else { "" }
+                    );
+                }
+                if let Some(writer) = &sink {
+                    let mut row = summary.to_json();
+                    row.set("job", i).set(
+                        "fingerprint",
+                        format!("{:016x}", summary.result.fingerprint()),
+                    );
+                    writer.lock().unwrap().write(&row)?;
+                }
+                Ok(summary)
+            },
+        )
+    }
+
+    /// Like [`SweepScheduler::run`], but job `i` trains with the derived
+    /// seed `rng::job_seed(base_seed, i)`: independent draws per grid
+    /// point that remain a pure function of grid position, so replicate
+    /// sweeps stay scheduling-invariant.
+    pub fn run_seeded(
+        &self,
+        configs: &[TrainConfig],
+        base_seed: u64,
+    ) -> Result<Vec<RunSummary>> {
+        let seeded: Vec<TrainConfig> = configs
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| {
+                let mut cfg = cfg.clone();
+                cfg.seed = job_seed(base_seed, i as u64);
+                cfg
+            })
+            .collect();
+        self.run(&seeded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_keys_follow_engine_kind() {
+        let mut cfg = TrainConfig::lm("gpt_nano", "adam", 1e-3, 10);
+        assert_eq!(SweepScheduler::artifact_key(&cfg), "gpt_nano.grad");
+        cfg.engine = EngineKind::Fused("slimadam".into());
+        assert_eq!(
+            SweepScheduler::artifact_key(&cfg),
+            "gpt_nano.train.slimadam"
+        );
+    }
+
+    #[test]
+    fn run_seeded_derives_distinct_pure_seeds() {
+        let base = TrainConfig::lm("gpt_nano", "adam", 1e-3, 10);
+        let configs = vec![base.clone(), base.clone(), base];
+        // seeds are injected before any job runs; verify via the pure
+        // derivation rather than executing (no artifacts needed)
+        let s0 = crate::rng::job_seed(7, 0);
+        let s1 = crate::rng::job_seed(7, 1);
+        assert_ne!(s0, s1);
+        assert_eq!(s0, crate::rng::job_seed(7, 0));
+        assert_eq!(configs.len(), 3);
+    }
+}

@@ -11,7 +11,7 @@ use crate::coordinator::TrainConfig;
 use crate::metrics::results_dir;
 use crate::sweep::{log_grid, LrSweep};
 
-use super::{steps_or, workers_or_default, write_summary_md};
+use super::{steps_or, sweep_scheduler, write_summary_md};
 
 pub const OPTIMIZERS: &[&str] = &[
     "adam",
@@ -31,13 +31,14 @@ pub fn run(args: &Args) -> Result<()> {
     let opt_refs: Vec<&str> = opts.iter().map(|s| s.as_str()).collect();
 
     let base = TrainConfig::lm(&model, "adam", 1e-3, steps);
-    let workers = workers_or_default(args, opts.len() * lrs.len());
+    let (scheduler, workers) = sweep_scheduler(args, "fig1", opts.len() * lrs.len())?;
     println!(
-        "fig1: {model}, {} optimizers x {} LRs x {steps} steps ({workers} workers)",
+        "fig1: {model}, {} optimizers x {} LRs x {steps} steps ({workers} workers, \
+         streaming results/fig1/stream.jsonl)",
         opts.len(),
         lrs.len()
     );
-    let sweep = LrSweep::run(&base, &opt_refs, &lrs, workers)?;
+    let sweep = LrSweep::run_with(&base, &opt_refs, &lrs, &scheduler)?;
 
     let dir = results_dir("fig1")?;
     sweep.write_csv(dir.join("rows.csv"))?;

@@ -10,12 +10,12 @@
 use anyhow::Result;
 
 use crate::cli::Args;
-use crate::coordinator::{run_grid, DataSpec, TrainConfig};
+use crate::coordinator::{DataSpec, TrainConfig};
 use crate::metrics::{results_dir, CsvWriter};
 use crate::rules::RuleSet;
 use crate::runtime::KMode;
 
-use super::{probed_run, steps_or, workers_or_default, write_summary_md};
+use super::{probed_run, steps_or, sweep_scheduler, write_summary_md};
 
 /// In our (vocab, d) storage: token axis = fan_out (axis 0); embedding
 /// axis = fan_in (axis 1). "Compress along the token dimension" means
@@ -107,8 +107,8 @@ pub fn run(args: &Args) -> Result<()> {
             configs.push(cfg);
         }
     }
-    let workers = workers_or_default(args, configs.len());
-    let sums = run_grid(&configs, workers)?;
+    let (scheduler, _workers) = sweep_scheduler(args, "fig7", configs.len())?;
+    let sums = scheduler.run(&configs)?;
 
     let mut w2 = CsvWriter::create(
         dir.join("loss_gap.csv"),

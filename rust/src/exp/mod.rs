@@ -28,7 +28,7 @@ pub mod tables;
 use anyhow::{bail, Result};
 
 use crate::cli::Args;
-use crate::coordinator::{run_config, RunSummary, TrainConfig};
+use crate::coordinator::{run_config, RunSummary, SweepScheduler, TrainConfig};
 use crate::json::Value;
 use crate::metrics::{results_dir, JsonlWriter};
 use crate::runtime::Manifest;
@@ -107,6 +107,21 @@ pub fn workers_or_default(args: &Args, jobs: usize) -> usize {
         .ok()
         .filter(|&w| w > 0)
         .unwrap_or_else(|| crate::pool::default_workers(jobs))
+}
+
+/// Streaming sweep scheduler for an experiment grid: honors `--workers`
+/// and appends one JSONL row per job to `results/<id>/stream.jsonl` as
+/// jobs finish (partial sweeps keep every completed row). Returns the
+/// scheduler plus the resolved worker count for banner lines.
+pub fn sweep_scheduler(
+    args: &Args,
+    id: &str,
+    jobs: usize,
+) -> Result<(SweepScheduler, usize)> {
+    let workers = workers_or_default(args, jobs);
+    let scheduler = SweepScheduler::new(workers)
+        .stream_to(results_dir(id)?.join("stream.jsonl"));
+    Ok((scheduler, workers))
 }
 
 /// Run one probe-enabled config and return (summary, snr).

@@ -16,13 +16,14 @@
 //!
 //! Module map:
 //!
-//! * Substrates: [`json`], [`rng`], [`tensor`], [`cli`], [`pool`],
-//!   [`proptest`], [`benchkit`], [`metrics`]
+//! * Substrates: [`json`], [`rng`], [`tensor`], [`cli`], [`pool`]
+//!   (work-stealing sweep pool), [`proptest`], [`benchkit`], [`metrics`]
 //! * Runtime: [`runtime`] (PJRT client, manifests, engines)
 //! * The paper's system: [`optim`] (optimizer family), [`snr`] (Eq. 3/4),
 //!   [`rules`] (SNR → compression rules)
 //! * Workloads: [`data`] (corpora, images, BPE), [`train`] (loop driver),
-//!   [`coordinator`] (job orchestration), [`sweep`] (grids)
+//!   [`coordinator`] (job orchestration, the parallel sweep scheduler and
+//!   its compile-once executable cache — DESIGN.md §9), [`sweep`] (grids)
 //! * Reproduction: [`exp`] (one module per paper figure/table)
 
 pub mod benchkit;

@@ -7,6 +7,7 @@
 //! Subcommands:
 //!   exp <id>        reproduce a paper figure/table (fig1..fig30, table1..3, all)
 //!   train           run one training config
+//!   sweep           run an (optimizer × LR) grid on the parallel scheduler
 //!   snr             probe a run's second-moment SNR and print the layer table
 //!   rules           derive + save SlimAdam compression rules from an SNR probe
 //!   memory          optimizer-state memory accounting for a model
@@ -15,10 +16,11 @@
 use anyhow::{bail, Result};
 
 use slimadam::cli::{render_help, subcommand, Args, OptSpec};
-use slimadam::coordinator::{run_config, DataSpec, TrainConfig};
+use slimadam::coordinator::{exec_cache, run_config, DataSpec, SweepScheduler, TrainConfig};
 use slimadam::optim::presets;
 use slimadam::rules::RuleSet;
 use slimadam::snr::ProbeSchedule;
+use slimadam::sweep::{log_grid, LrSweep};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -28,7 +30,15 @@ fn main() {
     }
 }
 
-const FLAGS: &[&str] = &["help", "all", "repretrain", "fused", "corpus", "default-init"];
+const FLAGS: &[&str] = &[
+    "help",
+    "all",
+    "repretrain",
+    "fused",
+    "corpus",
+    "default-init",
+    "seed-jobs",
+];
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
     let Ok((cmd, rest)) = subcommand(argv) else {
@@ -55,6 +65,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
             slimadam::exp::run(&id, &args)
         }
         "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
         "snr" => cmd_snr(&args),
         "rules" => cmd_rules(&args),
         "memory" => cmd_memory(&args),
@@ -75,6 +86,7 @@ fn print_global_help() {
          Commands:\n\
          \x20 exp <id>   reproduce a paper figure/table (see `slimadam exp --help`)\n\
          \x20 train      run one training config\n\
+         \x20 sweep      run an (optimizer × LR) grid on the parallel scheduler\n\
          \x20 snr        probe second-moment SNR along an Adam run\n\
          \x20 rules      derive SlimAdam compression rules from an SNR probe\n\
          \x20 memory     optimizer-state memory accounting\n\
@@ -166,6 +178,66 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(m) = &s.memory {
         println!("{}", m.row());
     }
+    Ok(())
+}
+
+/// Run an (optimizer × LR) grid on the work-stealing sweep scheduler,
+/// with optional streaming JSONL and CSV sinks.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("slimadam", "sweep", "run an (optimizer × LR) grid on the parallel scheduler", &[
+                OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano"), is_flag: false },
+                OptSpec { name: "optimizers", help: "comma-separated optimizer presets", default: Some("adam,slimadam"), is_flag: false },
+                OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("log grid 1e-4..1e-2, 4 pts"), is_flag: false },
+                OptSpec { name: "steps", help: "training steps per job", default: Some("100"), is_flag: false },
+                OptSpec { name: "workers", help: "worker threads (0 = one per core)", default: Some("0"), is_flag: false },
+                OptSpec { name: "stream", help: "append per-job JSONL rows to this path as jobs finish", default: None, is_flag: false },
+                OptSpec { name: "csv", help: "write the finished sweep table to this CSV path", default: None, is_flag: false },
+                OptSpec { name: "seed-jobs", help: "derive an independent seed per grid point (default: paired)", default: None, is_flag: true },
+            ])
+        );
+        return Ok(());
+    }
+    let base = base_config(args)?;
+    let opts = args.str_list("optimizers", &["adam", "slimadam"]);
+    let opt_refs: Vec<&str> = opts.iter().map(|s| s.as_str()).collect();
+    let lrs = args.f64_list("lrs", &log_grid(1e-4, 1e-2, 4))?;
+    let workers = args.usize_or("workers", 0)?;
+
+    let mut scheduler = SweepScheduler::new(workers);
+    if let Some(path) = args.get("stream") {
+        scheduler = scheduler.stream_to(path);
+    }
+    println!(
+        "sweep: {} × {} optimizers × {} LRs, {} steps each",
+        base.model,
+        opts.len(),
+        lrs.len(),
+        base.steps
+    );
+    let sweep = if args.flag("seed-jobs") {
+        LrSweep::run_seeded(&base, &opt_refs, &lrs, &scheduler, base.seed)
+    } else {
+        LrSweep::run_with(&base, &opt_refs, &lrs, &scheduler)
+    }?;
+
+    println!("\n{}", sweep.chart("sweep — final loss vs learning rate"));
+    for (i, name) in sweep.optimizers.iter().enumerate() {
+        let (lr, loss) = sweep.best(i);
+        println!("{name:16} best lr {lr:.2e} -> loss {loss:.4}");
+    }
+    if let Some(path) = args.get("csv") {
+        sweep.write_csv(path)?;
+        println!("wrote {path}");
+    }
+    let stats = exec_cache::stats();
+    println!(
+        "executable cache: {} hits, {} compiles",
+        stats.hits,
+        stats.compiles()
+    );
     Ok(())
 }
 

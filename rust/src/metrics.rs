@@ -30,6 +30,21 @@ impl JsonlWriter {
         Ok(JsonlWriter { file, path })
     }
 
+    /// Open for appending (creating if absent): sinks whose rows must
+    /// survive a re-run, e.g. the sweep scheduler's streamed results.
+    pub fn append(path: impl AsRef<Path>) -> Result<JsonlWriter> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("appending to {path:?}"))?;
+        Ok(JsonlWriter { file, path })
+    }
+
     pub fn write(&mut self, v: &Value) -> Result<()> {
         writeln!(self.file, "{}", v.dump())?;
         Ok(())
@@ -184,6 +199,23 @@ mod tests {
         let mut v = Value::obj();
         v.set("a", 1usize);
         w.write(&v).unwrap();
+        w.write(&v).unwrap();
+        drop(w);
+        let text = fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_append_preserves_existing_rows() {
+        let dir = std::env::temp_dir().join("slimadam_test_jsonl_append");
+        let path = dir.join("x.jsonl");
+        let mut v = Value::obj();
+        v.set("a", 1usize);
+        let mut w = JsonlWriter::append(&path).unwrap();
+        w.write(&v).unwrap();
+        drop(w);
+        let mut w = JsonlWriter::append(&path).unwrap(); // reopen: no truncation
         w.write(&v).unwrap();
         drop(w);
         let text = fs::read_to_string(&path).unwrap();

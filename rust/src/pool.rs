@@ -1,11 +1,24 @@
 //! Thread-pool substrate — replaces `rayon`/`tokio` for sweep fan-out.
 //!
-//! [`parallel_map`] runs a job per input on a bounded set of worker
-//! threads and returns outputs in input order. Workers pull indices from a
-//! shared atomic counter (work stealing is unnecessary: sweep jobs are
-//! coarse — a whole training run each). Panics in jobs are converted to
-//! errors rather than poisoning the whole sweep.
+//! Two schedulers, both returning outputs in input order and converting
+//! job panics into errors rather than poisoning the whole sweep:
+//!
+//! * [`parallel_map`] — workers pull indices from a shared atomic
+//!   counter. Best when jobs are interchangeable: dispatch order is
+//!   global FIFO, so no worker idles while work remains.
+//! * [`parallel_map_sharded`] — the sweep scheduler's engine
+//!   (DESIGN.md §9). Jobs are pre-assigned to per-worker deques by a
+//!   caller-supplied shard key (same key → same worker, which keeps
+//!   per-thread caches such as the compiled-executable cache hot), and a
+//!   worker whose deque drains steals from the back of the fullest
+//!   remaining deque, so locality never costs utilization.
+//!
+//! Scheduling never influences results: a job's output is a pure
+//! function of its input, and both schedulers write into an
+//! index-addressed slot table, so worker count and steal order are
+//! unobservable downstream (`rust/tests/scheduler_determinism.rs`).
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -49,6 +62,100 @@ where
                     .unwrap_or_else(|p| {
                         // `p.as_ref()` (not `&p`) so we downcast the payload,
                         // not the Box itself.
+                        Err(anyhow!("job {i} panicked: {}", panic_msg(p.as_ref())))
+                    });
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .unwrap_or_else(|| Err(anyhow!("job {i} produced no result")))
+        })
+        .collect()
+}
+
+/// Locality-aware work-stealing variant of [`parallel_map`].
+///
+/// `shard(i, &inputs[i])` maps each job to a shard key; jobs with the
+/// same key land on the same worker's deque (key-stable assignment:
+/// `key % workers`). Each worker pops its own deque from the front —
+/// preserving submission order within a shard — and, once empty, steals
+/// from the back of the fullest other deque. Outputs are returned in
+/// input order regardless of which worker ran what.
+///
+/// Use this over [`parallel_map`] when jobs carry per-thread cached
+/// state keyed by something coarser than the job (e.g. sweep jobs keyed
+/// by their compiled artifact): sharding maximizes cache hits, stealing
+/// bounds the tail latency of an unlucky shard.
+pub fn parallel_map_sharded<I, O, F, S>(
+    inputs: &[I],
+    workers: usize,
+    shard: S,
+    f: F,
+) -> Result<Vec<O>>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &I) -> Result<O> + Sync,
+    S: Fn(usize, &I) -> u64,
+{
+    let n = inputs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.clamp(1, n);
+
+    let mut assign: Vec<VecDeque<usize>> = (0..workers).map(|_| VecDeque::new()).collect();
+    for i in 0..n {
+        let w = (shard(i, &inputs[i]) % workers as u64) as usize;
+        assign[w].push_back(i);
+    }
+    let deques: Vec<Mutex<VecDeque<usize>>> = assign.into_iter().map(Mutex::new).collect();
+    let slots: Vec<Mutex<Option<Result<O>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let deques = &deques;
+            let slots = &slots;
+            let f = &f;
+            scope.spawn(move || loop {
+                // Own deque first (front: submission order within the shard)…
+                let own = deques[w].lock().unwrap().pop_front();
+                let i = match own {
+                    Some(i) => i,
+                    None => {
+                        // …then steal from the back of the fullest other
+                        // deque. Jobs are only ever removed, so an
+                        // all-empty scan means this worker is done; a
+                        // steal lost to a race just rescans.
+                        let mut victim = None;
+                        let mut victim_len = 0;
+                        for (v, dq) in deques.iter().enumerate() {
+                            if v == w {
+                                continue;
+                            }
+                            let len = dq.lock().unwrap().len();
+                            if len > victim_len {
+                                victim_len = len;
+                                victim = Some(v);
+                            }
+                        }
+                        let Some(v) = victim else { break };
+                        match deques[v].lock().unwrap().pop_back() {
+                            Some(i) => i,
+                            None => continue,
+                        }
+                    }
+                };
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, &inputs[i])))
+                    .unwrap_or_else(|p| {
                         Err(anyhow!("job {i} panicked: {}", panic_msg(p.as_ref())))
                     });
                 *slots[i].lock().unwrap() = Some(out);
@@ -149,6 +256,58 @@ mod tests {
         });
         let err = format!("{:#}", res.unwrap_err());
         assert!(err.contains("kaboom"), "{err}");
+    }
+
+    #[test]
+    fn sharded_maps_in_order() {
+        let inputs: Vec<usize> = (0..100).collect();
+        // shard by value parity: two shards on four workers
+        let out =
+            parallel_map_sharded(&inputs, 4, |_, &x| (x % 2) as u64, |_, &x| Ok(x * 2))
+                .unwrap();
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sharded_empty_input() {
+        let out: Vec<usize> =
+            parallel_map_sharded(&[], 4, |_, _: &usize| 0, |_, _x: &usize| Ok(1)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn sharded_steals_from_hot_shard() {
+        use std::sync::atomic::AtomicUsize;
+        // every job lands on shard 0; stealing must still engage all workers
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let inputs: Vec<usize> = (0..16).collect();
+        let out = parallel_map_sharded(&inputs, 4, |_, _| 0, |_, &x| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(15));
+            live.fetch_sub(1, Ordering::SeqCst);
+            Ok(x)
+        })
+        .unwrap();
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+        assert!(
+            peak.load(Ordering::SeqCst) >= 2,
+            "work stealing never engaged a second worker"
+        );
+    }
+
+    #[test]
+    fn sharded_panic_becomes_error() {
+        let inputs = vec![0usize, 1, 2, 3];
+        let res = parallel_map_sharded(&inputs, 2, |i, _| i as u64, |_, &x| {
+            if x == 3 {
+                panic!("sharded kaboom");
+            }
+            Ok(x)
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("sharded kaboom"), "{err}");
     }
 
     #[test]

@@ -148,6 +148,27 @@ fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
     ((wide >> 64) as u64, wide as u64)
 }
 
+/// FNV-1a over raw bytes: the stable, dependency-free digest used for
+/// executable-cache keys (manifest hashes) and run fingerprints. Not
+/// cryptographic — collision resistance is "good enough for cache keys".
+pub fn stable_hash64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic per-job seed: a SplitMix64 mix of a sweep's base seed
+/// and the job's grid index. A pure function of the job spec — never of
+/// worker assignment or completion order — so parallel and serial sweeps
+/// draw byte-identical streams (see `rust/tests/scheduler_determinism.rs`).
+pub fn job_seed(base: u64, job_index: u64) -> u64 {
+    let mut s = base ^ job_index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
 /// Precomputed Zipf CDF with O(log n) sampling — the unigram backbone of
 /// the synthetic heavy-tailed corpus (paper §4.1).
 #[derive(Debug, Clone)]
@@ -200,6 +221,30 @@ impl ZipfTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stable_hash_reference_values() {
+        // FNV-1a offset basis for empty input; must never change across
+        // refactors (executable-cache keys persist in stream logs).
+        assert_eq!(stable_hash64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(stable_hash64(b"a"), stable_hash64(b"a"));
+        assert_ne!(
+            stable_hash64(b"gpt_nano.grad"),
+            stable_hash64(b"gpt_nano.train.adam")
+        );
+    }
+
+    #[test]
+    fn job_seeds_pure_and_distinct() {
+        let a: Vec<u64> = (0..64).map(|i| job_seed(42, i)).collect();
+        let b: Vec<u64> = (0..64).map(|i| job_seed(42, i)).collect();
+        assert_eq!(a, b);
+        let mut dedup = a.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), a.len(), "job seed collision");
+        assert_ne!(job_seed(42, 0), job_seed(43, 0));
+    }
 
     #[test]
     fn deterministic() {

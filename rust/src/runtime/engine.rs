@@ -10,6 +10,7 @@
 //!   next dispatch — the production hot path.
 
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
@@ -38,6 +39,11 @@ pub enum BatchData {
 pub struct Artifact {
     pub manifest: Manifest,
     pub hlo_path: PathBuf,
+    /// Stable digest of the manifest JSON bytes. Together with the
+    /// artifact name this keys the executable cache
+    /// (`coordinator::exec_cache`): re-lowering an artifact changes its
+    /// manifest, so stale compiled executables can never be reused.
+    pub manifest_hash: u64,
 }
 
 impl Artifact {
@@ -51,9 +57,16 @@ impl Artifact {
                 "artifact {name:?} not found in {dir:?} — run `make artifacts`"
             );
         }
-        let manifest = Manifest::load(&man_path)?;
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?}"))?;
+        let manifest = Manifest::parse(&text)?;
         manifest.validate()?;
-        Ok(Artifact { manifest, hlo_path })
+        let manifest_hash = crate::rng::stable_hash64(text.as_bytes());
+        Ok(Artifact {
+            manifest,
+            hlo_path,
+            manifest_hash,
+        })
     }
 
     /// Compile on the given client.
@@ -116,6 +129,12 @@ pub struct GradEngine {
 impl GradEngine {
     pub fn new(dir: impl AsRef<Path>, model: &str, client: &PjRtClient) -> Result<GradEngine> {
         let art = Artifact::load(dir, &format!("{model}.grad"))?;
+        Self::from_artifact(&art, client)
+    }
+
+    /// Compile an already-loaded grad artifact (the executable cache's
+    /// miss path — it loads the artifact itself to learn the cache key).
+    pub fn from_artifact(art: &Artifact, client: &PjRtClient) -> Result<GradEngine> {
         anyhow::ensure!(art.manifest.kind == "grad_step");
         Ok(GradEngine {
             compiled: art.compile(client)?,
@@ -152,8 +171,12 @@ impl GradEngine {
 
 /// Fused engine: one PJRT dispatch per training step; parameter and
 /// optimizer state stay in literals between steps.
+///
+/// The compiled executable is held behind `Rc` so sweeps can share one
+/// compilation across many engine instances on the same worker thread
+/// (each run still owns private state literals).
 pub struct TrainEngine {
-    compiled: Compiled,
+    compiled: Rc<Compiled>,
     /// params..., m..., v... in manifest order
     state: Vec<Literal>,
     pub step_idx: usize,
@@ -181,7 +204,16 @@ impl TrainEngine {
     ) -> Result<TrainEngine> {
         let art = Artifact::load(dir, &format!("{model}.train.{ruleset}"))?;
         anyhow::ensure!(art.manifest.kind == "train_step");
-        let compiled = art.compile(client)?;
+        Self::with_compiled(Rc::new(art.compile(client)?), init_scheme, seed)
+    }
+
+    /// Build an engine over an already-compiled (possibly cached, shared)
+    /// train-step executable, initializing fresh parameter/optimizer state.
+    pub fn with_compiled(
+        compiled: Rc<Compiled>,
+        init_scheme: &str,
+        seed: u64,
+    ) -> Result<TrainEngine> {
         let man = &compiled.manifest;
 
         let mut rng = crate::rng::Rng::new(seed);

@@ -31,6 +31,25 @@ pub const VAR_FLOOR: f64 = 1e-30;
 ///   columns.
 /// * `KMode::FanIn` reduces over columns (axis 1); outer mean over rows.
 /// * `KMode::Both` reduces over everything (single group).
+///
+/// Groups whose variance underflows [`VAR_FLOOR`] (e.g. constant slices)
+/// report a very large finite SNR: a constant slice is perfectly
+/// described by its mean, hence perfectly compressible.
+///
+/// ```
+/// use slimadam::runtime::KMode;
+/// use slimadam::snr::snr_of_view;
+///
+/// // Rows are constant -> each row is its own mean: compressing along
+/// // fan_in (averaging within rows) loses nothing, so SNR is huge...
+/// let v = [1.0f32, 1.0, 1.0, 5.0, 5.0, 5.0];
+/// assert!(snr_of_view(2, 3, &v, KMode::FanIn) > 1e6);
+///
+/// // ...while collapsing the whole tensor to one scalar mixes the two
+/// // distinct rows: mean 3, variance 4 -> SNR = 9/4, "averse" zone.
+/// let both = snr_of_view(2, 3, &v, KMode::Both);
+/// assert!((both - 2.25).abs() < 1e-9);
+/// ```
 pub fn snr_of_view(rows: usize, cols: usize, data: &[f32], k: KMode) -> f64 {
     debug_assert_eq!(rows * cols, data.len());
     let group = |s1: f64, s2: f64, n: f64| -> f64 {
@@ -357,6 +376,48 @@ mod tests {
         assert!(fan_out < 1.0, "{fan_out}");
         // rows themselves are constant -> fan_in SNR huge
         assert!(fan_in > 1e3, "{fan_in}");
+    }
+
+    #[test]
+    fn degenerate_1xn_and_nx1_views() {
+        // 1×N: fan_out groups are single elements (zero variance → floor
+        // → huge SNR); fan_in is ordinary row statistics. N×1 mirrors it.
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mean: f64 = 2.5;
+        let var: f64 = 1.25; // E[x²] − mean² = 7.5 − 6.25
+        let want = mean * mean / var;
+
+        let fo = snr_of_view(1, 4, &data, KMode::FanOut);
+        assert!(fo > 1e20, "1xN fan_out should hit the floor: {fo}");
+        let fi = snr_of_view(1, 4, &data, KMode::FanIn);
+        assert!((fi - want).abs() < 1e-9, "{fi} vs {want}");
+
+        let fo2 = snr_of_view(4, 1, &data, KMode::FanOut);
+        assert!((fo2 - want).abs() < 1e-9, "{fo2} vs {want}");
+        let fi2 = snr_of_view(4, 1, &data, KMode::FanIn);
+        assert!(fi2 > 1e20, "Nx1 fan_in should hit the floor: {fi2}");
+
+        // Both-mode agrees between the two layouts (same flat data)
+        let b1 = snr_of_view(1, 4, &data, KMode::Both);
+        let b2 = snr_of_view(4, 1, &data, KMode::Both);
+        assert!((b1 - b2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_slices_hit_var_floor_exactly() {
+        // Row r holds the constant r+1: each fan_in group has zero
+        // variance, so SNR_r = (r+1)² / VAR_FLOOR and the outer mean is
+        // the exact average of those floored ratios.
+        let mut data = vec![0.0f32; 3 * 5];
+        for r in 0..3 {
+            for c in 0..5 {
+                data[r * 5 + c] = (r + 1) as f32;
+            }
+        }
+        let fi = snr_of_view(3, 5, &data, KMode::FanIn);
+        let want = (1.0 + 4.0 + 9.0) / 3.0 / VAR_FLOOR;
+        assert!((fi - want).abs() / want < 1e-9, "{fi} vs {want}");
+        assert!(fi.is_finite(), "floor must keep SNR finite");
     }
 
     #[test]

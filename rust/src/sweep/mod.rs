@@ -1,12 +1,21 @@
 //! Sweep harness: LR grids, optimizer comparisons, cutoff×LR savings
 //! grids — the machinery behind every multi-run figure.
+//!
+//! Execution contract (DESIGN.md §9): grids are flattened to a config
+//! list in `(optimizer, lr)` row-major order and handed to the
+//! [`SweepScheduler`], which shards jobs across workers by artifact,
+//! steals work when a shard drains, and keeps per-job metrics a pure
+//! function of the config — so `workers = 1` and `workers = N` produce
+//! identical [`LrSweep`]s. Every grid point shares the base config's
+//! seed, which pairs the optimizer curves on identical data streams
+//! (the paper's comparison setup); use [`LrSweep::run_seeded`] when grid
+//! points should instead draw independent derived seeds.
 
 use anyhow::Result;
 
-use crate::coordinator::{run_grid, RunSummary, TrainConfig};
+use crate::coordinator::{RunSummary, SweepScheduler, TrainConfig};
 use crate::json::Value;
 use crate::metrics::{ascii_chart, CsvWriter};
-use crate::pool::default_workers;
 
 /// The paper's LR grids are log-spaced; this helper builds one.
 pub fn log_grid(lo: f64, hi: f64, points: usize) -> Vec<f64> {
@@ -26,14 +35,14 @@ pub struct LrSweep {
 }
 
 impl LrSweep {
-    /// Run the sweep: `base` provides everything except optimizer and lr.
-    pub fn run(
+    /// Flatten the `(optimizer × lr)` grid into scheduler jobs,
+    /// row-major: job index = `opt_idx * lrs.len() + lr_idx`.
+    fn build_configs(
         base: &TrainConfig,
         optimizers: &[&str],
         lrs: &[f64],
-        workers: usize,
-    ) -> Result<LrSweep> {
-        let mut configs = Vec::new();
+    ) -> Vec<TrainConfig> {
+        let mut configs = Vec::with_capacity(optimizers.len() * lrs.len());
         for opt in optimizers {
             for &lr in lrs {
                 let mut cfg = base.clone();
@@ -42,22 +51,63 @@ impl LrSweep {
                 configs.push(cfg);
             }
         }
-        let workers = if workers == 0 {
-            default_workers(configs.len())
-        } else {
-            workers
-        };
-        let flat = run_grid(&configs, workers)?;
+        configs
+    }
+
+    fn collect(
+        optimizers: &[&str],
+        lrs: &[f64],
+        flat: Vec<RunSummary>,
+    ) -> LrSweep {
         let mut summaries = Vec::new();
         let mut it = flat.into_iter();
         for _ in optimizers {
             summaries.push((&mut it).take(lrs.len()).collect());
         }
-        Ok(LrSweep {
+        LrSweep {
             optimizers: optimizers.iter().map(|s| s.to_string()).collect(),
             lrs: lrs.to_vec(),
             summaries,
-        })
+        }
+    }
+
+    /// Run the sweep: `base` provides everything except optimizer and lr.
+    /// `workers == 0` means one per core.
+    pub fn run(
+        base: &TrainConfig,
+        optimizers: &[&str],
+        lrs: &[f64],
+        workers: usize,
+    ) -> Result<LrSweep> {
+        Self::run_with(base, optimizers, lrs, &SweepScheduler::new(workers))
+    }
+
+    /// Run on a caller-configured scheduler (worker count, streaming
+    /// JSONL sink). Grid points share `base.seed` — paired curves.
+    pub fn run_with(
+        base: &TrainConfig,
+        optimizers: &[&str],
+        lrs: &[f64],
+        scheduler: &SweepScheduler,
+    ) -> Result<LrSweep> {
+        let configs = Self::build_configs(base, optimizers, lrs);
+        let flat = scheduler.run(&configs)?;
+        Ok(Self::collect(optimizers, lrs, flat))
+    }
+
+    /// Like [`LrSweep::run_with`] but each grid point trains with the
+    /// deterministic derived seed `rng::job_seed(base_seed, job_index)` —
+    /// independent draws per point, still scheduling-invariant.
+    pub fn run_seeded(
+        base: &TrainConfig,
+        optimizers: &[&str],
+        lrs: &[f64],
+        scheduler: &SweepScheduler,
+        base_seed: u64,
+    ) -> Result<LrSweep> {
+        let configs = Self::build_configs(base, optimizers, lrs);
+        let flat = scheduler.run_seeded(&configs, base_seed)?;
+        Ok(Self::collect(optimizers, lrs, flat))
     }
 
     /// Loss metric used by the paper's sensitivity plots: eval loss if

@@ -32,7 +32,19 @@ impl Schedule {
         }
     }
 
-    /// LR at 1-based step `t`.
+    /// LR at 1-based step `t`: linear warmup to `base_lr`, then cosine
+    /// decay to `base_lr * min_ratio`, held flat past `total`.
+    ///
+    /// ```
+    /// use slimadam::train::Schedule;
+    ///
+    /// let s = Schedule::new(1e-3, 10, 100);
+    /// assert!((s.lr(5) - 5e-4).abs() < 1e-12);    // linear warmup
+    /// assert!((s.lr(10) - 1e-3).abs() < 1e-12);   // peak at warmup end
+    /// assert!(s.lr(55) < 1e-3 && s.lr(55) > 1e-4); // cosine decay
+    /// assert!((s.lr(100) - 1e-4).abs() < 1e-12);  // floor: base_lr / 10
+    /// assert_eq!(s.lr(400), s.lr(100));           // flat after `total`
+    /// ```
     pub fn lr(&self, t: usize) -> f64 {
         if self.warmup > 0 && t <= self.warmup {
             return self.base_lr * t as f64 / self.warmup as f64;
@@ -60,6 +72,25 @@ pub struct RunResult {
     pub diverged: bool,
     pub probe: SnrProbe,
     pub wallclock_s: f64,
+}
+
+impl RunResult {
+    /// Order-stable digest of the run's metrics: every `(step, loss)`
+    /// pair bit-exactly, plus final/eval loss and the divergence flag.
+    /// Two runs are "byte-identical" iff their fingerprints match — the
+    /// scheduler's determinism tests and streamed JSONL rows rely on
+    /// this (wall-clock and probe data are deliberately excluded).
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(self.losses.len() * 12 + 17);
+        for &(step, loss) in &self.losses {
+            bytes.extend_from_slice(&(step as u64).to_le_bytes());
+            bytes.extend_from_slice(&loss.to_bits().to_le_bytes());
+        }
+        bytes.extend_from_slice(&self.final_train_loss.to_bits().to_le_bytes());
+        bytes.extend_from_slice(&self.eval_loss.to_bits().to_le_bytes());
+        bytes.push(self.diverged as u8);
+        crate::rng::stable_hash64(&bytes)
+    }
 }
 
 fn finalize(
@@ -275,6 +306,27 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fingerprint_tracks_metrics_not_timing() {
+        let base = RunResult {
+            losses: vec![(1, 2.0), (2, 1.5)],
+            final_train_loss: 1.5,
+            eval_loss: 1.6,
+            diverged: false,
+            probe: SnrProbe::new(),
+            wallclock_s: 1.0,
+        };
+        let mut same = base.clone();
+        same.wallclock_s = 99.0; // wall-clock must not affect identity
+        assert_eq!(base.fingerprint(), same.fingerprint());
+        let mut diff = base.clone();
+        diff.losses[1].1 = 1.500_000_1;
+        assert_ne!(base.fingerprint(), diff.fingerprint());
+        let mut div = base.clone();
+        div.diverged = true;
+        assert_ne!(base.fingerprint(), div.fingerprint());
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Scheduler invariants (DESIGN.md §9): worker count must never change
+//! sweep results — per-job metrics are a pure function of the config —
+//! and the executable cache must make compilation per-worker-once, not
+//! per-job.
+//!
+//! The artifact-backed test self-skips when `make artifacts` has not run
+//! (same convention as the other integration suites); the scheduling
+//! substrate itself is exercised unconditionally.
+//!
+//! Note: only one test here may touch `exec_cache`'s global counters —
+//! libtest runs tests in this binary concurrently.
+
+use slimadam::coordinator::{exec_cache, SweepScheduler, TrainConfig};
+use slimadam::pool::parallel_map_sharded;
+use slimadam::rng::job_seed;
+
+#[test]
+fn sharded_pool_output_is_worker_independent() {
+    let inputs: Vec<u64> = (0..64).collect();
+    let run = |workers: usize| {
+        parallel_map_sharded(&inputs, workers, |_, &x| x % 3, |i, &x| {
+            Ok(x.wrapping_mul(31).wrapping_add(i as u64))
+        })
+        .unwrap()
+    };
+    let serial = run(1);
+    for workers in [2, 4, 8] {
+        assert_eq!(run(workers), serial, "workers={workers}");
+    }
+}
+
+#[test]
+fn job_seeds_survive_roundtrips() {
+    // the derived seeds a sweep injects are pure functions of (base, index)
+    let a: Vec<u64> = (0..16).map(|i| job_seed(9, i)).collect();
+    let b: Vec<u64> = (0..16).map(|i| job_seed(9, i)).collect();
+    assert_eq!(a, b);
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/linear2_v64.grad.hlo.txt").exists()
+}
+
+/// The acceptance test for the parallel scheduler: an 8-point LR sweep
+/// at `--workers 4` produces byte-identical per-job metrics to the
+/// serial run, and each distinct artifact compiles at most once per
+/// worker (asserted via the cache counters).
+#[test]
+fn parallel_sweep_matches_serial_and_compiles_once_per_worker() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut configs = Vec::new();
+    for i in 0..8 {
+        let mut cfg = TrainConfig::lm("linear2_v64", "adam", 1e-3, 8);
+        cfg.lr = 1e-3 * (1.0 + 0.2 * i as f64);
+        cfg.eval_batches = 2;
+        configs.push(cfg);
+    }
+
+    exec_cache::reset_stats();
+    let serial = SweepScheduler::new(1).quiet().run(&configs).unwrap();
+    let s1 = exec_cache::stats();
+    assert_eq!(s1.hits + s1.misses, 8, "{s1:?}");
+    assert!(s1.compiles() <= 1, "serial worker recompiled: {s1:?}");
+
+    exec_cache::reset_stats();
+    let parallel = SweepScheduler::new(4).quiet().run(&configs).unwrap();
+    let s2 = exec_cache::stats();
+    assert_eq!(s2.hits + s2.misses, 8, "{s2:?}");
+    assert!(
+        s2.compiles() <= 4,
+        "one distinct artifact × 4 workers must compile ≤ 4 times: {s2:?}"
+    );
+
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(
+            a.result.fingerprint(),
+            b.result.fingerprint(),
+            "parallel metrics diverged from serial for {}",
+            a.label
+        );
+        assert_eq!(a.result.losses, b.result.losses, "{}", a.label);
+    }
+}

@@ -1,0 +1,344 @@
+//! Vendored offline stub of the `xla` PJRT bindings.
+//!
+//! This repo builds without network access or the `xla_extension` C++
+//! runtime, so the binding crate is vendored as a path dependency with
+//! the exact API surface the coordinator uses (DESIGN.md §2). Two tiers:
+//!
+//! * **Host containers are fully functional.** [`Literal`] really stores
+//!   f32 / i32 arrays with shapes, so the conversion layer
+//!   (`runtime::literal`) and its tests run unmodified.
+//! * **Compilation and execution are stubbed.** [`HloModuleProto::from_text_file`],
+//!   [`PjRtClient::compile`] and [`PjRtLoadedExecutable::execute`] return a
+//!   descriptive error. Swapping this crate for the real bindings (plus
+//!   `make artifacts`) lights up the full training path; no coordinator
+//!   code changes.
+//!
+//! Threading contract: the real PJRT wrapper types are not `Send`, and the
+//! coordinator's per-worker client/cache architecture depends on that. The
+//! stub types carry a `PhantomData<*const ()>` marker so the compiler
+//! enforces the same constraint in offline builds.
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Error type for all stubbed and functional operations.
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "xla stub: {what} requires the PJRT backend (xla_extension); \
+             this build vendors the offline stub — see DESIGN.md §2"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Marker making a type `!Send`/`!Sync`, matching the real bindings.
+type NotThreadSafe = PhantomData<*const ()>;
+
+#[derive(Clone, Debug, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: an element buffer plus a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Element types storable in a [`Literal`] (f32 and i32, the two the
+/// artifact manifests use).
+pub trait NativeType: Copy + sealed::Sealed {
+    #[doc(hidden)]
+    fn make_literal(v: Vec<Self>, dims: Vec<i64>) -> Literal;
+    #[doc(hidden)]
+    fn read_literal(l: &Literal) -> Result<Vec<Self>>;
+    #[doc(hidden)]
+    fn refill_literal(l: &mut Literal, src: &[Self]) -> Result<()>;
+}
+
+impl NativeType for f32 {
+    fn make_literal(v: Vec<f32>, dims: Vec<i64>) -> Literal {
+        Literal {
+            dims,
+            payload: Payload::F32(v),
+        }
+    }
+
+    fn read_literal(l: &Literal) -> Result<Vec<f32>> {
+        match &l.payload {
+            Payload::F32(v) => Ok(v.clone()),
+            _ => Err(Error("f32 read of a non-f32 literal".into())),
+        }
+    }
+
+    fn refill_literal(l: &mut Literal, src: &[f32]) -> Result<()> {
+        match &mut l.payload {
+            Payload::F32(v) if v.len() == src.len() => {
+                v.copy_from_slice(src);
+                Ok(())
+            }
+            _ => Err(Error("copy_raw_from: dtype or length mismatch".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn make_literal(v: Vec<i32>, dims: Vec<i64>) -> Literal {
+        Literal {
+            dims,
+            payload: Payload::I32(v),
+        }
+    }
+
+    fn read_literal(l: &Literal) -> Result<Vec<i32>> {
+        match &l.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            _ => Err(Error("i32 read of a non-i32 literal".into())),
+        }
+    }
+
+    fn refill_literal(l: &mut Literal, src: &[i32]) -> Result<()> {
+        match &mut l.payload {
+            Payload::I32(v) if v.len() == src.len() => {
+                v.copy_from_slice(src);
+                Ok(())
+            }
+            _ => Err(Error("copy_raw_from: dtype or length mismatch".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::make_literal(v.to_vec(), vec![v.len() as i64])
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::make_literal(vec![v], Vec::new())
+    }
+
+    /// Tuple literal (what executables return as their single output).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            payload: Payload::Tuple(elements),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(_) => 0,
+        }
+    }
+
+    /// Same buffer, new shape; errors when element counts differ.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            payload: self.payload.clone(),
+        })
+    }
+
+    /// Array shape (dims); errors on tuple literals.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.payload {
+            Payload::Tuple(_) => Err(Error("array_shape of a tuple literal".into())),
+            _ => Ok(ArrayShape {
+                dims: self.dims.clone(),
+            }),
+        }
+    }
+
+    /// Copy the element buffer out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read_literal(self)
+    }
+
+    /// In-place refill of the element buffer (no reallocation).
+    pub fn copy_raw_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        T::refill_literal(self, src)
+    }
+
+    /// First element (the scalar read used for loss / grad-norm outputs).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::read_literal(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("get_first_element of an empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(v) => Ok(v),
+            _ => Err(Error("to_tuple of a non-tuple literal".into())),
+        }
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text; loading errors out.
+pub struct HloModuleProto {
+    _marker: NotThreadSafe,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub("parsing HLO text"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation {
+    _marker: NotThreadSafe,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _marker: PhantomData,
+        }
+    }
+}
+
+/// A PJRT client. The stub constructs (so worker pools can stand up),
+/// but compilation errors out.
+pub struct PjRtClient {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtClient {
+    /// CPU client. Cheap in the real bindings too, which is why every
+    /// sweep worker owns one instead of sharing (the types are not `Send`).
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {
+            _marker: PhantomData,
+        })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("compile"))
+    }
+}
+
+/// A compiled executable resident on a client.
+pub struct PjRtLoadedExecutable {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with one argument list; returns per-device output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_refill_and_scalar() {
+        let mut l = Literal::vec1(&[0i32; 4]);
+        l.copy_raw_from(&[7i32, 8, 9, 10]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8, 9, 10]);
+        assert!(l.copy_raw_from(&[1i32]).is_err());
+        assert_eq!(Literal::scalar(2.5f32).get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::vec1(&[1i32, 2])]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(parts[1].to_tuple().is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let l = Literal::vec1(&[1.0f32]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn stubbed_paths_error_helpfully() {
+        let e = HloModuleProto::from_text_file("x").unwrap_err();
+        assert!(format!("{e}").contains("stub"), "{e}");
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation {
+            _marker: PhantomData,
+        };
+        assert!(client.compile(&comp).is_err());
+    }
+}
