@@ -1,0 +1,77 @@
+//! Run-store scan throughput: the startup cost of `--resume` is one full
+//! index rebuild over every stream file, so the streaming reader must
+//! stay I/O-bound. Three measurements over the same synthetic stream:
+//!
+//! * `runstore_scan_events` — raw event scan, the zero-copy floor;
+//! * `runstore_index_build` — full `RunIndex` construction (events +
+//!   entry extraction + hash insert), what resume actually pays;
+//! * `runstore_dom_baseline` — per-line `Value::parse`, the DOM cost the
+//!   streaming reader exists to avoid.
+
+use slimadam::benchkit::Bencher;
+use slimadam::json::Value;
+use slimadam::runstore::{scan_jsonl, RunIndex, Tolerance};
+
+/// One realistic sweep row (~240 bytes, a couple of escapes, a nested
+/// memory object — matches what the scheduler streams).
+fn row(i: u64) -> String {
+    format!(
+        concat!(
+            r#"{{"config_key":"{key:016x}","fingerprint":"{fp:016x}","seed":"{seed:016x}","#,
+            r#""job":{job},"label":"gpt_nano/adam@lr{lr:.0e}","model":"gpt_nano","optimizer":"adam","#,
+            r#""lr":{lr},"final_train_loss":{loss:.6},"eval_loss":{eval:.6},"diverged":false,"#,
+            r#""steps":100,"steps_per_s":88.5,"wallclock_s":1.13,"#,
+            r#""memory":{{"m_elems":1000,"v_elems":500,"note":"50% \"saved\""}}}}"#
+        ),
+        key = i.wrapping_mul(0x9E3779B97F4A7C15),
+        fp = i.wrapping_mul(0xD1B54A32D192ED03),
+        seed = i,
+        job = i,
+        lr = 1e-3 + i as f64 * 1e-6,
+        loss = 2.0 + (i % 97) as f64 * 0.01,
+        eval = 2.1 + (i % 89) as f64 * 0.01,
+    )
+}
+
+fn main() {
+    let n_rows: usize = if std::env::var("SLIMADAM_BENCH_FAST").is_ok() {
+        2_000
+    } else {
+        20_000
+    };
+    let text: String = (0..n_rows as u64).map(|i| row(i) + "\n").collect();
+    let bytes = text.len();
+    println!(
+        "== runstore scan throughput ({n_rows} rows, {:.1} MiB) ==",
+        bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    let b = Bencher::default();
+
+    b.bench_bytes("runstore_scan_events", bytes, || {
+        let mut fields = 0usize;
+        let stats = scan_jsonl(&text, Tolerance::TornTail, &mut |_, row| {
+            fields += row.fields.len();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(stats.rows, n_rows);
+        std::hint::black_box(fields);
+    });
+
+    b.bench_bytes("runstore_index_build", bytes, || {
+        let mut idx = RunIndex::new();
+        idx.scan_text(&text).unwrap();
+        assert_eq!(idx.len(), n_rows);
+        std::hint::black_box(idx.len());
+    });
+
+    b.bench_bytes("runstore_dom_baseline", bytes, || {
+        let mut fields = 0usize;
+        for line in text.lines() {
+            let v = Value::parse(line).unwrap();
+            fields += v.as_obj().unwrap().len();
+        }
+        std::hint::black_box(fields);
+    });
+}

@@ -135,6 +135,13 @@ impl Bencher {
         self.bench_units(name, Some((units, label)), &mut f)
     }
 
+    /// Benchmark a byte-oriented workload (parsers, scanners): reports
+    /// B/s throughput from the bytes one iteration consumes. Used by the
+    /// runstore scan benches (`benches/bench_runstore.rs`).
+    pub fn bench_bytes<F: FnMut()>(&self, name: &str, bytes: usize, f: F) -> Report {
+        self.bench_with_units(name, bytes as f64, "B", f)
+    }
+
     fn bench_units(
         &self,
         name: &str,

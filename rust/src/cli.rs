@@ -133,6 +133,15 @@ impl Args {
         self.get(name)
             .ok_or_else(|| anyhow!("missing required option --{name}"))
     }
+
+    /// Required positional argument (for subcommand actions like
+    /// `slimadam runs <ls|report|compact>`), with a useful error.
+    pub fn require_positional(&self, idx: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(idx)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing {what} (positional argument {idx})"))
+    }
 }
 
 /// Render help for a subcommand.
@@ -203,6 +212,14 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(v(&["--lr"]), &[]).is_err());
+    }
+
+    #[test]
+    fn require_positional() {
+        let a = Args::parse(v(&["ls", "results"]), &[]).unwrap();
+        assert_eq!(a.require_positional(0, "action").unwrap(), "ls");
+        assert_eq!(a.require_positional(1, "dir").unwrap(), "results");
+        assert!(a.require_positional(2, "missing").is_err());
     }
 
     #[test]

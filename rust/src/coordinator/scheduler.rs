@@ -11,7 +11,13 @@
 //! * **Streaming results** — with [`SweepScheduler::stream_to`], each job
 //!   appends one JSONL row the moment it finishes (tail -f friendly; a
 //!   crashed sweep keeps every completed row) instead of reporting at
-//!   barrier end.
+//!   barrier end. Rows carry the job's grid index, seed, config key and
+//!   metrics fingerprint — everything the run store needs to resume.
+//! * **Resume** — with [`SweepScheduler::resume_from`], the scheduler
+//!   consults a [`RunIndex`] before dispatch and skips every config whose
+//!   key is already stored, restoring its summary from the streamed row
+//!   (DESIGN.md §10). Skipped jobs re-execute nothing; the skip/ran/total
+//!   summary is printed at barrier end.
 //! * **Scheduling-invariant metrics** — every job's result is a pure
 //!   function of its config; seeds come from the config (or, with
 //!   [`SweepScheduler::run_seeded`], from `rng::job_seed(base, index)`),
@@ -27,16 +33,19 @@ use anyhow::{anyhow, Result};
 use crate::metrics::JsonlWriter;
 use crate::pool::{default_workers, parallel_map_sharded};
 use crate::rng::{job_seed, stable_hash64};
+use crate::runstore::{config_key, RunIndex, RunStore};
 
 use super::{run_config, EngineKind, RunSummary, TrainConfig};
 
 /// Parallel sweep scheduler; build with [`SweepScheduler::new`], then
 /// chain [`stream_to`](SweepScheduler::stream_to) /
+/// [`resume_from`](SweepScheduler::resume_from) /
 /// [`quiet`](SweepScheduler::quiet) and call [`run`](SweepScheduler::run).
 #[derive(Debug, Default)]
 pub struct SweepScheduler {
     workers: usize,
     stream: Option<PathBuf>,
+    resume: Option<RunIndex>,
     quiet: bool,
 }
 
@@ -46,15 +55,31 @@ impl SweepScheduler {
         SweepScheduler {
             workers,
             stream: None,
+            resume: None,
             quiet: false,
         }
     }
 
     /// Append one JSONL row per job to `path` as jobs finish. Rows carry
-    /// the job's grid index and a metrics fingerprint, so partial sweeps
-    /// are resumable/diffable.
+    /// the job's grid index, seed, config key and metrics fingerprint, so
+    /// partial sweeps are resumable/diffable.
     pub fn stream_to(mut self, path: impl Into<PathBuf>) -> SweepScheduler {
         self.stream = Some(path.into());
+        self
+    }
+
+    /// Resume against `store`: repair torn tails, build the run index,
+    /// and skip every config already completed. Pair with
+    /// [`stream_to`](SweepScheduler::stream_to) pointing into the same
+    /// store so newly finished jobs extend it.
+    pub fn resume_from(self, store: &RunStore) -> Result<SweepScheduler> {
+        store.repair_tails()?;
+        Ok(self.resume_index(store.index()?))
+    }
+
+    /// Resume against an already-built [`RunIndex`].
+    pub fn resume_index(mut self, index: RunIndex) -> SweepScheduler {
+        self.resume = Some(index);
         self
     }
 
@@ -74,7 +99,9 @@ impl SweepScheduler {
     }
 
     /// Run every config; summaries return in input order. Worker count
-    /// never changes results (`rust/tests/scheduler_determinism.rs`).
+    /// never changes results (`rust/tests/scheduler_determinism.rs`),
+    /// and with resume active, neither does skipping: restored summaries
+    /// occupy their original grid slots.
     pub fn run(&self, configs: &[TrainConfig]) -> Result<Vec<RunSummary>> {
         let total = configs.len();
         let workers = if self.workers == 0 {
@@ -82,6 +109,15 @@ impl SweepScheduler {
         } else {
             self.workers
         };
+        let keys: Vec<u64> = configs.iter().map(config_key).collect();
+        if let Some(index) = &self.resume {
+            let done = keys.iter().filter(|k| index.contains(**k)).count();
+            if !self.quiet {
+                eprintln!(
+                    "  resume: {done}/{total} jobs already in the run store"
+                );
+            }
+        }
         // Append, never truncate: a crashed sweep keeps every completed
         // row, which is what makes the streamed file resumable/diffable.
         let sink: Option<Mutex<JsonlWriter>> = match &self.stream {
@@ -89,11 +125,21 @@ impl SweepScheduler {
             None => None,
         };
         let done = AtomicUsize::new(0);
-        parallel_map_sharded(
+        let skipped = AtomicUsize::new(0);
+        let out = parallel_map_sharded(
             configs,
             workers,
             |_, cfg| stable_hash64(Self::artifact_key(cfg).as_bytes()),
             |i, cfg| {
+                if let Some(index) = &self.resume {
+                    if let Some(entry) = index.get(keys[i]) {
+                        // Already computed: restore from the store, write
+                        // no row (its row is what we restored from).
+                        skipped.fetch_add(1, Ordering::Relaxed);
+                        done.fetch_add(1, Ordering::Relaxed);
+                        return Ok(entry.to_summary());
+                    }
+                }
                 let summary =
                     run_config(cfg).map_err(|e| anyhow!("{}: {e}", cfg.label()))?;
                 let n = done.fetch_add(1, Ordering::Relaxed) + 1;
@@ -108,21 +154,33 @@ impl SweepScheduler {
                 }
                 if let Some(writer) = &sink {
                     let mut row = summary.to_json();
-                    row.set("job", i).set(
-                        "fingerprint",
-                        format!("{:016x}", summary.result.fingerprint()),
-                    );
+                    row.set("job", i)
+                        .set("seed", format!("{:016x}", cfg.seed))
+                        .set("config_key", format!("{:016x}", keys[i]))
+                        .set(
+                            "fingerprint",
+                            format!("{:016x}", summary.result.fingerprint()),
+                        );
                     writer.lock().unwrap().write(&row)?;
                 }
                 Ok(summary)
             },
-        )
+        )?;
+        if self.resume.is_some() && !self.quiet {
+            let skipped = skipped.load(Ordering::Relaxed);
+            eprintln!(
+                "  sweep: ran {}, skipped {skipped}, total {total}",
+                total - skipped
+            );
+        }
+        Ok(out)
     }
 
     /// Like [`SweepScheduler::run`], but job `i` trains with the derived
     /// seed `rng::job_seed(base_seed, i)`: independent draws per grid
     /// point that remain a pure function of grid position, so replicate
-    /// sweeps stay scheduling-invariant.
+    /// sweeps stay scheduling-invariant (and resumable — the config key
+    /// hashes the derived seed).
     pub fn run_seeded(
         &self,
         configs: &[TrainConfig],
@@ -167,5 +225,17 @@ mod tests {
         assert_ne!(s0, s1);
         assert_eq!(s0, crate::rng::job_seed(7, 0));
         assert_eq!(configs.len(), 3);
+    }
+
+    #[test]
+    fn empty_resume_index_skips_nothing() {
+        // an empty index must leave the skip mask all-false; full
+        // resume-cycle coverage lives in rust/tests/runstore_resume.rs
+        let index = RunIndex::new();
+        let configs = vec![
+            TrainConfig::lm("gpt_nano", "adam", 1e-3, 10),
+            TrainConfig::lm("gpt_nano", "adam", 3e-3, 10),
+        ];
+        assert_eq!(index.skip_mask(&configs), vec![false, false]);
     }
 }

@@ -111,16 +111,28 @@ pub fn workers_or_default(args: &Args, jobs: usize) -> usize {
 
 /// Streaming sweep scheduler for an experiment grid: honors `--workers`
 /// and appends one JSONL row per job to `results/<id>/stream.jsonl` as
-/// jobs finish (partial sweeps keep every completed row). Returns the
-/// scheduler plus the resolved worker count for banner lines.
+/// jobs finish (partial sweeps keep every completed row). With
+/// `--resume <dir>` (conventionally the experiment's own `results/<id>`)
+/// the scheduler opens that run store first and skips every grid point
+/// already completed there — a killed figure reproduction restarts where
+/// it died (DESIGN.md §10). Returns the scheduler plus the resolved
+/// worker count for banner lines.
 pub fn sweep_scheduler(
     args: &Args,
     id: &str,
     jobs: usize,
 ) -> Result<(SweepScheduler, usize)> {
     let workers = workers_or_default(args, jobs);
-    let scheduler = SweepScheduler::new(workers)
-        .stream_to(results_dir(id)?.join("stream.jsonl"));
+    let scheduler = match args.get("resume") {
+        Some(dir) => {
+            let store = crate::runstore::RunStore::open(dir)?;
+            SweepScheduler::new(workers)
+                .resume_from(&store)?
+                .stream_to(store.primary())
+        }
+        None => SweepScheduler::new(workers)
+            .stream_to(results_dir(id)?.join("stream.jsonl")),
+    };
     Ok((scheduler, workers))
 }
 

@@ -1,15 +1,271 @@
-//! Minimal JSON substrate (parser + writer) — replaces `serde_json`.
+//! Minimal JSON substrate (lexer + parser + writer) — replaces `serde_json`.
 //!
 //! The offline toolchain for this repo ships only the `xla` and `anyhow`
 //! crates, so artifact manifests, experiment configs, rule files and
 //! metric sinks are all read/written through this module. It implements
-//! the full JSON grammar (RFC 8259) minus `\u` surrogate-pair pedantry
-//! beyond the BMP, which none of our producers emit.
+//! the full JSON grammar (RFC 8259), including surrogate-pair `\u`
+//! escapes (lone surrogates are rejected).
+//!
+//! The module is split in two layers so the token scanner can be shared:
+//!
+//! * [`Lexer`] — byte-level tokenizer (strings, strict numbers, literals,
+//!   whitespace). Escape-free strings are returned as borrowed slices, so
+//!   consumers that only *look* at values never allocate.
+//! * [`Value`] / `Parser` — the DOM layer built on the lexer, used where a
+//!   materialized tree is the right shape (manifests, rule files).
+//!
+//! The streaming JSONL reader in [`crate::runstore::reader`] drives the
+//! same [`Lexer`] directly and never materializes a [`Value`] — both
+//! layers therefore accept and reject exactly the same inputs.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
+
+/// Maximum nesting depth either JSON layer will follow — manifests and
+/// sweep rows are a handful of levels deep; the bound exists so corrupt
+/// or adversarial input cannot overflow the stack. Shared with the
+/// streaming reader so both layers accept identical inputs.
+pub const MAX_DEPTH: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Lexer: the shared token scanner
+// ---------------------------------------------------------------------------
+
+/// Byte-level JSON tokenizer shared by the DOM parser and the streaming
+/// JSONL reader (`runstore::reader`). Grammar strictness lives here so
+/// every consumer agrees on what is valid JSON:
+///
+/// * numbers follow RFC 8259 exactly — no leading zeros (`01`), no bare
+///   or trailing dot (`.5`, `1.`), no leading `+`, and the `NaN` /
+///   `Infinity` literals are rejected;
+/// * `\uXXXX` escapes decode surrogate *pairs* to their astral code
+///   point and reject lone surrogates;
+/// * raw control characters (< 0x20) inside strings are rejected.
+pub struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(text: &'a str) -> Lexer<'a> {
+        Lexer { b: text.as_bytes(), i: 0 }
+    }
+
+    /// Current byte offset (for error reporting).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    pub fn at_end(&self) -> bool {
+        self.i >= self.b.len()
+    }
+
+    pub fn skip_ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    pub fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    pub fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!(
+                "expected {:?} at byte {}, got {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    /// Consume an exact keyword (`true` / `false` / `null`).
+    pub fn lit(&mut self, word: &str) -> Result<()> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    /// Scan a string token. Escape-free strings borrow from the input
+    /// (the zero-copy hot path for JSONL scans); strings with escapes are
+    /// decoded into an owned buffer, including surrogate-pair `\u`
+    /// sequences. Lone surrogates and raw control characters are errors.
+    pub fn string(&mut self) -> Result<Cow<'a, str>> {
+        self.eat(b'"')?;
+        let start = self.i;
+        // Fast path: find the closing quote without touching an escape.
+        loop {
+            match self.b.get(self.i) {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    let s = std::str::from_utf8(&self.b[start..self.i])?;
+                    self.i += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break,
+                Some(&c) if c < 0x20 => {
+                    bail!("raw control character {c:#04x} in string")
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+        // Slow path: escapes present — decode into an owned buffer.
+        let mut s = String::new();
+        s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(Cow::Owned(s)),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => s.push(self.unicode_escape()?),
+                        c => bail!("bad escape \\{:?}", c as char),
+                    }
+                }
+                c if c < 0x20 => bail!("raw control character {c:#04x} in string"),
+                c if c < 0x80 => s.push(c as char),
+                c => {
+                    // multi-byte UTF-8: find the sequence length and copy.
+                    let len = utf8_len(c)?;
+                    let start = self.i - 1;
+                    self.i = start + len;
+                    if self.i > self.b.len() {
+                        bail!("truncated UTF-8");
+                    }
+                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    /// Decode the payload of a `\u` escape (the `\u` itself is consumed).
+    /// High surrogates must be followed by a `\u`-escaped low surrogate;
+    /// the pair combines to one astral code point (RFC 8259 §7).
+    fn unicode_escape(&mut self) -> Result<char> {
+        let cp = self.hex4()?;
+        match cp {
+            0xD800..=0xDBFF => {
+                if self.b.get(self.i) != Some(&b'\\')
+                    || self.b.get(self.i + 1) != Some(&b'u')
+                {
+                    bail!("lone high surrogate \\u{cp:04x}");
+                }
+                self.i += 2;
+                let lo = self.hex4()?;
+                if !(0xDC00..=0xDFFF).contains(&lo) {
+                    bail!("high surrogate \\u{cp:04x} followed by \\u{lo:04x}");
+                }
+                let astral = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                char::from_u32(astral)
+                    .ok_or_else(|| anyhow!("bad codepoint {astral:#x}"))
+            }
+            0xDC00..=0xDFFF => bail!("lone low surrogate \\u{cp:04x}"),
+            cp => char::from_u32(cp).ok_or_else(|| anyhow!("bad codepoint {cp:#x}")),
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let cp = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow!("bad \\u escape {hex:?}"))?;
+        self.i += 4;
+        Ok(cp)
+    }
+
+    /// Scan a number token, validating the RFC 8259 grammar
+    /// (`-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`) before parsing.
+    /// Rejects leading zeros, bare/trailing dots, leading `+`, and the
+    /// non-JSON `NaN` / `Infinity` spellings `str::parse::<f64>` accepts.
+    pub fn number(&mut self) -> Result<f64> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        // integer part: 0 | [1-9][0-9]*
+        match self.b.get(self.i) {
+            Some(b'0') => {
+                self.i += 1;
+                if matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                    bail!("leading zero in number at byte {start}");
+                }
+            }
+            Some(b'1'..=b'9') => {
+                while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                    self.i += 1;
+                }
+            }
+            _ => bail!("invalid number at byte {start}"),
+        }
+        // fraction: . [0-9]+
+        if self.b.get(self.i) == Some(&b'.') {
+            self.i += 1;
+            if !matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                bail!("digit required after decimal point at byte {}", self.i);
+            }
+            while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        // exponent: [eE] [+-]? [0-9]+
+        if matches!(self.b.get(self.i), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.b.get(self.i), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            if !matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                bail!("digit required in exponent at byte {}", self.i);
+            }
+            while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        text.parse::<f64>()
+            .map_err(|_| anyhow!("bad number {text:?}"))
+    }
+}
+
+fn utf8_len(first: u8) -> Result<usize> {
+    match first {
+        0xC0..=0xDF => Ok(2),
+        0xE0..=0xEF => Ok(3),
+        0xF0..=0xF7 => Ok(4),
+        _ => bail!("invalid UTF-8 lead byte {first:#x}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DOM layer
+// ---------------------------------------------------------------------------
 
 /// A JSON value. Object keys are kept in a `BTreeMap` so serialization is
 /// deterministic (stable diffs for rule files and experiment outputs).
@@ -25,12 +281,12 @@ pub enum Value {
 
 impl Value {
     pub fn parse(text: &str) -> Result<Value> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.i != p.b.len() {
-            bail!("trailing garbage at byte {}", p.i);
+        let mut lex = Lexer::new(text);
+        lex.skip_ws();
+        let v = parse_value(&mut lex, 0)?;
+        lex.skip_ws();
+        if !lex.at_end() {
+            bail!("trailing garbage at byte {}", lex.pos());
         }
         Ok(v)
     }
@@ -299,183 +555,85 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
     }
 }
 
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn skip_ws(&mut self) {
-        while self.i < self.b.len()
-            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
-        {
-            self.i += 1;
-        }
+fn parse_value(lex: &mut Lexer<'_>, depth: usize) -> Result<Value> {
+    if depth > MAX_DEPTH {
+        bail!("JSON nested deeper than {MAX_DEPTH} levels");
     }
-
-    fn peek(&self) -> Result<u8> {
-        self.b
-            .get(self.i)
-            .copied()
-            .ok_or_else(|| anyhow!("unexpected end of input"))
-    }
-
-    fn eat(&mut self, c: u8) -> Result<()> {
-        if self.peek()? != c {
-            bail!("expected {:?} at byte {}, got {:?}",
-                  c as char, self.i, self.peek()? as char);
+    match lex.peek()? {
+        b'{' => parse_object(lex, depth),
+        b'[' => parse_array(lex, depth),
+        b'"' => Ok(Value::Str(lex.string()?.into_owned())),
+        b't' => {
+            lex.lit("true")?;
+            Ok(Value::Bool(true))
         }
-        self.i += 1;
-        Ok(())
-    }
-
-    fn value(&mut self) -> Result<Value> {
-        match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
-            b'"' => Ok(Value::Str(self.string()?)),
-            b't' => self.lit("true", Value::Bool(true)),
-            b'f' => self.lit("false", Value::Bool(false)),
-            b'n' => self.lit("null", Value::Null),
-            b'-' | b'0'..=b'9' => self.number(),
-            c => bail!("unexpected character {:?} at byte {}", c as char, self.i),
+        b'f' => {
+            lex.lit("false")?;
+            Ok(Value::Bool(false))
         }
-    }
-
-    fn lit(&mut self, word: &str, v: Value) -> Result<Value> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
-            self.i += word.len();
-            Ok(v)
-        } else {
-            bail!("bad literal at byte {}", self.i)
+        b'n' => {
+            lex.lit("null")?;
+            Ok(Value::Null)
         }
-    }
-
-    fn object(&mut self) -> Result<Value> {
-        self.eat(b'{')?;
-        let mut map = BTreeMap::new();
-        self.skip_ws();
-        if self.peek()? == b'}' {
-            self.i += 1;
-            return Ok(Value::Obj(map));
+        b'-' | b'0'..=b'9' => Ok(Value::Num(lex.number()?)),
+        b'N' | b'I' | b'+' => {
+            bail!(
+                "NaN/Infinity/leading '+' are not valid JSON (byte {})",
+                lex.pos()
+            )
         }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.eat(b':')?;
-            self.skip_ws();
-            let val = self.value()?;
-            map.insert(key, val);
-            self.skip_ws();
-            match self.peek()? {
-                b',' => {
-                    self.i += 1;
-                }
-                b'}' => {
-                    self.i += 1;
-                    return Ok(Value::Obj(map));
-                }
-                c => bail!("expected ',' or '}}', got {:?}", c as char),
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Value> {
-        self.eat(b'[')?;
-        let mut arr = Vec::new();
-        self.skip_ws();
-        if self.peek()? == b']' {
-            self.i += 1;
-            return Ok(Value::Arr(arr));
-        }
-        loop {
-            self.skip_ws();
-            arr.push(self.value()?);
-            self.skip_ws();
-            match self.peek()? {
-                b',' => {
-                    self.i += 1;
-                }
-                b']' => {
-                    self.i += 1;
-                    return Ok(Value::Arr(arr));
-                }
-                c => bail!("expected ',' or ']', got {:?}", c as char),
-            }
-        }
-    }
-
-    fn string(&mut self) -> Result<String> {
-        self.eat(b'"')?;
-        let mut s = String::new();
-        loop {
-            let c = self.peek()?;
-            self.i += 1;
-            match c {
-                b'"' => return Ok(s),
-                b'\\' => {
-                    let e = self.peek()?;
-                    self.i += 1;
-                    match e {
-                        b'"' => s.push('"'),
-                        b'\\' => s.push('\\'),
-                        b'/' => s.push('/'),
-                        b'b' => s.push('\u{8}'),
-                        b'f' => s.push('\u{c}'),
-                        b'n' => s.push('\n'),
-                        b'r' => s.push('\r'),
-                        b't' => s.push('\t'),
-                        b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                bail!("truncated \\u escape");
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            s.push(char::from_u32(cp)
-                                .ok_or_else(|| anyhow!("bad codepoint {cp:#x}"))?);
-                        }
-                        c => bail!("bad escape \\{:?}", c as char),
-                    }
-                }
-                c if c < 0x80 => s.push(c as char),
-                c => {
-                    // multi-byte UTF-8: find the sequence length and copy.
-                    let len = utf8_len(c)?;
-                    let start = self.i - 1;
-                    self.i = start + len;
-                    if self.i > self.b.len() {
-                        bail!("truncated UTF-8");
-                    }
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
-                }
-            }
-        }
-    }
-
-    fn number(&mut self) -> Result<Value> {
-        let start = self.i;
-        if self.peek()? == b'-' {
-            self.i += 1;
-        }
-        while self.i < self.b.len()
-            && matches!(self.b[self.i],
-                        b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
-        {
-            self.i += 1;
-        }
-        let text = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Value::Num(text.parse::<f64>()?))
+        c => bail!("unexpected character {:?} at byte {}", c as char, lex.pos()),
     }
 }
 
-fn utf8_len(first: u8) -> Result<usize> {
-    match first {
-        0xC0..=0xDF => Ok(2),
-        0xE0..=0xEF => Ok(3),
-        0xF0..=0xF7 => Ok(4),
-        _ => bail!("invalid UTF-8 lead byte {first:#x}"),
+fn parse_object(lex: &mut Lexer<'_>, depth: usize) -> Result<Value> {
+    lex.eat(b'{')?;
+    let mut map = BTreeMap::new();
+    lex.skip_ws();
+    if lex.peek()? == b'}' {
+        lex.eat(b'}')?;
+        return Ok(Value::Obj(map));
+    }
+    loop {
+        lex.skip_ws();
+        let key = lex.string()?.into_owned();
+        lex.skip_ws();
+        lex.eat(b':')?;
+        lex.skip_ws();
+        let val = parse_value(lex, depth + 1)?;
+        map.insert(key, val);
+        lex.skip_ws();
+        match lex.peek()? {
+            b',' => lex.eat(b',')?,
+            b'}' => {
+                lex.eat(b'}')?;
+                return Ok(Value::Obj(map));
+            }
+            c => bail!("expected ',' or '}}', got {:?}", c as char),
+        }
+    }
+}
+
+fn parse_array(lex: &mut Lexer<'_>, depth: usize) -> Result<Value> {
+    lex.eat(b'[')?;
+    let mut arr = Vec::new();
+    lex.skip_ws();
+    if lex.peek()? == b']' {
+        lex.eat(b']')?;
+        return Ok(Value::Arr(arr));
+    }
+    loop {
+        lex.skip_ws();
+        arr.push(parse_value(lex, depth + 1)?);
+        lex.skip_ws();
+        match lex.peek()? {
+            b',' => lex.eat(b',')?,
+            b']' => {
+                lex.eat(b']')?;
+                return Ok(Value::Arr(arr));
+            }
+            c => bail!("expected ',' or ']', got {:?}", c as char),
+        }
     }
 }
 
@@ -504,12 +662,49 @@ mod tests {
         assert_eq!(Value::parse("-2.5E-2").unwrap().as_f64().unwrap(), -0.025);
         assert_eq!(Value::parse("42").unwrap().as_usize().unwrap(), 42);
         assert!(Value::parse("1.5").unwrap().as_usize().is_err());
+        assert_eq!(Value::parse("0").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(Value::parse("-0.5e+2").unwrap().as_f64().unwrap(), -50.0);
+    }
+
+    #[test]
+    fn rejects_non_json_numbers() {
+        // `str::parse::<f64>` accepts all of these — the lexer must not.
+        for s in ["NaN", "Infinity", "-Infinity", "inf", "+1", "01", "1.",
+                  ".5", "-", "1e", "1e+", "--1", "0x10"] {
+            assert!(Value::parse(s).is_err(), "{s:?} must be rejected");
+        }
     }
 
     #[test]
     fn parse_unicode_escapes() {
         let v = Value::parse(r#""aéb""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "aéb");
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        let v = Value::parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        // and round-trip: the writer emits raw UTF-8
+        assert_eq!(Value::parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_lone_surrogates() {
+        assert!(Value::parse(r#""\ud800""#).is_err()); // lone high
+        assert!(Value::parse(r#""\udc00""#).is_err()); // lone low
+        assert!(Value::parse(r#""\ud800x""#).is_err()); // high + non-escape
+        assert!(Value::parse(r#""\ud800A""#).is_err()); // high + non-low
+    }
+
+    #[test]
+    fn rejects_raw_control_chars() {
+        assert!(Value::parse("\"a\u{1}b\"").is_err());
+        // escaped control chars are fine
+        assert_eq!(
+            Value::parse(r#""a\u0001b""#).unwrap().as_str().unwrap(),
+            "a\u{1}b"
+        );
     }
 
     #[test]
@@ -560,6 +755,20 @@ mod tests {
         let src = r#"{"a":[1,2],"b":{"c":"d"}}"#;
         let v = Value::parse(src).unwrap();
         assert_eq!(Value::parse(&v.dump_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn lexer_borrows_escape_free_strings() {
+        let mut lex = Lexer::new(r#""plain text""#);
+        match lex.string().unwrap() {
+            Cow::Borrowed(s) => assert_eq!(s, "plain text"),
+            Cow::Owned(_) => panic!("escape-free string must borrow"),
+        }
+        let mut lex = Lexer::new(r#""a\tb""#);
+        match lex.string().unwrap() {
+            Cow::Owned(s) => assert_eq!(s, "a\tb"),
+            Cow::Borrowed(_) => panic!("escaped string must decode"),
+        }
     }
 
     #[test]

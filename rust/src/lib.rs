@@ -23,7 +23,9 @@
 //!   [`rules`] (SNR → compression rules)
 //! * Workloads: [`data`] (corpora, images, BPE), [`train`] (loop driver),
 //!   [`coordinator`] (job orchestration, the parallel sweep scheduler and
-//!   its compile-once executable cache — DESIGN.md §9), [`sweep`] (grids)
+//!   its compile-once executable cache — DESIGN.md §9), [`sweep`] (grids),
+//!   [`runstore`] (crash-safe store of completed jobs + sweep resume —
+//!   DESIGN.md §10)
 //! * Reproduction: [`exp`] (one module per paper figure/table)
 
 pub mod benchkit;
@@ -39,6 +41,7 @@ pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod rules;
+pub mod runstore;
 pub mod runtime;
 pub mod snr;
 pub mod sweep;

@@ -8,6 +8,8 @@
 //!   exp <id>        reproduce a paper figure/table (fig1..fig30, table1..3, all)
 //!   train           run one training config
 //!   sweep           run an (optimizer × LR) grid on the parallel scheduler
+//!                   (`--resume <dir>` skips jobs already in the run store)
+//!   runs            inspect a run store: ls | report | compact
 //!   snr             probe a run's second-moment SNR and print the layer table
 //!   rules           derive + save SlimAdam compression rules from an SNR probe
 //!   memory          optimizer-state memory accounting for a model
@@ -19,6 +21,7 @@ use slimadam::cli::{render_help, subcommand, Args, OptSpec};
 use slimadam::coordinator::{exec_cache, run_config, DataSpec, SweepScheduler, TrainConfig};
 use slimadam::optim::presets;
 use slimadam::rules::RuleSet;
+use slimadam::runstore::RunStore;
 use slimadam::snr::ProbeSchedule;
 use slimadam::sweep::{log_grid, LrSweep};
 
@@ -38,6 +41,8 @@ const FLAGS: &[&str] = &[
     "corpus",
     "default-init",
     "seed-jobs",
+    "quiet",
+    "synthetic",
 ];
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
@@ -66,6 +71,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         }
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
+        "runs" => cmd_runs(&args),
         "snr" => cmd_snr(&args),
         "rules" => cmd_rules(&args),
         "memory" => cmd_memory(&args),
@@ -87,6 +93,7 @@ fn print_global_help() {
          \x20 exp <id>   reproduce a paper figure/table (see `slimadam exp --help`)\n\
          \x20 train      run one training config\n\
          \x20 sweep      run an (optimizer × LR) grid on the parallel scheduler\n\
+         \x20 runs       inspect a run store: ls | report | compact\n\
          \x20 snr        probe second-moment SNR along an Adam run\n\
          \x20 rules      derive SlimAdam compression rules from an SNR probe\n\
          \x20 memory     optimizer-state memory accounting\n\
@@ -194,11 +201,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 OptSpec { name: "steps", help: "training steps per job", default: Some("100"), is_flag: false },
                 OptSpec { name: "workers", help: "worker threads (0 = one per core)", default: Some("0"), is_flag: false },
                 OptSpec { name: "stream", help: "append per-job JSONL rows to this path as jobs finish", default: None, is_flag: false },
+                OptSpec { name: "resume", help: "run store dir: skip jobs already completed there (streams new rows into it unless --stream overrides)", default: None, is_flag: false },
                 OptSpec { name: "csv", help: "write the finished sweep table to this CSV path", default: None, is_flag: false },
                 OptSpec { name: "seed-jobs", help: "derive an independent seed per grid point (default: paired)", default: None, is_flag: true },
+                OptSpec { name: "quiet", help: "suppress per-job progress lines", default: None, is_flag: true },
+                OptSpec { name: "synthetic", help: "deterministic artifact-free synthetic runs (testing; same as SLIMADAM_SYNTH_RUNS=1)", default: None, is_flag: true },
             ])
         );
         return Ok(());
+    }
+    if args.flag("synthetic") {
+        std::env::set_var("SLIMADAM_SYNTH_RUNS", "1");
     }
     let base = base_config(args)?;
     let opts = args.str_list("optimizers", &["adam", "slimadam"]);
@@ -207,7 +220,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let workers = args.usize_or("workers", 0)?;
 
     let mut scheduler = SweepScheduler::new(workers);
-    if let Some(path) = args.get("stream") {
+    if args.flag("quiet") {
+        scheduler = scheduler.quiet();
+    }
+    if let Some(dir) = args.get("resume") {
+        let store = RunStore::open(dir)?;
+        // default the stream sink into the store so finished jobs extend it
+        scheduler = scheduler
+            .resume_from(&store)?
+            .stream_to(args.get("stream").map(Into::into).unwrap_or(store.primary()));
+    } else if let Some(path) = args.get("stream") {
         scheduler = scheduler.stream_to(path);
     }
     println!(
@@ -239,6 +261,73 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         stats.compiles()
     );
     Ok(())
+}
+
+/// Inspect a run store: `slimadam runs <ls|report|compact> [--dir d]`.
+fn cmd_runs(args: &Args) -> Result<()> {
+    if args.flag("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help("slimadam", "runs <ls|report|compact>", "inspect a run store of completed sweep jobs", &[
+                OptSpec { name: "dir", help: "run store directory (or a .jsonl file inside it)", default: Some("results/sweep"), is_flag: false },
+            ])
+        );
+        println!(
+            "actions:\n\
+             \x20 ls       list stream files with row/torn/legacy counts\n\
+             \x20 report   aggregate completed jobs per (model, optimizer)\n\
+             \x20 compact  merge stream files, dropping duplicate/torn rows"
+        );
+        return Ok(());
+    }
+    let action = args.require_positional(0, "action (ls | report | compact)")?;
+    let dir = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or_else(|| args.str_or("dir", "results/sweep"));
+    let store = RunStore::open(dir)?;
+    match action {
+        "ls" => {
+            let (files, idx) = store.ls()?;
+            if files.is_empty() {
+                println!("run store {:?}: no stream files", store.dir());
+                return Ok(());
+            }
+            println!(
+                "{:<40} {:>10} {:>7} {:>7} {:>6} {:>6}",
+                "file", "bytes", "rows", "legacy", "torn", "bad"
+            );
+            for f in &files {
+                println!(
+                    "{:<40} {:>10} {:>7} {:>7} {:>6} {:>6}",
+                    f.path.display().to_string(),
+                    f.bytes,
+                    f.rows,
+                    f.legacy,
+                    f.torn,
+                    f.skipped
+                );
+            }
+            println!(
+                "\n{} unique completed jobs ({} duplicates, {} conflicts)",
+                idx.len(),
+                idx.stats.duplicates,
+                idx.stats.conflicts
+            );
+            Ok(())
+        }
+        "report" => {
+            print!("{}", store.report()?);
+            Ok(())
+        }
+        "compact" => {
+            let report = slimadam::runstore::compact(&store)?;
+            println!("{}", report.line());
+            Ok(())
+        }
+        other => bail!("unknown runs action {other:?} — try ls, report or compact"),
+    }
 }
 
 fn cmd_snr(args: &Args) -> Result<()> {

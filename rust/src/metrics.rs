@@ -14,6 +14,13 @@ use anyhow::{Context, Result};
 use crate::json::Value;
 
 /// Append-only JSONL writer.
+///
+/// Rows are appended **line-atomically**: each row is serialized with its
+/// trailing newline into one buffer and handed to the OS in a single
+/// `write_all`, flushed per row. Appends below `PIPE_BUF`-scale sizes
+/// land contiguously, so a crash (even `SIGKILL`) can tear at most the
+/// *final* line of the file — the recovery invariant the run store's
+/// reader depends on (`runstore::reader`, `Tolerance::TornTail`).
 pub struct JsonlWriter {
     file: fs::File,
     pub path: PathBuf,
@@ -32,21 +39,44 @@ impl JsonlWriter {
 
     /// Open for appending (creating if absent): sinks whose rows must
     /// survive a re-run, e.g. the sweep scheduler's streamed results.
+    ///
+    /// If a previous crash left the file without a terminating newline
+    /// (a torn final line), a newline is written first so the fragment
+    /// stays confined to its own recoverable line — appending directly
+    /// would splice the next row onto the fragment and silently corrupt
+    /// a *complete* row.
     pub fn append(path: impl AsRef<Path>) -> Result<JsonlWriter> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir)?;
         }
-        let file = fs::OpenOptions::new()
+        let torn_tail = fs::File::open(&path).ok().is_some_and(|mut f| {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut last = [0u8; 1];
+            f.seek(SeekFrom::End(-1)).is_ok()
+                && f.read_exact(&mut last).is_ok()
+                && last[0] != b'\n'
+        });
+        let mut file = fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(&path)
             .with_context(|| format!("appending to {path:?}"))?;
+        if torn_tail {
+            file.write_all(b"\n")?;
+        }
         Ok(JsonlWriter { file, path })
     }
 
     pub fn write(&mut self, v: &Value) -> Result<()> {
-        writeln!(self.file, "{}", v.dump())?;
+        // One write_all for row + newline (never `writeln!`, which issues
+        // separate writes and could interleave or tear between them),
+        // then flush, so every durable prefix of the file is valid JSONL
+        // plus at most one torn final line.
+        let mut line = v.dump();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
         Ok(())
     }
 }
@@ -220,6 +250,44 @@ mod tests {
         drop(w);
         let text = fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_isolates_torn_tail_on_fresh_line() {
+        // re-streaming into a crashed file without repair must not splice
+        // the next row onto the torn fragment
+        let dir = std::env::temp_dir().join("slimadam_test_jsonl_torn");
+        let path = dir.join("x.jsonl");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(&path, "{\"a\":1}\n{\"b\":2,\"tor").unwrap();
+        let mut w = JsonlWriter::append(&path).unwrap();
+        let mut v = Value::obj();
+        v.set("c", 3usize);
+        w.write(&v).unwrap();
+        drop(w);
+        let text = fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1], "{\"b\":2,\"tor"); // fragment confined
+        assert_eq!(lines[2], "{\"c\":3}"); // new row intact
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_rows_are_single_terminated_lines() {
+        // the line-atomic contract: one row == one '\n'-terminated line,
+        // even when values contain raw newlines (escaped by dump())
+        let dir = std::env::temp_dir().join("slimadam_test_jsonl_atomic");
+        let path = dir.join("x.jsonl");
+        let mut w = JsonlWriter::append(&path).unwrap();
+        let mut v = Value::obj();
+        v.set("s", "two\nlines");
+        w.write(&v).unwrap();
+        drop(w);
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert_eq!(text.lines().count(), 1);
         fs::remove_dir_all(&dir).ok();
     }
 

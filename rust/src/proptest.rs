@@ -64,6 +64,57 @@ impl Gen {
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
+
+    /// Arbitrary unicode string exercising the JSON escape space:
+    /// ASCII, quotes/backslashes, control chars, BMP and astral
+    /// (surrogate-pair) code points.
+    pub fn json_string(&mut self, max_len: usize) -> String {
+        let n = self.usize(0, max_len);
+        (0..n)
+            .map(|_| match self.usize(0, 9) {
+                0 => '"',
+                1 => '\\',
+                2 => char::from_u32(self.usize(0, 0x1f) as u32).unwrap(),
+                3 => 'é',
+                4 => '→',
+                5 => '😀', // astral: encodes as a surrogate pair in \u form
+                _ => char::from_u32(self.usize(0x20, 0x7e) as u32).unwrap(),
+            })
+            .collect()
+    }
+
+    /// Arbitrary JSON value tree of bounded depth, for round-trip
+    /// properties shared by the DOM parser and the streaming reader.
+    pub fn json_value(&mut self, depth: usize) -> crate::json::Value {
+        use crate::json::Value;
+        let leaf = depth == 0;
+        match self.usize(0, if leaf { 4 } else { 6 }) {
+            0 => Value::Null,
+            1 => Value::Bool(self.bool()),
+            2 => {
+                // mix integers (exact) and floats spanning magnitudes
+                if self.bool() {
+                    Value::Num(self.usize(0, 1_000_000) as f64)
+                } else {
+                    Value::Num(self.f64(-1e6, 1e6))
+                }
+            }
+            3 | 4 => Value::Str(self.json_string(12)),
+            5 => {
+                let n = self.usize(0, 4);
+                Value::Arr((0..n).map(|_| self.json_value(depth - 1)).collect())
+            }
+            _ => {
+                let n = self.usize(0, 4);
+                let mut v = Value::obj();
+                for _ in 0..n {
+                    let key = self.json_string(8);
+                    v.set(&key, self.json_value(depth - 1));
+                }
+                v
+            }
+        }
+    }
 }
 
 /// Run `cases` random cases of `prop`. Panics with the failing seed on the

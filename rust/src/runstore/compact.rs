@@ -1,0 +1,173 @@
+//! Compaction: merge a store's stream files into one deduplicated
+//! `stream.jsonl`, dropping torn/bad rows.
+//!
+//! A long sweep campaign accretes files — the primary stream plus any
+//! side streams a user pointed `--stream` at — and crashes leave torn
+//! tails and resumed reruns leave duplicates. `compact` rewrites the
+//! store to its minimal form: every surviving row byte-identical to the
+//! original (lines are copied verbatim, never re-serialized, so
+//! fingerprint audits of pre- and post-compact stores agree), first
+//! occurrence wins on duplicate config keys, salvage mode for damage.
+//!
+//! Crash safety of the pass itself: the merged output is fully written
+//! and fsynced to a temp file first, atomically renamed onto
+//! `stream.jsonl`, and only then are the other source files unlinked. A
+//! crash mid-compact therefore leaves duplicates (rerun `compact`),
+//! never lost rows.
+
+use std::collections::HashSet;
+use std::fs;
+use std::io::Write;
+
+use anyhow::{Context, Result};
+
+use super::reader::Tolerance;
+use super::RunStore;
+use crate::rng::stable_hash64;
+
+/// What a compaction pass did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    pub files_in: usize,
+    pub rows_in: usize,
+    pub rows_out: usize,
+    pub dropped_duplicates: usize,
+    pub dropped_bad: usize,
+    pub torn: usize,
+}
+
+impl CompactReport {
+    pub fn line(&self) -> String {
+        format!(
+            "compacted {} file(s): {} rows -> {} ({} duplicate, {} bad, {} torn dropped)",
+            self.files_in,
+            self.rows_in,
+            self.rows_out,
+            self.dropped_duplicates,
+            self.dropped_bad,
+            self.torn
+        )
+    }
+}
+
+/// Merge every stream file of `store` into `stream.jsonl`. See the
+/// module docs for the crash-safety contract.
+pub fn compact(store: &RunStore) -> Result<CompactReport> {
+    let files = store.stream_files()?;
+    let mut report = CompactReport { files_in: files.len(), ..Default::default() };
+    if files.is_empty() {
+        return Ok(report);
+    }
+
+    let tmp_path = store.dir().join("compact.jsonl.tmp");
+    let mut tmp = fs::File::create(&tmp_path)
+        .with_context(|| format!("creating {tmp_path:?}"))?;
+    // Rows with run-store keys dedup by config key; legacy rows (no key)
+    // dedup by whole-line hash so an accidental double-append still folds.
+    let mut seen: HashSet<u64> = HashSet::new();
+
+    for path in &files {
+        // lossy read: salvage must survive a tail torn mid-character
+        let text = super::reader::read_stream_file(path)?;
+        let stats = super::reader::scan_jsonl(
+            &text,
+            Tolerance::SkipBad,
+            &mut |_, row| {
+                report.rows_in += 1;
+                let key = row
+                    .hex_u64("config_key")
+                    .unwrap_or_else(|| stable_hash64(row.line.as_bytes()));
+                if seen.insert(key) {
+                    report.rows_out += 1;
+                    tmp.write_all(row.line.as_bytes())?;
+                    tmp.write_all(b"\n")?;
+                } else {
+                    report.dropped_duplicates += 1;
+                }
+                Ok(())
+            },
+        )?;
+        report.dropped_bad += stats.skipped;
+        report.torn += stats.torn;
+    }
+
+    tmp.sync_all()?;
+    drop(tmp);
+    let primary = store.primary();
+    fs::rename(&tmp_path, &primary)
+        .with_context(|| format!("renaming {tmp_path:?} -> {primary:?}"))?;
+    for path in &files {
+        if *path != primary {
+            fs::remove_file(path)
+                .with_context(|| format!("removing merged {path:?}"))?;
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(key: u64, fp: u64) -> String {
+        format!(
+            r#"{{"config_key":"{key:016x}","fingerprint":"{fp:016x}","seed":"01","job":0,"label":"l","model":"m","optimizer":"adam","lr":0.001,"final_train_loss":1.0,"eval_loss":1.1,"diverged":false,"steps":4}}"#
+        )
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("slimadam_compact_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn merges_dedups_and_drops_damage() {
+        let dir = tmpdir("merge");
+        fs::write(
+            dir.join("stream.jsonl"),
+            format!("{}\n{}\nnot json\n{}\n", row(1, 10), row(2, 20), row(1, 10)),
+        )
+        .unwrap();
+        fs::write(
+            dir.join("extra.jsonl"),
+            format!("{}\n{}", row(3, 30), "{\"torn"),
+        )
+        .unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        let r = compact(&store).unwrap();
+        assert_eq!(r.files_in, 2);
+        assert_eq!(r.rows_out, 3);
+        assert_eq!(r.dropped_duplicates, 1);
+        assert_eq!(r.dropped_bad, 1);
+        assert_eq!(r.torn, 1);
+        // one merged file remains, indexable, with 3 entries
+        assert_eq!(store.stream_files().unwrap().len(), 1);
+        let idx = store.index().unwrap();
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.stats.torn + idx.stats.skipped + idx.stats.conflicts, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_preserves_row_bytes() {
+        let dir = tmpdir("bytes");
+        let r1 = row(5, 50);
+        fs::write(dir.join("stream.jsonl"), format!("{r1}\n")).unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        compact(&store).unwrap();
+        let text = fs::read_to_string(store.primary()).unwrap();
+        assert_eq!(text, format!("{r1}\n"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_store_is_a_noop() {
+        let dir = tmpdir("empty");
+        let store = RunStore::open(&dir).unwrap();
+        let r = compact(&store).unwrap();
+        assert_eq!(r, CompactReport::default());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,293 @@
+//! Run index: O(1) membership over every completed sweep job in a store.
+//!
+//! Built by streaming every `*.jsonl` row through `runstore::reader`
+//! (never a DOM parse) and keying on the row's **config key** — the
+//! stable hash of the full [`TrainConfig`] identity, job seed included
+//! (`runstore::config_key`). The scheduler consults the index before
+//! dispatch: a config whose key is present has already been computed,
+//! and its stored metrics stand in for re-execution
+//! ([`RunEntry::to_summary`]).
+//!
+//! Duplicate keys across stream files are deduplicated (first occurrence
+//! wins — scan order is deterministic: files sorted by name, rows in
+//! file order); a duplicate whose fingerprint *disagrees* is counted as
+//! a conflict so `slimadam runs ls` can surface it.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::{RunSummary, TrainConfig};
+use crate::snr::SnrProbe;
+use crate::train::RunResult;
+
+use super::reader::{RowView, ScanStats, Tolerance};
+
+/// One indexed row: the scalar metrics a streamed sweep row carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunEntry {
+    pub config_key: u64,
+    pub fingerprint: u64,
+    pub seed: u64,
+    pub job: usize,
+    pub label: String,
+    pub model: String,
+    pub optimizer: String,
+    pub lr: f64,
+    pub final_train_loss: f64,
+    pub eval_loss: f64,
+    pub diverged: bool,
+    pub steps: usize,
+}
+
+impl RunEntry {
+    /// Extract an entry from a row. `None` when the row predates the run
+    /// store (PR 1 streams carry no `config_key`/`seed`) or is missing a
+    /// required field — such rows are counted, not indexed.
+    pub fn from_row(row: &RowView<'_>) -> Option<RunEntry> {
+        Some(RunEntry {
+            config_key: row.hex_u64("config_key")?,
+            fingerprint: row.hex_u64("fingerprint")?,
+            seed: row.hex_u64("seed")?,
+            job: row.usize("job")?,
+            label: row.str("label")?.to_string(),
+            model: row.str("model")?.to_string(),
+            optimizer: row.str("optimizer")?.to_string(),
+            lr: row.f64("lr")?,
+            final_train_loss: row.f64("final_train_loss")?,
+            eval_loss: row.f64("eval_loss")?,
+            diverged: row.bool("diverged")?,
+            steps: row.usize("steps")?,
+        })
+    }
+
+    /// Reconstitute a [`RunSummary`] for a job the scheduler skipped.
+    /// Per-step losses and probe data are not streamed, so the result
+    /// carries the *stored* fingerprint (`RunSummary::fingerprint`
+    /// prefers it over recomputing from the empty loss vector); the
+    /// scalar metrics are restored bit-exactly from the row. The exact
+    /// `-1.0` sentinel (the writer's stand-in for a non-finite loss —
+    /// a run that diverged or never evaluated) maps back to NaN so
+    /// `LrSweep::metric` behaves as it would have live; other negative
+    /// values pass through untouched.
+    pub fn to_summary(&self) -> RunSummary {
+        let unsentinel = |x: f64| if x == -1.0 { f64::NAN } else { x };
+        RunSummary {
+            label: self.label.clone(),
+            model: self.model.clone(),
+            optimizer: self.optimizer.clone(),
+            lr: self.lr,
+            result: RunResult {
+                losses: Vec::new(),
+                final_train_loss: unsentinel(self.final_train_loss),
+                eval_loss: unsentinel(self.eval_loss),
+                diverged: self.diverged,
+                probe: SnrProbe::new(),
+                wallclock_s: 0.0,
+            },
+            snr: None,
+            memory: None,
+            steps_per_s: 0.0,
+            stored_fingerprint: Some(self.fingerprint),
+        }
+    }
+}
+
+/// Aggregate counts from building an index (surfaced by `runs ls`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IndexStats {
+    pub files: usize,
+    /// Well-formed rows scanned (indexed or not).
+    pub rows: usize,
+    /// Torn trailing lines recovered.
+    pub torn: usize,
+    /// Mid-file bad rows skipped.
+    pub skipped: usize,
+    /// Rows without run-store keys (pre-runstore streams).
+    pub legacy: usize,
+    /// Rows whose config key was already indexed (identical fingerprint).
+    pub duplicates: usize,
+    /// Duplicate config keys with *different* fingerprints.
+    pub conflicts: usize,
+}
+
+/// O(1)-membership index of completed jobs, keyed by config key.
+#[derive(Debug, Default)]
+pub struct RunIndex {
+    entries: HashMap<u64, RunEntry>,
+    pub stats: IndexStats,
+}
+
+impl RunIndex {
+    pub fn new() -> RunIndex {
+        RunIndex::default()
+    }
+
+    /// Index every row of one stream file's text. Lenient by default:
+    /// torn tails are recovered and mid-file bad rows skipped, because an
+    /// index rebuild must succeed on a crashed store.
+    pub fn scan_text(&mut self, text: &str) -> Result<ScanStats> {
+        let stats = super::reader::scan_jsonl(
+            text,
+            Tolerance::SkipBad,
+            &mut |_, row| {
+                match RunEntry::from_row(&row) {
+                    Some(e) => self.insert(e),
+                    None => self.stats.legacy += 1,
+                }
+                Ok(())
+            },
+        )?;
+        self.stats.files += 1;
+        self.stats.rows += stats.rows;
+        self.stats.torn += stats.torn;
+        self.stats.skipped += stats.skipped;
+        Ok(stats)
+    }
+
+    pub fn scan_file(&mut self, path: &std::path::Path) -> Result<ScanStats> {
+        // lossy read: a torn tail that cut a multi-byte character must
+        // not fail the rebuild (see `reader::read_stream_file`)
+        let text = super::reader::read_stream_file(path)?;
+        self.scan_text(&text)
+    }
+
+    /// Insert with first-wins dedup; fingerprint disagreement counts as a
+    /// conflict (the first entry still stands).
+    pub fn insert(&mut self, e: RunEntry) {
+        match self.entries.get(&e.config_key) {
+            None => {
+                self.entries.insert(e.config_key, e);
+            }
+            Some(prev) => {
+                if prev.fingerprint != e.fingerprint {
+                    self.stats.conflicts += 1;
+                } else {
+                    self.stats.duplicates += 1;
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, config_key: u64) -> bool {
+        self.entries.contains_key(&config_key)
+    }
+
+    pub fn get(&self, config_key: u64) -> Option<&RunEntry> {
+        self.entries.get(&config_key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &RunEntry> {
+        self.entries.values()
+    }
+
+    /// Which of `configs` are already complete (parallel to the input) —
+    /// the scheduler's pre-dispatch consultation, exposed for tests.
+    pub fn skip_mask(&self, configs: &[TrainConfig]) -> Vec<bool> {
+        configs
+            .iter()
+            .map(|c| self.contains(super::config_key(c)))
+            .collect()
+    }
+
+    /// Sorted `(config_key, fingerprint)` pairs — the store's identity
+    /// for byte-equivalence assertions in tests and CI.
+    pub fn fingerprints(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self
+            .entries
+            .values()
+            .map(|e| (e.config_key, e.fingerprint))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(key: u64, fp: u64) -> String {
+        format!(
+            r#"{{"config_key":"{key:016x}","fingerprint":"{fp:016x}","seed":"002a","job":0,"label":"m/adam@lr1e-3","model":"m","optimizer":"adam","lr":0.001,"final_train_loss":1.5,"eval_loss":1.6,"diverged":false,"steps":10}}"#
+        )
+    }
+
+    #[test]
+    fn indexes_rows_and_dedups() {
+        let mut idx = RunIndex::new();
+        let text = format!("{}\n{}\n{}\n", row(1, 10), row(2, 20), row(1, 10));
+        idx.scan_text(&text).unwrap();
+        assert_eq!(idx.len(), 2);
+        assert!(idx.contains(1) && idx.contains(2) && !idx.contains(3));
+        assert_eq!(idx.stats.duplicates, 1);
+        assert_eq!(idx.stats.conflicts, 0);
+    }
+
+    #[test]
+    fn conflicting_fingerprints_counted() {
+        let mut idx = RunIndex::new();
+        let text = format!("{}\n{}\n", row(1, 10), row(1, 99));
+        idx.scan_text(&text).unwrap();
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.get(1).unwrap().fingerprint, 10); // first wins
+        assert_eq!(idx.stats.conflicts, 1);
+    }
+
+    #[test]
+    fn legacy_rows_counted_not_indexed() {
+        let mut idx = RunIndex::new();
+        // a PR-1-era row: no config_key / seed
+        let text = r#"{"label":"m/adam","job":0,"fingerprint":"00000000000000aa"}"#;
+        idx.scan_text(&format!("{text}\n")).unwrap();
+        assert_eq!(idx.len(), 0);
+        assert_eq!(idx.stats.legacy, 1);
+        assert_eq!(idx.stats.rows, 1);
+    }
+
+    #[test]
+    fn tail_torn_mid_multibyte_char_is_recovered() {
+        // a SIGKILL can cut the final line inside a multi-byte UTF-8
+        // character; the (lossy) file read must confine the damage to
+        // the torn line rather than failing the whole rebuild
+        let dir = std::env::temp_dir().join("slimadam_index_utf8_tear");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.jsonl");
+        let mut bytes = format!("{}\n", row(1, 10)).into_bytes();
+        bytes.extend_from_slice(b"{\"label\":\"caf\xC3"); // torn inside 'é'
+        std::fs::write(&path, bytes).unwrap();
+        let mut idx = RunIndex::new();
+        let stats = idx.scan_file(&path).unwrap();
+        assert_eq!(idx.len(), 1);
+        assert_eq!(stats.torn, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn entry_roundtrips_to_summary() {
+        let mut idx = RunIndex::new();
+        idx.scan_text(&format!("{}\n", row(7, 0xabcd))).unwrap();
+        let s = idx.get(7).unwrap().to_summary();
+        assert_eq!(s.fingerprint(), 0xabcd);
+        assert_eq!(s.lr, 1e-3);
+        assert_eq!(s.result.final_train_loss, 1.5);
+        assert!(!s.result.diverged);
+    }
+
+    #[test]
+    fn eval_sentinel_restores_to_nan() {
+        let text = r#"{"config_key":"01","fingerprint":"02","seed":"03","job":0,"label":"l","model":"m","optimizer":"o","lr":0.1,"final_train_loss":2.0,"eval_loss":-1,"diverged":false,"steps":5}"#;
+        let mut idx = RunIndex::new();
+        idx.scan_text(&format!("{text}\n")).unwrap();
+        assert!(idx.get(1).unwrap().to_summary().result.eval_loss.is_nan());
+    }
+}

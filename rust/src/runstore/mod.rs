@@ -1,0 +1,360 @@
+//! Crash-safe run store: the append-only record of completed sweep jobs
+//! (DESIGN.md §10).
+//!
+//! The paper's headline figures are large LR×width×vocab sweeps, and at
+//! production scale the dominant failure cost is *wasted recompute*: a
+//! killed sweep that restarts from job zero re-burns every finished grid
+//! point. The run store closes that hole with three parts:
+//!
+//! * [`reader`] — a streaming, visitor-based JSONL reader over the
+//!   shared JSON [`Lexer`](crate::json::Lexer): zero-copy events, no
+//!   `Value` materialization on the scan path, tolerant of the torn
+//!   final line a `SIGKILL` leaves behind.
+//! * [`index`] — [`RunIndex`]: O(1) membership over every completed job,
+//!   keyed by [`config_key`] (the stable hash of the full config
+//!   identity, job seed included), deduplicated across stream files.
+//! * [`compact`] — merges stream files into one, dropping duplicate and
+//!   torn rows, preserving surviving rows byte-for-byte.
+//!
+//! [`RunStore`] ties them to a directory on disk. The scheduler's resume
+//! path (`SweepScheduler::resume_from`) opens a store, repairs torn
+//! tails, builds the index, and skips every config already present —
+//! re-executing zero completed jobs while producing a result set whose
+//! fingerprints are byte-identical to an uninterrupted run
+//! (`rust/tests/runstore_resume.rs`).
+//!
+//! CLI surface: `slimadam sweep --resume <dir>` and
+//! `slimadam runs ls|report|compact --dir <dir>` (EXPERIMENTS.md shows
+//! the report format).
+
+pub mod compact;
+pub mod index;
+pub mod reader;
+
+pub use compact::{compact, CompactReport};
+pub use index::{RunEntry, RunIndex};
+pub use reader::{scan_jsonl, scan_value, Event, RowView, ScanStats, Tolerance, Visitor};
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{EngineKind, TrainConfig};
+use crate::rng::stable_hash64;
+
+/// Stable identity of a sweep job: everything that makes its result —
+/// model, engine, optimizer, LR (bit-exact), schedule, seed, init, data
+/// spec, hypers, rule set — hashed to the u64 the run index keys on.
+///
+/// Two configs share a key iff a completed row for one is a valid result
+/// for the other. Warm-start tensors are reduced to a presence flag (the
+/// tensors themselves are not hashable identity); fine-tune sweeps that
+/// vary *only* the warm start should use distinct seeds.
+pub fn config_key(cfg: &TrainConfig) -> u64 {
+    let engine = match &cfg.engine {
+        EngineKind::Split => format!("split:{}", cfg.optimizer),
+        EngineKind::Fused(ruleset) => format!("fused:{ruleset}"),
+    };
+    let ruleset = cfg
+        .ruleset
+        .as_ref()
+        .map(|r| format!("{}@{:x}", r.label, r.cutoff.to_bits()))
+        .unwrap_or_default();
+    let mut s = String::with_capacity(192);
+    let _ = write!(
+        s,
+        "{}|{engine}|{:x}|{}|{}|{:x}|{}|{}|{}|{ruleset}|{}|{:?}|{:?}|{:?}",
+        cfg.model,
+        cfg.lr.to_bits(),
+        cfg.steps,
+        cfg.warmup,
+        cfg.seed,
+        cfg.init,
+        cfg.accum,
+        cfg.eval_batches,
+        cfg.warm_start.is_some(),
+        cfg.data,
+        cfg.probe,
+        cfg.hypers,
+    );
+    stable_hash64(s.as_bytes())
+}
+
+/// Per-file summary from [`RunStore::ls`].
+#[derive(Debug, Clone)]
+pub struct FileInfo {
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub rows: usize,
+    pub legacy: usize,
+    pub torn: usize,
+    pub skipped: usize,
+}
+
+/// A directory of append-only JSONL stream files plus the operations the
+/// resume path needs: tail repair, index builds, listing, reporting.
+#[derive(Debug, Clone)]
+pub struct RunStore {
+    dir: PathBuf,
+}
+
+impl RunStore {
+    /// Open (creating if absent) the store at `path`. A path to an
+    /// existing `.jsonl` *file* opens its parent directory — so
+    /// `--resume results/sweep` and `--resume results/sweep/stream.jsonl`
+    /// mean the same store.
+    pub fn open(path: impl AsRef<Path>) -> Result<RunStore> {
+        let path = path.as_ref();
+        let dir = if path.extension().is_some_and(|e| e == "jsonl") {
+            path.parent()
+                .filter(|p| !p.as_os_str().is_empty())
+                .unwrap_or(Path::new("."))
+                .to_path_buf()
+        } else {
+            path.to_path_buf()
+        };
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating run store {dir:?}"))?;
+        Ok(RunStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The file new rows append to (and compaction merges into).
+    pub fn primary(&self) -> PathBuf {
+        self.dir.join("stream.jsonl")
+    }
+
+    /// Every `*.jsonl` stream file, sorted by name so scan order — and
+    /// therefore first-wins dedup — is deterministic.
+    pub fn stream_files(&self) -> Result<Vec<PathBuf>> {
+        let mut files = Vec::new();
+        for entry in fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {:?}", self.dir))?
+        {
+            let path = entry?.path();
+            if path.extension().is_some_and(|e| e == "jsonl") && path.is_file() {
+                files.push(path);
+            }
+        }
+        files.sort();
+        Ok(files)
+    }
+
+    /// Build the run index over every stream file.
+    pub fn index(&self) -> Result<RunIndex> {
+        let mut idx = RunIndex::new();
+        for path in self.stream_files()? {
+            idx.scan_file(&path)
+                .with_context(|| format!("indexing {path:?}"))?;
+        }
+        Ok(idx)
+    }
+
+    /// Repair crash damage before appending: a file whose final line has
+    /// no terminating newline would otherwise splice the next appended
+    /// row onto the torn fragment, corrupting a *valid* row mid-file. If
+    /// the unterminated tail parses as a complete row the newline is
+    /// added (data kept); otherwise the tail is truncated away. Returns
+    /// how many files were repaired.
+    pub fn repair_tails(&self) -> Result<usize> {
+        let mut repaired = 0;
+        for path in self.stream_files()? {
+            let bytes = fs::read(&path)?;
+            if bytes.is_empty() || bytes.last() == Some(&b'\n') {
+                continue;
+            }
+            let tail_start = bytes
+                .iter()
+                .rposition(|&b| b == b'\n')
+                .map(|p| p + 1)
+                .unwrap_or(0);
+            let tail_ok = std::str::from_utf8(&bytes[tail_start..])
+                .is_ok_and(|t| reader::parse_row(t).is_ok());
+            if tail_ok {
+                let mut f = fs::OpenOptions::new().append(true).open(&path)?;
+                use std::io::Write;
+                f.write_all(b"\n")?;
+            } else {
+                let f = fs::OpenOptions::new().write(true).open(&path)?;
+                f.set_len(tail_start as u64)?;
+            }
+            repaired += 1;
+        }
+        Ok(repaired)
+    }
+
+    /// Per-file stats for `slimadam runs ls`, plus the combined index
+    /// (dedup/conflict totals) from the same single pass over each file.
+    pub fn ls(&self) -> Result<(Vec<FileInfo>, RunIndex)> {
+        let mut idx = RunIndex::new();
+        let mut out = Vec::new();
+        for path in self.stream_files()? {
+            let bytes = fs::metadata(&path)?.len();
+            let legacy_before = idx.stats.legacy;
+            let stats = idx.scan_file(&path)?;
+            out.push(FileInfo {
+                path,
+                bytes,
+                rows: stats.rows,
+                legacy: idx.stats.legacy - legacy_before,
+                torn: stats.torn,
+                skipped: stats.skipped,
+            });
+        }
+        Ok((out, idx))
+    }
+
+    /// Aggregate report over the store, grouped by `(model, optimizer)`:
+    /// run counts, LR range, best loss, divergence counts. This is the
+    /// measured half of EXPERIMENTS.md §Sweep-campaigns.
+    pub fn report(&self) -> Result<String> {
+        let idx = self.index()?;
+        let mut groups: std::collections::BTreeMap<(String, String), Vec<&RunEntry>> =
+            std::collections::BTreeMap::new();
+        for e in idx.entries() {
+            groups
+                .entry((e.model.clone(), e.optimizer.clone()))
+                .or_default()
+                .push(e);
+        }
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "run store {:?}: {} completed jobs across {} file(s)",
+            self.dir, idx.len(), idx.stats.files
+        );
+        if idx.stats.legacy + idx.stats.torn + idx.stats.skipped + idx.stats.conflicts > 0 {
+            let _ = writeln!(
+                out,
+                "  ({} legacy rows, {} torn, {} bad, {} conflicts)",
+                idx.stats.legacy, idx.stats.torn, idx.stats.skipped, idx.stats.conflicts
+            );
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(
+            out,
+            "{:<14} {:<16} {:>5} {:>10} {:>10} {:>10} {:>9} {:>5}",
+            "model", "optimizer", "runs", "lr_min", "lr_max", "best_loss", "@lr", "div"
+        );
+        for ((model, optimizer), entries) in &groups {
+            let lr_min = entries.iter().map(|e| e.lr).fold(f64::INFINITY, f64::min);
+            let lr_max = entries.iter().map(|e| e.lr).fold(0.0f64, f64::max);
+            let best = entries
+                .iter()
+                .filter(|e| !e.diverged)
+                .map(|e| {
+                    // -1.0 is the writer's non-finite sentinel, not a loss
+                    let loss = if e.eval_loss != -1.0 { e.eval_loss } else { e.final_train_loss };
+                    (loss, e.lr)
+                })
+                .min_by(|a, b| a.0.total_cmp(&b.0));
+            let diverged = entries.iter().filter(|e| e.diverged).count();
+            let (best_loss, best_lr) = match best {
+                Some((l, lr)) => (format!("{l:.4}"), format!("{lr:.1e}")),
+                None => ("-".into(), "-".into()),
+            };
+            let _ = writeln!(
+                out,
+                "{:<14} {:<16} {:>5} {:>10.1e} {:>10.1e} {:>10} {:>9} {:>5}",
+                model, optimizer, entries.len(), lr_min, lr_max, best_loss, best_lr, diverged
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("slimadam_runstore_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn config_key_is_stable_and_sensitive() {
+        let base = TrainConfig::lm("gpt_nano", "adam", 1e-3, 100);
+        assert_eq!(config_key(&base), config_key(&base.clone()));
+        let mut lr = base.clone();
+        lr.lr = 1.0000000001e-3; // bit-exact LR identity
+        assert_ne!(config_key(&base), config_key(&lr));
+        let mut seed = base.clone();
+        seed.seed = 1;
+        assert_ne!(config_key(&base), config_key(&seed));
+        let mut opt = base.clone();
+        opt.optimizer = "slimadam".into();
+        assert_ne!(config_key(&base), config_key(&opt));
+        let mut fused = base.clone();
+        fused.engine = EngineKind::Fused("slimadam".into());
+        assert_ne!(config_key(&base), config_key(&fused));
+    }
+
+    #[test]
+    fn open_accepts_file_or_dir() {
+        let dir = tmpdir("open");
+        let a = RunStore::open(&dir).unwrap();
+        let b = RunStore::open(dir.join("stream.jsonl")).unwrap();
+        assert_eq!(a.dir(), b.dir());
+        assert_eq!(a.primary(), dir.join("stream.jsonl"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repair_truncates_garbage_tail() {
+        let dir = tmpdir("repair_trunc");
+        let path = dir.join("stream.jsonl");
+        fs::write(&path, "{\"a\":1}\n{\"b\":2,\"tor").unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        assert_eq!(store.repair_tails().unwrap(), 1);
+        assert_eq!(fs::read_to_string(&path).unwrap(), "{\"a\":1}\n");
+        // idempotent
+        assert_eq!(store.repair_tails().unwrap(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repair_keeps_complete_unterminated_row() {
+        let dir = tmpdir("repair_keep");
+        let path = dir.join("stream.jsonl");
+        fs::write(&path, "{\"a\":1}\n{\"b\":2}").unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        assert_eq!(store.repair_tails().unwrap(), 1);
+        assert_eq!(fs::read_to_string(&path).unwrap(), "{\"a\":1}\n{\"b\":2}\n");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn report_renders_groups() {
+        let dir = tmpdir("report");
+        let row = |key: u64, opt: &str, lr: f64, loss: f64| {
+            format!(
+                r#"{{"config_key":"{key:016x}","fingerprint":"{key:016x}","seed":"01","job":0,"label":"l","model":"gpt_nano","optimizer":"{opt}","lr":{lr},"final_train_loss":{loss},"eval_loss":{loss},"diverged":false,"steps":4}}"#
+            )
+        };
+        fs::write(
+            dir.join("stream.jsonl"),
+            format!(
+                "{}\n{}\n{}\n",
+                row(1, "adam", 1e-3, 2.0),
+                row(2, "adam", 3e-3, 1.5),
+                row(3, "slimadam", 1e-3, 1.8)
+            ),
+        )
+        .unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        let rep = store.report().unwrap();
+        assert!(rep.contains("3 completed jobs"));
+        assert!(rep.contains("adam"));
+        assert!(rep.contains("slimadam"));
+        assert!(rep.contains("1.5000"), "best adam loss missing:\n{rep}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

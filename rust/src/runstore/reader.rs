@@ -1,0 +1,527 @@
+//! Streaming, visitor-based JSONL reader — the run store's hot scan path.
+//!
+//! Index rebuilds and compaction scan every row of every stream file on
+//! startup, so this reader never materializes a [`crate::json::Value`]:
+//! it drives the shared [`Lexer`] directly and emits a flat [`Event`]
+//! stream to a [`Visitor`]. Escape-free strings (the overwhelmingly
+//! common case in sweep rows) are borrowed straight from the input
+//! buffer — the scan allocates only when a string actually contains an
+//! escape.
+//!
+//! Crash tolerance: a `SIGKILL`ed sweep can tear at most the *final*
+//! line of a stream file (the writer appends each row in one
+//! `write_all`, newline included — `metrics::JsonlWriter`). The scanner
+//! therefore treats an unparseable, unterminated last line as expected
+//! damage ([`Tolerance::TornTail`], the default), while mid-file
+//! corruption stays a hard error unless the caller opts into
+//! [`Tolerance::SkipBad`] (used by `runstore::compact` to salvage what
+//! it can).
+
+use std::borrow::Cow;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{Lexer, MAX_DEPTH};
+
+/// One element of the streaming scan. String payloads are `Cow`: borrowed
+/// from the input line unless the JSON contained an escape sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// Object key (always immediately followed by its value's events).
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Receiver for the event stream. Implemented for closures, so simple
+/// scans can be written inline: `scan_value(&mut lex, &mut |ev| ...)`.
+pub trait Visitor<'a> {
+    fn event(&mut self, ev: Event<'a>) -> Result<()>;
+}
+
+impl<'a, F> Visitor<'a> for F
+where
+    F: FnMut(Event<'a>) -> Result<()>,
+{
+    fn event(&mut self, ev: Event<'a>) -> Result<()> {
+        self(ev)
+    }
+}
+
+/// Scan one JSON value from `lex`, emitting events to `visitor`. Uses the
+/// same [`Lexer`] as the DOM parser, so both accept identical inputs;
+/// unlike the DOM parser it allocates nothing on escape-free input.
+pub fn scan_value<'a, V: Visitor<'a> + ?Sized>(
+    lex: &mut Lexer<'a>,
+    visitor: &mut V,
+) -> Result<()> {
+    scan_at_depth(lex, visitor, 0)
+}
+
+fn scan_at_depth<'a, V: Visitor<'a> + ?Sized>(
+    lex: &mut Lexer<'a>,
+    v: &mut V,
+    depth: usize,
+) -> Result<()> {
+    if depth > MAX_DEPTH {
+        bail!("JSON nested deeper than {MAX_DEPTH} levels");
+    }
+    lex.skip_ws();
+    match lex.peek()? {
+        b'{' => {
+            lex.eat(b'{')?;
+            v.event(Event::ObjBegin)?;
+            lex.skip_ws();
+            if lex.peek()? == b'}' {
+                lex.eat(b'}')?;
+                return v.event(Event::ObjEnd);
+            }
+            loop {
+                lex.skip_ws();
+                let key = lex.string()?;
+                v.event(Event::Key(key))?;
+                lex.skip_ws();
+                lex.eat(b':')?;
+                scan_at_depth(lex, v, depth + 1)?;
+                lex.skip_ws();
+                match lex.peek()? {
+                    b',' => lex.eat(b',')?,
+                    b'}' => {
+                        lex.eat(b'}')?;
+                        return v.event(Event::ObjEnd);
+                    }
+                    c => bail!("expected ',' or '}}', got {:?}", c as char),
+                }
+            }
+        }
+        b'[' => {
+            lex.eat(b'[')?;
+            v.event(Event::ArrBegin)?;
+            lex.skip_ws();
+            if lex.peek()? == b']' {
+                lex.eat(b']')?;
+                return v.event(Event::ArrEnd);
+            }
+            loop {
+                scan_at_depth(lex, v, depth + 1)?;
+                lex.skip_ws();
+                match lex.peek()? {
+                    b',' => lex.eat(b',')?,
+                    b']' => {
+                        lex.eat(b']')?;
+                        return v.event(Event::ArrEnd);
+                    }
+                    c => bail!("expected ',' or ']', got {:?}", c as char),
+                }
+            }
+        }
+        b'"' => {
+            let s = lex.string()?;
+            v.event(Event::Str(s))
+        }
+        b't' => {
+            lex.lit("true")?;
+            v.event(Event::Bool(true))
+        }
+        b'f' => {
+            lex.lit("false")?;
+            v.event(Event::Bool(false))
+        }
+        b'n' => {
+            lex.lit("null")?;
+            v.event(Event::Null)
+        }
+        b'-' | b'0'..=b'9' => {
+            let n = lex.number()?;
+            v.event(Event::Num(n))
+        }
+        b'N' | b'I' | b'+' => bail!(
+            "NaN/Infinity/leading '+' are not valid JSON (byte {})",
+            lex.pos()
+        ),
+        c => bail!("unexpected character {:?} at byte {}", c as char, lex.pos()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-level JSONL scanning
+// ---------------------------------------------------------------------------
+
+/// A top-level scalar field of one row.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar<'a> {
+    Str(Cow<'a, str>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Borrowed view of one JSONL row: the raw line plus its depth-1 scalar
+/// fields in document order. Nested objects/arrays are validated during
+/// the scan but not collected — the run index only needs the flat
+/// metadata fields, so the hot path stays allocation-free.
+#[derive(Debug)]
+pub struct RowView<'a> {
+    /// The raw line, exactly as stored (no trailing newline).
+    pub line: &'a str,
+    pub fields: Vec<(Cow<'a, str>, Scalar<'a>)>,
+}
+
+impl<'a> RowView<'a> {
+    pub fn get(&self, key: &str) -> Option<&Scalar<'a>> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Scalar::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(Scalar::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        let n = self.f64(key)?;
+        (n >= 0.0 && n.fract() == 0.0).then_some(n as usize)
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(Scalar::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Fixed-width hex field (fingerprints, config keys, seeds — stored
+    /// as hex strings because JSON numbers lose u64 precision).
+    pub fn hex_u64(&self, key: &str) -> Option<u64> {
+        u64::from_str_radix(self.str(key)?, 16).ok()
+    }
+}
+
+/// Collects depth-1 scalars of a root object into a [`RowView`].
+struct TopCollector<'a> {
+    depth: usize,
+    pending_key: Option<Cow<'a, str>>,
+    fields: Vec<(Cow<'a, str>, Scalar<'a>)>,
+}
+
+impl<'a> TopCollector<'a> {
+    fn new() -> Self {
+        TopCollector {
+            depth: 0,
+            pending_key: None,
+            fields: Vec::with_capacity(16),
+        }
+    }
+
+    fn scalar(&mut self, s: Scalar<'a>) {
+        if self.depth == 1 {
+            if let Some(k) = self.pending_key.take() {
+                self.fields.push((k, s));
+            }
+        }
+    }
+
+    // Inherent (not a `Visitor` impl: that would overlap the blanket
+    // closure impl under coherence) — `parse_row` adapts it via closure.
+    fn on_event(&mut self, ev: Event<'a>) -> Result<()> {
+        match ev {
+            Event::ObjBegin | Event::ArrBegin => {
+                self.pending_key = None;
+                self.depth += 1;
+            }
+            Event::ObjEnd | Event::ArrEnd => self.depth -= 1,
+            Event::Key(k) => {
+                if self.depth == 1 {
+                    self.pending_key = Some(k);
+                }
+            }
+            Event::Str(s) => self.scalar(Scalar::Str(s)),
+            Event::Num(n) => self.scalar(Scalar::Num(n)),
+            Event::Bool(b) => self.scalar(Scalar::Bool(b)),
+            Event::Null => self.scalar(Scalar::Null),
+        }
+        Ok(())
+    }
+}
+
+/// Parse one JSONL line into a [`RowView`]. The row must be a single
+/// JSON object with nothing but whitespace after it.
+pub fn parse_row(line: &str) -> Result<RowView<'_>> {
+    let mut lex = Lexer::new(line);
+    lex.skip_ws();
+    if lex.peek()? != b'{' {
+        bail!("JSONL row must be an object");
+    }
+    let mut c = TopCollector::new();
+    scan_value(&mut lex, &mut |ev| c.on_event(ev))?;
+    lex.skip_ws();
+    if !lex.at_end() {
+        bail!("trailing garbage at byte {}", lex.pos());
+    }
+    Ok(RowView { line, fields: c.fields })
+}
+
+/// How to treat rows that fail to parse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tolerance {
+    /// Any bad row is an error.
+    Strict,
+    /// An unterminated, unparseable *final* line is recovered (counted in
+    /// [`ScanStats::torn`]) — the crash signature line-atomic appends
+    /// guarantee. Anything else is an error. The default.
+    TornTail,
+    /// Like `TornTail`, but mid-file bad rows are skipped and counted
+    /// instead of fatal (compaction salvage mode).
+    SkipBad,
+}
+
+/// What a scan saw, beyond the rows it delivered.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScanStats {
+    /// Well-formed rows delivered to the callback.
+    pub rows: usize,
+    /// Unterminated final lines recovered (0 or 1 per file).
+    pub torn: usize,
+    /// Mid-file bad rows skipped (only under [`Tolerance::SkipBad`]).
+    pub skipped: usize,
+    /// Total bytes scanned.
+    pub bytes: usize,
+}
+
+impl ScanStats {
+    pub fn merge(&mut self, other: ScanStats) {
+        self.rows += other.rows;
+        self.torn += other.torn;
+        self.skipped += other.skipped;
+        self.bytes += other.bytes;
+    }
+}
+
+/// Scan JSONL text, calling `on_row(line_number, row)` for each
+/// well-formed row (line numbers are 1-based, counting every line).
+/// Blank lines are ignored. See [`Tolerance`] for damage handling.
+pub fn scan_jsonl<'a, F>(
+    text: &'a str,
+    tol: Tolerance,
+    mut on_row: F,
+) -> Result<ScanStats>
+where
+    F: FnMut(usize, RowView<'a>) -> Result<()>,
+{
+    let mut stats = ScanStats { bytes: text.len(), ..Default::default() };
+    let mut start = 0;
+    let mut lineno = 0;
+    while start < text.len() {
+        lineno += 1;
+        let (line, had_newline, next) = match text[start..].find('\n') {
+            Some(p) => (&text[start..start + p], true, start + p + 1),
+            None => (&text[start..], false, text.len()),
+        };
+        start = next;
+        let line = line.strip_suffix('\r').unwrap_or(line);
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_row(line) {
+            Ok(view) => {
+                stats.rows += 1;
+                on_row(lineno, view)?;
+            }
+            Err(e) => {
+                let torn_tail = next >= text.len() && !had_newline;
+                match tol {
+                    Tolerance::Strict => {
+                        return Err(e).context(format!("line {lineno}"))
+                    }
+                    Tolerance::TornTail | Tolerance::SkipBad if torn_tail => {
+                        stats.torn += 1;
+                    }
+                    Tolerance::TornTail => {
+                        return Err(e).context(format!(
+                            "line {lineno} (mid-file corruption; \
+                             `slimadam runs compact` can salvage)"
+                        ))
+                    }
+                    Tolerance::SkipBad => stats.skipped += 1,
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Read a stream file for scanning, tolerating a torn tail that cut a
+/// multi-byte UTF-8 sequence mid-character: invalid bytes decode
+/// lossily (U+FFFD), which confines the damage to the already
+/// unparseable torn line instead of failing the whole read — a strict
+/// `read_to_string` would abort `runs ls`/`report`/`compact` on exactly
+/// the files they exist to salvage. Complete rows are pure JSON (valid
+/// UTF-8), so the lossy decode is the identity for them.
+pub fn read_stream_file(path: &Path) -> Result<String> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    Ok(match String::from_utf8(bytes) {
+        Ok(s) => s, // valid UTF-8: reuse the buffer without re-copying
+        Err(e) => String::from_utf8_lossy(e.as_bytes()).into_owned(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+
+    fn events(src: &str) -> Vec<String> {
+        let mut lex = Lexer::new(src);
+        let mut out = Vec::new();
+        scan_value(&mut lex, &mut |ev: Event<'_>| {
+            out.push(format!("{ev:?}"));
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn scalar_events() {
+        assert_eq!(events("42"), ["Num(42.0)"]);
+        assert_eq!(events("true"), ["Bool(true)"]);
+        assert_eq!(events("null"), ["Null"]);
+        assert_eq!(events(r#""hi""#), [r#"Str("hi")"#]);
+    }
+
+    #[test]
+    fn nested_events_in_document_order() {
+        let evs = events(r#"{"a": [1, {"b": null}], "c": "d"}"#);
+        assert_eq!(
+            evs,
+            [
+                "ObjBegin",
+                r#"Key("a")"#,
+                "ArrBegin",
+                "Num(1.0)",
+                "ObjBegin",
+                r#"Key("b")"#,
+                "Null",
+                "ObjEnd",
+                "ArrEnd",
+                r#"Key("c")"#,
+                r#"Str("d")"#,
+                "ObjEnd",
+            ]
+        );
+    }
+
+    #[test]
+    fn streaming_and_dom_agree_on_rejects() {
+        for s in ["NaN", "+1", "01", "1.", r#""\ud800""#, "{", "[1,]"] {
+            let mut lex = Lexer::new(s);
+            let stream = scan_value(&mut lex, &mut |_ev: Event<'_>| Ok(()));
+            assert!(stream.is_err(), "streaming must reject {s:?}");
+            assert!(Value::parse(s).is_err(), "DOM must reject {s:?}");
+        }
+    }
+
+    #[test]
+    fn row_view_extracts_top_level_scalars() {
+        let row = parse_row(
+            r#"{"label":"gpt/adam","lr":0.001,"diverged":false,
+               "memory":{"v_elems":10},"fingerprint":"00ff00ff00ff00ff"}"#,
+        )
+        .unwrap();
+        assert_eq!(row.str("label"), Some("gpt/adam"));
+        assert_eq!(row.f64("lr"), Some(1e-3));
+        assert_eq!(row.bool("diverged"), Some(false));
+        assert_eq!(row.hex_u64("fingerprint"), Some(0x00ff00ff00ff00ff));
+        // nested object fields are not lifted to the top level
+        assert!(row.get("v_elems").is_none());
+        assert!(row.get("memory").is_none());
+    }
+
+    #[test]
+    fn torn_tail_recovered_not_fatal() {
+        let text = "{\"a\":1}\n{\"a\":2}\n{\"a\":3,\"tru";
+        let mut seen = Vec::new();
+        let stats = scan_jsonl(text, Tolerance::TornTail, &mut |_, r| {
+            seen.push(r.f64("a").unwrap());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, [1.0, 2.0]);
+        assert_eq!(stats.rows, 2);
+        assert_eq!(stats.torn, 1);
+    }
+
+    #[test]
+    fn mid_file_corruption_is_fatal_unless_skipping() {
+        let text = "{\"a\":1}\ngarbage\n{\"a\":3}\n";
+        assert!(scan_jsonl(text, Tolerance::TornTail, &mut |_, _| Ok(())).is_err());
+        let mut n = 0;
+        let stats = scan_jsonl(text, Tolerance::SkipBad, &mut |_, _| {
+            n += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!((n, stats.rows, stats.skipped), (2, 2, 1));
+    }
+
+    #[test]
+    fn complete_final_line_without_newline_is_a_row() {
+        let text = "{\"a\":1}\n{\"a\":2}";
+        let stats =
+            scan_jsonl(text, Tolerance::TornTail, &mut |_, _| Ok(())).unwrap();
+        assert_eq!((stats.rows, stats.torn), (2, 0));
+    }
+
+    #[test]
+    fn blank_lines_and_crlf_ignored() {
+        let text = "{\"a\":1}\r\n\n{\"a\":2}\n";
+        let stats =
+            scan_jsonl(text, Tolerance::Strict, &mut |_, _| Ok(())).unwrap();
+        assert_eq!(stats.rows, 2);
+    }
+
+    #[test]
+    fn non_object_rows_rejected() {
+        assert!(parse_row("[1,2]").is_err());
+        assert!(parse_row("42").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_bounded_identically_in_both_layers() {
+        let nested = |n: usize| {
+            let mut s = String::new();
+            for _ in 0..n {
+                s.push('[');
+            }
+            for _ in 0..n {
+                s.push(']');
+            }
+            s
+        };
+        // past the bound: both layers reject (stack-overflow guard)
+        let deep = nested(100);
+        let mut lex = Lexer::new(&deep);
+        assert!(scan_value(&mut lex, &mut |_ev: Event<'_>| Ok(())).is_err());
+        assert!(Value::parse(&deep).is_err());
+        // within the bound: both layers accept
+        let ok = nested(32);
+        let mut lex = Lexer::new(&ok);
+        assert!(scan_value(&mut lex, &mut |_ev: Event<'_>| Ok(())).is_ok());
+        assert!(Value::parse(&ok).is_ok());
+    }
+}

@@ -10,6 +10,13 @@
 //! seed, which pairs the optimizer curves on identical data streams
 //! (the paper's comparison setup); use [`LrSweep::run_seeded`] when grid
 //! points should instead draw independent derived seeds.
+//!
+//! Resume (DESIGN.md §10): pass a scheduler built with
+//! `SweepScheduler::resume_from` and already-completed grid points are
+//! restored from the run store instead of re-executed — they occupy
+//! their original `summaries[opt][lr]` slots, so charts, `best()` and
+//! CSV output are oblivious to how many jobs actually ran
+//! ([`LrSweep::restored`] reports the split).
 
 use anyhow::Result;
 
@@ -130,6 +137,16 @@ impl LrSweep {
             .zip(&self.lrs)
             .map(|(s, &lr)| (lr, Self::metric(s)))
             .collect()
+    }
+
+    /// How many grid points were restored from the run store rather than
+    /// executed (non-zero only for schedulers built with resume).
+    pub fn restored(&self) -> usize {
+        self.summaries
+            .iter()
+            .flatten()
+            .filter(|s| s.restored())
+            .count()
     }
 
     /// Best (lr, loss) for one optimizer.

@@ -221,3 +221,143 @@ fn bpe_fuzz_roundtrip() {
         prop_assert(bpe.decode(&toks) == bytes, "roundtrip")
     });
 }
+
+// ---------------------------------------------------------------------------
+// JSON substrate: round-trip properties shared by the DOM parser and the
+// runstore streaming reader (both drive the same json::Lexer, so they
+// must accept identical inputs and agree on every value).
+// ---------------------------------------------------------------------------
+
+/// Rebuild a Value from the streaming event sequence — the test-side
+/// inverse of `runstore::reader::scan_value`.
+fn value_from_events(src: &str) -> anyhow::Result<slimadam::json::Value> {
+    use slimadam::json::{Lexer, Value};
+    use slimadam::runstore::Event;
+
+    enum Frame {
+        Arr(Vec<Value>),
+        Obj(std::collections::BTreeMap<String, Value>, Option<String>),
+    }
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut root: Option<Value> = None;
+    let place = |stack: &mut Vec<Frame>, root: &mut Option<Value>, v: Value| {
+        match stack.last_mut() {
+            None => *root = Some(v),
+            Some(Frame::Arr(items)) => items.push(v),
+            Some(Frame::Obj(map, key)) => {
+                map.insert(key.take().expect("value without key"), v);
+            }
+        }
+    };
+    let mut lex = Lexer::new(src);
+    slimadam::runstore::scan_value(&mut lex, &mut |ev: Event<'_>| {
+        match ev {
+            Event::ObjBegin => stack.push(Frame::Obj(Default::default(), None)),
+            Event::ArrBegin => stack.push(Frame::Arr(Vec::new())),
+            Event::ObjEnd | Event::ArrEnd => {
+                let v = match stack.pop().unwrap() {
+                    Frame::Arr(items) => Value::Arr(items),
+                    Frame::Obj(map, _) => Value::Obj(map),
+                };
+                place(&mut stack, &mut root, v);
+            }
+            Event::Key(k) => {
+                if let Some(Frame::Obj(_, key)) = stack.last_mut() {
+                    *key = Some(k.into_owned());
+                }
+            }
+            Event::Str(s) => place(&mut stack, &mut root, Value::Str(s.into_owned())),
+            Event::Num(n) => place(&mut stack, &mut root, Value::Num(n)),
+            Event::Bool(b) => place(&mut stack, &mut root, Value::Bool(b)),
+            Event::Null => place(&mut stack, &mut root, Value::Null),
+        }
+        Ok(())
+    })?;
+    root.ok_or_else(|| anyhow::anyhow!("no value"))
+}
+
+/// dump -> parse is the identity on arbitrary value trees (DOM path).
+#[test]
+fn json_dom_roundtrip() {
+    use slimadam::json::Value;
+    check(150, |g| {
+        let v = g.json_value(3);
+        let text = v.dump();
+        let back = Value::parse(&text)
+            .map_err(|e| format!("reparse of {text:?} failed: {e:#}"))?;
+        prop_assert(back == v, format!("roundtrip mismatch on {text:?}"))
+    });
+}
+
+/// The streaming reader reconstructs exactly what the DOM parser sees,
+/// on both compact and pretty serializations.
+#[test]
+fn json_streaming_agrees_with_dom() {
+    check(150, |g| {
+        let v = g.json_value(3);
+        for text in [v.dump(), v.dump_pretty()] {
+            let streamed = value_from_events(&text)
+                .map_err(|e| format!("stream of {text:?} failed: {e:#}"))?;
+            prop_assert(streamed == v, format!("stream mismatch on {text:?}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Arbitrary strings — escapes, control chars, astral plane — survive
+/// dump -> parse bit-exactly through both paths.
+#[test]
+fn json_string_edge_cases_roundtrip() {
+    use slimadam::json::Value;
+    check(300, |g| {
+        let s = g.json_string(24);
+        let text = Value::Str(s.clone()).dump();
+        let dom = Value::parse(&text)
+            .map_err(|e| format!("parse of {text:?} failed: {e:#}"))?;
+        prop_assert(dom == Value::Str(s.clone()), format!("dom {text:?}"))?;
+        let streamed = value_from_events(&text)
+            .map_err(|e| format!("stream of {text:?} failed: {e:#}"))?;
+        prop_assert(streamed == Value::Str(s), format!("stream {text:?}"))
+    });
+}
+
+/// Surrogate-pair escape forms decode to the same astral string the
+/// raw-UTF-8 form does, and lone surrogates are rejected by both layers.
+#[test]
+fn json_surrogate_handling() {
+    use slimadam::json::Value;
+    let paired = Value::parse(r#""😀""#).unwrap();
+    assert_eq!(paired.as_str().unwrap(), "😀");
+    assert_eq!(value_from_events(r#""😀""#).unwrap(), paired);
+    for bad in [r#""\ud83d""#, r#""\ude00""#, r#""\ud83dx""#] {
+        assert!(Value::parse(bad).is_err(), "DOM must reject {bad}");
+        assert!(value_from_events(bad).is_err(), "stream must reject {bad}");
+    }
+}
+
+/// Strict number grammar: everything `str::parse::<f64>` would happily
+/// accept but RFC 8259 forbids is rejected by both layers; valid numbers
+/// round-trip through dump with full precision for integers.
+#[test]
+fn json_number_edge_cases() {
+    use slimadam::json::Value;
+    for bad in ["NaN", "Infinity", "-Infinity", "+1", "01", "1.", ".5", "1e", "1e+"] {
+        assert!(Value::parse(bad).is_err(), "DOM must reject {bad}");
+        assert!(value_from_events(bad).is_err(), "stream must reject {bad}");
+    }
+    check(200, |g| {
+        let n = if g.bool() {
+            g.usize(0, 1 << 50) as f64
+        } else {
+            g.f64(-1e12, 1e12)
+        };
+        let text = slimadam::json::Value::Num(n).dump();
+        let dom = slimadam::json::Value::parse(&text)
+            .map_err(|e| format!("parse of {text:?} failed: {e:#}"))?;
+        let back = dom.as_f64().map_err(|e| format!("{e:#}"))?;
+        prop_assert(
+            back == n || (back - n).abs() <= 1e-9 * n.abs().max(1.0),
+            format!("{n} -> {text} -> {back}"),
+        )
+    });
+}
