@@ -6,11 +6,15 @@
 use slimadam::benchkit::Bencher;
 use slimadam::coordinator::{make_data, DataSpec};
 use slimadam::optim::{clip_global_norm, presets, Hypers};
-use slimadam::runtime::engine::{cpu_client, GradEngine};
+use slimadam::runtime::backend::{backend_for, BackendSpec};
+use slimadam::runtime::engine::GradEngine;
 use slimadam::tensor::Tensor;
 
 fn main() {
-    let client = cpu_client().expect("pjrt client");
+    let Ok(backend) = backend_for(&BackendSpec::pjrt()) else {
+        eprintln!("skipping: pjrt backend not compiled in (use --features pjrt)");
+        return;
+    };
     let b = Bencher::default();
     println!("== end-to-end step throughput per paper workload ==");
 
@@ -35,7 +39,7 @@ fn main() {
     ];
 
     for (id, model, opt_name, data_spec) in rows {
-        let Ok(engine) = GradEngine::new("artifacts", model, &client) else {
+        let Ok(engine) = GradEngine::new("artifacts", model, backend.as_ref()) else {
             eprintln!("skipping {id}: {model} artifact missing");
             continue;
         };

@@ -6,12 +6,16 @@ use slimadam::benchkit::Bencher;
 use slimadam::coordinator::{make_data, DataSpec};
 use slimadam::optim::adamk::AdamK;
 use slimadam::optim::{clip_global_norm, KMode, Optimizer};
-use slimadam::runtime::engine::{cpu_client, GradEngine, TrainEngine};
+use slimadam::runtime::backend::{backend_for, BackendSpec};
+use slimadam::runtime::engine::{GradEngine, TrainEngine};
 use slimadam::runtime::literal::{literal_to_tensor, tensor_to_literal};
 use slimadam::tensor::Tensor;
 
 fn main() {
-    let client = cpu_client().expect("pjrt client");
+    let Ok(backend) = backend_for(&BackendSpec::pjrt()) else {
+        eprintln!("skipping: pjrt backend not compiled in (use --features pjrt)");
+        return;
+    };
     let b = Bencher::default();
     let data_spec = DataSpec::Markov {
         alpha: 1.07,
@@ -20,7 +24,7 @@ fn main() {
     };
 
     for model in ["gpt_nano", "gpt_mini"] {
-        let Ok(engine) = GradEngine::new("artifacts", model, &client) else {
+        let Ok(engine) = GradEngine::new("artifacts", model, backend.as_ref()) else {
             eprintln!("skipping {model}: artifacts missing");
             continue;
         };
@@ -75,7 +79,7 @@ fn main() {
         // fused engine (artifact exists for gpt_nano/gpt_mini adam+slimadam)
         for ruleset in ["adam", "slimadam"] {
             let Ok(mut fused) =
-                TrainEngine::new("artifacts", model, ruleset, &client, "mitchell", 5)
+                TrainEngine::new("artifacts", model, ruleset, backend.as_ref(), "mitchell", 5)
             else {
                 continue;
             };

@@ -1,0 +1,77 @@
+//! Native-backend step latency (DESIGN.md §11): grad_step and fused
+//! train_step throughput of the pure-Rust interpreter for every builtin
+//! model, plus the full split-path step (grads + clip + AdamK update).
+//! Unlike the PJRT benches this needs no artifacts, so it always runs —
+//! the regression guard for the interpreter's forward/backward passes.
+
+use slimadam::benchkit::Bencher;
+use slimadam::coordinator::{make_data, DataSpec};
+use slimadam::optim::adamk::AdamK;
+use slimadam::optim::{clip_global_norm, KMode, Optimizer};
+use slimadam::runtime::backend::{backend_for, native, BackendSpec};
+use slimadam::runtime::engine::{GradEngine, TrainEngine};
+use slimadam::tensor::Tensor;
+
+fn main() {
+    let backend = backend_for(&BackendSpec::native()).expect("native backend");
+    let b = Bencher::default();
+    let data_spec = DataSpec::Markov {
+        alpha: 1.07,
+        coherence: 0.5,
+        seed: 7,
+    };
+
+    for &model in native::MODELS {
+        let engine = GradEngine::new("artifacts", model, backend.as_ref())
+            .expect("native grad engine");
+        let man = engine.manifest().clone();
+        let tokens = man.batch[0].shape.iter().product::<usize>() as f64;
+        let mut rng = slimadam::rng::Rng::new(4);
+        let mut params: Vec<Tensor> = man
+            .params
+            .iter()
+            .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+            .collect();
+        let mut data = make_data(&man, &data_spec, 11).unwrap();
+        let batch = data.next_batch();
+
+        println!("== {model}: native grad_step ==");
+        b.bench_with_units(&format!("native/{model}/grad_step"), tokens, "tok", || {
+            let (_loss, _grads) = engine.step(&params, &batch).unwrap();
+        });
+
+        let mut opt = AdamK::new(
+            "adam",
+            man.params.clone(),
+            vec![KMode::None; man.n_params()],
+            Default::default(),
+        );
+        let mut t = 0usize;
+        b.bench_with_units(
+            &format!("native/{model}/split_full_step"),
+            tokens,
+            "tok",
+            || {
+                t += 1;
+                let (_loss, mut grads) = engine.step(&params, &batch).unwrap();
+                clip_global_norm(&mut grads, 1.0);
+                opt.step(&mut params, &grads, t, 1e-4);
+            },
+        );
+
+        for &ruleset in native::RULESETS {
+            let mut fused =
+                TrainEngine::new("artifacts", model, ruleset, backend.as_ref(), "mitchell", 5)
+                    .expect("native fused engine");
+            println!("== {model}: native fused train_step ({ruleset}) ==");
+            b.bench_with_units(
+                &format!("native/{model}/fused_step/{ruleset}"),
+                tokens,
+                "tok",
+                || {
+                    fused.step(&batch, 1e-4).unwrap();
+                },
+            );
+        }
+    }
+}

@@ -1,17 +1,20 @@
-//! Compile-once executable cache (DESIGN.md §9).
+//! Compile-once executable cache (DESIGN.md §9, §11).
 //!
-//! PJRT wrapper types are not `Send`, so compiled executables cannot be
-//! shared across sweep workers. Instead each worker thread owns exactly
-//! one PJRT CPU client ([`thread_client`]) plus a thread-local cache of
-//! compiled executables keyed by `(artifact name, manifest hash)`. A
-//! 50-point LR sweep on a 4-worker pool therefore compiles each distinct
-//! artifact at most 4 times (once per worker that touches it) instead of
-//! 50 — and because the sweep scheduler shards jobs by artifact
-//! (`SweepScheduler::artifact_key`), usually exactly once.
+//! Compiled executables are thread-confined (the PJRT wrapper types are
+//! not `Send`), so each worker thread owns its backends
+//! ([`thread_backend`]) plus a thread-local cache of compiled executables
+//! keyed by `(backend, device, artifact name, manifest hash)`. A 50-point
+//! LR sweep on a 4-worker pool therefore compiles each distinct artifact
+//! at most 4 times (once per worker that touches it) instead of 50 — and
+//! because the sweep scheduler shards jobs by the same backend+artifact
+//! key (`SweepScheduler::shard_key`), usually exactly once.
 //!
 //! Keying on the manifest hash, not just the name, means re-running
 //! `make artifacts` mid-process can never serve a stale executable: a
 //! re-lowered artifact has a new manifest digest and misses the cache.
+//! Keying on `(backend, device)` means a mixed pool — PJRT artifacts next
+//! to native interpreter runs, or (later) CPU next to GPU clients — never
+//! cross-serves an executable compiled for a different engine.
 //!
 //! The global [`stats`] counters aggregate hits/misses across all worker
 //! threads so tests and benches can assert the compile-once property.
@@ -22,15 +25,15 @@ use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
-use xla::PjRtClient;
 
-use crate::runtime::engine::{cpu_client, Artifact, Compiled, GradEngine};
+use crate::runtime::backend::{backend_for, Backend, BackendSpec};
+use crate::runtime::engine::{Compiled, GradEngine};
 
 static HITS: AtomicU64 = AtomicU64::new(0);
 static MISSES: AtomicU64 = AtomicU64::new(0);
 
 /// Snapshot of the global cache counters (all worker threads combined).
-/// Every miss is exactly one PJRT compilation.
+/// Every miss is exactly one backend compilation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -58,42 +61,48 @@ pub fn reset_stats() {
     MISSES.store(0, Ordering::Relaxed);
 }
 
+/// Cache key: execution identity (backend kind + device) plus artifact
+/// identity (name + manifest digest).
+type Key = (BackendSpec, String, u64);
+
 thread_local! {
-    static CLIENT: RefCell<Option<Rc<PjRtClient>>> = RefCell::new(None);
-    static GRAD: RefCell<HashMap<(String, u64), Rc<GradEngine>>> =
+    static BACKENDS: RefCell<HashMap<BackendSpec, Rc<dyn Backend>>> =
         RefCell::new(HashMap::new());
-    static TRAIN: RefCell<HashMap<(String, u64), Rc<Compiled>>> =
+    static GRAD: RefCell<HashMap<Key, Rc<GradEngine>>> =
+        RefCell::new(HashMap::new());
+    static TRAIN: RefCell<HashMap<Key, Rc<Compiled>>> =
         RefCell::new(HashMap::new());
 }
 
-/// This worker thread's PJRT CPU client, created on first use. One client
-/// per worker is the PJRT threading contract here: the wrapper types are
-/// not `Send`, and a CPU client is cheap.
-pub fn thread_client() -> Result<Rc<PjRtClient>> {
-    CLIENT.with(|slot| {
-        if let Some(client) = slot.borrow().as_ref() {
-            return Ok(client.clone());
+/// This worker thread's backend for `spec`, created on first use. One
+/// backend instance per worker is the threading contract here: the PJRT
+/// wrapper types are not `Send`, and a CPU client is cheap; the native
+/// interpreter is stateless.
+pub fn thread_backend(spec: &BackendSpec) -> Result<Rc<dyn Backend>> {
+    BACKENDS.with(|slot| {
+        if let Some(backend) = slot.borrow().get(spec) {
+            return Ok(backend.clone());
         }
-        let client = Rc::new(cpu_client()?);
-        *slot.borrow_mut() = Some(client.clone());
-        Ok(client)
+        let backend = backend_for(spec)?;
+        slot.borrow_mut().insert(*spec, backend.clone());
+        Ok(backend)
     })
 }
 
-/// Cached split engine for `<model>.grad`: compiled at most once per
-/// worker thread per manifest revision.
-pub fn grad_engine(dir: &str, model: &str) -> Result<Rc<GradEngine>> {
+/// Cached split engine for `<model>.grad` on the given backend: compiled
+/// at most once per worker thread per `(backend, device, manifest)`.
+pub fn grad_engine(spec: &BackendSpec, dir: &str, model: &str) -> Result<Rc<GradEngine>> {
     let name = format!("{model}.grad");
-    let art = Artifact::load(dir, &name)?;
-    let key = (name, art.manifest_hash);
+    let backend = thread_backend(spec)?;
+    let art = backend.load_artifact(dir.as_ref(), &name)?;
+    let key = (*spec, name, art.manifest_hash);
     GRAD.with(|cache| {
         if let Some(engine) = cache.borrow().get(&key) {
             HITS.fetch_add(1, Ordering::Relaxed);
             return Ok(engine.clone());
         }
         MISSES.fetch_add(1, Ordering::Relaxed);
-        let client = thread_client()?;
-        let engine = Rc::new(GradEngine::from_artifact(&art, &client)?);
+        let engine = Rc::new(GradEngine::from_artifact(&art, backend.as_ref())?);
         cache.borrow_mut().insert(key, engine.clone());
         Ok(engine)
     })
@@ -102,23 +111,28 @@ pub fn grad_engine(dir: &str, model: &str) -> Result<Rc<GradEngine>> {
 /// Cached compiled fused train-step executable `<model>.train.<ruleset>`.
 /// The caller wraps it in a fresh `TrainEngine` per run (state is per-run;
 /// the compilation is what's expensive and shareable).
-pub fn train_compiled(dir: &str, model: &str, ruleset: &str) -> Result<Rc<Compiled>> {
+pub fn train_compiled(
+    spec: &BackendSpec,
+    dir: &str,
+    model: &str,
+    ruleset: &str,
+) -> Result<Rc<Compiled>> {
     let name = format!("{model}.train.{ruleset}");
-    let art = Artifact::load(dir, &name)?;
+    let backend = thread_backend(spec)?;
+    let art = backend.load_artifact(dir.as_ref(), &name)?;
     anyhow::ensure!(
         art.manifest.kind == "train_step",
         "artifact {} is not a train_step",
         name
     );
-    let key = (name, art.manifest_hash);
+    let key = (*spec, name, art.manifest_hash);
     TRAIN.with(|cache| {
         if let Some(compiled) = cache.borrow().get(&key) {
             HITS.fetch_add(1, Ordering::Relaxed);
             return Ok(compiled.clone());
         }
         MISSES.fetch_add(1, Ordering::Relaxed);
-        let client = thread_client()?;
-        let compiled = Rc::new(art.compile(&client)?);
+        let compiled = Rc::new(art.compile(backend.as_ref())?);
         cache.borrow_mut().insert(key, compiled.clone());
         Ok(compiled)
     })
@@ -133,12 +147,28 @@ mod tests {
         // Counters are global and other tests may bump them concurrently,
         // so assert only monotonic deltas we caused ourselves.
         let before = stats();
-        assert!(grad_engine("artifacts", "no_such_model_xyz").is_err());
+        assert!(
+            grad_engine(&BackendSpec::pjrt(), "artifacts", "no_such_model_xyz").is_err()
+        );
+        assert!(
+            grad_engine(&BackendSpec::native(), "artifacts", "no_such_model_xyz").is_err()
+        );
         HITS.fetch_add(2, Ordering::Relaxed);
         MISSES.fetch_add(1, Ordering::Relaxed);
         let after = stats();
         assert!(after.hits >= before.hits + 2);
         assert!(after.misses >= before.misses + 1);
         assert_eq!(after.compiles(), after.misses);
+    }
+
+    #[test]
+    fn native_engines_cache_per_thread() {
+        let spec = BackendSpec::native();
+        let a = grad_engine(&spec, "artifacts", "mlp_tiny").unwrap();
+        let b = grad_engine(&spec, "artifacts", "mlp_tiny").unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "second lookup must be a cache hit");
+        let c = train_compiled(&spec, "artifacts", "mlp_tiny", "adam").unwrap();
+        let d = train_compiled(&spec, "artifacts", "mlp_tiny", "adam").unwrap();
+        assert!(Rc::ptr_eq(&c, &d));
     }
 }

@@ -8,12 +8,13 @@
 //!   randomness derives from `TrainConfig::seed`, so a run is a pure
 //!   function of its config.
 //! * [`exec_cache`] — per-worker-thread compile-once executable cache
-//!   keyed by `(artifact name, manifest hash)`. Each worker owns its own
-//!   PJRT CPU client (the `xla` wrapper types are not `Send`).
+//!   keyed by `(backend, device, artifact name, manifest hash)`
+//!   (DESIGN.md §11). Each worker owns its own backend instances (the
+//!   `xla` wrapper types are not `Send`).
 //! * [`scheduler`] / [`SweepScheduler`] — shards a config grid across
-//!   workers by artifact, steals work across shards, streams per-job
-//!   JSONL rows as jobs finish, and guarantees parallel == serial
-//!   results job-for-job.
+//!   workers by `(backend, device, artifact)`, steals work across
+//!   shards, streams per-job JSONL rows as jobs finish, and guarantees
+//!   parallel == serial results job-for-job.
 //!
 //! Everything the figure/table reproductions need funnels through
 //! [`run_config`] / [`run_grid`], so sweep results are directly comparable.
@@ -35,6 +36,7 @@ use crate::data::DataSource;
 use crate::optim::memory::MemoryReport;
 use crate::optim::{presets, Hypers};
 use crate::rules::RuleSet;
+use crate::runtime::backend::BackendSpec;
 use crate::runtime::engine::TrainEngine;
 use crate::snr::{ProbeSchedule, SnrSummary};
 use crate::tensor::Tensor;
@@ -70,6 +72,10 @@ pub struct TrainConfig {
     /// Explicit SlimAdam rules (overrides the named preset when set).
     pub ruleset: Option<RuleSet>,
     pub engine: EngineKind,
+    /// Execution backend + device (DESIGN.md §11). Part of the run's
+    /// identity: hashed into `runstore::config_key`, the executable-cache
+    /// key and the scheduler shard key.
+    pub backend: BackendSpec,
     pub lr: f64,
     pub steps: usize,
     pub warmup: usize,
@@ -93,6 +99,7 @@ impl TrainConfig {
             optimizer: optimizer.into(),
             ruleset: None,
             engine: EngineKind::Split,
+            backend: BackendSpec::default(),
             lr,
             steps,
             warmup: steps / 5, // paper: 2048 of 10k ≈ 20%
@@ -391,11 +398,12 @@ impl DataSource for ArcCorpusSource {
 
 /// Execute one training config end to end on the calling thread.
 ///
-/// Compiled executables come from [`exec_cache`] (per-worker PJRT client,
-/// compile-once per `(artifact, manifest hash)`), and every random draw —
-/// init, data order, eval batches — derives from `cfg.seed`, so the
-/// result is a pure function of the config: the scheduler can run it on
-/// any worker, in any order, and produce identical metrics.
+/// Compiled executables come from [`exec_cache`] (per-worker backends,
+/// compile-once per `(backend, device, artifact, manifest hash)`), and
+/// every random draw — init, data order, eval batches — derives from
+/// `cfg.seed`, so the result is a pure function of the config: the
+/// scheduler can run it on any worker, in any order, and produce
+/// identical metrics.
 pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
     if synthetic_runs_enabled() {
         return Ok(synthetic_run(cfg));
@@ -404,7 +412,7 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
 
     match &cfg.engine {
         EngineKind::Split => {
-            let engine = exec_cache::grad_engine("artifacts", &cfg.model)?;
+            let engine = exec_cache::grad_engine(&cfg.backend, "artifacts", &cfg.model)?;
             let man = engine.manifest().clone();
             let mut data = make_data(&man, &cfg.data, cfg.seed)?;
 
@@ -466,7 +474,8 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
             })
         }
         EngineKind::Fused(ruleset) => {
-            let compiled = exec_cache::train_compiled("artifacts", &cfg.model, ruleset)?;
+            let compiled =
+                exec_cache::train_compiled(&cfg.backend, "artifacts", &cfg.model, ruleset)?;
             let mut engine =
                 TrainEngine::with_compiled(compiled, &cfg.init, cfg.seed.wrapping_add(17))?;
             if let Some(ws) = &cfg.warm_start {

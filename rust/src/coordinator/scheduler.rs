@@ -3,11 +3,12 @@
 //! [`SweepScheduler`] turns a grid of [`TrainConfig`]s into finished
 //! [`RunSummary`]s:
 //!
-//! * **Sharded dispatch** — jobs are assigned to workers by the artifact
-//!   they compile ([`SweepScheduler::artifact_key`]), so each worker's
-//!   thread-local executable cache (`exec_cache`) compiles every distinct
-//!   artifact once; idle workers steal across shards, so a one-artifact
-//!   sweep still uses the whole pool.
+//! * **Sharded dispatch** — jobs are assigned to workers by the
+//!   `(backend, device, artifact)` they compile under
+//!   ([`SweepScheduler::shard_key`]), so each worker's thread-local
+//!   executable cache (`exec_cache`) compiles every distinct executable
+//!   once even in mixed backend/device pools; idle workers steal across
+//!   shards, so a one-artifact sweep still uses the whole pool.
 //! * **Streaming results** — with [`SweepScheduler::stream_to`], each job
 //!   appends one JSONL row the moment it finishes (tail -f friendly; a
 //!   crashed sweep keeps every completed row) instead of reporting at
@@ -74,7 +75,15 @@ impl SweepScheduler {
     /// store so newly finished jobs extend it.
     pub fn resume_from(self, store: &RunStore) -> Result<SweepScheduler> {
         store.repair_tails()?;
-        Ok(self.resume_index(store.index()?))
+        let index = store.index()?;
+        if !self.quiet && index.stats.legacy > 0 {
+            eprintln!(
+                "  resume: {} row(s) in the store carry no config key \
+                 (pre-runstore streams) and cannot be matched",
+                index.stats.legacy
+            );
+        }
+        Ok(self.resume_index(index))
     }
 
     /// Resume against an already-built [`RunIndex`].
@@ -89,13 +98,20 @@ impl SweepScheduler {
         self
     }
 
-    /// The artifact a config will compile — the scheduler's shard key, so
-    /// same-artifact jobs land on the same worker's executable cache.
+    /// The artifact a config will compile.
     pub fn artifact_key(cfg: &TrainConfig) -> String {
         match &cfg.engine {
             EngineKind::Split => format!("{}.grad", cfg.model),
             EngineKind::Fused(ruleset) => format!("{}.train.{ruleset}", cfg.model),
         }
+    }
+
+    /// The scheduler's shard key: `(backend, device, artifact)` — the
+    /// executable-cache identity a job will compile under (DESIGN.md §11),
+    /// so same-compilation jobs land on the same worker's cache even in
+    /// mixed backend/device pools.
+    pub fn shard_key(cfg: &TrainConfig) -> String {
+        format!("{}|{}", cfg.backend.key(), Self::artifact_key(cfg))
     }
 
     /// Run every config; summaries return in input order. Worker count
@@ -129,7 +145,7 @@ impl SweepScheduler {
         let out = parallel_map_sharded(
             configs,
             workers,
-            |_, cfg| stable_hash64(Self::artifact_key(cfg).as_bytes()),
+            |_, cfg| stable_hash64(Self::shard_key(cfg).as_bytes()),
             |i, cfg| {
                 if let Some(index) = &self.resume {
                     if let Some(entry) = index.get(keys[i]) {
@@ -212,6 +228,25 @@ mod tests {
             SweepScheduler::artifact_key(&cfg),
             "gpt_nano.train.slimadam"
         );
+    }
+
+    #[test]
+    fn shard_keys_separate_backends_and_devices() {
+        use crate::runtime::backend::BackendSpec;
+        let cfg = TrainConfig::lm("gpt_nano", "adam", 1e-3, 10);
+        assert_eq!(
+            SweepScheduler::shard_key(&cfg),
+            "pjrt@cpu:0|gpt_nano.grad"
+        );
+        let mut native = cfg.clone();
+        native.backend = BackendSpec::native();
+        assert_ne!(
+            SweepScheduler::shard_key(&cfg),
+            SweepScheduler::shard_key(&native)
+        );
+        let mut gpu = cfg.clone();
+        gpu.backend = BackendSpec::parse("pjrt@gpu:1").unwrap();
+        assert_eq!(SweepScheduler::shard_key(&gpu), "pjrt@gpu:1|gpt_nano.grad");
     }
 
     #[test]

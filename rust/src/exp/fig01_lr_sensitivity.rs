@@ -30,7 +30,8 @@ pub fn run(args: &Args) -> Result<()> {
         args.str_list("optimizers", OPTIMIZERS);
     let opt_refs: Vec<&str> = opts.iter().map(|s| s.as_str()).collect();
 
-    let base = TrainConfig::lm(&model, "adam", 1e-3, steps);
+    let mut base = TrainConfig::lm(&model, "adam", 1e-3, steps);
+    super::apply_common(args, &mut base)?;
     let (scheduler, workers) = sweep_scheduler(args, "fig1", opts.len() * lrs.len())?;
     println!(
         "fig1: {model}, {} optimizers x {} LRs x {steps} steps ({workers} workers, \

@@ -21,6 +21,8 @@ pub fn run(args: &Args) -> Result<()> {
     let data = args.str_or("data", "markov").to_string();
 
     let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+    super::apply_common(args, &mut cfg)?;
+    let backend = cfg.backend;
     if data == "corpus" {
         cfg.data = crate::coordinator::DataSpec::Corpus;
     }
@@ -31,7 +33,7 @@ pub fn run(args: &Args) -> Result<()> {
     write_snr(&dir, "snr_avg.jsonl", &snr)?;
 
     // full trajectories
-    let man = super::manifest(&model)?;
+    let man = super::manifest_for(&backend, &model)?;
     let mut w = JsonlWriter::create(dir.join("trajectories.jsonl"))?;
     for (idx, samples) in &summary.result.probe.records {
         let info = &man.params[*idx];

@@ -15,7 +15,9 @@ pub fn run(args: &Args) -> Result<()> {
     let lr = args.f64_or("lr", 1e-3)?;
 
     println!("fig3: depth dependence of averaged SNR on {model}");
-    let (_, snr) = probed_run(TrainConfig::lm(&model, "adam", lr, steps))?;
+    let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+    super::apply_common(args, &mut cfg)?;
+    let (_, snr) = probed_run(cfg)?;
 
     let dir = results_dir("fig3")?;
     let mut w = CsvWriter::create(

@@ -23,23 +23,24 @@ use super::{probed_run, steps_or, write_snr, write_summary_md};
 /// parameters, caching the checkpoint under `results/fig4/`. Shared by the
 /// fine-tuning experiments (fig4, fig10 --all, fig27).
 pub fn pretrained_params(
+    spec: &crate::runtime::backend::BackendSpec,
     model: &str,
     pre_steps: usize,
     force: bool,
 ) -> Result<Vec<crate::tensor::Tensor>> {
     let dir = results_dir("fig4")?;
     let ckpt = dir.join(format!("{model}.pretrained.npz"));
-    let man = super::manifest(model)?;
+    let man = super::manifest_for(spec, model)?;
     if ckpt.exists() && !force {
         println!("fig4: reusing checkpoint {ckpt:?}");
         return checkpoint::load(&ckpt, &man.params);
     }
     println!("fig4: pre-training {model} for {pre_steps} steps");
-    let pre = TrainConfig::lm(model, "adam", 1e-3, pre_steps);
+    let mut pre = TrainConfig::lm(model, "adam", 1e-3, pre_steps);
+    pre.backend = *spec;
     // run_config does not expose final parameters, so drive the split
     // engine directly and checkpoint the result.
-    let client = crate::runtime::engine::cpu_client()?;
-    let engine = crate::runtime::engine::GradEngine::new("artifacts", model, &client)?;
+    let engine = crate::coordinator::exec_cache::grad_engine(spec, "artifacts", model)?;
     let mut rng = crate::rng::Rng::new(7u64.wrapping_add(17));
     let mut p: Vec<crate::tensor::Tensor> = man
         .params
@@ -70,17 +71,19 @@ pub fn pretrained_params(
 }
 
 pub fn run(args: &Args) -> Result<()> {
+    let backend = super::backend_spec(args)?;
     let model = args.str_or("model", "llama_tiny").to_string();
     let pre_steps = steps_or(args, 200);
     let ft_steps = args.usize_or("ft-steps", 120)?;
     let dir = results_dir("fig4")?;
 
     // Phase 1: pre-train (cached)
-    let params = pretrained_params(&model, pre_steps, args.flag("repretrain"))?;
+    let params = pretrained_params(&backend, &model, pre_steps, args.flag("repretrain"))?;
 
     // Phase 2: fine-tune on shifted distribution with probe
     println!("fig4: fine-tuning on shifted distribution ({ft_steps} steps)");
     let mut ft = TrainConfig::finetune(&model, "adam", 1e-4, ft_steps);
+    ft.backend = backend;
     ft.warm_start = Some(Arc::new(params));
     ft.seed = 8;
     let (_, ft_snr) = probed_run(ft)?;
@@ -88,6 +91,7 @@ pub fn run(args: &Args) -> Result<()> {
     // Reference: pre-training-phase SNR for the comparison table
     println!("fig4: probing pre-training SNR for comparison");
     let mut pre_probe = TrainConfig::lm(&model, "adam", 1e-3, ft_steps);
+    pre_probe.backend = backend;
     pre_probe.seed = 7;
     let (_, pre_snr) = probed_run(pre_probe)?;
 

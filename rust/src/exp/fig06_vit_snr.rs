@@ -22,7 +22,9 @@ pub fn run(args: &Args) -> Result<()> {
     for classes in [10usize, 100] {
         let model = format!("vit_mini_c{classes}");
         println!("fig6: probing {model} ({steps} steps)");
-        let (_, snr) = probed_run(TrainConfig::vision(&model, "adam", lr, steps))?;
+        let mut cfg = TrainConfig::vision(&model, "adam", lr, steps);
+        super::apply_common(args, &mut cfg)?;
+        let (_, snr) = probed_run(cfg)?;
         write_snr(&dir, &format!("snr_c{classes}.jsonl"), &snr)?;
         let table = super::layer_type_table(&snr);
         println!("{table}");

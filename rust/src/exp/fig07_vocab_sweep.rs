@@ -46,6 +46,7 @@ pub fn run(args: &Args) -> Result<()> {
     for &v in &vocabs {
         let model = format!("linear2_v{v}");
         let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+        super::apply_common(args, &mut cfg)?;
         cfg.data = DataSpec::Corpus;
         cfg.hypers.beta2 = 0.999; // paper App. B.2
         cfg.hypers.weight_decay = 1e-4;
@@ -92,6 +93,7 @@ pub fn run(args: &Args) -> Result<()> {
         let model = format!("linear2_v{v}");
         for (_, ke, kh) in &combos {
             let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+            super::apply_common(args, &mut cfg)?;
             cfg.data = DataSpec::Corpus;
             cfg.hypers.beta2 = 0.999;
             cfg.hypers.weight_decay = 1e-4;

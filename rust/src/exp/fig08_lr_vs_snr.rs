@@ -20,8 +20,10 @@ pub fn run(args: &Args) -> Result<()> {
 
     println!("fig8: SNR vs learning rate on {model} ({} LRs)", lrs.len());
     let workers = workers_or_default(args, lrs.len());
+    let backend = super::backend_spec(args)?;
     let snrs = parallel_map(&lrs, workers, |_, &lr| {
         let mut cfg = TrainConfig::lm(&model, "adam", lr, steps);
+        cfg.backend = backend;
         cfg.probe = Some(probe());
         let s = crate::coordinator::run_config(&cfg)?;
         Ok((lr, s.snr.unwrap(), s.result.diverged))

@@ -26,8 +26,10 @@ pub fn run(args: &Args) -> Result<()> {
     }
     println!("fig9: init comparison on {model} ({} runs)", jobs.len());
     let workers = workers_or_default(args, jobs.len());
+    let backend = super::backend_spec(args)?;
     let outs = parallel_map(&jobs, workers, |_, (lr, init)| {
         let mut cfg = TrainConfig::lm(&model, "adam", *lr, steps);
+        cfg.backend = backend;
         cfg.init = init.clone();
         cfg.probe = Some(probe());
         let s = crate::coordinator::run_config(&cfg)?;

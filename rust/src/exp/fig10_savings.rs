@@ -101,9 +101,11 @@ pub fn run(args: &Args) -> Result<()> {
             continue;
         }
         println!("== fig10 regime {} ({}) ==", regime.id, regime.model);
-        let man = super::manifest(regime.model)?;
+        let backend = super::backend_spec(args)?;
+        let man = super::manifest_for(&backend, regime.model)?;
         let warm = if regime.finetune {
             Some(Arc::new(super::fig04_finetune_snr::pretrained_params(
+                &backend,
                 regime.model,
                 200,
                 false,
@@ -129,6 +131,7 @@ pub fn run(args: &Args) -> Result<()> {
 
         for &lr in regime.lrs {
             let mut cfg = (regime.base)(regime.model, "adam", lr, steps);
+            cfg.backend = backend;
             cfg.probe = Some(probe());
             cfg.warm_start = warm.clone();
             let s = run_config(&cfg)?;
@@ -179,6 +182,7 @@ pub fn run(args: &Args) -> Result<()> {
         for opt in BOTTOM_OPTS {
             for &lr in regime.lrs {
                 let mut cfg = (regime.base)(regime.model, opt, lr, steps);
+                cfg.backend = backend;
                 cfg.warm_start = warm.clone();
                 if *opt == "slimadam" {
                     cfg.ruleset = Some(rules.clone());

@@ -26,6 +26,7 @@ pub fn run(args: &Args) -> Result<()> {
     for &lr in &[small_lr, large_lr] {
         for opt in OPTS {
             let mut cfg = TrainConfig::lm(&model, opt, lr, steps);
+            super::apply_common(args, &mut cfg)?;
             cfg.eval_batches = 0;
             configs.push(cfg);
         }

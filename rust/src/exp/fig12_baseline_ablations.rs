@@ -28,7 +28,8 @@ pub fn run(args: &Args) -> Result<()> {
     let lrs = args.f64_list("lrs", &log_grid(1e-4, 3e-2, 6))?;
     let dir = results_dir("fig12")?;
 
-    let base = TrainConfig::lm(&model, "adam", 1e-3, steps);
+    let mut base = TrainConfig::lm(&model, "adam", 1e-3, steps);
+    super::apply_common(args, &mut base)?;
     let workers = workers_or_default(args, OPTS.len() * lrs.len());
     println!("fig12: baseline ablations on {model}");
     let sweep = LrSweep::run(&base, OPTS, &lrs, workers)?;

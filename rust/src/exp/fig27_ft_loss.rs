@@ -22,13 +22,15 @@ pub fn run(args: &Args) -> Result<()> {
     let lr = args.f64_or("lr", 1e-4)?;
     let dir = results_dir("fig27")?;
 
+    let backend = super::backend_spec(args)?;
     let warm = Arc::new(super::fig04_finetune_snr::pretrained_params(
-        &model, 200, false,
+        &backend, &model, 200, false,
     )?);
 
     let mut configs = Vec::new();
     for opt in OPTS {
         let mut cfg = TrainConfig::finetune(&model, opt, lr, steps);
+        cfg.backend = backend;
         cfg.warm_start = Some(warm.clone());
         cfg.eval_batches = 16;
         configs.push(cfg);

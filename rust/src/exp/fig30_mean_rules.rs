@@ -19,13 +19,16 @@ pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir("fig30")?;
 
     println!("fig30: deriving per-layer and depth-averaged rules at lr {rule_lr:.0e}");
-    let (_, snr) = probed_run(TrainConfig::lm(&model, "adam", rule_lr, steps))?;
+    let backend = super::backend_spec(args)?;
+    let mut probe_cfg = TrainConfig::lm(&model, "adam", rule_lr, steps);
+    probe_cfg.backend = backend;
+    let (_, snr) = probed_run(probe_cfg)?;
     let per_layer = RuleSet::derive(&snr, 1.0, "per_layer", Some(rule_lr));
     let mean = RuleSet::derive_depth_averaged(&snr, 1.0, "depth_mean", Some(rule_lr));
     per_layer.save(dir.join("per_layer.rules.json"))?;
     mean.save(dir.join("depth_mean.rules.json"))?;
 
-    let man = super::manifest(&model)?;
+    let man = super::manifest_for(&backend, &model)?;
     println!(
         "  per-layer: {} tensors compressed ({:.1}% saved); depth-mean: {} ({:.1}%)",
         per_layer.rules.len(),
@@ -39,6 +42,7 @@ pub fn run(args: &Args) -> Result<()> {
     for rules in [&per_layer, &mean] {
         for &lr in &lrs {
             let mut cfg = TrainConfig::lm(&model, "slimadam", lr, steps);
+            cfg.backend = backend;
             cfg.ruleset = Some(rules.clone());
             configs.push(cfg);
         }

@@ -31,6 +31,7 @@ use crate::cli::Args;
 use crate::coordinator::{run_config, RunSummary, SweepScheduler, TrainConfig};
 use crate::json::Value;
 use crate::metrics::{results_dir, JsonlWriter};
+use crate::runtime::backend::{BackendKind, BackendSpec};
 use crate::runtime::Manifest;
 use crate::snr::{ProbeSchedule, SnrSummary};
 
@@ -97,6 +98,20 @@ pub fn probe() -> ProbeSchedule {
     ProbeSchedule::default()
 }
 
+/// The execution backend an experiment was asked to run on
+/// (`--backend pjrt|native[@device]`, default pjrt). Every figure/table
+/// driver threads this into its configs so the whole reproduction suite
+/// can run offline on the native interpreter.
+pub fn backend_spec(args: &Args) -> Result<BackendSpec> {
+    BackendSpec::parse(args.str_or("backend", "pjrt"))
+}
+
+/// Apply the shared cross-driver options (`--backend`) to a base config.
+pub fn apply_common(args: &Args, cfg: &mut TrainConfig) -> Result<()> {
+    cfg.backend = backend_spec(args)?;
+    Ok(())
+}
+
 /// Steps default honoring `--steps` (quick CI runs use small values).
 pub fn steps_or(args: &Args, default: usize) -> usize {
     args.usize_or("steps", default).unwrap_or(default)
@@ -123,15 +138,22 @@ pub fn sweep_scheduler(
     jobs: usize,
 ) -> Result<(SweepScheduler, usize)> {
     let workers = workers_or_default(args, jobs);
+    let meta = crate::runstore::StoreMeta {
+        schema_version: crate::runstore::SCHEMA_VERSION,
+        base_seed: 0,
+        backend: backend_spec(args)?.key(),
+    };
     let scheduler = match args.get("resume") {
         Some(dir) => {
-            let store = crate::runstore::RunStore::open(dir)?;
+            let store = crate::runstore::RunStore::open_with(dir, &meta)?;
             SweepScheduler::new(workers)
                 .resume_from(&store)?
                 .stream_to(store.primary())
         }
-        None => SweepScheduler::new(workers)
-            .stream_to(results_dir(id)?.join("stream.jsonl")),
+        None => {
+            let store = crate::runstore::RunStore::open_with(results_dir(id)?, &meta)?;
+            SweepScheduler::new(workers).stream_to(store.primary())
+        }
     };
     Ok((scheduler, workers))
 }
@@ -183,6 +205,15 @@ pub fn layer_type_table(snr: &SnrSummary) -> String {
 /// Load a model manifest from the artifacts dir (for rule accounting).
 pub fn manifest(model: &str) -> Result<Manifest> {
     Manifest::load(format!("artifacts/{model}.grad.manifest.json"))
+}
+
+/// Backend-aware manifest lookup: native models generate their builtin
+/// manifest; PJRT models read `make artifacts` output.
+pub fn manifest_for(spec: &BackendSpec, model: &str) -> Result<Manifest> {
+    match spec.kind {
+        BackendKind::Native => crate::runtime::backend::native::grad_manifest(model),
+        BackendKind::Pjrt => manifest(model),
+    }
 }
 
 /// Save summaries to `results/<id>/summaries.jsonl` + return the dir.

@@ -16,6 +16,7 @@ use crate::rules::{recommend, RuleSet};
 use super::{probed_run, steps_or, write_summary_md};
 
 fn derive_rules(
+    args: &Args,
     model: &str,
     data: DataSpec,
     lr: f64,
@@ -28,6 +29,7 @@ fn derive_rules(
     } else {
         TrainConfig::lm(model, "adam", lr, steps)
     };
+    super::apply_common(args, &mut cfg)?;
     cfg.data = data;
     let (_, snr) = probed_run(cfg)?;
     Ok(RuleSet::derive(&snr, 1.0, label, Some(lr)))
@@ -59,6 +61,7 @@ pub fn table1(args: &Args) -> Result<()> {
     let lr = args.f64_or("lr", 3e-4)?;
     println!("table1: rules on synthetic Markov vs repo corpus ({model})");
     let markov = derive_rules(
+        args,
         &model,
         DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 1234 },
         lr,
@@ -66,7 +69,7 @@ pub fn table1(args: &Args) -> Result<()> {
         "markov",
         false,
     )?;
-    let corpus = derive_rules(&model, DataSpec::Corpus, lr, steps, "corpus", false)?;
+    let corpus = derive_rules(args, &model, DataSpec::Corpus, lr, steps, "corpus", false)?;
     let dir = results_dir("table1")?;
     markov.save(dir.join("markov.rules.json"))?;
     corpus.save(dir.join("corpus.rules.json"))?;
@@ -88,8 +91,8 @@ pub fn table2(args: &Args) -> Result<()> {
     let lr = args.f64_or("lr", 3e-4)?;
     println!("table2: rules at width 64 vs width 192");
     let data = DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 1234 };
-    let narrow = derive_rules("gpt_nano", data.clone(), lr, steps, "w64", false)?;
-    let wide = derive_rules("gpt_nano_w192", data, lr, steps, "w192", false)?;
+    let narrow = derive_rules(args, "gpt_nano", data.clone(), lr, steps, "w64", false)?;
+    let wide = derive_rules(args, "gpt_nano_w192", data, lr, steps, "w192", false)?;
     let dir = results_dir("table2")?;
     narrow.save(dir.join("w64.rules.json"))?;
     wide.save(dir.join("w192.rules.json"))?;
@@ -111,9 +114,10 @@ pub fn table3(args: &Args) -> Result<()> {
     println!("table3: aggregating rules across training regimes");
     let lm_data = DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 1234 };
 
-    let gpt = derive_rules("gpt_nano", lm_data.clone(), 3e-4, steps, "gpt", false)?;
-    let llama = derive_rules("llama_tiny", lm_data, 3e-4, steps, "llama", false)?;
+    let gpt = derive_rules(args, "gpt_nano", lm_data.clone(), 3e-4, steps, "gpt", false)?;
+    let llama = derive_rules(args, "llama_tiny", lm_data, 3e-4, steps, "llama", false)?;
     let vit = derive_rules(
+        args,
         "vit_mini_c10",
         DataSpec::Images { noise: 0.3, seed: 99 },
         3e-4,
@@ -122,6 +126,7 @@ pub fn table3(args: &Args) -> Result<()> {
         true,
     )?;
     let resnet = derive_rules(
+        args,
         "resnet_mini_c10",
         DataSpec::Images { noise: 0.3, seed: 99 },
         3e-4,

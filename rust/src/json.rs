@@ -11,12 +11,16 @@
 //! * [`Lexer`] — byte-level tokenizer (strings, strict numbers, literals,
 //!   whitespace). Escape-free strings are returned as borrowed slices, so
 //!   consumers that only *look* at values never allocate.
-//! * [`Value`] / `Parser` — the DOM layer built on the lexer, used where a
-//!   materialized tree is the right shape (manifests, rule files).
+//! * [`Value`] — the DOM layer, used where a materialized tree is the
+//!   right shape (manifests, rule files).
 //!
-//! The streaming JSONL reader in [`crate::runstore::reader`] drives the
-//! same [`Lexer`] directly and never materializes a [`Value`] — both
-//! layers therefore accept and reject exactly the same inputs.
+//! There is exactly **one** structural-grammar implementation: the
+//! streaming scanner [`scan_value`] (re-exported by
+//! `crate::runstore::reader` for its JSONL callers). The DOM parser is a
+//! small tree-building visitor over its event stream (`TreeBuilder`
+//! below), so both layers accept and reject *identical* inputs by
+//! construction — there is no second object/array walker to drift out
+//! of sync.
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
@@ -264,6 +268,139 @@ fn utf8_len(first: u8) -> Result<usize> {
 }
 
 // ---------------------------------------------------------------------------
+// Streaming scanner: THE structural-grammar implementation
+// ---------------------------------------------------------------------------
+
+/// One element of the streaming scan. String payloads are `Cow`: borrowed
+/// from the input unless the JSON contained an escape sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// Object key (always immediately followed by its value's events).
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Receiver for the event stream. Implemented for closures, so simple
+/// scans can be written inline: `scan_value(&mut lex, &mut |ev| ...)`.
+pub trait Visitor<'a> {
+    fn event(&mut self, ev: Event<'a>) -> Result<()>;
+}
+
+impl<'a, F> Visitor<'a> for F
+where
+    F: FnMut(Event<'a>) -> Result<()>,
+{
+    fn event(&mut self, ev: Event<'a>) -> Result<()> {
+        self(ev)
+    }
+}
+
+/// Scan one JSON value from `lex`, emitting events to `visitor`. This is
+/// the only object/array grammar walker in the crate: the DOM parser
+/// folds these events into a [`Value`] (`TreeBuilder` below) and the
+/// run-store's JSONL reader consumes them zero-copy
+/// (`crate::runstore::reader`), so every consumer accepts and rejects
+/// identical inputs by construction.
+pub fn scan_value<'a, V: Visitor<'a> + ?Sized>(
+    lex: &mut Lexer<'a>,
+    visitor: &mut V,
+) -> Result<()> {
+    scan_at_depth(lex, visitor, 0)
+}
+
+fn scan_at_depth<'a, V: Visitor<'a> + ?Sized>(
+    lex: &mut Lexer<'a>,
+    v: &mut V,
+    depth: usize,
+) -> Result<()> {
+    if depth > MAX_DEPTH {
+        bail!("JSON nested deeper than {MAX_DEPTH} levels");
+    }
+    lex.skip_ws();
+    match lex.peek()? {
+        b'{' => {
+            lex.eat(b'{')?;
+            v.event(Event::ObjBegin)?;
+            lex.skip_ws();
+            if lex.peek()? == b'}' {
+                lex.eat(b'}')?;
+                return v.event(Event::ObjEnd);
+            }
+            loop {
+                lex.skip_ws();
+                let key = lex.string()?;
+                v.event(Event::Key(key))?;
+                lex.skip_ws();
+                lex.eat(b':')?;
+                scan_at_depth(lex, v, depth + 1)?;
+                lex.skip_ws();
+                match lex.peek()? {
+                    b',' => lex.eat(b',')?,
+                    b'}' => {
+                        lex.eat(b'}')?;
+                        return v.event(Event::ObjEnd);
+                    }
+                    c => bail!("expected ',' or '}}', got {:?}", c as char),
+                }
+            }
+        }
+        b'[' => {
+            lex.eat(b'[')?;
+            v.event(Event::ArrBegin)?;
+            lex.skip_ws();
+            if lex.peek()? == b']' {
+                lex.eat(b']')?;
+                return v.event(Event::ArrEnd);
+            }
+            loop {
+                scan_at_depth(lex, v, depth + 1)?;
+                lex.skip_ws();
+                match lex.peek()? {
+                    b',' => lex.eat(b',')?,
+                    b']' => {
+                        lex.eat(b']')?;
+                        return v.event(Event::ArrEnd);
+                    }
+                    c => bail!("expected ',' or ']', got {:?}", c as char),
+                }
+            }
+        }
+        b'"' => {
+            let s = lex.string()?;
+            v.event(Event::Str(s))
+        }
+        b't' => {
+            lex.lit("true")?;
+            v.event(Event::Bool(true))
+        }
+        b'f' => {
+            lex.lit("false")?;
+            v.event(Event::Bool(false))
+        }
+        b'n' => {
+            lex.lit("null")?;
+            v.event(Event::Null)
+        }
+        b'-' | b'0'..=b'9' => {
+            let n = lex.number()?;
+            v.event(Event::Num(n))
+        }
+        b'N' | b'I' | b'+' => bail!(
+            "NaN/Infinity/leading '+' are not valid JSON (byte {})",
+            lex.pos()
+        ),
+        c => bail!("unexpected character {:?} at byte {}", c as char, lex.pos()),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // DOM layer
 // ---------------------------------------------------------------------------
 
@@ -283,12 +420,15 @@ impl Value {
     pub fn parse(text: &str) -> Result<Value> {
         let mut lex = Lexer::new(text);
         lex.skip_ws();
-        let v = parse_value(&mut lex, 0)?;
+        let mut builder = TreeBuilder::default();
+        scan_value(&mut lex, &mut |ev| builder.event(ev))?;
         lex.skip_ws();
         if !lex.at_end() {
             bail!("trailing garbage at byte {}", lex.pos());
         }
-        Ok(v)
+        builder
+            .root
+            .ok_or_else(|| anyhow!("empty JSON input"))
     }
 
     // -- typed accessors -------------------------------------------------
@@ -555,84 +695,71 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
     }
 }
 
-fn parse_value(lex: &mut Lexer<'_>, depth: usize) -> Result<Value> {
-    if depth > MAX_DEPTH {
-        bail!("JSON nested deeper than {MAX_DEPTH} levels");
-    }
-    match lex.peek()? {
-        b'{' => parse_object(lex, depth),
-        b'[' => parse_array(lex, depth),
-        b'"' => Ok(Value::Str(lex.string()?.into_owned())),
-        b't' => {
-            lex.lit("true")?;
-            Ok(Value::Bool(true))
-        }
-        b'f' => {
-            lex.lit("false")?;
-            Ok(Value::Bool(false))
-        }
-        b'n' => {
-            lex.lit("null")?;
-            Ok(Value::Null)
-        }
-        b'-' | b'0'..=b'9' => Ok(Value::Num(lex.number()?)),
-        b'N' | b'I' | b'+' => {
-            bail!(
-                "NaN/Infinity/leading '+' are not valid JSON (byte {})",
-                lex.pos()
-            )
-        }
-        c => bail!("unexpected character {:?} at byte {}", c as char, lex.pos()),
-    }
+// ---------------------------------------------------------------------------
+// DOM construction: a tree-building visitor over the streaming scanner
+// (the `value_from_events` shape from `rust/tests/properties.rs`, promoted
+// to be *the* DOM parser — one grammar implementation for both layers).
+// ---------------------------------------------------------------------------
+
+/// One open container on the build stack. Object frames carry the pending
+/// key between its `Key` event and the value events that follow.
+enum Frame {
+    Obj(BTreeMap<String, Value>, Option<String>),
+    Arr(Vec<Value>),
 }
 
-fn parse_object(lex: &mut Lexer<'_>, depth: usize) -> Result<Value> {
-    lex.eat(b'{')?;
-    let mut map = BTreeMap::new();
-    lex.skip_ws();
-    if lex.peek()? == b'}' {
-        lex.eat(b'}')?;
-        return Ok(Value::Obj(map));
-    }
-    loop {
-        lex.skip_ws();
-        let key = lex.string()?.into_owned();
-        lex.skip_ws();
-        lex.eat(b':')?;
-        lex.skip_ws();
-        let val = parse_value(lex, depth + 1)?;
-        map.insert(key, val);
-        lex.skip_ws();
-        match lex.peek()? {
-            b',' => lex.eat(b',')?,
-            b'}' => {
-                lex.eat(b'}')?;
-                return Ok(Value::Obj(map));
-            }
-            c => bail!("expected ',' or '}}', got {:?}", c as char),
-        }
-    }
+/// Folds the scanner's event stream into a [`Value`]. Depth bounding and
+/// all grammar errors live in the scanner; the builder only assembles.
+#[derive(Default)]
+struct TreeBuilder {
+    stack: Vec<Frame>,
+    root: Option<Value>,
 }
 
-fn parse_array(lex: &mut Lexer<'_>, depth: usize) -> Result<Value> {
-    lex.eat(b'[')?;
-    let mut arr = Vec::new();
-    lex.skip_ws();
-    if lex.peek()? == b']' {
-        lex.eat(b']')?;
-        return Ok(Value::Arr(arr));
-    }
-    loop {
-        lex.skip_ws();
-        arr.push(parse_value(lex, depth + 1)?);
-        lex.skip_ws();
-        match lex.peek()? {
-            b',' => lex.eat(b',')?,
-            b']' => {
-                lex.eat(b']')?;
-                return Ok(Value::Arr(arr));
+impl TreeBuilder {
+    fn attach(&mut self, v: Value) -> Result<()> {
+        match self.stack.last_mut() {
+            None => self.root = Some(v),
+            Some(Frame::Arr(items)) => items.push(v),
+            Some(Frame::Obj(map, key)) => {
+                let key = key
+                    .take()
+                    .ok_or_else(|| anyhow!("object value without a key"))?;
+                map.insert(key, v);
             }
-            c => bail!("expected ',' or ']', got {:?}", c as char),
+        }
+        Ok(())
+    }
+
+    fn event(&mut self, ev: Event<'_>) -> Result<()> {
+        match ev {
+            Event::ObjBegin => {
+                self.stack.push(Frame::Obj(BTreeMap::new(), None));
+                Ok(())
+            }
+            Event::ArrBegin => {
+                self.stack.push(Frame::Arr(Vec::new()));
+                Ok(())
+            }
+            Event::Key(k) => match self.stack.last_mut() {
+                Some(Frame::Obj(_, slot)) => {
+                    *slot = Some(k.into_owned());
+                    Ok(())
+                }
+                _ => bail!("key event outside an object"),
+            },
+            Event::ObjEnd | Event::ArrEnd => {
+                let v = match self.stack.pop() {
+                    Some(Frame::Obj(map, _)) => Value::Obj(map),
+                    Some(Frame::Arr(items)) => Value::Arr(items),
+                    None => bail!("container end without begin"),
+                };
+                self.attach(v)
+            }
+            Event::Str(s) => self.attach(Value::Str(s.into_owned())),
+            Event::Num(n) => self.attach(Value::Num(n)),
+            Event::Bool(b) => self.attach(Value::Bool(b)),
+            Event::Null => self.attach(Value::Null),
         }
     }
 }

@@ -18,7 +18,9 @@
 //!
 //! * Substrates: [`json`], [`rng`], [`tensor`], [`cli`], [`pool`]
 //!   (work-stealing sweep pool), [`proptest`], [`benchkit`], [`metrics`]
-//! * Runtime: [`runtime`] (PJRT client, manifests, engines)
+//! * Runtime: [`runtime`] (manifests, engines, and the device-tagged
+//!   backend layer — the PJRT path behind the `pjrt` feature and the
+//!   pure-Rust native interpreter — DESIGN.md §11)
 //! * The paper's system: [`optim`] (optimizer family), [`snr`] (Eq. 3/4),
 //!   [`rules`] (SNR → compression rules)
 //! * Workloads: [`data`] (corpora, images, BPE), [`train`] (loop driver),

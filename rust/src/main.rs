@@ -21,7 +21,8 @@ use slimadam::cli::{render_help, subcommand, Args, OptSpec};
 use slimadam::coordinator::{exec_cache, run_config, DataSpec, SweepScheduler, TrainConfig};
 use slimadam::optim::presets;
 use slimadam::rules::RuleSet;
-use slimadam::runstore::RunStore;
+use slimadam::runstore::{RunStore, StoreMeta, SCHEMA_VERSION};
+use slimadam::runtime::backend::BackendKind;
 use slimadam::snr::ProbeSchedule;
 use slimadam::sweep::{log_grid, LrSweep};
 
@@ -105,6 +106,7 @@ fn print_global_help() {
 fn exp_opts() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "model", help: "artifact model name", default: Some("per-experiment"), is_flag: false },
+        OptSpec { name: "backend", help: "execution backend: pjrt | native", default: Some("pjrt"), is_flag: false },
         OptSpec { name: "steps", help: "training steps per run", default: Some("per-experiment"), is_flag: false },
         OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("per-experiment"), is_flag: false },
         OptSpec { name: "workers", help: "parallel runs", default: Some("cores"), is_flag: false },
@@ -124,8 +126,18 @@ fn data_spec(args: &Args) -> DataSpec {
     }
 }
 
+/// The builtin native models carry their own names; default to the
+/// native transformer when `--backend native` is given without `--model`.
+fn default_model(kind: BackendKind) -> &'static str {
+    match kind {
+        BackendKind::Native => "gpt_micro",
+        BackendKind::Pjrt => "gpt_nano",
+    }
+}
+
 fn base_config(args: &Args) -> Result<TrainConfig> {
-    let model = args.str_or("model", "gpt_nano").to_string();
+    let backend = slimadam::exp::backend_spec(args)?;
+    let model = args.str_or("model", default_model(backend.kind)).to_string();
     let optimizer = args.str_or("optimizer", "adam").to_string();
     let lr = args.f64_or("lr", 1e-3)?;
     let steps = args.usize_or("steps", 100)?;
@@ -138,6 +150,7 @@ fn base_config(args: &Args) -> Result<TrainConfig> {
     if !vision {
         cfg.data = data_spec(args);
     }
+    cfg.backend = backend;
     cfg.seed = args.u64_or("seed", 0)?;
     cfg.accum = args.usize_or("accum", 1)?;
     if args.flag("default-init") {
@@ -159,7 +172,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!(
             "{}",
             render_help("slimadam", "train", "run one training config", &[
-                OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano"), is_flag: false },
+                OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano (pjrt) / gpt_micro (native)"), is_flag: false },
+                OptSpec { name: "backend", help: "execution backend: pjrt | native (optionally @device, e.g. pjrt@cpu:0)", default: Some("pjrt"), is_flag: false },
                 OptSpec { name: "optimizer", help: "optimizer preset", default: Some("adam"), is_flag: false },
                 OptSpec { name: "lr", help: "peak learning rate", default: Some("1e-3"), is_flag: false },
                 OptSpec { name: "steps", help: "training steps", default: Some("100"), is_flag: false },
@@ -195,7 +209,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         println!(
             "{}",
             render_help("slimadam", "sweep", "run an (optimizer × LR) grid on the parallel scheduler", &[
-                OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano"), is_flag: false },
+                OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano (pjrt) / gpt_micro (native)"), is_flag: false },
+                OptSpec { name: "backend", help: "execution backend: pjrt | native", default: Some("pjrt"), is_flag: false },
                 OptSpec { name: "optimizers", help: "comma-separated optimizer presets", default: Some("adam,slimadam"), is_flag: false },
                 OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("log grid 1e-4..1e-2, 4 pts"), is_flag: false },
                 OptSpec { name: "steps", help: "training steps per job", default: Some("100"), is_flag: false },
@@ -223,13 +238,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.flag("quiet") {
         scheduler = scheduler.quiet();
     }
+    let store_meta = StoreMeta {
+        schema_version: SCHEMA_VERSION,
+        base_seed: base.seed,
+        backend: base.backend.key(),
+    };
     if let Some(dir) = args.get("resume") {
-        let store = RunStore::open(dir)?;
+        let store = RunStore::open_with(dir, &store_meta)?;
         // default the stream sink into the store so finished jobs extend it
         scheduler = scheduler
             .resume_from(&store)?
             .stream_to(args.get("stream").map(Into::into).unwrap_or(store.primary()));
     } else if let Some(path) = args.get("stream") {
+        // Plain streaming claims no store: --stream may point anywhere
+        // (including cwd next to unrelated files). The directory becomes
+        // a run store — manifest written with real provenance — on the
+        // first --resume against it.
         scheduler = scheduler.stream_to(path);
     }
     println!(
@@ -354,7 +378,7 @@ fn cmd_rules(args: &Args) -> Result<()> {
     } else {
         RuleSet::derive(&snr, cutoff, "cli", Some(cfg.lr))
     };
-    let man = slimadam::exp::manifest(&cfg.model)?;
+    let man = slimadam::exp::manifest_for(&cfg.backend, &cfg.model)?;
     rules.save(&out)?;
     println!(
         "saved {} rules to {out} — {:.1}% of second moments saved",
@@ -366,8 +390,9 @@ fn cmd_rules(args: &Args) -> Result<()> {
 }
 
 fn cmd_memory(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "gpt_nano");
-    let man = slimadam::exp::manifest(model)?;
+    let backend = slimadam::exp::backend_spec(args)?;
+    let model = args.str_or("model", default_model(backend.kind));
+    let man = slimadam::exp::manifest_for(&backend, model)?;
     let total = man.total_param_elems();
     println!(
         "model {model}: {} tensors, {total} parameters\n",
@@ -408,6 +433,11 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn cmd_list() -> Result<()> {
     println!("experiments: {}", slimadam::exp::IDS.join(", "));
     println!("optimizers:  {}", presets::ALL.join(", "));
+    println!(
+        "native:      {} (rulesets: {}) — `--backend native`, no artifacts needed",
+        slimadam::runtime::backend::native::MODELS.join(", "),
+        slimadam::runtime::backend::native::RULESETS.join(", ")
+    );
     print!("artifacts:   ");
     let dir = std::path::Path::new("artifacts");
     if dir.exists() {

@@ -15,6 +15,10 @@
 //!   identity, job seed included), deduplicated across stream files.
 //! * [`compact`] — merges stream files into one, dropping duplicate and
 //!   torn rows, preserving surviving rows byte-for-byte.
+//! * `store.json` ([`StoreMeta`]) — per-store manifest (schema version,
+//!   base seed, creating backend) written on create and validated on
+//!   every open; a schema-version mismatch fails loudly instead of
+//!   misreading rows written under a different contract.
 //!
 //! [`RunStore`] ties them to a directory on disk. The scheduler's resume
 //! path (`SweepScheduler::resume_from`) opens a store, repairs torn
@@ -39,19 +43,23 @@ use std::fmt::Write as _;
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{EngineKind, TrainConfig};
 use crate::rng::stable_hash64;
 
 /// Stable identity of a sweep job: everything that makes its result —
-/// model, engine, optimizer, LR (bit-exact), schedule, seed, init, data
-/// spec, hypers, rule set — hashed to the u64 the run index keys on.
+/// model, backend+device, engine, optimizer, LR (bit-exact), schedule,
+/// seed, init, data spec, hypers, rule set — hashed to the u64 the run
+/// index keys on.
 ///
 /// Two configs share a key iff a completed row for one is a valid result
-/// for the other. Warm-start tensors are reduced to a presence flag (the
-/// tensors themselves are not hashable identity); fine-tune sweeps that
-/// vary *only* the warm start should use distinct seeds.
+/// for the other. The backend spec is part of the identity because the
+/// native interpreter and the PJRT artifacts are different computations:
+/// resume must never serve one backend's row for the other's config.
+/// Warm-start tensors are reduced to a presence flag (the tensors
+/// themselves are not hashable identity); fine-tune sweeps that vary
+/// *only* the warm start should use distinct seeds.
 pub fn config_key(cfg: &TrainConfig) -> u64 {
     let engine = match &cfg.engine {
         EngineKind::Split => format!("split:{}", cfg.optimizer),
@@ -65,8 +73,9 @@ pub fn config_key(cfg: &TrainConfig) -> u64 {
     let mut s = String::with_capacity(192);
     let _ = write!(
         s,
-        "{}|{engine}|{:x}|{}|{}|{:x}|{}|{}|{}|{ruleset}|{}|{:?}|{:?}|{:?}",
+        "{}|{}|{engine}|{:x}|{}|{}|{:x}|{}|{}|{}|{ruleset}|{}|{:?}|{:?}|{:?}",
         cfg.model,
+        cfg.backend.key(),
         cfg.lr.to_bits(),
         cfg.steps,
         cfg.warmup,
@@ -80,6 +89,63 @@ pub fn config_key(cfg: &TrainConfig) -> u64 {
         cfg.hypers,
     );
     stable_hash64(s.as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// Store manifest (store.json)
+// ---------------------------------------------------------------------------
+
+/// Current run-store schema version. Version 1 is the backend-aware
+/// config-key format (the backend spec is part of [`config_key`]).
+/// Bumped when the stream-row or store-layout contract changes
+/// incompatibly; `RunStore::open` refuses stores from a different
+/// version instead of misreading them. Stores created before the
+/// manifest existed recorded no version and cannot be gated — adopting
+/// one with rows prints a warning, because its rows were keyed without
+/// the backend segment and will never match current configs.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Per-store metadata, persisted as `store.json` next to the stream
+/// files when the store is first created and validated on every open.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreMeta {
+    pub schema_version: u64,
+    /// Base seed of the sweep that created the store (0 when unknown).
+    pub base_seed: u64,
+    /// Backend spec the creating sweep ran on (`"unknown"` for stores
+    /// created outside a sweep). Informational: config keys already pin
+    /// each row's backend, so mixed-backend stores remain valid.
+    pub backend: String,
+}
+
+impl Default for StoreMeta {
+    fn default() -> Self {
+        StoreMeta {
+            schema_version: SCHEMA_VERSION,
+            base_seed: 0,
+            backend: "unknown".into(),
+        }
+    }
+}
+
+impl StoreMeta {
+    fn to_json(&self) -> crate::json::Value {
+        let mut v = crate::json::Value::obj();
+        v.set("schema_version", self.schema_version)
+            .set("base_seed", format!("{:016x}", self.base_seed))
+            .set("backend", self.backend.clone());
+        v
+    }
+
+    fn parse(text: &str) -> Result<StoreMeta> {
+        let v = crate::json::Value::parse(text).context("parsing store.json")?;
+        Ok(StoreMeta {
+            schema_version: v.get("schema_version")?.as_usize()? as u64,
+            base_seed: u64::from_str_radix(v.get("base_seed")?.as_str()?, 16)
+                .context("store.json base_seed")?,
+            backend: v.get("backend")?.as_str()?.to_string(),
+        })
+    }
 }
 
 /// Per-file summary from [`RunStore::ls`].
@@ -101,11 +167,47 @@ pub struct RunStore {
 }
 
 impl RunStore {
-    /// Open (creating if absent) the store at `path`. A path to an
+    /// Open the store at `path` for reading/inspection. A path to an
     /// existing `.jsonl` *file* opens its parent directory — so
     /// `--resume results/sweep` and `--resume results/sweep/stream.jsonl`
     /// mean the same store.
+    ///
+    /// An existing `store.json` manifest is validated — a schema-version
+    /// mismatch fails loudly, never misreading rows written under a
+    /// different contract. This path **never writes**: `runs
+    /// ls/report/compact` work on read-only directories and cannot stamp
+    /// placeholder provenance. Write paths (sweeps) use
+    /// [`RunStore::open_with`], which creates the manifest.
     pub fn open(path: impl AsRef<Path>) -> Result<RunStore> {
+        let store = Self::locate(path)?;
+        store.validate_manifest()?;
+        Ok(store)
+    }
+
+    /// Open for writing: like [`RunStore::open`], but when no manifest
+    /// exists one is created from `meta` (sweeps pass their base seed and
+    /// backend spec so the store records real provenance). An existing
+    /// manifest is validated, never rewritten.
+    pub fn open_with(path: impl AsRef<Path>, meta: &StoreMeta) -> Result<RunStore> {
+        let store = Self::locate(path)?;
+        store.validate_manifest()?;
+        let manifest = store.manifest_path();
+        if !manifest.exists() {
+            let mut meta = meta.clone();
+            meta.schema_version = SCHEMA_VERSION;
+            // Crash-safe write: full temp file + atomic rename, so a kill
+            // mid-create can never leave a torn manifest that bricks the
+            // store (same discipline as `compact`).
+            let tmp = store.dir.join("store.json.tmp");
+            fs::write(&tmp, meta.to_json().dump_pretty())
+                .with_context(|| format!("writing {tmp:?}"))?;
+            fs::rename(&tmp, &manifest)
+                .with_context(|| format!("installing {manifest:?}"))?;
+        }
+        Ok(store)
+    }
+
+    fn locate(path: impl AsRef<Path>) -> Result<RunStore> {
         let path = path.as_ref();
         let dir = if path.extension().is_some_and(|e| e == "jsonl") {
             path.parent()
@@ -118,6 +220,38 @@ impl RunStore {
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating run store {dir:?}"))?;
         Ok(RunStore { dir })
+    }
+
+    fn validate_manifest(&self) -> Result<()> {
+        let manifest = self.manifest_path();
+        if !manifest.exists() {
+            return Ok(()); // pre-manifest store: readable, ungated
+        }
+        let text = fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?}"))?;
+        let found = StoreMeta::parse(&text)
+            .with_context(|| format!("invalid store manifest {manifest:?}"))?;
+        if found.schema_version != SCHEMA_VERSION {
+            bail!(
+                "run store {:?} has schema version {} but this build reads \
+                 version {SCHEMA_VERSION} — refusing to open (migrate or \
+                 point --resume at a fresh directory)",
+                self.dir,
+                found.schema_version
+            );
+        }
+        Ok(())
+    }
+
+    /// Path of the store's metadata manifest.
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join("store.json")
+    }
+
+    /// The store's persisted metadata.
+    pub fn meta(&self) -> Result<StoreMeta> {
+        let text = fs::read_to_string(self.manifest_path())?;
+        StoreMeta::parse(&text)
     }
 
     pub fn dir(&self) -> &Path {
@@ -304,6 +438,77 @@ mod tests {
         let b = RunStore::open(dir.join("stream.jsonl")).unwrap();
         assert_eq!(a.dir(), b.dir());
         assert_eq!(a.primary(), dir.join("stream.jsonl"));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_key_separates_backends() {
+        use crate::runtime::backend::BackendSpec;
+        let base = TrainConfig::lm("mlp_tiny", "adam", 1e-3, 50);
+        let mut native = base.clone();
+        native.backend = BackendSpec::native();
+        assert_ne!(config_key(&base), config_key(&native));
+        let mut gpu = base.clone();
+        gpu.backend = BackendSpec::parse("pjrt@gpu:1").unwrap();
+        assert_ne!(config_key(&base), config_key(&gpu));
+    }
+
+    #[test]
+    fn store_manifest_written_on_create_and_validated() {
+        let dir = tmpdir("manifest");
+        let meta = StoreMeta {
+            schema_version: SCHEMA_VERSION,
+            base_seed: 0x2a,
+            backend: "native@cpu:0".into(),
+        };
+        let store = RunStore::open_with(&dir, &meta).unwrap();
+        assert!(store.manifest_path().exists());
+        let back = store.meta().unwrap();
+        assert_eq!(back, meta);
+        // reopening validates but does not rewrite
+        let again = RunStore::open(&dir).unwrap();
+        assert_eq!(again.meta().unwrap().backend, "native@cpu:0");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_version_mismatch_fails_loudly() {
+        let dir = tmpdir("schema_mismatch");
+        fs::write(
+            dir.join("store.json"),
+            r#"{"schema_version": 999, "base_seed": "0", "backend": "unknown"}"#,
+        )
+        .unwrap();
+        let err = RunStore::open(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("schema version 999"), "{msg}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_store_manifest_fails_loudly() {
+        let dir = tmpdir("manifest_corrupt");
+        fs::write(dir.join("store.json"), "not json").unwrap();
+        let err = RunStore::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("store.json"), "{err:#}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_only_open_never_writes_a_manifest() {
+        let dir = tmpdir("legacy_read");
+        fs::write(dir.join("stream.jsonl"), "{\"a\":1}\n").unwrap();
+        // inspection path: no store.json appears
+        let store = RunStore::open(&dir).unwrap();
+        assert!(!store.manifest_path().exists());
+        // write path: manifest created with the caller's provenance
+        let meta = StoreMeta {
+            schema_version: SCHEMA_VERSION,
+            base_seed: 7,
+            backend: "pjrt@cpu:0".into(),
+        };
+        let store = RunStore::open_with(&dir, &meta).unwrap();
+        assert_eq!(store.meta().unwrap(), meta);
         let _ = fs::remove_dir_all(&dir);
     }
 

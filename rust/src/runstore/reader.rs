@@ -2,11 +2,11 @@
 //!
 //! Index rebuilds and compaction scan every row of every stream file on
 //! startup, so this reader never materializes a [`crate::json::Value`]:
-//! it drives the shared [`Lexer`] directly and emits a flat [`Event`]
-//! stream to a [`Visitor`]. Escape-free strings (the overwhelmingly
-//! common case in sweep rows) are borrowed straight from the input
-//! buffer — the scan allocates only when a string actually contains an
-//! escape.
+//! it drives the substrate scanner ([`crate::json::scan_value`],
+//! re-exported here) over the shared [`Lexer`] and consumes the flat
+//! [`Event`] stream. Escape-free strings (the overwhelmingly common case
+//! in sweep rows) are borrowed straight from the input buffer — the scan
+//! allocates only when a string actually contains an escape.
 //!
 //! Crash tolerance: a `SIGKILL`ed sweep can tear at most the *final*
 //! line of a stream file (the writer appends each row in one
@@ -22,133 +22,12 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::json::{Lexer, MAX_DEPTH};
+use crate::json::Lexer;
 
-/// One element of the streaming scan. String payloads are `Cow`: borrowed
-/// from the input line unless the JSON contained an escape sequence.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Event<'a> {
-    ObjBegin,
-    ObjEnd,
-    ArrBegin,
-    ArrEnd,
-    /// Object key (always immediately followed by its value's events).
-    Key(Cow<'a, str>),
-    Str(Cow<'a, str>),
-    Num(f64),
-    Bool(bool),
-    Null,
-}
-
-/// Receiver for the event stream. Implemented for closures, so simple
-/// scans can be written inline: `scan_value(&mut lex, &mut |ev| ...)`.
-pub trait Visitor<'a> {
-    fn event(&mut self, ev: Event<'a>) -> Result<()>;
-}
-
-impl<'a, F> Visitor<'a> for F
-where
-    F: FnMut(Event<'a>) -> Result<()>,
-{
-    fn event(&mut self, ev: Event<'a>) -> Result<()> {
-        self(ev)
-    }
-}
-
-/// Scan one JSON value from `lex`, emitting events to `visitor`. Uses the
-/// same [`Lexer`] as the DOM parser, so both accept identical inputs;
-/// unlike the DOM parser it allocates nothing on escape-free input.
-pub fn scan_value<'a, V: Visitor<'a> + ?Sized>(
-    lex: &mut Lexer<'a>,
-    visitor: &mut V,
-) -> Result<()> {
-    scan_at_depth(lex, visitor, 0)
-}
-
-fn scan_at_depth<'a, V: Visitor<'a> + ?Sized>(
-    lex: &mut Lexer<'a>,
-    v: &mut V,
-    depth: usize,
-) -> Result<()> {
-    if depth > MAX_DEPTH {
-        bail!("JSON nested deeper than {MAX_DEPTH} levels");
-    }
-    lex.skip_ws();
-    match lex.peek()? {
-        b'{' => {
-            lex.eat(b'{')?;
-            v.event(Event::ObjBegin)?;
-            lex.skip_ws();
-            if lex.peek()? == b'}' {
-                lex.eat(b'}')?;
-                return v.event(Event::ObjEnd);
-            }
-            loop {
-                lex.skip_ws();
-                let key = lex.string()?;
-                v.event(Event::Key(key))?;
-                lex.skip_ws();
-                lex.eat(b':')?;
-                scan_at_depth(lex, v, depth + 1)?;
-                lex.skip_ws();
-                match lex.peek()? {
-                    b',' => lex.eat(b',')?,
-                    b'}' => {
-                        lex.eat(b'}')?;
-                        return v.event(Event::ObjEnd);
-                    }
-                    c => bail!("expected ',' or '}}', got {:?}", c as char),
-                }
-            }
-        }
-        b'[' => {
-            lex.eat(b'[')?;
-            v.event(Event::ArrBegin)?;
-            lex.skip_ws();
-            if lex.peek()? == b']' {
-                lex.eat(b']')?;
-                return v.event(Event::ArrEnd);
-            }
-            loop {
-                scan_at_depth(lex, v, depth + 1)?;
-                lex.skip_ws();
-                match lex.peek()? {
-                    b',' => lex.eat(b',')?,
-                    b']' => {
-                        lex.eat(b']')?;
-                        return v.event(Event::ArrEnd);
-                    }
-                    c => bail!("expected ',' or ']', got {:?}", c as char),
-                }
-            }
-        }
-        b'"' => {
-            let s = lex.string()?;
-            v.event(Event::Str(s))
-        }
-        b't' => {
-            lex.lit("true")?;
-            v.event(Event::Bool(true))
-        }
-        b'f' => {
-            lex.lit("false")?;
-            v.event(Event::Bool(false))
-        }
-        b'n' => {
-            lex.lit("null")?;
-            v.event(Event::Null)
-        }
-        b'-' | b'0'..=b'9' => {
-            let n = lex.number()?;
-            v.event(Event::Num(n))
-        }
-        b'N' | b'I' | b'+' => bail!(
-            "NaN/Infinity/leading '+' are not valid JSON (byte {})",
-            lex.pos()
-        ),
-        c => bail!("unexpected character {:?} at byte {}", c as char, lex.pos()),
-    }
-}
+// The structural grammar itself lives in the substrate layer
+// (`json::scan_value`); this module re-exports it so run-store callers
+// keep one import site for the whole scan toolkit.
+pub use crate::json::{scan_value, Event, Visitor};
 
 // ---------------------------------------------------------------------------
 // Row-level JSONL scanning

@@ -1,0 +1,286 @@
+//! Backend trait layer: device-tagged execution API (DESIGN.md §11).
+//!
+//! Every execution path used to be hardwired to the PJRT CPU client; this
+//! module abstracts "something that can turn an [`Artifact`] into an
+//! executable step function" behind two traits:
+//!
+//! * [`Backend`] — a compiler bound to one [`DeviceTag`]. Two
+//!   implementations ship:
+//!   * [`pjrt::PjrtBackend`] (cargo feature `pjrt`, on by default) — the
+//!     `vendor/xla` path: HLO text → `PjRtClient::compile`. Swapping the
+//!     vendored stub for the real `xla_extension` bindings lights this up
+//!     without touching coordinator code.
+//!   * [`native::NativeBackend`] (always available) — a pure-Rust
+//!     interpreter of the manifest's model family (MLP and a small
+//!     transformer, fwd/bwd with global-norm clipping), so
+//!     `slimadam run/sweep --backend native` trains end to end offline
+//!     with no artifacts and no PJRT.
+//! * [`Executable`] — a compiled step function. `GradEngine` /
+//!   `TrainEngine` consume it generically through
+//!   [`super::engine::Compiled`]; they never know which backend produced
+//!   it.
+//!
+//! A [`BackendSpec`] names a `(kind, device)` pair. It is carried by
+//! `TrainConfig`, hashed into `runstore::config_key`, and is part of the
+//! executable-cache key and the sweep scheduler's shard key — so mixed
+//! device pools schedule and resume correctly (`coordinator::exec_cache`).
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::fmt;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::engine::Artifact;
+
+/// Which physical device a backend executes on. Today only CPU backends
+/// exist; the tag is threaded through every cache/shard key so GPU/TPU
+/// pools slot in without another rekeying pass (ROADMAP "multi-backend
+/// scheduling").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceTag {
+    Cpu(u16),
+    Gpu(u16),
+    Tpu(u16),
+}
+
+impl DeviceTag {
+    /// Parse `"cpu"`, `"cpu:0"`, `"gpu:1"`, `"tpu:3"`.
+    pub fn parse(s: &str) -> Result<DeviceTag> {
+        let (kind, idx) = match s.split_once(':') {
+            Some((k, i)) => {
+                let idx: u16 = i
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad device index in {s:?}"))?;
+                (k, idx)
+            }
+            None => (s, 0),
+        };
+        Ok(match kind {
+            "cpu" => DeviceTag::Cpu(idx),
+            "gpu" => DeviceTag::Gpu(idx),
+            "tpu" => DeviceTag::Tpu(idx),
+            other => bail!("unknown device kind {other:?} (want cpu/gpu/tpu)"),
+        })
+    }
+}
+
+impl fmt::Display for DeviceTag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceTag::Cpu(i) => write!(f, "cpu:{i}"),
+            DeviceTag::Gpu(i) => write!(f, "gpu:{i}"),
+            DeviceTag::Tpu(i) => write!(f, "tpu:{i}"),
+        }
+    }
+}
+
+/// Which backend implementation compiles and runs artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BackendKind {
+    /// `vendor/xla` PJRT path (HLO artifacts; cargo feature `pjrt`).
+    Pjrt,
+    /// Pure-Rust manifest interpreter (builtin models; always available).
+    Native,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// A `(backend kind, device)` pair — the unit of execution identity.
+/// Part of `TrainConfig`, the run-store config key, the executable-cache
+/// key and the scheduler shard key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    pub device: DeviceTag,
+}
+
+impl Default for BackendSpec {
+    /// The PJRT CPU path — the seed repo's only execution path, so
+    /// existing configs, tests and stored run keys keep their meaning.
+    fn default() -> Self {
+        BackendSpec::pjrt()
+    }
+}
+
+impl BackendSpec {
+    pub fn pjrt() -> BackendSpec {
+        BackendSpec {
+            kind: BackendKind::Pjrt,
+            device: DeviceTag::Cpu(0),
+        }
+    }
+
+    pub fn native() -> BackendSpec {
+        BackendSpec {
+            kind: BackendKind::Native,
+            device: DeviceTag::Cpu(0),
+        }
+    }
+
+    /// Parse `"pjrt"`, `"native"`, or `"<kind>@<device>"` (e.g.
+    /// `"pjrt@gpu:1"`).
+    ///
+    /// ```
+    /// use slimadam::runtime::backend::{BackendKind, BackendSpec, DeviceTag};
+    ///
+    /// let s = BackendSpec::parse("native").unwrap();
+    /// assert_eq!(s.kind, BackendKind::Native);
+    /// let s = BackendSpec::parse("pjrt@gpu:1").unwrap();
+    /// assert_eq!(s.device, DeviceTag::Gpu(1));
+    /// assert_eq!(s.key(), "pjrt@gpu:1");
+    /// assert!(BackendSpec::parse("cuda").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<BackendSpec> {
+        let (kind, device) = match s.split_once('@') {
+            Some((k, d)) => (k, DeviceTag::parse(d)?),
+            None => (s, DeviceTag::Cpu(0)),
+        };
+        let kind = match kind {
+            "pjrt" => BackendKind::Pjrt,
+            "native" => BackendKind::Native,
+            other => bail!("unknown backend {other:?} (want pjrt or native)"),
+        };
+        Ok(BackendSpec { kind, device })
+    }
+
+    /// Stable textual identity, e.g. `"native@cpu:0"` — used in config
+    /// keys, cache keys and shard keys.
+    pub fn key(&self) -> String {
+        format!("{}@{}", self.kind.as_str(), self.device)
+    }
+}
+
+impl fmt::Display for BackendSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+/// A compiled step function: input literals in manifest order → output
+/// literals in manifest order. Implementations are thread-confined (the
+/// PJRT wrapper types are not `Send`), matching the per-worker cache
+/// architecture.
+pub trait Executable {
+    fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>>;
+}
+
+/// A compiler bound to one device: turns a loaded [`Artifact`] into an
+/// [`Executable`]. `GradEngine`/`TrainEngine` are backend-agnostic — they
+/// see only the `Compiled` wrapper this produces.
+pub trait Backend {
+    /// Implementation name (`"pjrt"` / `"native"`).
+    fn name(&self) -> &'static str;
+
+    /// The device this backend executes on.
+    fn device(&self) -> DeviceTag;
+
+    /// Compile an artifact for this device.
+    fn compile(&self, art: &Artifact) -> Result<Box<dyn Executable>>;
+
+    /// Resolve an artifact by name (`<model>.grad`,
+    /// `<model>.train.<ruleset>`). The default reads `make artifacts`
+    /// output from `dir`; the native backend generates its builtin
+    /// manifest and ignores `dir`.
+    fn load_artifact(&self, dir: &std::path::Path, name: &str) -> Result<Artifact> {
+        Artifact::load(dir, name)
+    }
+}
+
+/// Construct the backend an execution spec names. Fails with a buildable
+/// hint when the `pjrt` feature is compiled out.
+///
+/// Non-CPU device tags parse and participate in scheduling/cache keys
+/// (so key plumbing is exercised ahead of real device support), but
+/// refusing to *construct* such a backend keeps run identity honest: no
+/// row may ever claim `gpu:N` provenance for work a CPU client did.
+pub fn backend_for(spec: &BackendSpec) -> Result<Rc<dyn Backend>> {
+    if !matches!(spec.device, DeviceTag::Cpu(_)) {
+        bail!(
+            "device {} is not available: only cpu devices exist until real \
+             GPU/TPU backends land (ROADMAP)",
+            spec.device
+        );
+    }
+    match spec.kind {
+        BackendKind::Native => Ok(Rc::new(native::NativeBackend::new(spec.device))),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Rc::new(pjrt::PjrtBackend::new(spec.device)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => bail!(
+            "backend {:?} requires the `pjrt` cargo feature (this build used \
+             --no-default-features) — rebuild with `--features pjrt` or use \
+             `--backend native`",
+            spec.key()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_tag_roundtrip() {
+        for (s, want) in [
+            ("cpu", DeviceTag::Cpu(0)),
+            ("cpu:3", DeviceTag::Cpu(3)),
+            ("gpu:1", DeviceTag::Gpu(1)),
+            ("tpu:7", DeviceTag::Tpu(7)),
+        ] {
+            let tag = DeviceTag::parse(s).unwrap();
+            assert_eq!(tag, want);
+            assert_eq!(DeviceTag::parse(&tag.to_string()).unwrap(), tag);
+        }
+        assert!(DeviceTag::parse("cuda:0").is_err());
+        assert!(DeviceTag::parse("gpu:x").is_err());
+    }
+
+    #[test]
+    fn spec_parse_and_key() {
+        assert_eq!(BackendSpec::parse("pjrt").unwrap(), BackendSpec::pjrt());
+        assert_eq!(
+            BackendSpec::parse("native").unwrap(),
+            BackendSpec::native()
+        );
+        let s = BackendSpec::parse("native@gpu:2").unwrap();
+        assert_eq!(s.key(), "native@gpu:2");
+        assert_eq!(BackendSpec::parse(&s.key()).unwrap(), s);
+        assert!(BackendSpec::parse("tensorrt").is_err());
+    }
+
+    #[test]
+    fn default_spec_is_pjrt_cpu() {
+        assert_eq!(BackendSpec::default(), BackendSpec::pjrt());
+        assert_eq!(BackendSpec::default().key(), "pjrt@cpu:0");
+    }
+
+    #[test]
+    fn native_backend_always_constructs() {
+        let b = backend_for(&BackendSpec::native()).unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.device(), DeviceTag::Cpu(0));
+    }
+
+    #[test]
+    fn non_cpu_devices_are_rejected_until_real() {
+        // keys/scheduling accept gpu tags, but constructing a backend for
+        // one must fail: no row may claim device provenance it never had
+        for spec in ["native@gpu:0", "pjrt@tpu:1"] {
+            let spec = BackendSpec::parse(spec).unwrap();
+            let err = backend_for(&spec).unwrap_err();
+            assert!(format!("{err}").contains("not available"), "{err}");
+        }
+    }
+}

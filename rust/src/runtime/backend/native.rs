@@ -1,0 +1,1157 @@
+//! Native backend: a pure-Rust interpreter of the manifest's model family
+//! (DESIGN.md §11).
+//!
+//! Where the PJRT backend compiles AOT-lowered HLO text, the native
+//! backend *is* the computation: it ships a small catalog of builtin
+//! models ([`MODELS`]) — a per-token MLP language model and a one-block
+//! causal transformer — with handwritten forward/backward passes, and
+//! interprets `grad_step` / `train_step` manifests directly. That makes
+//! `slimadam train/sweep --backend native` a real training run (actual
+//! losses, actual gradients, actual reduced-V Adam updates) that needs no
+//! artifacts, no Python, and no PJRT — the substrate for offline CI
+//! end-to-end coverage that the synthetic-run mode (fake losses) could
+//! never give.
+//!
+//! Contracts kept identical to the PJRT path:
+//!
+//! * manifests are generated, then round-tripped through
+//!   [`Manifest::parse`] + `validate`, so both backends agree on the
+//!   input/output layout and the manifest hash keys the executable cache;
+//! * `train_step` applies global-norm clipping then the Eq. 2 reduced-V
+//!   AdamW update with the manifest's baked `k_modes` — split
+//!   (grad + `optim::adamk::AdamK`) and fused native runs of the same
+//!   config produce matching trajectories
+//!   (`rust/tests/engine_agreement.rs`);
+//! * forward/backward accumulate in f64 and emit f32, so results are a
+//!   deterministic pure function of the inputs on every host.
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::Literal;
+
+use crate::optim::clip_global_norm;
+use crate::runtime::engine::{Artifact, ArtifactSource};
+use crate::runtime::literal::{literal_to_tensor, scalar_f32, tensor_to_literal};
+use crate::runtime::manifest::{Hypers, KMode, Manifest};
+use crate::tensor::Tensor;
+
+use super::{Backend, DeviceTag, Executable};
+
+/// Builtin models the native interpreter knows.
+pub const MODELS: &[&str] = &["mlp_tiny", "gpt_micro"];
+
+/// Fused rulesets the native interpreter can bake into `train_step`
+/// manifests (K modes per tensor).
+pub const RULESETS: &[&str] = &["adam", "slimadam", "adalayer"];
+
+const RMS_EPS: f64 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// Model catalog + manifest generation
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Family {
+    Mlp,
+    Gpt,
+}
+
+/// Architecture hyperparameters of one builtin model.
+#[derive(Debug, Clone, Copy)]
+struct Dims {
+    family: Family,
+    vocab: usize,
+    d: usize,
+    hidden: usize,
+    heads: usize,
+    ctx: usize,
+    batch: usize,
+}
+
+fn dims_for(model: &str) -> Result<Dims> {
+    Ok(match model {
+        "mlp_tiny" => Dims {
+            family: Family::Mlp,
+            vocab: 64,
+            d: 16,
+            hidden: 32,
+            heads: 1,
+            ctx: 8,
+            batch: 8,
+        },
+        "gpt_micro" => Dims {
+            family: Family::Gpt,
+            vocab: 64,
+            d: 16,
+            hidden: 64,
+            heads: 2,
+            ctx: 8,
+            batch: 4,
+        },
+        other => bail!(
+            "unknown native model {other:?} — builtin models: {}",
+            MODELS.join(", ")
+        ),
+    })
+}
+
+/// `(name, shape, layer_type, depth, wd, default_init)` rows, in manifest
+/// parameter order.
+fn param_rows(dims: &Dims) -> Vec<(&'static str, Vec<usize>, &'static str, i64, bool)> {
+    let (v, d, h) = (dims.vocab, dims.d, dims.hidden);
+    match dims.family {
+        Family::Mlp => vec![
+            ("tok_embd", vec![v, d], "tok_embd", -1, true),
+            ("mlp_up", vec![h, d], "mlp_up", 0, true),
+            ("mlp_down", vec![d, h], "mlp_down", 0, true),
+            ("lm_head", vec![v, d], "lm_head", 1, true),
+        ],
+        Family::Gpt => vec![
+            ("tok_embd", vec![v, d], "tok_embd", -1, true),
+            ("pos_embd", vec![dims.ctx, d], "pos_embd", -1, false),
+            ("h0.ln_attn", vec![d], "ln_attn", 0, false),
+            ("h0.attn_q", vec![d, d], "attn_q", 0, true),
+            ("h0.attn_k", vec![d, d], "attn_k", 0, true),
+            ("h0.attn_v", vec![d, d], "attn_v", 0, true),
+            ("h0.attn_proj", vec![d, d], "attn_proj", 0, true),
+            ("h0.ln_mlp", vec![d], "ln_mlp", 0, false),
+            ("h0.mlp_up", vec![h, d], "mlp_up", 0, true),
+            ("h0.mlp_down", vec![d, h], "mlp_down", 0, true),
+            ("ln_final", vec![d], "ln_final", 1, false),
+            ("lm_head", vec![v, d], "lm_head", 1, true),
+        ],
+    }
+}
+
+fn init_json(shape: &[usize], layer_type: &str, mitchell: bool) -> crate::json::Value {
+    let mut v = crate::json::Value::obj();
+    if shape.len() <= 1 {
+        // norm gains start at one, everything vector-like else at zero
+        if layer_type.starts_with("ln") {
+            v.set("scheme", "ones");
+        } else {
+            v.set("scheme", "zeros");
+        }
+    } else if mitchell {
+        v.set("scheme", "normal").set("std", 0.02);
+    } else {
+        // PyTorch-default-flavored: uniform ±1/sqrt(fan_in)
+        let fan_in = shape[1..].iter().product::<usize>().max(1);
+        v.set("scheme", "uniform")
+            .set("limit", 1.0 / (fan_in as f64).sqrt());
+    }
+    v
+}
+
+fn manifest_json(
+    model: &str,
+    dims: &Dims,
+    kind: &str,
+    ruleset: Option<&str>,
+) -> crate::json::Value {
+    use crate::json::Value;
+    let mut root = Value::obj();
+    root.set("kind", kind);
+
+    let mut meta = Value::obj();
+    meta.set("name", model)
+        .set("family", match dims.family {
+            Family::Mlp => "mlp",
+            Family::Gpt => "gpt",
+        })
+        .set("vocab", dims.vocab)
+        .set("d_model", dims.d)
+        .set("hidden", dims.hidden)
+        .set("n_heads", dims.heads)
+        .set("ctx", dims.ctx)
+        .set("batch", dims.batch)
+        .set("native", true);
+    root.set("model", meta);
+
+    let rows = param_rows(dims);
+    let mut params = Vec::new();
+    for (name, shape, lt, depth, wd) in &rows {
+        let mut p = Value::obj();
+        p.set("name", *name)
+            .set("shape", shape.clone())
+            .set("layer_type", *lt)
+            .set("depth", *depth)
+            .set("init_mitchell", init_json(shape, lt, true))
+            .set("init_default", init_json(shape, lt, false))
+            .set("wd", *wd)
+            .set("fan_out_axis", 0usize);
+        params.push(p);
+    }
+    root.set("params", params);
+
+    let mut batch = Vec::new();
+    for name in ["x", "y"] {
+        let mut b = Value::obj();
+        b.set("name", name)
+            .set("shape", vec![dims.batch, dims.ctx])
+            .set("dtype", "s32");
+        batch.push(b);
+    }
+    root.set("batch", batch);
+
+    let mut hypers = Value::obj();
+    let h = Hypers::default();
+    hypers
+        .set("beta1", h.beta1)
+        .set("beta2", h.beta2)
+        .set("eps", h.eps)
+        .set("weight_decay", h.weight_decay)
+        .set("clip_norm", h.clip_norm);
+    root.set("hypers", hypers);
+
+    let param_names: Vec<&str> = rows.iter().map(|r| r.0).collect();
+    match kind {
+        "grad_step" => {
+            let mut inputs: Vec<String> =
+                param_names.iter().map(|n| format!("param:{n}")).collect();
+            inputs.push("batch:x".into());
+            inputs.push("batch:y".into());
+            let mut outputs = vec!["loss".to_string()];
+            outputs.extend(param_names.iter().map(|n| format!("grad:{n}")));
+            root.set("inputs", inputs).set("outputs", outputs);
+        }
+        "train_step" => {
+            let ruleset = ruleset.expect("train_step needs a ruleset");
+            root.set("ruleset", ruleset);
+            let mut inputs: Vec<String> = Vec::new();
+            for prefix in ["param", "m", "v"] {
+                inputs.extend(param_names.iter().map(|n| format!("{prefix}:{n}")));
+            }
+            inputs.push("batch:x".into());
+            inputs.push("batch:y".into());
+            inputs.push("step".into());
+            inputs.push("lr".into());
+            let mut outputs = vec!["loss".to_string(), "grad_norm".to_string()];
+            for prefix in ["param", "m", "v"] {
+                outputs.extend(param_names.iter().map(|n| format!("{prefix}:{n}")));
+            }
+            root.set("inputs", inputs).set("outputs", outputs);
+        }
+        k => unreachable!("manifest kind {k}"),
+    }
+    root
+}
+
+/// Builtin `grad_step` manifest for a native model.
+pub fn grad_manifest(model: &str) -> Result<Manifest> {
+    Ok(artifact(&format!("{model}.grad"))?.manifest)
+}
+
+/// Per-tensor K modes baked into a fused native manifest.
+fn ruleset_modes(man: &Manifest, ruleset: &str) -> Result<Vec<KMode>> {
+    Ok(match ruleset {
+        "adam" => vec![KMode::None; man.n_params()],
+        "adalayer" => vec![KMode::Both; man.n_params()],
+        "slimadam" => crate::rules::RuleSet::table3_default(man).modes_for(man),
+        other => bail!(
+            "unknown native ruleset {other:?} — builtin rulesets: {}",
+            RULESETS.join(", ")
+        ),
+    })
+}
+
+/// Stored-V shape for a parameter under mode `k` (in matrix-view coords;
+/// the fused engine round-trips these literals without inspecting them).
+fn v_shape(info: &crate::runtime::manifest::ParamInfo, k: KMode) -> Vec<usize> {
+    let (rows, cols) = info.matrix_dims();
+    match crate::optim::adamk::effective_k(info, k) {
+        KMode::None => info.shape.clone(),
+        KMode::FanIn => vec![rows, 1],
+        KMode::FanOut => vec![1, cols],
+        KMode::Both => vec![1],
+        KMode::Blocks(n) => vec![n],
+    }
+}
+
+thread_local! {
+    /// Builtin artifacts are a pure function of their name, so generation
+    /// (JSON build + parse + validate) runs once per thread per name —
+    /// the dispatch hot path (`exec_cache` recomputes the cache key per
+    /// job) then pays only a manifest clone.
+    static ARTIFACTS: std::cell::RefCell<std::collections::HashMap<String, Artifact>> =
+        std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+/// Resolve a native artifact by name: `<model>.grad` or
+/// `<model>.train.<ruleset>`. The manifest is generated, serialized, and
+/// re-parsed through [`Manifest::parse`] so native and PJRT artifacts
+/// share one manifest contract (and the hash that keys the executable
+/// cache digests the same bytes a file would hold).
+pub fn artifact(name: &str) -> Result<Artifact> {
+    ARTIFACTS.with(|cache| {
+        if let Some(art) = cache.borrow().get(name) {
+            return Ok(art.clone());
+        }
+        let art = generate_artifact(name)?;
+        cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    })
+}
+
+fn generate_artifact(name: &str) -> Result<Artifact> {
+    let (model, kind, ruleset) = match name.split_once('.') {
+        Some((model, "grad")) => (model, "grad_step", None),
+        Some((model, rest)) => match rest.split_once('.') {
+            Some(("train", ruleset)) => (model, "train_step", Some(ruleset)),
+            _ => bail!("bad native artifact name {name:?}"),
+        },
+        None => bail!("bad native artifact name {name:?}"),
+    };
+    let dims = dims_for(model)?;
+    let mut root = manifest_json(model, &dims, kind, ruleset);
+
+    if kind == "train_step" {
+        // k_modes/v_shapes need a parsed manifest for ParamInfo geometry;
+        // bootstrap from the grad-shaped params.
+        let base = Manifest::parse(&root.dump()).map_err(|e| {
+            anyhow!("internal: native train manifest bootstrap failed: {e}")
+        })?;
+        let modes = ruleset_modes(&base, ruleset.unwrap())?;
+        // Manifest k_modes strings can carry none/fan_in/fan_out/both only
+        // (KMode::parse has no "blocksN" spelling) — refuse early rather
+        // than generate a manifest that cannot re-parse.
+        anyhow::ensure!(
+            !modes.iter().any(|k| matches!(k, KMode::Blocks(_))),
+            "native rulesets cannot bake block-partitioned K modes into a \
+             manifest"
+        );
+        let k_modes: Vec<String> = base
+            .params
+            .iter()
+            .zip(&modes)
+            .map(|(p, &k)| crate::optim::adamk::effective_k(p, k).as_str())
+            .collect();
+        let v_shapes: Vec<crate::json::Value> = base
+            .params
+            .iter()
+            .zip(&modes)
+            .map(|(p, &k)| crate::json::Value::from(v_shape(p, k)))
+            .collect();
+        root.set("k_modes", k_modes);
+        root.set("v_shapes", crate::json::Value::Arr(v_shapes));
+    }
+
+    let text = root.dump();
+    let manifest = Manifest::parse(&text)
+        .with_context(|| format!("parsing generated native manifest {name:?}"))?;
+    manifest
+        .validate()
+        .with_context(|| format!("validating generated native manifest {name:?}"))?;
+    Ok(Artifact {
+        name: name.to_string(),
+        manifest,
+        source: ArtifactSource::Builtin,
+        manifest_hash: crate::rng::stable_hash64(text.as_bytes()),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Backend + executable
+// ---------------------------------------------------------------------------
+
+/// The pure-Rust execution path. Stateless; `compile` binds a builtin
+/// model's interpreter to the artifact's manifest.
+pub struct NativeBackend {
+    device: DeviceTag,
+}
+
+impl NativeBackend {
+    pub fn new(device: DeviceTag) -> NativeBackend {
+        NativeBackend { device }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new(DeviceTag::Cpu(0))
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn device(&self) -> DeviceTag {
+        self.device
+    }
+
+    fn load_artifact(&self, _dir: &std::path::Path, name: &str) -> Result<Artifact> {
+        artifact(name)
+    }
+
+    fn compile(&self, art: &Artifact) -> Result<Box<dyn Executable>> {
+        anyhow::ensure!(
+            art.source == ArtifactSource::Builtin,
+            "native backend interprets builtin models only ({}), got HLO \
+             artifact {:?} — use the pjrt backend for `make artifacts` output",
+            MODELS.join(", "),
+            art.name
+        );
+        let dims = dims_for(&art.manifest.model_name)?;
+        // Guard against manifests that drifted from the interpreter.
+        let rows = param_rows(&dims);
+        anyhow::ensure!(
+            art.manifest.n_params() == rows.len()
+                && art
+                    .manifest
+                    .params
+                    .iter()
+                    .zip(&rows)
+                    .all(|(p, (n, shape, ..))| p.name == *n && &p.shape == shape),
+            "native manifest for {:?} does not match the interpreter's \
+             parameter layout",
+            art.manifest.model_name
+        );
+        Ok(Box::new(NativeExecutable {
+            manifest: art.manifest.clone(),
+            dims,
+        }))
+    }
+}
+
+/// One compiled native step function.
+struct NativeExecutable {
+    manifest: Manifest,
+    dims: Dims,
+}
+
+impl NativeExecutable {
+    fn batch_tokens(&self, lit: &Literal, what: &str) -> Result<Vec<i32>> {
+        let toks = lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("reading {what} batch: {e}"))?;
+        anyhow::ensure!(
+            toks.len() == self.dims.batch * self.dims.ctx,
+            "{what} batch has {} tokens, want {}",
+            toks.len(),
+            self.dims.batch * self.dims.ctx
+        );
+        let bound = self.dims.vocab as i32;
+        anyhow::ensure!(
+            toks.iter().all(|&t| (0..bound).contains(&t)),
+            "{what} batch token out of range [0, {bound})"
+        );
+        Ok(toks)
+    }
+
+    fn run_grad(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let n = self.manifest.n_params();
+        let params: Vec<Tensor> = inputs[..n]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<_>>()?;
+        let x = self.batch_tokens(&inputs[n], "x")?;
+        let y = self.batch_tokens(&inputs[n + 1], "y")?;
+        let (loss, grads) = loss_and_grads(&self.dims, &params, &x, &y);
+        let mut out = Vec::with_capacity(1 + n);
+        out.push(scalar_f32(loss as f32));
+        for g in &grads {
+            out.push(tensor_to_literal(g)?);
+        }
+        Ok(out)
+    }
+
+    fn run_train(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let man = &self.manifest;
+        let n = man.n_params();
+        let mut params: Vec<Tensor> = inputs[..n]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<_>>()?;
+        let mut m: Vec<Tensor> = inputs[n..2 * n]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<_>>()?;
+        let mut v: Vec<Tensor> = inputs[2 * n..3 * n]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<_>>()?;
+        let x = self.batch_tokens(&inputs[3 * n], "x")?;
+        let y = self.batch_tokens(&inputs[3 * n + 1], "y")?;
+        let step = crate::runtime::literal::scalar_value(&inputs[3 * n + 2])?;
+        let lr = crate::runtime::literal::scalar_value(&inputs[3 * n + 3])?;
+        let t = step.round().max(1.0) as usize;
+
+        let hypers = man.hypers.unwrap_or_default();
+        let k_modes = man
+            .k_modes
+            .as_ref()
+            .ok_or_else(|| anyhow!("native train_step manifest missing k_modes"))?;
+
+        let (loss, mut grads) = loss_and_grads(&self.dims, &params, &x, &y);
+        let grad_norm = clip_global_norm(&mut grads, hypers.clip_norm);
+        fused_update(man, k_modes, &hypers, &mut params, &mut m, &mut v, &grads, t, lr);
+
+        let mut out = Vec::with_capacity(2 + 3 * n);
+        out.push(scalar_f32(loss as f32));
+        out.push(scalar_f32(grad_norm as f32));
+        for tensor in params.iter().chain(&m).chain(&v) {
+            out.push(tensor_to_literal(tensor)?);
+        }
+        Ok(out)
+    }
+}
+
+impl Executable for NativeExecutable {
+    fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        match self.manifest.kind.as_str() {
+            "grad_step" => self.run_grad(inputs),
+            "train_step" => self.run_train(inputs),
+            k => bail!("native backend cannot execute manifest kind {k:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused reduced-V AdamW update (Eq. 2, mirrors optim::adamk::AdamK)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn fused_update(
+    man: &Manifest,
+    k_modes: &[KMode],
+    h: &Hypers,
+    params: &mut [Tensor],
+    m: &mut [Tensor],
+    v: &mut [Tensor],
+    grads: &[Tensor],
+    t: usize,
+    lr: f32,
+) {
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    let eps = h.eps as f32;
+    let bc1 = 1.0 / (1.0 - b1.powi(t as i32));
+    let bc2 = 1.0 / (1.0 - b2.powi(t as i32));
+    for i in 0..params.len() {
+        let info = &man.params[i];
+        let k = crate::optim::adamk::effective_k(info, k_modes[i]);
+        let (rows, cols) = info.matrix_dims();
+        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+        let w = &mut params[i].data;
+        let g = &grads[i].data;
+        let mi = &mut m[i].data;
+        let vi = &mut v[i].data;
+        if k == KMode::None {
+            // Exact AdamW: V is elementwise, no grouping pass needed.
+            for j in 0..w.len() {
+                let gj = g[j];
+                mi[j] = b1 * mi[j] + (1.0 - b1) * gj;
+                vi[j] = b2 * vi[j] + (1.0 - b2) * gj * gj;
+                let mh = mi[j] * bc1;
+                let vh = vi[j] * bc2;
+                w[j] -= lr * (mh / (vh.sqrt() + eps) + wd * w[j]);
+            }
+            continue;
+        }
+        // All native params have fan_out_axis 0, so the matrix view is the
+        // raw layout: row = j / cols, col = j % cols.
+        let group = |j: usize| -> usize {
+            match k {
+                KMode::None => j,
+                KMode::FanIn => j / cols,
+                KMode::FanOut => j % cols,
+                KMode::Both => 0,
+                KMode::Blocks(n) => (j / cols) * n / rows,
+            }
+        };
+        let gsize = match k {
+            KMode::None => 1.0,
+            KMode::FanIn => cols as f32,
+            KMode::FanOut => rows as f32,
+            KMode::Both => (rows * cols) as f32,
+            KMode::Blocks(n) => ((rows / n) * cols) as f32,
+        };
+        let mut sums = vec![0.0f32; vi.len()];
+        for (j, &gj) in g.iter().enumerate() {
+            sums[group(j)] += gj * gj;
+        }
+        for (vv, s) in vi.iter_mut().zip(&sums) {
+            *vv = b2 * *vv + (1.0 - b2) * (s / gsize);
+        }
+        for j in 0..w.len() {
+            let gj = g[j];
+            mi[j] = b1 * mi[j] + (1.0 - b1) * gj;
+            let mh = mi[j] * bc1;
+            let vh = vi[group(j)] * bc2;
+            w[j] -= lr * (mh / (vh.sqrt() + eps) + wd * w[j]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward/backward interpreters (f64 internal, f32 at the boundary)
+// ---------------------------------------------------------------------------
+
+/// Loss and gradients for one batch, in manifest parameter order. The f64
+/// loss is exposed for finite-difference tests; engines see the f32 cast.
+fn loss_and_grads(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32]) -> (f64, Vec<Tensor>) {
+    let mut grads: Vec<Vec<f64>> = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+    let loss = match dims.family {
+        Family::Mlp => mlp_pass(dims, params, x, y, &mut grads),
+        Family::Gpt => gpt_pass(dims, params, x, y, &mut grads),
+    };
+    let out = params
+        .iter()
+        .zip(&grads)
+        .map(|(p, g)| Tensor::from_vec(&p.shape, g.iter().map(|&x| x as f32).collect()))
+        .collect();
+    (loss, out)
+}
+
+/// Forward-only loss (finite-difference harness for the tests below).
+#[cfg(test)]
+fn loss_only(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32]) -> f64 {
+    let mut grads: Vec<Vec<f64>> = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+    match dims.family {
+        Family::Mlp => mlp_pass(dims, params, x, y, &mut grads),
+        Family::Gpt => gpt_pass(dims, params, x, y, &mut grads),
+    }
+}
+
+#[inline]
+fn f64s(t: &Tensor) -> Vec<f64> {
+    t.data.iter().map(|&x| x as f64).collect()
+}
+
+/// `out[r] = W[r,:] · v` for row-major `W (rows × cols)`.
+fn matvec(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64]) {
+    for r in 0..rows {
+        let mut s = 0.0;
+        let row = &w[r * cols..(r + 1) * cols];
+        for (a, b) in row.iter().zip(v) {
+            s += a * b;
+        }
+        out[r] = s;
+    }
+}
+
+/// `out[c] += W[:,c] · v` (transpose matvec, accumulating).
+fn matvec_t_acc(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64]) {
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let vr = v[r];
+        for (o, a) in out.iter_mut().zip(row) {
+            *o += a * vr;
+        }
+    }
+}
+
+/// `dW[r,c] += dv[r] * u[c]` (outer-product accumulation).
+fn outer_acc(dw: &mut [f64], rows: usize, cols: usize, dv: &[f64], u: &[f64]) {
+    for r in 0..rows {
+        let row = &mut dw[r * cols..(r + 1) * cols];
+        let d = dv[r];
+        for (o, b) in row.iter_mut().zip(u) {
+            *o += d * b;
+        }
+    }
+}
+
+/// Softmax cross-entropy at one position: fills `dlogits` with
+/// `(p - onehot(y)) * scale` and returns `-ln p[y]`.
+fn softmax_ce(logits: &[f64], y: usize, scale: f64, dlogits: &mut [f64]) -> f64 {
+    let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut z = 0.0;
+    for (d, &l) in dlogits.iter_mut().zip(logits) {
+        *d = (l - max).exp();
+        z += *d;
+    }
+    let loss = -(dlogits[y] / z).max(f64::MIN_POSITIVE).ln();
+    for d in dlogits.iter_mut() {
+        *d = *d / z * scale;
+    }
+    dlogits[y] -= scale;
+    loss
+}
+
+/// RMS-norm forward: `y = x / rms(x) * g`; returns the saved rms.
+fn rms_fwd(x: &[f64], g: &[f64], out: &mut [f64]) -> f64 {
+    let d = x.len() as f64;
+    let r = (x.iter().map(|v| v * v).sum::<f64>() / d + RMS_EPS).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] / r * g[i];
+    }
+    r
+}
+
+/// RMS-norm backward: accumulates `dx` and `dg` from `dy`.
+fn rms_bwd(x: &[f64], g: &[f64], r: f64, dy: &[f64], dx: &mut [f64], dg: &mut [f64]) {
+    let d = x.len() as f64;
+    let mut dot = 0.0;
+    for i in 0..x.len() {
+        dg[i] += dy[i] * x[i] / r;
+        dot += dy[i] * g[i] * x[i];
+    }
+    let coef = dot / (d * r * r * r);
+    for i in 0..x.len() {
+        dx[i] += dy[i] * g[i] / r - x[i] * coef;
+    }
+}
+
+/// Per-token MLP language model: `logits = W_head·(W_down·relu(W_up·E[x]))`.
+/// Params: `[tok_embd (V×D), mlp_up (H×D), mlp_down (D×H), lm_head (V×D)]`.
+fn mlp_pass(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32], grads: &mut [Vec<f64>]) -> f64 {
+    let (v, d, h) = (dims.vocab, dims.d, dims.hidden);
+    let e = f64s(&params[0]);
+    let wu = f64s(&params[1]);
+    let wd = f64s(&params[2]);
+    let wh = f64s(&params[3]);
+    let n_tok = x.len();
+    let scale = 1.0 / n_tok as f64;
+
+    let mut u_pre = vec![0.0; h];
+    let mut u = vec![0.0; h];
+    let mut z = vec![0.0; d];
+    let mut logits = vec![0.0; v];
+    let mut dlogits = vec![0.0; v];
+    let mut dz = vec![0.0; d];
+    let mut du = vec![0.0; h];
+    let mut de = vec![0.0; d];
+    let mut loss = 0.0;
+
+    for n in 0..n_tok {
+        let tok = x[n] as usize;
+        let emb = &e[tok * d..(tok + 1) * d];
+        matvec(&wu, h, d, emb, &mut u_pre);
+        for i in 0..h {
+            u[i] = u_pre[i].max(0.0);
+        }
+        matvec(&wd, d, h, &u, &mut z);
+        matvec(&wh, v, d, &z, &mut logits);
+        loss += softmax_ce(&logits, y[n] as usize, scale, &mut dlogits);
+
+        // backward
+        outer_acc(&mut grads[3], v, d, &dlogits, &z);
+        dz.fill(0.0);
+        matvec_t_acc(&wh, v, d, &dlogits, &mut dz);
+        outer_acc(&mut grads[2], d, h, &dz, &u);
+        du.fill(0.0);
+        matvec_t_acc(&wd, d, h, &dz, &mut du);
+        for i in 0..h {
+            if u_pre[i] <= 0.0 {
+                du[i] = 0.0;
+            }
+        }
+        outer_acc(&mut grads[1], h, d, &du, emb);
+        de.fill(0.0);
+        matvec_t_acc(&wu, h, d, &du, &mut de);
+        for (gi, di) in grads[0][tok * d..(tok + 1) * d].iter_mut().zip(&de) {
+            *gi += di;
+        }
+    }
+    loss * scale
+}
+
+/// One-block causal transformer with RMS-norm (scale-only), multi-head
+/// attention and a ReLU MLP, residual connections around both sublayers.
+/// Params (manifest order): tok_embd, pos_embd, ln_attn, attn_q/k/v/proj,
+/// ln_mlp, mlp_up, mlp_down, ln_final, lm_head.
+fn gpt_pass(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32], grads: &mut [Vec<f64>]) -> f64 {
+    let (v, d, f, heads, t_ctx, b) =
+        (dims.vocab, dims.d, dims.hidden, dims.heads, dims.ctx, dims.batch);
+    let dh = d / heads;
+    let att_scale = 1.0 / (dh as f64).sqrt();
+    let p: Vec<Vec<f64>> = params.iter().map(f64s).collect();
+    let (e, pos, g1, wq, wk, wv, wp, g2, wu, wd_, g3, wh) = (
+        &p[0], &p[1], &p[2], &p[3], &p[4], &p[5], &p[6], &p[7], &p[8], &p[9], &p[10], &p[11],
+    );
+    let scale = 1.0 / (b * t_ctx) as f64;
+    let mut loss = 0.0;
+
+    // per-row activation buffers (T × dim, row-major by position)
+    let td = t_ctx * d;
+    let mut h0 = vec![0.0; td];
+    let mut a = vec![0.0; td];
+    let mut r1 = vec![0.0; t_ctx];
+    let mut q = vec![0.0; td];
+    let mut k = vec![0.0; td];
+    let mut vv = vec![0.0; td];
+    let mut att = vec![0.0; heads * t_ctx * t_ctx];
+    let mut ctx = vec![0.0; td];
+    let mut o = vec![0.0; td];
+    let mut h1 = vec![0.0; td];
+    let mut m_in = vec![0.0; td];
+    let mut r2 = vec![0.0; t_ctx];
+    let mut u_pre = vec![0.0; t_ctx * f];
+    let mut u = vec![0.0; t_ctx * f];
+    let mut h2 = vec![0.0; td];
+    let mut fo = vec![0.0; td];
+    let mut r3 = vec![0.0; t_ctx];
+    let mut logits = vec![0.0; v];
+    let mut dlogits = vec![0.0; v];
+    // backward buffers, zeroed per row (accumulated within one row)
+    let mut dh2 = vec![0.0; td];
+    let mut dh1 = vec![0.0; td];
+    let mut dh0 = vec![0.0; td];
+    let mut dctx = vec![0.0; td];
+    let mut dq = vec![0.0; td];
+    let mut dk = vec![0.0; td];
+    let mut dv = vec![0.0; td];
+    let mut da = vec![0.0; td];
+    let mut dfo = vec![0.0; d];
+    let mut du = vec![0.0; f];
+    let mut dm_in = vec![0.0; d];
+
+    for row in 0..b {
+        let xs = &x[row * t_ctx..(row + 1) * t_ctx];
+        let ys = &y[row * t_ctx..(row + 1) * t_ctx];
+
+        // ---- forward ----
+        for t in 0..t_ctx {
+            let tok = xs[t] as usize;
+            for i in 0..d {
+                h0[t * d + i] = e[tok * d + i] + pos[t * d + i];
+            }
+            r1[t] = rms_fwd(&h0[t * d..(t + 1) * d], g1, &mut a[t * d..(t + 1) * d]);
+            matvec(wq, d, d, &a[t * d..(t + 1) * d], &mut q[t * d..(t + 1) * d]);
+            matvec(wk, d, d, &a[t * d..(t + 1) * d], &mut k[t * d..(t + 1) * d]);
+            matvec(wv, d, d, &a[t * d..(t + 1) * d], &mut vv[t * d..(t + 1) * d]);
+        }
+        ctx.fill(0.0);
+        for hh in 0..heads {
+            let off = hh * dh;
+            for t in 0..t_ctx {
+                let arow = &mut att[(hh * t_ctx + t) * t_ctx..(hh * t_ctx + t + 1) * t_ctx];
+                let mut max = f64::NEG_INFINITY;
+                for tp in 0..=t {
+                    let mut s = 0.0;
+                    for i in 0..dh {
+                        s += q[t * d + off + i] * k[tp * d + off + i];
+                    }
+                    arow[tp] = s * att_scale;
+                    max = max.max(arow[tp]);
+                }
+                let mut z = 0.0;
+                for tp in 0..=t {
+                    arow[tp] = (arow[tp] - max).exp();
+                    z += arow[tp];
+                }
+                for tp in 0..=t {
+                    arow[tp] /= z;
+                    for i in 0..dh {
+                        ctx[t * d + off + i] += arow[tp] * vv[tp * d + off + i];
+                    }
+                }
+                for item in arow.iter_mut().skip(t + 1) {
+                    *item = 0.0;
+                }
+            }
+        }
+        for t in 0..t_ctx {
+            matvec(wp, d, d, &ctx[t * d..(t + 1) * d], &mut o[t * d..(t + 1) * d]);
+            for i in 0..d {
+                h1[t * d + i] = h0[t * d + i] + o[t * d + i];
+            }
+            r2[t] = rms_fwd(&h1[t * d..(t + 1) * d], g2, &mut m_in[t * d..(t + 1) * d]);
+            matvec(wu, f, d, &m_in[t * d..(t + 1) * d], &mut u_pre[t * f..(t + 1) * f]);
+            for i in 0..f {
+                u[t * f + i] = u_pre[t * f + i].max(0.0);
+            }
+            // h2 = h1 + W_down u
+            let h2t = &mut h2[t * d..(t + 1) * d];
+            matvec(wd_, d, f, &u[t * f..(t + 1) * f], h2t);
+            for i in 0..d {
+                h2t[i] += h1[t * d + i];
+            }
+            r3[t] = rms_fwd(&h2[t * d..(t + 1) * d], g3, &mut fo[t * d..(t + 1) * d]);
+        }
+
+        // ---- backward ----
+        for buf in [
+            &mut dh2, &mut dh1, &mut dh0, &mut dctx, &mut dq, &mut dk, &mut dv, &mut da,
+        ] {
+            buf.fill(0.0);
+        }
+
+        for t in 0..t_ctx {
+            matvec(wh, v, d, &fo[t * d..(t + 1) * d], &mut logits);
+            loss += softmax_ce(&logits, ys[t] as usize, scale, &mut dlogits);
+            outer_acc(&mut grads[11], v, d, &dlogits, &fo[t * d..(t + 1) * d]);
+            dfo.fill(0.0);
+            matvec_t_acc(wh, v, d, &dlogits, &mut dfo);
+            rms_bwd(
+                &h2[t * d..(t + 1) * d],
+                g3,
+                r3[t],
+                &dfo,
+                &mut dh2[t * d..(t + 1) * d],
+                &mut grads[10],
+            );
+        }
+        for t in 0..t_ctx {
+            // h2 = h1 + W_down relu(W_up m_in)
+            let dh2t = &dh2[t * d..(t + 1) * d];
+            for i in 0..d {
+                dh1[t * d + i] += dh2t[i];
+            }
+            outer_acc(&mut grads[9], d, f, dh2t, &u[t * f..(t + 1) * f]);
+            du.fill(0.0);
+            matvec_t_acc(wd_, d, f, dh2t, &mut du);
+            for i in 0..f {
+                if u_pre[t * f + i] <= 0.0 {
+                    du[i] = 0.0;
+                }
+            }
+            outer_acc(&mut grads[8], f, d, &du, &m_in[t * d..(t + 1) * d]);
+            dm_in.fill(0.0);
+            matvec_t_acc(wu, f, d, &du, &mut dm_in);
+            rms_bwd(
+                &h1[t * d..(t + 1) * d],
+                g2,
+                r2[t],
+                &dm_in,
+                &mut dh1[t * d..(t + 1) * d],
+                &mut grads[7],
+            );
+        }
+        for t in 0..t_ctx {
+            // h1 = h0 + W_proj ctx
+            let dh1t = &dh1[t * d..(t + 1) * d];
+            for i in 0..d {
+                dh0[t * d + i] += dh1t[i];
+            }
+            outer_acc(&mut grads[6], d, d, dh1t, &ctx[t * d..(t + 1) * d]);
+            matvec_t_acc(wp, d, d, dh1t, &mut dctx[t * d..(t + 1) * d]);
+        }
+        for hh in 0..heads {
+            let off = hh * dh;
+            for t in 0..t_ctx {
+                let arow = &att[(hh * t_ctx + t) * t_ctx..(hh * t_ctx + t + 1) * t_ctx];
+                // d(att row) then softmax jacobian
+                let mut datt = vec![0.0; t + 1];
+                for (tp, dat) in datt.iter_mut().enumerate() {
+                    let mut s = 0.0;
+                    for i in 0..dh {
+                        s += dctx[t * d + off + i] * vv[tp * d + off + i];
+                    }
+                    *dat = s;
+                    for i in 0..dh {
+                        dv[tp * d + off + i] += arow[tp] * dctx[t * d + off + i];
+                    }
+                }
+                let dot: f64 = (0..=t).map(|tp| arow[tp] * datt[tp]).sum();
+                for (tp, dat) in datt.iter().enumerate() {
+                    let ds = arow[tp] * (dat - dot) * att_scale;
+                    for i in 0..dh {
+                        dq[t * d + off + i] += ds * k[tp * d + off + i];
+                        dk[tp * d + off + i] += ds * q[t * d + off + i];
+                    }
+                }
+            }
+        }
+        for t in 0..t_ctx {
+            let at = &a[t * d..(t + 1) * d];
+            outer_acc(&mut grads[3], d, d, &dq[t * d..(t + 1) * d], at);
+            outer_acc(&mut grads[4], d, d, &dk[t * d..(t + 1) * d], at);
+            outer_acc(&mut grads[5], d, d, &dv[t * d..(t + 1) * d], at);
+            let dat = &mut da[t * d..(t + 1) * d];
+            matvec_t_acc(wq, d, d, &dq[t * d..(t + 1) * d], dat);
+            matvec_t_acc(wk, d, d, &dk[t * d..(t + 1) * d], dat);
+            matvec_t_acc(wv, d, d, &dv[t * d..(t + 1) * d], dat);
+            rms_bwd(
+                &h0[t * d..(t + 1) * d],
+                g1,
+                r1[t],
+                &da[t * d..(t + 1) * d],
+                &mut dh0[t * d..(t + 1) * d],
+                &mut grads[2],
+            );
+        }
+        for t in 0..t_ctx {
+            let tok = xs[t] as usize;
+            for i in 0..d {
+                grads[0][tok * d + i] += dh0[t * d + i];
+                grads[1][t * d + i] += dh0[t * d + i];
+            }
+        }
+    }
+    loss * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn init_params(man: &Manifest, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        man.params
+            .iter()
+            .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
+            .collect()
+    }
+
+    fn batch(dims: &Dims, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let n = dims.batch * dims.ctx;
+        let mut draw = || (0..n).map(|_| rng.below(dims.vocab as u64) as i32).collect();
+        (draw(), draw())
+    }
+
+    #[test]
+    fn manifests_generate_and_validate() {
+        for model in MODELS {
+            let grad = artifact(&format!("{model}.grad")).unwrap();
+            assert_eq!(grad.manifest.kind, "grad_step");
+            assert!(grad.manifest_hash != 0);
+            for ruleset in RULESETS {
+                let train = artifact(&format!("{model}.train.{ruleset}")).unwrap();
+                assert_eq!(train.manifest.kind, "train_step");
+                assert_eq!(train.manifest.ruleset.as_deref(), Some(*ruleset));
+                // grad and train agree on params/batch, differ in hash
+                assert_eq!(train.manifest.n_params(), grad.manifest.n_params());
+                assert_ne!(train.manifest_hash, grad.manifest_hash);
+            }
+        }
+        assert!(artifact("mlp_tiny.nonsense").is_err());
+        assert!(artifact("no_such_model.grad").is_err());
+    }
+
+    #[test]
+    fn manifest_hash_is_stable() {
+        let a = artifact("gpt_micro.grad").unwrap();
+        let b = artifact("gpt_micro.grad").unwrap();
+        assert_eq!(a.manifest_hash, b.manifest_hash);
+    }
+
+    #[test]
+    fn slimadam_ruleset_saves_memory() {
+        let adam = artifact("gpt_micro.train.adam").unwrap();
+        let slim = artifact("gpt_micro.train.slimadam").unwrap();
+        let v_elems = |m: &Manifest| -> usize {
+            m.v_shapes
+                .as_ref()
+                .unwrap()
+                .iter()
+                .map(|s| s.iter().product::<usize>())
+                .sum()
+        };
+        let full = v_elems(&adam.manifest);
+        let reduced = v_elems(&slim.manifest);
+        assert_eq!(full, adam.manifest.total_param_elems());
+        assert!(
+            (reduced as f64) < 0.2 * full as f64,
+            "slimadam v_elems {reduced} vs adam {full}"
+        );
+    }
+
+    /// Central-difference gradient check for both model families: the
+    /// handwritten backward passes must match the loss surface.
+    #[test]
+    fn gradients_match_finite_differences() {
+        for model in MODELS {
+            let dims = dims_for(model).unwrap();
+            let man = grad_manifest(model).unwrap();
+            let params = init_params(&man, 11);
+            let (x, y) = batch(&dims, 12);
+            let (_, grads) = loss_and_grads(&dims, &params, &x, &y);
+            let mut rng = Rng::new(13);
+            let eps = 1e-3f32;
+            for (pi, p) in params.iter().enumerate() {
+                // probe a handful of coordinates per tensor
+                for _ in 0..4 {
+                    let j = rng.usize_below(p.numel());
+                    let mut plus = params.clone();
+                    plus[pi].data[j] += eps;
+                    let mut minus = params.clone();
+                    minus[pi].data[j] -= eps;
+                    let fd = (loss_only(&dims, &plus, &x, &y)
+                        - loss_only(&dims, &minus, &x, &y))
+                        / (2.0 * eps as f64);
+                    let an = grads[pi].data[j] as f64;
+                    assert!(
+                        (fd - an).abs() <= 1e-4 + 5e-2 * an.abs().max(fd.abs()),
+                        "{model} param {pi} ({}) elem {j}: fd {fd} vs analytic {an}",
+                        man.params[pi].name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_step_is_deterministic() {
+        let dims = dims_for("gpt_micro").unwrap();
+        let man = grad_manifest("gpt_micro").unwrap();
+        let params = init_params(&man, 3);
+        let (x, y) = batch(&dims, 4);
+        let (l1, g1) = loss_and_grads(&dims, &params, &x, &y);
+        let (l2, g2) = loss_and_grads(&dims, &params, &x, &y);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn executable_runs_grad_and_train() {
+        for model in MODELS {
+            let backend = NativeBackend::default();
+            let art = artifact(&format!("{model}.grad")).unwrap();
+            let exe = backend.compile(&art).unwrap();
+            let man = &art.manifest;
+            let dims = dims_for(model).unwrap();
+            let params = init_params(man, 5);
+            let (x, y) = batch(&dims, 6);
+            let mut inputs: Vec<Literal> = params
+                .iter()
+                .map(|t| tensor_to_literal(t).unwrap())
+                .collect();
+            inputs.push(
+                crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx]).unwrap(),
+            );
+            inputs.push(
+                crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx]).unwrap(),
+            );
+            let outs = exe.run(&inputs).unwrap();
+            assert_eq!(outs.len(), 1 + man.n_params());
+            let loss = crate::runtime::literal::scalar_value(&outs[0]).unwrap();
+            // random tokens: loss should start near ln(vocab)
+            assert!((loss as f64 - (dims.vocab as f64).ln()).abs() < 1.0, "{loss}");
+        }
+    }
+
+    #[test]
+    fn fused_train_step_decreases_loss() {
+        use crate::runtime::engine::TrainEngine;
+        let backend = NativeBackend::default();
+        let art = artifact("mlp_tiny.train.adam").unwrap();
+        let compiled = std::rc::Rc::new(art.compile(&backend).unwrap());
+        let mut eng = TrainEngine::with_compiled(compiled, "mitchell", 7).unwrap();
+        let dims = dims_for("mlp_tiny").unwrap();
+        let (x, y) = batch(&dims, 8);
+        let b = vec![
+            crate::runtime::engine::BatchData::I32(x),
+            crate::runtime::engine::BatchData::I32(y),
+        ];
+        let first = eng.step(&b, 3e-3).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            last = eng.step(&b, 3e-3).unwrap();
+        }
+        assert!(first.loss.is_finite() && last.grad_norm.is_finite());
+        assert!(
+            last.loss < first.loss,
+            "native fused step did not reduce loss: {} -> {}",
+            first.loss,
+            last.loss
+        );
+    }
+
+    #[test]
+    fn hlo_artifacts_rejected() {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("linear2_v64.grad.hlo.txt").exists() {
+            return;
+        }
+        let art = Artifact::load(dir, "linear2_v64.grad").unwrap();
+        let err = NativeBackend::default().compile(&art).unwrap_err();
+        assert!(format!("{err}").contains("builtin"), "{err}");
+    }
+}

@@ -1,0 +1,128 @@
+//! PJRT backend (cargo feature `pjrt`): compiles AOT-lowered HLO text on
+//! a `PjRtClient` — the `vendor/xla` path. With the offline stub crate,
+//! compilation errors helpfully; swapping in the real `xla_extension`
+//! bindings lights up artifact execution without coordinator changes
+//! (DESIGN.md §2, §11).
+//!
+//! Threading contract: the `xla` wrapper types are not `Send`, so each
+//! sweep worker owns its own `PjrtBackend` (a CPU client is cheap) — see
+//! `coordinator::exec_cache::thread_backend`.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::engine::Artifact;
+
+use super::{Backend, DeviceTag, Executable};
+
+/// Create the PJRT CPU client.
+pub fn cpu_client() -> Result<PjRtClient> {
+    PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))
+}
+
+/// The `vendor/xla` execution path, bound to one device.
+pub struct PjrtBackend {
+    client: Rc<PjRtClient>,
+    device: DeviceTag,
+}
+
+impl PjrtBackend {
+    /// Client for `device`. Only CPU clients exist until the real PJRT
+    /// bindings land — `backend_for` rejects non-CPU tags before this
+    /// constructor runs, so `device` is always a `cpu:N` here.
+    pub fn new(device: DeviceTag) -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            client: Rc::new(cpu_client()?),
+            device,
+        })
+    }
+
+    pub fn cpu() -> Result<PjrtBackend> {
+        Self::new(DeviceTag::Cpu(0))
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn device(&self) -> DeviceTag {
+        self.device
+    }
+
+    fn compile(&self, art: &Artifact) -> Result<Box<dyn Executable>> {
+        let Some(hlo_path) = art.hlo_path() else {
+            bail!(
+                "artifact {:?} has no HLO text (builtin native model) — the \
+                 pjrt backend compiles `make artifacts` output only; use \
+                 `--backend native`",
+                art.name
+            );
+        };
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {hlo_path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {hlo_path:?}: {e}"))?;
+        Ok(Box::new(PjrtExecutable {
+            exe,
+            name: art.manifest.model_name.clone(),
+        }))
+    }
+}
+
+/// A loaded PJRT executable. PJRT returns one tupled output buffer; `run`
+/// syncs it to the host and untuples (on the CPU client "device" memory
+/// is host memory, so this is a memcpy — see `runtime` module docs).
+struct PjrtExecutable {
+    exe: PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable for PjrtExecutable {
+    fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("syncing output: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling output: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_backend_constructs() {
+        let b = PjrtBackend::cpu().unwrap();
+        assert_eq!(b.name(), "pjrt");
+        assert_eq!(b.device(), DeviceTag::Cpu(0));
+    }
+
+    #[test]
+    fn builtin_artifact_rejected() {
+        // A native builtin artifact carries no HLO; the pjrt backend must
+        // refuse it with a pointer at --backend native.
+        let art = crate::runtime::backend::native::artifact("mlp_tiny.grad").unwrap();
+        let b = PjrtBackend::cpu().unwrap();
+        let err = b.compile(&art).unwrap_err();
+        assert!(format!("{err}").contains("native"), "{err}");
+    }
+}

@@ -1,32 +1,32 @@
-//! Execution engines over compiled PJRT executables.
+//! Execution engines over compiled executables.
 //!
 //! * [`GradEngine`] — split engine: the artifact computes
 //!   `(loss, grads...) = grad_step(params..., batch...)` and the Rust
 //!   [`crate::optim`] family applies the update. This is the analysis /
 //!   sweep path: optimizer rules change without re-lowering HLO.
 //! * [`TrainEngine`] — fused engine: the artifact is the whole
-//!   `train_step` (fwd + bwd + clip + Pallas fused update) and optimizer
-//!   state lives in PJRT literals that are fed straight back into the
-//!   next dispatch — the production hot path.
+//!   `train_step` (fwd + bwd + clip + fused update) and optimizer state
+//!   lives in literals that are fed straight back into the next dispatch —
+//!   the production hot path.
+//!
+//! Both engines are backend-agnostic (DESIGN.md §11): they consume a
+//! [`Compiled`], which wraps whatever [`super::backend::Executable`] the
+//! chosen [`super::backend::Backend`] produced — the PJRT path (feature
+//! `pjrt`) or the pure-Rust native interpreter.
 
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
-use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+use xla::Literal;
 
 use crate::tensor::Tensor;
 
+use super::backend::{Backend, Executable};
 use super::literal::{
     f32_literal, i32_literal, literal_to_tensor, scalar_f32, tensor_to_literal,
 };
 use super::manifest::Manifest;
-
-/// Create the PJRT CPU client. The `xla` wrapper types are not `Send`, so
-/// each worker thread creates its own client (cheap for CPU).
-pub fn cpu_client() -> Result<PjRtClient> {
-    PjRtClient::cpu().map_err(|e| anyhow!("creating PJRT CPU client: {e}"))
-}
 
 /// One batch input in host form.
 #[derive(Debug, Clone)]
@@ -35,12 +35,26 @@ pub enum BatchData {
     F32(Vec<f32>),
 }
 
-/// A loaded (not yet compiled) artifact: HLO text + manifest.
+/// Where an artifact's computation comes from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactSource {
+    /// AOT-lowered HLO text on disk (`make artifacts`) — compiled by the
+    /// PJRT backend.
+    HloText(PathBuf),
+    /// Builtin model known to the native interpreter
+    /// (`runtime::backend::native`) — no files needed.
+    Builtin,
+}
+
+/// A loaded (not yet compiled) artifact: manifest + computation source.
+#[derive(Clone)]
 pub struct Artifact {
+    /// Artifact name, e.g. `gpt_nano.grad` or `mlp_tiny.train.adam`.
+    pub name: String,
     pub manifest: Manifest,
-    pub hlo_path: PathBuf,
+    pub source: ArtifactSource,
     /// Stable digest of the manifest JSON bytes. Together with the
-    /// artifact name this keys the executable cache
+    /// artifact name, backend and device this keys the executable cache
     /// (`coordinator::exec_cache`): re-lowering an artifact changes its
     /// manifest, so stale compiled executables can never be reused.
     pub manifest_hash: u64,
@@ -54,7 +68,8 @@ impl Artifact {
         let man_path = dir.join(format!("{name}.manifest.json"));
         if !hlo_path.exists() {
             bail!(
-                "artifact {name:?} not found in {dir:?} — run `make artifacts`"
+                "artifact {name:?} not found in {dir:?} — run `make artifacts` \
+                 (or use `--backend native` for the builtin models)"
             );
         }
         let text = std::fs::read_to_string(&man_path)
@@ -63,39 +78,46 @@ impl Artifact {
         manifest.validate()?;
         let manifest_hash = crate::rng::stable_hash64(text.as_bytes());
         Ok(Artifact {
+            name: name.to_string(),
             manifest,
-            hlo_path,
+            source: ArtifactSource::HloText(hlo_path),
             manifest_hash,
         })
     }
 
-    /// Compile on the given client.
-    pub fn compile(&self, client: &PjRtClient) -> Result<Compiled> {
-        let proto = xla::HloModuleProto::from_text_file(
-            self.hlo_path
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {:?}: {e}", self.hlo_path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {:?}: {e}", self.hlo_path))?;
+    /// The on-disk HLO path, when this artifact has one.
+    pub fn hlo_path(&self) -> Option<&Path> {
+        match &self.source {
+            ArtifactSource::HloText(p) => Some(p),
+            ArtifactSource::Builtin => None,
+        }
+    }
+
+    /// Compile on the given backend.
+    pub fn compile(&self, backend: &dyn Backend) -> Result<Compiled> {
         Ok(Compiled {
-            exe,
+            exe: backend.compile(self)?,
             manifest: self.manifest.clone(),
         })
     }
 }
 
-/// A compiled executable plus its manifest.
+/// A compiled executable plus its manifest — the unit `GradEngine` /
+/// `TrainEngine` consume, independent of which backend produced it.
 pub struct Compiled {
-    exe: PjRtLoadedExecutable,
+    exe: Box<dyn Executable>,
     pub manifest: Manifest,
 }
 
 impl Compiled {
-    /// Execute and untuple the (single, tupled) output.
+    /// Wrap an already-built executable (backends construct through
+    /// [`Artifact::compile`]; this exists for tests and custom backends).
+    pub fn new(exe: Box<dyn Executable>, manifest: Manifest) -> Compiled {
+        Compiled { exe, manifest }
+    }
+
+    /// Execute one step: input literals in manifest order → output
+    /// literals in manifest order.
     pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         anyhow::ensure!(
             inputs.len() == self.manifest.n_inputs(),
@@ -103,14 +125,14 @@ impl Compiled {
             self.manifest.n_inputs(),
             inputs.len()
         );
-        let out = self
-            .exe
-            .execute::<Literal>(inputs)
-            .map_err(|e| anyhow!("executing {}: {e}", self.manifest.model_name))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("syncing output: {e}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untupling output: {e}"))
+        let outs = self.exe.run(inputs)?;
+        anyhow::ensure!(
+            outs.len() == self.manifest.outputs.len(),
+            "executable returned {} outputs, manifest names {}",
+            outs.len(),
+            self.manifest.outputs.len()
+        );
+        Ok(outs)
     }
 }
 
@@ -121,23 +143,23 @@ fn batch_to_literal(data: &BatchData, shape: &[usize]) -> Result<Literal> {
     }
 }
 
-/// Split engine: HLO computes loss+grads, Rust owns the optimizer.
+/// Split engine: the artifact computes loss+grads, Rust owns the optimizer.
 pub struct GradEngine {
     compiled: Compiled,
 }
 
 impl GradEngine {
-    pub fn new(dir: impl AsRef<Path>, model: &str, client: &PjRtClient) -> Result<GradEngine> {
-        let art = Artifact::load(dir, &format!("{model}.grad"))?;
-        Self::from_artifact(&art, client)
+    pub fn new(dir: impl AsRef<Path>, model: &str, backend: &dyn Backend) -> Result<GradEngine> {
+        let art = backend.load_artifact(dir.as_ref(), &format!("{model}.grad"))?;
+        Self::from_artifact(&art, backend)
     }
 
     /// Compile an already-loaded grad artifact (the executable cache's
     /// miss path — it loads the artifact itself to learn the cache key).
-    pub fn from_artifact(art: &Artifact, client: &PjRtClient) -> Result<GradEngine> {
+    pub fn from_artifact(art: &Artifact, backend: &dyn Backend) -> Result<GradEngine> {
         anyhow::ensure!(art.manifest.kind == "grad_step");
         Ok(GradEngine {
-            compiled: art.compile(client)?,
+            compiled: art.compile(backend)?,
         })
     }
 
@@ -169,8 +191,8 @@ impl GradEngine {
     }
 }
 
-/// Fused engine: one PJRT dispatch per training step; parameter and
-/// optimizer state stay in literals between steps.
+/// Fused engine: one dispatch per training step; parameter and optimizer
+/// state stay in literals between steps.
 ///
 /// The compiled executable is held behind `Rc` so sweeps can share one
 /// compilation across many engine instances on the same worker thread
@@ -198,13 +220,14 @@ impl TrainEngine {
         dir: impl AsRef<Path>,
         model: &str,
         ruleset: &str,
-        client: &PjRtClient,
+        backend: &dyn Backend,
         init_scheme: &str,
         seed: u64,
     ) -> Result<TrainEngine> {
-        let art = Artifact::load(dir, &format!("{model}.train.{ruleset}"))?;
+        let art =
+            backend.load_artifact(dir.as_ref(), &format!("{model}.train.{ruleset}"))?;
         anyhow::ensure!(art.manifest.kind == "train_step");
-        Self::with_compiled(Rc::new(art.compile(client)?), init_scheme, seed)
+        Self::with_compiled(Rc::new(art.compile(backend)?), init_scheme, seed)
     }
 
     /// Build an engine over an already-compiled (possibly cached, shared)
@@ -301,6 +324,7 @@ impl TrainEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::backend::{backend_for, BackendSpec};
 
     fn artifacts_dir() -> Option<PathBuf> {
         let p = PathBuf::from("artifacts");
@@ -323,8 +347,8 @@ mod tests {
     #[test]
     fn grad_engine_runs_linear2() {
         let Some(dir) = artifacts_dir() else { return };
-        let client = cpu_client().unwrap();
-        let eng = GradEngine::new(&dir, "linear2_v64", &client).unwrap();
+        let Ok(backend) = backend_for(&BackendSpec::pjrt()) else { return };
+        let eng = GradEngine::new(&dir, "linear2_v64", backend.as_ref()).unwrap();
         let man = eng.manifest();
         let mut rng = crate::rng::Rng::new(1);
         let params: Vec<Tensor> = man
@@ -354,9 +378,9 @@ mod tests {
         if !dir.join("gpt_nano.train.adam.hlo.txt").exists() {
             return;
         }
-        let client = cpu_client().unwrap();
+        let Ok(backend) = backend_for(&BackendSpec::pjrt()) else { return };
         let mut eng =
-            TrainEngine::new(&dir, "gpt_nano", "adam", &client, "mitchell", 3).unwrap();
+            TrainEngine::new(&dir, "gpt_nano", "adam", backend.as_ref(), "mitchell", 3).unwrap();
         let man = eng.manifest().clone();
         let mut rng = crate::rng::Rng::new(4);
         let batch: Vec<BatchData> = man

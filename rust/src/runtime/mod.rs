@@ -1,21 +1,29 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! (HLO text + JSON manifest), compiles them on the PJRT CPU client and
-//! exposes typed step functions to the training loop.
+//! Runtime layer: loads AOT artifacts (HLO text + JSON manifest, produced
+//! by `python/compile/aot.py`) or builtin native models, compiles them on
+//! a [`backend::Backend`] and exposes typed step functions to the
+//! training loop.
 //!
-//! Python never runs here — the artifacts are self-contained. HLO *text*
-//! is the interchange format because jax >= 0.5 serializes protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see DESIGN.md §7 and /opt/xla-example/README.md).
+//! Backends (DESIGN.md §11):
 //!
-//! Note on output structure: the mlir→XlaComputation conversion tuples the
-//! root, and PJRT 0.5.1 returns a single tuple buffer, so every step does
-//! one device→host literal sync + tuple decomposition. On the CPU PJRT
-//! backend "device" memory is host memory, so this is a memcpy, not a
-//! transfer; the perf pass (EXPERIMENTS.md §Perf) quantifies it.
+//! * `pjrt` (cargo feature `pjrt`, default) — the `vendor/xla` PJRT
+//!   path. HLO *text* is the interchange format because jax >= 0.5
+//!   serializes protos with 64-bit instruction ids that xla_extension
+//!   0.5.1 rejects; the text parser reassigns ids (DESIGN.md §7). The
+//!   mlir→XlaComputation conversion tuples the root, so every step does
+//!   one device→host literal sync + tuple decomposition (a memcpy on the
+//!   CPU client).
+//! * `native` (always available) — a pure-Rust interpreter of the
+//!   manifest's model family; trains end to end offline with no
+//!   artifacts (see [`backend::native`]).
+//!
+//! Python never runs here — artifacts are self-contained, and the native
+//! backend needs no files at all.
 
+pub mod backend;
 pub mod engine;
 pub mod literal;
 pub mod manifest;
 
+pub use backend::{Backend, BackendKind, BackendSpec, DeviceTag, Executable};
 pub use engine::{Artifact, GradEngine, TrainEngine};
 pub use manifest::{BatchInfo, KMode, Manifest, ParamInfo};

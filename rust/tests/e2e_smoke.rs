@@ -1,8 +1,11 @@
 //! End-to-end smoke tests: every model family trains a few steps through
-//! the full stack (artifact → PJRT → data pipeline → optimizer), and the
-//! core paper claims hold qualitatively even at smoke scale.
+//! the full stack (artifact → backend → data pipeline → optimizer), and
+//! the core paper claims hold qualitatively even at smoke scale. The
+//! artifact-backed tests self-skip without `make artifacts`; the
+//! native-backend tests run unconditionally (builtin models).
 
 use slimadam::coordinator::{run_config, DataSpec, EngineKind, TrainConfig};
+use slimadam::runtime::backend::BackendSpec;
 
 fn have_artifacts() -> bool {
     std::path::Path::new("artifacts/gpt_nano.grad.hlo.txt").exists()
@@ -98,6 +101,52 @@ fn fused_engine_smoke() {
     assert!(s.result.final_train_loss < s.result.losses[0].1 as f64);
 }
 
+/// The native-backend end-to-end smoke (CI `native-smoke` job runs the
+/// binary equivalent): a tiny MLP trained 50 steps offline with no
+/// artifacts must actually learn.
+#[test]
+fn native_mlp_trains_50_steps_loss_decreases() {
+    let mut cfg = TrainConfig::lm("mlp_tiny", "adam", 3e-3, 50);
+    cfg.backend = BackendSpec::native();
+    cfg.eval_batches = 2;
+    let s = run_config(&cfg).unwrap();
+    assert!(!s.result.diverged, "native mlp diverged");
+    let first = s.result.losses[0].1 as f64;
+    assert!(
+        s.result.final_train_loss < first - 0.1,
+        "native mlp did not learn: {first} -> {}",
+        s.result.final_train_loss
+    );
+    assert!(s.result.eval_loss.is_finite());
+}
+
+/// Every optimizer preset trains on the native transformer — the offline
+/// analogue of `every_optimizer_trains_gpt_nano`.
+#[test]
+fn every_optimizer_trains_native_gpt_micro() {
+    for opt in slimadam::optim::presets::ALL {
+        let mut cfg = TrainConfig::lm("gpt_micro", opt, 3e-4, 5);
+        cfg.backend = BackendSpec::native();
+        cfg.eval_batches = 0;
+        let s = run_config(&cfg).unwrap_or_else(|e| panic!("{opt}: {e:#}"));
+        assert!(
+            s.result.losses.iter().all(|(_, l)| l.is_finite()),
+            "{opt} produced non-finite loss on the native backend"
+        );
+    }
+}
+
+/// Native fused engine end to end through run_config.
+#[test]
+fn native_fused_engine_smoke() {
+    let mut cfg = TrainConfig::lm("gpt_micro", "slimadam", 1e-3, 12);
+    cfg.backend = BackendSpec::native();
+    cfg.engine = EngineKind::Fused("slimadam".into());
+    let s = run_config(&cfg).unwrap();
+    assert!(!s.result.diverged);
+    assert!(s.result.final_train_loss < s.result.losses[0].1 as f64);
+}
+
 #[test]
 fn finetune_warm_start_restores_low_loss() {
     if !have_artifacts() {
@@ -107,8 +156,13 @@ fn finetune_warm_start_restores_low_loss() {
     // first fine-tune loss must be near the pre-train final loss, far
     // below a fresh init's loss.
     let model = "linear2_v256";
-    let client = slimadam::runtime::engine::cpu_client().unwrap();
-    let engine = slimadam::runtime::engine::GradEngine::new("artifacts", model, &client).unwrap();
+    let Ok(backend) =
+        slimadam::runtime::backend::backend_for(&slimadam::runtime::backend::BackendSpec::pjrt())
+    else {
+        return;
+    };
+    let engine =
+        slimadam::runtime::engine::GradEngine::new("artifacts", model, backend.as_ref()).unwrap();
     let man = engine.manifest().clone();
     let base = TrainConfig::lm(model, "adam", 3e-3, 40);
     let mut rng = slimadam::rng::Rng::new(1);

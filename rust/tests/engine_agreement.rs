@@ -1,13 +1,19 @@
-//! Split-vs-fused engine agreement: the HLO fused train_step (Pallas
-//! fused-update kernel inlined at L2) and the split path (HLO grad_step +
-//! Rust AdamK) implement the same mathematics. Driving both with identical
-//! seeds, batches and schedules must produce matching loss trajectories —
-//! the strongest end-to-end consistency check across all three layers.
+//! Split-vs-fused engine agreement: the fused train_step (Pallas fused
+//! update inlined at L2 on the PJRT path; the interpreter's fused update
+//! on the native path) and the split path (grad_step + Rust AdamK)
+//! implement the same mathematics. Driving both with identical seeds,
+//! batches and schedules must produce matching loss trajectories — the
+//! strongest end-to-end consistency check across all three layers.
+//!
+//! The PJRT variants need `make artifacts` and self-skip without it; the
+//! native variants run unconditionally (builtin models, no files), so CI
+//! always exercises the full agreement property on at least one backend.
 
 use slimadam::data::DataSource;
 use slimadam::optim::adamk::AdamK;
 use slimadam::optim::{clip_global_norm, KMode, Optimizer};
-use slimadam::runtime::engine::{cpu_client, GradEngine, TrainEngine};
+use slimadam::runtime::backend::{backend_for, Backend, BackendSpec};
+use slimadam::runtime::engine::{GradEngine, TrainEngine};
 use slimadam::runtime::KMode as K;
 use slimadam::tensor::Tensor;
 
@@ -15,15 +21,19 @@ fn have(name: &str) -> bool {
     std::path::Path::new(&format!("artifacts/{name}.hlo.txt")).exists()
 }
 
-fn run_agreement(model: &str, ruleset: &str, modes_for: impl Fn(&slimadam::runtime::Manifest) -> Vec<KMode>) {
-    let client = cpu_client().unwrap();
+fn run_agreement(
+    backend: &dyn Backend,
+    model: &str,
+    ruleset: &str,
+    modes_for: impl Fn(&slimadam::runtime::Manifest) -> Vec<KMode>,
+) {
     let steps = 8;
     let lr = 1e-3f32;
     let seed = 42u64;
 
     // --- fused path ---
     let mut fused =
-        TrainEngine::new("artifacts", model, ruleset, &client, "mitchell", seed).unwrap();
+        TrainEngine::new("artifacts", model, ruleset, backend, "mitchell", seed).unwrap();
     let man = fused.manifest().clone();
     let hypers = man.hypers.unwrap();
     let mut data1 = slimadam::coordinator::make_data(
@@ -45,7 +55,7 @@ fn run_agreement(model: &str, ruleset: &str, modes_for: impl Fn(&slimadam::runti
     }
 
     // --- split path with the same init (same seed => same param draw) ---
-    let engine = GradEngine::new("artifacts", model, &client).unwrap();
+    let engine = GradEngine::new("artifacts", model, backend).unwrap();
     let gman = engine.manifest().clone();
     let mut rng = slimadam::rng::Rng::new(seed);
     let mut params: Vec<Tensor> = gman
@@ -53,7 +63,9 @@ fn run_agreement(model: &str, ruleset: &str, modes_for: impl Fn(&slimadam::runti
         .iter()
         .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
         .collect();
-    let modes = modes_for(&gman);
+    // modes_for sees the FUSED manifest (same params as the grad one), so
+    // callers can hand the authoritative baked k_modes to the split path.
+    let modes = modes_for(&man);
     let mut opt = AdamK::new("x", gman.params.clone(), modes, hypers);
     let mut split_losses = Vec::new();
     for (t, b) in batches.iter().enumerate() {
@@ -72,13 +84,20 @@ fn run_agreement(model: &str, ruleset: &str, modes_for: impl Fn(&slimadam::runti
     }
 }
 
+fn pjrt_backend() -> Option<std::rc::Rc<dyn Backend>> {
+    backend_for(&BackendSpec::pjrt()).ok()
+}
+
 #[test]
 fn adam_engines_agree() {
     if !have("gpt_nano.train.adam") {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    run_agreement("gpt_nano", "adam", |man| vec![K::None; man.n_params()]);
+    let Some(backend) = pjrt_backend() else { return };
+    run_agreement(backend.as_ref(), "gpt_nano", "adam", |man| {
+        vec![K::None; man.n_params()]
+    });
 }
 
 #[test]
@@ -87,7 +106,8 @@ fn slimadam_engines_agree() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    run_agreement("gpt_nano", "slimadam", |man| {
+    let Some(backend) = pjrt_backend() else { return };
+    run_agreement(backend.as_ref(), "gpt_nano", "slimadam", |man| {
         slimadam::rules::RuleSet::table3_default(man).modes_for(man)
     });
 }
@@ -98,11 +118,9 @@ fn adalayer_engines_agree() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    run_agreement("gpt_nano", "adalayer", |man| {
-        man.params
-            .iter()
-            .map(|_| K::Both)
-            .collect()
+    let Some(backend) = pjrt_backend() else { return };
+    run_agreement(backend.as_ref(), "gpt_nano", "adalayer", |man| {
+        man.params.iter().map(|_| K::Both).collect()
     });
 }
 
@@ -126,5 +144,87 @@ fn fused_manifest_k_modes_match_rust_rules() {
         let eb = slimadam::optim::adamk::effective_k(p, *b);
         let ee = slimadam::optim::adamk::effective_k(p, *e);
         assert_eq!(eb, ee, "{}", p.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native-backend agreement and determinism (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// Native split-vs-fused agreement for every builtin model × ruleset:
+/// the interpreter's fused update must match grad_step + Rust AdamK.
+#[test]
+fn native_engines_agree_all_models_and_rulesets() {
+    let backend = backend_for(&BackendSpec::native()).unwrap();
+    for &model in slimadam::runtime::backend::native::MODELS {
+        for &ruleset in slimadam::runtime::backend::native::RULESETS {
+            // The split path mirrors exactly the K modes the fused
+            // manifest baked — the authoritative encoding, so a change in
+            // native ruleset semantics can never silently desynchronize
+            // the two sides of this test.
+            run_agreement(backend.as_ref(), model, ruleset, |man| {
+                man.k_modes.clone().expect("fused manifest carries k_modes")
+            });
+        }
+    }
+}
+
+/// Native-vs-stub compile paths: the same artifact name resolves on both
+/// backends, and each backend rejects the other's artifact source — the
+/// native interpreter refuses HLO text, the (stubbed) PJRT backend
+/// refuses builtin manifests with a `--backend native` hint.
+#[test]
+fn native_vs_stub_compile_paths() {
+    let native = backend_for(&BackendSpec::native()).unwrap();
+    let art = slimadam::runtime::backend::native::artifact("gpt_micro.grad").unwrap();
+    // native compiles its builtin artifact
+    assert!(art.compile(native.as_ref()).is_ok());
+
+    #[cfg(feature = "pjrt")]
+    {
+        let pjrt = backend_for(&BackendSpec::pjrt()).unwrap();
+        // the pjrt backend must refuse a builtin (no-HLO) artifact
+        let err = art.compile(pjrt.as_ref()).unwrap_err();
+        assert!(format!("{err}").contains("native"), "{err}");
+        // and with the offline stub, compiling real HLO text errors with
+        // a stub pointer rather than succeeding silently
+        if have("linear2_v64.grad") {
+            let hlo = slimadam::runtime::Artifact::load("artifacts", "linear2_v64.grad")
+                .unwrap();
+            if let Err(e) = hlo.compile(pjrt.as_ref()) {
+                assert!(format!("{e}").contains("stub") || format!("{e}").contains("PJRT"));
+            }
+        }
+    }
+}
+
+/// Native-backend determinism: the same grid run with workers=1 and
+/// workers=4 must produce byte-identical `RunResult::fingerprint`s —
+/// worker count and scheduling order never leak into metrics.
+#[test]
+fn native_sweep_deterministic_across_worker_counts() {
+    use slimadam::coordinator::{SweepScheduler, TrainConfig};
+    let mut configs = Vec::new();
+    for (i, opt) in ["adam", "slimadam"].iter().enumerate() {
+        for j in 0..3 {
+            let mut cfg = TrainConfig::lm("mlp_tiny", opt, 1e-3 * (1.0 + j as f64), 12);
+            cfg.backend = BackendSpec::native();
+            cfg.seed = (i * 3 + j) as u64;
+            cfg.eval_batches = 2;
+            configs.push(cfg);
+        }
+    }
+    let serial = SweepScheduler::new(1).quiet().run(&configs).unwrap();
+    let parallel = SweepScheduler::new(4).quiet().run(&configs).unwrap();
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(
+            a.result.fingerprint(),
+            b.result.fingerprint(),
+            "workers=4 diverged from workers=1 for {}",
+            a.label
+        );
+        assert_eq!(a.result.losses, b.result.losses, "{}", a.label);
     }
 }

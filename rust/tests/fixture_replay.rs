@@ -8,7 +8,8 @@
 use slimadam::npy::read_npz;
 use slimadam::optim::{clip_global_norm, Hypers, KMode, Optimizer};
 use slimadam::optim::adamk::AdamK;
-use slimadam::runtime::engine::{cpu_client, BatchData, GradEngine};
+use slimadam::runtime::backend::{backend_for, BackendSpec};
+use slimadam::runtime::engine::{BatchData, GradEngine};
 use slimadam::tensor::Tensor;
 
 fn fixture_available(model: &str) -> bool {
@@ -38,8 +39,11 @@ fn replay(model: &str, rtol: f32) {
         .map(|v| v.as_f64().unwrap())
         .collect();
 
-    let client = cpu_client().unwrap();
-    let engine = GradEngine::new("artifacts", model, &client).unwrap();
+    let Ok(backend) = backend_for(&BackendSpec::pjrt()) else {
+        eprintln!("skipping: pjrt backend not compiled in");
+        return;
+    };
+    let engine = GradEngine::new("artifacts", model, backend.as_ref()).unwrap();
     let man = engine.manifest().clone();
 
     // initial params from the fixture npz (exact same floats as python)

@@ -1,0 +1,142 @@
+//! Acceptance test for the native backend (ISSUE 3): a *real* —
+//! non-synthetic — sweep of 8 grid points over adam/slimadam completes
+//! offline (no artifacts, no PJRT, no `SLIMADAM_SYNTH_RUNS`), resumes
+//! from a partial run store with zero re-execution, and the adam vs
+//! slimadam runs reproduce the reduced-V memory accounting in
+//! `optim::memory::report`.
+
+use slimadam::coordinator::{SweepScheduler, TrainConfig};
+use slimadam::runstore::{config_key, RunStore, StoreMeta, SCHEMA_VERSION};
+use slimadam::runtime::backend::BackendSpec;
+
+fn grid() -> Vec<TrainConfig> {
+    let mut configs = Vec::new();
+    for opt in ["adam", "slimadam"] {
+        for lr in [5e-4, 1e-3, 2e-3, 4e-3] {
+            let mut cfg = TrainConfig::lm("mlp_tiny", opt, lr, 20);
+            cfg.backend = BackendSpec::native();
+            cfg.eval_batches = 2;
+            configs.push(cfg);
+        }
+    }
+    configs
+}
+
+fn tmp_store(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("slimadam_native_sweep_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn native_sweep_resumes_with_zero_reexecution() {
+    assert!(!slimadam::coordinator::synthetic_runs_enabled());
+    let configs = grid();
+    assert_eq!(configs.len(), 8);
+
+    // Baseline: the full grid, fresh. Real training: losses recorded,
+    // memory reports attached, nothing restored.
+    let baseline = SweepScheduler::new(2).quiet().run(&configs).unwrap();
+    assert!(baseline.iter().all(|s| !s.restored()));
+    assert!(baseline
+        .iter()
+        .all(|s| !s.result.losses.is_empty() && s.result.final_train_loss.is_finite()));
+
+    // --- reduced-V memory accounting (optim::memory::report) ---
+    let adam_mem = baseline[0].memory.as_ref().unwrap();
+    let slim_mem = baseline[4].memory.as_ref().unwrap();
+    assert_eq!(
+        adam_mem.v_elems, adam_mem.param_elems,
+        "adam stores one second moment per parameter"
+    );
+    assert!(adam_mem.v_saving.abs() < 1e-12);
+    assert!(
+        slim_mem.v_elems < adam_mem.v_elems / 5,
+        "slimadam must store far fewer second moments: {} vs {}",
+        slim_mem.v_elems,
+        adam_mem.v_elems
+    );
+    assert!(slim_mem.v_saving > 0.9, "saving {}", slim_mem.v_saving);
+
+    // --- partial run, then resume: zero re-execution ---
+    let dir = tmp_store("resume");
+    let store = RunStore::open_with(
+        &dir,
+        &StoreMeta {
+            schema_version: SCHEMA_VERSION,
+            base_seed: 0,
+            backend: BackendSpec::native().key(),
+        },
+    )
+    .unwrap();
+    let partial = SweepScheduler::new(2)
+        .quiet()
+        .stream_to(store.primary())
+        .run(&configs[..5])
+        .unwrap();
+    assert_eq!(partial.len(), 5);
+
+    let resumed = SweepScheduler::new(2)
+        .quiet()
+        .resume_from(&store)
+        .unwrap()
+        .stream_to(store.primary())
+        .run(&configs)
+        .unwrap();
+    let restored = resumed.iter().filter(|s| s.restored()).count();
+    assert_eq!(restored, 5, "first resume must skip exactly the 5 stored jobs");
+
+    // every fingerprint — restored or freshly run — matches the fresh
+    // baseline: resume changed nothing about the metrics
+    for (a, b) in baseline.iter().zip(&resumed) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "{}", a.label);
+    }
+
+    // a second resume re-executes nothing at all
+    let store2 = RunStore::open(&dir).unwrap();
+    let again = SweepScheduler::new(2)
+        .quiet()
+        .resume_from(&store2)
+        .unwrap()
+        .run(&configs)
+        .unwrap();
+    assert_eq!(again.iter().filter(|s| s.restored()).count(), 8);
+
+    // the store indexed one row per distinct config key
+    let idx = store2.index().unwrap();
+    assert_eq!(idx.len(), 8);
+    for cfg in &configs {
+        assert!(idx.contains(config_key(cfg)));
+    }
+
+    // store manifest records backend + schema
+    let meta = store2.meta().unwrap();
+    assert_eq!(meta.schema_version, SCHEMA_VERSION);
+    assert_eq!(meta.backend, "native@cpu:0");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mixed-backend stores stay coherent: a native row can never be served
+/// for a pjrt config of otherwise-identical shape (config keys differ).
+#[test]
+fn resume_never_crosses_backends() {
+    let mut native = TrainConfig::lm("mlp_tiny", "adam", 1e-3, 10);
+    native.backend = BackendSpec::native();
+    let mut pjrt = native.clone();
+    pjrt.backend = BackendSpec::pjrt();
+    assert_ne!(config_key(&native), config_key(&pjrt));
+
+    let dir = tmp_store("crossback");
+    let store = RunStore::open(&dir).unwrap();
+    SweepScheduler::new(1)
+        .quiet()
+        .stream_to(store.primary())
+        .run(std::slice::from_ref(&native))
+        .unwrap();
+    let idx = store.index().unwrap();
+    assert!(idx.contains(config_key(&native)));
+    assert!(!idx.contains(config_key(&pjrt)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
