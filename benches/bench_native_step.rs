@@ -8,7 +8,7 @@ use slimadam::benchkit::Bencher;
 use slimadam::coordinator::{make_data, DataSpec};
 use slimadam::optim::adamk::AdamK;
 use slimadam::optim::{clip_global_norm, KMode, Optimizer};
-use slimadam::runtime::backend::{backend_for, native, BackendSpec};
+use slimadam::runtime::backend::{backend_for, native, Backend, BackendSpec};
 use slimadam::runtime::engine::{GradEngine, TrainEngine};
 use slimadam::tensor::Tensor;
 
@@ -73,5 +73,49 @@ fn main() {
                 },
             );
         }
+
+        // Batched lockstep dispatch (DESIGN.md §12): LANES fused jobs per
+        // run_batch call vs the same jobs stepped one at a time — the
+        // per-step half of the batched-vs-sequential comparison
+        // (bench_sweep.rs measures the whole sweep path).
+        const LANES: usize = 4;
+        let art = backend
+            .load_artifact(std::path::Path::new("artifacts"), &format!("{model}.train.adam"))
+            .expect("native train artifact");
+        let compiled = std::rc::Rc::new(art.compile(backend.as_ref()).expect("compile"));
+        let batches: Vec<_> = (0..LANES).map(|_| batch.clone()).collect();
+        let lrs = [1e-4f32; LANES];
+
+        let mut solo: Vec<TrainEngine> = (0..LANES)
+            .map(|i| {
+                TrainEngine::with_compiled(compiled.clone(), "mitchell", 50 + i as u64).unwrap()
+            })
+            .collect();
+        println!("== {model}: sequential vs batched fused dispatch ({LANES} jobs) ==");
+        b.bench_with_units(
+            &format!("native/{model}/fused_step_seq{LANES}"),
+            tokens * LANES as f64,
+            "tok",
+            || {
+                for (e, bt) in solo.iter_mut().zip(&batches) {
+                    e.step(bt, 1e-4).unwrap();
+                }
+            },
+        );
+
+        let mut stacked: Vec<TrainEngine> = (0..LANES)
+            .map(|i| {
+                TrainEngine::with_compiled(compiled.clone(), "mitchell", 50 + i as u64).unwrap()
+            })
+            .collect();
+        b.bench_with_units(
+            &format!("native/{model}/fused_step_batch{LANES}"),
+            tokens * LANES as f64,
+            "tok",
+            || {
+                let mut refs: Vec<&mut TrainEngine> = stacked.iter_mut().collect();
+                TrainEngine::step_many(&mut refs, &batches, &lrs).unwrap();
+            },
+        );
     }
 }

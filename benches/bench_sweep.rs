@@ -1,19 +1,74 @@
-//! Sweep-scheduler throughput: serial vs work-stealing parallel dispatch.
+//! Sweep-scheduler throughput: serial vs work-stealing parallel dispatch,
+//! and batched vs sequential in-worker dispatch (DESIGN.md §12).
 //!
 //! The acceptance bar for the parallel scheduler is ≥2x wall-clock
 //! speedup at 4 workers on compute-bound jobs; the synthetic section
 //! measures exactly that with SNR evaluations sized like a real probe.
-//! When artifacts exist, the second section times a real 8-point LR
-//! sweep serial-vs-parallel and prints the executable-cache counters
-//! (each distinct artifact must compile at most once per worker).
+//! The batched section runs the builtin-MLP native sweep unbatched vs
+//! `--batch`-style stacked dispatch on one worker (isolating the
+//! batching win from pool parallelism) and emits jobs/sec comparison
+//! JSON into `results/bench/` — the ISSUE 4 acceptance row (≥1.5x
+//! native jobs/sec at batch 4). When artifacts exist, the last section
+//! times a real 8-point LR sweep serial-vs-parallel and prints the
+//! executable-cache counters (each distinct artifact must compile at
+//! most once per worker).
 
-use slimadam::benchkit::bench_sweep;
+use slimadam::benchkit::{bench_batched, bench_sweep};
 use slimadam::coordinator::{exec_cache, SweepScheduler, TrainConfig};
+use slimadam::runtime::backend::BackendSpec;
 use slimadam::runtime::KMode;
 use slimadam::snr::snr_of_view;
 
+fn native_grid(steps: usize) -> Vec<TrainConfig> {
+    let mut configs = Vec::new();
+    for opt in ["adam", "slimadam"] {
+        for lr in [5e-4, 1e-3, 2e-3, 4e-3] {
+            let mut cfg = TrainConfig::lm("mlp_tiny", opt, lr, steps);
+            cfg.backend = BackendSpec::native();
+            cfg.eval_batches = 2;
+            configs.push(cfg);
+        }
+    }
+    configs
+}
+
 fn main() {
-    println!("== synthetic compute-bound sweep jobs (512x512 SNR probes) ==");
+    println!("== batched vs sequential native dispatch (mlp_tiny 8-job sweep, 1 worker) ==");
+    let fast = std::env::var("SLIMADAM_BENCH_FAST").is_ok();
+    let configs = native_grid(if fast { 30 } else { 120 });
+    // Per-thread executable caches can't be pre-warmed here — the pool
+    // spawns fresh worker threads per run() call, so every run pays the
+    // same (cheap: manifest generation + a dims check) native compile on
+    // its own thread regardless of batching. This untimed pass only warms
+    // process-level state (allocator, lazy init) so the timed sequential
+    // side, which runs first, isn't systematically colder.
+    SweepScheduler::new(1)
+        .quiet()
+        .run(&configs[..2])
+        .expect("warmup");
+    for batch in [2usize, 4, 8] {
+        bench_batched(
+            &format!("sweep_native_batch{batch}"),
+            configs.len(),
+            batch,
+            Some(std::path::Path::new("results/bench")),
+            || {
+                SweepScheduler::new(1)
+                    .quiet()
+                    .run(&configs)
+                    .expect("sequential native sweep");
+            },
+            || {
+                SweepScheduler::new(1)
+                    .quiet()
+                    .batch(batch)
+                    .run(&configs)
+                    .expect("batched native sweep");
+            },
+        );
+    }
+
+    println!("\n== synthetic compute-bound sweep jobs (512x512 SNR probes) ==");
     let data: Vec<f32> = (0..512 * 512)
         .map(|i| (i % 97) as f32 * 0.01 + 1.0)
         .collect();

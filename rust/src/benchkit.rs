@@ -198,15 +198,22 @@ impl SweepReport {
         self.serial_s / self.parallel_s.max(1e-12)
     }
 
+    /// Sweep throughput of the parallel run (the jobs/sec metric the
+    /// batched-dispatch perf table tracks; EXPERIMENTS.md §Perf).
+    pub fn jobs_per_sec(&self) -> f64 {
+        self.jobs as f64 / self.parallel_s.max(1e-12)
+    }
+
     pub fn print(&self) {
         println!(
-            "{:44} {} jobs: serial {:.3} s, {} workers {:.3} s  [{:.2}x]",
+            "{:44} {} jobs: serial {:.3} s, {} workers {:.3} s  [{:.2}x, {:.1} jobs/s]",
             self.name,
             self.jobs,
             self.serial_s,
             self.workers,
             self.parallel_s,
-            self.speedup()
+            self.speedup(),
+            self.jobs_per_sec()
         );
     }
 
@@ -218,9 +225,115 @@ impl SweepReport {
             .set("serial_s", self.serial_s)
             .set("parallel_s", self.parallel_s)
             .set("speedup", self.speedup())
+            .set("jobs_per_sec", self.jobs_per_sec())
             .set("unix_ms", now_ms());
         v
     }
+}
+
+/// Result of one batched-vs-sequential dispatch comparison
+/// (DESIGN.md §12): the same job set run unbatched and with
+/// `SweepScheduler::batch(n)`-style stacked dispatch, reported as
+/// jobs/sec. Emitted as JSONL into `results/bench/` like every other
+/// bench row, so EXPERIMENTS.md's perf table can diff runs.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub name: String,
+    pub jobs: usize,
+    /// Max jobs stacked per dispatch in the batched run.
+    pub batch: usize,
+    pub sequential_s: f64,
+    pub batched_s: f64,
+}
+
+impl BatchReport {
+    pub fn sequential_jobs_per_sec(&self) -> f64 {
+        self.jobs as f64 / self.sequential_s.max(1e-12)
+    }
+
+    pub fn batched_jobs_per_sec(&self) -> f64 {
+        self.jobs as f64 / self.batched_s.max(1e-12)
+    }
+
+    /// Throughput gain of batched over sequential dispatch.
+    pub fn speedup(&self) -> f64 {
+        self.sequential_s / self.batched_s.max(1e-12)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:44} {} jobs: sequential {:.3} s ({:.1} jobs/s), batch {} {:.3} s ({:.1} jobs/s)  [{:.2}x]",
+            self.name,
+            self.jobs,
+            self.sequential_s,
+            self.sequential_jobs_per_sec(),
+            self.batch,
+            self.batched_s,
+            self.batched_jobs_per_sec(),
+            self.speedup()
+        );
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", self.name.clone())
+            .set("jobs", self.jobs)
+            .set("batch", self.batch)
+            .set("sequential_s", self.sequential_s)
+            .set("batched_s", self.batched_s)
+            .set("sequential_jobs_per_sec", self.sequential_jobs_per_sec())
+            .set("batched_jobs_per_sec", self.batched_jobs_per_sec())
+            .set("speedup", self.speedup())
+            .set("unix_ms", now_ms());
+        v
+    }
+}
+
+/// Time a sequential run and a batched run of the same `jobs`-job
+/// workload once each (sweep-scale workloads are too coarse for
+/// repeated sampling) and report jobs/sec for both. `None` sink
+/// suppresses the JSONL row.
+pub fn bench_batched<S, B>(
+    name: &str,
+    jobs: usize,
+    batch: usize,
+    sink: Option<&std::path::Path>,
+    sequential: S,
+    batched: B,
+) -> BatchReport
+where
+    S: FnOnce(),
+    B: FnOnce(),
+{
+    let t0 = Instant::now();
+    sequential();
+    let sequential_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    batched();
+    let batched_s = t1.elapsed().as_secs_f64();
+
+    let report = BatchReport {
+        name: name.to_string(),
+        jobs,
+        batch,
+        sequential_s,
+        batched_s,
+    };
+    report.print();
+    if let Some(dir) = sink {
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.jsonl", sanitize(name)));
+        if let Ok(mut file) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            use std::io::Write;
+            let _ = writeln!(file, "{}", report.to_json().dump());
+        }
+    }
+    report
 }
 
 /// Wall-clock comparison for coarse job sets (sweep scheduling): run
@@ -369,6 +482,24 @@ mod tests {
     #[test]
     fn sanitize_names() {
         assert_eq!(sanitize("a b/c:d"), "a_b_c_d");
+    }
+
+    #[test]
+    fn bench_batched_reports_jobs_per_sec() {
+        let r = bench_batched(
+            "test_batched",
+            8,
+            4,
+            None,
+            || std::thread::sleep(Duration::from_millis(40)),
+            || std::thread::sleep(Duration::from_millis(20)),
+        );
+        assert_eq!(r.jobs, 8);
+        assert_eq!(r.batch, 4);
+        assert!(r.speedup() > 1.0, "speedup {:.2}", r.speedup());
+        assert!(r.batched_jobs_per_sec() > r.sequential_jobs_per_sec());
+        let json = r.to_json().dump();
+        assert!(json.contains("jobs_per_sec"), "{json}");
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Batch planner + batched group execution (DESIGN.md §12).
+//!
+//! The compile-once cache (§9) and the backend trait layer (§11) made
+//! *compilation* cheap; what remains on the sweep hot path is per-job
+//! dispatch. This module stacks same-artifact jobs into one backend call:
+//!
+//! * [`plan`] groups a worker queue's job indices by **feasibility key**
+//!   ([`group_key`]): the `(backend, device, artifact, manifest hash)`
+//!   executable identity the job compiles under, plus the schedule shape
+//!   (step count, warmup, accumulation, eval setup) the lockstep loop
+//!   needs to share. Groups never exceed the requested batch size, never
+//!   mix shard keys, and are a deterministic partition of the input
+//!   (property-tested in `rust/tests/properties.rs`).
+//! * [`run_group`] executes one planned group end to end: per-job data
+//!   streams, optimizer/engine state and schedules, stepped in lockstep
+//!   through `Executable::run_batch`. Per-job results are bit-identical
+//!   to [`run_config`] runs of the same configs — the differential suite
+//!   in `rust/tests/batched_agreement.rs` is the contract's proof.
+//!
+//! Configs that record SNR probes are planned as singleton groups and go
+//! through the sequential [`run_config`] path, which owns probing.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::optim::{memory, presets, Optimizer};
+use crate::runtime::backend::BackendKind;
+use crate::runtime::engine::{Artifact, TrainEngine};
+use crate::tensor::Tensor;
+use crate::train::{train_fused_batch, train_split_batch, Schedule, SplitJob};
+
+use super::{
+    exec_cache, make_data, run_config, synthetic_runs_enabled, EngineKind, RunSummary,
+    SweepScheduler, TrainConfig,
+};
+
+/// Feasibility key: two jobs may share one batched dispatch group iff
+/// their keys match. Extends the scheduler's shard key (backend, device,
+/// artifact) with the schedule shape the lockstep loop must share; the
+/// artifact's manifest hash is appended by [`plan`] (it needs an artifact
+/// lookup, memoized per distinct artifact).
+pub fn group_key(cfg: &TrainConfig) -> String {
+    let mut key = format!(
+        "{}|s{}w{}a{}e{}",
+        SweepScheduler::shard_key(cfg),
+        cfg.steps,
+        cfg.warmup,
+        cfg.accum,
+        cfg.eval_batches
+    );
+    if cfg.probe.is_some() {
+        // probed configs never batch (run_config owns SNR probing)
+        key.push_str("|probe");
+    }
+    key
+}
+
+/// Best-effort manifest hash for a config's artifact — the same digest
+/// that keys the executable cache, so a re-lowered artifact can never be
+/// grouped with jobs compiled against the old manifest. Missing artifacts
+/// hash to 0 (the jobs will fail identically at execution either way).
+fn artifact_hash(cfg: &TrainConfig, memo: &mut HashMap<String, u64>) -> u64 {
+    let name = SweepScheduler::artifact_key(cfg);
+    let memo_key = format!("{}|{name}", cfg.backend.key());
+    if let Some(&h) = memo.get(&memo_key) {
+        return h;
+    }
+    let h = match cfg.backend.kind {
+        BackendKind::Native => crate::runtime::backend::native::artifact(&name)
+            .map(|a| a.manifest_hash)
+            .unwrap_or(0),
+        BackendKind::Pjrt => Artifact::load("artifacts", &name)
+            .map(|a| a.manifest_hash)
+            .unwrap_or(0),
+    };
+    memo.insert(memo_key, h);
+    h
+}
+
+/// Partition `indices` (into `configs`) into dispatch groups: each group
+/// shares one feasibility key, holds at most `max_batch` jobs, and keeps
+/// first-seen order — so planning is deterministic and grouping never
+/// reorders, reseeds or rewrites a job's config.
+pub fn plan(configs: &[TrainConfig], indices: &[usize], max_batch: usize) -> Vec<Vec<usize>> {
+    let max = max_batch.max(1);
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut open: HashMap<String, usize> = HashMap::new();
+    let mut memo: HashMap<String, u64> = HashMap::new();
+    for &i in indices {
+        let cfg = &configs[i];
+        if max == 1 || cfg.probe.is_some() {
+            groups.push(vec![i]);
+            continue;
+        }
+        let key = format!("{}|m{:016x}", group_key(cfg), artifact_hash(cfg, &mut memo));
+        match open.get(&key) {
+            Some(&gi) if groups[gi].len() < max => groups[gi].push(i),
+            _ => {
+                open.insert(key, groups.len());
+                groups.push(vec![i]);
+            }
+        }
+    }
+    groups
+}
+
+/// Execute one planned group. Singleton groups (and synthetic-run mode)
+/// take the sequential [`run_config`] path; larger groups run the
+/// lockstep batched drivers. Summaries return in group order. Errors
+/// carry the failing job's label (sequential path) or the whole group's
+/// labels (batched paths, where the jobs fail or succeed together).
+pub fn run_group(configs: &[TrainConfig], idxs: &[usize]) -> Result<Vec<RunSummary>> {
+    if idxs.len() <= 1 || synthetic_runs_enabled() {
+        return idxs
+            .iter()
+            .map(|&i| {
+                run_config(&configs[i])
+                    .map_err(|e| anyhow!("{}: {e}", configs[i].label()))
+            })
+            .collect();
+    }
+    let first = &configs[idxs[0]];
+    for &i in idxs {
+        anyhow::ensure!(
+            group_key(&configs[i]) == group_key(first),
+            "batch group mixes incompatible configs: {} vs {}",
+            configs[i].label(),
+            first.label()
+        );
+    }
+    anyhow::ensure!(
+        first.probe.is_none(),
+        "batched groups cannot record SNR probes (the planner routes \
+         probed configs through run_config)"
+    );
+    let result = match &first.engine {
+        EngineKind::Split => run_split_group(configs, idxs),
+        EngineKind::Fused(ruleset) => run_fused_group(configs, idxs, ruleset),
+    };
+    result.map_err(|e| {
+        let labels: Vec<String> = idxs.iter().map(|&i| configs[i].label()).collect();
+        anyhow!("batched group [{}]: {e}", labels.join(", "))
+    })
+}
+
+/// Initial parameters for a split-engine config: the warm-start tensors
+/// when present, else the config's init scheme drawn from
+/// `seed.wrapping_add(17)`. The single implementation both
+/// [`run_config`]'s split arm and the batched drivers use — sharing it
+/// is what keeps batched and sequential initialization identical by
+/// construction.
+pub fn init_params(
+    man: &crate::runtime::Manifest,
+    cfg: &TrainConfig,
+) -> Vec<Tensor> {
+    if let Some(ws) = &cfg.warm_start {
+        return ws.as_ref().clone();
+    }
+    let mut rng = crate::rng::Rng::new(cfg.seed.wrapping_add(17));
+    man.params
+        .iter()
+        .map(|p| {
+            let init = if cfg.init == "default" {
+                &p.init_default
+            } else {
+                &p.init_mitchell
+            };
+            init.materialize(&p.shape, &mut rng)
+        })
+        .collect()
+}
+
+fn run_split_group(configs: &[TrainConfig], idxs: &[usize]) -> Result<Vec<RunSummary>> {
+    let first = &configs[idxs[0]];
+    let engine = exec_cache::grad_engine(&first.backend, "artifacts", &first.model)?;
+    let man = engine.manifest().clone();
+
+    let mut opts: Vec<Box<dyn Optimizer>> = Vec::with_capacity(idxs.len());
+    for &i in idxs {
+        let cfg = &configs[i];
+        let opt = if let Some(rules) = &cfg.ruleset {
+            Box::new(presets::build_slimadam(&man, rules, cfg.hypers)) as Box<dyn Optimizer>
+        } else {
+            presets::build(&cfg.optimizer, &man, cfg.hypers)?
+        };
+        opts.push(opt);
+    }
+
+    let results = {
+        let mut jobs: Vec<SplitJob<'_>> = Vec::with_capacity(idxs.len());
+        for (opt, &i) in opts.iter_mut().zip(idxs) {
+            let cfg = &configs[i];
+            jobs.push(SplitJob {
+                opt: opt.as_mut(),
+                params: init_params(&man, cfg),
+                data: make_data(&man, &cfg.data, cfg.seed)?,
+                schedule: Schedule::new(cfg.lr, cfg.warmup, cfg.steps),
+            });
+        }
+        train_split_batch(
+            &engine,
+            &mut jobs,
+            first.steps,
+            first.accum,
+            first.eval_batches,
+        )?
+    };
+
+    let mut out = Vec::with_capacity(idxs.len());
+    for ((&i, opt), result) in idxs.iter().zip(&opts).zip(results) {
+        let cfg = &configs[i];
+        let steps_per_s = result.losses.len() as f64 / result.wallclock_s.max(1e-9);
+        out.push(RunSummary {
+            label: cfg.label(),
+            model: cfg.model.clone(),
+            optimizer: opt.name().to_string(),
+            lr: cfg.lr,
+            memory: Some(memory::report(opt.as_ref(), man.total_param_elems())),
+            result,
+            snr: None,
+            steps_per_s,
+            stored_fingerprint: None,
+        });
+    }
+    Ok(out)
+}
+
+fn run_fused_group(
+    configs: &[TrainConfig],
+    idxs: &[usize],
+    ruleset: &str,
+) -> Result<Vec<RunSummary>> {
+    let first = &configs[idxs[0]];
+    let compiled = exec_cache::train_compiled(&first.backend, "artifacts", &first.model, ruleset)?;
+    let man = compiled.manifest.clone();
+
+    let mut engines = Vec::with_capacity(idxs.len());
+    let mut datas = Vec::with_capacity(idxs.len());
+    let mut schedules = Vec::with_capacity(idxs.len());
+    for &i in idxs {
+        let cfg = &configs[i];
+        let mut engine =
+            TrainEngine::with_compiled(compiled.clone(), &cfg.init, cfg.seed.wrapping_add(17))?;
+        if let Some(ws) = &cfg.warm_start {
+            engine.load_params(ws)?;
+        }
+        engines.push(engine);
+        datas.push(make_data(&man, &cfg.data, cfg.seed)?);
+        schedules.push(Schedule::new(cfg.lr, cfg.warmup, cfg.steps));
+    }
+    let results = train_fused_batch(&mut engines, &mut datas, &schedules, first.steps)?;
+
+    let mut out = Vec::with_capacity(idxs.len());
+    for (&i, result) in idxs.iter().zip(results) {
+        let cfg = &configs[i];
+        let steps_per_s = result.losses.len() as f64 / result.wallclock_s.max(1e-9);
+        out.push(RunSummary {
+            label: cfg.label(),
+            model: cfg.model.clone(),
+            optimizer: format!("fused:{ruleset}"),
+            lr: cfg.lr,
+            result,
+            snr: None,
+            memory: None,
+            steps_per_s,
+            stored_fingerprint: None,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::BackendSpec;
+    use crate::snr::ProbeSchedule;
+
+    fn native_cfg(opt: &str, lr: f64) -> TrainConfig {
+        let mut cfg = TrainConfig::lm("mlp_tiny", opt, lr, 10);
+        cfg.backend = BackendSpec::native();
+        cfg
+    }
+
+    #[test]
+    fn plan_groups_same_key_up_to_max() {
+        let configs: Vec<TrainConfig> =
+            (0..6).map(|i| native_cfg("adam", 1e-3 * (i + 1) as f64)).collect();
+        let indices: Vec<usize> = (0..6).collect();
+        let groups = plan(&configs, &indices, 4);
+        assert_eq!(groups, vec![vec![0, 1, 2, 3], vec![4, 5]]);
+        // max 1 → all singletons
+        let singles = plan(&configs, &indices, 1);
+        assert_eq!(singles.len(), 6);
+        assert!(singles.iter().all(|g| g.len() == 1));
+    }
+
+    #[test]
+    fn plan_never_mixes_shard_or_schedule_keys() {
+        let mut configs = vec![native_cfg("adam", 1e-3), native_cfg("adam", 2e-3)];
+        let mut other_steps = native_cfg("adam", 1e-3);
+        other_steps.steps = 99;
+        configs.push(other_steps);
+        let mut pjrt = TrainConfig::lm("mlp_tiny", "adam", 1e-3, 10);
+        pjrt.backend = BackendSpec::pjrt();
+        configs.push(pjrt);
+        let indices: Vec<usize> = (0..configs.len()).collect();
+        let groups = plan(&configs, &indices, 8);
+        assert_eq!(groups, vec![vec![0, 1], vec![2], vec![3]]);
+        for g in &groups {
+            let k0 = group_key(&configs[g[0]]);
+            assert!(g.iter().all(|&i| group_key(&configs[i]) == k0));
+        }
+    }
+
+    #[test]
+    fn plan_isolates_probed_configs() {
+        let mut probed = native_cfg("adam", 1e-3);
+        probed.probe = Some(ProbeSchedule::default());
+        let configs = vec![native_cfg("adam", 1e-3), probed, native_cfg("adam", 2e-3)];
+        // the probed config is always its own group; the compatible
+        // unprobed jobs around it still share one
+        let groups = plan(&configs, &[0, 1, 2], 8);
+        assert_eq!(groups, vec![vec![0, 2], vec![1]]);
+        let groups2 = plan(&configs, &[1, 0, 2], 8);
+        assert_eq!(groups2, vec![vec![1], vec![0, 2]]);
+    }
+
+    #[test]
+    fn group_key_separates_engines_and_eval_setup() {
+        let base = native_cfg("adam", 1e-3);
+        let mut fused = base.clone();
+        fused.engine = EngineKind::Fused("slimadam".into());
+        assert_ne!(group_key(&base), group_key(&fused));
+        let mut eval = base.clone();
+        eval.eval_batches = 99;
+        assert_ne!(group_key(&base), group_key(&eval));
+        let mut acc = base.clone();
+        acc.accum = 4;
+        assert_ne!(group_key(&base), group_key(&acc));
+        // lr and seed are per-job state, not feasibility
+        let mut lr = base.clone();
+        lr.lr = 9e-9;
+        lr.seed = 123;
+        assert_eq!(group_key(&base), group_key(&lr));
+    }
+
+    #[test]
+    fn run_group_rejects_mixed_groups() {
+        let a = native_cfg("adam", 1e-3);
+        let mut b = native_cfg("adam", 1e-3);
+        b.steps = 99;
+        let configs = vec![a, b];
+        let err = run_group(&configs, &[0, 1]).unwrap_err();
+        assert!(format!("{err}").contains("mixes"), "{err}");
+    }
+}

@@ -11,14 +11,19 @@
 //!   keyed by `(backend, device, artifact name, manifest hash)`
 //!   (DESIGN.md §11). Each worker owns its own backend instances (the
 //!   `xla` wrapper types are not `Send`).
+//! * [`batch`] — batched in-worker dispatch (DESIGN.md §12): plans
+//!   same-artifact jobs into dispatch groups and steps each group in
+//!   lockstep through one `Executable::run_batch` call per training
+//!   step, bit-identically to sequential execution.
 //! * [`scheduler`] / [`SweepScheduler`] — shards a config grid across
 //!   workers by `(backend, device, artifact)`, steals work across
-//!   shards, streams per-job JSONL rows as jobs finish, and guarantees
-//!   parallel == serial results job-for-job.
+//!   shards (whole groups when batching), streams per-job JSONL rows as
+//!   jobs finish, and guarantees parallel == serial results job-for-job.
 //!
 //! Everything the figure/table reproductions need funnels through
 //! [`run_config`] / [`run_grid`], so sweep results are directly comparable.
 
+pub mod batch;
 pub mod exec_cache;
 pub mod scheduler;
 
@@ -416,23 +421,9 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
             let man = engine.manifest().clone();
             let mut data = make_data(&man, &cfg.data, cfg.seed)?;
 
-            // init params
-            let mut rng = crate::rng::Rng::new(cfg.seed.wrapping_add(17));
-            let mut params: Vec<Tensor> = if let Some(ws) = &cfg.warm_start {
-                ws.as_ref().clone()
-            } else {
-                man.params
-                    .iter()
-                    .map(|p| {
-                        let init = if cfg.init == "default" {
-                            &p.init_default
-                        } else {
-                            &p.init_mitchell
-                        };
-                        init.materialize(&p.shape, &mut rng)
-                    })
-                    .collect()
-            };
+            // init params (shared with the batched drivers so sequential
+            // and batched initialization can never drift)
+            let mut params: Vec<Tensor> = batch::init_params(&man, cfg);
 
             let mut opt = if let Some(rules) = &cfg.ruleset {
                 Box::new(presets::build_slimadam(&man, rules, cfg.hypers))

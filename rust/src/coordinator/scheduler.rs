@@ -9,6 +9,11 @@
 //!   executable cache (`exec_cache`) compiles every distinct executable
 //!   once even in mixed backend/device pools; idle workers steal across
 //!   shards, so a one-artifact sweep still uses the whole pool.
+//! * **Batched dispatch** — with [`SweepScheduler::batch`], the batch
+//!   planner (`coordinator::batch`, DESIGN.md §12) stacks same-artifact
+//!   jobs into lockstep dispatch groups; the pool schedules and steals
+//!   whole groups, and per-job rows and fingerprints stay byte-identical
+//!   to unbatched runs (`rust/tests/batched_agreement.rs`).
 //! * **Streaming results** — with [`SweepScheduler::stream_to`], each job
 //!   appends one JSONL row the moment it finishes (tail -f friendly; a
 //!   crashed sweep keeps every completed row) instead of reporting at
@@ -29,18 +34,19 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::metrics::JsonlWriter;
 use crate::pool::{default_workers, parallel_map_sharded};
 use crate::rng::{job_seed, stable_hash64};
 use crate::runstore::{config_key, RunIndex, RunStore};
 
-use super::{run_config, EngineKind, RunSummary, TrainConfig};
+use super::{EngineKind, RunSummary, TrainConfig};
 
 /// Parallel sweep scheduler; build with [`SweepScheduler::new`], then
 /// chain [`stream_to`](SweepScheduler::stream_to) /
 /// [`resume_from`](SweepScheduler::resume_from) /
+/// [`batch`](SweepScheduler::batch) /
 /// [`quiet`](SweepScheduler::quiet) and call [`run`](SweepScheduler::run).
 #[derive(Debug, Default)]
 pub struct SweepScheduler {
@@ -48,6 +54,7 @@ pub struct SweepScheduler {
     stream: Option<PathBuf>,
     resume: Option<RunIndex>,
     quiet: bool,
+    batch: usize,
 }
 
 impl SweepScheduler {
@@ -58,7 +65,20 @@ impl SweepScheduler {
             stream: None,
             resume: None,
             quiet: false,
+            batch: 1,
         }
+    }
+
+    /// Stack up to `n` same-artifact jobs into one backend dispatch per
+    /// training step (DESIGN.md §12). Jobs are grouped by the batch
+    /// planner's feasibility key (`coordinator::batch`); the work units
+    /// the pool schedules — and idle workers steal — become whole
+    /// groups, so a stolen group keeps its one-dispatch property.
+    /// Results are bit-identical to `batch(1)`
+    /// (`rust/tests/batched_agreement.rs`). `n <= 1` means unbatched.
+    pub fn batch(mut self, n: usize) -> SweepScheduler {
+        self.batch = n.max(1);
+        self
     }
 
     /// Append one JSONL row per job to `path` as jobs finish. Rows carry
@@ -115,81 +135,117 @@ impl SweepScheduler {
     }
 
     /// Run every config; summaries return in input order. Worker count
-    /// never changes results (`rust/tests/scheduler_determinism.rs`),
-    /// and with resume active, neither does skipping: restored summaries
-    /// occupy their original grid slots.
+    /// and batch size never change results
+    /// (`rust/tests/scheduler_determinism.rs`,
+    /// `rust/tests/batched_agreement.rs`), and with resume active,
+    /// neither does skipping: restored summaries occupy their original
+    /// grid slots.
     pub fn run(&self, configs: &[TrainConfig]) -> Result<Vec<RunSummary>> {
         let total = configs.len();
+        let keys: Vec<u64> = configs.iter().map(config_key).collect();
+
+        // Restore already-completed jobs up front; only the remainder is
+        // planned into dispatch groups.
+        let mut slots: Vec<Option<RunSummary>> = (0..total).map(|_| None).collect();
+        let mut pending: Vec<usize> = Vec::with_capacity(total);
+        let mut skipped = 0usize;
+        for i in 0..total {
+            if let Some(index) = &self.resume {
+                if let Some(entry) = index.get(keys[i]) {
+                    // Already computed: restore from the store, write no
+                    // row (its row is what we restored from).
+                    slots[i] = Some(entry.to_summary());
+                    skipped += 1;
+                    continue;
+                }
+            }
+            pending.push(i);
+        }
+        if self.resume.is_some() && !self.quiet {
+            eprintln!("  resume: {skipped}/{total} jobs already in the run store");
+        }
+
+        // The pool's work units are dispatch groups: singletons when
+        // unbatched, planner output otherwise. Stealing moves whole
+        // groups, so a stolen group keeps its one-dispatch property.
+        let groups: Vec<Vec<usize>> = if self.batch <= 1 {
+            pending.iter().map(|&i| vec![i]).collect()
+        } else {
+            super::batch::plan(configs, &pending, self.batch)
+        };
         let workers = if self.workers == 0 {
-            default_workers(total)
+            default_workers(groups.len())
         } else {
             self.workers
         };
-        let keys: Vec<u64> = configs.iter().map(config_key).collect();
-        if let Some(index) = &self.resume {
-            let done = keys.iter().filter(|k| index.contains(**k)).count();
-            if !self.quiet {
-                eprintln!(
-                    "  resume: {done}/{total} jobs already in the run store"
-                );
-            }
-        }
+
         // Append, never truncate: a crashed sweep keeps every completed
         // row, which is what makes the streamed file resumable/diffable.
         let sink: Option<Mutex<JsonlWriter>> = match &self.stream {
             Some(path) => Some(Mutex::new(JsonlWriter::append(path)?)),
             None => None,
         };
-        let done = AtomicUsize::new(0);
-        let skipped = AtomicUsize::new(0);
-        let out = parallel_map_sharded(
-            configs,
+        let done = AtomicUsize::new(skipped);
+        let results = parallel_map_sharded(
+            &groups,
             workers,
-            |_, cfg| stable_hash64(Self::shard_key(cfg).as_bytes()),
-            |i, cfg| {
-                if let Some(index) = &self.resume {
-                    if let Some(entry) = index.get(keys[i]) {
-                        // Already computed: restore from the store, write
-                        // no row (its row is what we restored from).
-                        skipped.fetch_add(1, Ordering::Relaxed);
-                        done.fetch_add(1, Ordering::Relaxed);
-                        return Ok(entry.to_summary());
-                    }
-                }
-                let summary =
-                    run_config(cfg).map_err(|e| anyhow!("{}: {e}", cfg.label()))?;
-                let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+            |_, group| stable_hash64(Self::shard_key(&configs[group[0]]).as_bytes()),
+            |_, group| {
+                // run_group attaches the failing job's label (or the whole
+                // group's labels on a batched failure) to its errors.
+                let summaries = super::batch::run_group(configs, group)?;
                 if !self.quiet {
-                    eprintln!(
-                        "  [{n}/{total}] {:40} loss={:.4} eval={:.4}{}",
-                        summary.label,
-                        summary.result.final_train_loss,
-                        summary.result.eval_loss,
-                        if summary.result.diverged { "  DIVERGED" } else { "" }
-                    );
+                    for summary in &summaries {
+                        let n = done.fetch_add(1, Ordering::Relaxed) + 1;
+                        eprintln!(
+                            "  [{n}/{total}] {:40} loss={:.4} eval={:.4}{}",
+                            summary.label,
+                            summary.result.final_train_loss,
+                            summary.result.eval_loss,
+                            if summary.result.diverged { "  DIVERGED" } else { "" }
+                        );
+                    }
+                } else {
+                    done.fetch_add(group.len(), Ordering::Relaxed);
                 }
                 if let Some(writer) = &sink {
-                    let mut row = summary.to_json();
-                    row.set("job", i)
-                        .set("seed", format!("{:016x}", cfg.seed))
-                        .set("config_key", format!("{:016x}", keys[i]))
-                        .set(
-                            "fingerprint",
-                            format!("{:016x}", summary.result.fingerprint()),
-                        );
-                    writer.lock().unwrap().write(&row)?;
+                    // One lock acquisition per group: a group's rows land
+                    // contiguously, so concurrent workers interleave only
+                    // at row granularity — and the run index is append-
+                    // order-agnostic anyway (rust/tests/runstore_resume.rs
+                    // covers interleaved and torn-mid-batch orders).
+                    let mut writer = writer.lock().unwrap();
+                    for (&i, summary) in group.iter().zip(&summaries) {
+                        let cfg = &configs[i];
+                        let mut row = summary.to_json();
+                        row.set("job", i)
+                            .set("seed", format!("{:016x}", cfg.seed))
+                            .set("config_key", format!("{:016x}", keys[i]))
+                            .set(
+                                "fingerprint",
+                                format!("{:016x}", summary.result.fingerprint()),
+                            );
+                        writer.write(&row)?;
+                    }
                 }
-                Ok(summary)
+                Ok(summaries)
             },
         )?;
+        for (group, summaries) in groups.iter().zip(results) {
+            for (&i, summary) in group.iter().zip(summaries) {
+                slots[i] = Some(summary);
+            }
+        }
         if self.resume.is_some() && !self.quiet {
-            let skipped = skipped.load(Ordering::Relaxed);
             eprintln!(
                 "  sweep: ran {}, skipped {skipped}, total {total}",
                 total - skipped
             );
         }
-        Ok(out)
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every job produced a summary"))
+            .collect())
     }
 
     /// Like [`SweepScheduler::run`], but job `i` trains with the derived

@@ -24,8 +24,9 @@
 //! * The paper's system: [`optim`] (optimizer family), [`snr`] (Eq. 3/4),
 //!   [`rules`] (SNR → compression rules)
 //! * Workloads: [`data`] (corpora, images, BPE), [`train`] (loop driver),
-//!   [`coordinator`] (job orchestration, the parallel sweep scheduler and
-//!   its compile-once executable cache — DESIGN.md §9), [`sweep`] (grids),
+//!   [`coordinator`] (job orchestration, the parallel sweep scheduler,
+//!   its compile-once executable cache — DESIGN.md §9 — and the batched
+//!   in-worker dispatch planner — §12), [`sweep`] (grids),
 //!   [`runstore`] (crash-safe store of completed jobs + sweep resume —
 //!   DESIGN.md §10)
 //! * Reproduction: [`exp`] (one module per paper figure/table)

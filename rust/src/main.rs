@@ -215,6 +215,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("log grid 1e-4..1e-2, 4 pts"), is_flag: false },
                 OptSpec { name: "steps", help: "training steps per job", default: Some("100"), is_flag: false },
                 OptSpec { name: "workers", help: "worker threads (0 = one per core)", default: Some("0"), is_flag: false },
+                OptSpec { name: "batch", help: "stack up to N same-artifact jobs into one backend dispatch per step (results identical to --batch 1)", default: Some("1"), is_flag: false },
                 OptSpec { name: "stream", help: "append per-job JSONL rows to this path as jobs finish", default: None, is_flag: false },
                 OptSpec { name: "resume", help: "run store dir: skip jobs already completed there (streams new rows into it unless --stream overrides)", default: None, is_flag: false },
                 OptSpec { name: "csv", help: "write the finished sweep table to this CSV path", default: None, is_flag: false },
@@ -233,8 +234,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let opt_refs: Vec<&str> = opts.iter().map(|s| s.as_str()).collect();
     let lrs = args.f64_list("lrs", &log_grid(1e-4, 1e-2, 4))?;
     let workers = args.usize_or("workers", 0)?;
+    let batch = args.usize_or("batch", 1)?;
 
-    let mut scheduler = SweepScheduler::new(workers);
+    let mut scheduler = SweepScheduler::new(workers).batch(batch);
     if args.flag("quiet") {
         scheduler = scheduler.quiet();
     }
@@ -257,11 +259,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         scheduler = scheduler.stream_to(path);
     }
     println!(
-        "sweep: {} × {} optimizers × {} LRs, {} steps each",
+        "sweep: {} × {} optimizers × {} LRs, {} steps each{}",
         base.model,
         opts.len(),
         lrs.len(),
-        base.steps
+        base.steps,
+        if batch > 1 {
+            format!(", batched dispatch ≤{batch}")
+        } else {
+            String::new()
+        }
     );
     let sweep = if args.flag("seed-jobs") {
         LrSweep::run_seeded(&base, &opt_refs, &lrs, &scheduler, base.seed)

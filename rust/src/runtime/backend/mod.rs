@@ -174,6 +174,21 @@ impl fmt::Display for BackendSpec {
 /// architecture.
 pub trait Executable {
     fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>>;
+
+    /// Execute the same compiled step for several independent jobs in one
+    /// backend call (DESIGN.md §12). `jobs[b]` is job `b`'s full input
+    /// list in manifest order; the result is each job's output list in
+    /// the same order.
+    ///
+    /// Contract: `run_batch` must be **bit-for-bit equivalent** to
+    /// calling [`Executable::run`] once per job — batching is a dispatch
+    /// optimization, never a numerics change. The native backend
+    /// overrides this with a lane-stacked interpreter pass
+    /// (`rust/tests/batched_agreement.rs` proves the equivalence); this
+    /// default is the always-correct sequential fallback.
+    fn run_batch(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
+        jobs.iter().map(|inputs| self.run(inputs)).collect()
+    }
 }
 
 /// A compiler bound to one device: turns a loaded [`Artifact`] into an

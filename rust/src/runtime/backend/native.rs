@@ -495,6 +495,158 @@ impl NativeExecutable {
         }
         Ok(out)
     }
+
+    /// Read input slot `slot` of every job as f32 and stack lane-major:
+    /// element `j` of job `b` lands at `j * lanes + b`.
+    fn stack_slot(
+        &self,
+        jobs: &[Vec<Literal>],
+        slot: usize,
+        len: usize,
+        what: &str,
+    ) -> Result<Vec<f32>> {
+        let lanes = jobs.len();
+        let mut stacked = vec![0.0f32; len * lanes];
+        for (b, job) in jobs.iter().enumerate() {
+            let vals = job[slot]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("job {b} {what}: {e}"))?;
+            anyhow::ensure!(
+                vals.len() == len,
+                "job {b} {what} has {} elements, want {len}",
+                vals.len()
+            );
+            for (j, &x) in vals.iter().enumerate() {
+                stacked[j * lanes + b] = x;
+            }
+        }
+        Ok(stacked)
+    }
+
+    /// Batched `grad_step`: one lane-stacked forward/backward pass for
+    /// all jobs, per-job `(loss, grads...)` outputs.
+    fn run_grad_batch(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
+        let lanes = jobs.len();
+        let man = &self.manifest;
+        let n = man.n_params();
+        // f32 → f64 exactly as the scalar path (literal_to_tensor + f64s)
+        let mut params_l: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let stacked = self.stack_slot(jobs, i, man.params[i].numel(), "param")?;
+            params_l.push(stacked.iter().map(|&x| x as f64).collect());
+        }
+        let mut xs = Vec::with_capacity(lanes);
+        let mut ys = Vec::with_capacity(lanes);
+        for job in jobs {
+            xs.push(self.batch_tokens(&job[n], "x")?);
+            ys.push(self.batch_tokens(&job[n + 1], "y")?);
+        }
+        let (losses, grads_l) = loss_and_grads_l(&self.dims, &params_l, &xs, &ys, lanes);
+        let mut out = Vec::with_capacity(lanes);
+        for b in 0..lanes {
+            let mut job_out = Vec::with_capacity(1 + n);
+            job_out.push(scalar_f32(losses[b] as f32));
+            for (i, g) in grads_l.iter().enumerate() {
+                let data: Vec<f32> =
+                    g[b..].iter().step_by(lanes).map(|&x| x as f32).collect();
+                job_out.push(tensor_to_literal(&Tensor::from_vec(
+                    &man.params[i].shape,
+                    data,
+                ))?);
+            }
+            out.push(job_out);
+        }
+        Ok(out)
+    }
+
+    /// Batched `train_step`: lane-stacked forward/backward, per-lane
+    /// global-norm clip and per-lane fused reduced-V AdamW update (each
+    /// lane carries its own step index and learning rate).
+    fn run_train_batch(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
+        let lanes = jobs.len();
+        let man = &self.manifest;
+        let n = man.n_params();
+        let hypers = man.hypers.unwrap_or_default();
+        let k_modes = man
+            .k_modes
+            .as_ref()
+            .ok_or_else(|| anyhow!("native train_step manifest missing k_modes"))?;
+        let v_shapes = man
+            .v_shapes
+            .as_ref()
+            .ok_or_else(|| anyhow!("native train_step manifest missing v_shapes"))?;
+
+        let mut w_l: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut m_l: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut v_l: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for i in 0..n {
+            w_l.push(self.stack_slot(jobs, i, man.params[i].numel(), "param")?);
+        }
+        for i in 0..n {
+            m_l.push(self.stack_slot(jobs, n + i, man.params[i].numel(), "m")?);
+        }
+        for (i, vs) in v_shapes.iter().enumerate() {
+            v_l.push(self.stack_slot(jobs, 2 * n + i, vs.iter().product(), "v")?);
+        }
+        let mut xs = Vec::with_capacity(lanes);
+        let mut ys = Vec::with_capacity(lanes);
+        let mut ts = Vec::with_capacity(lanes);
+        let mut lrs = Vec::with_capacity(lanes);
+        for job in jobs {
+            xs.push(self.batch_tokens(&job[3 * n], "x")?);
+            ys.push(self.batch_tokens(&job[3 * n + 1], "y")?);
+            let step = crate::runtime::literal::scalar_value(&job[3 * n + 2])?;
+            ts.push(step.round().max(1.0) as usize);
+            lrs.push(crate::runtime::literal::scalar_value(&job[3 * n + 3])?);
+        }
+
+        let params_f64: Vec<Vec<f64>> = w_l
+            .iter()
+            .map(|s| s.iter().map(|&x| x as f64).collect())
+            .collect();
+        let (losses, grads_f64) =
+            loss_and_grads_l(&self.dims, &params_f64, &xs, &ys, lanes);
+        // f64 → f32 cast before clipping, exactly as the scalar path
+        let mut grads_l: Vec<Vec<f32>> = grads_f64
+            .iter()
+            .map(|g| g.iter().map(|&x| x as f32).collect())
+            .collect();
+        let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, lanes);
+        fused_update_l(
+            man, k_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &ts, &lrs,
+            lanes,
+        );
+
+        let unstack = |stacked: &[f32], b: usize| -> Vec<f32> {
+            stacked[b..].iter().step_by(lanes).copied().collect()
+        };
+        let mut out = Vec::with_capacity(lanes);
+        for b in 0..lanes {
+            let mut job_out = Vec::with_capacity(2 + 3 * n);
+            job_out.push(scalar_f32(losses[b] as f32));
+            job_out.push(scalar_f32(norms[b] as f32));
+            for (i, s) in w_l.iter().enumerate() {
+                job_out.push(tensor_to_literal(&Tensor::from_vec(
+                    &man.params[i].shape,
+                    unstack(s, b),
+                ))?);
+            }
+            for (i, s) in m_l.iter().enumerate() {
+                job_out.push(tensor_to_literal(&Tensor::from_vec(
+                    &man.params[i].shape,
+                    unstack(s, b),
+                ))?);
+            }
+            for (i, s) in v_l.iter().enumerate() {
+                job_out.push(tensor_to_literal(&Tensor::from_vec(
+                    &v_shapes[i],
+                    unstack(s, b),
+                ))?);
+            }
+            out.push(job_out);
+        }
+        Ok(out)
+    }
 }
 
 impl Executable for NativeExecutable {
@@ -502,6 +654,29 @@ impl Executable for NativeExecutable {
         match self.manifest.kind.as_str() {
             "grad_step" => self.run_grad(inputs),
             "train_step" => self.run_train(inputs),
+            k => bail!("native backend cannot execute manifest kind {k:?}"),
+        }
+    }
+
+    /// Lane-stacked batched dispatch (DESIGN.md §12): B jobs' tensors are
+    /// stacked along a trailing lane axis and one interpreter pass
+    /// advances all of them. Bit-for-bit identical to sequential `run`
+    /// calls — see the module's lane-kernel section for the argument.
+    fn run_batch(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
+        if jobs.len() <= 1 {
+            return jobs.iter().map(|inputs| self.run(inputs)).collect();
+        }
+        for (b, job) in jobs.iter().enumerate() {
+            anyhow::ensure!(
+                job.len() == self.manifest.n_inputs(),
+                "job {b}: expected {} inputs, got {}",
+                self.manifest.n_inputs(),
+                job.len()
+            );
+        }
+        match self.manifest.kind.as_str() {
+            "grad_step" => self.run_grad_batch(jobs),
+            "train_step" => self.run_train_batch(jobs),
             k => bail!("native backend cannot execute manifest kind {k:?}"),
         }
     }
@@ -974,6 +1149,671 @@ fn gpt_pass(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32], grads: &mut [V
     loss * scale
 }
 
+// ---------------------------------------------------------------------------
+// Lane-stacked batched interpreter (DESIGN.md §12)
+//
+// `run_batch` stacks B independent jobs along a trailing *lane* axis:
+// element `j` of job `b` lives at `j * lanes + b`, so the innermost loops
+// below walk unit-stride lane blocks the compiler can vectorize (B f64
+// accumulators per step instead of one). Every reduction keeps the scalar
+// interpreter's iteration order — sums run over the same non-lane index in
+// the same sequence, lanes merely add an independent dimension — so each
+// lane's floating-point operation sequence is exactly the scalar pass's,
+// and batched results are bit-for-bit identical to sequential `run` calls
+// (`run_batch_bit_identical_to_sequential` below and the scheduler-level
+// differential suite in `rust/tests/batched_agreement.rs`).
+// ---------------------------------------------------------------------------
+
+/// Lane matvec: `out[r] = W[r,:]·v` per lane (accumulation over `cols` in
+/// scalar order).
+fn matvec_l(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64], l: usize) {
+    for r in 0..rows {
+        let o = &mut out[r * l..(r + 1) * l];
+        o.fill(0.0);
+        for c in 0..cols {
+            let wv = &w[(r * cols + c) * l..(r * cols + c + 1) * l];
+            let vc = &v[c * l..(c + 1) * l];
+            for b in 0..l {
+                o[b] += wv[b] * vc[b];
+            }
+        }
+    }
+}
+
+/// Lane transpose matvec: `out[c] += W[:,c]·v` per lane (accumulation
+/// over `rows` in scalar order).
+fn matvec_t_acc_l(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64], l: usize) {
+    for r in 0..rows {
+        let vr = &v[r * l..(r + 1) * l];
+        for c in 0..cols {
+            let wv = &w[(r * cols + c) * l..(r * cols + c + 1) * l];
+            let o = &mut out[c * l..(c + 1) * l];
+            for b in 0..l {
+                o[b] += wv[b] * vr[b];
+            }
+        }
+    }
+}
+
+/// Lane outer-product accumulation: `dW[r,c] += dv[r] * u[c]` per lane.
+fn outer_acc_l(dw: &mut [f64], rows: usize, cols: usize, dv: &[f64], u: &[f64], l: usize) {
+    for r in 0..rows {
+        let d = &dv[r * l..(r + 1) * l];
+        for c in 0..cols {
+            let o = &mut dw[(r * cols + c) * l..(r * cols + c + 1) * l];
+            let uc = &u[c * l..(c + 1) * l];
+            for b in 0..l {
+                o[b] += d[b] * uc[b];
+            }
+        }
+    }
+}
+
+/// Lane softmax cross-entropy at one position (mirrors `softmax_ce`):
+/// per-lane label `ys[b]`, per-lane `-ln p[y]` added into `losses`.
+/// `maxs`/`zs` are caller-provided lane scratch.
+#[allow(clippy::too_many_arguments)]
+fn softmax_ce_l(
+    logits: &[f64],
+    ys: &[usize],
+    scale: f64,
+    dlogits: &mut [f64],
+    maxs: &mut [f64],
+    zs: &mut [f64],
+    losses: &mut [f64],
+    l: usize,
+) {
+    let v = logits.len() / l;
+    maxs.fill(f64::NEG_INFINITY);
+    for i in 0..v {
+        let li = &logits[i * l..(i + 1) * l];
+        for b in 0..l {
+            maxs[b] = maxs[b].max(li[b]);
+        }
+    }
+    zs.fill(0.0);
+    for i in 0..v {
+        let li = &logits[i * l..(i + 1) * l];
+        let di = &mut dlogits[i * l..(i + 1) * l];
+        for b in 0..l {
+            di[b] = (li[b] - maxs[b]).exp();
+            zs[b] += di[b];
+        }
+    }
+    for b in 0..l {
+        losses[b] += -(dlogits[ys[b] * l + b] / zs[b]).max(f64::MIN_POSITIVE).ln();
+    }
+    for i in 0..v {
+        let di = &mut dlogits[i * l..(i + 1) * l];
+        for b in 0..l {
+            di[b] = di[b] / zs[b] * scale;
+        }
+    }
+    for b in 0..l {
+        dlogits[ys[b] * l + b] -= scale;
+    }
+}
+
+/// Lane RMS-norm forward (mirrors `rms_fwd`); writes per-lane rms into
+/// `rs`.
+fn rms_fwd_l(x: &[f64], g: &[f64], out: &mut [f64], rs: &mut [f64], l: usize) {
+    let dim = x.len() / l;
+    let d = dim as f64;
+    rs.fill(0.0);
+    for i in 0..dim {
+        let xi = &x[i * l..(i + 1) * l];
+        for b in 0..l {
+            rs[b] += xi[b] * xi[b];
+        }
+    }
+    for b in 0..l {
+        rs[b] = (rs[b] / d + RMS_EPS).sqrt();
+    }
+    for i in 0..dim {
+        for b in 0..l {
+            out[i * l + b] = x[i * l + b] / rs[b] * g[i * l + b];
+        }
+    }
+}
+
+/// Lane RMS-norm backward (mirrors `rms_bwd`). `dots` is lane scratch.
+#[allow(clippy::too_many_arguments)]
+fn rms_bwd_l(
+    x: &[f64],
+    g: &[f64],
+    rs: &[f64],
+    dy: &[f64],
+    dx: &mut [f64],
+    dg: &mut [f64],
+    dots: &mut [f64],
+    l: usize,
+) {
+    let dim = x.len() / l;
+    let d = dim as f64;
+    dots.fill(0.0);
+    for i in 0..dim {
+        for b in 0..l {
+            let s = i * l + b;
+            dg[s] += dy[s] * x[s] / rs[b];
+            dots[b] += dy[s] * g[s] * x[s];
+        }
+    }
+    for b in 0..l {
+        dots[b] /= d * rs[b] * rs[b] * rs[b];
+    }
+    for i in 0..dim {
+        for b in 0..l {
+            let s = i * l + b;
+            dx[s] += dy[s] * g[s] / rs[b] - x[s] * dots[b];
+        }
+    }
+}
+
+/// Lane-stacked loss + gradients: per-lane losses (scaled like the
+/// scalar `loss_and_grads`) and lane-major f64 gradients.
+fn loss_and_grads_l(
+    dims: &Dims,
+    params_l: &[Vec<f64>],
+    xs: &[Vec<i32>],
+    ys: &[Vec<i32>],
+    lanes: usize,
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let mut grads: Vec<Vec<f64>> = params_l.iter().map(|p| vec![0.0; p.len()]).collect();
+    let losses = match dims.family {
+        Family::Mlp => mlp_pass_l(dims, params_l, xs, ys, &mut grads, lanes),
+        Family::Gpt => gpt_pass_l(dims, params_l, xs, ys, &mut grads, lanes),
+    };
+    (losses, grads)
+}
+
+/// Lane translation of `mlp_pass` — identical loop structure, every
+/// buffer carries a trailing lane axis, token gathers differ per lane.
+fn mlp_pass_l(
+    dims: &Dims,
+    params_l: &[Vec<f64>],
+    xs: &[Vec<i32>],
+    ys: &[Vec<i32>],
+    grads_l: &mut [Vec<f64>],
+    l: usize,
+) -> Vec<f64> {
+    let (v, d, h) = (dims.vocab, dims.d, dims.hidden);
+    let e = &params_l[0];
+    let wu = &params_l[1];
+    let wd = &params_l[2];
+    let wh = &params_l[3];
+    let n_tok = xs[0].len();
+    let scale = 1.0 / n_tok as f64;
+
+    let mut emb = vec![0.0; d * l];
+    let mut u_pre = vec![0.0; h * l];
+    let mut u = vec![0.0; h * l];
+    let mut z = vec![0.0; d * l];
+    let mut logits = vec![0.0; v * l];
+    let mut dlogits = vec![0.0; v * l];
+    let mut dz = vec![0.0; d * l];
+    let mut du = vec![0.0; h * l];
+    let mut de = vec![0.0; d * l];
+    let mut maxs = vec![0.0; l];
+    let mut zs = vec![0.0; l];
+    let mut losses = vec![0.0; l];
+    let mut ytok = vec![0usize; l];
+
+    for n in 0..n_tok {
+        for b in 0..l {
+            let tok = xs[b][n] as usize;
+            for i in 0..d {
+                emb[i * l + b] = e[(tok * d + i) * l + b];
+            }
+            ytok[b] = ys[b][n] as usize;
+        }
+        matvec_l(wu, h, d, &emb, &mut u_pre, l);
+        for j in 0..h * l {
+            u[j] = u_pre[j].max(0.0);
+        }
+        matvec_l(wd, d, h, &u, &mut z, l);
+        matvec_l(wh, v, d, &z, &mut logits, l);
+        softmax_ce_l(&logits, &ytok, scale, &mut dlogits, &mut maxs, &mut zs, &mut losses, l);
+
+        // backward
+        outer_acc_l(&mut grads_l[3], v, d, &dlogits, &z, l);
+        dz.fill(0.0);
+        matvec_t_acc_l(wh, v, d, &dlogits, &mut dz, l);
+        outer_acc_l(&mut grads_l[2], d, h, &dz, &u, l);
+        du.fill(0.0);
+        matvec_t_acc_l(wd, d, h, &dz, &mut du, l);
+        for j in 0..h * l {
+            if u_pre[j] <= 0.0 {
+                du[j] = 0.0;
+            }
+        }
+        outer_acc_l(&mut grads_l[1], h, d, &du, &emb, l);
+        de.fill(0.0);
+        matvec_t_acc_l(wu, h, d, &du, &mut de, l);
+        for b in 0..l {
+            let tok = xs[b][n] as usize;
+            for i in 0..d {
+                grads_l[0][(tok * d + i) * l + b] += de[i * l + b];
+            }
+        }
+    }
+    losses.iter().map(|&x| x * scale).collect()
+}
+
+/// Lane translation of `gpt_pass` — identical loop structure; attention
+/// rows, norms and residuals all carry the trailing lane axis.
+fn gpt_pass_l(
+    dims: &Dims,
+    params_l: &[Vec<f64>],
+    xs: &[Vec<i32>],
+    ys: &[Vec<i32>],
+    grads_l: &mut [Vec<f64>],
+    l: usize,
+) -> Vec<f64> {
+    let (v, d, f, heads, t_ctx, rows_b) =
+        (dims.vocab, dims.d, dims.hidden, dims.heads, dims.ctx, dims.batch);
+    let dh = d / heads;
+    let att_scale = 1.0 / (dh as f64).sqrt();
+    let (e, pos, g1, wq, wk, wv, wp, g2, wu, wd_, g3, wh) = (
+        &params_l[0], &params_l[1], &params_l[2], &params_l[3], &params_l[4],
+        &params_l[5], &params_l[6], &params_l[7], &params_l[8], &params_l[9],
+        &params_l[10], &params_l[11],
+    );
+    let scale = 1.0 / (rows_b * t_ctx) as f64;
+    let mut losses = vec![0.0; l];
+
+    let td = t_ctx * d;
+    let mut h0 = vec![0.0; td * l];
+    let mut a = vec![0.0; td * l];
+    let mut r1 = vec![0.0; t_ctx * l];
+    let mut q = vec![0.0; td * l];
+    let mut k = vec![0.0; td * l];
+    let mut vv = vec![0.0; td * l];
+    let mut att = vec![0.0; heads * t_ctx * t_ctx * l];
+    let mut ctx = vec![0.0; td * l];
+    let mut o = vec![0.0; td * l];
+    let mut h1 = vec![0.0; td * l];
+    let mut m_in = vec![0.0; td * l];
+    let mut r2 = vec![0.0; t_ctx * l];
+    let mut u_pre = vec![0.0; t_ctx * f * l];
+    let mut u = vec![0.0; t_ctx * f * l];
+    let mut h2 = vec![0.0; td * l];
+    let mut fo = vec![0.0; td * l];
+    let mut r3 = vec![0.0; t_ctx * l];
+    let mut logits = vec![0.0; v * l];
+    let mut dlogits = vec![0.0; v * l];
+    let mut dh2 = vec![0.0; td * l];
+    let mut dh1 = vec![0.0; td * l];
+    let mut dh0 = vec![0.0; td * l];
+    let mut dctx = vec![0.0; td * l];
+    let mut dq = vec![0.0; td * l];
+    let mut dk = vec![0.0; td * l];
+    let mut dv = vec![0.0; td * l];
+    let mut da = vec![0.0; td * l];
+    let mut dfo = vec![0.0; d * l];
+    let mut du = vec![0.0; f * l];
+    let mut dm_in = vec![0.0; d * l];
+    let mut datt = vec![0.0; t_ctx * l];
+    let mut ds_l = vec![0.0; l];
+    let mut maxs = vec![0.0; l];
+    let mut zs = vec![0.0; l];
+    let mut dots = vec![0.0; l];
+    let mut ytok = vec![0usize; l];
+
+    for row in 0..rows_b {
+        // ---- forward ----
+        for t in 0..t_ctx {
+            for b in 0..l {
+                let tok = xs[b][row * t_ctx + t] as usize;
+                for i in 0..d {
+                    h0[(t * d + i) * l + b] =
+                        e[(tok * d + i) * l + b] + pos[(t * d + i) * l + b];
+                }
+            }
+            let tr = t * d * l..(t + 1) * d * l;
+            rms_fwd_l(&h0[tr.clone()], g1, &mut a[tr.clone()], &mut r1[t * l..(t + 1) * l], l);
+            matvec_l(wq, d, d, &a[tr.clone()], &mut q[tr.clone()], l);
+            matvec_l(wk, d, d, &a[tr.clone()], &mut k[tr.clone()], l);
+            matvec_l(wv, d, d, &a[tr.clone()], &mut vv[tr.clone()], l);
+        }
+        ctx.fill(0.0);
+        for hh in 0..heads {
+            let off = hh * dh;
+            for t in 0..t_ctx {
+                let arow0 = (hh * t_ctx + t) * t_ctx * l;
+                maxs.fill(f64::NEG_INFINITY);
+                for tp in 0..=t {
+                    let sbuf = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                    sbuf.fill(0.0);
+                    for i in 0..dh {
+                        let qi = &q[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                        let ki = &k[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                        for b in 0..l {
+                            sbuf[b] += qi[b] * ki[b];
+                        }
+                    }
+                    for b in 0..l {
+                        sbuf[b] *= att_scale;
+                        maxs[b] = maxs[b].max(sbuf[b]);
+                    }
+                }
+                zs.fill(0.0);
+                for tp in 0..=t {
+                    let ab = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                    for b in 0..l {
+                        ab[b] = (ab[b] - maxs[b]).exp();
+                        zs[b] += ab[b];
+                    }
+                }
+                for tp in 0..=t {
+                    // normalize, then accumulate this tp's contribution to
+                    // ctx — the scalar pass's interleave, kept verbatim
+                    {
+                        let ab = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                        for b in 0..l {
+                            ab[b] /= zs[b];
+                        }
+                    }
+                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                    for i in 0..dh {
+                        let vvi = &vv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                        let ci = &mut ctx[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                        for b in 0..l {
+                            ci[b] += ab[b] * vvi[b];
+                        }
+                    }
+                }
+            }
+        }
+        for t in 0..t_ctx {
+            let tr = t * d * l..(t + 1) * d * l;
+            matvec_l(wp, d, d, &ctx[tr.clone()], &mut o[tr.clone()], l);
+            for j in tr.clone() {
+                h1[j] = h0[j] + o[j];
+            }
+            rms_fwd_l(&h1[tr.clone()], g2, &mut m_in[tr.clone()], &mut r2[t * l..(t + 1) * l], l);
+            let fr = t * f * l..(t + 1) * f * l;
+            matvec_l(wu, f, d, &m_in[tr.clone()], &mut u_pre[fr.clone()], l);
+            for j in fr.clone() {
+                u[j] = u_pre[j].max(0.0);
+            }
+            // h2 = h1 + W_down u
+            matvec_l(wd_, d, f, &u[fr], &mut h2[tr.clone()], l);
+            for j in tr.clone() {
+                h2[j] += h1[j];
+            }
+            rms_fwd_l(&h2[tr.clone()], g3, &mut fo[tr], &mut r3[t * l..(t + 1) * l], l);
+        }
+
+        // ---- backward ----
+        for buf in [
+            &mut dh2, &mut dh1, &mut dh0, &mut dctx, &mut dq, &mut dk, &mut dv, &mut da,
+        ] {
+            buf.fill(0.0);
+        }
+
+        for t in 0..t_ctx {
+            let tr = t * d * l..(t + 1) * d * l;
+            matvec_l(wh, v, d, &fo[tr.clone()], &mut logits, l);
+            for b in 0..l {
+                ytok[b] = ys[b][row * t_ctx + t] as usize;
+            }
+            softmax_ce_l(&logits, &ytok, scale, &mut dlogits, &mut maxs, &mut zs, &mut losses, l);
+            outer_acc_l(&mut grads_l[11], v, d, &dlogits, &fo[tr.clone()], l);
+            dfo.fill(0.0);
+            matvec_t_acc_l(wh, v, d, &dlogits, &mut dfo, l);
+            rms_bwd_l(
+                &h2[tr.clone()],
+                g3,
+                &r3[t * l..(t + 1) * l],
+                &dfo,
+                &mut dh2[tr],
+                &mut grads_l[10],
+                &mut dots,
+                l,
+            );
+        }
+        for t in 0..t_ctx {
+            // h2 = h1 + W_down relu(W_up m_in)
+            let tr = t * d * l..(t + 1) * d * l;
+            let fr = t * f * l..(t + 1) * f * l;
+            for j in tr.clone() {
+                dh1[j] += dh2[j];
+            }
+            outer_acc_l(&mut grads_l[9], d, f, &dh2[tr.clone()], &u[fr.clone()], l);
+            du.fill(0.0);
+            matvec_t_acc_l(wd_, d, f, &dh2[tr.clone()], &mut du, l);
+            for (j, x) in u_pre[fr].iter().enumerate() {
+                if *x <= 0.0 {
+                    du[j] = 0.0;
+                }
+            }
+            outer_acc_l(&mut grads_l[8], f, d, &du, &m_in[tr.clone()], l);
+            dm_in.fill(0.0);
+            matvec_t_acc_l(wu, f, d, &du, &mut dm_in, l);
+            rms_bwd_l(
+                &h1[tr.clone()],
+                g2,
+                &r2[t * l..(t + 1) * l],
+                &dm_in,
+                &mut dh1[tr],
+                &mut grads_l[7],
+                &mut dots,
+                l,
+            );
+        }
+        for t in 0..t_ctx {
+            // h1 = h0 + W_proj ctx
+            let tr = t * d * l..(t + 1) * d * l;
+            for j in tr.clone() {
+                dh0[j] += dh1[j];
+            }
+            outer_acc_l(&mut grads_l[6], d, d, &dh1[tr.clone()], &ctx[tr.clone()], l);
+            matvec_t_acc_l(wp, d, d, &dh1[tr.clone()], &mut dctx[tr], l);
+        }
+        for hh in 0..heads {
+            let off = hh * dh;
+            for t in 0..t_ctx {
+                let arow0 = (hh * t_ctx + t) * t_ctx * l;
+                for tp in 0..=t {
+                    let dat = &mut datt[tp * l..(tp + 1) * l];
+                    dat.fill(0.0);
+                    for i in 0..dh {
+                        let dci = &dctx[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                        let vvi = &vv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                        for b in 0..l {
+                            dat[b] += dci[b] * vvi[b];
+                        }
+                    }
+                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                    for i in 0..dh {
+                        let dci = &dctx[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                        let dvi = &mut dv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                        for b in 0..l {
+                            dvi[b] += ab[b] * dci[b];
+                        }
+                    }
+                }
+                dots.fill(0.0);
+                for tp in 0..=t {
+                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                    let dat = &datt[tp * l..(tp + 1) * l];
+                    for b in 0..l {
+                        dots[b] += ab[b] * dat[b];
+                    }
+                }
+                for tp in 0..=t {
+                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                    let dat = &datt[tp * l..(tp + 1) * l];
+                    for b in 0..l {
+                        ds_l[b] = ab[b] * (dat[b] - dots[b]) * att_scale;
+                    }
+                    for i in 0..dh {
+                        let ki = &k[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                        let qi = &q[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                        {
+                            let dqi = &mut dq[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                            for b in 0..l {
+                                dqi[b] += ds_l[b] * ki[b];
+                            }
+                        }
+                        let dki = &mut dk[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                        for b in 0..l {
+                            dki[b] += ds_l[b] * qi[b];
+                        }
+                    }
+                }
+            }
+        }
+        for t in 0..t_ctx {
+            let tr = t * d * l..(t + 1) * d * l;
+            outer_acc_l(&mut grads_l[3], d, d, &dq[tr.clone()], &a[tr.clone()], l);
+            outer_acc_l(&mut grads_l[4], d, d, &dk[tr.clone()], &a[tr.clone()], l);
+            outer_acc_l(&mut grads_l[5], d, d, &dv[tr.clone()], &a[tr.clone()], l);
+            matvec_t_acc_l(wq, d, d, &dq[tr.clone()], &mut da[tr.clone()], l);
+            matvec_t_acc_l(wk, d, d, &dk[tr.clone()], &mut da[tr.clone()], l);
+            matvec_t_acc_l(wv, d, d, &dv[tr.clone()], &mut da[tr.clone()], l);
+            rms_bwd_l(
+                &h0[tr.clone()],
+                g1,
+                &r1[t * l..(t + 1) * l],
+                &da[tr.clone()],
+                &mut dh0[tr],
+                &mut grads_l[2],
+                &mut dots,
+                l,
+            );
+        }
+        for t in 0..t_ctx {
+            for b in 0..l {
+                let tok = xs[b][row * t_ctx + t] as usize;
+                for i in 0..d {
+                    grads_l[0][(tok * d + i) * l + b] += dh0[(t * d + i) * l + b];
+                    grads_l[1][(t * d + i) * l + b] += dh0[(t * d + i) * l + b];
+                }
+            }
+        }
+    }
+    losses.iter().map(|&x| x * scale).collect()
+}
+
+/// Per-lane global-norm clip over lane-major f32 gradients (mirrors
+/// `optim::clip_global_norm`: squares accumulate in f64 over tensors and
+/// elements in scalar order). Returns each lane's pre-clip norm.
+fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Vec<f64> {
+    let mut sq = vec![0.0f64; l];
+    for g in grads.iter() {
+        let numel = g.len() / l;
+        for j in 0..numel {
+            let row = &g[j * l..(j + 1) * l];
+            for b in 0..l {
+                sq[b] += (row[b] as f64) * (row[b] as f64);
+            }
+        }
+    }
+    let norms: Vec<f64> = sq.iter().map(|s| s.sqrt()).collect();
+    for (b, &norm) in norms.iter().enumerate() {
+        if norm > max_norm && norm > 0.0 {
+            let scale = (max_norm / norm) as f32;
+            for g in grads.iter_mut() {
+                for x in g[b..].iter_mut().step_by(l) {
+                    *x *= scale;
+                }
+            }
+        }
+    }
+    norms
+}
+
+/// Per-lane fused reduced-V AdamW update over lane-major f32 state
+/// (mirrors `fused_update`; each lane carries its own step index and
+/// learning rate, so bias corrections are per lane).
+#[allow(clippy::too_many_arguments)]
+fn fused_update_l(
+    man: &Manifest,
+    k_modes: &[KMode],
+    h: &Hypers,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    ts: &[usize],
+    lrs: &[f32],
+    l: usize,
+) {
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    let eps = h.eps as f32;
+    let bc1: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b1.powi(t as i32))).collect();
+    let bc2: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b2.powi(t as i32))).collect();
+    for i in 0..w.len() {
+        let info = &man.params[i];
+        let k = crate::optim::adamk::effective_k(info, k_modes[i]);
+        let (rows, cols) = info.matrix_dims();
+        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+        let numel = info.numel();
+        let wi = &mut w[i];
+        let gi = &g[i];
+        let mi = &mut m[i];
+        let vi = &mut v[i];
+        if k == KMode::None {
+            for j in 0..numel {
+                for b in 0..l {
+                    let s = j * l + b;
+                    let gj = gi[s];
+                    mi[s] = b1 * mi[s] + (1.0 - b1) * gj;
+                    vi[s] = b2 * vi[s] + (1.0 - b2) * gj * gj;
+                    let mh = mi[s] * bc1[b];
+                    let vh = vi[s] * bc2[b];
+                    wi[s] -= lrs[b] * (mh / (vh.sqrt() + eps) + wd * wi[s]);
+                }
+            }
+            continue;
+        }
+        let group = |j: usize| -> usize {
+            match k {
+                KMode::None => j,
+                KMode::FanIn => j / cols,
+                KMode::FanOut => j % cols,
+                KMode::Both => 0,
+                KMode::Blocks(nb) => (j / cols) * nb / rows,
+            }
+        };
+        let gsize = match k {
+            KMode::None => 1.0,
+            KMode::FanIn => cols as f32,
+            KMode::FanOut => rows as f32,
+            KMode::Both => (rows * cols) as f32,
+            KMode::Blocks(nb) => ((rows / nb) * cols) as f32,
+        };
+        let vlen = vi.len() / l;
+        let mut sums = vec![0.0f32; vlen * l];
+        for j in 0..numel {
+            let gr = group(j) * l;
+            for b in 0..l {
+                let gj = gi[j * l + b];
+                sums[gr + b] += gj * gj;
+            }
+        }
+        for jv in 0..vlen {
+            for b in 0..l {
+                let s = jv * l + b;
+                vi[s] = b2 * vi[s] + (1.0 - b2) * (sums[s] / gsize);
+            }
+        }
+        for j in 0..numel {
+            let gr = group(j) * l;
+            for b in 0..l {
+                let s = j * l + b;
+                let gj = gi[s];
+                mi[s] = b1 * mi[s] + (1.0 - b1) * gj;
+                let mh = mi[s] * bc1[b];
+                let vh = vi[gr + b] * bc2[b];
+                wi[s] -= lrs[b] * (mh / (vh.sqrt() + eps) + wd * wi[s]);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1142,6 +1982,141 @@ mod tests {
             first.loss,
             last.loss
         );
+    }
+
+    /// The lane-stacked batched interpreter must be bit-for-bit identical
+    /// to sequential `run` calls — for both model families, both manifest
+    /// kinds and every ruleset, with per-lane step/lr scalars differing.
+    #[test]
+    fn run_batch_bit_identical_to_sequential() {
+        fn lit_bits(lit: &Literal) -> (Vec<i64>, Vec<u32>) {
+            let dims = lit.array_shape().unwrap().dims().to_vec();
+            let bits = lit
+                .to_vec::<f32>()
+                .unwrap()
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            (dims, bits)
+        }
+        fn assert_jobs_eq(seq: &[Vec<Literal>], bat: &[Vec<Literal>], what: &str) {
+            assert_eq!(seq.len(), bat.len(), "{what}");
+            for (b, (s, t)) in seq.iter().zip(bat).enumerate() {
+                assert_eq!(s.len(), t.len(), "{what} job {b}");
+                for (slot, (a, c)) in s.iter().zip(t).enumerate() {
+                    assert_eq!(lit_bits(a), lit_bits(c), "{what} job {b} output {slot}");
+                }
+            }
+        }
+
+        let backend = NativeBackend::default();
+        for model in MODELS {
+            let dims = dims_for(model).unwrap();
+
+            // grad_step
+            let art = artifact(&format!("{model}.grad")).unwrap();
+            let exe = backend.compile(&art).unwrap();
+            let man = art.manifest.clone();
+            let jobs: Vec<Vec<Literal>> = (0..3)
+                .map(|jj| {
+                    let params = init_params(&man, 100 + jj as u64);
+                    let (x, y) = batch(&dims, 200 + jj as u64);
+                    let mut inputs: Vec<Literal> = params
+                        .iter()
+                        .map(|t| tensor_to_literal(t).unwrap())
+                        .collect();
+                    inputs.push(
+                        crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx])
+                            .unwrap(),
+                    );
+                    inputs.push(
+                        crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx])
+                            .unwrap(),
+                    );
+                    inputs
+                })
+                .collect();
+            let seq: Vec<Vec<Literal>> = jobs.iter().map(|j| exe.run(j).unwrap()).collect();
+            let bat = exe.run_batch(&jobs).unwrap();
+            assert_jobs_eq(&seq, &bat, &format!("{model}.grad"));
+
+            // train_step × every ruleset, lanes at different t / lr and
+            // non-zero moments so per-lane bias corrections matter
+            for ruleset in RULESETS {
+                let art = artifact(&format!("{model}.train.{ruleset}")).unwrap();
+                let exe = backend.compile(&art).unwrap();
+                let man = art.manifest.clone();
+                let v_shapes = man.v_shapes.clone().unwrap();
+                let jobs: Vec<Vec<Literal>> = (0..3)
+                    .map(|jj| {
+                        let mut rng = Rng::new(300 + jj as u64);
+                        let mut inputs: Vec<Literal> = Vec::new();
+                        for p in &man.params {
+                            inputs.push(
+                                tensor_to_literal(
+                                    &p.init_mitchell.materialize(&p.shape, &mut rng),
+                                )
+                                .unwrap(),
+                            );
+                        }
+                        for p in &man.params {
+                            inputs.push(
+                                tensor_to_literal(&Tensor::full(
+                                    &p.shape,
+                                    0.01 * (jj + 1) as f32,
+                                ))
+                                .unwrap(),
+                            );
+                        }
+                        for vs in &v_shapes {
+                            inputs.push(
+                                tensor_to_literal(&Tensor::full(vs, 0.002 * (jj + 1) as f32))
+                                    .unwrap(),
+                            );
+                        }
+                        let (x, y) = batch(&dims, 400 + jj as u64);
+                        inputs.push(
+                            crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx])
+                                .unwrap(),
+                        );
+                        inputs.push(
+                            crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx])
+                                .unwrap(),
+                        );
+                        inputs.push(scalar_f32((jj + 1) as f32));
+                        inputs.push(scalar_f32(1e-3 * (jj + 1) as f32));
+                        inputs
+                    })
+                    .collect();
+                let seq: Vec<Vec<Literal>> =
+                    jobs.iter().map(|j| exe.run(j).unwrap()).collect();
+                let bat = exe.run_batch(&jobs).unwrap();
+                assert_jobs_eq(&seq, &bat, &format!("{model}.train.{ruleset}"));
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_single_job_delegates_to_run() {
+        let backend = NativeBackend::default();
+        let art = artifact("mlp_tiny.grad").unwrap();
+        let exe = backend.compile(&art).unwrap();
+        let man = art.manifest.clone();
+        let dims = dims_for("mlp_tiny").unwrap();
+        let params = init_params(&man, 9);
+        let (x, y) = batch(&dims, 10);
+        let mut inputs: Vec<Literal> = params
+            .iter()
+            .map(|t| tensor_to_literal(t).unwrap())
+            .collect();
+        inputs.push(crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx]).unwrap());
+        inputs.push(crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx]).unwrap());
+        let seq = exe.run(&inputs).unwrap();
+        let bat = exe.run_batch(std::slice::from_ref(&inputs)).unwrap();
+        assert_eq!(bat.len(), 1);
+        let loss_a = crate::runtime::literal::scalar_value(&seq[0]).unwrap();
+        let loss_b = crate::runtime::literal::scalar_value(&bat[0][0]).unwrap();
+        assert_eq!(loss_a.to_bits(), loss_b.to_bits());
     }
 
     #[test]

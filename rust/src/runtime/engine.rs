@@ -134,6 +134,37 @@ impl Compiled {
         );
         Ok(outs)
     }
+
+    /// Execute one step for several independent jobs in one backend call
+    /// (DESIGN.md §12). Each job's inputs/outputs follow the same
+    /// manifest-order contract as [`Compiled::run`]; results are
+    /// bit-identical to running the jobs one at a time.
+    pub fn run_batch(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
+        for (b, inputs) in jobs.iter().enumerate() {
+            anyhow::ensure!(
+                inputs.len() == self.manifest.n_inputs(),
+                "job {b}: expected {} inputs, got {}",
+                self.manifest.n_inputs(),
+                inputs.len()
+            );
+        }
+        let outs = self.exe.run_batch(jobs)?;
+        anyhow::ensure!(
+            outs.len() == jobs.len(),
+            "executable returned {} job results for {} jobs",
+            outs.len(),
+            jobs.len()
+        );
+        for (b, out) in outs.iter().enumerate() {
+            anyhow::ensure!(
+                out.len() == self.manifest.outputs.len(),
+                "job {b}: executable returned {} outputs, manifest names {}",
+                out.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
 }
 
 fn batch_to_literal(data: &BatchData, shape: &[usize]) -> Result<Literal> {
@@ -188,6 +219,43 @@ impl GradEngine {
             .collect::<Result<Vec<_>>>()
             .context("converting grads")?;
         Ok((loss, grads))
+    }
+
+    /// Gradient evaluations for several independent jobs in one backend
+    /// call (DESIGN.md §12): `jobs[b]` is job `b`'s `(params, batch)`
+    /// pair, assembled exactly as [`GradEngine::step`] would, and the
+    /// per-job `(loss, grads)` results are bit-identical to calling
+    /// `step` once per job.
+    pub fn step_batch(
+        &self,
+        jobs: &[(&[Tensor], &[BatchData])],
+    ) -> Result<Vec<(f32, Vec<Tensor>)>> {
+        let man = &self.compiled.manifest;
+        let mut all: Vec<Vec<Literal>> = Vec::with_capacity(jobs.len());
+        for (params, batch) in jobs {
+            anyhow::ensure!(params.len() == man.n_params(), "param count");
+            anyhow::ensure!(batch.len() == man.batch.len(), "batch count");
+            let mut inputs = Vec::with_capacity(man.n_inputs());
+            for t in *params {
+                inputs.push(tensor_to_literal(t)?);
+            }
+            for (b, info) in batch.iter().zip(&man.batch) {
+                inputs.push(batch_to_literal(b, &info.shape)?);
+            }
+            all.push(inputs);
+        }
+        let outs = self.compiled.run_batch(&all)?;
+        outs.into_iter()
+            .map(|out| {
+                let loss = super::literal::scalar_value(&out[0])?;
+                let grads = out[1..]
+                    .iter()
+                    .map(literal_to_tensor)
+                    .collect::<Result<Vec<_>>>()
+                    .context("converting grads")?;
+                Ok((loss, grads))
+            })
+            .collect()
     }
 }
 
@@ -303,6 +371,84 @@ impl TrainEngine {
         // next step's state without any host conversion.
         self.state = outs.drain(2..2 + 3 * n).collect();
         Ok(StepStats { loss, grad_norm })
+    }
+
+    /// One fused training step for several engines sharing one compiled
+    /// executable, dispatched as a single backend call (DESIGN.md §12).
+    ///
+    /// Every engine must wrap the *same* `Rc<Compiled>` (the executable
+    /// cache hands sweeps exactly that); each engine's inputs are
+    /// assembled precisely as [`TrainEngine::step`] would assemble them,
+    /// so per-job results and post-step state are bit-identical to
+    /// stepping the engines one at a time.
+    ///
+    /// Error semantics: bad caller inputs (batch shape mismatches) are
+    /// rejected before any engine is touched. If the backend call itself
+    /// fails, every engine's state has already moved into the dispatch —
+    /// as with a failed [`TrainEngine::step`], the engines are unusable
+    /// and the whole group must be abandoned (the batched train drivers
+    /// do exactly that by propagating the error).
+    pub fn step_many(
+        engines: &mut [&mut TrainEngine],
+        batches: &[Vec<BatchData>],
+        lrs: &[f32],
+    ) -> Result<Vec<StepStats>> {
+        anyhow::ensure!(!engines.is_empty(), "step_many needs at least one engine");
+        anyhow::ensure!(
+            engines.len() == batches.len() && engines.len() == lrs.len(),
+            "step_many: {} engines, {} batches, {} lrs",
+            engines.len(),
+            batches.len(),
+            lrs.len()
+        );
+        let compiled = engines[0].compiled.clone();
+        for e in engines.iter() {
+            anyhow::ensure!(
+                Rc::ptr_eq(&e.compiled, &compiled),
+                "step_many engines must share one compiled executable"
+            );
+        }
+        let man = &compiled.manifest;
+        let n = man.n_params();
+
+        // Validate and convert the fallible batch inputs first: an
+        // invalid batch must poison no engine. State moves (infallible)
+        // happen only after.
+        let mut batch_lits: Vec<Vec<Literal>> = Vec::with_capacity(engines.len());
+        for (k, batch) in batches.iter().enumerate() {
+            anyhow::ensure!(
+                batch.len() == man.batch.len(),
+                "step_many job {k}: {} batch inputs, manifest wants {}",
+                batch.len(),
+                man.batch.len()
+            );
+            let mut lits = Vec::with_capacity(man.batch.len());
+            for (b, info) in batch.iter().zip(&man.batch) {
+                lits.push(batch_to_literal(b, &info.shape)?);
+            }
+            batch_lits.push(lits);
+        }
+
+        let mut jobs: Vec<Vec<Literal>> = Vec::with_capacity(engines.len());
+        for ((engine, lits), &lr) in engines.iter_mut().zip(batch_lits).zip(lrs) {
+            engine.step_idx += 1;
+            let mut inputs: Vec<Literal> = Vec::with_capacity(man.n_inputs());
+            inputs.append(&mut engine.state);
+            inputs.extend(lits);
+            inputs.push(scalar_f32(engine.step_idx as f32));
+            inputs.push(scalar_f32(lr));
+            jobs.push(inputs);
+        }
+
+        let all_outs = compiled.run_batch(&jobs)?;
+        let mut stats = Vec::with_capacity(engines.len());
+        for (engine, mut outs) in engines.iter_mut().zip(all_outs) {
+            let loss = super::literal::scalar_value(&outs[0])?;
+            let grad_norm = super::literal::scalar_value(&outs[1])?;
+            engine.state = outs.drain(2..2 + 3 * n).collect();
+            stats.push(StepStats { loss, grad_norm });
+        }
+        Ok(stats)
     }
 
     /// Snapshot current parameters to host tensors.

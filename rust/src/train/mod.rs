@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::data::DataSource;
 use crate::optim::{clip_global_norm, Optimizer};
-use crate::runtime::engine::{GradEngine, TrainEngine};
+use crate::runtime::engine::{BatchData, GradEngine, TrainEngine};
 use crate::snr::{ProbeSchedule, SnrProbe};
 use crate::tensor::Tensor;
 
@@ -255,6 +255,224 @@ pub fn train_fused(
     // eval via extra fused steps at lr=0 would perturb state; instead use
     // the final training-loss tail as the comparable metric for fused runs.
     Ok(finalize(losses, f64::NAN, diverged, probe, t0))
+}
+
+// ---------------------------------------------------------------------------
+// Batched lockstep loops (DESIGN.md §12)
+//
+// `train_split_batch` / `train_fused_batch` drive B same-artifact jobs in
+// lockstep: at every step the jobs' inputs are handed to the backend as
+// one `run_batch` call. Each job keeps its own data stream, optimizer /
+// engine state, schedule and divergence guard, and every per-job call
+// sequence (next_batch, eval_batch, clip, update) matches the sequential
+// loops above exactly — so per-job results are bit-identical to running
+// the jobs one at a time (`rust/tests/batched_agreement.rs`). Jobs that
+// diverge leave the lockstep set at the same step they would have exited
+// the sequential loop; the rest keep going.
+//
+// SNR probing is not supported here: the batch planner
+// (`coordinator::batch`) routes probed configs through the sequential
+// path as singleton groups.
+// ---------------------------------------------------------------------------
+
+/// One job's context in a [`train_split_batch`] run.
+pub struct SplitJob<'a> {
+    pub opt: &'a mut dyn Optimizer,
+    pub params: Vec<Tensor>,
+    pub data: Box<dyn DataSource>,
+    pub schedule: Schedule,
+}
+
+/// Split-engine lockstep loop over B jobs sharing one grad executable.
+/// Equivalent to calling [`train_split`] once per job (no probing, shared
+/// step count / accumulation / eval setup — the batch planner's
+/// feasibility key guarantees those match).
+pub fn train_split_batch(
+    engine: &GradEngine,
+    jobs: &mut [SplitJob<'_>],
+    steps: usize,
+    accum: usize,
+    eval_batches: usize,
+) -> Result<Vec<RunResult>> {
+    let t0 = std::time::Instant::now();
+    let man = engine.manifest().clone();
+    let clip = man.hypers.map(|h| h.clip_norm).unwrap_or(1.0);
+    let nj = jobs.len();
+    let mut losses: Vec<Vec<(usize, f32)>> = (0..nj).map(|_| Vec::with_capacity(steps)).collect();
+    let mut initial = vec![f32::NAN; nj];
+    let mut diverged = vec![false; nj];
+    let mut active: Vec<usize> = (0..nj).collect();
+
+    for t in 1..=steps {
+        if active.is_empty() {
+            break;
+        }
+        let mut loss_acc = vec![0.0f32; nj];
+        let mut grads_acc: Vec<Option<Vec<Tensor>>> = (0..nj).map(|_| None).collect();
+        for _ in 0..accum.max(1) {
+            let batches: Vec<Vec<BatchData>> =
+                active.iter().map(|&i| jobs[i].data.next_batch()).collect();
+            let reqs: Vec<(&[Tensor], &[BatchData])> = active
+                .iter()
+                .zip(&batches)
+                .map(|(&i, b)| (jobs[i].params.as_slice(), b.as_slice()))
+                .collect();
+            let outs = engine.step_batch(&reqs)?;
+            for (k, (loss, g)) in outs.into_iter().enumerate() {
+                let i = active[k];
+                loss_acc[i] += loss;
+                grads_acc[i] = Some(match grads_acc[i].take() {
+                    None => g,
+                    Some(mut acc) => {
+                        for (a, b) in acc.iter_mut().zip(&g) {
+                            for (x, y) in a.data.iter_mut().zip(&b.data) {
+                                *x += *y;
+                            }
+                        }
+                        acc
+                    }
+                });
+            }
+        }
+        let inv = 1.0 / accum.max(1) as f32;
+        let mut still = Vec::with_capacity(active.len());
+        for &i in &active {
+            let mut grads = grads_acc[i].take().expect("stepped job has grads");
+            if accum > 1 {
+                for g in grads.iter_mut() {
+                    for x in g.data.iter_mut() {
+                        *x *= inv;
+                    }
+                }
+            }
+            let loss = loss_acc[i] * inv;
+            if t == 1 {
+                initial[i] = loss;
+            }
+            losses[i].push((t, loss));
+            if is_diverged(loss, initial[i]) {
+                diverged[i] = true;
+                continue;
+            }
+            clip_global_norm(&mut grads, clip);
+            let lr = jobs[i].schedule.lr(t) as f32;
+            let job = &mut jobs[i];
+            job.opt.step(&mut job.params, &grads, t, lr);
+            still.push(i);
+        }
+        active = still;
+    }
+
+    // held-out evaluation: batched across non-diverged jobs, preserving
+    // each job's eval_batch call sequence
+    let mut eval_acc = vec![0.0f64; nj];
+    let survivors: Vec<usize> = (0..nj).filter(|&i| !diverged[i]).collect();
+    if eval_batches > 0 && !survivors.is_empty() {
+        for _ in 0..eval_batches {
+            let batches: Vec<Vec<BatchData>> =
+                survivors.iter().map(|&i| jobs[i].data.eval_batch()).collect();
+            let reqs: Vec<(&[Tensor], &[BatchData])> = survivors
+                .iter()
+                .zip(&batches)
+                .map(|(&i, b)| (jobs[i].params.as_slice(), b.as_slice()))
+                .collect();
+            let outs = engine.step_batch(&reqs)?;
+            for (k, (loss, _)) in outs.into_iter().enumerate() {
+                eval_acc[survivors[k]] += loss as f64;
+            }
+        }
+    }
+
+    let mut out = Vec::with_capacity(nj);
+    for (i, job_losses) in losses.into_iter().enumerate() {
+        let eval_loss = if diverged[i] || eval_batches == 0 {
+            f64::INFINITY
+        } else {
+            eval_acc[i] / eval_batches as f64
+        };
+        out.push(finalize(job_losses, eval_loss, diverged[i], SnrProbe::new(), t0));
+    }
+    amortize_wallclock(&mut out, nj);
+    Ok(out)
+}
+
+/// Per-job timing inside a lockstep dispatch is not separable, so each
+/// job reports its amortized share of the group's wall time — keeping
+/// streamed `wallclock_s` / `steps_per_s` comparable with unbatched rows
+/// (fingerprints exclude timing entirely, so equivalence is unaffected).
+fn amortize_wallclock(results: &mut [RunResult], group_size: usize) {
+    for r in results.iter_mut() {
+        r.wallclock_s /= group_size.max(1) as f64;
+    }
+}
+
+/// Fused-engine lockstep loop over B engines sharing one compiled
+/// train-step executable. Equivalent to calling [`train_fused`] once per
+/// engine (no probing — see the section docs above).
+pub fn train_fused_batch(
+    engines: &mut [TrainEngine],
+    datas: &mut [Box<dyn DataSource>],
+    schedules: &[Schedule],
+    steps: usize,
+) -> Result<Vec<RunResult>> {
+    let t0 = std::time::Instant::now();
+    let nj = engines.len();
+    anyhow::ensure!(
+        datas.len() == nj && schedules.len() == nj,
+        "train_fused_batch: {} engines, {} data sources, {} schedules",
+        nj,
+        datas.len(),
+        schedules.len()
+    );
+    let mut losses: Vec<Vec<(usize, f32)>> = (0..nj).map(|_| Vec::with_capacity(steps)).collect();
+    let mut initial = vec![f32::NAN; nj];
+    let mut diverged = vec![false; nj];
+    let mut active: Vec<usize> = (0..nj).collect();
+
+    for t in 1..=steps {
+        if active.is_empty() {
+            break;
+        }
+        let batches: Vec<Vec<BatchData>> =
+            active.iter().map(|&i| datas[i].next_batch()).collect();
+        let lrs: Vec<f32> = active.iter().map(|&i| schedules[i].lr(t) as f32).collect();
+        // &mut refs to exactly the active engines (active is ascending)
+        let mut subset: Vec<&mut TrainEngine> = Vec::with_capacity(active.len());
+        {
+            let mut next = 0;
+            for (i, e) in engines.iter_mut().enumerate() {
+                if next < active.len() && active[next] == i {
+                    subset.push(e);
+                    next += 1;
+                }
+            }
+        }
+        let stats = TrainEngine::step_many(&mut subset, &batches, &lrs)?;
+        let mut still = Vec::with_capacity(active.len());
+        for (k, s) in stats.iter().enumerate() {
+            let i = active[k];
+            if t == 1 {
+                initial[i] = s.loss;
+            }
+            losses[i].push((t, s.loss));
+            if is_diverged(s.loss, initial[i]) {
+                diverged[i] = true;
+            } else {
+                still.push(i);
+            }
+        }
+        active = still;
+    }
+
+    let mut out: Vec<RunResult> = losses
+        .into_iter()
+        .enumerate()
+        .map(|(i, job_losses)| {
+            finalize(job_losses, f64::NAN, diverged[i], SnrProbe::new(), t0)
+        })
+        .collect();
+    amortize_wallclock(&mut out, nj);
+    Ok(out)
 }
 
 #[cfg(test)]

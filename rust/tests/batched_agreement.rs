@@ -1,0 +1,232 @@
+//! Differential test layer for batched dispatch (ISSUE 4, DESIGN.md §12):
+//! `slimadam sweep --batch N` must be **bit-for-bit equivalent** to
+//! sequential execution. For every builtin native model (split engine)
+//! and every builtin ruleset (fused engine), an 8-job sweep is run with
+//! batch sizes 1/2/4/8 and the per-job `RunResult::fingerprint`s —
+//! which digest every `(step, loss)` pair bit-exactly — must match the
+//! sequential run job for job. The grids include diverging LR points so
+//! lockstep early-exit is exercised, and a resume-after-kill cycle
+//! proves batched stores restore with zero re-execution and no
+//! cross-batch bleed.
+//!
+//! Everything here is real native training (no artifacts, no PJRT, no
+//! synthetic mode), so CI always exercises the full contract.
+
+use slimadam::coordinator::{EngineKind, RunSummary, SweepScheduler, TrainConfig};
+use slimadam::runstore::{config_key, RunStore, StoreMeta, SCHEMA_VERSION};
+use slimadam::runtime::backend::{native, BackendSpec};
+
+fn fingerprints(summaries: &[RunSummary]) -> Vec<u64> {
+    summaries.iter().map(|s| s.fingerprint()).collect()
+}
+
+/// 8-job split-engine grid on one native model; the top LR diverges.
+fn split_grid(model: &str, steps: usize) -> Vec<TrainConfig> {
+    let mut configs = Vec::new();
+    for opt in ["adam", "slimadam"] {
+        for lr in [5e-4, 1e-3, 2e-3, 10.0] {
+            let mut cfg = TrainConfig::lm(model, opt, lr, steps);
+            cfg.backend = BackendSpec::native();
+            cfg.eval_batches = 2;
+            configs.push(cfg);
+        }
+    }
+    configs
+}
+
+/// 8-job fused-engine grid on one native (model, ruleset).
+fn fused_grid(model: &str, ruleset: &str, steps: usize) -> Vec<TrainConfig> {
+    (0..8)
+        .map(|i| {
+            let mut cfg = TrainConfig::lm(model, "adam", 4e-4 * (i + 1) as f64, steps);
+            cfg.backend = BackendSpec::native();
+            cfg.engine = EngineKind::Fused(ruleset.to_string());
+            cfg.seed = i as u64;
+            cfg
+        })
+        .collect()
+}
+
+fn assert_batched_matches_sequential(configs: &[TrainConfig], what: &str) {
+    let sequential = SweepScheduler::new(1).quiet().run(configs).unwrap();
+    let seq_fps = fingerprints(&sequential);
+    // batch sizes 1/2/4/8, alternating worker counts so whole-group work
+    // stealing is exercised alongside single-worker lockstep
+    for (batch, workers) in [(1usize, 2usize), (2, 1), (4, 2), (8, 1)] {
+        let batched = SweepScheduler::new(workers)
+            .quiet()
+            .batch(batch)
+            .run(configs)
+            .unwrap();
+        assert_eq!(
+            fingerprints(&batched),
+            seq_fps,
+            "{what}: batch {batch} workers {workers} diverged from sequential"
+        );
+        // scalar metrics, not just digests
+        for (a, b) in sequential.iter().zip(&batched) {
+            assert_eq!(a.label, b.label, "{what}");
+            assert_eq!(a.result.losses, b.result.losses, "{what}: {}", a.label);
+            assert_eq!(a.result.diverged, b.result.diverged, "{what}: {}", a.label);
+            assert_eq!(
+                a.result.final_train_loss.to_bits(),
+                b.result.final_train_loss.to_bits(),
+                "{what}: {}",
+                a.label
+            );
+            assert_eq!(
+                a.result.eval_loss.to_bits(),
+                b.result.eval_loss.to_bits(),
+                "{what}: {}",
+                a.label
+            );
+        }
+    }
+}
+
+/// Split engine (grad_step + Rust optimizer), every builtin model. The
+/// lr=10 points diverge mid-run, so jobs leave the lockstep set early.
+#[test]
+fn batched_split_sweep_matches_sequential_every_model() {
+    assert!(!slimadam::coordinator::synthetic_runs_enabled());
+    for model in native::MODELS {
+        let steps = if *model == "mlp_tiny" { 12 } else { 6 };
+        let configs = split_grid(model, steps);
+        let sequential = SweepScheduler::new(1).quiet().run(&configs).unwrap();
+        assert!(
+            sequential.iter().any(|s| s.result.diverged),
+            "{model}: grid must include a diverging point to exercise \
+             lockstep early-exit"
+        );
+        assert!(sequential.iter().any(|s| !s.result.diverged));
+        assert_batched_matches_sequential(&configs, &format!("{model} split"));
+    }
+}
+
+/// Fused engine (single-dispatch train_step), every builtin model ×
+/// ruleset.
+#[test]
+fn batched_fused_sweep_matches_sequential_every_ruleset() {
+    for model in native::MODELS {
+        let steps = if *model == "mlp_tiny" { 10 } else { 5 };
+        for ruleset in native::RULESETS {
+            let configs = fused_grid(model, ruleset, steps);
+            assert_batched_matches_sequential(
+                &configs,
+                &format!("{model} fused:{ruleset}"),
+            );
+        }
+    }
+}
+
+/// Resume-after-kill with batched dispatch: a partial batched sweep
+/// (first group only, plus a torn tail from the "kill") resumes under
+/// `--batch 4` with zero re-execution, and the final fingerprint set is
+/// byte-identical to an uninterrupted sequential run — no cross-batch
+/// bleed between restored and freshly batched jobs.
+#[test]
+fn batched_sweep_resumes_after_kill_byte_identical() {
+    let configs = split_grid("mlp_tiny", 10);
+    let sequential = SweepScheduler::new(1).quiet().run(&configs).unwrap();
+
+    let dir = std::env::temp_dir().join("slimadam_batched_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = RunStore::open_with(
+        &dir,
+        &StoreMeta {
+            schema_version: SCHEMA_VERSION,
+            base_seed: 0,
+            backend: BackendSpec::native().key(),
+        },
+    )
+    .unwrap();
+
+    // "killed mid-sweep": only the first 4-job group completed...
+    let partial = SweepScheduler::new(1)
+        .quiet()
+        .batch(4)
+        .stream_to(store.primary())
+        .run(&configs[..4])
+        .unwrap();
+    assert_eq!(partial.len(), 4);
+    {
+        // ...and the kill tore the tail of the stream mid-row
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(store.primary())
+            .unwrap();
+        f.write_all(b"{\"label\":\"mlp_tiny/adam@lr1e-3\",\"final_tr").unwrap();
+    }
+
+    let resumed = SweepScheduler::new(2)
+        .quiet()
+        .batch(4)
+        .resume_from(&store)
+        .unwrap()
+        .stream_to(store.primary())
+        .run(&configs)
+        .unwrap();
+    assert_eq!(
+        resumed.iter().filter(|s| s.restored()).count(),
+        4,
+        "exactly the 4 stored jobs restore; none re-execute"
+    );
+    assert_eq!(fingerprints(&resumed), fingerprints(&sequential));
+
+    // the merged store holds one clean row per grid point
+    let idx = store.index().unwrap();
+    assert_eq!(idx.len(), configs.len());
+    assert_eq!(idx.stats.torn + idx.stats.skipped, 0, "tail repaired");
+    assert_eq!(idx.stats.duplicates + idx.stats.conflicts, 0);
+    for cfg in &configs {
+        assert!(idx.contains(config_key(cfg)));
+    }
+
+    // a second batched resume re-executes nothing at all
+    let store2 = RunStore::open(&dir).unwrap();
+    let again = SweepScheduler::new(2)
+        .quiet()
+        .batch(4)
+        .resume_from(&store2)
+        .unwrap()
+        .run(&configs)
+        .unwrap();
+    assert!(again.iter().all(|s| s.restored()));
+    assert_eq!(fingerprints(&again), fingerprints(&sequential));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Batched rows must be byte-compatible with unbatched rows: resuming a
+/// store written by a batched sweep with an *unbatched* scheduler (and
+/// vice versa) restores every job.
+#[test]
+fn batched_and_unbatched_stores_are_interchangeable() {
+    let configs = split_grid("mlp_tiny", 8);
+
+    let dir = std::env::temp_dir().join("slimadam_batched_interop");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = RunStore::open(&dir).unwrap();
+    SweepScheduler::new(1)
+        .quiet()
+        .batch(8)
+        .stream_to(store.primary())
+        .run(&configs)
+        .unwrap();
+
+    // unbatched resume of a batched store: everything restores
+    let resumed = SweepScheduler::new(1)
+        .quiet()
+        .resume_from(&store)
+        .unwrap()
+        .run(&configs)
+        .unwrap();
+    assert!(resumed.iter().all(|s| s.restored()));
+
+    // and the stored fingerprints equal a live sequential run's
+    let sequential = SweepScheduler::new(1).quiet().run(&configs).unwrap();
+    assert_eq!(fingerprints(&resumed), fingerprints(&sequential));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -361,3 +361,117 @@ fn json_number_edge_cases() {
         )
     });
 }
+
+// ---------------------------------------------------------------------------
+// Batch planner properties (DESIGN.md §12): arbitrary job lists → the
+// planner's groups are a deterministic partition that never mixes shard
+// keys, never exceeds the batch cap, isolates probed configs, and never
+// touches the configs themselves — derived per-job seeds survive any
+// grouping.
+// ---------------------------------------------------------------------------
+
+fn arbitrary_config(g: &mut slimadam::proptest::Gen) -> slimadam::coordinator::TrainConfig {
+    use slimadam::coordinator::{EngineKind, TrainConfig};
+    use slimadam::runtime::backend::BackendSpec;
+    let model = *g.choice(&["mlp_tiny", "gpt_micro", "gpt_nano"]);
+    let opt = *g.choice(&["adam", "slimadam", "sgdm"]);
+    let mut cfg = TrainConfig::lm(model, opt, g.log_f64(1e-5, 1e-1), g.usize(1, 40));
+    cfg.backend = if g.bool() {
+        BackendSpec::native()
+    } else {
+        BackendSpec::pjrt()
+    };
+    if g.bool() {
+        cfg.engine = EngineKind::Fused((*g.choice(&["adam", "slimadam"])).to_string());
+    }
+    cfg.warmup = g.usize(0, 10);
+    cfg.accum = g.usize(1, 3);
+    cfg.eval_batches = g.usize(0, 4);
+    cfg.seed = g.u64();
+    if g.usize(0, 5) == 0 {
+        cfg.probe = Some(slimadam::snr::ProbeSchedule::default());
+    }
+    cfg
+}
+
+/// Groups are a partition of the input indices, each group shares one
+/// feasibility key (hence one shard key), respects the batch cap, and
+/// probed configs are always singletons.
+#[test]
+fn batch_plan_is_a_capped_partition_of_same_key_jobs() {
+    use slimadam::coordinator::batch::{group_key, plan};
+    use slimadam::coordinator::SweepScheduler;
+    check(60, |g| {
+        let n = g.usize(0, 24);
+        let configs: Vec<_> = (0..n).map(|_| arbitrary_config(g)).collect();
+        let indices: Vec<usize> = (0..n).collect();
+        let max = g.usize(1, 8);
+        let groups = plan(&configs, &indices, max);
+
+        // partition: every index exactly once, order-preserving per group
+        let mut seen: Vec<usize> = groups.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        prop_assert(seen == indices, "groups must partition the indices")?;
+
+        for group in &groups {
+            prop_assert(!group.is_empty(), "no empty groups")?;
+            prop_assert(
+                group.len() <= max,
+                format!("group of {} exceeds max {max}", group.len()),
+            )?;
+            let key0 = group_key(&configs[group[0]]);
+            let shard0 = SweepScheduler::shard_key(&configs[group[0]]);
+            for &i in group {
+                prop_assert(
+                    group_key(&configs[i]) == key0,
+                    "grouped jobs must share a feasibility key",
+                )?;
+                prop_assert(
+                    SweepScheduler::shard_key(&configs[i]) == shard0,
+                    "grouped jobs must share a shard key",
+                )?;
+            }
+            if group.len() > 1 {
+                for &i in group {
+                    prop_assert(
+                        configs[i].probe.is_none(),
+                        "probed configs must stay singletons",
+                    )?;
+                }
+            }
+        }
+
+        // deterministic: planning again yields the same groups
+        prop_assert(plan(&configs, &indices, max) == groups, "plan must be deterministic")
+    });
+}
+
+/// Grouping never rewrites configs: jobs seeded with `rng::job_seed`
+/// keep their derived seed no matter the batch size, so batched replicate
+/// sweeps stay a pure function of grid position.
+#[test]
+fn batch_plan_preserves_derived_job_seeds() {
+    use slimadam::coordinator::batch::plan;
+    use slimadam::rng::job_seed;
+    check(40, |g| {
+        let n = g.usize(1, 16);
+        let base_seed = g.u64();
+        let mut configs: Vec<_> = (0..n).map(|_| arbitrary_config(g)).collect();
+        for (i, cfg) in configs.iter_mut().enumerate() {
+            cfg.seed = job_seed(base_seed, i as u64);
+        }
+        let indices: Vec<usize> = (0..n).collect();
+        for max in [1, 2, 4, 8] {
+            let groups = plan(&configs, &indices, max);
+            for group in &groups {
+                for &i in group {
+                    prop_assert(
+                        configs[i].seed == job_seed(base_seed, i as u64),
+                        "planning must not rewrite per-job seeds",
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -240,3 +240,102 @@ fn restored_summaries_carry_store_metrics() {
     assert!(live.iter().any(|s| s.result.diverged));
     let _ = fs::remove_dir_all(&dir);
 }
+
+// ---------------------------------------------------------------------------
+// Batched-writer append-order regression (ISSUE 4 satellite): a batched
+// sweep streams each dispatch group's rows under one writer lock, but
+// concurrent workers still interleave *groups*, older stores may hold
+// arbitrary interleavings, and a kill can tear the file mid-batch. The
+// run index must not care: membership, first-wins dedup and conflict
+// counts are a function of the row multiset, never of append order.
+// ---------------------------------------------------------------------------
+
+fn synth_row(key: u64, fp: u64) -> String {
+    format!(
+        r#"{{"config_key":"{key:016x}","fingerprint":"{fp:016x}","seed":"002a","job":0,"label":"m/adam@lr1e-3","model":"m","optimizer":"adam","lr":0.001,"final_train_loss":1.5,"eval_loss":1.6,"diverged":false,"steps":10}}"#
+    )
+}
+
+/// Index identity is append-order-invariant: the same rows written in
+/// group order, interleaved across groups, or fully reversed — across
+/// one or two stream files — index identically.
+#[test]
+fn index_is_stable_under_interleaved_batched_append_order() {
+    // two 4-job "groups" plus one duplicate row (a resumed re-append)
+    let g1: Vec<String> = (0..4).map(|i| synth_row(i, 100 + i)).collect();
+    let g2: Vec<String> = (4..8).map(|i| synth_row(i, 100 + i)).collect();
+    let dup = synth_row(2, 102);
+
+    let grouped: Vec<&str> = g1.iter().chain(&g2).chain([&dup]).map(|s| s.as_str()).collect();
+    let interleaved: Vec<&str> = vec![
+        &g1[0], &g2[0], &g1[1], &g2[1], &dup, &g1[2], &g2[2], &g1[3], &g2[3],
+    ]
+    .into_iter()
+    .map(|s| s.as_str())
+    .collect();
+    let mut reversed = grouped.clone();
+    reversed.reverse();
+
+    let mut identities = Vec::new();
+    for (name, order) in [
+        ("grouped", &grouped),
+        ("interleaved", &interleaved),
+        ("reversed", &reversed),
+    ] {
+        let dir = tmpdir(&format!("interleave_{name}"));
+        // split the same order across two stream files, like a sweep
+        // that crashed and resumed into a second stream
+        let (a, b) = order.split_at(order.len() / 2);
+        std::fs::write(dir.join("a.jsonl"), format!("{}\n", a.join("\n"))).unwrap();
+        std::fs::write(dir.join("b.jsonl"), format!("{}\n", b.join("\n"))).unwrap();
+        let store = RunStore::open(&dir).unwrap();
+        let idx = store.index().unwrap();
+        assert_eq!(idx.len(), 8, "{name}");
+        assert_eq!(idx.stats.duplicates, 1, "{name}");
+        assert_eq!(idx.stats.conflicts, 0, "{name}");
+        identities.push(idx.fingerprints());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert_eq!(identities[0], identities[1]);
+    assert_eq!(identities[0], identities[2]);
+}
+
+/// Conflicting duplicates (same config key, different fingerprint) are
+/// counted identically regardless of which interleaving the writers
+/// produced, and a tail torn mid-batch neither hides rows nor miscounts.
+#[test]
+fn conflict_counts_and_torn_mid_batch_are_order_stable() {
+    let rows: Vec<String> = (0..4).map(|i| synth_row(i, 100 + i)).collect();
+    let conflict = synth_row(1, 0xdead); // disagrees with row 1
+
+    for (name, order) in [
+        ("early", vec![&conflict, &rows[0], &rows[1], &rows[2], &rows[3]]),
+        ("late", vec![&rows[0], &rows[1], &rows[2], &rows[3], &conflict]),
+        ("mid", vec![&rows[0], &rows[1], &conflict, &rows[2], &rows[3]]),
+    ] {
+        let dir = tmpdir(&format!("conflict_{name}"));
+        let mut text = order
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        text.push('\n');
+        // a SIGKILL mid-batch: the next group's first row is torn at EOF
+        text.push_str("{\"config_key\":\"00000000000000ff\",\"finger");
+        std::fs::write(dir.join("stream.jsonl"), &text).unwrap();
+
+        let store = RunStore::open(&dir).unwrap();
+        let idx = store.index().unwrap();
+        assert_eq!(idx.len(), 4, "{name}: complete rows all indexed");
+        assert_eq!(idx.stats.conflicts, 1, "{name}");
+        assert_eq!(idx.stats.duplicates, 0, "{name}");
+        assert_eq!(idx.stats.torn, 1, "{name}: torn mid-batch tail recovered");
+        // repair + reindex: the torn fragment is gone, counts unchanged
+        assert_eq!(store.repair_tails().unwrap(), 1, "{name}");
+        let idx2 = store.index().unwrap();
+        assert_eq!(idx2.len(), 4, "{name}");
+        assert_eq!(idx2.stats.conflicts, 1, "{name}");
+        assert_eq!(idx2.stats.torn, 0, "{name}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
