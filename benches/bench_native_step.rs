@@ -1,11 +1,15 @@
-//! Native-backend step latency (DESIGN.md §11): grad_step and fused
+//! Native-backend step latency (DESIGN.md §11, §13): grad_step and fused
 //! train_step throughput of the pure-Rust interpreter for every builtin
-//! model, plus the full split-path step (grads + clip + AdamK update).
-//! Unlike the PJRT benches this needs no artifacts, so it always runs —
-//! the regression guard for the interpreter's forward/backward passes.
+//! model family — MLP, one- and four-block transformers, and the conv
+//! classifier — plus the full split-path step (grads + clip + AdamK
+//! update). Unlike the PJRT benches this needs no artifacts, so it always
+//! runs — the regression guard for the interpreter's forward/backward
+//! passes. At the end it writes the consolidated per-family throughput
+//! summary `results/bench/BENCH_native.json` (the CI bench artifact).
 
-use slimadam::benchkit::Bencher;
+use slimadam::benchkit::{write_native_summary, Bencher};
 use slimadam::coordinator::{make_data, DataSpec};
+use slimadam::json::Value;
 use slimadam::optim::adamk::AdamK;
 use slimadam::optim::{clip_global_norm, KMode, Optimizer};
 use slimadam::runtime::backend::{backend_for, native, Backend, BackendSpec};
@@ -15,30 +19,32 @@ use slimadam::tensor::Tensor;
 fn main() {
     let backend = backend_for(&BackendSpec::native()).expect("native backend");
     let b = Bencher::default();
-    let data_spec = DataSpec::Markov {
-        alpha: 1.07,
-        coherence: 0.5,
-        seed: 7,
-    };
+    let mut summary_rows: Vec<Value> = Vec::new();
 
     for &model in native::MODELS {
         let engine = GradEngine::new("artifacts", model, backend.as_ref())
             .expect("native grad engine");
         let man = engine.manifest().clone();
-        let tokens = man.batch[0].shape.iter().product::<usize>() as f64;
+        // throughput unit: tokens for the LM families, samples for conv
+        let (units, unit_label): (f64, &'static str) = if man.batch[0].dtype == "f32" {
+            (man.batch_size() as f64, "sample")
+        } else {
+            (man.batch[0].shape.iter().product::<usize>() as f64, "tok")
+        };
         let mut rng = slimadam::rng::Rng::new(4);
         let mut params: Vec<Tensor> = man
             .params
             .iter()
             .map(|p| p.init_mitchell.materialize(&p.shape, &mut rng))
             .collect();
-        let mut data = make_data(&man, &data_spec, 11).unwrap();
+        let mut data = make_data(&man, &DataSpec::default_for(&man), 11).unwrap();
         let batch = data.next_batch();
 
         println!("== {model}: native grad_step ==");
-        b.bench_with_units(&format!("native/{model}/grad_step"), tokens, "tok", || {
-            let (_loss, _grads) = engine.step(&params, &batch).unwrap();
-        });
+        let grad_report =
+            b.bench_with_units(&format!("native/{model}/grad_step"), units, unit_label, || {
+                let (_loss, _grads) = engine.step(&params, &batch).unwrap();
+            });
 
         let mut opt = AdamK::new(
             "adam",
@@ -47,10 +53,10 @@ fn main() {
             Default::default(),
         );
         let mut t = 0usize;
-        b.bench_with_units(
+        let split_report = b.bench_with_units(
             &format!("native/{model}/split_full_step"),
-            tokens,
-            "tok",
+            units,
+            unit_label,
             || {
                 t += 1;
                 let (_loss, mut grads) = engine.step(&params, &batch).unwrap();
@@ -59,19 +65,23 @@ fn main() {
             },
         );
 
+        let mut fused_adam_report = None;
         for &ruleset in native::RULESETS {
             let mut fused =
                 TrainEngine::new("artifacts", model, ruleset, backend.as_ref(), "mitchell", 5)
                     .expect("native fused engine");
             println!("== {model}: native fused train_step ({ruleset}) ==");
-            b.bench_with_units(
+            let report = b.bench_with_units(
                 &format!("native/{model}/fused_step/{ruleset}"),
-                tokens,
-                "tok",
+                units,
+                unit_label,
                 || {
                     fused.step(&batch, 1e-4).unwrap();
                 },
             );
+            if ruleset == "adam" {
+                fused_adam_report = Some(report);
+            }
         }
 
         // Batched lockstep dispatch (DESIGN.md §12): LANES fused jobs per
@@ -92,10 +102,10 @@ fn main() {
             })
             .collect();
         println!("== {model}: sequential vs batched fused dispatch ({LANES} jobs) ==");
-        b.bench_with_units(
+        let seq_report = b.bench_with_units(
             &format!("native/{model}/fused_step_seq{LANES}"),
-            tokens * LANES as f64,
-            "tok",
+            units * LANES as f64,
+            unit_label,
             || {
                 for (e, bt) in solo.iter_mut().zip(&batches) {
                     e.step(bt, 1e-4).unwrap();
@@ -108,14 +118,48 @@ fn main() {
                 TrainEngine::with_compiled(compiled.clone(), "mitchell", 50 + i as u64).unwrap()
             })
             .collect();
-        b.bench_with_units(
+        let batch_report = b.bench_with_units(
             &format!("native/{model}/fused_step_batch{LANES}"),
-            tokens * LANES as f64,
-            "tok",
+            units * LANES as f64,
+            unit_label,
             || {
                 let mut refs: Vec<&mut TrainEngine> = stacked.iter_mut().collect();
                 TrainEngine::step_many(&mut refs, &batches, &lrs).unwrap();
             },
         );
+
+        // per-family row of the consolidated BENCH_native.json artifact
+        let step_s = |ns: f64| 1.0 / (ns / 1e9).max(1e-12);
+        let mut row = Value::obj();
+        row.set("model", model)
+            .set("family", man.family.clone())
+            .set("params", man.total_param_elems())
+            .set("unit", unit_label)
+            .set("grad_units_per_s", grad_report.units_per_sec().unwrap_or(0.0))
+            .set("split_steps_per_s", step_s(split_report.median_ns))
+            .set(
+                "fused_steps_per_s",
+                fused_adam_report
+                    .as_ref()
+                    .map(|r| step_s(r.median_ns))
+                    .unwrap_or(0.0),
+            )
+            .set(
+                "fused_jobs_per_s_seq4",
+                LANES as f64 * step_s(seq_report.median_ns),
+            )
+            .set(
+                "fused_jobs_per_s_batch4",
+                LANES as f64 * step_s(batch_report.median_ns),
+            )
+            .set(
+                "batch4_speedup",
+                seq_report.median_ns / batch_report.median_ns.max(1e-12),
+            );
+        summary_rows.push(row);
     }
+
+    let out = std::path::Path::new("results/bench/BENCH_native.json");
+    write_native_summary(&summary_rows, out).expect("write BENCH_native.json");
+    println!("\nwrote per-family throughput summary to {}", out.display());
 }

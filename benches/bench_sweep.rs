@@ -19,11 +19,12 @@ use slimadam::runtime::backend::BackendSpec;
 use slimadam::runtime::KMode;
 use slimadam::snr::snr_of_view;
 
-fn native_grid(steps: usize) -> Vec<TrainConfig> {
+fn native_grid(model: &str, steps: usize) -> Vec<TrainConfig> {
     let mut configs = Vec::new();
     for opt in ["adam", "slimadam"] {
         for lr in [5e-4, 1e-3, 2e-3, 4e-3] {
-            let mut cfg = TrainConfig::lm("mlp_tiny", opt, lr, steps);
+            // family-appropriate workload per model (conv gets images)
+            let mut cfg = TrainConfig::auto(model, opt, lr, steps);
             cfg.backend = BackendSpec::native();
             cfg.eval_batches = 2;
             configs.push(cfg);
@@ -33,24 +34,50 @@ fn native_grid(steps: usize) -> Vec<TrainConfig> {
 }
 
 fn main() {
-    println!("== batched vs sequential native dispatch (mlp_tiny 8-job sweep, 1 worker) ==");
+    println!("== batched vs sequential native dispatch (8-job sweeps, 1 worker) ==");
     let fast = std::env::var("SLIMADAM_BENCH_FAST").is_ok();
-    let configs = native_grid(if fast { 30 } else { 120 });
     // Per-thread executable caches can't be pre-warmed here — the pool
     // spawns fresh worker threads per run() call, so every run pays the
     // same (cheap: manifest generation + a dims check) native compile on
-    // its own thread regardless of batching. This untimed pass only warms
+    // its own thread regardless of batching. An untimed pass only warms
     // process-level state (allocator, lazy init) so the timed sequential
     // side, which runs first, isn't systematically colder.
+    //
+    // mlp_tiny is the batch-scaling row (2/4/8); the rest of the zoo gets
+    // one jobs/sec row each at batch 4 — the per-family throughput table
+    // EXPERIMENTS.md §Perf tracks.
+    let mlp_configs = native_grid("mlp_tiny", if fast { 30 } else { 120 });
     SweepScheduler::new(1)
         .quiet()
-        .run(&configs[..2])
+        .run(&mlp_configs[..2])
         .expect("warmup");
     for batch in [2usize, 4, 8] {
         bench_batched(
             &format!("sweep_native_batch{batch}"),
-            configs.len(),
+            mlp_configs.len(),
             batch,
+            Some(std::path::Path::new("results/bench")),
+            || {
+                SweepScheduler::new(1)
+                    .quiet()
+                    .run(&mlp_configs)
+                    .expect("sequential native sweep");
+            },
+            || {
+                SweepScheduler::new(1)
+                    .quiet()
+                    .batch(batch)
+                    .run(&mlp_configs)
+                    .expect("batched native sweep");
+            },
+        );
+    }
+    for model in ["gpt_micro", "gpt_deep", "conv_mini"] {
+        let configs = native_grid(model, if fast { 10 } else { 40 });
+        bench_batched(
+            &format!("sweep_native_{model}_batch4"),
+            configs.len(),
+            4,
             Some(std::path::Path::new("results/bench")),
             || {
                 SweepScheduler::new(1)
@@ -61,7 +88,7 @@ fn main() {
             || {
                 SweepScheduler::new(1)
                     .quiet()
-                    .batch(batch)
+                    .batch(4)
                     .run(&configs)
                     .expect("batched native sweep");
             },

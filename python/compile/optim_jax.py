@@ -41,7 +41,11 @@ TABLE3_RULES = {
     "lm_head": "fan_in",
     "patch_embd": "fan_in",
     "head": "fan_in",
-    "conv": "both",
+    # conv matrix view is (C_out, C_in*kh*kw): average fan_in — one
+    # second moment per output filter (mirrors rules::RuleSet::
+    # table3_default on the Rust side; the two must agree or fused
+    # artifacts and the split path train with different states)
+    "conv": "fan_in",
     "pos_embd": "none",
     "cls_token": "none",
     "ln_attn": "none",

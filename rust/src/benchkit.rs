@@ -3,8 +3,11 @@
 //! `cargo bench` targets in `benches/` use `harness = false` and drive this
 //! module: warmup, fixed-duration sampling, IQR outlier filtering, and a
 //! compact report (median / mean / p10-p90 / throughput). Results are also
-//! appended as JSONL to `results/bench/<name>.jsonl` so the perf pass in
-//! EXPERIMENTS.md §Perf can diff before/after runs.
+//! appended as JSONL to `results/bench/<name>.jsonl` — pruned to the
+//! newest [`BENCH_KEEP_DEFAULT`] rows on every write, so the tracked perf
+//! trajectory stays bounded — and the native suite additionally emits the
+//! consolidated per-family [`write_native_summary`] JSON the CI bench job
+//! uploads as `BENCH_native.json` (EXPERIMENTS.md §Perf).
 
 use std::time::{Duration, Instant};
 
@@ -70,6 +73,12 @@ impl Report {
         }
         v
     }
+
+    /// Median throughput in units/second, when a unit count was given.
+    pub fn units_per_sec(&self) -> Option<f64> {
+        self.units_per_iter
+            .map(|(units, _)| units / (self.median_ns / 1e9).max(1e-12))
+    }
 }
 
 fn human(x: f64) -> String {
@@ -89,6 +98,67 @@ fn now_ms() -> u64 {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_millis() as u64)
         .unwrap_or(0)
+}
+
+/// Default retention for `results/bench/*.jsonl`: rows kept per file.
+/// Override with `SLIMADAM_BENCH_KEEP=<n>` (run-store growth item: the
+/// perf trajectory stays bounded no matter how many CI runs append).
+pub const BENCH_KEEP_DEFAULT: usize = 256;
+
+fn bench_keep() -> usize {
+    std::env::var("SLIMADAM_BENCH_KEEP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(BENCH_KEEP_DEFAULT)
+}
+
+/// Append one JSONL row to `dir/<sanitized name>.jsonl`, pruning the file
+/// to its newest [`BENCH_KEEP_DEFAULT`] (or `SLIMADAM_BENCH_KEEP`) rows on
+/// every write. Best-effort like the rest of the bench sinks: IO errors
+/// never fail a bench run.
+pub fn append_row(dir: &std::path::Path, name: &str, row: &Value) {
+    append_row_keep(dir, name, row, bench_keep());
+}
+
+/// [`append_row`] with an explicit retention cap (tests drive this
+/// directly; production callers use the env-configured default).
+pub fn append_row_keep(dir: &std::path::Path, name: &str, row: &Value, keep: usize) {
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{}.jsonl", sanitize(name)));
+    let mut text = std::fs::read_to_string(&path).unwrap_or_default();
+    if !text.is_empty() && !text.ends_with('\n') {
+        text.push('\n');
+    }
+    text.push_str(&row.dump());
+    text.push('\n');
+    let lines: Vec<&str> = text.lines().collect();
+    let tail = if lines.len() > keep {
+        &lines[lines.len() - keep..]
+    } else {
+        &lines[..]
+    };
+    let mut out = tail.join("\n");
+    out.push('\n');
+    // write-then-rename so a crash mid-prune never loses the whole file
+    let tmp = path.with_extension("jsonl.tmp");
+    if std::fs::write(&tmp, &out).is_ok() {
+        let _ = std::fs::rename(&tmp, &path);
+    }
+}
+
+/// Write the consolidated per-family native throughput summary (the CI
+/// `BENCH_native.json` artifact): one row per builtin model, produced by
+/// `benches/bench_native_step.rs`.
+pub fn write_native_summary(rows: &[Value], path: &std::path::Path) -> std::io::Result<()> {
+    let mut root = Value::obj();
+    root.set("suite", "native")
+        .set("unix_ms", now_ms())
+        .set("families", Value::Arr(rows.to_vec()));
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, root.dump_pretty())
 }
 
 /// Benchmark runner with warmup + timed sampling.
@@ -167,16 +237,7 @@ impl Bencher {
         let report = summarize(name, &mut samples, units);
         report.print();
         if let Some(dir) = &self.sink {
-            let _ = std::fs::create_dir_all(dir);
-            let path = dir.join(format!("{}.jsonl", sanitize(name)));
-            if let Ok(mut file) = std::fs::OpenOptions::new()
-                .create(true)
-                .append(true)
-                .open(path)
-            {
-                use std::io::Write;
-                let _ = writeln!(file, "{}", report.to_json().dump());
-            }
+            append_row(dir, name, &report.to_json());
         }
         report
     }
@@ -322,16 +383,7 @@ where
     };
     report.print();
     if let Some(dir) = sink {
-        let _ = std::fs::create_dir_all(dir);
-        let path = dir.join(format!("{}.jsonl", sanitize(name)));
-        if let Ok(mut file) = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-        {
-            use std::io::Write;
-            let _ = writeln!(file, "{}", report.to_json().dump());
-        }
+        append_row(dir, name, &report.to_json());
     }
     report
 }
@@ -390,16 +442,7 @@ where
     };
     report.print();
     if let Some(dir) = sink {
-        let _ = std::fs::create_dir_all(dir);
-        let path = dir.join(format!("{}.jsonl", sanitize(name)));
-        if let Ok(mut file) = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(path)
-        {
-            use std::io::Write;
-            let _ = writeln!(file, "{}", report.to_json().dump());
-        }
+        append_row(dir, name, &report.to_json());
     }
     report
 }
@@ -482,6 +525,60 @@ mod tests {
     #[test]
     fn sanitize_names() {
         assert_eq!(sanitize("a b/c:d"), "a_b_c_d");
+    }
+
+    #[test]
+    fn append_row_prunes_to_retention_cap() {
+        let dir = std::env::temp_dir().join(format!(
+            "slimadam_bench_retention_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        for i in 0..12 {
+            let mut row = Value::obj();
+            row.set("i", i as i64);
+            append_row_keep(&dir, "retention_probe", &row, 5);
+        }
+        let text = std::fs::read_to_string(dir.join("retention_probe.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5, "pruned to keep=5:\n{text}");
+        // the newest rows survive, oldest are dropped
+        assert!(lines[0].contains("\"i\":7"), "{}", lines[0]);
+        assert!(lines[4].contains("\"i\":11"), "{}", lines[4]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn units_per_sec_from_median() {
+        let r = Report {
+            name: "t".into(),
+            iters: 1,
+            median_ns: 1e9, // 1 s/iter
+            mean_ns: 1e9,
+            p10_ns: 1e9,
+            p90_ns: 1e9,
+            units_per_iter: Some((500.0, "tok")),
+        };
+        assert!((r.units_per_sec().unwrap() - 500.0).abs() < 1e-9);
+        let none = Report { units_per_iter: None, ..r };
+        assert!(none.units_per_sec().is_none());
+    }
+
+    #[test]
+    fn native_summary_writes_families_json() {
+        let dir = std::env::temp_dir().join(format!(
+            "slimadam_bench_summary_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut row = Value::obj();
+        row.set("model", "mlp_tiny").set("grad_tok_per_s", 1000.0);
+        let path = dir.join("BENCH_native.json");
+        write_native_summary(&[row], &path).unwrap();
+        let parsed = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("suite").unwrap().as_str().unwrap(), "native");
+        assert_eq!(parsed.get("families").unwrap().as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -69,6 +69,41 @@ pub enum DataSpec {
     Images { noise: f64, seed: u64 },
 }
 
+impl DataSpec {
+    /// Paper-default Zipf+Markov LM stream (DESIGN.md §3) — the single
+    /// source of the LM data constants [`TrainConfig::lm`] uses.
+    pub fn default_markov() -> DataSpec {
+        DataSpec::Markov {
+            alpha: 1.07,
+            coherence: 0.5,
+            seed: 1234,
+        }
+    }
+
+    /// Paper-default synthetic image stream — the single source of the
+    /// vision data constants [`TrainConfig::vision`] uses.
+    pub fn default_images() -> DataSpec {
+        DataSpec::Images { noise: 0.3, seed: 99 }
+    }
+
+    /// The default workload for a manifest's batch layout: f32 image
+    /// batches (the vision families) get [`DataSpec::default_images`],
+    /// token batches [`DataSpec::default_markov`] — by construction the
+    /// same streams [`TrainConfig::vision`] / [`TrainConfig::lm`] train on.
+    pub fn default_for(man: &crate::runtime::Manifest) -> DataSpec {
+        let vision = man
+            .batch
+            .first()
+            .map(|b| b.dtype == "f32")
+            .unwrap_or(false);
+        if vision {
+            DataSpec::default_images()
+        } else {
+            DataSpec::default_markov()
+        }
+    }
+}
+
 /// A complete training-run specification.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -110,11 +145,7 @@ impl TrainConfig {
             warmup: steps / 5, // paper: 2048 of 10k ≈ 20%
             seed: 0,
             init: "mitchell".into(),
-            data: DataSpec::Markov {
-                alpha: 1.07,
-                coherence: 0.5,
-                seed: 1234,
-            },
+            data: DataSpec::default_markov(),
             probe: None,
             hypers: Hypers::default(),
             eval_batches: 8,
@@ -126,16 +157,32 @@ impl TrainConfig {
     /// Vision config (paper App. B.4 hypers: beta2=0.999, wd=0.01).
     pub fn vision(model: &str, optimizer: &str, lr: f64, steps: usize) -> TrainConfig {
         let mut cfg = TrainConfig::lm(model, optimizer, lr, steps);
-        cfg.data = DataSpec::Images {
-            noise: 0.3,
-            seed: 99,
-        };
+        cfg.data = DataSpec::default_images();
         cfg.hypers = Hypers {
             beta2: 0.999,
             weight_decay: 0.01,
             ..Hypers::default()
         };
         cfg
+    }
+
+    /// True when a model name belongs to a vision family (ViT / ResNet
+    /// artifacts, or the native conv zoo) and should default to the
+    /// vision config.
+    pub fn is_vision(model: &str) -> bool {
+        model.starts_with("vit") || model.starts_with("resnet") || model.starts_with("conv")
+    }
+
+    /// Model-name dispatch: vision-family models get [`TrainConfig::vision`],
+    /// everything else [`TrainConfig::lm`]. This is the single place the
+    /// CLI, benches and differential tests use so a grid over the whole
+    /// model zoo builds the right data spec per family.
+    pub fn auto(model: &str, optimizer: &str, lr: f64, steps: usize) -> TrainConfig {
+        if TrainConfig::is_vision(model) {
+            TrainConfig::vision(model, optimizer, lr, steps)
+        } else {
+            TrainConfig::lm(model, optimizer, lr, steps)
+        }
     }
 
     /// Fine-tuning config (paper App. B.3: beta2=0.999, low LR, shifted

@@ -1,16 +1,25 @@
 //! Figure 3 (+ App. Figs. 14/16/17): depth dependence of time-averaged SNR
 //! per layer type — which compression dimension wins at each depth.
+//!
+//! Offline: `--backend native` defaults to the builtin `gpt_deep`
+//! (4 transformer blocks, per-block `h<i>.*` parameter names), so the
+//! depth axis is real without any artifacts.
 
 use anyhow::Result;
 
 use crate::cli::Args;
 use crate::coordinator::TrainConfig;
 use crate::metrics::{results_dir, CsvWriter};
+use crate::runtime::backend::BackendKind;
 
 use super::{probed_run, steps_or, write_summary_md};
 
 pub fn run(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "gpt_nano").to_string();
+    let default_model = match super::backend_spec(args)?.kind {
+        BackendKind::Native => "gpt_deep",
+        BackendKind::Pjrt => "gpt_nano",
+    };
+    let model = args.str_or("model", default_model).to_string();
     let steps = steps_or(args, 200);
     let lr = args.f64_or("lr", 1e-3)?;
 

@@ -2,12 +2,18 @@
 //! Paper shapes: intermediate conv layers show exceptionally high SNR on
 //! both dimensions (increasing with depth); the first conv resists
 //! fan_out compression; the final layer hovers near 1.0.
+//!
+//! Offline: `--backend native` probes the builtin `conv_mini` classifier
+//! (two convs + head over the same synthetic image stream) instead of the
+//! ResNet artifacts, so the conv-SNR figure data exists without `make
+//! artifacts`.
 
 use anyhow::Result;
 
 use crate::cli::Args;
 use crate::coordinator::TrainConfig;
 use crate::metrics::{results_dir, CsvWriter};
+use crate::runtime::backend::BackendKind;
 
 use super::{probed_run, steps_or, write_snr, write_summary_md};
 
@@ -15,10 +21,24 @@ pub fn run(args: &Args) -> Result<()> {
     let steps = steps_or(args, 150);
     let lr = args.f64_or("lr", 1e-3)?;
     let dir = results_dir("fig5")?;
+    let native = super::backend_spec(args)?.kind == BackendKind::Native;
     let mut md = String::from("# Fig. 5 / Figs. 19-20 — ResNet SNR\n\n");
+    if native {
+        md.push_str(
+            "*Native offline run: builtin `conv_mini` stands in for the \
+             ResNet artifacts (same conv/head layer types, reduced depth).*\n\n",
+        );
+    }
 
-    for classes in [10usize, 100] {
-        let model = format!("resnet_mini_c{classes}");
+    let models: Vec<(String, usize)> = if native {
+        vec![("conv_mini".into(), 10)]
+    } else {
+        vec![
+            ("resnet_mini_c10".into(), 10),
+            ("resnet_mini_c100".into(), 100),
+        ]
+    };
+    for (model, classes) in models {
         println!("fig5: probing {model} ({steps} steps)");
         let mut cfg = TrainConfig::vision(&model, "adam", lr, steps);
         super::apply_common(args, &mut cfg)?;

@@ -4,11 +4,17 @@
 //! patch embedding prefers fan_in; LayerNorms are surprisingly
 //! compressible.
 
+//! Offline: `--backend native` probes the builtin `gpt_deep` transformer
+//! instead — no patch embedding exists natively, so the ViT-specific
+//! check is marked n/a, but the attention-trend checks (K/Q fan_in,
+//! V fan_out) still run on real multi-block attention SNR.
+
 use anyhow::Result;
 
 use crate::cli::Args;
 use crate::coordinator::TrainConfig;
 use crate::metrics::results_dir;
+use crate::runtime::backend::BackendKind;
 use crate::runtime::KMode;
 
 use super::{probed_run, steps_or, write_snr, write_summary_md};
@@ -17,21 +23,47 @@ pub fn run(args: &Args) -> Result<()> {
     let steps = steps_or(args, 150);
     let lr = args.f64_or("lr", 1e-3)?;
     let dir = results_dir("fig6")?;
+    let native = super::backend_spec(args)?.kind == BackendKind::Native;
     let mut md = String::from("# Fig. 6 / Figs. 21-23 — ViT SNR\n\n");
+    if native {
+        md.push_str(
+            "*Native offline run: builtin `gpt_deep` (4-block causal \
+             transformer) stands in for the ViT artifacts — attention \
+             trends are real, patch-embedding checks are n/a.*\n\n",
+        );
+    }
 
-    for classes in [10usize, 100] {
-        let model = format!("vit_mini_c{classes}");
+    let runs: Vec<(String, String)> = if native {
+        vec![("gpt_deep".into(), "snr_gpt_deep.jsonl".into())]
+    } else {
+        vec![
+            ("vit_mini_c10".into(), "snr_c10.jsonl".into()),
+            ("vit_mini_c100".into(), "snr_c100.jsonl".into()),
+        ]
+    };
+    for (model, snr_file) in runs {
         println!("fig6: probing {model} ({steps} steps)");
-        let mut cfg = TrainConfig::vision(&model, "adam", lr, steps);
+        let mut cfg = TrainConfig::auto(&model, "adam", lr, steps);
         super::apply_common(args, &mut cfg)?;
         let (_, snr) = probed_run(cfg)?;
-        write_snr(&dir, &format!("snr_c{classes}.jsonl"), &snr)?;
+        write_snr(&dir, &snr_file, &snr)?;
         let table = super::layer_type_table(&snr);
         println!("{table}");
 
         let types = snr.by_layer_type();
         let pref = |lt: &str, k: KMode| -> bool {
             types.get(lt).map(|a| a.best().0 == k).unwrap_or(false)
+        };
+        let patch_check = if native {
+            ("patch_embd prefers fan_in (n/a on native stand-in)", true)
+        } else {
+            (
+                "patch_embd prefers fan_in",
+                types
+                    .get("patch_embd")
+                    .map(|a| a.fan_in > a.fan_out)
+                    .unwrap_or(false),
+            )
         };
         let checks = [
             ("K prefers fan_in", pref("attn_k", KMode::FanIn)),
@@ -43,15 +75,9 @@ pub fn run(args: &Args) -> Result<()> {
                     .map(|a| a.fan_out > a.fan_in)
                     .unwrap_or(false),
             ),
-            (
-                "patch_embd prefers fan_in",
-                types
-                    .get("patch_embd")
-                    .map(|a| a.fan_in > a.fan_out)
-                    .unwrap_or(false),
-            ),
+            patch_check,
         ];
-        md.push_str(&format!("## classes={classes}\n"));
+        md.push_str(&format!("## {model}\n"));
         for (name, ok) in checks {
             md.push_str(&format!(
                 "- {name}: {}\n",

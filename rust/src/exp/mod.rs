@@ -37,16 +37,17 @@ use crate::snr::{ProbeSchedule, SnrSummary};
 
 /// Dispatch an experiment id to its module.
 pub fn run(id: &str, args: &Args) -> Result<()> {
+    // zero-padded spellings (fig03, fig05, …) are accepted as aliases
     match id {
-        "fig1" => fig01_lr_sensitivity::run(args),
-        "fig2" => fig02_snr_trajectories::run(args),
-        "fig3" => fig03_snr_depth::run(args),
-        "fig4" | "fig18" => fig04_finetune_snr::run(args),
-        "fig5" | "fig19" | "fig20" => fig05_resnet_snr::run(args),
-        "fig6" | "fig21" | "fig22" | "fig23" => fig06_vit_snr::run(args),
-        "fig7" | "fig29" => fig07_vocab_sweep::run(args),
-        "fig8" | "fig24" => fig08_lr_vs_snr::run(args),
-        "fig9" | "fig25" => fig09_init::run(args),
+        "fig1" | "fig01" => fig01_lr_sensitivity::run(args),
+        "fig2" | "fig02" => fig02_snr_trajectories::run(args),
+        "fig3" | "fig03" => fig03_snr_depth::run(args),
+        "fig4" | "fig04" | "fig18" => fig04_finetune_snr::run(args),
+        "fig5" | "fig05" | "fig19" | "fig20" => fig05_resnet_snr::run(args),
+        "fig6" | "fig06" | "fig21" | "fig22" | "fig23" => fig06_vit_snr::run(args),
+        "fig7" | "fig07" | "fig29" => fig07_vocab_sweep::run(args),
+        "fig8" | "fig08" | "fig24" => fig08_lr_vs_snr::run(args),
+        "fig9" | "fig09" | "fig25" => fig09_init::run(args),
         "fig10" | "fig26" => fig10_savings::run(args),
         "fig11" => fig11_stability::run(args),
         "fig12" => fig12_baseline_ablations::run(args),

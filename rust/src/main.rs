@@ -141,12 +141,8 @@ fn base_config(args: &Args) -> Result<TrainConfig> {
     let optimizer = args.str_or("optimizer", "adam").to_string();
     let lr = args.f64_or("lr", 1e-3)?;
     let steps = args.usize_or("steps", 100)?;
-    let vision = model.starts_with("vit") || model.starts_with("resnet");
-    let mut cfg = if vision {
-        TrainConfig::vision(&model, &optimizer, lr, steps)
-    } else {
-        TrainConfig::lm(&model, &optimizer, lr, steps)
-    };
+    let vision = TrainConfig::is_vision(&model);
+    let mut cfg = TrainConfig::auto(&model, &optimizer, lr, steps);
     if !vision {
         cfg.data = data_spec(args);
     }

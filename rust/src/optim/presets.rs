@@ -15,6 +15,12 @@ use super::sm3::Sm3;
 use super::{Hypers, KMode, Optimizer, ParamInfo};
 
 /// Layer types treated as "LayerNorm-like" across architectures.
+///
+/// ```
+/// use slimadam::optim::presets::is_norm;
+/// assert!(is_norm("ln_attn") && is_norm("bn"));
+/// assert!(!is_norm("conv") && !is_norm("attn_q"));
+/// ```
 pub fn is_norm(layer_type: &str) -> bool {
     matches!(layer_type, "ln_attn" | "ln_mlp" | "ln_final" | "bn")
 }
@@ -43,6 +49,20 @@ fn n_heads(man: &Manifest) -> usize {
 /// * `lion` — Chen et al. 2023
 /// * `adafactor` / `adafactor_v2` — Shazeer & Stern 2018
 /// * `sgdm` — SGD + momentum 0.9
+///
+/// Works over any manifest — PJRT artifacts and the native model zoo
+/// alike (conv weights compress per output filter under `slimadam`):
+///
+/// ```
+/// use slimadam::optim::{presets, Optimizer};
+/// use slimadam::runtime::backend::native;
+///
+/// let man = native::grad_manifest("conv_mini").unwrap();
+/// let adam = presets::build("adam", &man, Default::default()).unwrap();
+/// let slim = presets::build("slimadam", &man, Default::default()).unwrap();
+/// assert_eq!(adam.second_moment_elems(), man.total_param_elems());
+/// assert!(slim.second_moment_elems() < adam.second_moment_elems() / 10);
+/// ```
 pub fn build(name: &str, man: &Manifest, hypers: Hypers) -> Result<Box<dyn Optimizer>> {
     let metas: Vec<ParamInfo> = man.params.clone();
     let heads = n_heads(man);

@@ -54,7 +54,11 @@ impl RuleSet {
                 // the embedding axis (= fan_in in our storage convention)
                 "tok_embd" | "lm_head" => KMode::FanIn,
                 "patch_embd" | "head" => KMode::FanIn,
-                "conv" => KMode::Both,
+                // conv weights sit in the matrix view (C_out, C_in·kh·kw):
+                // average fan_in — one second moment per output filter —
+                // which keeps the per-filter scale structure the paper's
+                // ResNet SNR analysis shows dominates (Fig. 5)
+                "conv" => KMode::FanIn,
                 _ => KMode::None,
             };
             if k != KMode::None {
@@ -370,6 +374,18 @@ mod tests {
         assert!(!rs.rules.contains_key("ln"));
         let modes = rs.modes_for(&man);
         assert_eq!(modes, vec![KMode::FanIn, KMode::None]);
+    }
+
+    #[test]
+    fn table3_conv_rules_compress_fan_in() {
+        let man = crate::runtime::backend::native::grad_manifest("conv_mini").unwrap();
+        let rs = RuleSet::table3_default(&man);
+        assert_eq!(rs.rules.get("conv1"), Some(&KMode::FanIn));
+        assert_eq!(rs.rules.get("conv2"), Some(&KMode::FanIn));
+        assert_eq!(rs.rules.get("head"), Some(&KMode::FanIn));
+        // fan_in over (C_in, kh, kw): one V per output filter / class row
+        assert_eq!(rs.v_elems(&man), 8 + 16 + 10);
+        assert!(rs.saving(&man) > 0.97, "{}", rs.saving(&man));
     }
 
     #[test]

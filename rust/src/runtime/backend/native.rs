@@ -1,16 +1,17 @@
 //! Native backend: a pure-Rust interpreter of the manifest's model family
-//! (DESIGN.md §11).
+//! (DESIGN.md §11, §13).
 //!
 //! Where the PJRT backend compiles AOT-lowered HLO text, the native
-//! backend *is* the computation: it ships a small catalog of builtin
-//! models ([`MODELS`]) — a per-token MLP language model and a one-block
-//! causal transformer — with handwritten forward/backward passes, and
-//! interprets `grad_step` / `train_step` manifests directly. That makes
-//! `slimadam train/sweep --backend native` a real training run (actual
-//! losses, actual gradients, actual reduced-V Adam updates) that needs no
-//! artifacts, no Python, and no PJRT — the substrate for offline CI
-//! end-to-end coverage that the synthetic-run mode (fake losses) could
-//! never give.
+//! backend *is* the computation: it ships a model zoo ([`MODELS`]) — a
+//! per-token MLP language model, one- and N-block causal transformers,
+//! and a small convolutional image classifier — with handwritten
+//! forward/backward passes, and interprets `grad_step` / `train_step`
+//! manifests directly. That makes `slimadam train/sweep --backend native`
+//! a real training run (actual losses, actual gradients, actual reduced-V
+//! Adam updates) that needs no artifacts, no Python, and no PJRT — the
+//! substrate for offline CI end-to-end coverage, including the paper's
+//! architecture-diversity figures (fig3 depth on `gpt_deep`, fig5 conv
+//! SNR on `conv_mini`, fig6 attention trends).
 //!
 //! Contracts kept identical to the PJRT path:
 //!
@@ -24,11 +25,17 @@
 //!   (`rust/tests/engine_agreement.rs`);
 //! * forward/backward accumulate in f64 and emit f32, so results are a
 //!   deterministic pure function of the inputs on every host.
+//!
+//! There is exactly one implementation of every forward/backward pass:
+//! the lane-stacked kernels of DESIGN.md §12. A sequential `run` is the
+//! lanes = 1 instantiation of the same kernels, so batched-vs-sequential
+//! bit-identity is structural rather than a property of two parallel
+//! implementations staying in sync (`rust/tests/batched_agreement.rs`
+//! still proves it end to end for every model × ruleset).
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::Literal;
 
-use crate::optim::clip_global_norm;
 use crate::runtime::engine::{Artifact, ArtifactSource};
 use crate::runtime::literal::{literal_to_tensor, scalar_f32, tensor_to_literal};
 use crate::runtime::manifest::{Hypers, KMode, Manifest};
@@ -37,13 +44,27 @@ use crate::tensor::Tensor;
 use super::{Backend, DeviceTag, Executable};
 
 /// Builtin models the native interpreter knows.
-pub const MODELS: &[&str] = &["mlp_tiny", "gpt_micro"];
+///
+/// ```
+/// use slimadam::runtime::backend::native;
+///
+/// // every zoo member resolves a grad artifact offline
+/// for model in native::MODELS {
+///     let art = native::artifact(&format!("{model}.grad")).unwrap();
+///     assert_eq!(art.manifest.kind, "grad_step");
+/// }
+/// ```
+pub const MODELS: &[&str] = &["mlp_tiny", "gpt_micro", "gpt_deep", "conv_mini"];
 
 /// Fused rulesets the native interpreter can bake into `train_step`
 /// manifests (K modes per tensor).
 pub const RULESETS: &[&str] = &["adam", "slimadam", "adalayer"];
 
 const RMS_EPS: f64 = 1e-5;
+
+/// Conv-family kernel side (`valid` convolutions) and pooling window.
+const CONV_K: usize = 3;
+const POOL: usize = 2;
 
 // ---------------------------------------------------------------------------
 // Model catalog + manifest generation
@@ -53,9 +74,15 @@ const RMS_EPS: f64 = 1e-5;
 enum Family {
     Mlp,
     Gpt,
+    Conv,
 }
 
-/// Architecture hyperparameters of one builtin model.
+/// Architecture hyperparameters of one builtin model. Field meaning is
+/// per family: `vocab` is the vocabulary (LM families) or class count
+/// (vision); `d`/`hidden` are d_model / MLP width for the LM families and
+/// the first / second conv channel counts for the conv family; `ctx` is
+/// the sequence length (LM only); `blocks` the transformer depth (gpt
+/// only); `img`/`channels` the input geometry (conv only).
 #[derive(Debug, Clone, Copy)]
 struct Dims {
     family: Family,
@@ -65,27 +92,50 @@ struct Dims {
     heads: usize,
     ctx: usize,
     batch: usize,
+    blocks: usize,
+    img: usize,
+    channels: usize,
 }
 
 fn dims_for(model: &str) -> Result<Dims> {
+    let base = Dims {
+        family: Family::Mlp,
+        vocab: 64,
+        d: 16,
+        hidden: 32,
+        heads: 1,
+        ctx: 8,
+        batch: 8,
+        blocks: 0,
+        img: 0,
+        channels: 0,
+    };
     Ok(match model {
-        "mlp_tiny" => Dims {
-            family: Family::Mlp,
-            vocab: 64,
-            d: 16,
-            hidden: 32,
-            heads: 1,
-            ctx: 8,
-            batch: 8,
-        },
+        "mlp_tiny" => base,
         "gpt_micro" => Dims {
             family: Family::Gpt,
-            vocab: 64,
-            d: 16,
             hidden: 64,
             heads: 2,
-            ctx: 8,
             batch: 4,
+            blocks: 1,
+            ..base
+        },
+        "gpt_deep" => Dims {
+            family: Family::Gpt,
+            heads: 2,
+            batch: 2,
+            blocks: 4,
+            ..base
+        },
+        "conv_mini" => Dims {
+            family: Family::Conv,
+            vocab: 10, // classes
+            d: 8,      // conv1 out-channels
+            hidden: 16, // conv2 out-channels
+            ctx: 0,
+            img: 8,
+            channels: 2,
+            ..base
         },
         other => bail!(
             "unknown native model {other:?} — builtin models: {}",
@@ -94,31 +144,65 @@ fn dims_for(model: &str) -> Result<Dims> {
     })
 }
 
-/// `(name, shape, layer_type, depth, wd, default_init)` rows, in manifest
-/// parameter order.
-fn param_rows(dims: &Dims) -> Vec<(&'static str, Vec<usize>, &'static str, i64, bool)> {
+/// Conv-family activation geometry: `(conv1 out side, pooled side,
+/// conv2 out side)` for `valid` 3×3 convolutions around a 2×2 average
+/// pool. For `conv_mini` (8×8 input): 6 → 3 → 1.
+fn conv_geom(dims: &Dims) -> (usize, usize, usize) {
+    let o1 = dims.img - CONV_K + 1;
+    let pooled = o1 / POOL;
+    let o2 = pooled - CONV_K + 1;
+    (o1, pooled, o2)
+}
+
+/// `(name, shape, layer_type, depth, wd)` rows, in manifest parameter
+/// order. GPT rows carry per-block `h<i>.` prefixes so fig3's depth axis
+/// is real; conv weights are stored OIHW (`fan_out_axis` 0), so the
+/// matrix view is `(C_out, C_in·kh·kw)` and `fan_in` compression averages
+/// over `(C_in, kh, kw)`.
+fn param_rows(dims: &Dims) -> Vec<(String, Vec<usize>, &'static str, i64, bool)> {
     let (v, d, h) = (dims.vocab, dims.d, dims.hidden);
     match dims.family {
         Family::Mlp => vec![
-            ("tok_embd", vec![v, d], "tok_embd", -1, true),
-            ("mlp_up", vec![h, d], "mlp_up", 0, true),
-            ("mlp_down", vec![d, h], "mlp_down", 0, true),
-            ("lm_head", vec![v, d], "lm_head", 1, true),
+            ("tok_embd".into(), vec![v, d], "tok_embd", -1, true),
+            ("mlp_up".into(), vec![h, d], "mlp_up", 0, true),
+            ("mlp_down".into(), vec![d, h], "mlp_down", 0, true),
+            ("lm_head".into(), vec![v, d], "lm_head", 1, true),
         ],
-        Family::Gpt => vec![
-            ("tok_embd", vec![v, d], "tok_embd", -1, true),
-            ("pos_embd", vec![dims.ctx, d], "pos_embd", -1, false),
-            ("h0.ln_attn", vec![d], "ln_attn", 0, false),
-            ("h0.attn_q", vec![d, d], "attn_q", 0, true),
-            ("h0.attn_k", vec![d, d], "attn_k", 0, true),
-            ("h0.attn_v", vec![d, d], "attn_v", 0, true),
-            ("h0.attn_proj", vec![d, d], "attn_proj", 0, true),
-            ("h0.ln_mlp", vec![d], "ln_mlp", 0, false),
-            ("h0.mlp_up", vec![h, d], "mlp_up", 0, true),
-            ("h0.mlp_down", vec![d, h], "mlp_down", 0, true),
-            ("ln_final", vec![d], "ln_final", 1, false),
-            ("lm_head", vec![v, d], "lm_head", 1, true),
-        ],
+        Family::Gpt => {
+            let mut rows: Vec<(String, Vec<usize>, &'static str, i64, bool)> = vec![
+                ("tok_embd".into(), vec![v, d], "tok_embd", -1, true),
+                ("pos_embd".into(), vec![dims.ctx, d], "pos_embd", -1, false),
+            ];
+            for b in 0..dims.blocks {
+                let i = b as i64;
+                rows.push((format!("h{b}.ln_attn"), vec![d], "ln_attn", i, false));
+                rows.push((format!("h{b}.attn_q"), vec![d, d], "attn_q", i, true));
+                rows.push((format!("h{b}.attn_k"), vec![d, d], "attn_k", i, true));
+                rows.push((format!("h{b}.attn_v"), vec![d, d], "attn_v", i, true));
+                rows.push((format!("h{b}.attn_proj"), vec![d, d], "attn_proj", i, true));
+                rows.push((format!("h{b}.ln_mlp"), vec![d], "ln_mlp", i, false));
+                rows.push((format!("h{b}.mlp_up"), vec![h, d], "mlp_up", i, true));
+                rows.push((format!("h{b}.mlp_down"), vec![d, h], "mlp_down", i, true));
+            }
+            let top = dims.blocks as i64;
+            rows.push(("ln_final".into(), vec![d], "ln_final", top, false));
+            rows.push(("lm_head".into(), vec![v, d], "lm_head", top, true));
+            rows
+        }
+        Family::Conv => {
+            let (_, _, o2) = conv_geom(dims);
+            vec![
+                (
+                    "conv1".into(),
+                    vec![d, dims.channels, CONV_K, CONV_K],
+                    "conv",
+                    0,
+                    true,
+                ),
+                ("conv2".into(), vec![h, d, CONV_K, CONV_K], "conv", 1, true),
+                ("head".into(), vec![v, o2 * o2 * h], "head", 2, true),
+            ]
+        }
     }
 }
 
@@ -153,25 +237,43 @@ fn manifest_json(
     root.set("kind", kind);
 
     let mut meta = Value::obj();
-    meta.set("name", model)
-        .set("family", match dims.family {
-            Family::Mlp => "mlp",
-            Family::Gpt => "gpt",
-        })
-        .set("vocab", dims.vocab)
-        .set("d_model", dims.d)
-        .set("hidden", dims.hidden)
-        .set("n_heads", dims.heads)
-        .set("ctx", dims.ctx)
-        .set("batch", dims.batch)
-        .set("native", true);
+    match dims.family {
+        Family::Mlp | Family::Gpt => {
+            meta.set("name", model)
+                .set(
+                    "family",
+                    if dims.family == Family::Mlp { "mlp" } else { "gpt" },
+                )
+                .set("vocab", dims.vocab)
+                .set("d_model", dims.d)
+                .set("hidden", dims.hidden)
+                .set("n_heads", dims.heads)
+                .set("ctx", dims.ctx)
+                .set("batch", dims.batch)
+                .set("native", true);
+            if dims.family == Family::Gpt {
+                meta.set("n_blocks", dims.blocks);
+            }
+        }
+        Family::Conv => {
+            meta.set("name", model)
+                .set("family", "conv")
+                .set("classes", dims.vocab)
+                .set("img", dims.img)
+                .set("channels", dims.channels)
+                .set("c1", dims.d)
+                .set("c2", dims.hidden)
+                .set("batch", dims.batch)
+                .set("native", true);
+        }
+    }
     root.set("model", meta);
 
     let rows = param_rows(dims);
     let mut params = Vec::new();
     for (name, shape, lt, depth, wd) in &rows {
         let mut p = Value::obj();
-        p.set("name", *name)
+        p.set("name", name.clone())
             .set("shape", shape.clone())
             .set("layer_type", *lt)
             .set("depth", *depth)
@@ -184,12 +286,31 @@ fn manifest_json(
     root.set("params", params);
 
     let mut batch = Vec::new();
-    for name in ["x", "y"] {
-        let mut b = Value::obj();
-        b.set("name", name)
-            .set("shape", vec![dims.batch, dims.ctx])
-            .set("dtype", "s32");
-        batch.push(b);
+    match dims.family {
+        Family::Conv => {
+            let mut x = Value::obj();
+            x.set("name", "x")
+                .set(
+                    "shape",
+                    vec![dims.batch, dims.img, dims.img, dims.channels],
+                )
+                .set("dtype", "f32");
+            batch.push(x);
+            let mut y = Value::obj();
+            y.set("name", "y")
+                .set("shape", vec![dims.batch])
+                .set("dtype", "s32");
+            batch.push(y);
+        }
+        _ => {
+            for name in ["x", "y"] {
+                let mut b = Value::obj();
+                b.set("name", name)
+                    .set("shape", vec![dims.batch, dims.ctx])
+                    .set("dtype", "s32");
+                batch.push(b);
+            }
+        }
     }
     root.set("batch", batch);
 
@@ -203,7 +324,7 @@ fn manifest_json(
         .set("clip_norm", h.clip_norm);
     root.set("hypers", hypers);
 
-    let param_names: Vec<&str> = rows.iter().map(|r| r.0).collect();
+    let param_names: Vec<&str> = rows.iter().map(|r| r.0.as_str()).collect();
     match kind {
         "grad_step" => {
             let mut inputs: Vec<String> =
@@ -237,6 +358,20 @@ fn manifest_json(
 }
 
 /// Builtin `grad_step` manifest for a native model.
+///
+/// ```
+/// use slimadam::runtime::backend::native;
+///
+/// let man = native::grad_manifest("gpt_deep").unwrap();
+/// // 4 blocks × 8 tensors + embeddings + final norm/head
+/// assert_eq!(man.n_params(), 2 + 4 * 8 + 2);
+/// let max_depth = man.params.iter().map(|p| p.depth).max().unwrap();
+/// assert_eq!(max_depth, 4); // fig3's depth axis is real
+///
+/// let conv = native::grad_manifest("conv_mini").unwrap();
+/// assert_eq!(conv.params[0].shape, vec![8, 2, 3, 3]); // OIHW conv weight
+/// assert_eq!(conv.token_bound(), 10); // classes
+/// ```
 pub fn grad_manifest(model: &str) -> Result<Manifest> {
     Ok(artifact(&format!("{model}.grad"))?.manifest)
 }
@@ -281,6 +416,17 @@ thread_local! {
 /// re-parsed through [`Manifest::parse`] so native and PJRT artifacts
 /// share one manifest contract (and the hash that keys the executable
 /// cache digests the same bytes a file would hold).
+///
+/// ```
+/// use slimadam::runtime::backend::native;
+///
+/// let art = native::artifact("conv_mini.train.slimadam").unwrap();
+/// assert_eq!(art.manifest.kind, "train_step");
+/// // conv weights compress fan_in over (C_in, kh, kw): one V per filter
+/// let v: usize = art.manifest.v_shapes.as_ref().unwrap()[0].iter().product();
+/// assert_eq!(v, 8);
+/// assert!(native::artifact("conv_mini.nonsense").is_err());
+/// ```
 pub fn artifact(name: &str) -> Result<Artifact> {
     ARTIFACTS.with(|cache| {
         if let Some(art) = cache.borrow().get(name) {
@@ -420,6 +566,14 @@ struct NativeExecutable {
     dims: Dims,
 }
 
+/// One job's decoded batch inputs, per model family.
+enum BatchIn {
+    /// LM families: `batch × ctx` next-token pairs.
+    Tokens { x: Vec<i32>, y: Vec<i32> },
+    /// Conv family: NHWC f32 images plus one class label per sample.
+    Images { x: Vec<f32>, y: Vec<i32> },
+}
+
 impl NativeExecutable {
     fn batch_tokens(&self, lit: &Literal, what: &str) -> Result<Vec<i32>> {
         let toks = lit
@@ -439,15 +593,51 @@ impl NativeExecutable {
         Ok(toks)
     }
 
+    /// Decode one job's `(x, y)` batch literals for this model's family.
+    fn read_batch(&self, x: &Literal, y: &Literal) -> Result<BatchIn> {
+        match self.dims.family {
+            Family::Conv => {
+                let d = &self.dims;
+                let imgs = x
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading image batch: {e}"))?;
+                let want = d.batch * d.img * d.img * d.channels;
+                anyhow::ensure!(
+                    imgs.len() == want,
+                    "image batch has {} elements, want {want}",
+                    imgs.len()
+                );
+                let labels = y
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("reading label batch: {e}"))?;
+                anyhow::ensure!(
+                    labels.len() == d.batch,
+                    "label batch has {} entries, want {}",
+                    labels.len(),
+                    d.batch
+                );
+                let bound = d.vocab as i32;
+                anyhow::ensure!(
+                    labels.iter().all(|&c| (0..bound).contains(&c)),
+                    "label out of range [0, {bound})"
+                );
+                Ok(BatchIn::Images { x: imgs, y: labels })
+            }
+            _ => Ok(BatchIn::Tokens {
+                x: self.batch_tokens(x, "x")?,
+                y: self.batch_tokens(y, "y")?,
+            }),
+        }
+    }
+
     fn run_grad(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let n = self.manifest.n_params();
         let params: Vec<Tensor> = inputs[..n]
             .iter()
             .map(literal_to_tensor)
             .collect::<Result<_>>()?;
-        let x = self.batch_tokens(&inputs[n], "x")?;
-        let y = self.batch_tokens(&inputs[n + 1], "y")?;
-        let (loss, grads) = loss_and_grads(&self.dims, &params, &x, &y);
+        let batch = self.read_batch(&inputs[n], &inputs[n + 1])?;
+        let (loss, grads) = loss_and_grads(&self.dims, &params, &batch);
         let mut out = Vec::with_capacity(1 + n);
         out.push(scalar_f32(loss as f32));
         for g in &grads {
@@ -459,39 +649,77 @@ impl NativeExecutable {
     fn run_train(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let man = &self.manifest;
         let n = man.n_params();
-        let mut params: Vec<Tensor> = inputs[..n]
-            .iter()
-            .map(literal_to_tensor)
-            .collect::<Result<_>>()?;
-        let mut m: Vec<Tensor> = inputs[n..2 * n]
-            .iter()
-            .map(literal_to_tensor)
-            .collect::<Result<_>>()?;
-        let mut v: Vec<Tensor> = inputs[2 * n..3 * n]
-            .iter()
-            .map(literal_to_tensor)
-            .collect::<Result<_>>()?;
-        let x = self.batch_tokens(&inputs[3 * n], "x")?;
-        let y = self.batch_tokens(&inputs[3 * n + 1], "y")?;
-        let step = crate::runtime::literal::scalar_value(&inputs[3 * n + 2])?;
-        let lr = crate::runtime::literal::scalar_value(&inputs[3 * n + 3])?;
-        let t = step.round().max(1.0) as usize;
-
         let hypers = man.hypers.unwrap_or_default();
         let k_modes = man
             .k_modes
             .as_ref()
             .ok_or_else(|| anyhow!("native train_step manifest missing k_modes"))?;
+        let v_shapes = man
+            .v_shapes
+            .as_ref()
+            .ok_or_else(|| anyhow!("native train_step manifest missing v_shapes"))?;
 
-        let (loss, mut grads) = loss_and_grads(&self.dims, &params, &x, &y);
-        let grad_norm = clip_global_norm(&mut grads, hypers.clip_norm);
-        fused_update(man, k_modes, &hypers, &mut params, &mut m, &mut v, &grads, t, lr);
+        let read = |lit: &Literal, len: usize, what: &str| -> Result<Vec<f32>> {
+            let vals = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("reading {what}: {e}"))?;
+            anyhow::ensure!(
+                vals.len() == len,
+                "{what} has {} elements, want {len}",
+                vals.len()
+            );
+            Ok(vals)
+        };
+        let mut w_l: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut m_l: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut v_l: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for i in 0..n {
+            w_l.push(read(&inputs[i], man.params[i].numel(), "param")?);
+        }
+        for i in 0..n {
+            m_l.push(read(&inputs[n + i], man.params[i].numel(), "m")?);
+        }
+        for (i, vs) in v_shapes.iter().enumerate() {
+            v_l.push(read(&inputs[2 * n + i], vs.iter().product(), "v")?);
+        }
+        let batch = self.read_batch(&inputs[3 * n], &inputs[3 * n + 1])?;
+        let step = crate::runtime::literal::scalar_value(&inputs[3 * n + 2])?;
+        let lr = crate::runtime::literal::scalar_value(&inputs[3 * n + 3])?;
+        let t = step.round().max(1.0) as usize;
+
+        // The sequential step IS the lanes = 1 batched step: the same
+        // kernels, the same iteration order, one lane.
+        let params_f64: Vec<Vec<f64>> = w_l
+            .iter()
+            .map(|s| s.iter().map(|&x| x as f64).collect())
+            .collect();
+        let (losses, grads_f64) = loss_and_grads_l(
+            &self.dims,
+            &params_f64,
+            std::slice::from_ref(&batch),
+            1,
+        );
+        let mut grads_l: Vec<Vec<f32>> = grads_f64
+            .iter()
+            .map(|g| g.iter().map(|&x| x as f32).collect())
+            .collect();
+        let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, 1);
+        fused_update_l(
+            man, k_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &[t],
+            &[lr], 1,
+        );
 
         let mut out = Vec::with_capacity(2 + 3 * n);
-        out.push(scalar_f32(loss as f32));
-        out.push(scalar_f32(grad_norm as f32));
-        for tensor in params.iter().chain(&m).chain(&v) {
-            out.push(tensor_to_literal(tensor)?);
+        out.push(scalar_f32(losses[0] as f32));
+        out.push(scalar_f32(norms[0] as f32));
+        for (i, s) in w_l.into_iter().enumerate() {
+            out.push(tensor_to_literal(&Tensor::from_vec(&man.params[i].shape, s))?);
+        }
+        for (i, s) in m_l.into_iter().enumerate() {
+            out.push(tensor_to_literal(&Tensor::from_vec(&man.params[i].shape, s))?);
+        }
+        for (i, s) in v_l.into_iter().enumerate() {
+            out.push(tensor_to_literal(&Tensor::from_vec(&v_shapes[i], s))?);
         }
         Ok(out)
     }
@@ -535,13 +763,11 @@ impl NativeExecutable {
             let stacked = self.stack_slot(jobs, i, man.params[i].numel(), "param")?;
             params_l.push(stacked.iter().map(|&x| x as f64).collect());
         }
-        let mut xs = Vec::with_capacity(lanes);
-        let mut ys = Vec::with_capacity(lanes);
+        let mut batches = Vec::with_capacity(lanes);
         for job in jobs {
-            xs.push(self.batch_tokens(&job[n], "x")?);
-            ys.push(self.batch_tokens(&job[n + 1], "y")?);
+            batches.push(self.read_batch(&job[n], &job[n + 1])?);
         }
-        let (losses, grads_l) = loss_and_grads_l(&self.dims, &params_l, &xs, &ys, lanes);
+        let (losses, grads_l) = loss_and_grads_l(&self.dims, &params_l, &batches, lanes);
         let mut out = Vec::with_capacity(lanes);
         for b in 0..lanes {
             let mut job_out = Vec::with_capacity(1 + n);
@@ -588,13 +814,11 @@ impl NativeExecutable {
         for (i, vs) in v_shapes.iter().enumerate() {
             v_l.push(self.stack_slot(jobs, 2 * n + i, vs.iter().product(), "v")?);
         }
-        let mut xs = Vec::with_capacity(lanes);
-        let mut ys = Vec::with_capacity(lanes);
+        let mut batches = Vec::with_capacity(lanes);
         let mut ts = Vec::with_capacity(lanes);
         let mut lrs = Vec::with_capacity(lanes);
         for job in jobs {
-            xs.push(self.batch_tokens(&job[3 * n], "x")?);
-            ys.push(self.batch_tokens(&job[3 * n + 1], "y")?);
+            batches.push(self.read_batch(&job[3 * n], &job[3 * n + 1])?);
             let step = crate::runtime::literal::scalar_value(&job[3 * n + 2])?;
             ts.push(step.round().max(1.0) as usize);
             lrs.push(crate::runtime::literal::scalar_value(&job[3 * n + 3])?);
@@ -605,7 +829,7 @@ impl NativeExecutable {
             .map(|s| s.iter().map(|&x| x as f64).collect())
             .collect();
         let (losses, grads_f64) =
-            loss_and_grads_l(&self.dims, &params_f64, &xs, &ys, lanes);
+            loss_and_grads_l(&self.dims, &params_f64, &batches, lanes);
         // f64 → f32 cast before clipping, exactly as the scalar path
         let mut grads_l: Vec<Vec<f32>> = grads_f64
             .iter()
@@ -683,110 +907,26 @@ impl Executable for NativeExecutable {
 }
 
 // ---------------------------------------------------------------------------
-// Fused reduced-V AdamW update (Eq. 2, mirrors optim::adamk::AdamK)
-// ---------------------------------------------------------------------------
-
-#[allow(clippy::too_many_arguments)]
-fn fused_update(
-    man: &Manifest,
-    k_modes: &[KMode],
-    h: &Hypers,
-    params: &mut [Tensor],
-    m: &mut [Tensor],
-    v: &mut [Tensor],
-    grads: &[Tensor],
-    t: usize,
-    lr: f32,
-) {
-    let b1 = h.beta1 as f32;
-    let b2 = h.beta2 as f32;
-    let eps = h.eps as f32;
-    let bc1 = 1.0 / (1.0 - b1.powi(t as i32));
-    let bc2 = 1.0 / (1.0 - b2.powi(t as i32));
-    for i in 0..params.len() {
-        let info = &man.params[i];
-        let k = crate::optim::adamk::effective_k(info, k_modes[i]);
-        let (rows, cols) = info.matrix_dims();
-        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
-        let w = &mut params[i].data;
-        let g = &grads[i].data;
-        let mi = &mut m[i].data;
-        let vi = &mut v[i].data;
-        if k == KMode::None {
-            // Exact AdamW: V is elementwise, no grouping pass needed.
-            for j in 0..w.len() {
-                let gj = g[j];
-                mi[j] = b1 * mi[j] + (1.0 - b1) * gj;
-                vi[j] = b2 * vi[j] + (1.0 - b2) * gj * gj;
-                let mh = mi[j] * bc1;
-                let vh = vi[j] * bc2;
-                w[j] -= lr * (mh / (vh.sqrt() + eps) + wd * w[j]);
-            }
-            continue;
-        }
-        // All native params have fan_out_axis 0, so the matrix view is the
-        // raw layout: row = j / cols, col = j % cols.
-        let group = |j: usize| -> usize {
-            match k {
-                KMode::None => j,
-                KMode::FanIn => j / cols,
-                KMode::FanOut => j % cols,
-                KMode::Both => 0,
-                KMode::Blocks(n) => (j / cols) * n / rows,
-            }
-        };
-        let gsize = match k {
-            KMode::None => 1.0,
-            KMode::FanIn => cols as f32,
-            KMode::FanOut => rows as f32,
-            KMode::Both => (rows * cols) as f32,
-            KMode::Blocks(n) => ((rows / n) * cols) as f32,
-        };
-        let mut sums = vec![0.0f32; vi.len()];
-        for (j, &gj) in g.iter().enumerate() {
-            sums[group(j)] += gj * gj;
-        }
-        for (vv, s) in vi.iter_mut().zip(&sums) {
-            *vv = b2 * *vv + (1.0 - b2) * (s / gsize);
-        }
-        for j in 0..w.len() {
-            let gj = g[j];
-            mi[j] = b1 * mi[j] + (1.0 - b1) * gj;
-            let mh = mi[j] * bc1;
-            let vh = vi[group(j)] * bc2;
-            w[j] -= lr * (mh / (vh.sqrt() + eps) + wd * w[j]);
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
 // Forward/backward interpreters (f64 internal, f32 at the boundary)
+//
+// Single implementation: the lane-stacked kernels below. The scalar entry
+// point is the lanes = 1 instantiation.
 // ---------------------------------------------------------------------------
 
-/// Loss and gradients for one batch, in manifest parameter order. The f64
+/// Loss and gradients for one job, in manifest parameter order. The f64
 /// loss is exposed for finite-difference tests; engines see the f32 cast.
-fn loss_and_grads(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32]) -> (f64, Vec<Tensor>) {
-    let mut grads: Vec<Vec<f64>> = params.iter().map(|p| vec![0.0; p.numel()]).collect();
-    let loss = match dims.family {
-        Family::Mlp => mlp_pass(dims, params, x, y, &mut grads),
-        Family::Gpt => gpt_pass(dims, params, x, y, &mut grads),
-    };
+/// Runs the lane kernels at lanes = 1 (with one lane the lane-major
+/// layout is the flat layout, so this is free of any reshuffling).
+fn loss_and_grads(dims: &Dims, params: &[Tensor], batch: &BatchIn) -> (f64, Vec<Tensor>) {
+    let params_l: Vec<Vec<f64>> = params.iter().map(f64s).collect();
+    let (losses, grads_l) =
+        loss_and_grads_l(dims, &params_l, std::slice::from_ref(batch), 1);
     let out = params
         .iter()
-        .zip(&grads)
+        .zip(&grads_l)
         .map(|(p, g)| Tensor::from_vec(&p.shape, g.iter().map(|&x| x as f32).collect()))
         .collect();
-    (loss, out)
-}
-
-/// Forward-only loss (finite-difference harness for the tests below).
-#[cfg(test)]
-fn loss_only(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32]) -> f64 {
-    let mut grads: Vec<Vec<f64>> = params.iter().map(|p| vec![0.0; p.numel()]).collect();
-    match dims.family {
-        Family::Mlp => mlp_pass(dims, params, x, y, &mut grads),
-        Family::Gpt => gpt_pass(dims, params, x, y, &mut grads),
-    }
+    (losses[0], out)
 }
 
 #[inline]
@@ -794,374 +934,56 @@ fn f64s(t: &Tensor) -> Vec<f64> {
     t.data.iter().map(|&x| x as f64).collect()
 }
 
-/// `out[r] = W[r,:] · v` for row-major `W (rows × cols)`.
-fn matvec(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64]) {
-    for r in 0..rows {
-        let mut s = 0.0;
-        let row = &w[r * cols..(r + 1) * cols];
-        for (a, b) in row.iter().zip(v) {
-            s += a * b;
+/// Per-lane token views of a token-family batch set.
+fn token_lanes(batches: &[BatchIn]) -> (Vec<&[i32]>, Vec<&[i32]>) {
+    let mut xs = Vec::with_capacity(batches.len());
+    let mut ys = Vec::with_capacity(batches.len());
+    for b in batches {
+        match b {
+            BatchIn::Tokens { x, y } => {
+                xs.push(x.as_slice());
+                ys.push(y.as_slice());
+            }
+            BatchIn::Images { .. } => {
+                unreachable!("token-family model fed an image batch")
+            }
         }
-        out[r] = s;
     }
+    (xs, ys)
 }
 
-/// `out[c] += W[:,c] · v` (transpose matvec, accumulating).
-fn matvec_t_acc(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64]) {
-    for r in 0..rows {
-        let row = &w[r * cols..(r + 1) * cols];
-        let vr = v[r];
-        for (o, a) in out.iter_mut().zip(row) {
-            *o += a * vr;
-        }
-    }
-}
-
-/// `dW[r,c] += dv[r] * u[c]` (outer-product accumulation).
-fn outer_acc(dw: &mut [f64], rows: usize, cols: usize, dv: &[f64], u: &[f64]) {
-    for r in 0..rows {
-        let row = &mut dw[r * cols..(r + 1) * cols];
-        let d = dv[r];
-        for (o, b) in row.iter_mut().zip(u) {
-            *o += d * b;
-        }
-    }
-}
-
-/// Softmax cross-entropy at one position: fills `dlogits` with
-/// `(p - onehot(y)) * scale` and returns `-ln p[y]`.
-fn softmax_ce(logits: &[f64], y: usize, scale: f64, dlogits: &mut [f64]) -> f64 {
-    let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-    let mut z = 0.0;
-    for (d, &l) in dlogits.iter_mut().zip(logits) {
-        *d = (l - max).exp();
-        z += *d;
-    }
-    let loss = -(dlogits[y] / z).max(f64::MIN_POSITIVE).ln();
-    for d in dlogits.iter_mut() {
-        *d = *d / z * scale;
-    }
-    dlogits[y] -= scale;
-    loss
-}
-
-/// RMS-norm forward: `y = x / rms(x) * g`; returns the saved rms.
-fn rms_fwd(x: &[f64], g: &[f64], out: &mut [f64]) -> f64 {
-    let d = x.len() as f64;
-    let r = (x.iter().map(|v| v * v).sum::<f64>() / d + RMS_EPS).sqrt();
-    for i in 0..x.len() {
-        out[i] = x[i] / r * g[i];
-    }
-    r
-}
-
-/// RMS-norm backward: accumulates `dx` and `dg` from `dy`.
-fn rms_bwd(x: &[f64], g: &[f64], r: f64, dy: &[f64], dx: &mut [f64], dg: &mut [f64]) {
-    let d = x.len() as f64;
-    let mut dot = 0.0;
-    for i in 0..x.len() {
-        dg[i] += dy[i] * x[i] / r;
-        dot += dy[i] * g[i] * x[i];
-    }
-    let coef = dot / (d * r * r * r);
-    for i in 0..x.len() {
-        dx[i] += dy[i] * g[i] / r - x[i] * coef;
-    }
-}
-
-/// Per-token MLP language model: `logits = W_head·(W_down·relu(W_up·E[x]))`.
-/// Params: `[tok_embd (V×D), mlp_up (H×D), mlp_down (D×H), lm_head (V×D)]`.
-fn mlp_pass(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32], grads: &mut [Vec<f64>]) -> f64 {
-    let (v, d, h) = (dims.vocab, dims.d, dims.hidden);
-    let e = f64s(&params[0]);
-    let wu = f64s(&params[1]);
-    let wd = f64s(&params[2]);
-    let wh = f64s(&params[3]);
-    let n_tok = x.len();
-    let scale = 1.0 / n_tok as f64;
-
-    let mut u_pre = vec![0.0; h];
-    let mut u = vec![0.0; h];
-    let mut z = vec![0.0; d];
-    let mut logits = vec![0.0; v];
-    let mut dlogits = vec![0.0; v];
-    let mut dz = vec![0.0; d];
-    let mut du = vec![0.0; h];
-    let mut de = vec![0.0; d];
-    let mut loss = 0.0;
-
-    for n in 0..n_tok {
-        let tok = x[n] as usize;
-        let emb = &e[tok * d..(tok + 1) * d];
-        matvec(&wu, h, d, emb, &mut u_pre);
-        for i in 0..h {
-            u[i] = u_pre[i].max(0.0);
-        }
-        matvec(&wd, d, h, &u, &mut z);
-        matvec(&wh, v, d, &z, &mut logits);
-        loss += softmax_ce(&logits, y[n] as usize, scale, &mut dlogits);
-
-        // backward
-        outer_acc(&mut grads[3], v, d, &dlogits, &z);
-        dz.fill(0.0);
-        matvec_t_acc(&wh, v, d, &dlogits, &mut dz);
-        outer_acc(&mut grads[2], d, h, &dz, &u);
-        du.fill(0.0);
-        matvec_t_acc(&wd, d, h, &dz, &mut du);
-        for i in 0..h {
-            if u_pre[i] <= 0.0 {
-                du[i] = 0.0;
+/// Per-lane image/label views of a conv-family batch set.
+fn image_lanes(batches: &[BatchIn]) -> (Vec<&[f32]>, Vec<&[i32]>) {
+    let mut xs = Vec::with_capacity(batches.len());
+    let mut ys = Vec::with_capacity(batches.len());
+    for b in batches {
+        match b {
+            BatchIn::Images { x, y } => {
+                xs.push(x.as_slice());
+                ys.push(y.as_slice());
             }
-        }
-        outer_acc(&mut grads[1], h, d, &du, emb);
-        de.fill(0.0);
-        matvec_t_acc(&wu, h, d, &du, &mut de);
-        for (gi, di) in grads[0][tok * d..(tok + 1) * d].iter_mut().zip(&de) {
-            *gi += di;
-        }
-    }
-    loss * scale
-}
-
-/// One-block causal transformer with RMS-norm (scale-only), multi-head
-/// attention and a ReLU MLP, residual connections around both sublayers.
-/// Params (manifest order): tok_embd, pos_embd, ln_attn, attn_q/k/v/proj,
-/// ln_mlp, mlp_up, mlp_down, ln_final, lm_head.
-fn gpt_pass(dims: &Dims, params: &[Tensor], x: &[i32], y: &[i32], grads: &mut [Vec<f64>]) -> f64 {
-    let (v, d, f, heads, t_ctx, b) =
-        (dims.vocab, dims.d, dims.hidden, dims.heads, dims.ctx, dims.batch);
-    let dh = d / heads;
-    let att_scale = 1.0 / (dh as f64).sqrt();
-    let p: Vec<Vec<f64>> = params.iter().map(f64s).collect();
-    let (e, pos, g1, wq, wk, wv, wp, g2, wu, wd_, g3, wh) = (
-        &p[0], &p[1], &p[2], &p[3], &p[4], &p[5], &p[6], &p[7], &p[8], &p[9], &p[10], &p[11],
-    );
-    let scale = 1.0 / (b * t_ctx) as f64;
-    let mut loss = 0.0;
-
-    // per-row activation buffers (T × dim, row-major by position)
-    let td = t_ctx * d;
-    let mut h0 = vec![0.0; td];
-    let mut a = vec![0.0; td];
-    let mut r1 = vec![0.0; t_ctx];
-    let mut q = vec![0.0; td];
-    let mut k = vec![0.0; td];
-    let mut vv = vec![0.0; td];
-    let mut att = vec![0.0; heads * t_ctx * t_ctx];
-    let mut ctx = vec![0.0; td];
-    let mut o = vec![0.0; td];
-    let mut h1 = vec![0.0; td];
-    let mut m_in = vec![0.0; td];
-    let mut r2 = vec![0.0; t_ctx];
-    let mut u_pre = vec![0.0; t_ctx * f];
-    let mut u = vec![0.0; t_ctx * f];
-    let mut h2 = vec![0.0; td];
-    let mut fo = vec![0.0; td];
-    let mut r3 = vec![0.0; t_ctx];
-    let mut logits = vec![0.0; v];
-    let mut dlogits = vec![0.0; v];
-    // backward buffers, zeroed per row (accumulated within one row)
-    let mut dh2 = vec![0.0; td];
-    let mut dh1 = vec![0.0; td];
-    let mut dh0 = vec![0.0; td];
-    let mut dctx = vec![0.0; td];
-    let mut dq = vec![0.0; td];
-    let mut dk = vec![0.0; td];
-    let mut dv = vec![0.0; td];
-    let mut da = vec![0.0; td];
-    let mut dfo = vec![0.0; d];
-    let mut du = vec![0.0; f];
-    let mut dm_in = vec![0.0; d];
-
-    for row in 0..b {
-        let xs = &x[row * t_ctx..(row + 1) * t_ctx];
-        let ys = &y[row * t_ctx..(row + 1) * t_ctx];
-
-        // ---- forward ----
-        for t in 0..t_ctx {
-            let tok = xs[t] as usize;
-            for i in 0..d {
-                h0[t * d + i] = e[tok * d + i] + pos[t * d + i];
-            }
-            r1[t] = rms_fwd(&h0[t * d..(t + 1) * d], g1, &mut a[t * d..(t + 1) * d]);
-            matvec(wq, d, d, &a[t * d..(t + 1) * d], &mut q[t * d..(t + 1) * d]);
-            matvec(wk, d, d, &a[t * d..(t + 1) * d], &mut k[t * d..(t + 1) * d]);
-            matvec(wv, d, d, &a[t * d..(t + 1) * d], &mut vv[t * d..(t + 1) * d]);
-        }
-        ctx.fill(0.0);
-        for hh in 0..heads {
-            let off = hh * dh;
-            for t in 0..t_ctx {
-                let arow = &mut att[(hh * t_ctx + t) * t_ctx..(hh * t_ctx + t + 1) * t_ctx];
-                let mut max = f64::NEG_INFINITY;
-                for tp in 0..=t {
-                    let mut s = 0.0;
-                    for i in 0..dh {
-                        s += q[t * d + off + i] * k[tp * d + off + i];
-                    }
-                    arow[tp] = s * att_scale;
-                    max = max.max(arow[tp]);
-                }
-                let mut z = 0.0;
-                for tp in 0..=t {
-                    arow[tp] = (arow[tp] - max).exp();
-                    z += arow[tp];
-                }
-                for tp in 0..=t {
-                    arow[tp] /= z;
-                    for i in 0..dh {
-                        ctx[t * d + off + i] += arow[tp] * vv[tp * d + off + i];
-                    }
-                }
-                for item in arow.iter_mut().skip(t + 1) {
-                    *item = 0.0;
-                }
-            }
-        }
-        for t in 0..t_ctx {
-            matvec(wp, d, d, &ctx[t * d..(t + 1) * d], &mut o[t * d..(t + 1) * d]);
-            for i in 0..d {
-                h1[t * d + i] = h0[t * d + i] + o[t * d + i];
-            }
-            r2[t] = rms_fwd(&h1[t * d..(t + 1) * d], g2, &mut m_in[t * d..(t + 1) * d]);
-            matvec(wu, f, d, &m_in[t * d..(t + 1) * d], &mut u_pre[t * f..(t + 1) * f]);
-            for i in 0..f {
-                u[t * f + i] = u_pre[t * f + i].max(0.0);
-            }
-            // h2 = h1 + W_down u
-            let h2t = &mut h2[t * d..(t + 1) * d];
-            matvec(wd_, d, f, &u[t * f..(t + 1) * f], h2t);
-            for i in 0..d {
-                h2t[i] += h1[t * d + i];
-            }
-            r3[t] = rms_fwd(&h2[t * d..(t + 1) * d], g3, &mut fo[t * d..(t + 1) * d]);
-        }
-
-        // ---- backward ----
-        for buf in [
-            &mut dh2, &mut dh1, &mut dh0, &mut dctx, &mut dq, &mut dk, &mut dv, &mut da,
-        ] {
-            buf.fill(0.0);
-        }
-
-        for t in 0..t_ctx {
-            matvec(wh, v, d, &fo[t * d..(t + 1) * d], &mut logits);
-            loss += softmax_ce(&logits, ys[t] as usize, scale, &mut dlogits);
-            outer_acc(&mut grads[11], v, d, &dlogits, &fo[t * d..(t + 1) * d]);
-            dfo.fill(0.0);
-            matvec_t_acc(wh, v, d, &dlogits, &mut dfo);
-            rms_bwd(
-                &h2[t * d..(t + 1) * d],
-                g3,
-                r3[t],
-                &dfo,
-                &mut dh2[t * d..(t + 1) * d],
-                &mut grads[10],
-            );
-        }
-        for t in 0..t_ctx {
-            // h2 = h1 + W_down relu(W_up m_in)
-            let dh2t = &dh2[t * d..(t + 1) * d];
-            for i in 0..d {
-                dh1[t * d + i] += dh2t[i];
-            }
-            outer_acc(&mut grads[9], d, f, dh2t, &u[t * f..(t + 1) * f]);
-            du.fill(0.0);
-            matvec_t_acc(wd_, d, f, dh2t, &mut du);
-            for i in 0..f {
-                if u_pre[t * f + i] <= 0.0 {
-                    du[i] = 0.0;
-                }
-            }
-            outer_acc(&mut grads[8], f, d, &du, &m_in[t * d..(t + 1) * d]);
-            dm_in.fill(0.0);
-            matvec_t_acc(wu, f, d, &du, &mut dm_in);
-            rms_bwd(
-                &h1[t * d..(t + 1) * d],
-                g2,
-                r2[t],
-                &dm_in,
-                &mut dh1[t * d..(t + 1) * d],
-                &mut grads[7],
-            );
-        }
-        for t in 0..t_ctx {
-            // h1 = h0 + W_proj ctx
-            let dh1t = &dh1[t * d..(t + 1) * d];
-            for i in 0..d {
-                dh0[t * d + i] += dh1t[i];
-            }
-            outer_acc(&mut grads[6], d, d, dh1t, &ctx[t * d..(t + 1) * d]);
-            matvec_t_acc(wp, d, d, dh1t, &mut dctx[t * d..(t + 1) * d]);
-        }
-        for hh in 0..heads {
-            let off = hh * dh;
-            for t in 0..t_ctx {
-                let arow = &att[(hh * t_ctx + t) * t_ctx..(hh * t_ctx + t + 1) * t_ctx];
-                // d(att row) then softmax jacobian
-                let mut datt = vec![0.0; t + 1];
-                for (tp, dat) in datt.iter_mut().enumerate() {
-                    let mut s = 0.0;
-                    for i in 0..dh {
-                        s += dctx[t * d + off + i] * vv[tp * d + off + i];
-                    }
-                    *dat = s;
-                    for i in 0..dh {
-                        dv[tp * d + off + i] += arow[tp] * dctx[t * d + off + i];
-                    }
-                }
-                let dot: f64 = (0..=t).map(|tp| arow[tp] * datt[tp]).sum();
-                for (tp, dat) in datt.iter().enumerate() {
-                    let ds = arow[tp] * (dat - dot) * att_scale;
-                    for i in 0..dh {
-                        dq[t * d + off + i] += ds * k[tp * d + off + i];
-                        dk[tp * d + off + i] += ds * q[t * d + off + i];
-                    }
-                }
-            }
-        }
-        for t in 0..t_ctx {
-            let at = &a[t * d..(t + 1) * d];
-            outer_acc(&mut grads[3], d, d, &dq[t * d..(t + 1) * d], at);
-            outer_acc(&mut grads[4], d, d, &dk[t * d..(t + 1) * d], at);
-            outer_acc(&mut grads[5], d, d, &dv[t * d..(t + 1) * d], at);
-            let dat = &mut da[t * d..(t + 1) * d];
-            matvec_t_acc(wq, d, d, &dq[t * d..(t + 1) * d], dat);
-            matvec_t_acc(wk, d, d, &dk[t * d..(t + 1) * d], dat);
-            matvec_t_acc(wv, d, d, &dv[t * d..(t + 1) * d], dat);
-            rms_bwd(
-                &h0[t * d..(t + 1) * d],
-                g1,
-                r1[t],
-                &da[t * d..(t + 1) * d],
-                &mut dh0[t * d..(t + 1) * d],
-                &mut grads[2],
-            );
-        }
-        for t in 0..t_ctx {
-            let tok = xs[t] as usize;
-            for i in 0..d {
-                grads[0][tok * d + i] += dh0[t * d + i];
-                grads[1][t * d + i] += dh0[t * d + i];
+            BatchIn::Tokens { .. } => {
+                unreachable!("conv-family model fed a token batch")
             }
         }
     }
-    loss * scale
+    (xs, ys)
 }
 
 // ---------------------------------------------------------------------------
-// Lane-stacked batched interpreter (DESIGN.md §12)
+// Lane-stacked interpreter kernels (DESIGN.md §12)
 //
 // `run_batch` stacks B independent jobs along a trailing *lane* axis:
 // element `j` of job `b` lives at `j * lanes + b`, so the innermost loops
 // below walk unit-stride lane blocks the compiler can vectorize (B f64
-// accumulators per step instead of one). Every reduction keeps the scalar
-// interpreter's iteration order — sums run over the same non-lane index in
-// the same sequence, lanes merely add an independent dimension — so each
-// lane's floating-point operation sequence is exactly the scalar pass's,
-// and batched results are bit-for-bit identical to sequential `run` calls
-// (`run_batch_bit_identical_to_sequential` below and the scheduler-level
-// differential suite in `rust/tests/batched_agreement.rs`).
+// accumulators per step instead of one). Reductions run over the same
+// non-lane index in the same sequence regardless of the lane count —
+// lanes only add an independent dimension — so a job's floating-point
+// operation sequence is identical whether it runs alone (`run`, lanes=1)
+// or stacked with others, and batched results are bit-for-bit identical
+// to sequential `run` calls (`run_batch_bit_identical_to_sequential`
+// below and the scheduler-level differential suite in
+// `rust/tests/batched_agreement.rs`).
 // ---------------------------------------------------------------------------
 
 /// Lane matvec: `out[r] = W[r,:]·v` per lane (accumulation over `cols` in
@@ -1309,34 +1131,36 @@ fn rms_bwd_l(
     }
 }
 
-/// Lane-stacked loss + gradients: per-lane losses (scaled like the
-/// scalar `loss_and_grads`) and lane-major f64 gradients.
+/// Lane-stacked loss + gradients: per-lane losses and lane-major f64
+/// gradients, dispatched on the model family. Every family has exactly
+/// one pass implementation; lanes = 1 is the sequential case.
 fn loss_and_grads_l(
     dims: &Dims,
     params_l: &[Vec<f64>],
-    xs: &[Vec<i32>],
-    ys: &[Vec<i32>],
+    batches: &[BatchIn],
     lanes: usize,
 ) -> (Vec<f64>, Vec<Vec<f64>>) {
     let mut grads: Vec<Vec<f64>> = params_l.iter().map(|p| vec![0.0; p.len()]).collect();
     let losses = match dims.family {
-        Family::Mlp => mlp_pass_l(dims, params_l, xs, ys, &mut grads, lanes),
-        Family::Gpt => gpt_pass_l(dims, params_l, xs, ys, &mut grads, lanes),
+        Family::Mlp => mlp_pass_l(dims, params_l, batches, &mut grads, lanes),
+        Family::Gpt => gpt_pass_l(dims, params_l, batches, &mut grads, lanes),
+        Family::Conv => conv_pass_l(dims, params_l, batches, &mut grads, lanes),
     };
     (losses, grads)
 }
 
-/// Lane translation of `mlp_pass` — identical loop structure, every
-/// buffer carries a trailing lane axis, token gathers differ per lane.
+/// Per-token MLP language model: `logits = W_head·(W_down·relu(W_up·E[x]))`.
+/// Params: `[tok_embd (V×D), mlp_up (H×D), mlp_down (D×H), lm_head (V×D)]`.
+/// Every buffer carries a trailing lane axis; token gathers differ per lane.
 fn mlp_pass_l(
     dims: &Dims,
     params_l: &[Vec<f64>],
-    xs: &[Vec<i32>],
-    ys: &[Vec<i32>],
+    batches: &[BatchIn],
     grads_l: &mut [Vec<f64>],
     l: usize,
 ) -> Vec<f64> {
     let (v, d, h) = (dims.vocab, dims.d, dims.hidden);
+    let (xs, ys) = token_lanes(batches);
     let e = &params_l[0];
     let wu = &params_l[1];
     let wd = &params_l[2];
@@ -1399,51 +1223,66 @@ fn mlp_pass_l(
     losses.iter().map(|&x| x * scale).collect()
 }
 
-/// Lane translation of `gpt_pass` — identical loop structure; attention
-/// rows, norms and residuals all carry the trailing lane axis.
+/// N-block causal transformer with RMS-norm (scale-only), multi-head
+/// attention and a ReLU MLP, residual connections around both sublayers.
+/// Params (manifest order): tok_embd, pos_embd, then per block
+/// `h<i>.{ln_attn, attn_q, attn_k, attn_v, attn_proj, ln_mlp, mlp_up,
+/// mlp_down}`, then ln_final, lm_head. `gpt_micro` is the 1-block
+/// instantiation, `gpt_deep` the 4-block one; attention rows, norms and
+/// residuals all carry the trailing lane axis.
 fn gpt_pass_l(
     dims: &Dims,
     params_l: &[Vec<f64>],
-    xs: &[Vec<i32>],
-    ys: &[Vec<i32>],
+    batches: &[BatchIn],
     grads_l: &mut [Vec<f64>],
     l: usize,
 ) -> Vec<f64> {
-    let (v, d, f, heads, t_ctx, rows_b) =
-        (dims.vocab, dims.d, dims.hidden, dims.heads, dims.ctx, dims.batch);
+    let (v, d, f, heads, t_ctx, rows_b, nb) = (
+        dims.vocab,
+        dims.d,
+        dims.hidden,
+        dims.heads,
+        dims.ctx,
+        dims.batch,
+        dims.blocks,
+    );
     let dh = d / heads;
     let att_scale = 1.0 / (dh as f64).sqrt();
-    let (e, pos, g1, wq, wk, wv, wp, g2, wu, wd_, g3, wh) = (
-        &params_l[0], &params_l[1], &params_l[2], &params_l[3], &params_l[4],
-        &params_l[5], &params_l[6], &params_l[7], &params_l[8], &params_l[9],
-        &params_l[10], &params_l[11],
-    );
+    let (xs, ys) = token_lanes(batches);
+    let e = &params_l[0];
+    let pos = &params_l[1];
+    // block b's parameter index for offset o: 0 ln_attn, 1 q, 2 k, 3 v,
+    // 4 proj, 5 ln_mlp, 6 up, 7 down
+    let blk = |b: usize, o: usize| 2 + 8 * b + o;
+    let i_lnf = 2 + 8 * nb;
+    let i_head = i_lnf + 1;
     let scale = 1.0 / (rows_b * t_ctx) as f64;
     let mut losses = vec![0.0; l];
 
     let td = t_ctx * d;
-    let mut h0 = vec![0.0; td * l];
-    let mut a = vec![0.0; td * l];
-    let mut r1 = vec![0.0; t_ctx * l];
-    let mut q = vec![0.0; td * l];
-    let mut k = vec![0.0; td * l];
-    let mut vv = vec![0.0; td * l];
-    let mut att = vec![0.0; heads * t_ctx * t_ctx * l];
-    let mut ctx = vec![0.0; td * l];
-    let mut o = vec![0.0; td * l];
-    let mut h1 = vec![0.0; td * l];
-    let mut m_in = vec![0.0; td * l];
-    let mut r2 = vec![0.0; t_ctx * l];
-    let mut u_pre = vec![0.0; t_ctx * f * l];
-    let mut u = vec![0.0; t_ctx * f * l];
-    let mut h2 = vec![0.0; td * l];
+    // residual stream levels: hs[b] enters block b; hs[nb] feeds ln_final
+    let mut hs: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb + 1];
+    let mut dhs: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb + 1];
+    // per-block saved activations (needed by the backward pass)
+    let mut a_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
+    let mut q_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
+    let mut k_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
+    let mut vv_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
+    let mut att_s: Vec<Vec<f64>> = vec![vec![0.0; heads * t_ctx * t_ctx * l]; nb];
+    let mut ctx_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
+    let mut hmid_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
+    let mut min_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
+    let mut upre_s: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * f * l]; nb];
+    let mut u_s: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * f * l]; nb];
+    let mut r_attn: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * l]; nb];
+    let mut r_mlp: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * l]; nb];
     let mut fo = vec![0.0; td * l];
-    let mut r3 = vec![0.0; t_ctx * l];
+    let mut r_fin = vec![0.0; t_ctx * l];
+    // transient buffers shared across blocks
+    let mut o = vec![0.0; td * l];
     let mut logits = vec![0.0; v * l];
     let mut dlogits = vec![0.0; v * l];
-    let mut dh2 = vec![0.0; td * l];
-    let mut dh1 = vec![0.0; td * l];
-    let mut dh0 = vec![0.0; td * l];
+    let mut dhmid = vec![0.0; td * l];
     let mut dctx = vec![0.0; td * l];
     let mut dq = vec![0.0; td * l];
     let mut dk = vec![0.0; td * l];
@@ -1465,230 +1304,557 @@ fn gpt_pass_l(
             for b in 0..l {
                 let tok = xs[b][row * t_ctx + t] as usize;
                 for i in 0..d {
-                    h0[(t * d + i) * l + b] =
+                    hs[0][(t * d + i) * l + b] =
                         e[(tok * d + i) * l + b] + pos[(t * d + i) * l + b];
                 }
             }
-            let tr = t * d * l..(t + 1) * d * l;
-            rms_fwd_l(&h0[tr.clone()], g1, &mut a[tr.clone()], &mut r1[t * l..(t + 1) * l], l);
-            matvec_l(wq, d, d, &a[tr.clone()], &mut q[tr.clone()], l);
-            matvec_l(wk, d, d, &a[tr.clone()], &mut k[tr.clone()], l);
-            matvec_l(wv, d, d, &a[tr.clone()], &mut vv[tr.clone()], l);
         }
-        ctx.fill(0.0);
-        for hh in 0..heads {
-            let off = hh * dh;
+        for bi in 0..nb {
+            let (g1, wq, wk, wv, wp, g2, wu, wd_) = (
+                &params_l[blk(bi, 0)],
+                &params_l[blk(bi, 1)],
+                &params_l[blk(bi, 2)],
+                &params_l[blk(bi, 3)],
+                &params_l[blk(bi, 4)],
+                &params_l[blk(bi, 5)],
+                &params_l[blk(bi, 6)],
+                &params_l[blk(bi, 7)],
+            );
             for t in 0..t_ctx {
-                let arow0 = (hh * t_ctx + t) * t_ctx * l;
-                maxs.fill(f64::NEG_INFINITY);
-                for tp in 0..=t {
-                    let sbuf = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                    sbuf.fill(0.0);
-                    for i in 0..dh {
-                        let qi = &q[(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                        let ki = &k[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                        for b in 0..l {
-                            sbuf[b] += qi[b] * ki[b];
+                let tr = t * d * l..(t + 1) * d * l;
+                rms_fwd_l(
+                    &hs[bi][tr.clone()],
+                    g1,
+                    &mut a_s[bi][tr.clone()],
+                    &mut r_attn[bi][t * l..(t + 1) * l],
+                    l,
+                );
+                matvec_l(wq, d, d, &a_s[bi][tr.clone()], &mut q_s[bi][tr.clone()], l);
+                matvec_l(wk, d, d, &a_s[bi][tr.clone()], &mut k_s[bi][tr.clone()], l);
+                matvec_l(wv, d, d, &a_s[bi][tr.clone()], &mut vv_s[bi][tr], l);
+            }
+            {
+                let att = &mut att_s[bi];
+                let ctx = &mut ctx_s[bi];
+                let (q, k, vv) = (&q_s[bi], &k_s[bi], &vv_s[bi]);
+                ctx.fill(0.0);
+                for hh in 0..heads {
+                    let off = hh * dh;
+                    for t in 0..t_ctx {
+                        let arow0 = (hh * t_ctx + t) * t_ctx * l;
+                        maxs.fill(f64::NEG_INFINITY);
+                        for tp in 0..=t {
+                            let sbuf = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                            sbuf.fill(0.0);
+                            for i in 0..dh {
+                                let qi =
+                                    &q[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                                let ki =
+                                    &k[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                                for b in 0..l {
+                                    sbuf[b] += qi[b] * ki[b];
+                                }
+                            }
+                            for b in 0..l {
+                                sbuf[b] *= att_scale;
+                                maxs[b] = maxs[b].max(sbuf[b]);
+                            }
                         }
-                    }
-                    for b in 0..l {
-                        sbuf[b] *= att_scale;
-                        maxs[b] = maxs[b].max(sbuf[b]);
+                        zs.fill(0.0);
+                        for tp in 0..=t {
+                            let ab = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                            for b in 0..l {
+                                ab[b] = (ab[b] - maxs[b]).exp();
+                                zs[b] += ab[b];
+                            }
+                        }
+                        for tp in 0..=t {
+                            // normalize, then accumulate this tp's
+                            // contribution to ctx
+                            {
+                                let ab = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                                for b in 0..l {
+                                    ab[b] /= zs[b];
+                                }
+                            }
+                            let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                            for i in 0..dh {
+                                let vvi =
+                                    &vv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                                let ci = &mut ctx
+                                    [(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                                for b in 0..l {
+                                    ci[b] += ab[b] * vvi[b];
+                                }
+                            }
+                        }
                     }
                 }
-                zs.fill(0.0);
-                for tp in 0..=t {
-                    let ab = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                    for b in 0..l {
-                        ab[b] = (ab[b] - maxs[b]).exp();
-                        zs[b] += ab[b];
-                    }
+            }
+            for t in 0..t_ctx {
+                let tr = t * d * l..(t + 1) * d * l;
+                matvec_l(wp, d, d, &ctx_s[bi][tr.clone()], &mut o[tr.clone()], l);
+                for j in tr.clone() {
+                    hmid_s[bi][j] = hs[bi][j] + o[j];
                 }
-                for tp in 0..=t {
-                    // normalize, then accumulate this tp's contribution to
-                    // ctx — the scalar pass's interleave, kept verbatim
-                    {
-                        let ab = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                        for b in 0..l {
-                            ab[b] /= zs[b];
-                        }
-                    }
-                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                    for i in 0..dh {
-                        let vvi = &vv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                        let ci = &mut ctx[(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                        for b in 0..l {
-                            ci[b] += ab[b] * vvi[b];
-                        }
-                    }
+                rms_fwd_l(
+                    &hmid_s[bi][tr.clone()],
+                    g2,
+                    &mut min_s[bi][tr.clone()],
+                    &mut r_mlp[bi][t * l..(t + 1) * l],
+                    l,
+                );
+                let fr = t * f * l..(t + 1) * f * l;
+                matvec_l(wu, f, d, &min_s[bi][tr.clone()], &mut upre_s[bi][fr.clone()], l);
+                for j in fr.clone() {
+                    u_s[bi][j] = upre_s[bi][j].max(0.0);
+                }
+                // hs[bi+1] = hmid + W_down u
+                matvec_l(wd_, d, f, &u_s[bi][fr], &mut hs[bi + 1][tr.clone()], l);
+                for j in tr {
+                    hs[bi + 1][j] += hmid_s[bi][j];
                 }
             }
         }
-        for t in 0..t_ctx {
-            let tr = t * d * l..(t + 1) * d * l;
-            matvec_l(wp, d, d, &ctx[tr.clone()], &mut o[tr.clone()], l);
-            for j in tr.clone() {
-                h1[j] = h0[j] + o[j];
+        {
+            let g3 = &params_l[i_lnf];
+            for t in 0..t_ctx {
+                let tr = t * d * l..(t + 1) * d * l;
+                rms_fwd_l(
+                    &hs[nb][tr.clone()],
+                    g3,
+                    &mut fo[tr],
+                    &mut r_fin[t * l..(t + 1) * l],
+                    l,
+                );
             }
-            rms_fwd_l(&h1[tr.clone()], g2, &mut m_in[tr.clone()], &mut r2[t * l..(t + 1) * l], l);
-            let fr = t * f * l..(t + 1) * f * l;
-            matvec_l(wu, f, d, &m_in[tr.clone()], &mut u_pre[fr.clone()], l);
-            for j in fr.clone() {
-                u[j] = u_pre[j].max(0.0);
-            }
-            // h2 = h1 + W_down u
-            matvec_l(wd_, d, f, &u[fr], &mut h2[tr.clone()], l);
-            for j in tr.clone() {
-                h2[j] += h1[j];
-            }
-            rms_fwd_l(&h2[tr.clone()], g3, &mut fo[tr], &mut r3[t * l..(t + 1) * l], l);
         }
 
         // ---- backward ----
-        for buf in [
-            &mut dh2, &mut dh1, &mut dh0, &mut dctx, &mut dq, &mut dk, &mut dv, &mut da,
-        ] {
+        for buf in dhs.iter_mut() {
             buf.fill(0.0);
         }
-
-        for t in 0..t_ctx {
-            let tr = t * d * l..(t + 1) * d * l;
-            matvec_l(wh, v, d, &fo[tr.clone()], &mut logits, l);
-            for b in 0..l {
-                ytok[b] = ys[b][row * t_ctx + t] as usize;
-            }
-            softmax_ce_l(&logits, &ytok, scale, &mut dlogits, &mut maxs, &mut zs, &mut losses, l);
-            outer_acc_l(&mut grads_l[11], v, d, &dlogits, &fo[tr.clone()], l);
-            dfo.fill(0.0);
-            matvec_t_acc_l(wh, v, d, &dlogits, &mut dfo, l);
-            rms_bwd_l(
-                &h2[tr.clone()],
-                g3,
-                &r3[t * l..(t + 1) * l],
-                &dfo,
-                &mut dh2[tr],
-                &mut grads_l[10],
-                &mut dots,
-                l,
-            );
-        }
-        for t in 0..t_ctx {
-            // h2 = h1 + W_down relu(W_up m_in)
-            let tr = t * d * l..(t + 1) * d * l;
-            let fr = t * f * l..(t + 1) * f * l;
-            for j in tr.clone() {
-                dh1[j] += dh2[j];
-            }
-            outer_acc_l(&mut grads_l[9], d, f, &dh2[tr.clone()], &u[fr.clone()], l);
-            du.fill(0.0);
-            matvec_t_acc_l(wd_, d, f, &dh2[tr.clone()], &mut du, l);
-            for (j, x) in u_pre[fr].iter().enumerate() {
-                if *x <= 0.0 {
-                    du[j] = 0.0;
-                }
-            }
-            outer_acc_l(&mut grads_l[8], f, d, &du, &m_in[tr.clone()], l);
-            dm_in.fill(0.0);
-            matvec_t_acc_l(wu, f, d, &du, &mut dm_in, l);
-            rms_bwd_l(
-                &h1[tr.clone()],
-                g2,
-                &r2[t * l..(t + 1) * l],
-                &dm_in,
-                &mut dh1[tr],
-                &mut grads_l[7],
-                &mut dots,
-                l,
-            );
-        }
-        for t in 0..t_ctx {
-            // h1 = h0 + W_proj ctx
-            let tr = t * d * l..(t + 1) * d * l;
-            for j in tr.clone() {
-                dh0[j] += dh1[j];
-            }
-            outer_acc_l(&mut grads_l[6], d, d, &dh1[tr.clone()], &ctx[tr.clone()], l);
-            matvec_t_acc_l(wp, d, d, &dh1[tr.clone()], &mut dctx[tr], l);
-        }
-        for hh in 0..heads {
-            let off = hh * dh;
+        {
+            let g3 = &params_l[i_lnf];
+            let wh = &params_l[i_head];
             for t in 0..t_ctx {
-                let arow0 = (hh * t_ctx + t) * t_ctx * l;
-                for tp in 0..=t {
-                    let dat = &mut datt[tp * l..(tp + 1) * l];
-                    dat.fill(0.0);
-                    for i in 0..dh {
-                        let dci = &dctx[(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                        let vvi = &vv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                        for b in 0..l {
-                            dat[b] += dci[b] * vvi[b];
-                        }
-                    }
-                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                    for i in 0..dh {
-                        let dci = &dctx[(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                        let dvi = &mut dv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                        for b in 0..l {
-                            dvi[b] += ab[b] * dci[b];
-                        }
+                let tr = t * d * l..(t + 1) * d * l;
+                matvec_l(wh, v, d, &fo[tr.clone()], &mut logits, l);
+                for b in 0..l {
+                    ytok[b] = ys[b][row * t_ctx + t] as usize;
+                }
+                softmax_ce_l(
+                    &logits, &ytok, scale, &mut dlogits, &mut maxs, &mut zs,
+                    &mut losses, l,
+                );
+                outer_acc_l(&mut grads_l[i_head], v, d, &dlogits, &fo[tr.clone()], l);
+                dfo.fill(0.0);
+                matvec_t_acc_l(wh, v, d, &dlogits, &mut dfo, l);
+                rms_bwd_l(
+                    &hs[nb][tr.clone()],
+                    g3,
+                    &r_fin[t * l..(t + 1) * l],
+                    &dfo,
+                    &mut dhs[nb][tr],
+                    &mut grads_l[i_lnf],
+                    &mut dots,
+                    l,
+                );
+            }
+        }
+        for bi in (0..nb).rev() {
+            let (g1, wq, wk, wv, wp, g2, wu, wd_) = (
+                &params_l[blk(bi, 0)],
+                &params_l[blk(bi, 1)],
+                &params_l[blk(bi, 2)],
+                &params_l[blk(bi, 3)],
+                &params_l[blk(bi, 4)],
+                &params_l[blk(bi, 5)],
+                &params_l[blk(bi, 6)],
+                &params_l[blk(bi, 7)],
+            );
+            for buf in [&mut dhmid, &mut dctx, &mut dq, &mut dk, &mut dv, &mut da] {
+                buf.fill(0.0);
+            }
+            for t in 0..t_ctx {
+                // hs[bi+1] = hmid + W_down relu(W_up m_in)
+                let tr = t * d * l..(t + 1) * d * l;
+                let fr = t * f * l..(t + 1) * f * l;
+                for j in tr.clone() {
+                    dhmid[j] += dhs[bi + 1][j];
+                }
+                outer_acc_l(
+                    &mut grads_l[blk(bi, 7)],
+                    d,
+                    f,
+                    &dhs[bi + 1][tr.clone()],
+                    &u_s[bi][fr.clone()],
+                    l,
+                );
+                du.fill(0.0);
+                matvec_t_acc_l(wd_, d, f, &dhs[bi + 1][tr.clone()], &mut du, l);
+                for (j, x) in upre_s[bi][fr].iter().enumerate() {
+                    if *x <= 0.0 {
+                        du[j] = 0.0;
                     }
                 }
-                dots.fill(0.0);
-                for tp in 0..=t {
-                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                    let dat = &datt[tp * l..(tp + 1) * l];
-                    for b in 0..l {
-                        dots[b] += ab[b] * dat[b];
-                    }
+                outer_acc_l(&mut grads_l[blk(bi, 6)], f, d, &du, &min_s[bi][tr.clone()], l);
+                dm_in.fill(0.0);
+                matvec_t_acc_l(wu, f, d, &du, &mut dm_in, l);
+                rms_bwd_l(
+                    &hmid_s[bi][tr.clone()],
+                    g2,
+                    &r_mlp[bi][t * l..(t + 1) * l],
+                    &dm_in,
+                    &mut dhmid[tr],
+                    &mut grads_l[blk(bi, 5)],
+                    &mut dots,
+                    l,
+                );
+            }
+            for t in 0..t_ctx {
+                // hmid = hs[bi] + W_proj ctx
+                let tr = t * d * l..(t + 1) * d * l;
+                for j in tr.clone() {
+                    dhs[bi][j] += dhmid[j];
                 }
-                for tp in 0..=t {
-                    let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                    let dat = &datt[tp * l..(tp + 1) * l];
-                    for b in 0..l {
-                        ds_l[b] = ab[b] * (dat[b] - dots[b]) * att_scale;
-                    }
-                    for i in 0..dh {
-                        let ki = &k[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                        let qi = &q[(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                        {
-                            let dqi = &mut dq[(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                            for b in 0..l {
-                                dqi[b] += ds_l[b] * ki[b];
+                outer_acc_l(
+                    &mut grads_l[blk(bi, 4)],
+                    d,
+                    d,
+                    &dhmid[tr.clone()],
+                    &ctx_s[bi][tr.clone()],
+                    l,
+                );
+                matvec_t_acc_l(wp, d, d, &dhmid[tr.clone()], &mut dctx[tr], l);
+            }
+            {
+                let att = &att_s[bi];
+                let (q, k, vv) = (&q_s[bi], &k_s[bi], &vv_s[bi]);
+                for hh in 0..heads {
+                    let off = hh * dh;
+                    for t in 0..t_ctx {
+                        let arow0 = (hh * t_ctx + t) * t_ctx * l;
+                        for tp in 0..=t {
+                            let dat = &mut datt[tp * l..(tp + 1) * l];
+                            dat.fill(0.0);
+                            for i in 0..dh {
+                                let dci = &dctx
+                                    [(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                                let vvi =
+                                    &vv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                                for b in 0..l {
+                                    dat[b] += dci[b] * vvi[b];
+                                }
+                            }
+                            let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                            for i in 0..dh {
+                                let dci = &dctx
+                                    [(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                                let dvi = &mut dv
+                                    [(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                                for b in 0..l {
+                                    dvi[b] += ab[b] * dci[b];
+                                }
                             }
                         }
-                        let dki = &mut dk[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                        for b in 0..l {
-                            dki[b] += ds_l[b] * qi[b];
+                        dots.fill(0.0);
+                        for tp in 0..=t {
+                            let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                            let dat = &datt[tp * l..(tp + 1) * l];
+                            for b in 0..l {
+                                dots[b] += ab[b] * dat[b];
+                            }
+                        }
+                        for tp in 0..=t {
+                            let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
+                            let dat = &datt[tp * l..(tp + 1) * l];
+                            for b in 0..l {
+                                ds_l[b] = ab[b] * (dat[b] - dots[b]) * att_scale;
+                            }
+                            for i in 0..dh {
+                                let ki =
+                                    &k[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                                let qi =
+                                    &q[(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                                {
+                                    let dqi = &mut dq
+                                        [(t * d + off + i) * l..(t * d + off + i + 1) * l];
+                                    for b in 0..l {
+                                        dqi[b] += ds_l[b] * ki[b];
+                                    }
+                                }
+                                let dki = &mut dk
+                                    [(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
+                                for b in 0..l {
+                                    dki[b] += ds_l[b] * qi[b];
+                                }
+                            }
                         }
                     }
                 }
             }
-        }
-        for t in 0..t_ctx {
-            let tr = t * d * l..(t + 1) * d * l;
-            outer_acc_l(&mut grads_l[3], d, d, &dq[tr.clone()], &a[tr.clone()], l);
-            outer_acc_l(&mut grads_l[4], d, d, &dk[tr.clone()], &a[tr.clone()], l);
-            outer_acc_l(&mut grads_l[5], d, d, &dv[tr.clone()], &a[tr.clone()], l);
-            matvec_t_acc_l(wq, d, d, &dq[tr.clone()], &mut da[tr.clone()], l);
-            matvec_t_acc_l(wk, d, d, &dk[tr.clone()], &mut da[tr.clone()], l);
-            matvec_t_acc_l(wv, d, d, &dv[tr.clone()], &mut da[tr.clone()], l);
-            rms_bwd_l(
-                &h0[tr.clone()],
-                g1,
-                &r1[t * l..(t + 1) * l],
-                &da[tr.clone()],
-                &mut dh0[tr],
-                &mut grads_l[2],
-                &mut dots,
-                l,
-            );
+            for t in 0..t_ctx {
+                let tr = t * d * l..(t + 1) * d * l;
+                outer_acc_l(
+                    &mut grads_l[blk(bi, 1)],
+                    d,
+                    d,
+                    &dq[tr.clone()],
+                    &a_s[bi][tr.clone()],
+                    l,
+                );
+                outer_acc_l(
+                    &mut grads_l[blk(bi, 2)],
+                    d,
+                    d,
+                    &dk[tr.clone()],
+                    &a_s[bi][tr.clone()],
+                    l,
+                );
+                outer_acc_l(
+                    &mut grads_l[blk(bi, 3)],
+                    d,
+                    d,
+                    &dv[tr.clone()],
+                    &a_s[bi][tr.clone()],
+                    l,
+                );
+                matvec_t_acc_l(wq, d, d, &dq[tr.clone()], &mut da[tr.clone()], l);
+                matvec_t_acc_l(wk, d, d, &dk[tr.clone()], &mut da[tr.clone()], l);
+                matvec_t_acc_l(wv, d, d, &dv[tr.clone()], &mut da[tr.clone()], l);
+                rms_bwd_l(
+                    &hs[bi][tr.clone()],
+                    g1,
+                    &r_attn[bi][t * l..(t + 1) * l],
+                    &da[tr.clone()],
+                    &mut dhs[bi][tr],
+                    &mut grads_l[blk(bi, 0)],
+                    &mut dots,
+                    l,
+                );
+            }
         }
         for t in 0..t_ctx {
             for b in 0..l {
                 let tok = xs[b][row * t_ctx + t] as usize;
                 for i in 0..d {
-                    grads_l[0][(tok * d + i) * l + b] += dh0[(t * d + i) * l + b];
-                    grads_l[1][(t * d + i) * l + b] += dh0[(t * d + i) * l + b];
+                    grads_l[0][(tok * d + i) * l + b] += dhs[0][(t * d + i) * l + b];
+                    grads_l[1][(t * d + i) * l + b] += dhs[0][(t * d + i) * l + b];
+                }
+            }
+        }
+    }
+    losses.iter().map(|&x| x * scale).collect()
+}
+
+/// Small convolutional image classifier: two `valid` 3×3 convolutions
+/// (ReLU) around a 2×2 average pool, then a linear head over the
+/// flattened features. Params (manifest order): conv1 `(C1, C_in, 3, 3)`,
+/// conv2 `(C2, C1, 3, 3)`, head `(classes, o2·o2·C2)` — all OIHW /
+/// fan_out_axis 0, so `fan_in` compression averages one second moment per
+/// output filter. Input is NHWC f32, one class label per sample.
+fn conv_pass_l(
+    dims: &Dims,
+    params_l: &[Vec<f64>],
+    batches: &[BatchIn],
+    grads_l: &mut [Vec<f64>],
+    l: usize,
+) -> Vec<f64> {
+    let (classes, c1, c2, img, ch, bsz) = (
+        dims.vocab,
+        dims.d,
+        dims.hidden,
+        dims.img,
+        dims.channels,
+        dims.batch,
+    );
+    let kk = CONV_K;
+    let (o1, pw, o2) = conv_geom(dims);
+    let feats = o2 * o2 * c2;
+    let inv_pool = 1.0 / (POOL * POOL) as f64;
+    let (xs, ys) = image_lanes(batches);
+    let w1 = &params_l[0];
+    let w2 = &params_l[1];
+    let wh = &params_l[2];
+    let scale = 1.0 / bsz as f64;
+    let mut losses = vec![0.0; l];
+
+    let px = img * img * ch;
+    let mut x_l = vec![0.0; px * l]; // one sample per lane, gathered
+    let mut a1 = vec![0.0; o1 * o1 * c1 * l]; // conv1 pre-activation
+    let mut pool = vec![0.0; pw * pw * c1 * l]; // avg-pooled relu(a1)
+    let mut z = vec![0.0; feats * l]; // conv2 pre-activation
+    let mut fvec = vec![0.0; feats * l]; // relu(z)
+    let mut logits = vec![0.0; classes * l];
+    let mut dlogits = vec![0.0; classes * l];
+    let mut df = vec![0.0; feats * l];
+    let mut dz = vec![0.0; feats * l];
+    let mut dpool = vec![0.0; pw * pw * c1 * l];
+    let mut da1 = vec![0.0; o1 * o1 * c1 * l];
+    let mut maxs = vec![0.0; l];
+    let mut zs = vec![0.0; l];
+    let mut ytok = vec![0usize; l];
+
+    for s in 0..bsz {
+        // ---- forward ----
+        for b in 0..l {
+            let src = &xs[b][s * px..(s + 1) * px];
+            for (j, &val) in src.iter().enumerate() {
+                x_l[j * l + b] = val as f64;
+            }
+            ytok[b] = ys[b][s] as usize;
+        }
+        // conv1 (valid): a1[oy,ox,co] = Σ_{ci,ky,kx} w1[co,ci,ky,kx] ·
+        // x[oy+ky, ox+kx, ci]
+        for oy in 0..o1 {
+            for ox in 0..o1 {
+                for co in 0..c1 {
+                    let oi = ((oy * o1 + ox) * c1 + co) * l;
+                    let out = &mut a1[oi..oi + l];
+                    out.fill(0.0);
+                    for ci in 0..ch {
+                        for ky in 0..kk {
+                            for kx in 0..kk {
+                                let wi = (((co * ch + ci) * kk + ky) * kk + kx) * l;
+                                let xi = (((oy + ky) * img + (ox + kx)) * ch + ci) * l;
+                                let wv = &w1[wi..wi + l];
+                                let xv = &x_l[xi..xi + l];
+                                for b in 0..l {
+                                    out[b] += wv[b] * xv[b];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // ReLU then 2×2 average pool
+        for py in 0..pw {
+            for pxi in 0..pw {
+                for co in 0..c1 {
+                    let oi = ((py * pw + pxi) * c1 + co) * l;
+                    {
+                        let out = &mut pool[oi..oi + l];
+                        out.fill(0.0);
+                    }
+                    for dy in 0..POOL {
+                        for dx in 0..POOL {
+                            let si =
+                                (((py * POOL + dy) * o1 + (pxi * POOL + dx)) * c1 + co) * l;
+                            for b in 0..l {
+                                pool[oi + b] += a1[si + b].max(0.0);
+                            }
+                        }
+                    }
+                    for b in 0..l {
+                        pool[oi + b] *= inv_pool;
+                    }
+                }
+            }
+        }
+        // conv2 (valid) over the pooled map, flattened feature order
+        // ((qy·o2 + qx)·C2 + co)
+        for qy in 0..o2 {
+            for qx in 0..o2 {
+                for co in 0..c2 {
+                    let oi = ((qy * o2 + qx) * c2 + co) * l;
+                    {
+                        let out = &mut z[oi..oi + l];
+                        out.fill(0.0);
+                    }
+                    for ci in 0..c1 {
+                        for ky in 0..kk {
+                            for kx in 0..kk {
+                                let wi = (((co * c1 + ci) * kk + ky) * kk + kx) * l;
+                                let pi = (((qy + ky) * pw + (qx + kx)) * c1 + ci) * l;
+                                for b in 0..l {
+                                    z[oi + b] += w2[wi + b] * pool[pi + b];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for j in 0..feats * l {
+            fvec[j] = z[j].max(0.0);
+        }
+        matvec_l(wh, classes, feats, &fvec, &mut logits, l);
+        softmax_ce_l(
+            &logits, &ytok, scale, &mut dlogits, &mut maxs, &mut zs, &mut losses, l,
+        );
+
+        // ---- backward ----
+        outer_acc_l(&mut grads_l[2], classes, feats, &dlogits, &fvec, l);
+        df.fill(0.0);
+        matvec_t_acc_l(wh, classes, feats, &dlogits, &mut df, l);
+        for j in 0..feats * l {
+            dz[j] = if z[j] > 0.0 { df[j] } else { 0.0 };
+        }
+        dpool.fill(0.0);
+        for qy in 0..o2 {
+            for qx in 0..o2 {
+                for co in 0..c2 {
+                    let oi = ((qy * o2 + qx) * c2 + co) * l;
+                    for ci in 0..c1 {
+                        for ky in 0..kk {
+                            for kx in 0..kk {
+                                let wi = (((co * c1 + ci) * kk + ky) * kk + kx) * l;
+                                let pi = (((qy + ky) * pw + (qx + kx)) * c1 + ci) * l;
+                                {
+                                    let gw = &mut grads_l[1][wi..wi + l];
+                                    for b in 0..l {
+                                        gw[b] += dz[oi + b] * pool[pi + b];
+                                    }
+                                }
+                                for b in 0..l {
+                                    dpool[pi + b] += dz[oi + b] * w2[wi + b];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // pool backward (uniform 1/4 share) + conv1 ReLU mask
+        for py in 0..pw {
+            for pxi in 0..pw {
+                for co in 0..c1 {
+                    let pi = ((py * pw + pxi) * c1 + co) * l;
+                    for dy in 0..POOL {
+                        for dx in 0..POOL {
+                            let si =
+                                (((py * POOL + dy) * o1 + (pxi * POOL + dx)) * c1 + co) * l;
+                            for b in 0..l {
+                                da1[si + b] = if a1[si + b] > 0.0 {
+                                    dpool[pi + b] * inv_pool
+                                } else {
+                                    0.0
+                                };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // conv1 weight gradients
+        for oy in 0..o1 {
+            for ox in 0..o1 {
+                for co in 0..c1 {
+                    let oi = ((oy * o1 + ox) * c1 + co) * l;
+                    for ci in 0..ch {
+                        for ky in 0..kk {
+                            for kx in 0..kk {
+                                let wi = (((co * ch + ci) * kk + ky) * kk + kx) * l;
+                                let xi = (((oy + ky) * img + (ox + kx)) * ch + ci) * l;
+                                let gw = &mut grads_l[0][wi..wi + l];
+                                for b in 0..l {
+                                    gw[b] += da1[oi + b] * x_l[xi + b];
+                                }
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -1827,11 +1993,45 @@ mod tests {
             .collect()
     }
 
-    fn batch(dims: &Dims, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    /// Family-appropriate random batch for one job.
+    fn sample_batch(dims: &Dims, seed: u64) -> BatchIn {
         let mut rng = Rng::new(seed);
-        let n = dims.batch * dims.ctx;
-        let mut draw = || (0..n).map(|_| rng.below(dims.vocab as u64) as i32).collect();
-        (draw(), draw())
+        match dims.family {
+            Family::Conv => {
+                let px = dims.img * dims.img * dims.channels;
+                let x = (0..dims.batch * px)
+                    .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                    .collect();
+                let y = (0..dims.batch)
+                    .map(|_| rng.below(dims.vocab as u64) as i32)
+                    .collect();
+                BatchIn::Images { x, y }
+            }
+            _ => {
+                let n = dims.batch * dims.ctx;
+                let mut draw =
+                    || (0..n).map(|_| rng.below(dims.vocab as u64) as i32).collect();
+                BatchIn::Tokens { x: draw(), y: draw() }
+            }
+        }
+    }
+
+    /// Batch literals in manifest order for one job.
+    fn batch_literals(dims: &Dims, b: &BatchIn) -> Vec<Literal> {
+        match b {
+            BatchIn::Tokens { x, y } => vec![
+                crate::runtime::literal::i32_literal(x, &[dims.batch, dims.ctx]).unwrap(),
+                crate::runtime::literal::i32_literal(y, &[dims.batch, dims.ctx]).unwrap(),
+            ],
+            BatchIn::Images { x, y } => vec![
+                crate::runtime::literal::f32_literal(
+                    x,
+                    &[dims.batch, dims.img, dims.img, dims.channels],
+                )
+                .unwrap(),
+                crate::runtime::literal::i32_literal(y, &[dims.batch]).unwrap(),
+            ],
+        }
     }
 
     #[test]
@@ -1862,8 +2062,6 @@ mod tests {
 
     #[test]
     fn slimadam_ruleset_saves_memory() {
-        let adam = artifact("gpt_micro.train.adam").unwrap();
-        let slim = artifact("gpt_micro.train.slimadam").unwrap();
         let v_elems = |m: &Manifest| -> usize {
             m.v_shapes
                 .as_ref()
@@ -1872,16 +2070,70 @@ mod tests {
                 .map(|s| s.iter().product::<usize>())
                 .sum()
         };
-        let full = v_elems(&adam.manifest);
-        let reduced = v_elems(&slim.manifest);
-        assert_eq!(full, adam.manifest.total_param_elems());
-        assert!(
-            (reduced as f64) < 0.2 * full as f64,
-            "slimadam v_elems {reduced} vs adam {full}"
-        );
+        // exact per-family footprints — these pin the EXPERIMENTS.md
+        // memory-accounting table
+        for (model, total, slim_v) in [
+            ("mlp_tiny", 3072usize, 176usize),
+            ("gpt_micro", 5296, 448),
+            ("gpt_deep", 10512, 848),
+            ("conv_mini", 1456, 34),
+        ] {
+            let adam = artifact(&format!("{model}.train.adam")).unwrap();
+            let slim = artifact(&format!("{model}.train.slimadam")).unwrap();
+            let full = v_elems(&adam.manifest);
+            let reduced = v_elems(&slim.manifest);
+            assert_eq!(full, adam.manifest.total_param_elems());
+            assert_eq!(full, total, "{model}: param count drifted");
+            assert_eq!(reduced, slim_v, "{model}: slimadam V footprint drifted");
+            assert!(
+                (reduced as f64) < 0.2 * full as f64,
+                "{model}: slimadam v_elems {reduced} vs adam {full}"
+            );
+        }
     }
 
-    /// Central-difference gradient check for both model families: the
+    /// fig3's depth axis: `gpt_deep` has per-block named parameters at
+    /// depths 0..=3 with embeddings at -1 and the head at 4; `gpt_micro`
+    /// stays the 1-block instantiation of the same layout.
+    #[test]
+    fn gpt_deep_depth_axis_is_real() {
+        let man = grad_manifest("gpt_deep").unwrap();
+        assert_eq!(man.n_params(), 2 + 8 * 4 + 2);
+        let depths: std::collections::BTreeSet<i64> =
+            man.params.iter().map(|p| p.depth).collect();
+        assert_eq!(
+            depths.into_iter().collect::<Vec<_>>(),
+            vec![-1, 0, 1, 2, 3, 4]
+        );
+        for b in 0..4 {
+            assert!(
+                man.params.iter().any(|p| p.name == format!("h{b}.attn_q")),
+                "missing block {b}"
+            );
+        }
+        let micro = grad_manifest("gpt_micro").unwrap();
+        assert_eq!(micro.n_params(), 12);
+        assert_eq!(micro.params[2].name, "h0.ln_attn");
+    }
+
+    /// conv geometry contract: OIHW weights, NHWC f32 image batch, one
+    /// label per sample, and the matrix view `(C_out, C_in·kh·kw)` the
+    /// k_mode rules compress over.
+    #[test]
+    fn conv_manifest_geometry() {
+        let man = grad_manifest("conv_mini").unwrap();
+        assert_eq!(man.family, "conv");
+        assert_eq!(man.params[0].shape, vec![8, 2, 3, 3]);
+        assert_eq!(man.params[1].shape, vec![16, 8, 3, 3]);
+        assert_eq!(man.params[2].shape, vec![10, 16]); // 8x8 -> 6 -> 3 -> 1
+        assert_eq!(man.batch[0].dtype, "f32");
+        assert_eq!(man.batch[0].shape, vec![8, 8, 8, 2]);
+        assert_eq!(man.batch[1].shape, vec![8]);
+        assert_eq!(man.params[0].matrix_dims(), (8, 18));
+        assert_eq!(man.token_bound(), 10);
+    }
+
+    /// Central-difference gradient check for every model family: the
     /// handwritten backward passes must match the loss surface.
     #[test]
     fn gradients_match_finite_differences() {
@@ -1889,8 +2141,8 @@ mod tests {
             let dims = dims_for(model).unwrap();
             let man = grad_manifest(model).unwrap();
             let params = init_params(&man, 11);
-            let (x, y) = batch(&dims, 12);
-            let (_, grads) = loss_and_grads(&dims, &params, &x, &y);
+            let batch = sample_batch(&dims, 12);
+            let (_, grads) = loss_and_grads(&dims, &params, &batch);
             let mut rng = Rng::new(13);
             let eps = 1e-3f32;
             for (pi, p) in params.iter().enumerate() {
@@ -1901,8 +2153,8 @@ mod tests {
                     plus[pi].data[j] += eps;
                     let mut minus = params.clone();
                     minus[pi].data[j] -= eps;
-                    let fd = (loss_only(&dims, &plus, &x, &y)
-                        - loss_only(&dims, &minus, &x, &y))
+                    let fd = (loss_and_grads(&dims, &plus, &batch).0
+                        - loss_and_grads(&dims, &minus, &batch).0)
                         / (2.0 * eps as f64);
                     let an = grads[pi].data[j] as f64;
                     assert!(
@@ -1917,20 +2169,22 @@ mod tests {
 
     #[test]
     fn grad_step_is_deterministic() {
-        let dims = dims_for("gpt_micro").unwrap();
-        let man = grad_manifest("gpt_micro").unwrap();
-        let params = init_params(&man, 3);
-        let (x, y) = batch(&dims, 4);
-        let (l1, g1) = loss_and_grads(&dims, &params, &x, &y);
-        let (l2, g2) = loss_and_grads(&dims, &params, &x, &y);
-        assert_eq!(l1.to_bits(), l2.to_bits());
-        for (a, b) in g1.iter().zip(&g2) {
-            assert_eq!(a.data, b.data);
+        for model in ["gpt_deep", "conv_mini"] {
+            let dims = dims_for(model).unwrap();
+            let man = grad_manifest(model).unwrap();
+            let params = init_params(&man, 3);
+            let batch = sample_batch(&dims, 4);
+            let (l1, g1) = loss_and_grads(&dims, &params, &batch);
+            let (l2, g2) = loss_and_grads(&dims, &params, &batch);
+            assert_eq!(l1.to_bits(), l2.to_bits(), "{model}");
+            for (a, b) in g1.iter().zip(&g2) {
+                assert_eq!(a.data, b.data, "{model}");
+            }
         }
     }
 
     #[test]
-    fn executable_runs_grad_and_train() {
+    fn executable_runs_grad_for_every_model() {
         for model in MODELS {
             let backend = NativeBackend::default();
             let art = artifact(&format!("{model}.grad")).unwrap();
@@ -1938,54 +2192,54 @@ mod tests {
             let man = &art.manifest;
             let dims = dims_for(model).unwrap();
             let params = init_params(man, 5);
-            let (x, y) = batch(&dims, 6);
             let mut inputs: Vec<Literal> = params
                 .iter()
                 .map(|t| tensor_to_literal(t).unwrap())
                 .collect();
-            inputs.push(
-                crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx]).unwrap(),
-            );
-            inputs.push(
-                crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx]).unwrap(),
-            );
+            inputs.extend(batch_literals(&dims, &sample_batch(&dims, 6)));
             let outs = exe.run(&inputs).unwrap();
             assert_eq!(outs.len(), 1 + man.n_params());
             let loss = crate::runtime::literal::scalar_value(&outs[0]).unwrap();
-            // random tokens: loss should start near ln(vocab)
-            assert!((loss as f64 - (dims.vocab as f64).ln()).abs() < 1.0, "{loss}");
+            // random inputs: loss should start near ln(vocab/classes)
+            assert!(
+                (loss as f64 - (dims.vocab as f64).ln()).abs() < 1.0,
+                "{model}: {loss}"
+            );
         }
     }
 
+    /// Fused training on one repeated batch must reduce loss for every
+    /// family — MLP, deep transformer and conv alike.
     #[test]
     fn fused_train_step_decreases_loss() {
-        use crate::runtime::engine::TrainEngine;
-        let backend = NativeBackend::default();
-        let art = artifact("mlp_tiny.train.adam").unwrap();
-        let compiled = std::rc::Rc::new(art.compile(&backend).unwrap());
-        let mut eng = TrainEngine::with_compiled(compiled, "mitchell", 7).unwrap();
-        let dims = dims_for("mlp_tiny").unwrap();
-        let (x, y) = batch(&dims, 8);
-        let b = vec![
-            crate::runtime::engine::BatchData::I32(x),
-            crate::runtime::engine::BatchData::I32(y),
-        ];
-        let first = eng.step(&b, 3e-3).unwrap();
-        let mut last = first;
-        for _ in 0..30 {
-            last = eng.step(&b, 3e-3).unwrap();
+        use crate::runtime::engine::{BatchData, TrainEngine};
+        for (model, lr) in [("mlp_tiny", 3e-3f32), ("gpt_deep", 1e-3), ("conv_mini", 3e-3)] {
+            let backend = NativeBackend::default();
+            let art = artifact(&format!("{model}.train.adam")).unwrap();
+            let compiled = std::rc::Rc::new(art.compile(&backend).unwrap());
+            let mut eng = TrainEngine::with_compiled(compiled, "mitchell", 7).unwrap();
+            let dims = dims_for(model).unwrap();
+            let b = match sample_batch(&dims, 8) {
+                BatchIn::Tokens { x, y } => vec![BatchData::I32(x), BatchData::I32(y)],
+                BatchIn::Images { x, y } => vec![BatchData::F32(x), BatchData::I32(y)],
+            };
+            let first = eng.step(&b, lr).unwrap();
+            let mut last = first;
+            for _ in 0..30 {
+                last = eng.step(&b, lr).unwrap();
+            }
+            assert!(first.loss.is_finite() && last.grad_norm.is_finite(), "{model}");
+            assert!(
+                last.loss < first.loss,
+                "{model}: native fused step did not reduce loss: {} -> {}",
+                first.loss,
+                last.loss
+            );
         }
-        assert!(first.loss.is_finite() && last.grad_norm.is_finite());
-        assert!(
-            last.loss < first.loss,
-            "native fused step did not reduce loss: {} -> {}",
-            first.loss,
-            last.loss
-        );
     }
 
     /// The lane-stacked batched interpreter must be bit-for-bit identical
-    /// to sequential `run` calls — for both model families, both manifest
+    /// to sequential `run` calls — for every model family, both manifest
     /// kinds and every ruleset, with per-lane step/lr scalars differing.
     #[test]
     fn run_batch_bit_identical_to_sequential() {
@@ -2020,19 +2274,12 @@ mod tests {
             let jobs: Vec<Vec<Literal>> = (0..3)
                 .map(|jj| {
                     let params = init_params(&man, 100 + jj as u64);
-                    let (x, y) = batch(&dims, 200 + jj as u64);
                     let mut inputs: Vec<Literal> = params
                         .iter()
                         .map(|t| tensor_to_literal(t).unwrap())
                         .collect();
-                    inputs.push(
-                        crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx])
-                            .unwrap(),
-                    );
-                    inputs.push(
-                        crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx])
-                            .unwrap(),
-                    );
+                    inputs
+                        .extend(batch_literals(&dims, &sample_batch(&dims, 200 + jj as u64)));
                     inputs
                 })
                 .collect();
@@ -2074,15 +2321,10 @@ mod tests {
                                     .unwrap(),
                             );
                         }
-                        let (x, y) = batch(&dims, 400 + jj as u64);
-                        inputs.push(
-                            crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx])
-                                .unwrap(),
-                        );
-                        inputs.push(
-                            crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx])
-                                .unwrap(),
-                        );
+                        inputs.extend(batch_literals(
+                            &dims,
+                            &sample_batch(&dims, 400 + jj as u64),
+                        ));
                         inputs.push(scalar_f32((jj + 1) as f32));
                         inputs.push(scalar_f32(1e-3 * (jj + 1) as f32));
                         inputs
@@ -2104,13 +2346,11 @@ mod tests {
         let man = art.manifest.clone();
         let dims = dims_for("mlp_tiny").unwrap();
         let params = init_params(&man, 9);
-        let (x, y) = batch(&dims, 10);
         let mut inputs: Vec<Literal> = params
             .iter()
             .map(|t| tensor_to_literal(t).unwrap())
             .collect();
-        inputs.push(crate::runtime::literal::i32_literal(&x, &[dims.batch, dims.ctx]).unwrap());
-        inputs.push(crate::runtime::literal::i32_literal(&y, &[dims.batch, dims.ctx]).unwrap());
+        inputs.extend(batch_literals(&dims, &sample_batch(&dims, 10)));
         let seq = exe.run(&inputs).unwrap();
         let bat = exe.run_batch(std::slice::from_ref(&inputs)).unwrap();
         assert_eq!(bat.len(), 1);

@@ -356,6 +356,51 @@ mod tests {
         }
     }
 
+    fn conv_info(shape: &[usize]) -> ParamInfo {
+        ParamInfo {
+            name: "conv".into(),
+            shape: shape.to_vec(),
+            layer_type: "conv".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: true,
+            fan_out_axis: 0,
+        }
+    }
+
+    /// Conv-shaped second moments (OIHW, matrix view `(C_out, C_in·kh·kw)`)
+    /// at the degenerate geometries the zoo's k_mode rules must survive:
+    /// 1×1 kernels and single-channel filters.
+    #[test]
+    fn conv_view_edge_cases() {
+        // 1×1 kernels: (C_out, C_in, 1, 1) → view (C_out, C_in). Constant
+        // filters are perfectly fan_in compressible (variance floor).
+        let mut v = Tensor::zeros(&[4, 3, 1, 1]);
+        for (i, x) in v.data.iter_mut().enumerate() {
+            *x = (i / 3) as f32 + 1.0;
+        }
+        let s = measure(&v, &conv_info(&[4, 3, 1, 1]));
+        assert!(s.fan_in > 1e6, "constant filters: fan_in {}", s.fan_in);
+        assert!(s.fan_out.is_finite() && s.fan_out < 1e3, "{}", s.fan_out);
+
+        // single input channel: (C_out, 1, kh, kw) → view (C_out, kh·kw);
+        // a uniform tensor is compressible along every K
+        let t = Tensor::ones(&[5, 1, 3, 3]);
+        let s = measure(&t, &conv_info(&[5, 1, 3, 3]));
+        for (k, snr) in [("fan_out", s.fan_out), ("fan_in", s.fan_in), ("both", s.both)] {
+            assert!(snr > 1e6, "{k}: {snr}");
+        }
+
+        // 1×1 kernel AND single channel: (C_out, 1, 1, 1) degenerates to
+        // an N×1 view — fan_in groups are singletons (floor), fan_out is
+        // ordinary column statistics
+        let d = Tensor::from_vec(&[2, 1, 1, 1], vec![1.0, 3.0]);
+        let s = measure(&d, &conv_info(&[2, 1, 1, 1]));
+        assert!(s.fan_in > 1e20, "{}", s.fan_in);
+        assert!(s.fan_out.is_finite() && s.fan_out < 1e6, "{}", s.fan_out);
+    }
+
     #[test]
     fn constant_matrix_has_huge_snr() {
         let data = vec![0.3f32; 24];

@@ -21,11 +21,13 @@ fn fingerprints(summaries: &[RunSummary]) -> Vec<u64> {
 }
 
 /// 8-job split-engine grid on one native model; the top LR diverges.
+/// `TrainConfig::auto` picks the family-appropriate workload (tokens for
+/// the LM families, synthetic images for `conv_mini`).
 fn split_grid(model: &str, steps: usize) -> Vec<TrainConfig> {
     let mut configs = Vec::new();
     for opt in ["adam", "slimadam"] {
         for lr in [5e-4, 1e-3, 2e-3, 10.0] {
-            let mut cfg = TrainConfig::lm(model, opt, lr, steps);
+            let mut cfg = TrainConfig::auto(model, opt, lr, steps);
             cfg.backend = BackendSpec::native();
             cfg.eval_batches = 2;
             configs.push(cfg);
@@ -38,7 +40,7 @@ fn split_grid(model: &str, steps: usize) -> Vec<TrainConfig> {
 fn fused_grid(model: &str, ruleset: &str, steps: usize) -> Vec<TrainConfig> {
     (0..8)
         .map(|i| {
-            let mut cfg = TrainConfig::lm(model, "adam", 4e-4 * (i + 1) as f64, steps);
+            let mut cfg = TrainConfig::auto(model, "adam", 4e-4 * (i + 1) as f64, steps);
             cfg.backend = BackendSpec::native();
             cfg.engine = EngineKind::Fused(ruleset.to_string());
             cfg.seed = i as u64;

@@ -136,6 +136,41 @@ fn every_optimizer_trains_native_gpt_micro() {
     }
 }
 
+/// Every native zoo family trains end to end through run_config — the
+/// offline analogue of `every_model_family_trains` (vision included:
+/// `conv_mini` runs on the synthetic image stream).
+#[test]
+fn every_native_model_family_trains() {
+    for model in slimadam::runtime::backend::native::MODELS {
+        let mut cfg = TrainConfig::auto(model, "adam", 1e-3, 6);
+        cfg.backend = BackendSpec::native();
+        cfg.eval_batches = 1;
+        let s = run_config(&cfg).unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        assert!(!s.result.diverged, "{model} diverged");
+        assert!(s.result.final_train_loss.is_finite(), "{model}");
+        assert!(s.result.eval_loss.is_finite(), "{model}");
+    }
+}
+
+/// The conv family learns offline: 60 real steps on the synthetic
+/// class-conditional image stream must cut the loss well below the
+/// ln(classes) random floor trajectory start.
+#[test]
+fn native_conv_mini_learns_images() {
+    let mut cfg = TrainConfig::auto("conv_mini", "adam", 3e-3, 60);
+    cfg.backend = BackendSpec::native();
+    cfg.eval_batches = 2;
+    let s = run_config(&cfg).unwrap();
+    assert!(!s.result.diverged, "conv_mini diverged");
+    let first = s.result.losses[0].1 as f64;
+    assert!(
+        s.result.final_train_loss < first - 0.1,
+        "conv_mini did not learn: {first} -> {}",
+        s.result.final_train_loss
+    );
+    assert!(s.result.eval_loss.is_finite());
+}
+
 /// Native fused engine end to end through run_config.
 #[test]
 fn native_fused_engine_smoke() {

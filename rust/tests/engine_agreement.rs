@@ -36,13 +36,11 @@ fn run_agreement(
         TrainEngine::new("artifacts", model, ruleset, backend, "mitchell", seed).unwrap();
     let man = fused.manifest().clone();
     let hypers = man.hypers.unwrap();
+    // family-appropriate workload: token stream for LM manifests,
+    // synthetic images for the conv family
     let mut data1 = slimadam::coordinator::make_data(
         &man,
-        &slimadam::coordinator::DataSpec::Markov {
-            alpha: 1.07,
-            coherence: 0.5,
-            seed: 7,
-        },
+        &slimadam::coordinator::DataSpec::default_for(&man),
         99,
     )
     .unwrap();
