@@ -2,13 +2,19 @@
 # messages reference: it AOT-lowers every model to HLO text + manifest
 # (requires Python + JAX; the Rust side never does).
 
-.PHONY: artifacts artifacts-large build test bench doc
+.PHONY: artifacts artifacts-large fixtures build test bench doc
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
 
 artifacts-large:
 	cd python && python -m compile.aot --outdir ../artifacts --large
+
+# Numeric fixtures only (no HLO lowering): the python-reference loss
+# sequences rust/tests/fixture_replay.rs replays. The native_mlp fixture
+# is committed, so this is only needed to regenerate after model edits.
+fixtures:
+	cd python && python -m compile.aot --outdir ../artifacts --fixtures-only
 
 build:
 	cargo build --release

@@ -7,17 +7,19 @@
 //! passes. At the end it writes the consolidated per-family throughput
 //! summary `results/bench/BENCH_native.json` (the CI bench artifact).
 
-use slimadam::benchkit::{write_native_summary, Bencher};
+use slimadam::benchkit::{check_native_regression, write_native_summary, Bencher};
 use slimadam::coordinator::{make_data, DataSpec};
 use slimadam::json::Value;
 use slimadam::optim::adamk::AdamK;
 use slimadam::optim::{clip_global_norm, KMode, Optimizer};
+use slimadam::runtime::backend::native::KernelMode;
 use slimadam::runtime::backend::{backend_for, native, Backend, BackendSpec};
 use slimadam::runtime::engine::{GradEngine, TrainEngine};
 use slimadam::tensor::Tensor;
 
 fn main() {
     let backend = backend_for(&BackendSpec::native()).expect("native backend");
+    let backend_f32 = backend_for(&BackendSpec::native_f32()).expect("native+f32 backend");
     let b = Bencher::default();
     let mut summary_rows: Vec<Value> = Vec::new();
 
@@ -84,6 +86,41 @@ fn main() {
             }
         }
 
+        // Pre-PR scalar kernels (ISSUE 6 acceptance: the SIMD fused step
+        // must show ≥ 2× over this on gpt_deep). ScalarRef swaps every
+        // reassociating kernel back to its scalar-order oracle body and
+        // forces intra-op workers to 1, so this measures exactly the old
+        // hot path on the same build.
+        let mut fused_scalar =
+            TrainEngine::new("artifacts", model, "adam", backend.as_ref(), "mitchell", 5)
+                .expect("native fused engine");
+        println!("== {model}: fused train_step, scalar-reference kernels ==");
+        native::set_kernel_mode(KernelMode::ScalarRef);
+        let scalar_report = b.bench_with_units(
+            &format!("native/{model}/fused_step_scalar_ref"),
+            units,
+            unit_label,
+            || {
+                fused_scalar.step(&batch, 1e-4).unwrap();
+            },
+        );
+        native::set_kernel_mode(KernelMode::Simd);
+
+        // Opt-in f32 compute mode (DESIGN.md §14): same kernels
+        // instantiated at f32.
+        let mut fused_f32 =
+            TrainEngine::new("artifacts", model, "adam", backend_f32.as_ref(), "mitchell", 5)
+                .expect("native+f32 fused engine");
+        println!("== {model}: fused train_step, f32 compute ==");
+        let f32_report = b.bench_with_units(
+            &format!("native/{model}/fused_step_f32"),
+            units,
+            unit_label,
+            || {
+                fused_f32.step(&batch, 1e-4).unwrap();
+            },
+        );
+
         // Batched lockstep dispatch (DESIGN.md §12): LANES fused jobs per
         // run_batch call vs the same jobs stepped one at a time — the
         // per-step half of the batched-vs-sequential comparison
@@ -144,6 +181,17 @@ fn main() {
                     .map(|r| step_s(r.median_ns))
                     .unwrap_or(0.0),
             )
+            .set("fused_steps_per_s_scalar_ref", step_s(scalar_report.median_ns))
+            .set("fused_steps_per_s_f32", step_s(f32_report.median_ns))
+            .set(
+                "fused_simd_speedup",
+                scalar_report.median_ns
+                    / fused_adam_report
+                        .as_ref()
+                        .map(|r| r.median_ns)
+                        .unwrap_or(f64::MAX)
+                        .max(1e-12),
+            )
             .set(
                 "fused_jobs_per_s_seq4",
                 LANES as f64 * step_s(seq_report.median_ns),
@@ -162,4 +210,36 @@ fn main() {
     let out = std::path::Path::new("results/bench/BENCH_native.json");
     write_native_summary(&summary_rows, out).expect("write BENCH_native.json");
     println!("\nwrote per-family throughput summary to {}", out.display());
+
+    // Baseline gate (CI `bench-regression`): compare the summary just
+    // written against the committed baseline and fail the process on a
+    // > 15% throughput regression. A provisional baseline (the bootstrap
+    // commit) only warns — see `benchkit::check_native_regression`.
+    let baseline_path = std::env::var("SLIMADAM_BENCH_BASELINE")
+        .unwrap_or_else(|_| "results/bench/BENCH_baseline.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let baseline = Value::parse(&text).expect("parse bench baseline");
+            let current =
+                Value::parse(&std::fs::read_to_string(out).unwrap()).expect("parse summary");
+            let outcome = check_native_regression(&baseline, &current, 0.15);
+            for w in &outcome.warnings {
+                println!("bench-regression warning: {w}");
+            }
+            if !outcome.passed() {
+                for v in &outcome.violations {
+                    eprintln!("bench-regression FAIL: {v}");
+                }
+                std::process::exit(1);
+            }
+            println!(
+                "bench-regression: ok vs {baseline_path} ({} warnings)",
+                outcome.warnings.len()
+            );
+        }
+        Err(_) => println!(
+            "bench-regression: no baseline at {baseline_path} (set \
+             SLIMADAM_BENCH_BASELINE or commit results/bench/BENCH_baseline.json)"
+        ),
+    }
 }

@@ -95,6 +95,35 @@ fn main() {
         );
     }
 
+    // Intra-op kernel parallelism (ISSUE 6, DESIGN.md §14): the same
+    // single-worker gpt_deep train run with 1 vs 2 intra-op kernel
+    // threads. Results are bitwise identical by contract
+    // (`scheduler_determinism::intraop_parallel_train_steps_are_worker_count_invariant`);
+    // this row tracks what the knob buys in wall-clock.
+    println!("\n== intra-op kernel workers, gpt_deep fused (1 job) ==");
+    {
+        let mut cfg = TrainConfig::auto("gpt_deep", "adam", 1e-3, if fast { 4 } else { 12 });
+        cfg.backend = BackendSpec::native();
+        cfg.engine = slimadam::coordinator::EngineKind::Fused("adam".to_string());
+        cfg.eval_batches = 1;
+        let configs = vec![cfg];
+        bench_batched(
+            "sweep_native_gpt_deep_intraop2",
+            1,
+            1,
+            Some(std::path::Path::new("results/bench")),
+            || {
+                slimadam::pool::set_intraop_workers(1);
+                SweepScheduler::new(1).quiet().run(&configs).expect("intraop 1");
+            },
+            || {
+                slimadam::pool::set_intraop_workers(2);
+                SweepScheduler::new(1).quiet().run(&configs).expect("intraop 2");
+                slimadam::pool::set_intraop_workers(1);
+            },
+        );
+    }
+
     println!("\n== synthetic compute-bound sweep jobs (512x512 SNR probes) ==");
     let data: Vec<f32> = (0..512 * 512)
         .map(|i| (i % 97) as f32 * 0.01 + 1.0)

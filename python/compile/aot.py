@@ -26,7 +26,7 @@ import numpy as np
 from jax._src.lib import xla_client as xc
 
 from . import optim_jax
-from .models import gpt, linear2, llama, resnet, vit
+from .models import gpt, linear2, llama, native_mlp, resnet, vit
 from .models.common import Model
 from .optim_jax import Hypers, make_grad_step, make_train_step
 
@@ -41,7 +41,7 @@ def to_hlo_text(lowered) -> str:
 
 
 def build_model(name: str) -> Model:
-    for mod in (gpt, llama, vit, resnet, linear2):
+    for mod in (gpt, llama, vit, resnet, linear2, native_mlp):
         if name in mod.PRESETS:
             return mod.build(mod.PRESETS[name])
     raise KeyError(f"no model preset named {name!r}")
@@ -219,12 +219,15 @@ def main(argv=None):
     ap.add_argument("--large", action="store_true",
                     help="also lower the ~124M gpt_small artifact")
     ap.add_argument("--skip-fixtures", action="store_true")
+    ap.add_argument("--fixtures-only", action="store_true",
+                    help="generate the numeric fixtures, skip HLO lowering")
     args = ap.parse_args(argv)
 
     os.makedirs(args.outdir, exist_ok=True)
     t0 = time.time()
 
-    grads = list(GRAD_MODELS) + (list(LARGE_GRAD_MODELS) if args.large else [])
+    grads = [] if args.fixtures_only else (
+        list(GRAD_MODELS) + (list(LARGE_GRAD_MODELS) if args.large else []))
     for name in grads:
         art = f"{name}.grad"
         if args.only and args.only not in (name, art):
@@ -232,7 +235,8 @@ def main(argv=None):
         text, manifest = lower_grad_step(build_model(name))
         write_artifact(args.outdir, art, text, manifest)
 
-    for (name, ruleset) in FUSED:
+    fused = [] if args.fixtures_only else list(FUSED)
+    for (name, ruleset) in fused:
         art = f"{name}.train.{ruleset}"
         if args.only and args.only != art:
             continue
@@ -242,6 +246,12 @@ def main(argv=None):
     if not args.skip_fixtures and not args.only:
         make_fixture(args.outdir, "linear2_v64", steps=5, lr=1e-3)
         make_fixture(args.outdir, "gpt_nano", steps=3, lr=1e-3)
+        # JAX mirror of the native interpreter's builtin mlp_tiny family:
+        # replayed by rust/tests/fixture_replay.rs on the native backend.
+        # The batches are random tokens, so the loss floor is ln(64); the
+        # large lr makes every per-step loss a sharp function of the
+        # accumulated AdamW state rather than a flat 4.1589 sequence.
+        make_fixture(args.outdir, "native_mlp", steps=12, lr=1e-1)
 
     print(f"done in {time.time() - t0:.1f}s")
     return 0

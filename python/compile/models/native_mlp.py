@@ -1,0 +1,65 @@
+"""JAX mirror of the Rust native backend's builtin ``mlp_tiny`` family.
+
+The native interpreter (rust/src/runtime/backend/native.rs) generates its
+models in Rust, so unlike every other preset this one is never lowered to
+HLO — it exists purely to produce the ``native_mlp`` numeric fixture that
+``rust/tests/fixture_replay.rs`` replays through the interpreter's f64
+path, pinning it to an external JAX ground truth.
+
+Everything here must stay in lockstep with ``dims_for("mlp_tiny")`` and
+``mlp_pass_l`` on the Rust side: same param names/shapes/order, same
+per-token forward ``logits = W_head (W_down relu(W_up E[x]))``, same
+mean-token cross entropy. The fixture carries the concrete initial
+floats, so only shapes and forward semantics need to match — not RNG
+streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from .common import Model, ParamSpec, cross_entropy_lm, linear, normal, uniform_fanin
+
+
+@dataclasses.dataclass
+class NativeMlpConfig:
+    name: str = "native_mlp"
+    vocab: int = 64
+    d_model: int = 16
+    hidden: int = 32
+    ctx: int = 8
+    batch: int = 8
+
+
+PRESETS = {"native_mlp": NativeMlpConfig()}
+
+
+def build(cfg: NativeMlpConfig) -> Model:
+    v, d, h = cfg.vocab, cfg.d_model, cfg.hidden
+    # init mirrors native.rs init_json: mitchell = N(0, 0.02^2) for every
+    # matrix param (no 1-D params in this family)
+    specs = [
+        ParamSpec("tok_embd", (v, d), "tok_embd", -1,
+                  normal(0.02), normal(1.0), wd=True),
+        ParamSpec("mlp_up", (h, d), "mlp_up", 0,
+                  normal(0.02), uniform_fanin(d), wd=True),
+        ParamSpec("mlp_down", (d, h), "mlp_down", 0,
+                  normal(0.02), uniform_fanin(h), wd=True),
+        ParamSpec("lm_head", (v, d), "lm_head", 1,
+                  normal(0.02), uniform_fanin(d), wd=True),
+    ]
+
+    def loss(params, x, y):
+        tok, up, down, head = params
+        emb = tok[x]                           # (B, T, D)
+        u = jax.nn.relu(linear(emb, up))       # (B, T, H)
+        z = linear(u, down)                    # (B, T, D)
+        logits = linear(z, head)               # (B, T, V)
+        return cross_entropy_lm(logits, y)
+
+    batch_specs = [("x", (cfg.batch, cfg.ctx), "s32"),
+                   ("y", (cfg.batch, cfg.ctx), "s32")]
+    meta = dataclasses.asdict(cfg) | {"family": "mlp", "native_mirror": True}
+    return Model(cfg.name, specs, loss, batch_specs, meta)

@@ -161,6 +161,105 @@ pub fn write_native_summary(rows: &[Value], path: &std::path::Path) -> std::io::
     std::fs::write(path, root.dump_pretty())
 }
 
+/// Per-family throughput metrics gated by the CI `bench-regression` job
+/// (each is a "bigger is better" rate from the BENCH_native.json rows).
+pub const REGRESSION_METRICS: &[&str] = &[
+    "grad_units_per_s",
+    "split_steps_per_s",
+    "fused_steps_per_s",
+    "fused_jobs_per_s_batch4",
+];
+
+/// Outcome of comparing a fresh native summary against the committed
+/// baseline (CI `bench-regression`). `violations` fail the job;
+/// `warnings` are informational.
+#[derive(Debug, Default)]
+pub struct RegressionOutcome {
+    pub warnings: Vec<String>,
+    pub violations: Vec<String>,
+}
+
+impl RegressionOutcome {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Compare a fresh `BENCH_native.json` summary against a committed
+/// baseline: every [`REGRESSION_METRICS`] rate must stay within
+/// `max_regression` (e.g. `0.15` = 15%) of the baseline for every model
+/// the baseline covers.
+///
+/// A baseline whose root carries `"provisional": true` — the bootstrap
+/// state, committed before any CI box has recorded real numbers — never
+/// fails: its findings (including "metric absent from baseline")
+/// downgrade to warnings, and the job's artifact upload becomes the
+/// first real measurement to commit.
+pub fn check_native_regression(
+    baseline: &Value,
+    current: &Value,
+    max_regression: f64,
+) -> RegressionOutcome {
+    let mut out = RegressionOutcome::default();
+    let provisional = baseline
+        .opt("provisional")
+        .and_then(|v| v.as_bool().ok())
+        .unwrap_or(false);
+    let empty: [Value; 0] = [];
+    let base_rows = baseline
+        .opt("families")
+        .and_then(|v| v.as_arr().ok())
+        .unwrap_or(&empty);
+    let cur_rows = current
+        .opt("families")
+        .and_then(|v| v.as_arr().ok())
+        .unwrap_or(&empty);
+    for b_row in base_rows {
+        let Some(model) = b_row.opt("model").and_then(|v| v.as_str().ok().map(String::from))
+        else {
+            continue;
+        };
+        let Some(c_row) = cur_rows.iter().find(|r| {
+            r.opt("model").and_then(|v| v.as_str().ok()) == Some(model.as_str())
+        }) else {
+            out.violations
+                .push(format!("{model}: present in baseline, missing from summary"));
+            continue;
+        };
+        for &metric in REGRESSION_METRICS {
+            let base = b_row.opt(metric).and_then(|v| v.as_f64().ok());
+            let cur = c_row.opt(metric).and_then(|v| v.as_f64().ok());
+            match (base, cur) {
+                (Some(base), Some(cur)) if base > 0.0 => {
+                    let floor = base * (1.0 - max_regression);
+                    if cur < floor {
+                        out.violations.push(format!(
+                            "{model}.{metric}: {cur:.1}/s is {:.1}% below \
+                             baseline {base:.1}/s (allowed {:.0}%)",
+                            100.0 * (1.0 - cur / base),
+                            100.0 * max_regression
+                        ));
+                    }
+                }
+                (Some(_), Some(_)) | (None, _) => {
+                    out.warnings
+                        .push(format!("{model}.{metric}: no usable baseline rate"));
+                }
+                (Some(_), None) => {
+                    out.violations
+                        .push(format!("{model}.{metric}: missing from summary"));
+                }
+            }
+        }
+    }
+    if provisional {
+        out.warnings.append(&mut out.violations);
+        out.warnings
+            .push("baseline is provisional: findings reported as warnings only".into());
+    }
+    out
+}
+
 /// Benchmark runner with warmup + timed sampling.
 pub struct Bencher {
     pub warmup: Duration,
@@ -597,6 +696,62 @@ mod tests {
         assert!(r.batched_jobs_per_sec() > r.sequential_jobs_per_sec());
         let json = r.to_json().dump();
         assert!(json.contains("jobs_per_sec"), "{json}");
+    }
+
+    fn summary(rows: &[(&str, f64)], provisional: bool) -> Value {
+        let mut fams = Vec::new();
+        for (model, rate) in rows {
+            let mut r = Value::obj();
+            r.set("model", *model);
+            for &m in REGRESSION_METRICS {
+                r.set(m, *rate);
+            }
+            fams.push(r);
+        }
+        let mut root = Value::obj();
+        root.set("suite", "native").set("families", Value::Arr(fams));
+        if provisional {
+            root.set("provisional", true);
+        }
+        root
+    }
+
+    #[test]
+    fn regression_gate_passes_within_threshold() {
+        let base = summary(&[("mlp_tiny", 100.0), ("gpt_deep", 10.0)], false);
+        let cur = summary(&[("mlp_tiny", 90.0), ("gpt_deep", 11.0)], false);
+        let out = check_native_regression(&base, &cur, 0.15);
+        assert!(out.passed(), "{:?}", out.violations);
+    }
+
+    #[test]
+    fn regression_gate_fails_beyond_threshold() {
+        let base = summary(&[("gpt_deep", 10.0)], false);
+        let cur = summary(&[("gpt_deep", 8.0)], false); // -20%
+        let out = check_native_regression(&base, &cur, 0.15);
+        assert!(!out.passed());
+        assert!(
+            out.violations.iter().all(|v| v.contains("gpt_deep")),
+            "{:?}",
+            out.violations
+        );
+    }
+
+    #[test]
+    fn regression_gate_fails_on_missing_model() {
+        let base = summary(&[("mlp_tiny", 100.0)], false);
+        let cur = summary(&[], false);
+        let out = check_native_regression(&base, &cur, 0.15);
+        assert!(!out.passed());
+    }
+
+    #[test]
+    fn provisional_baseline_only_warns() {
+        let base = summary(&[("gpt_deep", 1e9)], true); // absurd bar, but provisional
+        let cur = summary(&[("gpt_deep", 1.0)], false);
+        let out = check_native_regression(&base, &cur, 0.15);
+        assert!(out.passed(), "{:?}", out.violations);
+        assert!(!out.warnings.is_empty());
     }
 
     #[test]

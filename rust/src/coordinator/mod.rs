@@ -112,9 +112,13 @@ pub struct TrainConfig {
     /// Explicit SlimAdam rules (overrides the named preset when set).
     pub ruleset: Option<RuleSet>,
     pub engine: EngineKind,
-    /// Execution backend + device (DESIGN.md §11). Part of the run's
-    /// identity: hashed into `runstore::config_key`, the executable-cache
-    /// key and the scheduler shard key.
+    /// Execution backend + device + compute precision (DESIGN.md §11,
+    /// §14). Part of the run's identity: hashed into
+    /// `runstore::config_key`, the executable-cache key and the
+    /// scheduler shard key. The f32 native mode keys as `native+f32@…`,
+    /// so its rows never alias the f64 verify reference; intra-op worker
+    /// count is *not* part of identity — kernel results are
+    /// worker-invariant by contract.
     pub backend: BackendSpec,
     pub lr: f64,
     pub steps: usize,

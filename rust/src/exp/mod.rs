@@ -100,11 +100,20 @@ pub fn probe() -> ProbeSchedule {
 }
 
 /// The execution backend an experiment was asked to run on
-/// (`--backend pjrt|native[@device]`, default pjrt). Every figure/table
-/// driver threads this into its configs so the whole reproduction suite
-/// can run offline on the native interpreter.
+/// (`--backend pjrt|native[+f32][@device]`, default pjrt). Every
+/// figure/table driver threads this into its configs so the whole
+/// reproduction suite can run offline on the native interpreter.
+///
+/// `--precision f32|f64` overrides the spec's compute precision
+/// (equivalent to the `+f32` spec suffix; DESIGN.md §14). The resulting
+/// spec — precision included — is what lands in config/cache/store keys,
+/// so f32 rows never collide with the f64 reference.
 pub fn backend_spec(args: &Args) -> Result<BackendSpec> {
-    BackendSpec::parse(args.str_or("backend", "pjrt"))
+    let mut spec = BackendSpec::parse(args.str_or("backend", "pjrt"))?;
+    if let Some(p) = args.get("precision") {
+        spec.precision = crate::runtime::backend::Precision::parse(p)?;
+    }
+    Ok(spec)
 }
 
 /// Apply the shared cross-driver options (`--backend`) to a base config.

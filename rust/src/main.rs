@@ -107,6 +107,8 @@ fn exp_opts() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "model", help: "artifact model name", default: Some("per-experiment"), is_flag: false },
         OptSpec { name: "backend", help: "execution backend: pjrt | native", default: Some("pjrt"), is_flag: false },
+        OptSpec { name: "precision", help: "native compute precision: f64 | f32 (f64 is the verify reference)", default: Some("f64"), is_flag: false },
+        OptSpec { name: "intraop", help: "intra-op kernel worker threads (native; results invariant)", default: Some("1"), is_flag: false },
         OptSpec { name: "steps", help: "training steps per run", default: Some("per-experiment"), is_flag: false },
         OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("per-experiment"), is_flag: false },
         OptSpec { name: "workers", help: "parallel runs", default: Some("cores"), is_flag: false },
@@ -136,6 +138,14 @@ fn default_model(kind: BackendKind) -> &'static str {
 }
 
 fn base_config(args: &Args) -> Result<TrainConfig> {
+    // Intra-op kernel parallelism (native backend; DESIGN.md §14).
+    // Results are worker-count invariant by construction, so this is a
+    // throughput knob only and deliberately absent from config keys.
+    if let Ok(n) = args.usize_or("intraop", 0) {
+        if n > 0 {
+            slimadam::pool::set_intraop_workers(n);
+        }
+    }
     let backend = slimadam::exp::backend_spec(args)?;
     let model = args.str_or("model", default_model(backend.kind)).to_string();
     let optimizer = args.str_or("optimizer", "adam").to_string();
@@ -169,7 +179,9 @@ fn cmd_train(args: &Args) -> Result<()> {
             "{}",
             render_help("slimadam", "train", "run one training config", &[
                 OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano (pjrt) / gpt_micro (native)"), is_flag: false },
-                OptSpec { name: "backend", help: "execution backend: pjrt | native (optionally @device, e.g. pjrt@cpu:0)", default: Some("pjrt"), is_flag: false },
+                OptSpec { name: "backend", help: "execution backend: pjrt | native (optionally +f32 and/or @device, e.g. native+f32@cpu:0)", default: Some("pjrt"), is_flag: false },
+                OptSpec { name: "precision", help: "native compute precision: f64 | f32 (overrides the spec suffix)", default: Some("f64"), is_flag: false },
+                OptSpec { name: "intraop", help: "intra-op kernel worker threads (native; results invariant)", default: Some("1"), is_flag: false },
                 OptSpec { name: "optimizer", help: "optimizer preset", default: Some("adam"), is_flag: false },
                 OptSpec { name: "lr", help: "peak learning rate", default: Some("1e-3"), is_flag: false },
                 OptSpec { name: "steps", help: "training steps", default: Some("100"), is_flag: false },
@@ -206,7 +218,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "{}",
             render_help("slimadam", "sweep", "run an (optimizer × LR) grid on the parallel scheduler", &[
                 OptSpec { name: "model", help: "artifact model", default: Some("gpt_nano (pjrt) / gpt_micro (native)"), is_flag: false },
-                OptSpec { name: "backend", help: "execution backend: pjrt | native", default: Some("pjrt"), is_flag: false },
+                OptSpec { name: "backend", help: "execution backend: pjrt | native (optionally +f32, e.g. native+f32)", default: Some("pjrt"), is_flag: false },
+                OptSpec { name: "precision", help: "native compute precision: f64 | f32 (overrides the spec suffix)", default: Some("f64"), is_flag: false },
+                OptSpec { name: "intraop", help: "intra-op kernel worker threads per job (native; results invariant)", default: Some("1"), is_flag: false },
                 OptSpec { name: "optimizers", help: "comma-separated optimizer presets", default: Some("adam,slimadam"), is_flag: false },
                 OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("log grid 1e-4..1e-2, 4 pts"), is_flag: false },
                 OptSpec { name: "steps", help: "training steps per job", default: Some("100"), is_flag: false },

@@ -174,6 +174,117 @@ where
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Intra-op parallelism (DESIGN.md §14)
+//
+// The schedulers above fan *jobs* out across workers. The helpers below
+// fan the inside of one op out — e.g. the native backend's global-norm
+// reduction and fused optimizer update split their per-tensor loops
+// across threads. The contract is the same as for the job schedulers:
+// thread count must never influence results. [`parallel_indexed`]
+// guarantees it structurally (workers fill an index-addressed slot
+// table; the caller folds slots in index order), and the worker count
+// itself is a process-wide knob that is deliberately *not* part of any
+// config fingerprint (`rust/tests/scheduler_determinism.rs` proves
+// workers=1 ≡ 2 ≡ 8 for full train steps).
+// ---------------------------------------------------------------------------
+
+static INTRAOP_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Intra-op worker count for kernel-internal parallelism. Defaults to 1
+/// (no extra threads — sweeps already parallelize across jobs); set via
+/// [`set_intraop_workers`] (`--intraop`) or the `SLIMADAM_INTRAOP`
+/// environment variable, read once on first use.
+pub fn intraop_workers() -> usize {
+    let v = INTRAOP_WORKERS.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::env::var("SLIMADAM_INTRAOP")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(1);
+    INTRAOP_WORKERS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Set the process-wide intra-op worker count (clamped to ≥ 1).
+pub fn set_intraop_workers(n: usize) {
+    INTRAOP_WORKERS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Compute `f(0..n)` on `workers` threads and return the results in
+/// index order. Infallible flavor of [`parallel_map`] for kernel-internal
+/// fan-out: the work items are index ranges the caller derived from data
+/// shape alone, so the slot table (not scheduling) fixes the output
+/// order and any subsequent fold is deterministic. A panicking task
+/// propagates out of the scope.
+pub fn parallel_indexed<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("task produced no result"))
+        .collect()
+}
+
+/// Apply `f(i, &mut items[i])` to every item, splitting the slice into
+/// one contiguous chunk per worker. For mutually independent per-tensor
+/// work (each item owns its data), so thread count and chunk boundaries
+/// cannot affect results.
+pub fn parallel_chunks<T, F>(items: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let per = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (w, chunk) in items.chunks_mut(per).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, item) in chunk.iter_mut().enumerate() {
+                    f(w * per + j, item);
+                }
+            });
+        }
+    });
+}
+
 fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         s.to_string()
@@ -315,5 +426,39 @@ mod tests {
         assert_eq!(default_workers(0), 1);
         assert!(default_workers(1000) >= 1);
         assert!(default_workers(2) <= 2);
+    }
+
+    #[test]
+    fn indexed_returns_in_order_for_any_worker_count() {
+        let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+        for workers in [1, 2, 5, 64] {
+            let got = parallel_indexed(37, workers, |i| i * i);
+            assert_eq!(got, want, "workers={workers}");
+        }
+        assert!(parallel_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn chunks_visits_every_item_with_its_index() {
+        for workers in [1, 3, 8] {
+            let mut items: Vec<usize> = vec![0; 23];
+            parallel_chunks(&mut items, workers, |i, slot| *slot = i + 1);
+            let want: Vec<usize> = (1..=23).collect();
+            assert_eq!(items, want, "workers={workers}");
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_chunks(&mut empty, 4, |_, _| unreachable!());
+    }
+
+    #[test]
+    fn intraop_knob_round_trips() {
+        // results are worker-count invariant by design, so briefly raising
+        // the global knob cannot perturb concurrently running tests
+        let before = intraop_workers();
+        set_intraop_workers(3);
+        assert_eq!(intraop_workers(), 3);
+        set_intraop_workers(0); // clamps to 1
+        assert_eq!(intraop_workers(), 1);
+        set_intraop_workers(before);
     }
 }

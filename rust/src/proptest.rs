@@ -61,6 +61,16 @@ impl Gen {
         (0..n).map(|_| (self.rng.normal() * std) as f32).collect()
     }
 
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    /// Full-precision normal draws — kernel-equivalence inputs, where
+    /// casting through f32 would mask reassociation error.
+    pub fn vec_normal_f64(&mut self, n: usize, std: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal() * std).collect()
+    }
+
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }

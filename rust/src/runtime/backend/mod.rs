@@ -20,7 +20,8 @@
 //!   [`super::engine::Compiled`]; they never know which backend produced
 //!   it.
 //!
-//! A [`BackendSpec`] names a `(kind, device)` pair. It is carried by
+//! A [`BackendSpec`] names a `(kind, device, precision)` triple. It is
+//! carried by
 //! `TrainConfig`, hashed into `runstore::config_key`, and is part of the
 //! executable-cache key and the sweep scheduler's shard key — so mixed
 //! device pools schedule and resume correctly (`coordinator::exec_cache`).
@@ -79,6 +80,41 @@ impl fmt::Display for DeviceTag {
     }
 }
 
+/// Compute precision of a backend's interpreter (DESIGN.md §14).
+///
+/// `F64` is the verify reference — the seed repo's only mode, so its
+/// spec keys are unchanged. `F32` is the opt-in fast mode
+/// (`--precision f32`): same kernels instantiated at f32, deterministic
+/// for a fixed `(lanes, workers, precision)` triple but *not* expected
+/// to match f64 bitwise — differential suites always compare within one
+/// precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Precision {
+    /// f64 compute, the verify reference (default).
+    #[default]
+    F64,
+    /// f32 compute, opt-in via `--precision f32` / `"native+f32"`.
+    F32,
+}
+
+impl Precision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// Parse `"f64"` / `"f32"`.
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "f64" => Precision::F64,
+            "f32" => Precision::F32,
+            other => bail!("unknown precision {other:?} (want f64 or f32)"),
+        })
+    }
+}
+
 /// Which backend implementation compiles and runs artifacts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum BackendKind {
@@ -97,13 +133,14 @@ impl BackendKind {
     }
 }
 
-/// A `(backend kind, device)` pair — the unit of execution identity.
-/// Part of `TrainConfig`, the run-store config key, the executable-cache
-/// key and the scheduler shard key.
+/// A `(backend kind, device, precision)` triple — the unit of execution
+/// identity. Part of `TrainConfig`, the run-store config key, the
+/// executable-cache key and the scheduler shard key.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BackendSpec {
     pub kind: BackendKind,
     pub device: DeviceTag,
+    pub precision: Precision,
 }
 
 impl Default for BackendSpec {
@@ -119,6 +156,7 @@ impl BackendSpec {
         BackendSpec {
             kind: BackendKind::Pjrt,
             device: DeviceTag::Cpu(0),
+            precision: Precision::F64,
         }
     }
 
@@ -126,20 +164,35 @@ impl BackendSpec {
         BackendSpec {
             kind: BackendKind::Native,
             device: DeviceTag::Cpu(0),
+            precision: Precision::F64,
         }
     }
 
-    /// Parse `"pjrt"`, `"native"`, or `"<kind>@<device>"` (e.g.
-    /// `"pjrt@gpu:1"`).
+    /// The native interpreter in its opt-in f32 compute mode.
+    pub fn native_f32() -> BackendSpec {
+        BackendSpec {
+            kind: BackendKind::Native,
+            device: DeviceTag::Cpu(0),
+            precision: Precision::F32,
+        }
+    }
+
+    /// Parse `"pjrt"`, `"native"`, `"native+f32"`, or
+    /// `"<kind>[+<precision>]@<device>"` (e.g. `"pjrt@gpu:1"`,
+    /// `"native+f32@cpu:0"`).
     ///
     /// ```
-    /// use slimadam::runtime::backend::{BackendKind, BackendSpec, DeviceTag};
+    /// use slimadam::runtime::backend::{BackendKind, BackendSpec, DeviceTag, Precision};
     ///
     /// let s = BackendSpec::parse("native").unwrap();
     /// assert_eq!(s.kind, BackendKind::Native);
+    /// assert_eq!(s.precision, Precision::F64);
     /// let s = BackendSpec::parse("pjrt@gpu:1").unwrap();
     /// assert_eq!(s.device, DeviceTag::Gpu(1));
     /// assert_eq!(s.key(), "pjrt@gpu:1");
+    /// let s = BackendSpec::parse("native+f32").unwrap();
+    /// assert_eq!(s.precision, Precision::F32);
+    /// assert_eq!(s.key(), "native+f32@cpu:0");
     /// assert!(BackendSpec::parse("cuda").is_err());
     /// ```
     pub fn parse(s: &str) -> Result<BackendSpec> {
@@ -147,18 +200,32 @@ impl BackendSpec {
             Some((k, d)) => (k, DeviceTag::parse(d)?),
             None => (s, DeviceTag::Cpu(0)),
         };
+        let (kind, precision) = match kind.split_once('+') {
+            Some((k, p)) => (k, Precision::parse(p)?),
+            None => (kind, Precision::F64),
+        };
         let kind = match kind {
             "pjrt" => BackendKind::Pjrt,
             "native" => BackendKind::Native,
             other => bail!("unknown backend {other:?} (want pjrt or native)"),
         };
-        Ok(BackendSpec { kind, device })
+        Ok(BackendSpec {
+            kind,
+            device,
+            precision,
+        })
     }
 
     /// Stable textual identity, e.g. `"native@cpu:0"` — used in config
-    /// keys, cache keys and shard keys.
+    /// keys, cache keys and shard keys. The `+f32` marker appears only
+    /// for the non-default precision, so every pre-existing f64 key (and
+    /// therefore every stored run row) is byte-identical to before the
+    /// precision field existed.
     pub fn key(&self) -> String {
-        format!("{}@{}", self.kind.as_str(), self.device)
+        match self.precision {
+            Precision::F64 => format!("{}@{}", self.kind.as_str(), self.device),
+            Precision::F32 => format!("{}+f32@{}", self.kind.as_str(), self.device),
+        }
     }
 }
 
@@ -228,8 +295,18 @@ pub fn backend_for(spec: &BackendSpec) -> Result<Rc<dyn Backend>> {
             spec.device
         );
     }
+    if spec.kind == BackendKind::Pjrt && spec.precision != Precision::F64 {
+        bail!(
+            "backend pjrt only supports the f64-reference compute path; \
+             precision {} is a native-interpreter mode (use `--backend native`)",
+            spec.precision.as_str()
+        );
+    }
     match spec.kind {
-        BackendKind::Native => Ok(Rc::new(native::NativeBackend::new(spec.device))),
+        BackendKind::Native => Ok(Rc::new(native::NativeBackend::with_precision(
+            spec.device,
+            spec.precision,
+        ))),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => Ok(Rc::new(pjrt::PjrtBackend::new(spec.device)?)),
         #[cfg(not(feature = "pjrt"))]
@@ -273,6 +350,42 @@ mod tests {
         assert_eq!(s.key(), "native@gpu:2");
         assert_eq!(BackendSpec::parse(&s.key()).unwrap(), s);
         assert!(BackendSpec::parse("tensorrt").is_err());
+    }
+
+    #[test]
+    fn f32_precision_parses_and_keys_roundtrip() {
+        let s = BackendSpec::parse("native+f32").unwrap();
+        assert_eq!(s, BackendSpec::native_f32());
+        assert_eq!(s.key(), "native+f32@cpu:0");
+        assert_eq!(BackendSpec::parse(&s.key()).unwrap(), s);
+        // explicit +f64 is accepted and keys back to the unmarked form
+        let s = BackendSpec::parse("native+f64@cpu:1").unwrap();
+        assert_eq!(s.precision, Precision::F64);
+        assert_eq!(s.key(), "native@cpu:1");
+        assert!(BackendSpec::parse("native+bf16").is_err());
+    }
+
+    #[test]
+    fn f64_keys_are_unchanged_by_the_precision_field() {
+        // stored run rows key on this string: the default precision must
+        // never alter it
+        assert_eq!(BackendSpec::native().key(), "native@cpu:0");
+        assert_eq!(BackendSpec::pjrt().key(), "pjrt@cpu:0");
+        assert_eq!(BackendSpec::default().precision, Precision::F64);
+    }
+
+    #[test]
+    fn pjrt_rejects_non_reference_precision() {
+        let spec = BackendSpec::parse("pjrt+f32").unwrap();
+        let err = backend_for(&spec).unwrap_err();
+        assert!(format!("{err}").contains("f64-reference"), "{err}");
+    }
+
+    #[test]
+    fn native_f32_backend_constructs() {
+        let b = backend_for(&BackendSpec::native_f32()).unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.device(), DeviceTag::Cpu(0));
     }
 
     #[test]

@@ -23,8 +23,10 @@
 //!   (grad + `optim::adamk::AdamK`) and fused native runs of the same
 //!   config produce matching trajectories
 //!   (`rust/tests/engine_agreement.rs`);
-//! * forward/backward accumulate in f64 and emit f32, so results are a
-//!   deterministic pure function of the inputs on every host.
+//! * forward/backward accumulate in the compute precision ([`Precision`],
+//!   f64 by default, opt-in f32 via `--precision f32`) and emit f32, so
+//!   results are a deterministic pure function of the inputs and the
+//!   `(lanes, workers, precision)` triple on every host.
 //!
 //! There is exactly one implementation of every forward/backward pass:
 //! the lane-stacked kernels of DESIGN.md §12. A sequential `run` is the
@@ -32,6 +34,31 @@
 //! bit-identity is structural rather than a property of two parallel
 //! implementations staying in sync (`rust/tests/batched_agreement.rs`
 //! still proves it end to end for every model × ruleset).
+//!
+//! # SIMD lane contract (DESIGN.md §14)
+//!
+//! The hot kernels run width-4 unrolled tree reductions
+//! ([`KernelMode::Simd`]) whose floating-point operation sequence per
+//! lane is a function of the *logical shape only* — never the lane
+//! count, the intra-op worker count, or the position of a lane in a
+//! batch. That keeps `run` ≡ `run_batch` bit-identity structural while
+//! allowing reductions to reassociate relative to the scalar reference
+//! ([`KernelMode::ScalarRef`], the pre-SIMD bodies, kept as the
+//! equivalence oracle for `rust/tests/kernel_equivalence.rs`):
+//!
+//! * **bit-exact in both modes**: transpose matvec, outer-product
+//!   accumulation, every elementwise loop, conv loops, the fused AdamW
+//!   update and its reduced-V group sums (scalar `j` order);
+//! * **tolerance-bound** (reassociated 4-way trees): matvec rows,
+//!   attention score/backward dots, softmax normalizers, RMS-norm
+//!   sum-of-squares, and the global-norm-clip squared sum — bounded by
+//!   `|Δ| ≤ n·ε·Σ|terms|` and enforced property-style by the harness;
+//! * max-reductions are exact under any association and carry no bound.
+//!
+//! Intra-op parallelism (global-norm clip chunk sums, per-tensor fused
+//! updates) uses `pool::parallel_indexed` / `pool::parallel_chunks`:
+//! workers fill an index-addressed table that is folded in index order,
+//! so results are bitwise invariant in the worker count.
 
 use anyhow::{anyhow, bail, Context, Result};
 use xla::Literal;
@@ -41,7 +68,7 @@ use crate::runtime::literal::{literal_to_tensor, scalar_f32, tensor_to_literal};
 use crate::runtime::manifest::{Hypers, KMode, Manifest};
 use crate::tensor::Tensor;
 
-use super::{Backend, DeviceTag, Executable};
+use super::{Backend, DeviceTag, Executable, Precision};
 
 /// Builtin models the native interpreter knows.
 ///
@@ -496,18 +523,174 @@ fn generate_artifact(name: &str) -> Result<Artifact> {
 }
 
 // ---------------------------------------------------------------------------
+// Compute element type + kernel mode
+// ---------------------------------------------------------------------------
+
+/// Scalar element type the interpreter computes in: `f64` (the verify
+/// reference) or `f32` (the opt-in fast mode, `--precision f32`).
+///
+/// The trait surface is exactly what the lane kernels need; method names
+/// mirror the `f64` inherent methods so generic bodies read like the
+/// scalar originals. `maxr` is `f64::max` (NaN-ignoring), renamed so the
+/// trait method cannot shadow-collide with the inherent one.
+pub trait Real:
+    Copy
+    + PartialOrd
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + 'static
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + std::ops::DivAssign
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// `-∞`, the max-reduction seed.
+    const NEG_INF: Self;
+    /// Smallest positive normal value (log-loss clamp).
+    const MIN_POS: Self;
+    /// Lossy conversion from f64.
+    fn from_f64(x: f64) -> Self;
+    /// Widening (f64) or identity conversion.
+    fn to_f64(self) -> f64;
+    /// Conversion from the f32 storage boundary.
+    fn from_f32(x: f32) -> Self;
+    /// Conversion to the f32 storage boundary.
+    fn to_f32(self) -> f32;
+    /// Natural exponential.
+    fn exp(self) -> Self;
+    /// Natural logarithm.
+    fn ln(self) -> Self;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// NaN-ignoring maximum (`f64::max` semantics).
+    fn maxr(self, other: Self) -> Self;
+}
+
+impl Real for f64 {
+    const ZERO: Self = 0.0;
+    const NEG_INF: Self = f64::NEG_INFINITY;
+    const MIN_POS: Self = f64::MIN_POSITIVE;
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn from_f32(x: f32) -> Self {
+        x as f64
+    }
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+    fn ln(self) -> Self {
+        f64::ln(self)
+    }
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    fn maxr(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+}
+
+impl Real for f32 {
+    const ZERO: Self = 0.0;
+    const NEG_INF: Self = f32::NEG_INFINITY;
+    const MIN_POS: Self = f32::MIN_POSITIVE;
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+    fn ln(self) -> Self {
+        f32::ln(self)
+    }
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    fn maxr(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+}
+
+/// Which kernel bodies the reassociating reductions run (DESIGN.md §14).
+///
+/// `Simd` (the default) runs the width-4 unrolled tree reductions;
+/// `ScalarRef` runs the strict scalar-iteration-order reference bodies.
+/// The flag is thread-local so the `kernel_equivalence` harness and the
+/// bench's before/after measurement can flip modes without racing
+/// concurrently running tests. Order-preserving kernels ignore the mode
+/// (one body, bit-identical by construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Width-4 tree reductions; intra-op workers enabled.
+    Simd,
+    /// Pre-SIMD scalar-order reference; single-threaded.
+    ScalarRef,
+}
+
+thread_local! {
+    static KERNEL_MODE: std::cell::Cell<KernelMode> =
+        const { std::cell::Cell::new(KernelMode::Simd) };
+}
+
+/// This thread's kernel mode (default [`KernelMode::Simd`]).
+pub fn kernel_mode() -> KernelMode {
+    KERNEL_MODE.with(|m| m.get())
+}
+
+/// Set this thread's kernel mode. Worker threads spawned by the pool
+/// always start in `Simd`; the reference mode is a test/bench
+/// instrument, not a run-time configuration.
+pub fn set_kernel_mode(mode: KernelMode) {
+    KERNEL_MODE.with(|m| m.set(mode));
+}
+
+// ---------------------------------------------------------------------------
 // Backend + executable
 // ---------------------------------------------------------------------------
 
 /// The pure-Rust execution path. Stateless; `compile` binds a builtin
-/// model's interpreter to the artifact's manifest.
+/// model's interpreter to the artifact's manifest (and this backend's
+/// compute precision).
 pub struct NativeBackend {
     device: DeviceTag,
+    precision: Precision,
 }
 
 impl NativeBackend {
     pub fn new(device: DeviceTag) -> NativeBackend {
-        NativeBackend { device }
+        NativeBackend {
+            device,
+            precision: Precision::F64,
+        }
+    }
+
+    /// A backend computing in `precision` (`--precision f32` plumbs
+    /// through here; f64 stays the verify reference).
+    pub fn with_precision(device: DeviceTag, precision: Precision) -> NativeBackend {
+        NativeBackend { device, precision }
     }
 }
 
@@ -556,6 +739,7 @@ impl Backend for NativeBackend {
         Ok(Box::new(NativeExecutable {
             manifest: art.manifest.clone(),
             dims,
+            precision: self.precision,
         }))
     }
 }
@@ -564,6 +748,7 @@ impl Backend for NativeBackend {
 struct NativeExecutable {
     manifest: Manifest,
     dims: Dims,
+    precision: Precision,
 }
 
 /// One job's decoded batch inputs, per model family.
@@ -630,23 +815,30 @@ impl NativeExecutable {
         }
     }
 
-    fn run_grad(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+    fn run_grad<E: Real>(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let n = self.manifest.n_params();
-        let params: Vec<Tensor> = inputs[..n]
-            .iter()
-            .map(literal_to_tensor)
-            .collect::<Result<_>>()?;
+        // f32 at the boundary, E internally (lanes = 1)
+        let mut params_l: Vec<Vec<E>> = Vec::with_capacity(n);
+        for lit in &inputs[..n] {
+            let t = literal_to_tensor(lit)?;
+            params_l.push(t.data.iter().map(|&x| E::from_f32(x)).collect());
+        }
         let batch = self.read_batch(&inputs[n], &inputs[n + 1])?;
-        let (loss, grads) = loss_and_grads(&self.dims, &params, &batch);
+        let (losses, grads_l) =
+            loss_and_grads_l::<E>(&self.dims, &params_l, std::slice::from_ref(&batch), 1);
         let mut out = Vec::with_capacity(1 + n);
-        out.push(scalar_f32(loss as f32));
-        for g in &grads {
-            out.push(tensor_to_literal(g)?);
+        out.push(scalar_f32(losses[0] as f32));
+        for (i, g) in grads_l.iter().enumerate() {
+            let data: Vec<f32> = g.iter().map(|&x| x.to_f32()).collect();
+            out.push(tensor_to_literal(&Tensor::from_vec(
+                &self.manifest.params[i].shape,
+                data,
+            ))?);
         }
         Ok(out)
     }
 
-    fn run_train(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+    fn run_train<E: Real>(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
         let man = &self.manifest;
         let n = man.n_params();
         let hypers = man.hypers.unwrap_or_default();
@@ -689,19 +881,19 @@ impl NativeExecutable {
 
         // The sequential step IS the lanes = 1 batched step: the same
         // kernels, the same iteration order, one lane.
-        let params_f64: Vec<Vec<f64>> = w_l
+        let params_e: Vec<Vec<E>> = w_l
             .iter()
-            .map(|s| s.iter().map(|&x| x as f64).collect())
+            .map(|s| s.iter().map(|&x| E::from_f32(x)).collect())
             .collect();
-        let (losses, grads_f64) = loss_and_grads_l(
+        let (losses, grads_e) = loss_and_grads_l::<E>(
             &self.dims,
-            &params_f64,
+            &params_e,
             std::slice::from_ref(&batch),
             1,
         );
-        let mut grads_l: Vec<Vec<f32>> = grads_f64
+        let mut grads_l: Vec<Vec<f32>> = grads_e
             .iter()
-            .map(|g| g.iter().map(|&x| x as f32).collect())
+            .map(|g| g.iter().map(|&x| x.to_f32()).collect())
             .collect();
         let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, 1);
         fused_update_l(
@@ -753,28 +945,29 @@ impl NativeExecutable {
 
     /// Batched `grad_step`: one lane-stacked forward/backward pass for
     /// all jobs, per-job `(loss, grads...)` outputs.
-    fn run_grad_batch(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
+    fn run_grad_batch<E: Real>(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
         let lanes = jobs.len();
         let man = &self.manifest;
         let n = man.n_params();
-        // f32 → f64 exactly as the scalar path (literal_to_tensor + f64s)
-        let mut params_l: Vec<Vec<f64>> = Vec::with_capacity(n);
+        // f32 → E exactly as the scalar path (f32 boundary, E internal)
+        let mut params_l: Vec<Vec<E>> = Vec::with_capacity(n);
         for i in 0..n {
             let stacked = self.stack_slot(jobs, i, man.params[i].numel(), "param")?;
-            params_l.push(stacked.iter().map(|&x| x as f64).collect());
+            params_l.push(stacked.iter().map(|&x| E::from_f32(x)).collect());
         }
         let mut batches = Vec::with_capacity(lanes);
         for job in jobs {
             batches.push(self.read_batch(&job[n], &job[n + 1])?);
         }
-        let (losses, grads_l) = loss_and_grads_l(&self.dims, &params_l, &batches, lanes);
+        let (losses, grads_l) =
+            loss_and_grads_l::<E>(&self.dims, &params_l, &batches, lanes);
         let mut out = Vec::with_capacity(lanes);
         for b in 0..lanes {
             let mut job_out = Vec::with_capacity(1 + n);
             job_out.push(scalar_f32(losses[b] as f32));
             for (i, g) in grads_l.iter().enumerate() {
                 let data: Vec<f32> =
-                    g[b..].iter().step_by(lanes).map(|&x| x as f32).collect();
+                    g[b..].iter().step_by(lanes).map(|&x| x.to_f32()).collect();
                 job_out.push(tensor_to_literal(&Tensor::from_vec(
                     &man.params[i].shape,
                     data,
@@ -788,7 +981,7 @@ impl NativeExecutable {
     /// Batched `train_step`: lane-stacked forward/backward, per-lane
     /// global-norm clip and per-lane fused reduced-V AdamW update (each
     /// lane carries its own step index and learning rate).
-    fn run_train_batch(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
+    fn run_train_batch<E: Real>(&self, jobs: &[Vec<Literal>]) -> Result<Vec<Vec<Literal>>> {
         let lanes = jobs.len();
         let man = &self.manifest;
         let n = man.n_params();
@@ -824,16 +1017,16 @@ impl NativeExecutable {
             lrs.push(crate::runtime::literal::scalar_value(&job[3 * n + 3])?);
         }
 
-        let params_f64: Vec<Vec<f64>> = w_l
+        let params_e: Vec<Vec<E>> = w_l
             .iter()
-            .map(|s| s.iter().map(|&x| x as f64).collect())
+            .map(|s| s.iter().map(|&x| E::from_f32(x)).collect())
             .collect();
-        let (losses, grads_f64) =
-            loss_and_grads_l(&self.dims, &params_f64, &batches, lanes);
-        // f64 → f32 cast before clipping, exactly as the scalar path
-        let mut grads_l: Vec<Vec<f32>> = grads_f64
+        let (losses, grads_e) =
+            loss_and_grads_l::<E>(&self.dims, &params_e, &batches, lanes);
+        // E → f32 cast before clipping, exactly as the scalar path
+        let mut grads_l: Vec<Vec<f32>> = grads_e
             .iter()
-            .map(|g| g.iter().map(|&x| x as f32).collect())
+            .map(|g| g.iter().map(|&x| x.to_f32()).collect())
             .collect();
         let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, lanes);
         fused_update_l(
@@ -875,10 +1068,12 @@ impl NativeExecutable {
 
 impl Executable for NativeExecutable {
     fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        match self.manifest.kind.as_str() {
-            "grad_step" => self.run_grad(inputs),
-            "train_step" => self.run_train(inputs),
-            k => bail!("native backend cannot execute manifest kind {k:?}"),
+        match (self.manifest.kind.as_str(), self.precision) {
+            ("grad_step", Precision::F64) => self.run_grad::<f64>(inputs),
+            ("grad_step", Precision::F32) => self.run_grad::<f32>(inputs),
+            ("train_step", Precision::F64) => self.run_train::<f64>(inputs),
+            ("train_step", Precision::F32) => self.run_train::<f32>(inputs),
+            (k, _) => bail!("native backend cannot execute manifest kind {k:?}"),
         }
     }
 
@@ -898,10 +1093,12 @@ impl Executable for NativeExecutable {
                 job.len()
             );
         }
-        match self.manifest.kind.as_str() {
-            "grad_step" => self.run_grad_batch(jobs),
-            "train_step" => self.run_train_batch(jobs),
-            k => bail!("native backend cannot execute manifest kind {k:?}"),
+        match (self.manifest.kind.as_str(), self.precision) {
+            ("grad_step", Precision::F64) => self.run_grad_batch::<f64>(jobs),
+            ("grad_step", Precision::F32) => self.run_grad_batch::<f32>(jobs),
+            ("train_step", Precision::F64) => self.run_train_batch::<f64>(jobs),
+            ("train_step", Precision::F32) => self.run_train_batch::<f32>(jobs),
+            (k, _) => bail!("native backend cannot execute manifest kind {k:?}"),
         }
     }
 }
@@ -920,7 +1117,7 @@ impl Executable for NativeExecutable {
 fn loss_and_grads(dims: &Dims, params: &[Tensor], batch: &BatchIn) -> (f64, Vec<Tensor>) {
     let params_l: Vec<Vec<f64>> = params.iter().map(f64s).collect();
     let (losses, grads_l) =
-        loss_and_grads_l(dims, &params_l, std::slice::from_ref(batch), 1);
+        loss_and_grads_l::<f64>(dims, &params_l, std::slice::from_ref(batch), 1);
     let out = params
         .iter()
         .zip(&grads_l)
@@ -986,12 +1183,140 @@ fn image_lanes(batches: &[BatchIn]) -> (Vec<&[f32]>, Vec<&[i32]>) {
 // `rust/tests/batched_agreement.rs`).
 // ---------------------------------------------------------------------------
 
-/// Lane matvec: `out[r] = W[r,:]·v` per lane (accumulation over `cols` in
-/// scalar order).
-fn matvec_l(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64], l: usize) {
+/// Strided lane dot product, width-4 unrolled tree order: reduces
+/// `Σ_i a[i·l + lane] · b[i·l + lane]` over `n` terms with four
+/// independent accumulators folded `(a0+a1)+(a2+a3)` plus a scalar tail.
+/// The FP operation sequence depends only on `n` — never on `l` or
+/// `lane` — which is what keeps `run` ≡ `run_batch` bit-identity intact
+/// under reassociation (DESIGN.md §14).
+#[inline]
+fn dot_tree<E: Real>(a: &[E], b: &[E], n: usize, lane: usize, l: usize) -> E {
+    let n4 = n & !3;
+    let mut a0 = E::ZERO;
+    let mut a1 = E::ZERO;
+    let mut a2 = E::ZERO;
+    let mut a3 = E::ZERO;
+    let mut i = 0;
+    while i < n4 {
+        a0 += a[i * l + lane] * b[i * l + lane];
+        a1 += a[(i + 1) * l + lane] * b[(i + 1) * l + lane];
+        a2 += a[(i + 2) * l + lane] * b[(i + 2) * l + lane];
+        a3 += a[(i + 3) * l + lane] * b[(i + 3) * l + lane];
+        i += 4;
+    }
+    let mut s = (a0 + a1) + (a2 + a3);
+    while i < n {
+        s += a[i * l + lane] * b[i * l + lane];
+        i += 1;
+    }
+    s
+}
+
+/// Scalar-order strided dot: the [`KernelMode::ScalarRef`] reduction.
+#[inline]
+fn dot_seq<E: Real>(a: &[E], b: &[E], n: usize, lane: usize, l: usize) -> E {
+    let mut s = E::ZERO;
+    for i in 0..n {
+        s += a[i * l + lane] * b[i * l + lane];
+    }
+    s
+}
+
+/// Mode-dispatched strided lane dot (attention scores and backward dots
+/// route through this; `matvec_l` rows do too).
+#[inline]
+pub fn dot_l<E: Real>(a: &[E], b: &[E], n: usize, lane: usize, l: usize) -> E {
+    match kernel_mode() {
+        KernelMode::Simd => dot_tree(a, b, n, lane, l),
+        KernelMode::ScalarRef => dot_seq(a, b, n, lane, l),
+    }
+}
+
+/// Strided lane sum in tree order (softmax normalizer); same sequence
+/// contract as [`dot_l`].
+#[inline]
+fn sum_tree<E: Real>(a: &[E], n: usize, lane: usize, l: usize) -> E {
+    let n4 = n & !3;
+    let mut a0 = E::ZERO;
+    let mut a1 = E::ZERO;
+    let mut a2 = E::ZERO;
+    let mut a3 = E::ZERO;
+    let mut i = 0;
+    while i < n4 {
+        a0 += a[i * l + lane];
+        a1 += a[(i + 1) * l + lane];
+        a2 += a[(i + 2) * l + lane];
+        a3 += a[(i + 3) * l + lane];
+        i += 4;
+    }
+    let mut s = (a0 + a1) + (a2 + a3);
+    while i < n {
+        s += a[i * l + lane];
+        i += 1;
+    }
+    s
+}
+
+/// Strided three-way lane dot in tree order (`Σ dy·g·x`, RMS backward).
+#[inline]
+fn dot3_tree<E: Real>(a: &[E], b: &[E], c: &[E], n: usize, lane: usize, l: usize) -> E {
+    let n4 = n & !3;
+    let mut a0 = E::ZERO;
+    let mut a1 = E::ZERO;
+    let mut a2 = E::ZERO;
+    let mut a3 = E::ZERO;
+    let mut i = 0;
+    while i < n4 {
+        a0 += a[i * l + lane] * b[i * l + lane] * c[i * l + lane];
+        a1 += a[(i + 1) * l + lane] * b[(i + 1) * l + lane] * c[(i + 1) * l + lane];
+        a2 += a[(i + 2) * l + lane] * b[(i + 2) * l + lane] * c[(i + 2) * l + lane];
+        a3 += a[(i + 3) * l + lane] * b[(i + 3) * l + lane] * c[(i + 3) * l + lane];
+        i += 4;
+    }
+    let mut s = (a0 + a1) + (a2 + a3);
+    while i < n {
+        s += a[i * l + lane] * b[i * l + lane] * c[i * l + lane];
+        i += 1;
+    }
+    s
+}
+
+/// Lane matvec: `out[r] = W[r,:]·v` per lane. Simd mode reduces each row
+/// with the width-4 tree ([`dot_tree`]); ScalarRef accumulates over
+/// `cols` in scalar order ([`matvec_ref_l`]). Tolerance-bound kernel.
+pub fn matvec_l<E: Real>(
+    w: &[E],
+    rows: usize,
+    cols: usize,
+    v: &[E],
+    out: &mut [E],
+    l: usize,
+) {
+    if kernel_mode() == KernelMode::ScalarRef {
+        return matvec_ref_l(w, rows, cols, v, out, l);
+    }
+    for r in 0..rows {
+        let wrow = &w[r * cols * l..(r + 1) * cols * l];
+        let o = &mut out[r * l..(r + 1) * l];
+        for (b, ob) in o.iter_mut().enumerate() {
+            *ob = dot_tree(wrow, v, cols, b, l);
+        }
+    }
+}
+
+/// Scalar-iteration-order lane matvec: the pre-SIMD body, kept as the
+/// `kernel_equivalence` oracle.
+pub fn matvec_ref_l<E: Real>(
+    w: &[E],
+    rows: usize,
+    cols: usize,
+    v: &[E],
+    out: &mut [E],
+    l: usize,
+) {
     for r in 0..rows {
         let o = &mut out[r * l..(r + 1) * l];
-        o.fill(0.0);
+        o.fill(E::ZERO);
         for c in 0..cols {
             let wv = &w[(r * cols + c) * l..(r * cols + c + 1) * l];
             let vc = &v[c * l..(c + 1) * l];
@@ -1003,12 +1328,22 @@ fn matvec_l(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64], l: 
 }
 
 /// Lane transpose matvec: `out[c] += W[:,c]·v` per lane (accumulation
-/// over `rows` in scalar order).
-fn matvec_t_acc_l(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64], l: usize) {
+/// over `rows` in scalar order). Order-preserving: the inner `c`/`b`
+/// loops are elementwise axpy sweeps the compiler vectorizes without
+/// reassociating, so the one body is bit-exact in both kernel modes.
+pub fn matvec_t_acc_l<E: Real>(
+    w: &[E],
+    rows: usize,
+    cols: usize,
+    v: &[E],
+    out: &mut [E],
+    l: usize,
+) {
     for r in 0..rows {
         let vr = &v[r * l..(r + 1) * l];
+        let wrow = &w[r * cols * l..(r + 1) * cols * l];
         for c in 0..cols {
-            let wv = &w[(r * cols + c) * l..(r * cols + c + 1) * l];
+            let wv = &wrow[c * l..(c + 1) * l];
             let o = &mut out[c * l..(c + 1) * l];
             for b in 0..l {
                 o[b] += wv[b] * vr[b];
@@ -1018,11 +1353,20 @@ fn matvec_t_acc_l(w: &[f64], rows: usize, cols: usize, v: &[f64], out: &mut [f64
 }
 
 /// Lane outer-product accumulation: `dW[r,c] += dv[r] * u[c]` per lane.
-fn outer_acc_l(dw: &mut [f64], rows: usize, cols: usize, dv: &[f64], u: &[f64], l: usize) {
+/// Order-preserving (no reduction): bit-exact in both kernel modes.
+pub fn outer_acc_l<E: Real>(
+    dw: &mut [E],
+    rows: usize,
+    cols: usize,
+    dv: &[E],
+    u: &[E],
+    l: usize,
+) {
     for r in 0..rows {
         let d = &dv[r * l..(r + 1) * l];
+        let drow = &mut dw[r * cols * l..(r + 1) * cols * l];
         for c in 0..cols {
-            let o = &mut dw[(r * cols + c) * l..(r * cols + c + 1) * l];
+            let o = &mut drow[c * l..(c + 1) * l];
             let uc = &u[c * l..(c + 1) * l];
             for b in 0..l {
                 o[b] += d[b] * uc[b];
@@ -1034,26 +1378,79 @@ fn outer_acc_l(dw: &mut [f64], rows: usize, cols: usize, dv: &[f64], u: &[f64], 
 /// Lane softmax cross-entropy at one position (mirrors `softmax_ce`):
 /// per-lane label `ys[b]`, per-lane `-ln p[y]` added into `losses`.
 /// `maxs`/`zs` are caller-provided lane scratch.
+///
+/// The max pass is exact under any association; the normalizer `Z` is
+/// the tolerance-bound part — Simd mode sums the exponentials with the
+/// width-4 tree ([`sum_tree`]), ScalarRef interleaves exp and sum in
+/// scalar index order exactly as the pre-SIMD body did.
 #[allow(clippy::too_many_arguments)]
-fn softmax_ce_l(
-    logits: &[f64],
+pub fn softmax_ce_l<E: Real>(
+    logits: &[E],
     ys: &[usize],
-    scale: f64,
-    dlogits: &mut [f64],
-    maxs: &mut [f64],
-    zs: &mut [f64],
-    losses: &mut [f64],
+    scale: E,
+    dlogits: &mut [E],
+    maxs: &mut [E],
+    zs: &mut [E],
+    losses: &mut [E],
     l: usize,
 ) {
+    if kernel_mode() == KernelMode::ScalarRef {
+        return softmax_ce_ref_l(logits, ys, scale, dlogits, maxs, zs, losses, l);
+    }
     let v = logits.len() / l;
-    maxs.fill(f64::NEG_INFINITY);
+    maxs.fill(E::NEG_INF);
     for i in 0..v {
         let li = &logits[i * l..(i + 1) * l];
         for b in 0..l {
-            maxs[b] = maxs[b].max(li[b]);
+            maxs[b] = maxs[b].maxr(li[b]);
         }
     }
-    zs.fill(0.0);
+    for i in 0..v {
+        let li = &logits[i * l..(i + 1) * l];
+        let di = &mut dlogits[i * l..(i + 1) * l];
+        for b in 0..l {
+            di[b] = (li[b] - maxs[b]).exp();
+        }
+    }
+    for (b, zb) in zs.iter_mut().enumerate() {
+        *zb = sum_tree(dlogits, v, b, l);
+    }
+    for b in 0..l {
+        losses[b] += -(dlogits[ys[b] * l + b] / zs[b]).maxr(E::MIN_POS).ln();
+    }
+    for i in 0..v {
+        let di = &mut dlogits[i * l..(i + 1) * l];
+        for b in 0..l {
+            di[b] = di[b] / zs[b] * scale;
+        }
+    }
+    for b in 0..l {
+        dlogits[ys[b] * l + b] -= scale;
+    }
+}
+
+/// Scalar-order softmax cross-entropy: the pre-SIMD body, kept as the
+/// `kernel_equivalence` oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_ce_ref_l<E: Real>(
+    logits: &[E],
+    ys: &[usize],
+    scale: E,
+    dlogits: &mut [E],
+    maxs: &mut [E],
+    zs: &mut [E],
+    losses: &mut [E],
+    l: usize,
+) {
+    let v = logits.len() / l;
+    maxs.fill(E::NEG_INF);
+    for i in 0..v {
+        let li = &logits[i * l..(i + 1) * l];
+        for b in 0..l {
+            maxs[b] = maxs[b].maxr(li[b]);
+        }
+    }
+    zs.fill(E::ZERO);
     for i in 0..v {
         let li = &logits[i * l..(i + 1) * l];
         let di = &mut dlogits[i * l..(i + 1) * l];
@@ -1063,7 +1460,7 @@ fn softmax_ce_l(
         }
     }
     for b in 0..l {
-        losses[b] += -(dlogits[ys[b] * l + b] / zs[b]).max(f64::MIN_POSITIVE).ln();
+        losses[b] += -(dlogits[ys[b] * l + b] / zs[b]).maxr(E::MIN_POS).ln();
     }
     for i in 0..v {
         let di = &mut dlogits[i * l..(i + 1) * l];
@@ -1077,11 +1474,43 @@ fn softmax_ce_l(
 }
 
 /// Lane RMS-norm forward (mirrors `rms_fwd`); writes per-lane rms into
-/// `rs`.
-fn rms_fwd_l(x: &[f64], g: &[f64], out: &mut [f64], rs: &mut [f64], l: usize) {
+/// `rs`. The sum-of-squares is tolerance-bound: Simd mode reduces it
+/// with the width-4 tree (`dot_tree(x, x, …)`), ScalarRef in scalar
+/// index order. The normalization sweep is elementwise in both.
+pub fn rms_fwd_l<E: Real>(x: &[E], g: &[E], out: &mut [E], rs: &mut [E], l: usize) {
     let dim = x.len() / l;
-    let d = dim as f64;
-    rs.fill(0.0);
+    let d = E::from_f64(dim as f64);
+    let eps = E::from_f64(RMS_EPS);
+    if kernel_mode() == KernelMode::ScalarRef {
+        rs.fill(E::ZERO);
+        for i in 0..dim {
+            let xi = &x[i * l..(i + 1) * l];
+            for b in 0..l {
+                rs[b] += xi[b] * xi[b];
+            }
+        }
+    } else {
+        for (b, rb) in rs.iter_mut().enumerate() {
+            *rb = dot_tree(x, x, dim, b, l);
+        }
+    }
+    for b in 0..l {
+        rs[b] = (rs[b] / d + eps).sqrt();
+    }
+    for i in 0..dim {
+        for b in 0..l {
+            out[i * l + b] = x[i * l + b] / rs[b] * g[i * l + b];
+        }
+    }
+}
+
+/// Scalar-order RMS-norm forward: the pre-SIMD body, kept as the
+/// `kernel_equivalence` oracle.
+pub fn rms_fwd_ref_l<E: Real>(x: &[E], g: &[E], out: &mut [E], rs: &mut [E], l: usize) {
+    let dim = x.len() / l;
+    let d = E::from_f64(dim as f64);
+    let eps = E::from_f64(RMS_EPS);
+    rs.fill(E::ZERO);
     for i in 0..dim {
         let xi = &x[i * l..(i + 1) * l];
         for b in 0..l {
@@ -1089,7 +1518,7 @@ fn rms_fwd_l(x: &[f64], g: &[f64], out: &mut [f64], rs: &mut [f64], l: usize) {
         }
     }
     for b in 0..l {
-        rs[b] = (rs[b] / d + RMS_EPS).sqrt();
+        rs[b] = (rs[b] / d + eps).sqrt();
     }
     for i in 0..dim {
         for b in 0..l {
@@ -1099,20 +1528,61 @@ fn rms_fwd_l(x: &[f64], g: &[f64], out: &mut [f64], rs: &mut [f64], l: usize) {
 }
 
 /// Lane RMS-norm backward (mirrors `rms_bwd`). `dots` is lane scratch.
+/// The `Σ dy·g·x` reduction is tolerance-bound ([`dot3_tree`] in Simd
+/// mode, scalar order in ScalarRef); the `dg` and `dx` sweeps are
+/// elementwise and bit-exact in both modes.
 #[allow(clippy::too_many_arguments)]
-fn rms_bwd_l(
-    x: &[f64],
-    g: &[f64],
-    rs: &[f64],
-    dy: &[f64],
-    dx: &mut [f64],
-    dg: &mut [f64],
-    dots: &mut [f64],
+pub fn rms_bwd_l<E: Real>(
+    x: &[E],
+    g: &[E],
+    rs: &[E],
+    dy: &[E],
+    dx: &mut [E],
+    dg: &mut [E],
+    dots: &mut [E],
+    l: usize,
+) {
+    if kernel_mode() == KernelMode::ScalarRef {
+        return rms_bwd_ref_l(x, g, rs, dy, dx, dg, dots, l);
+    }
+    let dim = x.len() / l;
+    let d = E::from_f64(dim as f64);
+    for i in 0..dim {
+        for b in 0..l {
+            let s = i * l + b;
+            dg[s] += dy[s] * x[s] / rs[b];
+        }
+    }
+    for (b, db) in dots.iter_mut().enumerate() {
+        *db = dot3_tree(dy, g, x, dim, b, l);
+    }
+    for b in 0..l {
+        dots[b] /= d * rs[b] * rs[b] * rs[b];
+    }
+    for i in 0..dim {
+        for b in 0..l {
+            let s = i * l + b;
+            dx[s] += dy[s] * g[s] / rs[b] - x[s] * dots[b];
+        }
+    }
+}
+
+/// Scalar-order RMS-norm backward: the pre-SIMD body, kept as the
+/// `kernel_equivalence` oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn rms_bwd_ref_l<E: Real>(
+    x: &[E],
+    g: &[E],
+    rs: &[E],
+    dy: &[E],
+    dx: &mut [E],
+    dg: &mut [E],
+    dots: &mut [E],
     l: usize,
 ) {
     let dim = x.len() / l;
-    let d = dim as f64;
-    dots.fill(0.0);
+    let d = E::from_f64(dim as f64);
+    dots.fill(E::ZERO);
     for i in 0..dim {
         for b in 0..l {
             let s = i * l + b;
@@ -1131,16 +1601,18 @@ fn rms_bwd_l(
     }
 }
 
-/// Lane-stacked loss + gradients: per-lane losses and lane-major f64
-/// gradients, dispatched on the model family. Every family has exactly
-/// one pass implementation; lanes = 1 is the sequential case.
-fn loss_and_grads_l(
+/// Lane-stacked loss + gradients: per-lane losses (widened to f64 at
+/// the boundary) and lane-major gradients in the compute precision,
+/// dispatched on the model family. Every family has exactly one pass
+/// implementation; lanes = 1 is the sequential case.
+fn loss_and_grads_l<E: Real>(
     dims: &Dims,
-    params_l: &[Vec<f64>],
+    params_l: &[Vec<E>],
     batches: &[BatchIn],
     lanes: usize,
-) -> (Vec<f64>, Vec<Vec<f64>>) {
-    let mut grads: Vec<Vec<f64>> = params_l.iter().map(|p| vec![0.0; p.len()]).collect();
+) -> (Vec<f64>, Vec<Vec<E>>) {
+    let mut grads: Vec<Vec<E>> =
+        params_l.iter().map(|p| vec![E::ZERO; p.len()]).collect();
     let losses = match dims.family {
         Family::Mlp => mlp_pass_l(dims, params_l, batches, &mut grads, lanes),
         Family::Gpt => gpt_pass_l(dims, params_l, batches, &mut grads, lanes),
@@ -1152,11 +1624,11 @@ fn loss_and_grads_l(
 /// Per-token MLP language model: `logits = W_head·(W_down·relu(W_up·E[x]))`.
 /// Params: `[tok_embd (V×D), mlp_up (H×D), mlp_down (D×H), lm_head (V×D)]`.
 /// Every buffer carries a trailing lane axis; token gathers differ per lane.
-fn mlp_pass_l(
+fn mlp_pass_l<E: Real>(
     dims: &Dims,
-    params_l: &[Vec<f64>],
+    params_l: &[Vec<E>],
     batches: &[BatchIn],
-    grads_l: &mut [Vec<f64>],
+    grads_l: &mut [Vec<E>],
     l: usize,
 ) -> Vec<f64> {
     let (v, d, h) = (dims.vocab, dims.d, dims.hidden);
@@ -1166,20 +1638,20 @@ fn mlp_pass_l(
     let wd = &params_l[2];
     let wh = &params_l[3];
     let n_tok = xs[0].len();
-    let scale = 1.0 / n_tok as f64;
+    let scale = E::from_f64(1.0 / n_tok as f64);
 
-    let mut emb = vec![0.0; d * l];
-    let mut u_pre = vec![0.0; h * l];
-    let mut u = vec![0.0; h * l];
-    let mut z = vec![0.0; d * l];
-    let mut logits = vec![0.0; v * l];
-    let mut dlogits = vec![0.0; v * l];
-    let mut dz = vec![0.0; d * l];
-    let mut du = vec![0.0; h * l];
-    let mut de = vec![0.0; d * l];
-    let mut maxs = vec![0.0; l];
-    let mut zs = vec![0.0; l];
-    let mut losses = vec![0.0; l];
+    let mut emb = vec![E::ZERO; d * l];
+    let mut u_pre = vec![E::ZERO; h * l];
+    let mut u = vec![E::ZERO; h * l];
+    let mut z = vec![E::ZERO; d * l];
+    let mut logits = vec![E::ZERO; v * l];
+    let mut dlogits = vec![E::ZERO; v * l];
+    let mut dz = vec![E::ZERO; d * l];
+    let mut du = vec![E::ZERO; h * l];
+    let mut de = vec![E::ZERO; d * l];
+    let mut maxs = vec![E::ZERO; l];
+    let mut zs = vec![E::ZERO; l];
+    let mut losses = vec![E::ZERO; l];
     let mut ytok = vec![0usize; l];
 
     for n in 0..n_tok {
@@ -1192,7 +1664,7 @@ fn mlp_pass_l(
         }
         matvec_l(wu, h, d, &emb, &mut u_pre, l);
         for j in 0..h * l {
-            u[j] = u_pre[j].max(0.0);
+            u[j] = u_pre[j].maxr(E::ZERO);
         }
         matvec_l(wd, d, h, &u, &mut z, l);
         matvec_l(wh, v, d, &z, &mut logits, l);
@@ -1200,18 +1672,18 @@ fn mlp_pass_l(
 
         // backward
         outer_acc_l(&mut grads_l[3], v, d, &dlogits, &z, l);
-        dz.fill(0.0);
+        dz.fill(E::ZERO);
         matvec_t_acc_l(wh, v, d, &dlogits, &mut dz, l);
         outer_acc_l(&mut grads_l[2], d, h, &dz, &u, l);
-        du.fill(0.0);
+        du.fill(E::ZERO);
         matvec_t_acc_l(wd, d, h, &dz, &mut du, l);
         for j in 0..h * l {
-            if u_pre[j] <= 0.0 {
+            if u_pre[j] <= E::ZERO {
                 du[j] = 0.0;
             }
         }
         outer_acc_l(&mut grads_l[1], h, d, &du, &emb, l);
-        de.fill(0.0);
+        de.fill(E::ZERO);
         matvec_t_acc_l(wu, h, d, &du, &mut de, l);
         for b in 0..l {
             let tok = xs[b][n] as usize;
@@ -1220,7 +1692,7 @@ fn mlp_pass_l(
             }
         }
     }
-    losses.iter().map(|&x| x * scale).collect()
+    losses.iter().map(|&x| (x * scale).to_f64()).collect()
 }
 
 /// N-block causal transformer with RMS-norm (scale-only), multi-head
@@ -1230,11 +1702,11 @@ fn mlp_pass_l(
 /// mlp_down}`, then ln_final, lm_head. `gpt_micro` is the 1-block
 /// instantiation, `gpt_deep` the 4-block one; attention rows, norms and
 /// residuals all carry the trailing lane axis.
-fn gpt_pass_l(
+fn gpt_pass_l<E: Real>(
     dims: &Dims,
-    params_l: &[Vec<f64>],
+    params_l: &[Vec<E>],
     batches: &[BatchIn],
-    grads_l: &mut [Vec<f64>],
+    grads_l: &mut [Vec<E>],
     l: usize,
 ) -> Vec<f64> {
     let (v, d, f, heads, t_ctx, rows_b, nb) = (
@@ -1247,7 +1719,7 @@ fn gpt_pass_l(
         dims.blocks,
     );
     let dh = d / heads;
-    let att_scale = 1.0 / (dh as f64).sqrt();
+    let att_scale = E::from_f64(1.0 / (dh as f64).sqrt());
     let (xs, ys) = token_lanes(batches);
     let e = &params_l[0];
     let pos = &params_l[1];
@@ -1256,46 +1728,46 @@ fn gpt_pass_l(
     let blk = |b: usize, o: usize| 2 + 8 * b + o;
     let i_lnf = 2 + 8 * nb;
     let i_head = i_lnf + 1;
-    let scale = 1.0 / (rows_b * t_ctx) as f64;
-    let mut losses = vec![0.0; l];
+    let scale = E::from_f64(1.0 / (rows_b * t_ctx) as f64);
+    let mut losses = vec![E::ZERO; l];
 
     let td = t_ctx * d;
     // residual stream levels: hs[b] enters block b; hs[nb] feeds ln_final
-    let mut hs: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb + 1];
-    let mut dhs: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb + 1];
+    let mut hs: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb + 1];
+    let mut dhs: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb + 1];
     // per-block saved activations (needed by the backward pass)
-    let mut a_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
-    let mut q_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
-    let mut k_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
-    let mut vv_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
-    let mut att_s: Vec<Vec<f64>> = vec![vec![0.0; heads * t_ctx * t_ctx * l]; nb];
-    let mut ctx_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
-    let mut hmid_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
-    let mut min_s: Vec<Vec<f64>> = vec![vec![0.0; td * l]; nb];
-    let mut upre_s: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * f * l]; nb];
-    let mut u_s: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * f * l]; nb];
-    let mut r_attn: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * l]; nb];
-    let mut r_mlp: Vec<Vec<f64>> = vec![vec![0.0; t_ctx * l]; nb];
-    let mut fo = vec![0.0; td * l];
-    let mut r_fin = vec![0.0; t_ctx * l];
+    let mut a_s: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb];
+    let mut q_s: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb];
+    let mut k_s: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb];
+    let mut vv_s: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb];
+    let mut att_s: Vec<Vec<E>> = vec![vec![E::ZERO; heads * t_ctx * t_ctx * l]; nb];
+    let mut ctx_s: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb];
+    let mut hmid_s: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb];
+    let mut min_s: Vec<Vec<E>> = vec![vec![E::ZERO; td * l]; nb];
+    let mut upre_s: Vec<Vec<E>> = vec![vec![E::ZERO; t_ctx * f * l]; nb];
+    let mut u_s: Vec<Vec<E>> = vec![vec![E::ZERO; t_ctx * f * l]; nb];
+    let mut r_attn: Vec<Vec<E>> = vec![vec![E::ZERO; t_ctx * l]; nb];
+    let mut r_mlp: Vec<Vec<E>> = vec![vec![E::ZERO; t_ctx * l]; nb];
+    let mut fo = vec![E::ZERO; td * l];
+    let mut r_fin = vec![E::ZERO; t_ctx * l];
     // transient buffers shared across blocks
-    let mut o = vec![0.0; td * l];
-    let mut logits = vec![0.0; v * l];
-    let mut dlogits = vec![0.0; v * l];
-    let mut dhmid = vec![0.0; td * l];
-    let mut dctx = vec![0.0; td * l];
-    let mut dq = vec![0.0; td * l];
-    let mut dk = vec![0.0; td * l];
-    let mut dv = vec![0.0; td * l];
-    let mut da = vec![0.0; td * l];
-    let mut dfo = vec![0.0; d * l];
-    let mut du = vec![0.0; f * l];
-    let mut dm_in = vec![0.0; d * l];
-    let mut datt = vec![0.0; t_ctx * l];
-    let mut ds_l = vec![0.0; l];
-    let mut maxs = vec![0.0; l];
-    let mut zs = vec![0.0; l];
-    let mut dots = vec![0.0; l];
+    let mut o = vec![E::ZERO; td * l];
+    let mut logits = vec![E::ZERO; v * l];
+    let mut dlogits = vec![E::ZERO; v * l];
+    let mut dhmid = vec![E::ZERO; td * l];
+    let mut dctx = vec![E::ZERO; td * l];
+    let mut dq = vec![E::ZERO; td * l];
+    let mut dk = vec![E::ZERO; td * l];
+    let mut dv = vec![E::ZERO; td * l];
+    let mut da = vec![E::ZERO; td * l];
+    let mut dfo = vec![E::ZERO; d * l];
+    let mut du = vec![E::ZERO; f * l];
+    let mut dm_in = vec![E::ZERO; d * l];
+    let mut datt = vec![E::ZERO; t_ctx * l];
+    let mut ds_l = vec![E::ZERO; l];
+    let mut maxs = vec![E::ZERO; l];
+    let mut zs = vec![E::ZERO; l];
+    let mut dots = vec![E::ZERO; l];
     let mut ytok = vec![0usize; l];
 
     for row in 0..rows_b {
@@ -1337,30 +1809,24 @@ fn gpt_pass_l(
                 let att = &mut att_s[bi];
                 let ctx = &mut ctx_s[bi];
                 let (q, k, vv) = (&q_s[bi], &k_s[bi], &vv_s[bi]);
-                ctx.fill(0.0);
+                ctx.fill(E::ZERO);
                 for hh in 0..heads {
                     let off = hh * dh;
                     for t in 0..t_ctx {
                         let arow0 = (hh * t_ctx + t) * t_ctx * l;
-                        maxs.fill(f64::NEG_INFINITY);
+                        maxs.fill(E::NEG_INF);
                         for tp in 0..=t {
+                            // score = (q_t · k_tp) / sqrt(dh), per lane;
+                            // the dot reassociates under Simd (dot_l)
                             let sbuf = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
-                            sbuf.fill(0.0);
-                            for i in 0..dh {
-                                let qi =
-                                    &q[(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                                let ki =
-                                    &k[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                                for b in 0..l {
-                                    sbuf[b] += qi[b] * ki[b];
-                                }
-                            }
-                            for b in 0..l {
-                                sbuf[b] *= att_scale;
-                                maxs[b] = maxs[b].max(sbuf[b]);
+                            let qrow = &q[(t * d + off) * l..(t * d + off + dh) * l];
+                            let krow = &k[(tp * d + off) * l..(tp * d + off + dh) * l];
+                            for (b, sb) in sbuf.iter_mut().enumerate() {
+                                *sb = dot_l(qrow, krow, dh, b, l) * att_scale;
+                                maxs[b] = maxs[b].maxr(*sb);
                             }
                         }
-                        zs.fill(0.0);
+                        zs.fill(E::ZERO);
                         for tp in 0..=t {
                             let ab = &mut att[arow0 + tp * l..arow0 + (tp + 1) * l];
                             for b in 0..l {
@@ -1407,7 +1873,7 @@ fn gpt_pass_l(
                 let fr = t * f * l..(t + 1) * f * l;
                 matvec_l(wu, f, d, &min_s[bi][tr.clone()], &mut upre_s[bi][fr.clone()], l);
                 for j in fr.clone() {
-                    u_s[bi][j] = upre_s[bi][j].max(0.0);
+                    u_s[bi][j] = upre_s[bi][j].maxr(E::ZERO);
                 }
                 // hs[bi+1] = hmid + W_down u
                 matvec_l(wd_, d, f, &u_s[bi][fr], &mut hs[bi + 1][tr.clone()], l);
@@ -1432,7 +1898,7 @@ fn gpt_pass_l(
 
         // ---- backward ----
         for buf in dhs.iter_mut() {
-            buf.fill(0.0);
+            buf.fill(E::ZERO);
         }
         {
             let g3 = &params_l[i_lnf];
@@ -1448,7 +1914,7 @@ fn gpt_pass_l(
                     &mut losses, l,
                 );
                 outer_acc_l(&mut grads_l[i_head], v, d, &dlogits, &fo[tr.clone()], l);
-                dfo.fill(0.0);
+                dfo.fill(E::ZERO);
                 matvec_t_acc_l(wh, v, d, &dlogits, &mut dfo, l);
                 rms_bwd_l(
                     &hs[nb][tr.clone()],
@@ -1474,7 +1940,7 @@ fn gpt_pass_l(
                 &params_l[blk(bi, 7)],
             );
             for buf in [&mut dhmid, &mut dctx, &mut dq, &mut dk, &mut dv, &mut da] {
-                buf.fill(0.0);
+                buf.fill(E::ZERO);
             }
             for t in 0..t_ctx {
                 // hs[bi+1] = hmid + W_down relu(W_up m_in)
@@ -1491,15 +1957,15 @@ fn gpt_pass_l(
                     &u_s[bi][fr.clone()],
                     l,
                 );
-                du.fill(0.0);
+                du.fill(E::ZERO);
                 matvec_t_acc_l(wd_, d, f, &dhs[bi + 1][tr.clone()], &mut du, l);
                 for (j, x) in upre_s[bi][fr].iter().enumerate() {
-                    if *x <= 0.0 {
+                    if *x <= E::ZERO {
                         du[j] = 0.0;
                     }
                 }
                 outer_acc_l(&mut grads_l[blk(bi, 6)], f, d, &du, &min_s[bi][tr.clone()], l);
-                dm_in.fill(0.0);
+                dm_in.fill(E::ZERO);
                 matvec_t_acc_l(wu, f, d, &du, &mut dm_in, l);
                 rms_bwd_l(
                     &hmid_s[bi][tr.clone()],
@@ -1536,16 +2002,15 @@ fn gpt_pass_l(
                     for t in 0..t_ctx {
                         let arow0 = (hh * t_ctx + t) * t_ctx * l;
                         for tp in 0..=t {
+                            // dα = dctx_t · v_tp per lane (reassociates
+                            // under Simd via dot_l)
                             let dat = &mut datt[tp * l..(tp + 1) * l];
-                            dat.fill(0.0);
-                            for i in 0..dh {
-                                let dci = &dctx
-                                    [(t * d + off + i) * l..(t * d + off + i + 1) * l];
-                                let vvi =
-                                    &vv[(tp * d + off + i) * l..(tp * d + off + i + 1) * l];
-                                for b in 0..l {
-                                    dat[b] += dci[b] * vvi[b];
-                                }
+                            let drow =
+                                &dctx[(t * d + off) * l..(t * d + off + dh) * l];
+                            let vrow =
+                                &vv[(tp * d + off) * l..(tp * d + off + dh) * l];
+                            for (b, db) in dat.iter_mut().enumerate() {
+                                *db = dot_l(drow, vrow, dh, b, l);
                             }
                             let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
                             for i in 0..dh {
@@ -1558,7 +2023,7 @@ fn gpt_pass_l(
                                 }
                             }
                         }
-                        dots.fill(0.0);
+                        dots.fill(E::ZERO);
                         for tp in 0..=t {
                             let ab = &att[arow0 + tp * l..arow0 + (tp + 1) * l];
                             let dat = &datt[tp * l..(tp + 1) * l];
@@ -1645,7 +2110,7 @@ fn gpt_pass_l(
             }
         }
     }
-    losses.iter().map(|&x| x * scale).collect()
+    losses.iter().map(|&x| (x * scale).to_f64()).collect()
 }
 
 /// Small convolutional image classifier: two `valid` 3×3 convolutions
@@ -1654,11 +2119,11 @@ fn gpt_pass_l(
 /// conv2 `(C2, C1, 3, 3)`, head `(classes, o2·o2·C2)` — all OIHW /
 /// fan_out_axis 0, so `fan_in` compression averages one second moment per
 /// output filter. Input is NHWC f32, one class label per sample.
-fn conv_pass_l(
+fn conv_pass_l<E: Real>(
     dims: &Dims,
-    params_l: &[Vec<f64>],
+    params_l: &[Vec<E>],
     batches: &[BatchIn],
-    grads_l: &mut [Vec<f64>],
+    grads_l: &mut [Vec<E>],
     l: usize,
 ) -> Vec<f64> {
     let (classes, c1, c2, img, ch, bsz) = (
@@ -1672,28 +2137,28 @@ fn conv_pass_l(
     let kk = CONV_K;
     let (o1, pw, o2) = conv_geom(dims);
     let feats = o2 * o2 * c2;
-    let inv_pool = 1.0 / (POOL * POOL) as f64;
+    let inv_pool = E::from_f64(1.0 / (POOL * POOL) as f64);
     let (xs, ys) = image_lanes(batches);
     let w1 = &params_l[0];
     let w2 = &params_l[1];
     let wh = &params_l[2];
-    let scale = 1.0 / bsz as f64;
-    let mut losses = vec![0.0; l];
+    let scale = E::from_f64(1.0 / bsz as f64);
+    let mut losses = vec![E::ZERO; l];
 
     let px = img * img * ch;
-    let mut x_l = vec![0.0; px * l]; // one sample per lane, gathered
-    let mut a1 = vec![0.0; o1 * o1 * c1 * l]; // conv1 pre-activation
-    let mut pool = vec![0.0; pw * pw * c1 * l]; // avg-pooled relu(a1)
-    let mut z = vec![0.0; feats * l]; // conv2 pre-activation
-    let mut fvec = vec![0.0; feats * l]; // relu(z)
-    let mut logits = vec![0.0; classes * l];
-    let mut dlogits = vec![0.0; classes * l];
-    let mut df = vec![0.0; feats * l];
-    let mut dz = vec![0.0; feats * l];
-    let mut dpool = vec![0.0; pw * pw * c1 * l];
-    let mut da1 = vec![0.0; o1 * o1 * c1 * l];
-    let mut maxs = vec![0.0; l];
-    let mut zs = vec![0.0; l];
+    let mut x_l = vec![E::ZERO; px * l]; // one sample per lane, gathered
+    let mut a1 = vec![E::ZERO; o1 * o1 * c1 * l]; // conv1 pre-activation
+    let mut pool = vec![E::ZERO; pw * pw * c1 * l]; // avg-pooled relu(a1)
+    let mut z = vec![E::ZERO; feats * l]; // conv2 pre-activation
+    let mut fvec = vec![E::ZERO; feats * l]; // relu(z)
+    let mut logits = vec![E::ZERO; classes * l];
+    let mut dlogits = vec![E::ZERO; classes * l];
+    let mut df = vec![E::ZERO; feats * l];
+    let mut dz = vec![E::ZERO; feats * l];
+    let mut dpool = vec![E::ZERO; pw * pw * c1 * l];
+    let mut da1 = vec![E::ZERO; o1 * o1 * c1 * l];
+    let mut maxs = vec![E::ZERO; l];
+    let mut zs = vec![E::ZERO; l];
     let mut ytok = vec![0usize; l];
 
     for s in 0..bsz {
@@ -1701,7 +2166,7 @@ fn conv_pass_l(
         for b in 0..l {
             let src = &xs[b][s * px..(s + 1) * px];
             for (j, &val) in src.iter().enumerate() {
-                x_l[j * l + b] = val as f64;
+                x_l[j * l + b] = E::from_f32(val);
             }
             ytok[b] = ys[b][s] as usize;
         }
@@ -1712,7 +2177,7 @@ fn conv_pass_l(
                 for co in 0..c1 {
                     let oi = ((oy * o1 + ox) * c1 + co) * l;
                     let out = &mut a1[oi..oi + l];
-                    out.fill(0.0);
+                    out.fill(E::ZERO);
                     for ci in 0..ch {
                         for ky in 0..kk {
                             for kx in 0..kk {
@@ -1736,14 +2201,14 @@ fn conv_pass_l(
                     let oi = ((py * pw + pxi) * c1 + co) * l;
                     {
                         let out = &mut pool[oi..oi + l];
-                        out.fill(0.0);
+                        out.fill(E::ZERO);
                     }
                     for dy in 0..POOL {
                         for dx in 0..POOL {
                             let si =
                                 (((py * POOL + dy) * o1 + (pxi * POOL + dx)) * c1 + co) * l;
                             for b in 0..l {
-                                pool[oi + b] += a1[si + b].max(0.0);
+                                pool[oi + b] += a1[si + b].maxr(E::ZERO);
                             }
                         }
                     }
@@ -1761,7 +2226,7 @@ fn conv_pass_l(
                     let oi = ((qy * o2 + qx) * c2 + co) * l;
                     {
                         let out = &mut z[oi..oi + l];
-                        out.fill(0.0);
+                        out.fill(E::ZERO);
                     }
                     for ci in 0..c1 {
                         for ky in 0..kk {
@@ -1778,7 +2243,7 @@ fn conv_pass_l(
             }
         }
         for j in 0..feats * l {
-            fvec[j] = z[j].max(0.0);
+            fvec[j] = z[j].maxr(E::ZERO);
         }
         matvec_l(wh, classes, feats, &fvec, &mut logits, l);
         softmax_ce_l(
@@ -1787,12 +2252,12 @@ fn conv_pass_l(
 
         // ---- backward ----
         outer_acc_l(&mut grads_l[2], classes, feats, &dlogits, &fvec, l);
-        df.fill(0.0);
+        df.fill(E::ZERO);
         matvec_t_acc_l(wh, classes, feats, &dlogits, &mut df, l);
         for j in 0..feats * l {
-            dz[j] = if z[j] > 0.0 { df[j] } else { 0.0 };
+            dz[j] = if z[j] > E::ZERO { df[j] } else { 0.0 };
         }
-        dpool.fill(0.0);
+        dpool.fill(E::ZERO);
         for qy in 0..o2 {
             for qx in 0..o2 {
                 for co in 0..c2 {
@@ -1827,10 +2292,10 @@ fn conv_pass_l(
                             let si =
                                 (((py * POOL + dy) * o1 + (pxi * POOL + dx)) * c1 + co) * l;
                             for b in 0..l {
-                                da1[si + b] = if a1[si + b] > 0.0 {
+                                da1[si + b] = if a1[si + b] > E::ZERO {
                                     dpool[pi + b] * inv_pool
                                 } else {
-                                    0.0
+                                    E::ZERO
                                 };
                             }
                         }
@@ -1859,13 +2324,104 @@ fn conv_pass_l(
             }
         }
     }
-    losses.iter().map(|&x| x * scale).collect()
+    losses.iter().map(|&x| (x * scale).to_f64()).collect()
+}
+
+/// Per-chunk element count for the parallel global-norm squared sum.
+/// Chunk boundaries are a function of each tensor's element count only
+/// (never of the lane or worker count), so the reduction tree — per-chunk
+/// width-4 tree sums folded in `(tensor, chunk)` order — is deterministic
+/// for any `(lanes, workers)` pair.
+const CLIP_CHUNK: usize = 8192;
+
+/// Per-lane squared sum of one `[j0, j1)` element range of a lane-major
+/// f32 gradient, accumulated in f64 with the width-4 tree.
+fn clip_sq_chunk(g: &[f32], j0: usize, j1: usize, l: usize) -> Vec<f64> {
+    let n = j1 - j0;
+    let n4 = n & !3;
+    let mut out = vec![0.0f64; l];
+    for (b, ob) in out.iter_mut().enumerate() {
+        let at = |i: usize| -> f64 { g[(j0 + i) * l + b] as f64 };
+        let mut a0 = 0.0f64;
+        let mut a1 = 0.0f64;
+        let mut a2 = 0.0f64;
+        let mut a3 = 0.0f64;
+        let mut i = 0;
+        while i < n4 {
+            a0 += at(i) * at(i);
+            a1 += at(i + 1) * at(i + 1);
+            a2 += at(i + 2) * at(i + 2);
+            a3 += at(i + 3) * at(i + 3);
+            i += 4;
+        }
+        let mut s = (a0 + a1) + (a2 + a3);
+        while i < n {
+            s += at(i) * at(i);
+            i += 1;
+        }
+        *ob = s;
+    }
+    out
 }
 
 /// Per-lane global-norm clip over lane-major f32 gradients (mirrors
-/// `optim::clip_global_norm`: squares accumulate in f64 over tensors and
-/// elements in scalar order). Returns each lane's pre-clip norm.
-fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Vec<f64> {
+/// `optim::clip_global_norm`: squares accumulate in f64). Returns each
+/// lane's pre-clip norm.
+///
+/// Simd mode splits every tensor into [`CLIP_CHUNK`]-element ranges,
+/// computes per-chunk width-4 tree sums — optionally on
+/// `pool::intraop_workers()` threads — and folds them in `(tensor,
+/// chunk)` index order, so the result is bitwise invariant in the worker
+/// count and the reduction is tolerance-bound vs. the scalar-order
+/// reference ([`clip_global_norm_ref_l`]). The rescale sweep is
+/// elementwise and bit-exact in both modes.
+pub fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Vec<f64> {
+    if kernel_mode() == KernelMode::ScalarRef {
+        return clip_global_norm_ref_l(grads, max_norm, l);
+    }
+    // chunk table: (tensor index, j range) — layout from shapes only
+    let mut chunks: Vec<(usize, usize, usize)> = Vec::new();
+    for (gi, g) in grads.iter().enumerate() {
+        let numel = g.len() / l;
+        let mut j = 0;
+        while j < numel {
+            chunks.push((gi, j, (j + CLIP_CHUNK).min(numel)));
+            j += CLIP_CHUNK;
+        }
+    }
+    let workers = crate::pool::intraop_workers();
+    let partials = crate::pool::parallel_indexed(chunks.len(), workers, |i| {
+        let (gi, j0, j1) = chunks[i];
+        clip_sq_chunk(&grads[gi], j0, j1, l)
+    });
+    let mut sq = vec![0.0f64; l];
+    for part in &partials {
+        for b in 0..l {
+            sq[b] += part[b];
+        }
+    }
+    let norms: Vec<f64> = sq.iter().map(|s| s.sqrt()).collect();
+    for (b, &norm) in norms.iter().enumerate() {
+        if norm > max_norm && norm > 0.0 {
+            let scale = (max_norm / norm) as f32;
+            for g in grads.iter_mut() {
+                for x in g[b..].iter_mut().step_by(l) {
+                    *x *= scale;
+                }
+            }
+        }
+    }
+    norms
+}
+
+/// Scalar-order global-norm clip: the pre-SIMD body (squares accumulate
+/// over tensors and elements in scalar order, single-threaded), kept as
+/// the `kernel_equivalence` oracle.
+pub fn clip_global_norm_ref_l(
+    grads: &mut [Vec<f32>],
+    max_norm: f64,
+    l: usize,
+) -> Vec<f64> {
     let mut sq = vec![0.0f64; l];
     for g in grads.iter() {
         let numel = g.len() / l;
@@ -1890,37 +2446,31 @@ fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Vec<f6
     norms
 }
 
-/// Per-lane fused reduced-V AdamW update over lane-major f32 state
-/// (mirrors `fused_update`; each lane carries its own step index and
-/// learning rate, so bias corrections are per lane).
+/// One tensor's fused reduced-V AdamW update: the body of the pre-PR
+/// per-tensor loop, scalar `j` order throughout (the reduced-V group
+/// sums accumulate in element order). Bit-exact in both kernel modes —
+/// parallelism only distributes whole tensors across workers.
 #[allow(clippy::too_many_arguments)]
-fn fused_update_l(
-    man: &Manifest,
-    k_modes: &[KMode],
+fn update_tensor(
+    info: &crate::runtime::manifest::ParamInfo,
+    k: KMode,
     h: &Hypers,
-    w: &mut [Vec<f32>],
-    m: &mut [Vec<f32>],
-    v: &mut [Vec<f32>],
-    g: &[Vec<f32>],
-    ts: &[usize],
+    bc1: &[f32],
+    bc2: &[f32],
     lrs: &[f32],
+    wi: &mut [f32],
+    mi: &mut [f32],
+    vi: &mut [f32],
+    gi: &[f32],
     l: usize,
 ) {
     let b1 = h.beta1 as f32;
     let b2 = h.beta2 as f32;
     let eps = h.eps as f32;
-    let bc1: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b1.powi(t as i32))).collect();
-    let bc2: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b2.powi(t as i32))).collect();
-    for i in 0..w.len() {
-        let info = &man.params[i];
-        let k = crate::optim::adamk::effective_k(info, k_modes[i]);
-        let (rows, cols) = info.matrix_dims();
-        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
-        let numel = info.numel();
-        let wi = &mut w[i];
-        let gi = &g[i];
-        let mi = &mut m[i];
-        let vi = &mut v[i];
+    let (rows, cols) = info.matrix_dims();
+    let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+    let numel = info.numel();
+    {
         if k == KMode::None {
             for j in 0..numel {
                 for b in 0..l {
@@ -1933,7 +2483,7 @@ fn fused_update_l(
                     wi[s] -= lrs[b] * (mh / (vh.sqrt() + eps) + wd * wi[s]);
                 }
             }
-            continue;
+            return;
         }
         let group = |j: usize| -> usize {
             match k {
@@ -1978,6 +2528,71 @@ fn fused_update_l(
             }
         }
     }
+}
+
+/// Per-lane fused reduced-V AdamW update over lane-major f32 state
+/// (mirrors `fused_update`; each lane carries its own step index and
+/// learning rate, so bias corrections are per lane).
+///
+/// Tensors are independent, so Simd mode distributes them across
+/// `pool::intraop_workers()` via `pool::parallel_chunks`; each tensor's
+/// update runs the identical scalar-order body ([`update_tensor`])
+/// whichever worker executes it, so results are bitwise invariant in the
+/// worker count. ScalarRef mode forces a single worker.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_update_l(
+    man: &Manifest,
+    k_modes: &[KMode],
+    h: &Hypers,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    ts: &[usize],
+    lrs: &[f32],
+    l: usize,
+) {
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    let bc1: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b1.powi(t as i32))).collect();
+    let bc2: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b2.powi(t as i32))).collect();
+    let workers = match kernel_mode() {
+        KernelMode::Simd => crate::pool::intraop_workers(),
+        KernelMode::ScalarRef => 1,
+    };
+    let mut items: Vec<(usize, &mut [f32], &mut [f32], &mut [f32], &[f32])> = w
+        .iter_mut()
+        .zip(m.iter_mut())
+        .zip(v.iter_mut())
+        .zip(g.iter())
+        .enumerate()
+        .map(|(i, (((wi, mi), vi), gi))| {
+            (
+                i,
+                wi.as_mut_slice(),
+                mi.as_mut_slice(),
+                vi.as_mut_slice(),
+                gi.as_slice(),
+            )
+        })
+        .collect();
+    crate::pool::parallel_chunks(&mut items, workers, |_, item| {
+        let info = &man.params[item.0];
+        let k = crate::optim::adamk::effective_k(info, k_modes[item.0]);
+        update_tensor(
+            info,
+            k,
+            h,
+            &bc1,
+            &bc2,
+            lrs,
+            &mut *item.1,
+            &mut *item.2,
+            &mut *item.3,
+            item.4,
+            l,
+        );
+    });
 }
 
 #[cfg(test)]
@@ -2368,5 +2983,80 @@ mod tests {
         let art = Artifact::load(dir, "linear2_v64.grad").unwrap();
         let err = NativeBackend::default().compile(&art).unwrap_err();
         assert!(format!("{err}").contains("builtin"), "{err}");
+    }
+
+    /// KernelMode is thread-local: flipping it on one thread must not
+    /// leak into concurrently running tests (libtest runs this binary's
+    /// tests in parallel).
+    #[test]
+    fn kernel_mode_is_thread_local() {
+        assert_eq!(kernel_mode(), KernelMode::Simd);
+        set_kernel_mode(KernelMode::ScalarRef);
+        assert_eq!(kernel_mode(), KernelMode::ScalarRef);
+        let other = std::thread::spawn(kernel_mode).join().unwrap();
+        assert_eq!(other, KernelMode::Simd, "mode leaked across threads");
+        set_kernel_mode(KernelMode::Simd);
+    }
+
+    /// SIMD tree reductions vs. the scalar-order reference: identical
+    /// losses/gradients to reassociation tolerance for every family
+    /// (the per-kernel property harness lives in
+    /// `rust/tests/kernel_equivalence.rs`; this is the end-to-end smoke).
+    #[test]
+    fn simd_kernels_match_scalar_reference() {
+        for model in MODELS {
+            let dims = dims_for(model).unwrap();
+            let man = grad_manifest(model).unwrap();
+            let params = init_params(&man, 21);
+            let batch = sample_batch(&dims, 22);
+            set_kernel_mode(KernelMode::ScalarRef);
+            let (l_ref, g_ref) = loss_and_grads(&dims, &params, &batch);
+            set_kernel_mode(KernelMode::Simd);
+            let (l_simd, g_simd) = loss_and_grads(&dims, &params, &batch);
+            assert!(
+                (l_ref - l_simd).abs() <= 1e-9 * l_ref.abs().max(1.0),
+                "{model}: loss {l_ref} vs {l_simd}"
+            );
+            for ((a, b), p) in g_ref.iter().zip(&g_simd).zip(&man.params) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert!(
+                        (x - y).abs() <= 1e-5 + 1e-4 * x.abs(),
+                        "{model} {}: {x} vs {y}",
+                        p.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// `--precision f32` lands near the f64 verify reference and is
+    /// itself bitwise deterministic.
+    #[test]
+    fn f32_precision_matches_f64_within_tolerance() {
+        for model in MODELS {
+            let art = artifact(&format!("{model}.grad")).unwrap();
+            let dims = dims_for(model).unwrap();
+            let params = init_params(&art.manifest, 31);
+            let mut inputs: Vec<Literal> = params
+                .iter()
+                .map(|t| tensor_to_literal(t).unwrap())
+                .collect();
+            inputs.extend(batch_literals(&dims, &sample_batch(&dims, 32)));
+            let exe64 = NativeBackend::default().compile(&art).unwrap();
+            let exe32 = NativeBackend::with_precision(DeviceTag::Cpu(0), Precision::F32)
+                .compile(&art)
+                .unwrap();
+            let o64 = exe64.run(&inputs).unwrap();
+            let o32 = exe32.run(&inputs).unwrap();
+            let l64 = crate::runtime::literal::scalar_value(&o64[0]).unwrap();
+            let l32 = crate::runtime::literal::scalar_value(&o32[0]).unwrap();
+            assert!(
+                (l64 - l32).abs() <= 2e-3 + 2e-3 * l64.abs(),
+                "{model}: f64 loss {l64} vs f32 loss {l32}"
+            );
+            let o32b = exe32.run(&inputs).unwrap();
+            let again = crate::runtime::literal::scalar_value(&o32b[0]).unwrap();
+            assert_eq!(l32.to_bits(), again.to_bits(), "{model}: f32 not deterministic");
+        }
     }
 }

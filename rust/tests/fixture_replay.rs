@@ -1,9 +1,16 @@
 //! Cross-layer numeric fixtures: `python/compile/aot.py` trains reference
 //! models with plain-jnp AdamW and dumps initial params, batches and the
 //! per-step loss sequence; this test replays the identical schedule through
-//! the PJRT grad_step artifact + the Rust AdamK optimizer and requires the
-//! losses to match — pinning the whole HLO→runtime→optimizer chain to the
-//! Python ground truth.
+//! a backend's grad_step + the Rust AdamK optimizer and requires the
+//! losses to match — pinning the whole artifact→runtime→optimizer chain to
+//! the Python ground truth.
+//!
+//! Two chains are pinned: the PJRT path (HLO artifacts from
+//! `make artifacts`) and — since ISSUE 6 — the native interpreter's f64
+//! path, via the `native_mlp` JAX model that mirrors the builtin
+//! `mlp_tiny` family exactly. The native replay is the interpreter's
+//! only check against an *external* ground truth (everything else is
+//! finite differences or self-consistency).
 
 use slimadam::npy::read_npz;
 use slimadam::optim::{clip_global_norm, Hypers, KMode, Optimizer};
@@ -17,8 +24,15 @@ fn fixture_available(model: &str) -> bool {
 }
 
 fn replay(model: &str, rtol: f32) {
+    replay_on(&BackendSpec::pjrt(), model, model, rtol);
+}
+
+/// Replay fixture `fixture` through backend `spec`'s artifact for
+/// `model`. The two names differ only for the native interpreter, whose
+/// builtin models are named independently of the python fixture models.
+fn replay_on(spec: &BackendSpec, model: &str, fixture: &str, rtol: f32) {
     let fix_text =
-        std::fs::read_to_string(format!("artifacts/fixtures/{model}.fixture.json")).unwrap();
+        std::fs::read_to_string(format!("artifacts/fixtures/{fixture}.fixture.json")).unwrap();
     let fix = slimadam::json::Value::parse(&fix_text).unwrap();
     let steps = fix.get("steps").unwrap().as_usize().unwrap();
     let lr = fix.get("lr").unwrap().as_f64().unwrap() as f32;
@@ -39,15 +53,15 @@ fn replay(model: &str, rtol: f32) {
         .map(|v| v.as_f64().unwrap())
         .collect();
 
-    let Ok(backend) = backend_for(&BackendSpec::pjrt()) else {
-        eprintln!("skipping: pjrt backend not compiled in");
+    let Ok(backend) = backend_for(spec) else {
+        eprintln!("skipping: backend {spec} not compiled in");
         return;
     };
     let engine = GradEngine::new("artifacts", model, backend.as_ref()).unwrap();
     let man = engine.manifest().clone();
 
     // initial params from the fixture npz (exact same floats as python)
-    let params_npz = read_npz(format!("artifacts/fixtures/{model}.params.npz")).unwrap();
+    let params_npz = read_npz(format!("artifacts/fixtures/{fixture}.params.npz")).unwrap();
     let pmap: std::collections::HashMap<_, _> = params_npz.into_iter().collect();
     let mut params: Vec<Tensor> = man
         .params
@@ -59,7 +73,7 @@ fn replay(model: &str, rtol: f32) {
         })
         .collect();
 
-    let batches_npz = read_npz(format!("artifacts/fixtures/{model}.batches.npz")).unwrap();
+    let batches_npz = read_npz(format!("artifacts/fixtures/{fixture}.batches.npz")).unwrap();
     let bmap: std::collections::HashMap<_, _> = batches_npz.into_iter().collect();
 
     let mut opt = AdamK::new(
@@ -120,4 +134,19 @@ fn gpt_nano_replay_matches_python() {
         return;
     }
     replay("gpt_nano", 5e-4);
+}
+
+/// The native interpreter (f64 compute path) against the JAX ground
+/// truth: `python/compile/models/native_mlp.py` mirrors the builtin
+/// `mlp_tiny` family — same param names/shapes/init floats, same
+/// per-token mean CE — so per-step losses must agree to f32 round-off.
+/// This closes the fixture-parity carry-over: the interpreter is pinned
+/// to an external reference, not just to finite differences.
+#[test]
+fn native_mlp_replay_matches_python() {
+    if !fixture_available("native_mlp") {
+        eprintln!("skipping: fixtures not built (run `make fixtures`)");
+        return;
+    }
+    replay_on(&BackendSpec::native(), "mlp_tiny", "native_mlp", 5e-4);
 }

@@ -1,0 +1,572 @@
+//! Kernel-equivalence harness (ISSUE 6, DESIGN.md §14): every SIMD-lane
+//! kernel in the native interpreter is driven against its scalar-order
+//! reference over random shapes, lane counts and worker counts.
+//!
+//! The contract under test, per §14:
+//!
+//! * **Order-preserving kernels** (`matvec_t_acc_l`, `outer_acc_l`, the
+//!   fused AdamW update) are bit-identical in both kernel modes and for
+//!   every worker count — they never reassociate a reduction.
+//! * **Reassociating kernels** (`matvec_l`, `softmax_ce_l`, `rms_fwd_l`,
+//!   `rms_bwd_l`, `clip_global_norm_l`) reduce with a width-4 tree in
+//!   Simd mode and must match the scalar-order reference within the
+//!   documented bound `|Δ| ≤ n·ε·Σ|terms|` (n summands, machine ε, sum
+//!   of absolute partial terms) — the standard worst-case bound for
+//!   reassociated floating-point summation.
+//! * **Lane invariance**: a lane-stacked evaluation at `l` lanes is
+//!   bit-identical, lane by lane, to `l` independent evaluations at
+//!   `l = 1` — the per-lane FP sequence depends only on the logical
+//!   shape (this is what makes `run_batch ≡ run` hold).
+//! * **Worker invariance**: intra-op parallel kernels produce bitwise
+//!   identical results at 1, 2 and 8 workers.
+//!
+//! The end-to-end layer runs every native model × ruleset through the
+//! fused train step at batch 1/2/4/8 (bit-identity) and compares Simd
+//! vs ScalarRef whole-step outputs within the f32 state tolerance.
+
+use slimadam::proptest::{check, prop_assert};
+use slimadam::rng::Rng;
+use slimadam::runtime::backend::native::{self, KernelMode};
+use slimadam::runtime::backend::{backend_for, Backend, BackendSpec, Executable};
+use slimadam::runtime::literal::{
+    f32_literal, i32_literal, literal_to_tensor, scalar_f32, scalar_value,
+    tensor_to_literal,
+};
+use slimadam::runtime::Manifest;
+use slimadam::tensor::Tensor;
+
+/// Restores the thread's kernel mode (and the global intra-op worker
+/// count) when a test body exits, pass or fail.
+struct ModeGuard;
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        native::set_kernel_mode(KernelMode::Simd);
+        slimadam::pool::set_intraop_workers(1);
+    }
+}
+
+/// Documented reassociation bound: `n·ε·Σ|terms|` plus a denormal floor.
+fn tree_bound(n: usize, abs_sum: f64) -> f64 {
+    n as f64 * f64::EPSILON * abs_sum + 1e-300
+}
+
+// ---------------------------------------------------------------------------
+// Reassociating kernels vs. their scalar-order oracles
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matvec_simd_matches_scalar_reference_within_bound() {
+    let _g = ModeGuard;
+    check(60, |g| {
+        let rows = g.usize(1, 24);
+        let cols = g.usize(1, 96);
+        let l = *g.choice(&[1usize, 2, 3, 4, 8]);
+        let w = g.vec_normal_f64(rows * cols * l, 1.0);
+        let v = g.vec_normal_f64(cols * l, 1.0);
+        let mut simd = vec![0.0f64; rows * l];
+        let mut scal = vec![0.0f64; rows * l];
+        native::set_kernel_mode(KernelMode::Simd);
+        native::matvec_l(&w, rows, cols, &v, &mut simd, l);
+        native::matvec_ref_l(&w, rows, cols, &v, &mut scal, l);
+        for r in 0..rows {
+            for b in 0..l {
+                let abs_sum: f64 = (0..cols)
+                    .map(|c| (w[(r * cols + c) * l + b] * v[c * l + b]).abs())
+                    .sum();
+                let d = (simd[r * l + b] - scal[r * l + b]).abs();
+                prop_assert(
+                    d <= tree_bound(cols, abs_sum),
+                    format!(
+                        "matvec ({rows}x{cols}, l={l}) row {r} lane {b}: \
+                         |Δ|={d:e} exceeds bound"
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn matvec_lanes_are_bit_identical_to_lane1_runs() {
+    let _g = ModeGuard;
+    check(40, |g| {
+        let rows = g.usize(1, 16);
+        let cols = g.usize(1, 64);
+        let l = *g.choice(&[2usize, 3, 4, 8]);
+        // l independent jobs, then the same jobs lane-stacked
+        let jobs_w: Vec<Vec<f64>> =
+            (0..l).map(|_| g.vec_normal_f64(rows * cols, 1.0)).collect();
+        let jobs_v: Vec<Vec<f64>> =
+            (0..l).map(|_| g.vec_normal_f64(cols, 1.0)).collect();
+        let mut w_l = vec![0.0f64; rows * cols * l];
+        let mut v_l = vec![0.0f64; cols * l];
+        for b in 0..l {
+            for j in 0..rows * cols {
+                w_l[j * l + b] = jobs_w[b][j];
+            }
+            for j in 0..cols {
+                v_l[j * l + b] = jobs_v[b][j];
+            }
+        }
+        native::set_kernel_mode(KernelMode::Simd);
+        let mut out_l = vec![0.0f64; rows * l];
+        native::matvec_l(&w_l, rows, cols, &v_l, &mut out_l, l);
+        for b in 0..l {
+            let mut out1 = vec![0.0f64; rows];
+            native::matvec_l(&jobs_w[b], rows, cols, &jobs_v[b], &mut out1, 1);
+            for r in 0..rows {
+                prop_assert(
+                    out_l[r * l + b].to_bits() == out1[r].to_bits(),
+                    format!("lane {b} row {r}: l={l} stack not bit-identical to l=1"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn softmax_ce_simd_matches_scalar_reference() {
+    let _g = ModeGuard;
+    check(60, |g| {
+        let v = g.usize(2, 192);
+        let l = *g.choice(&[1usize, 2, 4]);
+        let logits = g.vec_normal_f64(v * l, 3.0);
+        let ys: Vec<usize> = (0..l).map(|_| g.usize(0, v - 1)).collect();
+        let scale = 0.125f64;
+        let run = |mode: KernelMode| {
+            native::set_kernel_mode(mode);
+            let mut d = vec![0.0f64; v * l];
+            let mut maxs = vec![0.0f64; l];
+            let mut zs = vec![0.0f64; l];
+            let mut losses = vec![0.0f64; l];
+            match mode {
+                KernelMode::Simd => native::softmax_ce_l(
+                    &logits, &ys, scale, &mut d, &mut maxs, &mut zs, &mut losses, l,
+                ),
+                KernelMode::ScalarRef => native::softmax_ce_ref_l(
+                    &logits, &ys, scale, &mut d, &mut maxs, &mut zs, &mut losses, l,
+                ),
+            }
+            (d, losses)
+        };
+        let (d_simd, loss_simd) = run(KernelMode::Simd);
+        let (d_scal, loss_scal) = run(KernelMode::ScalarRef);
+        // only the normalizer Z reassociates: relative v·ε on p and on
+        // each dlogit, absolute v·ε on -ln p
+        let rtol = 8.0 * v as f64 * f64::EPSILON;
+        for b in 0..l {
+            prop_assert(
+                (loss_simd[b] - loss_scal[b]).abs() <= rtol * (1.0 + loss_scal[b].abs()),
+                format!("softmax loss lane {b} (v={v}, l={l})"),
+            )?;
+        }
+        for (i, (a, r)) in d_simd.iter().zip(&d_scal).enumerate() {
+            prop_assert(
+                (a - r).abs() <= rtol * (r.abs() + scale),
+                format!("softmax dlogits[{i}] (v={v}, l={l}): {a} vs {r}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rms_kernels_match_scalar_reference() {
+    let _g = ModeGuard;
+    check(60, |g| {
+        let dim = g.usize(2, 160);
+        let l = *g.choice(&[1usize, 2, 4]);
+        let x = g.vec_normal_f64(dim * l, 1.0);
+        let gw = g.vec_normal_f64(dim * l, 0.5);
+        let dy = g.vec_normal_f64(dim * l, 1.0);
+        let rtol = 8.0 * dim as f64 * f64::EPSILON;
+
+        // forward: rs reassociates, out is rs-relative
+        native::set_kernel_mode(KernelMode::Simd);
+        let mut out_s = vec![0.0f64; dim * l];
+        let mut rs_s = vec![0.0f64; l];
+        native::rms_fwd_l(&x, &gw, &mut out_s, &mut rs_s, l);
+        let mut out_r = vec![0.0f64; dim * l];
+        let mut rs_r = vec![0.0f64; l];
+        native::rms_fwd_ref_l(&x, &gw, &mut out_r, &mut rs_r, l);
+        for b in 0..l {
+            prop_assert(
+                (rs_s[b] - rs_r[b]).abs() <= rtol * rs_r[b],
+                format!("rms fwd rs lane {b} (dim={dim})"),
+            )?;
+        }
+        for (i, (a, r)) in out_s.iter().zip(&out_r).enumerate() {
+            prop_assert(
+                (a - r).abs() <= rtol * (r.abs() + 1.0),
+                format!("rms fwd out[{i}] (dim={dim}, l={l})"),
+            )?;
+        }
+
+        // backward against the same (reference) rs: dg is elementwise
+        // and bit-exact, dx carries the reassociated Σ dy·g·x
+        let run_bwd = |mode: KernelMode| {
+            native::set_kernel_mode(mode);
+            let mut dx = vec![0.0f64; dim * l];
+            let mut dg = vec![0.0f64; dim * l];
+            let mut dots = vec![0.0f64; l];
+            match mode {
+                KernelMode::Simd => {
+                    native::rms_bwd_l(&x, &gw, &rs_r, &dy, &mut dx, &mut dg, &mut dots, l)
+                }
+                KernelMode::ScalarRef => native::rms_bwd_ref_l(
+                    &x, &gw, &rs_r, &dy, &mut dx, &mut dg, &mut dots, l,
+                ),
+            }
+            (dx, dg)
+        };
+        let (dx_s, dg_s) = run_bwd(KernelMode::Simd);
+        let (dx_r, dg_r) = run_bwd(KernelMode::ScalarRef);
+        for (i, (a, r)) in dg_s.iter().zip(&dg_r).enumerate() {
+            prop_assert(
+                a.to_bits() == r.to_bits(),
+                format!("rms bwd dg[{i}] must be bit-exact (elementwise sweep)"),
+            )?;
+        }
+        for (i, (a, r)) in dx_s.iter().zip(&dx_r).enumerate() {
+            prop_assert(
+                (a - r).abs() <= rtol * (r.abs() + 1.0),
+                format!("rms bwd dx[{i}] (dim={dim}, l={l})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Order-preserving kernels: bit-identity across modes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn order_preserving_kernels_are_bit_identical_across_modes() {
+    let _g = ModeGuard;
+    check(40, |g| {
+        let rows = g.usize(1, 20);
+        let cols = g.usize(1, 40);
+        let l = *g.choice(&[1usize, 2, 4]);
+        let w = g.vec_normal_f64(rows * cols * l, 1.0);
+        let v = g.vec_normal_f64(rows * l, 1.0);
+        let u = g.vec_normal_f64(cols * l, 1.0);
+        let run = |mode: KernelMode| {
+            native::set_kernel_mode(mode);
+            let mut t_out = vec![0.0f64; cols * l];
+            native::matvec_t_acc_l(&w, rows, cols, &v, &mut t_out, l);
+            let mut dw = vec![0.0f64; rows * cols * l];
+            native::outer_acc_l(&mut dw, rows, cols, &v, &u, l);
+            (t_out, dw)
+        };
+        let (t_s, dw_s) = run(KernelMode::Simd);
+        let (t_r, dw_r) = run(KernelMode::ScalarRef);
+        for (i, (a, r)) in t_s.iter().zip(&t_r).enumerate() {
+            prop_assert(
+                a.to_bits() == r.to_bits(),
+                format!("matvec_t_acc[{i}] not bit-identical across modes"),
+            )?;
+        }
+        for (i, (a, r)) in dw_s.iter().zip(&dw_r).enumerate() {
+            prop_assert(
+                a.to_bits() == r.to_bits(),
+                format!("outer_acc[{i}] not bit-identical across modes"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Global-norm clip: tolerance vs. reference, bitwise worker invariance
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clip_matches_reference_and_is_bitwise_worker_invariant() {
+    let _g = ModeGuard;
+    check(20, |g| {
+        let l = *g.choice(&[1usize, 2, 4]);
+        let n_tensors = g.usize(1, 4);
+        // spans multiple 8192-element intra-op chunks on at least some cases
+        let grads: Vec<Vec<f32>> = (0..n_tensors)
+            .map(|_| {
+                let numel = g.usize(1, 20_000);
+                g.vec_normal(numel * l, 1.0)
+            })
+            .collect();
+        let total: usize = grads.iter().map(|t| t.len() / l).sum();
+        // small max_norm so the rescale path actually runs
+        let max_norm = 0.5;
+
+        native::set_kernel_mode(KernelMode::ScalarRef);
+        let mut g_ref = grads.clone();
+        let n_ref = native::clip_global_norm_ref_l(&mut g_ref, max_norm, l);
+
+        native::set_kernel_mode(KernelMode::Simd);
+        let mut runs = Vec::new();
+        for workers in [1usize, 2, 8] {
+            slimadam::pool::set_intraop_workers(workers);
+            let mut g_w = grads.clone();
+            let n_w = native::clip_global_norm_l(&mut g_w, max_norm, l);
+            runs.push((workers, g_w, n_w));
+        }
+        slimadam::pool::set_intraop_workers(1);
+
+        // all worker counts bitwise identical
+        let (_, g1, n1) = &runs[0];
+        for (workers, g_w, n_w) in &runs[1..] {
+            for (b, (a, r)) in n_w.iter().zip(n1).enumerate() {
+                prop_assert(
+                    a.to_bits() == r.to_bits(),
+                    format!("clip norm lane {b} differs at {workers} workers"),
+                )?;
+            }
+            for (ti, (ta, tr)) in g_w.iter().zip(g1).enumerate() {
+                for (i, (a, r)) in ta.iter().zip(tr).enumerate() {
+                    prop_assert(
+                        a.to_bits() == r.to_bits(),
+                        format!("clip grads[{ti}][{i}] differs at {workers} workers"),
+                    )?;
+                }
+            }
+        }
+
+        // vs. the scalar-order reference: squared-sum reassociation bound
+        for (b, (a, r)) in n1.iter().zip(&n_ref).enumerate() {
+            let bound = tree_bound(total, r * r).sqrt().max(1e-12 * r);
+            prop_assert(
+                (a - r).abs() <= bound + 1e-12,
+                format!("clip norm lane {b}: {a} vs ref {r}"),
+            )?;
+        }
+        for (ti, (ta, tr)) in g1.iter().zip(&g_ref).enumerate() {
+            for (i, (a, r)) in ta.iter().zip(tr).enumerate() {
+                prop_assert(
+                    (a - r).abs() <= 1e-6 + 1e-5 * r.abs(),
+                    format!("clip grads[{ti}][{i}]: {a} vs ref {r}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fused AdamW update: bitwise across modes AND worker counts, for every
+// model family × ruleset (the k_modes geometry differs per pair)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_update_is_bitwise_invariant_for_every_model_and_ruleset() {
+    let _g = ModeGuard;
+    for model in native::MODELS {
+        for ruleset in native::RULESETS {
+            let art = native::artifact(&format!("{model}.train.{ruleset}")).unwrap();
+            let man = &art.manifest;
+            let k_modes = man.k_modes.as_ref().unwrap();
+            let v_shapes = man.v_shapes.as_ref().unwrap();
+            let hypers = man.hypers.unwrap_or_default();
+            let l = 2usize;
+            let mut rng = Rng::new(0xF05E);
+            let mut draw = |n: usize| -> Vec<f32> {
+                (0..n).map(|_| (rng.normal() * 0.1) as f32).collect()
+            };
+            let w0: Vec<Vec<f32>> =
+                man.params.iter().map(|p| draw(p.numel() * l)).collect();
+            let m0: Vec<Vec<f32>> =
+                man.params.iter().map(|p| draw(p.numel() * l)).collect();
+            let v0: Vec<Vec<f32>> = v_shapes
+                .iter()
+                .map(|vs| {
+                    draw(vs.iter().product::<usize>() * l)
+                        .iter()
+                        .map(|x| x.abs())
+                        .collect()
+                })
+                .collect();
+            let g0: Vec<Vec<f32>> =
+                man.params.iter().map(|p| draw(p.numel() * l)).collect();
+
+            let run = |mode: KernelMode, workers: usize| {
+                native::set_kernel_mode(mode);
+                slimadam::pool::set_intraop_workers(workers);
+                let (mut w, mut m, mut v) = (w0.clone(), m0.clone(), v0.clone());
+                native::fused_update_l(
+                    man,
+                    k_modes,
+                    &hypers,
+                    &mut w,
+                    &mut m,
+                    &mut v,
+                    &g0,
+                    &[3, 7],
+                    &[1e-3, 2e-3],
+                    l,
+                );
+                (w, m, v)
+            };
+            let base = run(KernelMode::ScalarRef, 1);
+            for (mode, workers) in [
+                (KernelMode::Simd, 1),
+                (KernelMode::Simd, 2),
+                (KernelMode::Simd, 8),
+            ] {
+                let got = run(mode, workers);
+                for (which, (state, want)) in [
+                    (&got.0, &base.0),
+                    (&got.1, &base.1),
+                    (&got.2, &base.2),
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    for (ti, (a, r)) in state.iter().zip(want.iter()).enumerate() {
+                        for (i, (x, y)) in a.iter().zip(r).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{model}×{ruleset}: fused update state \
+                                 {which} tensor {ti} elem {i} differs \
+                                 ({mode:?}, {workers} workers)"
+                            );
+                        }
+                    }
+                }
+            }
+            slimadam::pool::set_intraop_workers(1);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End to end: every model × ruleset through the whole fused train step
+// ---------------------------------------------------------------------------
+
+/// One job's full train-step input list (params, m, v, batch, step, lr)
+/// in manifest order, deterministically from a seed.
+fn train_inputs(man: &Manifest, seed: u64) -> Vec<xla::Literal> {
+    let mut rng = Rng::new(seed);
+    let mut inputs = Vec::new();
+    for p in &man.params {
+        let t = p.init_mitchell.materialize(&p.shape, &mut rng);
+        inputs.push(tensor_to_literal(&t).unwrap());
+    }
+    for p in &man.params {
+        let t = Tensor::from_vec(&p.shape, vec![0.0; p.numel()]);
+        inputs.push(tensor_to_literal(&t).unwrap());
+    }
+    for vs in man.v_shapes.as_ref().unwrap() {
+        let n: usize = vs.iter().product();
+        let t = Tensor::from_vec(vs, vec![0.0; n]);
+        inputs.push(tensor_to_literal(&t).unwrap());
+    }
+    for b in &man.batch {
+        let n: usize = b.shape.iter().product();
+        match b.dtype.as_str() {
+            "s32" => {
+                let bound = man.token_bound() as u64;
+                let data: Vec<i32> =
+                    (0..n).map(|_| rng.below(bound) as i32).collect();
+                inputs.push(i32_literal(&data, &b.shape).unwrap());
+            }
+            _ => {
+                let data: Vec<f32> =
+                    (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                inputs.push(f32_literal(&data, &b.shape).unwrap());
+            }
+        }
+    }
+    inputs.push(scalar_f32(1.0));
+    inputs.push(scalar_f32(1e-3));
+    inputs
+}
+
+/// Bit pattern of a full output list: scalars (loss, grad_norm) first,
+/// then every state tensor.
+fn output_bits(outs: &[xla::Literal]) -> Vec<u32> {
+    let mut bits = vec![
+        scalar_value(&outs[0]).unwrap().to_bits(),
+        scalar_value(&outs[1]).unwrap().to_bits(),
+    ];
+    for o in &outs[2..] {
+        let t = literal_to_tensor(o).unwrap();
+        bits.extend(t.data.iter().map(|x| x.to_bits()));
+    }
+    bits
+}
+
+#[test]
+fn train_step_batches_are_bit_identical_for_every_model_and_ruleset() {
+    let _g = ModeGuard;
+    let backend = backend_for(&BackendSpec::native()).unwrap();
+    for model in native::MODELS {
+        for ruleset in native::RULESETS {
+            let name = format!("{model}.train.{ruleset}");
+            let art = backend
+                .load_artifact(std::path::Path::new("artifacts"), &name)
+                .unwrap();
+            let exe = backend.compile(&art).unwrap();
+            let man = &art.manifest;
+
+            let jobs: Vec<Vec<xla::Literal>> =
+                (0..8).map(|j| train_inputs(man, 100 + j)).collect();
+            let sequential: Vec<Vec<u32>> = jobs
+                .iter()
+                .map(|inp| output_bits(&exe.run(inp).unwrap()))
+                .collect();
+
+            for batch in [1usize, 2, 4, 8] {
+                let mut batched = Vec::new();
+                for group in jobs.chunks(batch) {
+                    for outs in exe.run_batch(group).unwrap() {
+                        batched.push(output_bits(&outs));
+                    }
+                }
+                assert_eq!(
+                    batched, sequential,
+                    "{name}: batch {batch} not bit-identical to sequential"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn train_step_scalar_reference_agrees_within_f32_tolerance() {
+    let _g = ModeGuard;
+    let backend = backend_for(&BackendSpec::native()).unwrap();
+    for model in native::MODELS {
+        let name = format!("{model}.train.adam");
+        let art = backend
+            .load_artifact(std::path::Path::new("artifacts"), &name)
+            .unwrap();
+        let exe = backend.compile(&art).unwrap();
+        let inputs = train_inputs(&art.manifest, 7);
+
+        native::set_kernel_mode(KernelMode::Simd);
+        let simd = exe.run(&inputs).unwrap();
+        native::set_kernel_mode(KernelMode::ScalarRef);
+        let scal = exe.run(&inputs).unwrap();
+        native::set_kernel_mode(KernelMode::Simd);
+
+        let loss_s = scalar_value(&simd[0]).unwrap();
+        let loss_r = scalar_value(&scal[0]).unwrap();
+        assert!(
+            (loss_s - loss_r).abs() <= 1e-5 + 1e-5 * loss_r.abs(),
+            "{model}: whole-step loss Simd {loss_s} vs ScalarRef {loss_r}"
+        );
+        for (i, (a, r)) in simd[2..].iter().zip(&scal[2..]).enumerate() {
+            let ta = literal_to_tensor(a).unwrap();
+            let tr = literal_to_tensor(r).unwrap();
+            for (j, (x, y)) in ta.data.iter().zip(&tr.data).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-6 + 1e-4 * y.abs(),
+                    "{model}: state tensor {i} elem {j}: Simd {x} vs ScalarRef {y}"
+                );
+            }
+        }
+    }
+}

@@ -10,9 +10,10 @@
 //! Note: only one test here may touch `exec_cache`'s global counters —
 //! libtest runs tests in this binary concurrently.
 
-use slimadam::coordinator::{exec_cache, SweepScheduler, TrainConfig};
-use slimadam::pool::parallel_map_sharded;
+use slimadam::coordinator::{exec_cache, EngineKind, SweepScheduler, TrainConfig};
+use slimadam::pool::{parallel_map_sharded, set_intraop_workers};
 use slimadam::rng::job_seed;
+use slimadam::runtime::backend::BackendSpec;
 
 #[test]
 fn sharded_pool_output_is_worker_independent() {
@@ -84,5 +85,58 @@ fn parallel_sweep_matches_serial_and_compiles_once_per_worker() {
             a.label
         );
         assert_eq!(a.result.losses, b.result.losses, "{}", a.label);
+    }
+}
+
+/// Intra-op kernel parallelism must be invisible in the results (ISSUE
+/// 6, DESIGN.md §14): the SIMD clip and fused-update kernels fold
+/// per-chunk partials in `(tensor, chunk)` index order whatever thread
+/// computed them, so real native train runs — split and fused engines —
+/// produce byte-identical fingerprints at `workers = 1 ≡ 2 ≡ 8`.
+///
+/// This is the regression test for the latent non-determinism risk in
+/// sharded reductions: any racy fold order shows up here as a
+/// fingerprint mismatch.
+#[test]
+fn intraop_parallel_train_steps_are_worker_count_invariant() {
+    let mut configs = Vec::new();
+    for (opt, lr) in [("adam", 1e-3), ("slimadam", 2e-3)] {
+        let mut cfg = TrainConfig::auto("mlp_tiny", opt, lr, 10);
+        cfg.backend = BackendSpec::native();
+        cfg.eval_batches = 2;
+        configs.push(cfg);
+    }
+    let mut fused = TrainConfig::auto("gpt_micro", "adam", 1e-3, 4);
+    fused.backend = BackendSpec::native();
+    fused.engine = EngineKind::Fused("slimadam".to_string());
+    configs.push(fused);
+
+    let run = |intraop: usize| {
+        set_intraop_workers(intraop);
+        let out = SweepScheduler::new(1).quiet().run(&configs).unwrap();
+        set_intraop_workers(1);
+        out
+    };
+    let base = run(1);
+    assert!(base
+        .iter()
+        .all(|s| !s.result.losses.is_empty() && s.result.final_train_loss.is_finite()));
+    for intraop in [2usize, 8] {
+        let got = run(intraop);
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(
+                a.result.fingerprint(),
+                b.result.fingerprint(),
+                "intraop={intraop} changed results for {}",
+                a.label
+            );
+            assert_eq!(a.result.losses, b.result.losses, "{}", a.label);
+            assert_eq!(
+                a.result.final_train_loss.to_bits(),
+                b.result.final_train_loss.to_bits(),
+                "{}",
+                a.label
+            );
+        }
     }
 }
