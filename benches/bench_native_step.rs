@@ -86,6 +86,29 @@ fn main() {
             }
         }
 
+        // Flight-recorder overhead (DESIGN.md §15): the identical fused
+        // step with span tracing live. The enabled path adds clock reads
+        // + ring pushes per kernel section; the gate at the bottom holds
+        // it to ≤ 5% over the untraced rate.
+        let trace_dir = std::env::temp_dir().join(format!(
+            "slimadam_bench_trace_{}",
+            std::process::id()
+        ));
+        slimadam::obs::start_tracing(&trace_dir).expect("start tracing");
+        let mut fused_traced =
+            TrainEngine::new("artifacts", model, "adam", backend.as_ref(), "mitchell", 5)
+                .expect("native fused engine");
+        println!("== {model}: fused train_step, tracing live ==");
+        let traced_report = b.bench_with_units(
+            &format!("native/{model}/fused_step_traced"),
+            units,
+            unit_label,
+            || {
+                fused_traced.step(&batch, 1e-4).unwrap();
+            },
+        );
+        slimadam::obs::stop_tracing().expect("stop tracing");
+
         // Pre-PR scalar kernels (ISSUE 6 acceptance: the SIMD fused step
         // must show ≥ 2× over this on gpt_deep). ScalarRef swaps every
         // reassociating kernel back to its scalar-order oracle body and
@@ -182,6 +205,17 @@ fn main() {
                     .unwrap_or(0.0),
             )
             .set("fused_steps_per_s_scalar_ref", step_s(scalar_report.median_ns))
+            .set("fused_steps_per_s_traced", step_s(traced_report.median_ns))
+            .set(
+                "tracing_overhead",
+                traced_report.median_ns
+                    / fused_adam_report
+                        .as_ref()
+                        .map(|r| r.median_ns)
+                        .unwrap_or(f64::MAX)
+                        .max(1e-12)
+                    - 1.0,
+            )
             .set("fused_steps_per_s_f32", step_s(f32_report.median_ns))
             .set(
                 "fused_simd_speedup",
@@ -207,9 +241,44 @@ fn main() {
         summary_rows.push(row);
     }
 
+    // traced runs above all shared one per-pid temp sink; drop it now
+    let _ = std::fs::remove_dir_all(
+        std::env::temp_dir().join(format!("slimadam_bench_trace_{}", std::process::id())),
+    );
+
     let out = std::path::Path::new("results/bench/BENCH_native.json");
     write_native_summary(&summary_rows, out).expect("write BENCH_native.json");
     println!("\nwrote per-family throughput summary to {}", out.display());
+
+    // Tracing-overhead gate (DESIGN.md §15 acceptance): the traced fused
+    // step must stay within 5% of the untraced rate for every family.
+    let mut trace_fail = false;
+    for row in &summary_rows {
+        let model = row
+            .opt("model")
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or("?");
+        let overhead = row
+            .opt("tracing_overhead")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.0);
+        if overhead > 0.05 {
+            eprintln!(
+                "tracing-overhead FAIL: {model} fused_step_traced is {:.1}% \
+                 slower than fused_step (allowed 5%)",
+                100.0 * overhead
+            );
+            trace_fail = true;
+        } else {
+            println!(
+                "tracing-overhead: {model} {:+.1}% (gate ≤ 5%)",
+                100.0 * overhead
+            );
+        }
+    }
+    if trace_fail {
+        std::process::exit(1);
+    }
 
     // Baseline gate (CI `bench-regression`): compare the summary just
     // written against the committed baseline and fail the process on a

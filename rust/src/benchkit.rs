@@ -260,6 +260,46 @@ pub fn check_native_regression(
     out
 }
 
+/// Promote the latest native bench summary to the committed regression
+/// baseline (`slimadam bench promote`): rewrites `baseline` from the rows
+/// in `summary`, dropping the bootstrap `"provisional"` marker so the
+/// next `bench-regression` run gates for real. Refuses an empty summary,
+/// and writes via temp-file + atomic rename like the other sinks.
+pub fn promote_baseline(
+    summary: &std::path::Path,
+    baseline: &std::path::Path,
+) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(summary).map_err(|e| {
+        anyhow::anyhow!(
+            "reading {summary:?}: {e} — run `cargo bench --bench bench_native_step` first"
+        )
+    })?;
+    let mut v = Value::parse(&text)?;
+    let n = v
+        .opt("families")
+        .and_then(|f| f.as_arr().ok())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    anyhow::ensure!(
+        n > 0,
+        "{summary:?} has no families rows — refusing to promote an empty baseline"
+    );
+    if let Value::Obj(o) = &mut v {
+        o.remove("provisional");
+        o.insert(
+            "promoted_from".into(),
+            Value::Str(summary.display().to_string()),
+        );
+    }
+    if let Some(dir) = baseline.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = baseline.with_extension("json.tmp");
+    std::fs::write(&tmp, v.dump_pretty())?;
+    std::fs::rename(&tmp, baseline)?;
+    Ok(())
+}
+
 /// Benchmark runner with warmup + timed sampling.
 pub struct Bencher {
     pub warmup: Duration,
@@ -752,6 +792,30 @@ mod tests {
         let out = check_native_regression(&base, &cur, 0.15);
         assert!(out.passed(), "{:?}", out.violations);
         assert!(!out.warnings.is_empty());
+    }
+
+    #[test]
+    fn promote_clears_provisional_and_keeps_rows() {
+        let dir = std::env::temp_dir().join(format!(
+            "slimadam_bench_promote_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let summary_path = dir.join("BENCH_native.json");
+        let baseline_path = dir.join("BENCH_baseline.json");
+        let mut s = summary(&[("mlp_tiny", 123.0)], false);
+        s.set("provisional", true);
+        std::fs::write(&summary_path, s.dump_pretty()).unwrap();
+        promote_baseline(&summary_path, &baseline_path).unwrap();
+        let promoted =
+            Value::parse(&std::fs::read_to_string(&baseline_path).unwrap()).unwrap();
+        assert!(promoted.opt("provisional").is_none(), "marker must be cleared");
+        assert_eq!(promoted.get("families").unwrap().as_arr().unwrap().len(), 1);
+        // empty summary refuses
+        std::fs::write(&summary_path, Value::obj().dump()).unwrap();
+        assert!(promote_baseline(&summary_path, &baseline_path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -102,6 +102,10 @@ pub fn plan(configs: &[TrainConfig], indices: &[usize], max_batch: usize) -> Vec
             }
         }
     }
+    // planner volume feeds `obs report` (occupancy is observed per group
+    // by the scheduler, which also emits the plan_group spans)
+    crate::obs::registry::counter("batch.groups_planned").add(groups.len() as u64);
+    crate::obs::registry::counter("batch.jobs_planned").add(indices.len() as u64);
     groups
 }
 
@@ -221,6 +225,7 @@ fn run_split_group(configs: &[TrainConfig], idxs: &[usize]) -> Result<Vec<RunSum
             snr: None,
             steps_per_s,
             stored_fingerprint: None,
+            metrics: super::obs_metrics(),
         });
     }
     Ok(out)
@@ -265,6 +270,7 @@ fn run_fused_group(
             memory: None,
             steps_per_s,
             stored_fingerprint: None,
+            metrics: super::obs_metrics(),
         });
     }
     Ok(out)

@@ -18,19 +18,32 @@
 //!
 //! The global [`stats`] counters aggregate hits/misses across all worker
 //! threads so tests and benches can assert the compile-once property.
+//! They live in the observability metrics registry (`exec_cache.hits` /
+//! `exec_cache.misses` — DESIGN.md §15), so the same numbers reach the
+//! end-of-sweep summary line, `RunSummary.metrics`, and `slimadam obs
+//! report` without any ad-hoc printing here. Cache lookups additionally
+//! emit `cache_hit` / `cache_miss` / `compile` spans when tracing is live.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use anyhow::Result;
 
+use crate::obs::{self, registry, SpanKind};
 use crate::runtime::backend::{backend_for, Backend, BackendSpec};
 use crate::runtime::engine::{Compiled, GradEngine};
 
-static HITS: AtomicU64 = AtomicU64::new(0);
-static MISSES: AtomicU64 = AtomicU64::new(0);
+fn hits() -> &'static Arc<registry::Counter> {
+    static C: OnceLock<Arc<registry::Counter>> = OnceLock::new();
+    C.get_or_init(|| registry::counter("exec_cache.hits"))
+}
+
+fn misses() -> &'static Arc<registry::Counter> {
+    static C: OnceLock<Arc<registry::Counter>> = OnceLock::new();
+    C.get_or_init(|| registry::counter("exec_cache.misses"))
+}
 
 /// Snapshot of the global cache counters (all worker threads combined).
 /// Every miss is exactly one backend compilation.
@@ -50,15 +63,42 @@ impl CacheStats {
 /// Read the global hit/miss counters.
 pub fn stats() -> CacheStats {
     CacheStats {
-        hits: HITS.load(Ordering::Relaxed),
-        misses: MISSES.load(Ordering::Relaxed),
+        hits: hits().get(),
+        misses: misses().get(),
     }
 }
 
 /// Zero the global counters (tests and benches bracket sweeps with this).
 pub fn reset_stats() {
-    HITS.store(0, Ordering::Relaxed);
-    MISSES.store(0, Ordering::Relaxed);
+    hits().reset();
+    misses().reset();
+}
+
+/// Record a cache hit (instant span + counter).
+fn note_hit(name: &str) {
+    hits().inc();
+    if obs::enabled() {
+        obs::emit_instant(SpanKind::CacheHit, obs::intern(name), [0; 4]);
+    }
+}
+
+/// Record a cache miss; returns a [`obs::clock`] mark so the caller can
+/// close the `compile` span over the actual compilation.
+fn note_miss(name: &str) -> u64 {
+    misses().inc();
+    if obs::enabled() {
+        obs::emit_instant(SpanKind::CacheMiss, obs::intern(name), [0; 4]);
+    }
+    obs::clock()
+}
+
+/// Intern a span label only when tracing is live.
+fn obs_label(name: &str) -> u32 {
+    if obs::enabled() {
+        obs::intern(name)
+    } else {
+        obs::NO_LABEL
+    }
 }
 
 /// Cache key: execution identity (backend kind + device) plus artifact
@@ -98,11 +138,12 @@ pub fn grad_engine(spec: &BackendSpec, dir: &str, model: &str) -> Result<Rc<Grad
     let key = (*spec, name, art.manifest_hash);
     GRAD.with(|cache| {
         if let Some(engine) = cache.borrow().get(&key) {
-            HITS.fetch_add(1, Ordering::Relaxed);
+            note_hit(&key.1);
             return Ok(engine.clone());
         }
-        MISSES.fetch_add(1, Ordering::Relaxed);
+        let t0 = note_miss(&key.1);
         let engine = Rc::new(GradEngine::from_artifact(&art, backend.as_ref())?);
+        obs::emit_since(SpanKind::Compile, obs_label(&key.1), t0, [0; 4]);
         cache.borrow_mut().insert(key, engine.clone());
         Ok(engine)
     })
@@ -128,11 +169,12 @@ pub fn train_compiled(
     let key = (*spec, name, art.manifest_hash);
     TRAIN.with(|cache| {
         if let Some(compiled) = cache.borrow().get(&key) {
-            HITS.fetch_add(1, Ordering::Relaxed);
+            note_hit(&key.1);
             return Ok(compiled.clone());
         }
-        MISSES.fetch_add(1, Ordering::Relaxed);
+        let t0 = note_miss(&key.1);
         let compiled = Rc::new(art.compile(backend.as_ref())?);
+        obs::emit_since(SpanKind::Compile, obs_label(&key.1), t0, [0; 4]);
         cache.borrow_mut().insert(key, compiled.clone());
         Ok(compiled)
     })
@@ -153,8 +195,8 @@ mod tests {
         assert!(
             grad_engine(&BackendSpec::native(), "artifacts", "no_such_model_xyz").is_err()
         );
-        HITS.fetch_add(2, Ordering::Relaxed);
-        MISSES.fetch_add(1, Ordering::Relaxed);
+        hits().add(2);
+        misses().inc();
         let after = stats();
         assert!(after.hits >= before.hits + 2);
         assert!(after.misses >= before.misses + 1);

@@ -236,6 +236,22 @@ pub struct RunSummary {
     /// summaries carry no per-step losses, so [`RunSummary::fingerprint`]
     /// must use this instead of recomputing.
     pub stored_fingerprint: Option<u64>,
+    /// Flight-recorder metric snapshot at run completion (DESIGN.md §15).
+    /// Populated only while tracing is live, so untraced rows are
+    /// byte-identical to pre-observability output; never part of the
+    /// fingerprint.
+    pub metrics: Option<crate::json::Value>,
+}
+
+/// Registry snapshot for a completing run — `Some` only when the flight
+/// recorder is live (counters are process-global, so the snapshot reads
+/// as "metrics as of this row", not a per-run delta).
+pub(crate) fn obs_metrics() -> Option<crate::json::Value> {
+    if crate::obs::enabled() {
+        Some(crate::obs::registry::snapshot())
+    } else {
+        None
+    }
 }
 
 impl RunSummary {
@@ -270,6 +286,9 @@ impl RunSummary {
             .set("wallclock_s", self.result.wallclock_s);
         if let Some(m) = &self.memory {
             v.set("memory", m.to_json());
+        }
+        if let Some(m) = &self.metrics {
+            v.set("metrics", m.clone());
         }
         v
     }
@@ -513,6 +532,7 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
                 snr,
                 steps_per_s,
                 stored_fingerprint: None,
+                metrics: obs_metrics(),
             })
         }
         EngineKind::Fused(ruleset) => {
@@ -542,6 +562,7 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
                 memory: None,
                 steps_per_s,
                 stored_fingerprint: None,
+                metrics: obs_metrics(),
             })
         }
     }
@@ -618,6 +639,7 @@ fn synthetic_run(cfg: &TrainConfig) -> RunSummary {
         memory: None,
         steps_per_s: 0.0,
         stored_fingerprint: None,
+        metrics: None,
     }
 }
 

@@ -37,11 +37,12 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use crate::metrics::JsonlWriter;
+use crate::obs::{self, registry, SpanKind};
 use crate::pool::{default_workers, parallel_map_sharded};
 use crate::rng::{job_seed, stable_hash64};
 use crate::runstore::{config_key, RunIndex, RunStore};
 
-use super::{EngineKind, RunSummary, TrainConfig};
+use super::{exec_cache, EngineKind, RunSummary, TrainConfig};
 
 /// Parallel sweep scheduler; build with [`SweepScheduler::new`], then
 /// chain [`stream_to`](SweepScheduler::stream_to) /
@@ -143,6 +144,13 @@ impl SweepScheduler {
     pub fn run(&self, configs: &[TrainConfig]) -> Result<Vec<RunSummary>> {
         let total = configs.len();
         let keys: Vec<u64> = configs.iter().map(config_key).collect();
+        let cache_before = exec_cache::stats();
+        let steals = registry::counter("pool.steals");
+        let steals_before = steals.get();
+        let occupancy = registry::histogram("batch.occupancy");
+        let occ_before = (occupancy.count(), occupancy.sum());
+        let jobs_run = registry::counter("sweep.jobs_run");
+        let jobs_skipped = registry::counter("sweep.jobs_skipped");
 
         // Restore already-completed jobs up front; only the remainder is
         // planned into dispatch groups.
@@ -156,11 +164,17 @@ impl SweepScheduler {
                     // row (its row is what we restored from).
                     slots[i] = Some(entry.to_summary());
                     skipped += 1;
+                    obs::emit_instant(
+                        SpanKind::ResumeSkip,
+                        obs::NO_LABEL,
+                        [i as u64, 0, 0, 0],
+                    );
                     continue;
                 }
             }
             pending.push(i);
         }
+        jobs_skipped.add(skipped as u64);
         if self.resume.is_some() && !self.quiet {
             eprintln!("  resume: {skipped}/{total} jobs already in the run store");
         }
@@ -168,16 +182,29 @@ impl SweepScheduler {
         // The pool's work units are dispatch groups: singletons when
         // unbatched, planner output otherwise. Stealing moves whole
         // groups, so a stolen group keeps its one-dispatch property.
+        let plan_t0 = obs::clock();
         let groups: Vec<Vec<usize>> = if self.batch <= 1 {
             pending.iter().map(|&i| vec![i]).collect()
         } else {
             super::batch::plan(configs, &pending, self.batch)
         };
+        for group in &groups {
+            occupancy.observe(group.len() as u64);
+            if obs::enabled() {
+                obs::emit_since(
+                    SpanKind::PlanGroup,
+                    obs::intern(&Self::shard_key(&configs[group[0]])),
+                    plan_t0,
+                    [group.len() as u64, self.batch as u64, 0, 0],
+                );
+            }
+        }
         let workers = if self.workers == 0 {
             default_workers(groups.len())
         } else {
             self.workers
         };
+        registry::gauge("sweep.queue_depth").set(groups.len() as i64);
 
         // Append, never truncate: a crashed sweep keeps every completed
         // row, which is what makes the streamed file resumable/diffable.
@@ -225,9 +252,18 @@ impl SweepScheduler {
                                 "fingerprint",
                                 format!("{:016x}", summary.result.fingerprint()),
                             );
+                        let append_t0 = obs::clock();
                         writer.write(&row)?;
+                        obs::emit_since(
+                            SpanKind::StoreAppend,
+                            obs::NO_LABEL,
+                            append_t0,
+                            [i as u64, 0, 0, 0],
+                        );
                     }
                 }
+                jobs_run.add(group.len() as u64);
+                registry::gauge("sweep.queue_depth").add(-1);
                 Ok(summaries)
             },
         )?;
@@ -241,6 +277,37 @@ impl SweepScheduler {
                 "  sweep: ran {}, skipped {skipped}, total {total}",
                 total - skipped
             );
+        }
+        if !self.quiet {
+            // One structured end-of-sweep summary line (machine-greppable
+            // JSON) in place of the old scattered cache/steal prints. The
+            // cache and steal figures are deltas over this run() call, so
+            // back-to-back sweeps in one process report their own work.
+            let cache_after = exec_cache::stats();
+            let mut s = crate::json::Value::obj();
+            s.set("ran", total - skipped)
+                .set("skipped", skipped)
+                .set("total", total)
+                .set("groups", groups.len())
+                .set("workers", workers)
+                .set(
+                    "cache_hits",
+                    cache_after.hits.saturating_sub(cache_before.hits) as usize,
+                )
+                .set(
+                    "cache_compiles",
+                    cache_after.misses.saturating_sub(cache_before.misses) as usize,
+                )
+                .set(
+                    "steals",
+                    steals.get().saturating_sub(steals_before) as usize,
+                )
+                .set("batch_occupancy_mean", {
+                    let n = occupancy.count().saturating_sub(occ_before.0);
+                    let sum = occupancy.sum().saturating_sub(occ_before.1);
+                    if n == 0 { 0.0 } else { sum as f64 / n as f64 }
+                });
+            eprintln!("  sweep summary: {}", s.dump());
         }
         Ok(slots
             .into_iter()

@@ -18,6 +18,9 @@
 //!
 //! * Substrates: [`json`], [`rng`], [`tensor`], [`cli`], [`pool`]
 //!   (work-stealing sweep pool), [`proptest`], [`benchkit`], [`metrics`]
+//! * Observability: [`obs`] (flight recorder — span tracing into
+//!   `results/trace/`, the always-on metrics registry, and the opt-in
+//!   live SNR telemetry tap — DESIGN.md §15)
 //! * Runtime: [`runtime`] (manifests, engines, and the device-tagged
 //!   backend layer — the PJRT path behind the `pjrt` feature and the
 //!   pure-Rust native interpreter — DESIGN.md §11)
@@ -39,6 +42,7 @@ pub mod exp;
 pub mod json;
 pub mod metrics;
 pub mod npy;
+pub mod obs;
 pub mod optim;
 pub mod pool;
 pub mod proptest;

@@ -14,11 +14,18 @@
 //!   rules           derive + save SlimAdam compression rules from an SNR probe
 //!   memory          optimizer-state memory accounting for a model
 //!   list            list artifacts, optimizers and experiment ids
+//!   trace           flight-recorder traces: export --chrome (DESIGN.md §15)
+//!   obs             observability report from trace/metrics files
+//!   bench           bench baseline management: promote
+//!
+//! Global observability switches (any run command): `--trace` records
+//! spans to `results/trace/trace-<pid>.jsonl`, `--telemetry snr[:n]`
+//! additionally streams live per-tensor SNR rows (implies --trace).
 
 use anyhow::{bail, Result};
 
 use slimadam::cli::{render_help, subcommand, Args, OptSpec};
-use slimadam::coordinator::{exec_cache, run_config, DataSpec, SweepScheduler, TrainConfig};
+use slimadam::coordinator::{run_config, DataSpec, SweepScheduler, TrainConfig};
 use slimadam::optim::presets;
 use slimadam::rules::RuleSet;
 use slimadam::runstore::{RunStore, StoreMeta, SCHEMA_VERSION};
@@ -44,6 +51,8 @@ const FLAGS: &[&str] = &[
     "seed-jobs",
     "quiet",
     "synthetic",
+    "trace",
+    "chrome",
 ];
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
@@ -52,7 +61,51 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         return Ok(());
     };
     let args = Args::parse(rest, FLAGS)?;
-    match cmd.as_str() {
+    obs_init(&args)?;
+    let result = run_command(&cmd, &args);
+    obs_finish();
+    result
+}
+
+/// Arm the flight recorder from `--trace` / `--telemetry` / env before
+/// the command runs (DESIGN.md §15). `--telemetry` implies tracing: SNR
+/// rows ride the trace stream.
+fn obs_init(args: &Args) -> Result<()> {
+    let mut trace = args.flag("trace")
+        || std::env::var("SLIMADAM_TRACE")
+            .map(|v| v != "0" && !v.is_empty())
+            .unwrap_or(false);
+    if let Some(spec) = args.get("telemetry") {
+        let every = slimadam::obs::telemetry::parse_spec(spec)?;
+        slimadam::obs::telemetry::set_snr_every(Some(every));
+        trace = true;
+    }
+    if trace {
+        let dir = args
+            .get("trace-dir")
+            .map(std::path::PathBuf::from)
+            .or_else(|| std::env::var("SLIMADAM_TRACE_DIR").ok().map(Into::into))
+            .unwrap_or_else(slimadam::obs::flush::default_dir);
+        slimadam::obs::start_tracing(&dir)?;
+        eprintln!("trace: recording to {}", dir.display());
+    }
+    Ok(())
+}
+
+/// Flush and close the trace session, if one was armed.
+fn obs_finish() {
+    let dir = slimadam::obs::trace_dir();
+    if let Ok(n) = slimadam::obs::stop_tracing() {
+        if n > 0 {
+            if let Some(d) = dir {
+                eprintln!("trace: {n} spans -> {}", d.display());
+            }
+        }
+    }
+}
+
+fn run_command(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
         "exp" => {
             if args.positional.is_empty() || args.flag("help") {
                 println!(
@@ -68,15 +121,18 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
                 return Ok(());
             }
             let id = args.positional[0].clone();
-            slimadam::exp::run(&id, &args)
+            slimadam::exp::run(&id, args)
         }
-        "train" => cmd_train(&args),
-        "sweep" => cmd_sweep(&args),
-        "runs" => cmd_runs(&args),
-        "snr" => cmd_snr(&args),
-        "rules" => cmd_rules(&args),
-        "memory" => cmd_memory(&args),
-        "report" => cmd_report(&args),
+        "train" => cmd_train(args),
+        "sweep" => cmd_sweep(args),
+        "runs" => cmd_runs(args),
+        "snr" => cmd_snr(args),
+        "rules" => cmd_rules(args),
+        "memory" => cmd_memory(args),
+        "report" => cmd_report(args),
+        "trace" => cmd_trace(args),
+        "obs" => cmd_obs(args),
+        "bench" => cmd_bench(args),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
             print_global_help();
@@ -98,7 +154,12 @@ fn print_global_help() {
          \x20 snr        probe second-moment SNR along an Adam run\n\
          \x20 rules      derive SlimAdam compression rules from an SNR probe\n\
          \x20 memory     optimizer-state memory accounting\n\
+         \x20 trace      flight-recorder traces: export --chrome\n\
+         \x20 obs        observability report from trace/metrics files\n\
+         \x20 bench      bench baseline management: promote\n\
          \x20 list       list artifacts, optimizers and experiments\n\n\
+         Global: --trace records spans to results/trace/, --telemetry\n\
+         snr[:n] streams live SNR rows (implies --trace).\n\n\
          Run `make artifacts` first to AOT-lower the HLO artifacts."
     );
 }
@@ -113,6 +174,8 @@ fn exp_opts() -> Vec<OptSpec> {
         OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("per-experiment"), is_flag: false },
         OptSpec { name: "workers", help: "parallel runs", default: Some("cores"), is_flag: false },
         OptSpec { name: "all", help: "include expensive extras (fine-tune regime)", default: None, is_flag: true },
+        OptSpec { name: "trace", help: "record flight-recorder spans to results/trace/", default: None, is_flag: true },
+        OptSpec { name: "telemetry", help: "live SNR tap: snr[:every_n] (implies --trace)", default: None, is_flag: false },
     ]
 }
 
@@ -190,6 +253,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 OptSpec { name: "ruleset", help: "fused artifact ruleset", default: Some("adam"), is_flag: false },
                 OptSpec { name: "corpus", help: "train on the repo-source corpus", default: None, is_flag: true },
                 OptSpec { name: "default-init", help: "PyTorch-default init instead of Mitchell", default: None, is_flag: true },
+                OptSpec { name: "trace", help: "record flight-recorder spans to results/trace/", default: None, is_flag: true },
+                OptSpec { name: "telemetry", help: "live SNR tap: snr[:every_n] (implies --trace)", default: None, is_flag: false },
             ])
         );
         return Ok(());
@@ -232,6 +297,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 OptSpec { name: "seed-jobs", help: "derive an independent seed per grid point (default: paired)", default: None, is_flag: true },
                 OptSpec { name: "quiet", help: "suppress per-job progress lines", default: None, is_flag: true },
                 OptSpec { name: "synthetic", help: "deterministic artifact-free synthetic runs (testing; same as SLIMADAM_SYNTH_RUNS=1)", default: None, is_flag: true },
+                OptSpec { name: "trace", help: "record flight-recorder spans to results/trace/", default: None, is_flag: true },
+                OptSpec { name: "telemetry", help: "live SNR tap: snr[:every_n] (implies --trace)", default: None, is_flag: false },
             ])
         );
         return Ok(());
@@ -295,12 +362,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         sweep.write_csv(path)?;
         println!("wrote {path}");
     }
-    let stats = exec_cache::stats();
-    println!(
-        "executable cache: {} hits, {} compiles",
-        stats.hits,
-        stats.compiles()
-    );
+    // cache hit/compile totals now ride the scheduler's structured
+    // `sweep summary:` line (registry counters, DESIGN.md §15)
     Ok(())
 }
 
@@ -444,6 +507,95 @@ fn cmd_report(args: &Args) -> Result<()> {
     anyhow::ensure!(found > 0, "no results/<id>/summary.md files found — run `slimadam exp all`");
     std::fs::write(&out_path, &out)?;
     println!("wrote {found} experiment summaries to {out_path}");
+    Ok(())
+}
+
+/// `slimadam trace export --chrome [--dir d] [--out f]`: convert the
+/// flight-recorder JSONL traces to one Chrome `trace_event` JSON for
+/// `chrome://tracing` / Perfetto (DESIGN.md §15).
+fn cmd_trace(args: &Args) -> Result<()> {
+    if args.flag("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help("slimadam", "trace <export>", "flight-recorder trace tooling", &[
+                OptSpec { name: "chrome", help: "export as Chrome trace_event JSON (the only format)", default: None, is_flag: true },
+                OptSpec { name: "dir", help: "trace directory to read", default: Some("results/trace"), is_flag: false },
+                OptSpec { name: "out", help: "output path", default: Some("<dir>/trace.chrome.json"), is_flag: false },
+            ])
+        );
+        return Ok(());
+    }
+    let action = args.require_positional(0, "action (export)")?;
+    anyhow::ensure!(action == "export", "unknown trace action {action:?} — try export");
+    let dir = std::path::PathBuf::from(args.str_or("dir", "results/trace"));
+    let out = args
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| dir.join("trace.chrome.json"));
+    let stats = slimadam::obs::chrome::export_dir(&dir, &out)?;
+    println!(
+        "exported {} events from {} trace file(s) to {}{}",
+        stats.events,
+        stats.files,
+        out.display(),
+        if stats.torn > 0 {
+            format!(" ({} torn tail(s) recovered)", stats.torn)
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
+}
+
+/// `slimadam obs report [--dir d]`: merge the `metrics-*.json` registry
+/// snapshots and roll up span kinds from the `trace-*.jsonl` files into
+/// one table (DESIGN.md §15).
+fn cmd_obs(args: &Args) -> Result<()> {
+    if args.flag("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help("slimadam", "obs <report>", "observability report from trace/metrics files", &[
+                OptSpec { name: "dir", help: "trace directory to read", default: Some("results/trace"), is_flag: false },
+            ])
+        );
+        return Ok(());
+    }
+    let action = args.require_positional(0, "action (report)")?;
+    anyhow::ensure!(action == "report", "unknown obs action {action:?} — try report");
+    let dir = std::path::PathBuf::from(args.str_or("dir", "results/trace"));
+    let report = slimadam::obs::report::build(&dir)?;
+    print!("{report}");
+    Ok(())
+}
+
+/// `slimadam bench promote`: rewrite the committed bench-regression
+/// baseline from the latest `BENCH_native.json`, clearing the bootstrap
+/// `provisional` marker so the CI gate arms for real.
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.flag("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help("slimadam", "bench <promote>", "bench baseline management", &[
+                OptSpec { name: "summary", help: "fresh summary to promote", default: Some("results/bench/BENCH_native.json"), is_flag: false },
+                OptSpec { name: "baseline", help: "baseline file to rewrite", default: Some("results/bench/BENCH_baseline.json"), is_flag: false },
+            ])
+        );
+        return Ok(());
+    }
+    let action = args.require_positional(0, "action (promote)")?;
+    anyhow::ensure!(action == "promote", "unknown bench action {action:?} — try promote");
+    let summary = std::path::PathBuf::from(
+        args.str_or("summary", "results/bench/BENCH_native.json"),
+    );
+    let baseline = std::path::PathBuf::from(
+        args.str_or("baseline", "results/bench/BENCH_baseline.json"),
+    );
+    slimadam::benchkit::promote_baseline(&summary, &baseline)?;
+    println!(
+        "promoted {} -> {} (provisional marker cleared)",
+        summary.display(),
+        baseline.display()
+    );
     Ok(())
 }
 

@@ -1,0 +1,150 @@
+//! Chrome `trace_event` exporter — `slimadam trace export --chrome`.
+//!
+//! Converts the flight recorder's `trace-<pid>.jsonl` files into the
+//! Chrome trace-event JSON format (`{"traceEvents":[...]}`) understood by
+//! `chrome://tracing` and Perfetto, so a whole sweep — compiles, dispatch
+//! groups, batched steps, evals, store appends — renders as a timeline per
+//! worker thread.
+//!
+//! Input files are read under [`Tolerance::TornTail`]: a SIGKILLed run's
+//! torn final line is skipped, everything before it exports.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::runstore::reader::{read_stream_file, scan_jsonl, RowView, Tolerance};
+
+/// Summary of one export pass.
+#[derive(Debug, Default)]
+pub struct ExportStats {
+    pub files: usize,
+    pub events: usize,
+    pub torn: usize,
+}
+
+fn event_from_row(row: &RowView<'_>, pid: u64) -> Option<Value> {
+    let kind = row.str("kind")?;
+    if kind == "trace_footer" {
+        return None;
+    }
+    let ts = row.f64("ts")?;
+    let dur = row.f64("dur").unwrap_or(0.0);
+    let tid = row.usize("tid").unwrap_or(0);
+    let name = match row.str("name") {
+        Some(n) if !n.is_empty() => format!("{kind}:{n}"),
+        _ => kind.to_string(),
+    };
+    let mut ev = Value::obj();
+    ev.set("name", name)
+        .set("cat", kind)
+        // durationless rows become instant events ("i"), spans complete
+        // events ("X"); timestamps are microseconds in the chrome format
+        .set("ph", if dur > 0.0 { "X" } else { "i" })
+        .set("ts", ts / 1e3)
+        .set("pid", pid as usize)
+        .set("tid", tid);
+    if dur > 0.0 {
+        ev.set("dur", dur / 1e3);
+    } else {
+        ev.set("s", "t"); // instant scope: thread
+    }
+    let mut args = Value::obj();
+    for (k, _) in row.fields.iter() {
+        let k: &str = k;
+        if matches!(k, "kind" | "ts" | "dur" | "tid" | "name") {
+            continue;
+        }
+        if let Some(n) = row.f64(k) {
+            args.set(k, n);
+        } else if let Some(s) = row.str(k) {
+            args.set(k, s);
+        }
+    }
+    ev.set("args", args);
+    Some(ev)
+}
+
+/// Convert every `trace-*.jsonl` under `dir` into one Chrome trace file at
+/// `out`. The `<pid>` in each file name becomes the chrome `pid` so
+/// multi-process sweeps stay separable.
+pub fn export_dir(dir: &Path, out: &Path) -> Result<ExportStats> {
+    let mut stats = ExportStats::default();
+    let mut events: Vec<Value> = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading trace dir {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("trace-") && n.ends_with(".jsonl"))
+        })
+        .collect();
+    entries.sort();
+    if entries.is_empty() {
+        bail!("no trace-*.jsonl files in {dir:?} — run with --trace first");
+    }
+    for path in entries {
+        stats.files += 1;
+        let pid: u64 = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .and_then(|s| s.strip_prefix("trace-"))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let text = read_stream_file(&path)?;
+        let scan = scan_jsonl(&text, Tolerance::TornTail, |_, row| {
+            if let Some(ev) = event_from_row(&row, pid) {
+                events.push(ev);
+            }
+            Ok(())
+        })
+        .with_context(|| format!("scanning {path:?}"))?;
+        stats.torn += scan.torn;
+    }
+    stats.events = events.len();
+    let mut doc = Value::obj();
+    doc.set("traceEvents", Value::Arr(events))
+        .set("displayTimeUnit", "ms");
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(out, doc.dump())
+        .with_context(|| format!("writing {out:?}"))?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_tolerates_torn_tail() {
+        let dir = std::env::temp_dir()
+            .join(format!("slimadam_obs_chrome_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("trace-123.jsonl"),
+            "{\"kind\":\"step\",\"ts\":1000.0,\"dur\":500.0,\"tid\":1,\
+             \"name\":\"mlp\",\"step\":0}\n\
+             {\"kind\":\"cache_hit\",\"ts\":2000.0,\"dur\":0.0,\"tid\":1}\n\
+             {\"kind\":\"step\",\"ts\":3000.0,\"du",
+        )
+        .unwrap();
+        let out = dir.join("chrome.json");
+        let stats = export_dir(&dir, &out).unwrap();
+        assert_eq!((stats.files, stats.events, stats.torn), (1, 2, 1));
+        let doc = Value::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        let field = |v: &Value, k: &str| v.get(k).unwrap().clone();
+        assert_eq!(field(&evs[0], "name").as_str().unwrap(), "step:mlp");
+        assert_eq!(field(&evs[0], "ph").as_str().unwrap(), "X");
+        assert_eq!(field(&evs[0], "pid").as_usize().unwrap(), 123);
+        assert_eq!(field(&evs[1], "ph").as_str().unwrap(), "i");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

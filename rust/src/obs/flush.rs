@@ -1,0 +1,152 @@
+//! Background trace flusher (DESIGN.md §15).
+//!
+//! One thread, started by [`start_tracing`], wakes every ~50 ms, drains
+//! every registered span ring, and appends one JSONL row per span to
+//! `results/trace/trace-<pid>.jsonl` through the line-atomic
+//! [`crate::metrics::JsonlWriter`] — so a crash (even `SIGKILL` mid-flush)
+//! tears at most the final line, and the file always re-opens under
+//! `runstore::reader::Tolerance::TornTail`.
+//!
+//! [`stop_tracing`] flips the enabled flag off, joins the flusher after a
+//! final drain, writes a `metrics-<pid>.json` registry snapshot next to
+//! the trace, and appends a trace footer row (span/drop totals) so
+//! saturation is visible in the artifact itself.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::json::Value;
+use crate::metrics::JsonlWriter;
+
+use super::ring;
+use super::span::Span;
+
+/// Flusher wake cadence. Rings absorb bursts between passes; see
+/// [`ring::DEFAULT_CAPACITY`] for the resulting drop threshold.
+const FLUSH_INTERVAL: Duration = Duration::from_millis(50);
+
+struct Flusher {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<u64>,
+    dir: PathBuf,
+}
+
+fn state() -> &'static Mutex<Option<Flusher>> {
+    static STATE: OnceLock<Mutex<Option<Flusher>>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(None))
+}
+
+/// The directory the live (or last) tracing session writes into, if any.
+pub fn trace_dir() -> Option<PathBuf> {
+    state().lock().unwrap().as_ref().map(|f| f.dir.clone())
+}
+
+/// Default trace output directory.
+pub fn default_dir() -> PathBuf {
+    PathBuf::from("results").join("trace")
+}
+
+fn drain_all(writer: &mut JsonlWriter, buf: &mut Vec<Span>) -> u64 {
+    let mut written = 0u64;
+    for r in ring::all_rings() {
+        buf.clear();
+        r.drain(buf);
+        for s in buf.iter() {
+            if writer.write(&s.to_json(r.tid())).is_ok() {
+                written += 1;
+            }
+        }
+    }
+    ring::retire_closed();
+    written
+}
+
+/// Enable span tracing and start the background flusher writing
+/// `trace-<pid>.jsonl` under `dir`. Idempotent: a second call while live
+/// is a no-op (the first session's sink wins).
+pub fn start_tracing(dir: impl AsRef<Path>) -> Result<()> {
+    let mut st = state().lock().unwrap();
+    if st.is_some() {
+        super::set_enabled(true);
+        return Ok(());
+    }
+    let dir = dir.as_ref().to_path_buf();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("trace-{}.jsonl", std::process::id()));
+    let mut writer = JsonlWriter::append(&path)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = std::thread::Builder::new()
+        .name("obs-flusher".into())
+        .spawn(move || {
+            let mut buf: Vec<Span> = Vec::new();
+            let mut written = 0u64;
+            while !stop2.load(Ordering::Acquire) {
+                written += drain_all(&mut writer, &mut buf);
+                std::thread::sleep(FLUSH_INTERVAL);
+            }
+            // final pass: spans emitted up to the stop flag land on disk
+            written += drain_all(&mut writer, &mut buf);
+            let mut footer = Value::obj();
+            footer
+                .set("kind", "trace_footer")
+                .set("spans", written as usize)
+                .set("dropped", ring::total_dropped() as usize);
+            let _ = writer.write(&footer);
+            written
+        })?;
+    *st = Some(Flusher { stop, handle, dir });
+    drop(st);
+    super::set_enabled(true);
+    Ok(())
+}
+
+/// Disable tracing, join the flusher (final drain + footer row), and write
+/// the metrics-registry snapshot to `metrics-<pid>.json`. Returns the
+/// number of spans flushed over the session (0 if tracing was never on).
+pub fn stop_tracing() -> Result<u64> {
+    super::set_enabled(false);
+    let flusher = state().lock().unwrap().take();
+    let Some(Flusher { stop, handle, dir }) = flusher else {
+        return Ok(0);
+    };
+    stop.store(true, Ordering::Release);
+    let written = handle.join().unwrap_or(0);
+    let snap_path = dir.join(format!("metrics-{}.json", std::process::id()));
+    std::fs::write(&snap_path, super::registry::snapshot().dump_pretty())?;
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanKind;
+    use crate::runstore::reader::{scan_jsonl, Tolerance};
+
+    #[test]
+    fn start_emit_stop_writes_parseable_trace() {
+        let dir = std::env::temp_dir()
+            .join(format!("slimadam_obs_flush_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        start_tracing(&dir).unwrap();
+        let label = crate::obs::intern("flush-test");
+        for i in 0..32u64 {
+            crate::obs::emit_instant(SpanKind::Step, label, [i, 0, 0, 0]);
+        }
+        let written = stop_tracing().unwrap();
+        assert!(written >= 32, "flushed {written} < 32 spans");
+        let path = dir.join(format!("trace-{}.jsonl", std::process::id()));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stats = scan_jsonl(&text, Tolerance::Strict, |_, _| Ok(())).unwrap();
+        assert!(stats.rows >= 33); // spans + footer
+        assert!(text.contains("trace_footer"));
+        let snap = dir.join(format!("metrics-{}.json", std::process::id()));
+        assert!(snap.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

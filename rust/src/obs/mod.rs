@@ -1,0 +1,156 @@
+//! Flight recorder — structured tracing, per-phase metrics, and live SNR
+//! telemetry (DESIGN.md §15).
+//!
+//! Three pieces, all in-repo (no new dependencies):
+//!
+//! * **Span tracing** ([`span`], [`ring`], [`flush`]): typed spans with
+//!   monotonic timestamps pushed into lock-free per-thread ring buffers,
+//!   drained by a background flusher into line-atomic
+//!   `results/trace/trace-<pid>.jsonl` files. [`chrome`] converts them to
+//!   Chrome `trace_event` JSON for `chrome://tracing` / Perfetto.
+//! * **Metrics registry** ([`registry`]): named atomic counters / gauges /
+//!   histograms replacing the scattered ad-hoc counters. Always on (plain
+//!   atomics, no I/O); snapshotted into `RunSummary.metrics` and the
+//!   `slimadam obs report` table.
+//! * **SNR telemetry** ([`telemetry`]): opt-in `--telemetry snr[:every_n]`
+//!   train-loop tap streaming per-tensor SNR + compressible-fraction rows
+//!   into the trace stream — the signal the ROADMAP item 5 controller
+//!   consumes.
+//!
+//! ## Identity neutrality
+//!
+//! Tracing observes, never steers: no code path reads a span, a metric, or
+//! the enabled flag to make a training decision, so run fingerprints are
+//! bit-identical with tracing on or off (enforced by
+//! `rust/tests/obs_trace.rs`).
+//!
+//! ## Disabled cost
+//!
+//! When tracing is off every emission site reduces to one relaxed atomic
+//! load + branch ([`enabled`]); no timestamps are taken and no spans are
+//! constructed. The `fused_step_traced` bench row gates the *enabled* cost
+//! at ≤ 5% over the untraced fused step.
+
+pub mod chrome;
+pub mod flush;
+pub mod registry;
+pub mod report;
+pub mod ring;
+pub mod span;
+pub mod telemetry;
+
+pub use flush::{start_tracing, stop_tracing, trace_dir};
+pub use ring::SpanRing;
+pub use span::{Span, SpanKind};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Global tracing switch. All span emission funnels through [`enabled`];
+/// flipping this on/off is the entire cost model of the disabled path.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is span tracing live? One relaxed load + branch — the documented
+/// disabled-path overhead (ISSUE 7 acceptance).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub(crate) fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Monotonic nanoseconds since the first observability call in this
+/// process. Spans across threads share this epoch, so a merged trace
+/// orders correctly.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Start timestamp helper: a clock read when tracing is live, 0 (and no
+/// clock read) when it is not. Pair with [`emit`]/[`Span::close`].
+#[inline]
+pub fn clock() -> u64 {
+    if enabled() {
+        now_ns()
+    } else {
+        0
+    }
+}
+
+/// Emit a span into the current thread's ring (drops it, counted, if the
+/// ring is full or tracing is disabled).
+#[inline]
+pub fn emit(span: Span) {
+    if !enabled() {
+        return;
+    }
+    ring::push_current_thread(span);
+}
+
+/// Emit an instantaneous (zero-duration) span stamped now.
+#[inline]
+pub fn emit_instant(kind: SpanKind, label: u32, args: [u64; 4]) {
+    if !enabled() {
+        return;
+    }
+    let ts = now_ns();
+    ring::push_current_thread(Span { kind, start_ns: ts, dur_ns: 0, label, args });
+}
+
+/// Emit a duration span opened at `start_ns` (from [`clock`]) and closed
+/// now. No-op when tracing is off.
+#[inline]
+pub fn emit_since(kind: SpanKind, label: u32, start_ns: u64, args: [u64; 4]) {
+    if !enabled() {
+        return;
+    }
+    let now = now_ns();
+    ring::push_current_thread(Span {
+        kind,
+        start_ns,
+        dur_ns: now.saturating_sub(start_ns),
+        label,
+        args,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Label interner
+// ---------------------------------------------------------------------------
+
+/// Sentinel label id for "no label".
+pub const NO_LABEL: u32 = u32::MAX;
+
+fn interner() -> &'static Mutex<Vec<String>> {
+    static INTERNER: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    INTERNER.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Intern a label string, returning its stable id. Intended for setup-time
+/// call sites (engine/job construction); hot loops cache the returned id.
+pub fn intern(label: &str) -> u32 {
+    let mut v = interner().lock().unwrap();
+    if let Some(i) = v.iter().position(|s| s == label) {
+        return i as u32;
+    }
+    v.push(label.to_string());
+    (v.len() - 1) as u32
+}
+
+/// Resolve an interned id back to its string (empty for [`NO_LABEL`] or
+/// unknown ids).
+pub fn label_str(id: u32) -> String {
+    if id == NO_LABEL {
+        return String::new();
+    }
+    interner()
+        .lock()
+        .unwrap()
+        .get(id as usize)
+        .cloned()
+        .unwrap_or_default()
+}

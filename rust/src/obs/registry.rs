@@ -1,0 +1,262 @@
+//! Named metrics registry — atomic counters, gauges, and log2 histograms
+//! (DESIGN.md §15).
+//!
+//! Unlike span tracing, the registry is *always on*: a metric update is a
+//! single relaxed atomic RMW with no I/O and no allocation after the first
+//! lookup, so the scattered ad-hoc counters (`exec_cache` hits/misses,
+//! scheduler progress) fold into it without a perf cliff. Call sites cache
+//! the `Arc` handle; the global name → metric map is only locked at
+//! registration/snapshot time.
+//!
+//! Snapshots serialize to a flat JSON object (name → value, histograms as
+//! `{count, sum, mean, p50, max}`) consumed by `RunSummary.metrics`, the
+//! end-of-sweep summary line, and `slimadam obs report`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::json::Value;
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-value-wins signed gauge (queue depths, active workers).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Power-of-two-bucket histogram over `u64` observations (bucket `i`
+/// counts values with `ilog2(v) == i`; 0 lands in bucket 0). Cheap enough
+/// for per-group batch occupancy and per-step latencies; quantiles are
+/// bucket-resolution approximations.
+pub struct Histogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        let b = if v == 0 { 0 } else { v.ilog2() as usize };
+        self.buckets[b.min(63)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Bucket-resolution median: the representative value (2^i) of the
+    /// bucket containing the middle observation.
+    pub fn p50(&self) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen * 2 >= n {
+                return 1u64 << i;
+            }
+        }
+        0
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Metric>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Get or register the counter `name`. Cache the handle at hot call sites.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut reg = registry().lock().unwrap();
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+    {
+        Metric::Counter(c) => c.clone(),
+        _ => panic!("metric {name:?} already registered with another type"),
+    }
+}
+
+/// Get or register the gauge `name`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut reg = registry().lock().unwrap();
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+    {
+        Metric::Gauge(g) => g.clone(),
+        _ => panic!("metric {name:?} already registered with another type"),
+    }
+}
+
+/// Get or register the histogram `name`.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut reg = registry().lock().unwrap();
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::default())))
+    {
+        Metric::Histogram(h) => h.clone(),
+        _ => panic!("metric {name:?} already registered with another type"),
+    }
+}
+
+/// Snapshot every registered metric into a flat JSON object. Histograms
+/// expand to `<name>` → `{count, sum, mean, p50, max}`.
+pub fn snapshot() -> Value {
+    let reg = registry().lock().unwrap();
+    let mut out = Value::obj();
+    for (name, m) in reg.iter() {
+        match m {
+            Metric::Counter(c) => {
+                out.set(name.as_str(), c.get() as usize);
+            }
+            Metric::Gauge(g) => {
+                out.set(name.as_str(), g.get() as f64);
+            }
+            Metric::Histogram(h) => {
+                let mut v = Value::obj();
+                v.set("count", h.count() as usize)
+                    .set("sum", h.sum() as usize)
+                    .set("mean", h.mean())
+                    .set("p50", h.p50() as usize)
+                    .set("max", h.max() as usize);
+                out.set(name.as_str(), v);
+            }
+        }
+    }
+    out
+}
+
+/// Zero every registered metric (per-sweep scoping, test isolation).
+pub fn reset_all() {
+    let reg = registry().lock().unwrap();
+    for m in reg.values() {
+        match m {
+            Metric::Counter(c) => c.reset(),
+            Metric::Gauge(g) => g.reset(),
+            Metric::Histogram(h) => h.reset(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let c = counter("test.reg.counter");
+        c.reset();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(Arc::as_ptr(&c), Arc::as_ptr(&counter("test.reg.counter")));
+        let g = gauge("test.reg.gauge");
+        g.set(-3);
+        g.add(5);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = histogram("test.reg.hist");
+        h.reset();
+        for v in [1u64, 2, 2, 4, 4, 4, 4, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum(), 1021);
+        assert!((h.mean() - 127.625).abs() < 1e-9);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.p50(), 4); // middle obs lives in the 4..8 bucket
+    }
+
+    #[test]
+    fn snapshot_contains_registered_names() {
+        counter("test.reg.snap").add(7);
+        let snap = snapshot();
+        assert!(snap.get("test.reg.snap").unwrap().as_usize().unwrap() >= 7);
+    }
+}

@@ -1,0 +1,242 @@
+//! `slimadam obs report` — one table from a trace directory
+//! (DESIGN.md §15).
+//!
+//! Merges every `metrics-<pid>.json` registry snapshot (counters and
+//! gauges sum across processes; histograms merge count/sum/max and
+//! recompute the mean — the per-process p50 survives only when a single
+//! snapshot is present) and rolls the `trace-<pid>.jsonl` span streams up
+//! to per-kind counts and total durations. Trace files are read under
+//! [`Tolerance::TornTail`], so a SIGKILLed run still reports.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::runstore::reader::{read_stream_file, scan_jsonl, Tolerance};
+
+fn num(v: &Value) -> Option<f64> {
+    match v {
+        Value::Num(n) => Some(*n),
+        _ => None,
+    }
+}
+
+/// Merge one registry snapshot into the accumulated metric map.
+fn merge_into(acc: &mut BTreeMap<String, Value>, snap: &Value) {
+    let Value::Obj(obj) = snap else { return };
+    for (k, v) in obj {
+        match acc.get_mut(k) {
+            None => {
+                acc.insert(k.clone(), v.clone());
+            }
+            Some(Value::Num(a)) => {
+                if let Some(b) = num(v) {
+                    *a += b;
+                }
+            }
+            Some(Value::Obj(a)) => {
+                let Value::Obj(b) = v else { continue };
+                for key in ["count", "sum"] {
+                    let add = b.get(key).and_then(num).unwrap_or(0.0);
+                    if let Some(Value::Num(x)) = a.get_mut(key) {
+                        *x += add;
+                    }
+                }
+                let bmax = b.get("max").and_then(num).unwrap_or(0.0);
+                if let Some(Value::Num(x)) = a.get_mut("max") {
+                    if bmax > *x {
+                        *x = bmax;
+                    }
+                }
+                let count = a.get("count").and_then(num).unwrap_or(0.0);
+                let sum = a.get("sum").and_then(num).unwrap_or(0.0);
+                if count > 0.0 {
+                    a.insert("mean".into(), Value::Num(sum / count));
+                }
+                // quantiles don't merge across snapshots
+                a.remove("p50");
+            }
+            _ => {}
+        }
+    }
+}
+
+fn fmt_num(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n:.3}")
+    }
+}
+
+fn fmt_dur(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+#[derive(Default)]
+struct KindAgg {
+    count: u64,
+    total_dur_ns: f64,
+}
+
+fn files_with_prefix(dir: &Path, prefix: &str, suffix: &str) -> Result<Vec<std::path::PathBuf>> {
+    let mut out: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading trace dir {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(prefix) && n.ends_with(suffix))
+        })
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+/// Build the `obs report` table for a trace directory.
+pub fn build(dir: &Path) -> Result<String> {
+    let metric_files = files_with_prefix(dir, "metrics-", ".json")?;
+    let trace_files = files_with_prefix(dir, "trace-", ".jsonl")?;
+    if metric_files.is_empty() && trace_files.is_empty() {
+        bail!("no metrics-*.json or trace-*.jsonl in {dir:?} — run with --trace first");
+    }
+
+    let mut metrics: BTreeMap<String, Value> = BTreeMap::new();
+    for path in &metric_files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let snap = Value::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        merge_into(&mut metrics, &snap);
+    }
+
+    let mut kinds: BTreeMap<String, KindAgg> = BTreeMap::new();
+    let mut torn = 0usize;
+    for path in &trace_files {
+        let text = read_stream_file(path)?;
+        let scan = scan_jsonl(&text, Tolerance::TornTail, |_, row| {
+            if let Some(kind) = row.str("kind") {
+                if kind != "trace_footer" {
+                    let agg = kinds.entry(kind.to_string()).or_default();
+                    agg.count += 1;
+                    agg.total_dur_ns += row.f64("dur").unwrap_or(0.0);
+                }
+            }
+            Ok(())
+        })
+        .with_context(|| format!("scanning {path:?}"))?;
+        torn += scan.torn;
+    }
+
+    let mut out = format!(
+        "observability report — {} ({} metrics file(s), {} trace file(s){})\n",
+        dir.display(),
+        metric_files.len(),
+        trace_files.len(),
+        if torn > 0 {
+            format!(", {torn} torn tail(s) recovered")
+        } else {
+            String::new()
+        }
+    );
+    if !metrics.is_empty() {
+        out.push_str(&format!("\n{:<36} {}\n", "metric", "value"));
+        for (name, v) in &metrics {
+            let rendered = match v {
+                Value::Num(n) => fmt_num(*n),
+                Value::Obj(h) => {
+                    let field = |k: &str| h.get(k).and_then(num);
+                    let mut parts = Vec::new();
+                    if let Some(c) = field("count") {
+                        parts.push(format!("count {}", fmt_num(c)));
+                    }
+                    if let Some(m) = field("mean") {
+                        parts.push(format!("mean {m:.2}"));
+                    }
+                    if let Some(p) = field("p50") {
+                        parts.push(format!("p50 {}", fmt_num(p)));
+                    }
+                    if let Some(m) = field("max") {
+                        parts.push(format!("max {}", fmt_num(m)));
+                    }
+                    parts.join("  ")
+                }
+                other => other.dump(),
+            };
+            out.push_str(&format!("{name:<36} {rendered}\n"));
+        }
+    }
+    if !kinds.is_empty() {
+        out.push_str(&format!("\n{:<20} {:>8}   {}\n", "span kind", "spans", "total"));
+        for (kind, agg) in &kinds {
+            out.push_str(&format!(
+                "{:<20} {:>8}   {}\n",
+                kind,
+                agg.count,
+                fmt_dur(agg.total_dur_ns)
+            ));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_merges_snapshots_and_rolls_up_spans() {
+        let dir = std::env::temp_dir()
+            .join(format!("slimadam_obs_report_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("metrics-1.json"),
+            "{\"exec_cache.hits\":3,\"batch.occupancy\":\
+             {\"count\":2,\"sum\":6,\"mean\":3.0,\"p50\":4,\"max\":4}}",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("metrics-2.json"),
+            "{\"exec_cache.hits\":5,\"batch.occupancy\":\
+             {\"count\":2,\"sum\":10,\"mean\":5.0,\"p50\":4,\"max\":8}}",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("trace-1.jsonl"),
+            "{\"kind\":\"step\",\"ts\":1.0,\"dur\":1000.0,\"tid\":1}\n\
+             {\"kind\":\"step\",\"ts\":2.0,\"dur\":2000.0,\"tid\":1}\n\
+             {\"kind\":\"trace_footer\",\"spans\":2,\"dropped\":0}\n",
+        )
+        .unwrap();
+        let report = build(&dir).unwrap();
+        assert!(report.contains("exec_cache.hits"), "{report}");
+        assert!(report.contains("8"), "hits must sum 3+5:\n{report}");
+        assert!(report.contains("count 4"), "occupancy count merges:\n{report}");
+        assert!(report.contains("max 8"), "{report}");
+        assert!(!report.contains("trace_footer"), "{report}");
+        assert!(report.contains("step"), "{report}");
+        assert!(report.contains("3.00 µs"), "total step dur:\n{report}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dir_errors() {
+        let dir = std::env::temp_dir()
+            .join(format!("slimadam_obs_report_empty_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(build(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

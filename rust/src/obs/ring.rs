@@ -1,0 +1,285 @@
+//! Lock-free per-thread span rings (DESIGN.md §15).
+//!
+//! Each emitting thread owns one bounded single-producer / single-consumer
+//! ring: the owning thread is the only producer, the background flusher is
+//! the only consumer (serialized by the flusher's drain lock). A push is
+//! two atomic loads, one slot store, and one release store — no CAS, no
+//! mutex, no allocation — so tracing stays off the training hot path.
+//!
+//! **Overflow contract:** when a ring is full the span is *dropped* and the
+//! ring's `dropped` counter is bumped — producers never block and never
+//! overwrite unflushed spans. The flusher reports cumulative drops per ring
+//! in the trace footer, so a saturated trace is detectable, never silently
+//! truncated mid-file.
+//!
+//! Rings of exited threads (the intra-op pool spawns short-lived scoped
+//! workers) are marked closed on thread exit; the flusher drains them one
+//! last time and retires them from the registry.
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::span::{Span, SpanKind};
+
+/// Spans buffered per thread between flusher passes. At the default 50 ms
+/// flush cadence this absorbs ~80k spans/s per thread before dropping.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Bounded SPSC span ring. Producer: the owning thread, via
+/// [`SpanRing::push`]. Consumer: the flusher, via [`SpanRing::drain`].
+pub struct SpanRing {
+    slots: Box<[UnsafeCell<Span>]>,
+    /// Next write index (monotonic; slot = `head % cap`). Producer-owned.
+    head: AtomicUsize,
+    /// Next read index (monotonic). Consumer-owned.
+    tail: AtomicUsize,
+    /// Spans rejected because the ring was full.
+    dropped: AtomicU64,
+    /// Producer thread tag carried into trace rows.
+    tid: u64,
+    /// Set when the owning thread exits; the flusher retires the ring
+    /// after a final drain.
+    closed: AtomicBool,
+}
+
+// Slots are only written by the producer at indices the consumer has not
+// yet claimed (head/tail ordering below), and vice versa — the classic
+// SPSC argument — so sharing the UnsafeCell slab across the two threads
+// is sound.
+unsafe impl Sync for SpanRing {}
+unsafe impl Send for SpanRing {}
+
+impl SpanRing {
+    pub fn new(tid: u64, capacity: usize) -> SpanRing {
+        let filler = Span {
+            kind: SpanKind::Step,
+            start_ns: 0,
+            dur_ns: 0,
+            label: super::NO_LABEL,
+            args: [0; 4],
+        };
+        SpanRing {
+            slots: (0..capacity.max(2))
+                .map(|_| UnsafeCell::new(filler))
+                .collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            tid,
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn tid(&self) -> u64 {
+        self.tid
+    }
+
+    /// Cumulative spans dropped at overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+    }
+
+    /// Producer side (owning thread only). Returns `false` — and counts
+    /// the drop — when the ring is full.
+    pub fn push(&self, span: Span) -> bool {
+        let cap = self.slots.len();
+        let head = self.head.load(Ordering::Relaxed);
+        // Acquire pairs with the consumer's release store of `tail`: once
+        // we observe the freed slots we may reuse them.
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= cap {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        unsafe { *self.slots[head % cap].get() = span };
+        // Release publishes the slot write before the new head.
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer side (flusher only — callers must hold the flusher's drain
+    /// lock so the single-consumer invariant holds). Appends all pending
+    /// spans to `out` and frees their slots.
+    pub fn drain(&self, out: &mut Vec<Span>) -> usize {
+        let cap = self.slots.len();
+        let tail = self.tail.load(Ordering::Relaxed);
+        // Acquire pairs with the producer's release store of `head`.
+        let head = self.head.load(Ordering::Acquire);
+        let n = head.wrapping_sub(tail);
+        out.reserve(n);
+        let mut i = tail;
+        while i != head {
+            out.push(unsafe { *self.slots[i % cap].get() });
+            i = i.wrapping_add(1);
+        }
+        // Release publishes the reads before freeing the slots for reuse.
+        self.tail.store(head, Ordering::Release);
+        n
+    }
+
+    /// Pending (unflushed) span count — approximate under concurrency.
+    pub fn len(&self) -> usize {
+        self.head
+            .load(Ordering::Acquire)
+            .wrapping_sub(self.tail.load(Ordering::Acquire))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring registry + thread-local producer handle
+// ---------------------------------------------------------------------------
+
+fn rings() -> &'static Mutex<Vec<Arc<SpanRing>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<SpanRing>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Snapshot of all live rings for the flusher.
+pub(crate) fn all_rings() -> Vec<Arc<SpanRing>> {
+    rings().lock().unwrap().clone()
+}
+
+/// Drop rings that are closed *and* fully drained (called by the flusher
+/// after a pass, so short-lived intra-op worker threads don't leak rings).
+pub(crate) fn retire_closed() {
+    rings()
+        .lock()
+        .unwrap()
+        .retain(|r| !(r.is_closed() && r.is_empty()));
+}
+
+/// Total spans dropped across all rings that are still registered.
+pub fn total_dropped() -> u64 {
+    rings().lock().unwrap().iter().map(|r| r.dropped()).sum()
+}
+
+struct RingGuard {
+    ring: Arc<SpanRing>,
+}
+
+impl Drop for RingGuard {
+    fn drop(&mut self) {
+        // Clear the raw producer pointer *before* closing: once closed the
+        // flusher may retire the ring (dropping the registry's Arc), and a
+        // stale pointer from a late TLS-destructor push would dangle.
+        let _ = CURRENT.try_with(|c| c.set(std::ptr::null()));
+        self.ring.close();
+    }
+}
+
+thread_local! {
+    static CURRENT: Cell<*const SpanRing> = const { Cell::new(std::ptr::null()) };
+    static GUARD: std::cell::RefCell<Option<RingGuard>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Push a span into this thread's ring, registering a fresh ring on first
+/// use. Called only behind [`super::enabled`].
+pub(crate) fn push_current_thread(span: Span) {
+    let Ok(ptr) = CURRENT.try_with(|c| c.get()) else {
+        return; // thread TLS is tearing down — drop the span
+    };
+    if !ptr.is_null() {
+        // The ring outlives the pointer: the registry holds one Arc and
+        // the thread-local guard another, and the guard clears on drop.
+        unsafe { &*ptr }.push(span);
+        return;
+    }
+    let ring = Arc::new(SpanRing::new(
+        NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        DEFAULT_CAPACITY,
+    ));
+    rings().lock().unwrap().push(ring.clone());
+    ring.push(span);
+    let registered = CURRENT
+        .try_with(|c| c.set(Arc::as_ptr(&ring)))
+        .and_then(|_| {
+            GUARD.try_with(|g| *g.borrow_mut() = Some(RingGuard { ring: ring.clone() }))
+        });
+    if registered.is_err() {
+        // Couldn't install the teardown guard — close now so the flusher
+        // drains this one span and retires the ring.
+        let _ = CURRENT.try_with(|c| c.set(std::ptr::null()));
+        ring.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(kind: SpanKind, a0: u64) -> Span {
+        Span {
+            kind,
+            start_ns: a0,
+            dur_ns: 0,
+            label: crate::obs::NO_LABEL,
+            args: [a0, 0, 0, 0],
+        }
+    }
+
+    #[test]
+    fn push_drain_roundtrip() {
+        let r = SpanRing::new(1, 8);
+        for i in 0..5 {
+            assert!(r.push(mk(SpanKind::Step, i)));
+        }
+        let mut out = Vec::new();
+        assert_eq!(r.drain(&mut out), 5);
+        let got: Vec<u64> = out.iter().map(|s| s.args[0]).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_drops_and_counts() {
+        let r = SpanRing::new(1, 4);
+        for i in 0..7 {
+            r.push(mk(SpanKind::Step, i));
+        }
+        assert_eq!(r.dropped(), 3);
+        let mut out = Vec::new();
+        assert_eq!(r.drain(&mut out), 4);
+        // FIFO: the *oldest* spans survive; overflow rejects new ones
+        let got: Vec<u64> = out.iter().map(|s| s.args[0]).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        // after a drain the ring accepts pushes again
+        assert!(r.push(mk(SpanKind::Step, 99)));
+    }
+
+    #[test]
+    fn wraparound_preserves_order() {
+        let r = SpanRing::new(1, 4);
+        let mut out = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..10 {
+            for _ in 0..3 {
+                assert!(r.push(mk(SpanKind::Step, next)));
+                next += 1;
+            }
+            r.drain(&mut out);
+        }
+        let got: Vec<u64> = out.iter().map(|s| s.args[0]).collect();
+        let want: Vec<u64> = (0..30).collect();
+        assert_eq!(got, want);
+    }
+}

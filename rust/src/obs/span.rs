@@ -1,0 +1,193 @@
+//! Typed spans — the flight recorder's unit of record (DESIGN.md §15).
+//!
+//! A [`Span`] is plain old data (`Copy`, no heap) so producers can write it
+//! into a lock-free ring slot with a single store. String context travels
+//! as an interned label id ([`super::intern`]); numeric context rides in
+//! four `u64` args whose meaning is per-kind (f64 values are packed with
+//! `to_bits`). The flusher resolves both into named JSON fields.
+
+use crate::json::Value;
+
+/// Everything the recorder knows how to describe. The taxonomy mirrors the
+/// phases of a sweep: compile & cache, dispatch planning, training steps,
+/// evals, store appends, resume skips, intra-op kernel chunks, and the SNR
+/// telemetry tap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Backend artifact compile (label = artifact name).
+    Compile = 0,
+    /// Executable-cache hit (label = artifact name).
+    CacheHit = 1,
+    /// Executable-cache miss (label = artifact name).
+    CacheMiss = 2,
+    /// One dispatch group planned (label = shard key; args\[0\] = group
+    /// size, args\[1\] = batch cap).
+    PlanGroup = 3,
+    /// One optimizer step, sequential path (label = model; args\[0\] =
+    /// step index).
+    Step = 4,
+    /// One lockstep batched step (label = model; args\[0\] = step index,
+    /// args\[1\] = active lanes, args\[2\] = total lanes).
+    BatchedStep = 5,
+    /// Final-loss eval pass (label = model; args\[0\] = eval batches).
+    Eval = 6,
+    /// One result row appended to a run-store stream (label = file stem;
+    /// args\[0\] = job index).
+    StoreAppend = 7,
+    /// A grid point skipped because the run store already holds it
+    /// (args\[0\] = job index).
+    ResumeSkip = 8,
+    /// One intra-op parallel kernel section (label = kernel name;
+    /// args\[0\] = chunks, args\[1\] = elements).
+    IntraopChunk = 9,
+    /// Per-tensor SNR telemetry row (label = param name; args\[0\] = step,
+    /// args\[1..4\] = f64 bits of SNR at K=fan_out / fan_in / both).
+    Snr = 10,
+    /// Per-probe SNR roll-up (label = model; args\[0\] = step, args\[1\] =
+    /// compressible params, args\[2\] = total params, args\[3\] = f64 bits
+    /// of the compressible fraction).
+    SnrSummary = 11,
+}
+
+impl SpanKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Compile => "compile",
+            SpanKind::CacheHit => "cache_hit",
+            SpanKind::CacheMiss => "cache_miss",
+            SpanKind::PlanGroup => "plan_group",
+            SpanKind::Step => "step",
+            SpanKind::BatchedStep => "batched_step",
+            SpanKind::Eval => "eval",
+            SpanKind::StoreAppend => "store_append",
+            SpanKind::ResumeSkip => "resume_skip",
+            SpanKind::IntraopChunk => "intraop_chunk",
+            SpanKind::Snr => "snr",
+            SpanKind::SnrSummary => "snr_summary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "compile" => SpanKind::Compile,
+            "cache_hit" => SpanKind::CacheHit,
+            "cache_miss" => SpanKind::CacheMiss,
+            "plan_group" => SpanKind::PlanGroup,
+            "step" => SpanKind::Step,
+            "batched_step" => SpanKind::BatchedStep,
+            "eval" => SpanKind::Eval,
+            "store_append" => SpanKind::StoreAppend,
+            "resume_skip" => SpanKind::ResumeSkip,
+            "intraop_chunk" => SpanKind::IntraopChunk,
+            "snr" => SpanKind::Snr,
+            "snr_summary" => SpanKind::SnrSummary,
+            _ => return None,
+        })
+    }
+
+    /// JSON field names for the four numeric args (`""` = unused).
+    /// `"f:<name>"` marks an arg carrying `f64::to_bits` payload.
+    fn arg_names(self) -> [&'static str; 4] {
+        match self {
+            SpanKind::Compile => ["", "", "", ""],
+            SpanKind::CacheHit | SpanKind::CacheMiss => ["", "", "", ""],
+            SpanKind::PlanGroup => ["jobs", "batch_cap", "", ""],
+            SpanKind::Step => ["step", "", "", ""],
+            SpanKind::BatchedStep => ["step", "active", "lanes", ""],
+            SpanKind::Eval => ["batches", "", "", ""],
+            SpanKind::StoreAppend => ["job", "", "", ""],
+            SpanKind::ResumeSkip => ["job", "", "", ""],
+            SpanKind::IntraopChunk => ["chunks", "elems", "", ""],
+            SpanKind::Snr => ["step", "f:fan_out", "f:fan_in", "f:both"],
+            SpanKind::SnrSummary => {
+                ["step", "compressible", "total", "f:fraction"]
+            }
+        }
+    }
+}
+
+/// One recorded event: POD, 56 bytes, written to a ring slot by value.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Monotonic ns since the process trace epoch ([`super::now_ns`]).
+    pub start_ns: u64,
+    /// 0 for instantaneous events.
+    pub dur_ns: u64,
+    /// Interned label id ([`super::intern`]) or [`super::NO_LABEL`].
+    pub label: u32,
+    /// Per-kind numeric payload (see [`SpanKind::arg_names`]).
+    pub args: [u64; 4],
+}
+
+impl Span {
+    /// Serialize to one trace JSONL row. `tid` is the emitting ring's
+    /// thread tag.
+    pub fn to_json(&self, tid: u64) -> Value {
+        let mut v = Value::obj();
+        v.set("kind", self.kind.as_str())
+            .set("ts", self.start_ns as f64)
+            .set("dur", self.dur_ns as f64)
+            .set("tid", tid as usize);
+        let name = super::label_str(self.label);
+        if !name.is_empty() {
+            v.set("name", name);
+        }
+        for (slot, &arg) in self.kind.arg_names().iter().zip(&self.args) {
+            if slot.is_empty() {
+                continue;
+            }
+            if let Some(fname) = slot.strip_prefix("f:") {
+                v.set(fname, f64::from_bits(arg));
+            } else {
+                v.set(slot, arg as usize);
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            SpanKind::Compile,
+            SpanKind::CacheHit,
+            SpanKind::CacheMiss,
+            SpanKind::PlanGroup,
+            SpanKind::Step,
+            SpanKind::BatchedStep,
+            SpanKind::Eval,
+            SpanKind::StoreAppend,
+            SpanKind::ResumeSkip,
+            SpanKind::IntraopChunk,
+            SpanKind::Snr,
+            SpanKind::SnrSummary,
+        ] {
+            assert_eq!(SpanKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(SpanKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn snr_args_pack_f64() {
+        let label = crate::obs::intern("blocks.0.w_q");
+        let s = Span {
+            kind: SpanKind::Snr,
+            start_ns: 10,
+            dur_ns: 0,
+            label,
+            args: [7, 1.5f64.to_bits(), 0.25f64.to_bits(), 3.0f64.to_bits()],
+        };
+        let v = s.to_json(3);
+        assert_eq!(v.get("step").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(v.get("fan_out").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(v.get("fan_in").unwrap().as_f64().unwrap(), 0.25);
+        assert_eq!(v.get("both").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "blocks.0.w_q");
+    }
+}

@@ -1,0 +1,164 @@
+//! Live SNR telemetry — the `--telemetry snr[:every_n]` train-loop tap
+//! (DESIGN.md §15).
+//!
+//! Streams per-tensor SNR triples (Eq. 3, via [`crate::snr::measure`]) and
+//! a per-probe compressible-fraction roll-up into the trace as
+//! [`SpanKind::Snr`] / [`SpanKind::SnrSummary`] rows. This is the
+//! trajectory signal the ROADMAP item 5 controller consumes: it reads the
+//! *live* second moments the paper's offline probe only sees post-hoc.
+//!
+//! The tap is read-only over optimizer state (identity-neutral — it never
+//! perturbs the run) and costs nothing unless both tracing is live and a
+//! cadence was configured.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::optim::Optimizer;
+use crate::runtime::manifest::ParamInfo;
+use crate::snr::measure;
+use crate::tensor::Tensor;
+
+use super::span::{Span, SpanKind};
+
+/// SNR tap cadence in steps; 0 = off.
+static SNR_EVERY: AtomicUsize = AtomicUsize::new(0);
+
+/// Default cadence when `--telemetry snr` is given without `:every_n`.
+pub const DEFAULT_EVERY: usize = 25;
+
+/// Configure the tap (`None` disables it).
+pub fn set_snr_every(every: Option<usize>) {
+    SNR_EVERY.store(every.unwrap_or(0), Ordering::SeqCst);
+}
+
+pub fn snr_every() -> Option<usize> {
+    match SNR_EVERY.load(Ordering::Relaxed) {
+        0 => None,
+        n => Some(n),
+    }
+}
+
+/// Parse the `--telemetry` spec: `snr` or `snr:<every_n>`.
+pub fn parse_spec(spec: &str) -> anyhow::Result<usize> {
+    let (kind, every) = match spec.split_once(':') {
+        Some((k, n)) => (
+            k,
+            n.parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad --telemetry cadence {n:?}"))?,
+        ),
+        None => (spec, DEFAULT_EVERY),
+    };
+    anyhow::ensure!(
+        kind == "snr" && every > 0,
+        "unknown --telemetry spec {spec:?} (expected snr[:every_n])"
+    );
+    Ok(every)
+}
+
+/// Should the tap fire at `step`? One relaxed load on the hot path when
+/// tracing is off or no cadence is set.
+#[inline]
+pub fn active(step: usize) -> bool {
+    if !super::enabled() {
+        return false;
+    }
+    match SNR_EVERY.load(Ordering::Relaxed) {
+        0 => false,
+        n => step > 0 && step % n == 0,
+    }
+}
+
+fn emit_samples<'a>(
+    step: usize,
+    model: u32,
+    samples: impl Iterator<Item = (&'a ParamInfo, crate::snr::SnrSample)>,
+) {
+    let ts = super::now_ns();
+    let mut compressible = 0u64;
+    let mut total = 0u64;
+    for (info, s) in samples {
+        total += 1;
+        let best = s.fan_out.max(s.fan_in).max(s.both);
+        if best >= 1.0 {
+            compressible += 1;
+        }
+        super::emit(Span {
+            kind: SpanKind::Snr,
+            start_ns: ts,
+            dur_ns: 0,
+            label: super::intern(&info.name),
+            args: [
+                step as u64,
+                s.fan_out.to_bits(),
+                s.fan_in.to_bits(),
+                s.both.to_bits(),
+            ],
+        });
+    }
+    if total == 0 {
+        return;
+    }
+    let fraction = compressible as f64 / total as f64;
+    super::emit(Span {
+        kind: SpanKind::SnrSummary,
+        start_ns: ts,
+        dur_ns: super::now_ns().saturating_sub(ts),
+        label: model,
+        args: [step as u64, compressible, total, fraction.to_bits()],
+    });
+}
+
+/// Tap the split path: read each live second moment off the optimizer
+/// (skipping optimizers without an Adam-style V). Call only when
+/// [`active`] returned true.
+pub fn record_opt(
+    step: usize,
+    model: u32,
+    opt: &dyn Optimizer,
+    metas: &[ParamInfo],
+) {
+    emit_samples(
+        step,
+        model,
+        metas.iter().enumerate().filter_map(|(i, info)| {
+            opt.second_moment(i).map(|v| (info, measure(&v, info)))
+        }),
+    );
+}
+
+/// Tap the fused path: measure already-materialized V tensors (from
+/// `TrainEngine::second_moments`). Call only when [`active`] returned true.
+pub fn record_tensors(step: usize, model: u32, vs: &[Tensor], metas: &[ParamInfo]) {
+    emit_samples(
+        step,
+        model,
+        vs.iter().zip(metas).map(|(v, info)| (info, measure(v, info))),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(parse_spec("snr").unwrap(), DEFAULT_EVERY);
+        assert_eq!(parse_spec("snr:7").unwrap(), 7);
+        assert!(parse_spec("snr:0").is_err());
+        assert!(parse_spec("snr:x").is_err());
+        assert!(parse_spec("latency").is_err());
+    }
+
+    #[test]
+    fn inactive_without_tracing_or_cadence() {
+        set_snr_every(None);
+        assert!(!active(10));
+        set_snr_every(Some(5));
+        // tracing may be off in this test process: active() must then be
+        // false regardless of cadence
+        if !crate::obs::enabled() {
+            assert!(!active(10));
+        }
+        set_snr_every(None);
+    }
+}

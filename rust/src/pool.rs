@@ -149,7 +149,12 @@ where
                         }
                         let Some(v) = victim else { break };
                         match deques[v].lock().unwrap().pop_back() {
-                            Some(i) => i,
+                            Some(i) => {
+                                // observability: steal volume feeds the
+                                // end-of-sweep summary + `obs report`
+                                crate::obs::registry::counter("pool.steals").inc();
+                                i
+                            }
                             None => continue,
                         }
                     }

@@ -89,6 +89,7 @@ impl RunEntry {
             memory: None,
             steps_per_s: 0.0,
             stored_fingerprint: Some(self.fingerprint),
+            metrics: None,
         }
     }
 }

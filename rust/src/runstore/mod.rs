@@ -319,6 +319,9 @@ impl RunStore {
             }
             repaired += 1;
         }
+        if repaired > 0 {
+            crate::obs::registry::counter("runstore.tails_repaired").add(repaired as u64);
+        }
         Ok(repaired)
     }
 

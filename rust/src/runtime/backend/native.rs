@@ -2390,6 +2390,7 @@ pub fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Ve
         }
     }
     let workers = crate::pool::intraop_workers();
+    let t0 = crate::obs::clock();
     let partials = crate::pool::parallel_indexed(chunks.len(), workers, |i| {
         let (gi, j0, j1) = chunks[i];
         clip_sq_chunk(&grads[gi], j0, j1, l)
@@ -2399,6 +2400,15 @@ pub fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Ve
         for b in 0..l {
             sq[b] += part[b];
         }
+    }
+    if crate::obs::enabled() {
+        let elems: usize = grads.iter().map(|g| g.len()).sum();
+        crate::obs::emit_since(
+            crate::obs::SpanKind::IntraopChunk,
+            crate::obs::intern("clip_global_norm"),
+            t0,
+            [chunks.len() as u64, elems as u64, 0, 0],
+        );
     }
     let norms: Vec<f64> = sq.iter().map(|s| s.sqrt()).collect();
     for (b, &norm) in norms.iter().enumerate() {
@@ -2576,6 +2586,8 @@ pub fn fused_update_l(
             )
         })
         .collect();
+    let t0 = crate::obs::clock();
+    let n_tensors = items.len();
     crate::pool::parallel_chunks(&mut items, workers, |_, item| {
         let info = &man.params[item.0];
         let k = crate::optim::adamk::effective_k(info, k_modes[item.0]);
@@ -2593,6 +2605,15 @@ pub fn fused_update_l(
             l,
         );
     });
+    if crate::obs::enabled() {
+        let elems: usize = w.iter().map(|wi| wi.len()).sum();
+        crate::obs::emit_since(
+            crate::obs::SpanKind::IntraopChunk,
+            crate::obs::intern("fused_update"),
+            t0,
+            [n_tensors as u64, elems as u64, 0, 0],
+        );
+    }
 }
 
 #[cfg(test)]

@@ -7,6 +7,7 @@ pub mod checkpoint;
 use anyhow::Result;
 
 use crate::data::DataSource;
+use crate::obs::{self, registry, telemetry, SpanKind};
 use crate::optim::{clip_global_norm, Optimizer};
 use crate::runtime::engine::{BatchData, GradEngine, TrainEngine};
 use crate::snr::{ProbeSchedule, SnrProbe};
@@ -124,6 +125,20 @@ fn is_diverged(loss: f32, initial: f32) -> bool {
     !loss.is_finite() || loss > 5.0 * initial + 5.0
 }
 
+/// Intern the model name as a span label only when tracing is live.
+fn obs_label(model_name: &str) -> u32 {
+    if obs::enabled() {
+        obs::intern(model_name)
+    } else {
+        obs::NO_LABEL
+    }
+}
+
+/// Count a divergence exit (one per job that leaves a loop early).
+fn note_divergence() {
+    registry::counter("train.divergence_exits").inc();
+}
+
 /// Split-engine loop: HLO grad_step + Rust optimizer.
 ///
 /// `accum` > 1 averages gradients over that many micro-batches before each
@@ -143,12 +158,14 @@ pub fn train_split(
     let t0 = std::time::Instant::now();
     let man = engine.manifest().clone();
     let clip = man.hypers.map(|h| h.clip_norm).unwrap_or(1.0);
+    let label = obs_label(&man.model_name);
     let mut probe = SnrProbe::new();
     let mut losses = Vec::with_capacity(steps);
     let mut initial = f32::NAN;
     let mut diverged = false;
 
     for t in 1..=steps {
+        let step_t0 = obs::clock();
         // accumulate grads over micro-batches
         let mut loss_acc = 0.0f32;
         let mut grads: Option<Vec<Tensor>> = None;
@@ -184,13 +201,18 @@ pub fn train_split(
         losses.push((t, loss));
         if is_diverged(loss, initial) {
             diverged = true;
+            note_divergence();
             break;
         }
 
         clip_global_norm(&mut grads, clip);
         let lr = schedule.lr(t) as f32;
         opt.step(params, &grads, t, lr);
+        obs::emit_since(SpanKind::Step, label, step_t0, [t as u64, 0, 0, 0]);
 
+        if telemetry::active(t) {
+            telemetry::record_opt(t, label, &*opt, &man.params);
+        }
         if let Some(ps) = &probe_schedule {
             if ps.should_probe(t) {
                 probe.record(t, opt, &man.params);
@@ -199,12 +221,16 @@ pub fn train_split(
     }
 
     // held-out evaluation
+    let eval_t0 = obs::clock();
     let mut eval_loss = 0.0f64;
     let n_eval = if diverged { 0 } else { eval_batches };
     for _ in 0..n_eval {
         let batch = data.eval_batch();
         let (loss, _) = engine.step(params, &batch)?;
         eval_loss += loss as f64;
+    }
+    if n_eval > 0 {
+        obs::emit_since(SpanKind::Eval, label, eval_t0, [n_eval as u64, 0, 0, 0]);
     }
     let eval_loss = if n_eval > 0 {
         eval_loss / n_eval as f64
@@ -226,21 +252,29 @@ pub fn train_fused(
 ) -> Result<RunResult> {
     let t0 = std::time::Instant::now();
     let man = engine.manifest().clone();
+    let label = obs_label(&man.model_name);
     let mut probe = SnrProbe::new();
     let mut losses = Vec::with_capacity(steps);
     let mut initial = f32::NAN;
     let mut diverged = false;
 
     for t in 1..=steps {
+        let step_t0 = obs::clock();
         let batch = data.next_batch();
         let stats = engine.step(&batch, schedule.lr(t) as f32)?;
+        obs::emit_since(SpanKind::Step, label, step_t0, [t as u64, 0, 0, 0]);
         if t == 1 {
             initial = stats.loss;
         }
         losses.push((t, stats.loss));
         if is_diverged(stats.loss, initial) {
             diverged = true;
+            note_divergence();
             break;
+        }
+        if telemetry::active(t) {
+            let vs = engine.second_moments()?;
+            telemetry::record_tensors(t, label, &vs, &man.params);
         }
         if let Some(ps) = &probe_schedule {
             if ps.should_probe(t) {
@@ -297,6 +331,7 @@ pub fn train_split_batch(
     let t0 = std::time::Instant::now();
     let man = engine.manifest().clone();
     let clip = man.hypers.map(|h| h.clip_norm).unwrap_or(1.0);
+    let label = obs_label(&man.model_name);
     let nj = jobs.len();
     let mut losses: Vec<Vec<(usize, f32)>> = (0..nj).map(|_| Vec::with_capacity(steps)).collect();
     let mut initial = vec![f32::NAN; nj];
@@ -307,6 +342,8 @@ pub fn train_split_batch(
         if active.is_empty() {
             break;
         }
+        let step_t0 = obs::clock();
+        let lanes = active.len();
         let mut loss_acc = vec![0.0f32; nj];
         let mut grads_acc: Vec<Option<Vec<Tensor>>> = (0..nj).map(|_| None).collect();
         for _ in 0..accum.max(1) {
@@ -352,6 +389,7 @@ pub fn train_split_batch(
             losses[i].push((t, loss));
             if is_diverged(loss, initial[i]) {
                 diverged[i] = true;
+                note_divergence();
                 continue;
             }
             clip_global_norm(&mut grads, clip);
@@ -361,10 +399,17 @@ pub fn train_split_batch(
             still.push(i);
         }
         active = still;
+        obs::emit_since(
+            SpanKind::BatchedStep,
+            label,
+            step_t0,
+            [t as u64, active.len() as u64, lanes as u64, 0],
+        );
     }
 
     // held-out evaluation: batched across non-diverged jobs, preserving
     // each job's eval_batch call sequence
+    let eval_t0 = obs::clock();
     let mut eval_acc = vec![0.0f64; nj];
     let survivors: Vec<usize> = (0..nj).filter(|&i| !diverged[i]).collect();
     if eval_batches > 0 && !survivors.is_empty() {
@@ -381,6 +426,7 @@ pub fn train_split_batch(
                 eval_acc[survivors[k]] += loss as f64;
             }
         }
+        obs::emit_since(SpanKind::Eval, label, eval_t0, [eval_batches as u64, 0, 0, 0]);
     }
 
     let mut out = Vec::with_capacity(nj);
@@ -424,6 +470,10 @@ pub fn train_fused_batch(
         datas.len(),
         schedules.len()
     );
+    let label = engines
+        .first()
+        .map(|e| obs_label(&e.manifest().model_name))
+        .unwrap_or(obs::NO_LABEL);
     let mut losses: Vec<Vec<(usize, f32)>> = (0..nj).map(|_| Vec::with_capacity(steps)).collect();
     let mut initial = vec![f32::NAN; nj];
     let mut diverged = vec![false; nj];
@@ -433,6 +483,8 @@ pub fn train_fused_batch(
         if active.is_empty() {
             break;
         }
+        let step_t0 = obs::clock();
+        let lanes = active.len();
         let batches: Vec<Vec<BatchData>> =
             active.iter().map(|&i| datas[i].next_batch()).collect();
         let lrs: Vec<f32> = active.iter().map(|&i| schedules[i].lr(t) as f32).collect();
@@ -457,11 +509,18 @@ pub fn train_fused_batch(
             losses[i].push((t, s.loss));
             if is_diverged(s.loss, initial[i]) {
                 diverged[i] = true;
+                note_divergence();
             } else {
                 still.push(i);
             }
         }
         active = still;
+        obs::emit_since(
+            SpanKind::BatchedStep,
+            label,
+            step_t0,
+            [t as u64, active.len() as u64, lanes as u64, 0],
+        );
     }
 
     let mut out: Vec<RunResult> = losses

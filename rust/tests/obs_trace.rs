@@ -1,0 +1,228 @@
+//! Flight-recorder acceptance tests (DESIGN.md §15, ISSUE 7).
+//!
+//! Three contracts: the span rings lose nothing under concurrent
+//! multi-worker emission (and drop — never block — at overflow), a trace
+//! torn mid-line by a crash still parses/exports/reports under
+//! `Tolerance::TornTail`, and tracing is identity-neutral — a traced
+//! sweep (with live SNR telemetry) produces bit-identical fingerprints to
+//! the same sweep untraced.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use slimadam::coordinator::{SweepScheduler, TrainConfig};
+use slimadam::obs::{self, telemetry, Span, SpanKind, SpanRing};
+use slimadam::proptest::{check, prop_assert};
+use slimadam::runstore::reader::{scan_jsonl, Tolerance};
+use slimadam::runtime::backend::BackendSpec;
+
+/// Tracing state (enabled flag, flusher, rings) is process-global, and the
+/// test harness runs `#[test]`s on parallel threads — every test that
+/// starts/stops tracing or asserts on the disabled path serializes here.
+static OBS: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "slimadam_obs_trace_{name}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn span(i: u64) -> Span {
+    Span {
+        kind: SpanKind::Step,
+        start_ns: i,
+        dur_ns: 0,
+        label: obs::NO_LABEL,
+        args: [i, 0, 0, 0],
+    }
+}
+
+/// SPSC rings under production topology — one producer thread per ring,
+/// one consumer draining all rings concurrently: every span emitted below
+/// ring capacity is delivered exactly once, in order, with zero drops.
+#[test]
+fn concurrent_emission_loses_nothing_below_capacity() {
+    const CAP: usize = 512;
+    check(8, |g| {
+        let workers = g.usize(2, 6);
+        let per_worker = g.usize(100, CAP);
+        let rings: Vec<Arc<SpanRing>> = (0..workers)
+            .map(|w| Arc::new(SpanRing::new(w as u64 + 1, CAP)))
+            .collect();
+        let done = AtomicBool::new(false);
+
+        let drained: Vec<Vec<Span>> = std::thread::scope(|s| {
+            let producers: Vec<_> = rings
+                .iter()
+                .map(|r| {
+                    s.spawn(move || {
+                        for i in 0..per_worker as u64 {
+                            r.push(span(i));
+                        }
+                    })
+                })
+                .collect();
+            let consumer = s.spawn(|| {
+                let mut out: Vec<Vec<Span>> = vec![Vec::new(); workers];
+                loop {
+                    let finished = done.load(Ordering::Acquire);
+                    for (r, sink) in rings.iter().zip(out.iter_mut()) {
+                        r.drain(sink);
+                    }
+                    if finished && rings.iter().all(|r| r.is_empty()) {
+                        return out;
+                    }
+                    std::thread::yield_now();
+                }
+            });
+            for p in producers {
+                p.join().unwrap();
+            }
+            done.store(true, Ordering::Release);
+            consumer.join().unwrap()
+        });
+
+        for (w, got) in drained.iter().enumerate() {
+            prop_assert(
+                got.len() == per_worker,
+                format!("worker {w}: drained {} of {per_worker}", got.len()),
+            )?;
+            for (i, s) in got.iter().enumerate() {
+                prop_assert(
+                    s.args[0] == i as u64,
+                    format!("worker {w}: span {i} out of order ({})", s.args[0]),
+                )?;
+            }
+        }
+        prop_assert(
+            rings.iter().all(|r| r.dropped() == 0),
+            "no drops below capacity".to_string(),
+        )?;
+        Ok(())
+    });
+}
+
+/// Overflow contract at the integration level: a full ring rejects new
+/// spans (FIFO — the oldest survive) and counts every rejection, so a
+/// saturated trace is detectable from the footer's drop total.
+#[test]
+fn overflow_drops_new_spans_and_counts_them() {
+    let r = SpanRing::new(7, 16);
+    for i in 0..40 {
+        r.push(span(i));
+    }
+    assert_eq!(r.dropped(), 24);
+    let mut out = Vec::new();
+    assert_eq!(r.drain(&mut out), 16);
+    assert_eq!(out[0].args[0], 0, "oldest span survives overflow");
+    assert_eq!(out[15].args[0], 15);
+    assert!(r.push(span(99)), "drained ring accepts pushes again");
+}
+
+/// A trace torn mid-line (SIGKILL during a flush) still parses under
+/// `TornTail`, exports to Chrome format, and feeds `obs report`.
+#[test]
+fn torn_tail_trace_parses_exports_and_reports() {
+    let _g = lock();
+    let dir = tmp("torn");
+    obs::start_tracing(&dir).unwrap();
+    let label = obs::intern("torn-test");
+    for i in 0..64u64 {
+        obs::emit_instant(SpanKind::Step, label, [i, 0, 0, 0]);
+    }
+    let written = obs::stop_tracing().unwrap();
+    assert!(written >= 64, "flushed {written} < 64 spans");
+
+    // simulate the kill: append an unterminated half-row
+    let path = dir.join(format!("trace-{}.jsonl", std::process::id()));
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+    f.write_all(b"{\"kind\":\"step\",\"ts\":12").unwrap();
+    drop(f);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(scan_jsonl(&text, Tolerance::Strict, |_, _| Ok(())).is_err());
+    let stats = scan_jsonl(&text, Tolerance::TornTail, |_, _| Ok(())).unwrap();
+    assert_eq!(stats.torn, 1);
+    assert!(stats.rows >= 65, "spans + footer, rows {}", stats.rows);
+
+    let out = dir.join("trace.chrome.json");
+    let export = obs::chrome::export_dir(&dir, &out).unwrap();
+    assert_eq!(export.torn, 1);
+    assert!(export.events >= 64, "exported {} events", export.events);
+    let chrome = slimadam::json::Value::parse(&std::fs::read_to_string(&out).unwrap())
+        .unwrap();
+    assert!(!chrome.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+
+    let report = obs::report::build(&dir).unwrap();
+    assert!(report.contains("step"), "{report}");
+    assert!(report.contains("torn tail"), "{report}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance gate: fingerprints of a traced sweep — with SNR
+/// telemetry streaming — are bit-identical to the untraced sweep, and the
+/// trace itself carries step + snr rows. Tracing observes, never perturbs.
+#[test]
+fn tracing_is_identity_neutral() {
+    let _g = lock();
+    let mut configs = Vec::new();
+    for opt in ["adam", "slimadam"] {
+        for lr in [1e-3, 2e-3] {
+            let mut cfg = TrainConfig::lm("mlp_tiny", opt, lr, 20);
+            cfg.backend = BackendSpec::native();
+            cfg.eval_batches = 2;
+            configs.push(cfg);
+        }
+    }
+
+    let baseline = SweepScheduler::new(2).quiet().run(&configs).unwrap();
+    assert!(baseline.iter().all(|s| s.metrics.is_none()),
+        "untraced rows must carry no metrics block");
+
+    let dir = tmp("identity");
+    telemetry::set_snr_every(Some(5));
+    obs::start_tracing(&dir).unwrap();
+    let traced = SweepScheduler::new(2).quiet().run(&configs).unwrap();
+    let written = obs::stop_tracing().unwrap();
+    telemetry::set_snr_every(None);
+    assert!(written > 0, "traced sweep must emit spans");
+    assert!(traced.iter().all(|s| s.metrics.is_some()),
+        "traced rows carry the registry snapshot");
+
+    assert_eq!(baseline.len(), traced.len());
+    for (a, b) in baseline.iter().zip(&traced) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "tracing changed the identity of {}",
+            a.label
+        );
+    }
+
+    let path = dir.join(format!("trace-{}.jsonl", std::process::id()));
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"kind\":\"step\""), "trace carries step spans");
+    assert!(text.contains("\"kind\":\"snr\""), "telemetry rows in the stream");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Disabled path: no clock reads, no spans, stop without start is a no-op.
+#[test]
+fn disabled_recorder_is_inert() {
+    let _g = lock();
+    assert!(!obs::enabled());
+    assert_eq!(obs::clock(), 0, "clock() must not read time when disabled");
+    obs::emit_instant(SpanKind::Step, obs::NO_LABEL, [1, 2, 3, 4]);
+    obs::emit_since(SpanKind::Eval, obs::NO_LABEL, 0, [0; 4]);
+    assert_eq!(obs::stop_tracing().unwrap(), 0);
+    assert!(!telemetry::active(0), "telemetry gates on enabled() first");
+}
