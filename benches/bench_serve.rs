@@ -1,0 +1,159 @@
+//! Serve-daemon overhead (DESIGN.md §16): submit→complete latency and
+//! end-to-end jobs/sec through the full daemon stack — wire protocol,
+//! durable-queue journaling, dispatch, per-tenant store append, and the
+//! result stream — at queue depths 1, 8, and 64. Sweeps run synthetically
+//! (`SLIMADAM_SYNTH_RUNS`) with zero per-job compute, so the rates
+//! isolate the service machinery itself. Writes the consolidated
+//! `results/bench/BENCH_serve.json` summary and gates it against the
+//! committed `BENCH_serve_baseline.json` like the native suite.
+
+use std::time::{Duration, Instant};
+
+use slimadam::benchkit::{check_native_regression, write_suite_summary};
+use slimadam::json::Value;
+use slimadam::serve::{spawn, Client, JobSpec, ServeOpts, ServerHandle};
+
+fn median_ms(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// One single-config job, unique per `i` so nothing resume-skips.
+fn spec_for(i: usize) -> JobSpec {
+    JobSpec::native("mlp_tiny", &["adam"], &[1e-4 * (1.0 + i as f64 * 1e-3)], 8)
+}
+
+fn fresh_daemon(tag: &str) -> (ServerHandle, String) {
+    let dir = std::env::temp_dir().join(format!(
+        "slimadam_bench_serve_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let addr = dir.join("serve.sock").to_str().unwrap().to_string();
+    let handle = spawn(ServeOpts {
+        addr: addr.clone(),
+        state_dir: dir.join("state"),
+        workers: 4,
+        max_batch: 8,
+        queue_cap: 128,
+        quiet: true,
+    })
+    .expect("spawn serve daemon");
+    (handle, addr)
+}
+
+fn shutdown(mut client: Client, handle: ServerHandle) {
+    client.drain().expect("drain");
+    drop(client);
+    handle.join().expect("daemon exit");
+}
+
+/// Submit `depth` jobs back to back, then wait for the whole backlog —
+/// jobs/sec through journal + dispatch + store at that queue depth.
+fn throughput(depth: usize) -> f64 {
+    let (handle, addr) = fresh_daemon(&format!("depth{depth}"));
+    let mut client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let t0 = Instant::now();
+    for i in 0..depth {
+        let reply = client.submit("bench", &spec_for(i), false).unwrap();
+        assert_eq!(
+            reply.get("reply").unwrap().as_str().unwrap(),
+            "queued",
+            "submit {i} rejected: {}",
+            reply.dump()
+        );
+    }
+    loop {
+        let st = client.status().unwrap();
+        let jobs = st.get("jobs").unwrap().as_arr().unwrap();
+        let failed = jobs
+            .iter()
+            .filter(|e| e.get("state").unwrap().as_str().unwrap() == "failed")
+            .count();
+        assert_eq!(failed, 0, "bench jobs must not fail");
+        let done = jobs
+            .iter()
+            .filter(|e| e.get("state").unwrap().as_str().unwrap() == "done")
+            .count();
+        if done >= depth {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let rate = depth as f64 / t0.elapsed().as_secs_f64();
+    shutdown(client, handle);
+    println!("serve depth {depth:>3}: {rate:9.1} jobs/s");
+    rate
+}
+
+fn main() {
+    // synthetic, zero-latency jobs: the numbers are pure serve overhead
+    std::env::set_var("SLIMADAM_SYNTH_RUNS", "1");
+    std::env::remove_var("SLIMADAM_SYNTH_MS");
+    let fast = std::env::var("SLIMADAM_BENCH_FAST").is_ok();
+
+    // submit→complete latency, one watched job at a time
+    let iters = if fast { 8 } else { 30 };
+    let (handle, addr) = fresh_daemon("latency");
+    let mut client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let mut lat_ms = Vec::with_capacity(iters);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let t = Instant::now();
+        let reply = client.submit("bench", &spec_for(i), true).unwrap();
+        let job = reply.get("job").unwrap().as_str().unwrap().to_string();
+        client.wait_job(&job, |_| {}).unwrap();
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let depth1_rate = iters as f64 / t0.elapsed().as_secs_f64();
+    shutdown(client, handle);
+    let lat = median_ms(lat_ms);
+    println!("serve submit→complete: {lat:.2} ms median ({iters} watched jobs)");
+    println!("serve depth   1: {depth1_rate:9.1} jobs/s");
+
+    let depth8_rate = throughput(8);
+    let depth64_rate = throughput(64);
+
+    let mut row = Value::obj();
+    row.set("model", "serve")
+        .set("workers", 4usize)
+        .set("serve_submit_complete_ms", lat)
+        .set("serve_jobs_per_s_depth1", depth1_rate)
+        .set("serve_jobs_per_s_depth8", depth8_rate)
+        .set("serve_jobs_per_s_depth64", depth64_rate);
+
+    let out = std::path::Path::new("results/bench/BENCH_serve.json");
+    write_suite_summary("serve", &[row], out).expect("write BENCH_serve.json");
+    println!("\nwrote serve throughput summary to {}", out.display());
+
+    // Baseline gate (CI `bench-regression`): same mechanics as the native
+    // suite — a provisional baseline only warns.
+    let baseline_path = std::env::var("SLIMADAM_BENCH_SERVE_BASELINE")
+        .unwrap_or_else(|_| "results/bench/BENCH_serve_baseline.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let baseline = Value::parse(&text).expect("parse serve baseline");
+            let current =
+                Value::parse(&std::fs::read_to_string(out).unwrap()).expect("parse summary");
+            let outcome = check_native_regression(&baseline, &current, 0.15);
+            for w in &outcome.warnings {
+                println!("bench-regression warning: {w}");
+            }
+            if !outcome.passed() {
+                for v in &outcome.violations {
+                    eprintln!("bench-regression FAIL: {v}");
+                }
+                std::process::exit(1);
+            }
+            println!(
+                "bench-regression: ok vs {baseline_path} ({} warnings)",
+                outcome.warnings.len()
+            );
+        }
+        Err(_) => println!(
+            "bench-regression: no baseline at {baseline_path} (commit \
+             results/bench/BENCH_serve_baseline.json to arm the gate)"
+        ),
+    }
+}

@@ -147,12 +147,17 @@ pub fn append_row_keep(dir: &std::path::Path, name: &str, row: &Value, keep: usi
     }
 }
 
-/// Write the consolidated per-family native throughput summary (the CI
-/// `BENCH_native.json` artifact): one row per builtin model, produced by
-/// `benches/bench_native_step.rs`.
-pub fn write_native_summary(rows: &[Value], path: &std::path::Path) -> std::io::Result<()> {
+/// Write a consolidated suite summary (the CI `BENCH_<suite>.json`
+/// artifacts): a `families` array of per-row metrics under a `suite` tag,
+/// comparable against a committed baseline by
+/// [`check_native_regression`].
+pub fn write_suite_summary(
+    suite: &str,
+    rows: &[Value],
+    path: &std::path::Path,
+) -> std::io::Result<()> {
     let mut root = Value::obj();
-    root.set("suite", "native")
+    root.set("suite", suite)
         .set("unix_ms", now_ms())
         .set("families", Value::Arr(rows.to_vec()));
     if let Some(dir) = path.parent() {
@@ -161,13 +166,25 @@ pub fn write_native_summary(rows: &[Value], path: &std::path::Path) -> std::io::
     std::fs::write(path, root.dump_pretty())
 }
 
+/// Write the consolidated per-family native throughput summary (the CI
+/// `BENCH_native.json` artifact): one row per builtin model, produced by
+/// `benches/bench_native_step.rs`.
+pub fn write_native_summary(rows: &[Value], path: &std::path::Path) -> std::io::Result<()> {
+    write_suite_summary("native", rows, path)
+}
+
 /// Per-family throughput metrics gated by the CI `bench-regression` job
-/// (each is a "bigger is better" rate from the BENCH_native.json rows).
+/// (each is a "bigger is better" rate from the BENCH_native.json /
+/// BENCH_serve.json rows; latency-style metrics stay unregistered — the
+/// gate only understands rates).
 pub const REGRESSION_METRICS: &[&str] = &[
     "grad_units_per_s",
     "split_steps_per_s",
     "fused_steps_per_s",
     "fused_jobs_per_s_batch4",
+    "serve_jobs_per_s_depth1",
+    "serve_jobs_per_s_depth8",
+    "serve_jobs_per_s_depth64",
 ];
 
 /// Outcome of comparing a fresh native summary against the committed
@@ -241,7 +258,11 @@ pub fn check_native_regression(
                         ));
                     }
                 }
-                (Some(_), Some(_)) | (None, _) => {
+                // Metric absent from both sides: not applicable to this
+                // suite's rows (native rows don't carry serve rates and
+                // vice versa) — skip silently.
+                (None, None) => {}
+                (Some(_), Some(_)) | (None, Some(_)) => {
                     out.warnings
                         .push(format!("{model}.{metric}: no usable baseline rate"));
                 }
@@ -792,6 +813,47 @@ mod tests {
         let out = check_native_regression(&base, &cur, 0.15);
         assert!(out.passed(), "{:?}", out.violations);
         assert!(!out.warnings.is_empty());
+    }
+
+    #[test]
+    fn serve_suite_rows_gate_on_serve_metrics_only() {
+        // a serve row carries only serve rates; the native metrics are
+        // absent from BOTH sides and must not produce noise or failures
+        let row = |rate: f64| {
+            let mut r = Value::obj();
+            r.set("model", "serve")
+                .set("serve_jobs_per_s_depth1", rate)
+                .set("serve_jobs_per_s_depth8", rate)
+                .set("serve_jobs_per_s_depth64", rate);
+            r
+        };
+        let wrap = |r: Value| {
+            let mut root = Value::obj();
+            root.set("suite", "serve").set("families", Value::Arr(vec![r]));
+            root
+        };
+        let out = check_native_regression(&wrap(row(100.0)), &wrap(row(95.0)), 0.15);
+        assert!(out.passed(), "{:?}", out.violations);
+        assert!(out.warnings.is_empty(), "{:?}", out.warnings);
+        let out = check_native_regression(&wrap(row(100.0)), &wrap(row(50.0)), 0.15);
+        assert!(!out.passed(), "a halved serve rate must gate");
+    }
+
+    #[test]
+    fn suite_summary_roundtrips() {
+        let dir = std::env::temp_dir().join(format!(
+            "slimadam_bench_suite_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("BENCH_serve.json");
+        let mut r = Value::obj();
+        r.set("model", "serve").set("serve_jobs_per_s_depth1", 42.0);
+        write_suite_summary("serve", &[r], &path).unwrap();
+        let v = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(v.get("families").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

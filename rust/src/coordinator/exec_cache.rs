@@ -23,8 +23,18 @@
 //! end-of-sweep summary line, `RunSummary.metrics`, and `slimadam obs
 //! report` without any ad-hoc printing here. Cache lookups additionally
 //! emit `cache_hit` / `cache_miss` / `compile` spans when tracing is live.
+//!
+//! **Bounded for daemon lifetimes.** A one-shot CLI sweep dies with its
+//! caches, but the `slimadam serve` daemon keeps worker threads (and so
+//! these thread-locals) alive indefinitely — an unbounded map would leak
+//! one compiled executable per distinct `(backend, device, artifact,
+//! manifest)` forever. Each per-thread executable cache is therefore an
+//! LRU capped at [`SLIMADAM_EXEC_CACHE_CAP`](thread_cache_cap) entries
+//! (default 32); evictions bump the registry's `exec_cache.evictions`
+//! counter. The tiny [`thread_backend`] map (a handful of backend/device
+//! pairs, not per-artifact) stays uncapped.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::{Arc, OnceLock};
@@ -45,12 +55,19 @@ fn misses() -> &'static Arc<registry::Counter> {
     C.get_or_init(|| registry::counter("exec_cache.misses"))
 }
 
+fn evictions() -> &'static Arc<registry::Counter> {
+    static C: OnceLock<Arc<registry::Counter>> = OnceLock::new();
+    C.get_or_init(|| registry::counter("exec_cache.evictions"))
+}
+
 /// Snapshot of the global cache counters (all worker threads combined).
-/// Every miss is exactly one backend compilation.
+/// Every miss is exactly one backend compilation; every eviction is one
+/// executable dropped by the per-thread LRU cap.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -60,11 +77,12 @@ impl CacheStats {
     }
 }
 
-/// Read the global hit/miss counters.
+/// Read the global hit/miss/eviction counters.
 pub fn stats() -> CacheStats {
     CacheStats {
         hits: hits().get(),
         misses: misses().get(),
+        evictions: evictions().get(),
     }
 }
 
@@ -72,6 +90,7 @@ pub fn stats() -> CacheStats {
 pub fn reset_stats() {
     hits().reset();
     misses().reset();
+    evictions().reset();
 }
 
 /// Record a cache hit (instant span + counter).
@@ -105,13 +124,78 @@ fn obs_label(name: &str) -> u32 {
 /// identity (name + manifest digest).
 type Key = (BackendSpec, String, u64);
 
+/// LRU slot: last-touch tick + the cached executable.
+type Slot<T> = (u64, Rc<T>);
+
+/// Default per-thread executable-cache capacity (entries per map).
+const DEFAULT_CAP: usize = 32;
+
 thread_local! {
     static BACKENDS: RefCell<HashMap<BackendSpec, Rc<dyn Backend>>> =
         RefCell::new(HashMap::new());
-    static GRAD: RefCell<HashMap<Key, Rc<GradEngine>>> =
+    static GRAD: RefCell<HashMap<Key, Slot<GradEngine>>> =
         RefCell::new(HashMap::new());
-    static TRAIN: RefCell<HashMap<Key, Rc<Compiled>>> =
+    static TRAIN: RefCell<HashMap<Key, Slot<Compiled>>> =
         RefCell::new(HashMap::new());
+    /// Monotonic per-thread touch clock for LRU ordering.
+    static TICK: Cell<u64> = Cell::new(0);
+    /// Per-thread cap override (tests); `None` = env/default.
+    static CAP_OVERRIDE: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// The executable-cache capacity for this thread:
+/// [`set_thread_cache_cap`] override, else `SLIMADAM_EXEC_CACHE_CAP`
+/// (parsed once per process), else [`DEFAULT_CAP`].
+pub fn thread_cache_cap() -> usize {
+    if let Some(n) = CAP_OVERRIDE.with(|c| c.get()) {
+        return n;
+    }
+    static ENV_CAP: OnceLock<usize> = OnceLock::new();
+    *ENV_CAP.get_or_init(|| {
+        std::env::var("SLIMADAM_EXEC_CACHE_CAP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(DEFAULT_CAP)
+    })
+}
+
+/// Override the LRU capacity for the calling thread (tests exercise
+/// eviction without polluting process-wide env state).
+pub fn set_thread_cache_cap(n: usize) {
+    CAP_OVERRIDE.with(|c| c.set(Some(n.max(1))));
+}
+
+fn next_tick() -> u64 {
+    TICK.with(|t| {
+        let v = t.get() + 1;
+        t.set(v);
+        v
+    })
+}
+
+/// Look up `key`, refreshing its LRU tick on a hit.
+fn lru_get<T>(cache: &RefCell<HashMap<Key, Slot<T>>>, key: &Key) -> Option<Rc<T>> {
+    let mut map = cache.borrow_mut();
+    let slot = map.get_mut(key)?;
+    slot.0 = next_tick();
+    Some(slot.1.clone())
+}
+
+/// Insert `value`, evicting least-recently-touched entries past the cap.
+fn lru_insert<T>(cache: &RefCell<HashMap<Key, Slot<T>>>, key: Key, value: Rc<T>) {
+    let mut map = cache.borrow_mut();
+    let cap = thread_cache_cap();
+    while map.len() >= cap {
+        let oldest = map
+            .iter()
+            .min_by_key(|(_, (tick, _))| *tick)
+            .map(|(k, _)| k.clone());
+        let Some(oldest) = oldest else { break };
+        map.remove(&oldest);
+        evictions().inc();
+    }
+    map.insert(key, (next_tick(), value));
 }
 
 /// This worker thread's backend for `spec`, created on first use. One
@@ -137,14 +221,14 @@ pub fn grad_engine(spec: &BackendSpec, dir: &str, model: &str) -> Result<Rc<Grad
     let art = backend.load_artifact(dir.as_ref(), &name)?;
     let key = (*spec, name, art.manifest_hash);
     GRAD.with(|cache| {
-        if let Some(engine) = cache.borrow().get(&key) {
+        if let Some(engine) = lru_get(cache, &key) {
             note_hit(&key.1);
-            return Ok(engine.clone());
+            return Ok(engine);
         }
         let t0 = note_miss(&key.1);
         let engine = Rc::new(GradEngine::from_artifact(&art, backend.as_ref())?);
         obs::emit_since(SpanKind::Compile, obs_label(&key.1), t0, [0; 4]);
-        cache.borrow_mut().insert(key, engine.clone());
+        lru_insert(cache, key, engine.clone());
         Ok(engine)
     })
 }
@@ -168,14 +252,14 @@ pub fn train_compiled(
     );
     let key = (*spec, name, art.manifest_hash);
     TRAIN.with(|cache| {
-        if let Some(compiled) = cache.borrow().get(&key) {
+        if let Some(compiled) = lru_get(cache, &key) {
             note_hit(&key.1);
-            return Ok(compiled.clone());
+            return Ok(compiled);
         }
         let t0 = note_miss(&key.1);
         let compiled = Rc::new(art.compile(backend.as_ref())?);
         obs::emit_since(SpanKind::Compile, obs_label(&key.1), t0, [0; 4]);
-        cache.borrow_mut().insert(key, compiled.clone());
+        lru_insert(cache, key, compiled.clone());
         Ok(compiled)
     })
 }
@@ -212,5 +296,39 @@ mod tests {
         let c = train_compiled(&spec, "artifacts", "mlp_tiny", "adam").unwrap();
         let d = train_compiled(&spec, "artifacts", "mlp_tiny", "adam").unwrap();
         assert!(Rc::ptr_eq(&c, &d));
+    }
+
+    #[test]
+    fn lru_cap_evicts_least_recently_used() {
+        // A dedicated thread: the caches, tick clock, and cap override
+        // are all thread-local, so this cannot disturb other tests.
+        std::thread::spawn(|| {
+            set_thread_cache_cap(2);
+            assert_eq!(thread_cache_cap(), 2);
+            let spec = BackendSpec::native();
+            let evicted_before = stats().evictions;
+            let a1 = grad_engine(&spec, "artifacts", "mlp_tiny").unwrap();
+            grad_engine(&spec, "artifacts", "gpt_micro").unwrap();
+            // touch mlp_tiny so gpt_micro is the LRU entry…
+            let a2 = grad_engine(&spec, "artifacts", "mlp_tiny").unwrap();
+            assert!(Rc::ptr_eq(&a1, &a2));
+            // …then a third distinct artifact must evict gpt_micro
+            grad_engine(&spec, "artifacts", "conv_mini").unwrap();
+            assert!(
+                stats().evictions >= evicted_before + 1,
+                "insert past the cap must evict"
+            );
+            // the touched entry survived; the evicted one recompiles
+            let a3 = grad_engine(&spec, "artifacts", "mlp_tiny").unwrap();
+            assert!(Rc::ptr_eq(&a1, &a3), "recently-used entry must survive");
+            let miss_before = stats().misses;
+            grad_engine(&spec, "artifacts", "gpt_micro").unwrap();
+            assert!(
+                stats().misses >= miss_before + 1,
+                "evicted entry must recompile on next use"
+            );
+        })
+        .join()
+        .unwrap();
     }
 }

@@ -135,6 +135,27 @@ impl SweepScheduler {
         format!("{}|{}", cfg.backend.key(), Self::artifact_key(cfg))
     }
 
+    /// One streamed result row: the summary JSON plus the job's grid
+    /// index, seed, config key and metrics fingerprint — everything the
+    /// run store needs to resume. Shared by the CLI sweep path and the
+    /// serve daemon (`crate::serve`), which is what makes a daemon-run
+    /// sweep's rows byte-identical to the one-shot CLI run's.
+    pub fn summary_row(
+        cfg: &TrainConfig,
+        summary: &RunSummary,
+        job: usize,
+    ) -> crate::json::Value {
+        let mut row = summary.to_json();
+        row.set("job", job)
+            .set("seed", format!("{:016x}", cfg.seed))
+            .set("config_key", format!("{:016x}", config_key(cfg)))
+            .set(
+                "fingerprint",
+                format!("{:016x}", summary.result.fingerprint()),
+            );
+        row
+    }
+
     /// Run every config; summaries return in input order. Worker count
     /// and batch size never change results
     /// (`rust/tests/scheduler_determinism.rs`,
@@ -243,15 +264,7 @@ impl SweepScheduler {
                     // covers interleaved and torn-mid-batch orders).
                     let mut writer = writer.lock().unwrap();
                     for (&i, summary) in group.iter().zip(&summaries) {
-                        let cfg = &configs[i];
-                        let mut row = summary.to_json();
-                        row.set("job", i)
-                            .set("seed", format!("{:016x}", cfg.seed))
-                            .set("config_key", format!("{:016x}", keys[i]))
-                            .set(
-                                "fingerprint",
-                                format!("{:016x}", summary.result.fingerprint()),
-                            );
+                        let row = Self::summary_row(&configs[i], summary, i);
                         let append_t0 = obs::clock();
                         writer.write(&row)?;
                         obs::emit_since(

@@ -32,6 +32,10 @@
 //!   in-worker dispatch planner — §12), [`sweep`] (grids),
 //!   [`runstore`] (crash-safe store of completed jobs + sweep resume —
 //!   DESIGN.md §10)
+//! * Service: [`serve`] (sweep-as-a-service — the long-lived `slimadam
+//!   serve` daemon: durable journaled queue, per-tenant run stores,
+//!   cross-request batched dispatch, streaming subscriptions, graceful
+//!   drain — DESIGN.md §16)
 //! * Reproduction: [`exp`] (one module per paper figure/table)
 
 pub mod benchkit;
@@ -50,6 +54,7 @@ pub mod rng;
 pub mod rules;
 pub mod runstore;
 pub mod runtime;
+pub mod serve;
 pub mod snr;
 pub mod sweep;
 pub mod tensor;

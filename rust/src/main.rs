@@ -9,6 +9,10 @@
 //!   train           run one training config
 //!   sweep           run an (optimizer × LR) grid on the parallel scheduler
 //!                   (`--resume <dir>` skips jobs already in the run store)
+//!   serve           long-lived sweep daemon: durable queue, per-tenant
+//!                   stores, streaming subscriptions, drain (DESIGN.md §16)
+//!   client          talk to a serve daemon: submit | watch | status |
+//!                   drain | cancel | ping
 //!   runs            inspect a run store: ls | report | compact
 //!   snr             probe a run's second-moment SNR and print the layer table
 //!   rules           derive + save SlimAdam compression rules from an SNR probe
@@ -53,6 +57,7 @@ const FLAGS: &[&str] = &[
     "synthetic",
     "trace",
     "chrome",
+    "watch",
 ];
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
@@ -125,6 +130,8 @@ fn run_command(cmd: &str, args: &Args) -> Result<()> {
         }
         "train" => cmd_train(args),
         "sweep" => cmd_sweep(args),
+        "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
         "runs" => cmd_runs(args),
         "snr" => cmd_snr(args),
         "rules" => cmd_rules(args),
@@ -150,6 +157,8 @@ fn print_global_help() {
          \x20 exp <id>   reproduce a paper figure/table (see `slimadam exp --help`)\n\
          \x20 train      run one training config\n\
          \x20 sweep      run an (optimizer × LR) grid on the parallel scheduler\n\
+         \x20 serve      long-lived sweep daemon with a durable queue (DESIGN.md §16)\n\
+         \x20 client     talk to a serve daemon: submit | watch | status | drain\n\
          \x20 runs       inspect a run store: ls | report | compact\n\
          \x20 snr        probe second-moment SNR along an Adam run\n\
          \x20 rules      derive SlimAdam compression rules from an SNR probe\n\
@@ -365,6 +374,187 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // cache hit/compile totals now ride the scheduler's structured
     // `sweep summary:` line (registry counters, DESIGN.md §15)
     Ok(())
+}
+
+/// `slimadam serve --addr <unix-socket|host:port>`: the long-lived
+/// sweep-as-a-service daemon (DESIGN.md §16). Owns one warm executable
+/// cache and worker pool, journals every accepted job to
+/// `<state-dir>/queue.jsonl`, streams result rows to subscribers, and
+/// exits 0 after a graceful drain (SIGTERM/SIGINT or a `drain` request).
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!(
+            "{}",
+            render_help("slimadam", "serve", "long-lived sweep daemon with a durable queue", &[
+                OptSpec { name: "addr", help: "listen address: unix socket path (contains '/') or host:port", default: None, is_flag: false },
+                OptSpec { name: "state-dir", help: "daemon state: queue.jsonl journal + tenants/<ns>/ run stores", default: Some("results/serve"), is_flag: false },
+                OptSpec { name: "workers", help: "worker threads (0 = one per core, capped at 8)", default: Some("0"), is_flag: false },
+                OptSpec { name: "max-batch", help: "adaptive batched-dispatch cap (1 = never batch)", default: Some("8"), is_flag: false },
+                OptSpec { name: "queue-cap", help: "bounded queue capacity in jobs; beyond it submits get `overloaded`", default: Some("64"), is_flag: false },
+                OptSpec { name: "quiet", help: "suppress per-row progress lines", default: None, is_flag: true },
+                OptSpec { name: "synthetic", help: "deterministic artifact-free synthetic runs (testing; same as SLIMADAM_SYNTH_RUNS=1)", default: None, is_flag: true },
+                OptSpec { name: "trace", help: "record flight-recorder spans to results/trace/", default: None, is_flag: true },
+            ])
+        );
+        return Ok(());
+    }
+    if args.flag("synthetic") {
+        std::env::set_var("SLIMADAM_SYNTH_RUNS", "1");
+    }
+    let Some(addr) = args.get("addr") else {
+        bail!("serve needs --addr <unix-socket path | host:port>");
+    };
+    let opts = slimadam::serve::ServeOpts {
+        addr: addr.to_string(),
+        state_dir: std::path::PathBuf::from(args.str_or("state-dir", "results/serve")),
+        workers: args.usize_or("workers", 0)?,
+        max_batch: args.usize_or("max-batch", 8)?,
+        queue_cap: args.usize_or("queue-cap", 64)?,
+        quiet: args.flag("quiet"),
+    };
+    slimadam::serve::run(opts)
+}
+
+/// Build a serve [`slimadam::serve::JobSpec`] from the same grid flags as
+/// `sweep`, so a submitted job expands to byte-identical configs.
+fn job_spec(args: &Args) -> Result<slimadam::serve::JobSpec> {
+    let backend = slimadam::exp::backend_spec(args)?;
+    let spec = slimadam::serve::JobSpec {
+        model: args.str_or("model", default_model(backend.kind)).to_string(),
+        backend: backend.key(),
+        optimizers: args.str_list("optimizers", &["adam", "slimadam"]),
+        lrs: args.f64_list("lrs", &log_grid(1e-4, 1e-2, 4))?,
+        steps: args.usize_or("steps", 100)?,
+        seed: args.u64_or("seed", 0)?,
+        accum: args.usize_or("accum", 1)?,
+        fused: if args.flag("fused") {
+            Some(args.str_or("ruleset", "adam").to_string())
+        } else {
+            None
+        },
+        seed_jobs: args.flag("seed-jobs"),
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// `slimadam client <submit|watch|status|drain|cancel|ping> --addr a`:
+/// thin CLI over [`slimadam::serve::Client`] (DESIGN.md §16).
+fn cmd_client(args: &Args) -> Result<()> {
+    if args.flag("help") || args.positional.is_empty() {
+        println!(
+            "{}",
+            render_help("slimadam", "client <submit|watch|status|drain|cancel|ping>", "talk to a running serve daemon", &[
+                OptSpec { name: "addr", help: "daemon address: unix socket path or host:port", default: None, is_flag: false },
+                OptSpec { name: "tenant", help: "client namespace (per-tenant run store)", default: Some("default"), is_flag: false },
+                OptSpec { name: "job", help: "job id (watch filter / cancel target)", default: None, is_flag: false },
+                OptSpec { name: "watch", help: "submit: stream result rows until the job completes", default: None, is_flag: true },
+                OptSpec { name: "model", help: "submit: artifact model", default: Some("gpt_nano (pjrt) / gpt_micro (native)"), is_flag: false },
+                OptSpec { name: "backend", help: "submit: execution backend: pjrt | native (optionally +f32)", default: Some("pjrt"), is_flag: false },
+                OptSpec { name: "precision", help: "submit: native compute precision: f64 | f32", default: Some("f64"), is_flag: false },
+                OptSpec { name: "optimizers", help: "submit: comma-separated optimizer presets", default: Some("adam,slimadam"), is_flag: false },
+                OptSpec { name: "lrs", help: "submit: comma-separated LR grid", default: Some("log grid 1e-4..1e-2, 4 pts"), is_flag: false },
+                OptSpec { name: "steps", help: "submit: training steps per job", default: Some("100"), is_flag: false },
+                OptSpec { name: "seed", help: "submit: base seed", default: Some("0"), is_flag: false },
+                OptSpec { name: "accum", help: "submit: gradient accumulation steps", default: Some("1"), is_flag: false },
+                OptSpec { name: "fused", help: "submit: use the fused train_step artifact", default: None, is_flag: true },
+                OptSpec { name: "ruleset", help: "submit: fused artifact ruleset", default: Some("adam"), is_flag: false },
+                OptSpec { name: "seed-jobs", help: "submit: derive an independent seed per grid point", default: None, is_flag: true },
+            ])
+        );
+        println!(
+            "actions:\n\
+             \x20 submit   queue an (optimizer × LR) grid under --tenant\n\
+             \x20 watch    stream result rows (--tenant / --job filter)\n\
+             \x20 status   queue depth and per-job states\n\
+             \x20 drain    stop admitting, finish in-flight work, exit 0\n\
+             \x20 cancel   remove a still-queued job (--job)\n\
+             \x20 ping     liveness probe"
+        );
+        return Ok(());
+    }
+    let action =
+        args.require_positional(0, "action (submit | watch | status | drain | cancel | ping)")?;
+    let Some(addr) = args.get("addr") else {
+        bail!("client needs --addr <unix-socket path | host:port>");
+    };
+    let mut client = slimadam::serve::Client::connect(addr)?;
+    match action {
+        "ping" => {
+            anyhow::ensure!(client.ping()?, "daemon on {addr} did not answer pong");
+            println!("pong");
+            Ok(())
+        }
+        "status" => {
+            println!("{}", client.status()?.dump_pretty());
+            Ok(())
+        }
+        "drain" => {
+            let r = client.drain()?;
+            anyhow::ensure!(
+                r.get("reply")?.as_str()? == "draining",
+                "drain rejected: {}",
+                r.dump()
+            );
+            println!("draining");
+            Ok(())
+        }
+        "cancel" => {
+            let Some(job) = args.get("job") else {
+                bail!("cancel needs --job <id>");
+            };
+            if client.cancel(job)? {
+                println!("cancelled {job}");
+            } else {
+                println!("{job} was not queued (already running, done, or unknown)");
+            }
+            Ok(())
+        }
+        "submit" => {
+            let tenant = args.str_or("tenant", "default");
+            let spec = job_spec(args)?;
+            let watch = args.flag("watch");
+            let reply = client.submit(tenant, &spec, watch)?;
+            let kind = reply.get("reply")?.as_str()?.to_string();
+            anyhow::ensure!(kind == "queued", "submit rejected: {}", reply.dump());
+            let job = reply.get("job")?.as_str()?.to_string();
+            println!(
+                "queued {job} — tenant {tenant}, {} configs",
+                reply.get("configs")?.as_usize()?
+            );
+            if watch {
+                let done = client.wait_job(&job, |event| {
+                    if let Some(row) = event.opt("row") {
+                        println!("{}", row.dump());
+                    }
+                })?;
+                let failed = done
+                    .opt("failed")
+                    .and_then(|b| b.as_bool().ok())
+                    .unwrap_or(false);
+                anyhow::ensure!(!failed, "job {job} failed — see the daemon log");
+                println!(
+                    "done {job}: {} ran, {} resumed",
+                    done.get("ran")?.as_usize()?,
+                    done.get("skipped")?.as_usize()?
+                );
+            }
+            Ok(())
+        }
+        "watch" => {
+            client.subscribe(args.get("tenant"), args.get("job"))?;
+            while let Some(event) = client.next_event()? {
+                println!("{}", event.dump());
+                if event.opt("reply").and_then(|r| r.as_str().ok()) == Some("bye") {
+                    break;
+                }
+            }
+            Ok(())
+        }
+        other => {
+            bail!("unknown client action {other:?} — try submit, watch, status, drain, cancel or ping")
+        }
+    }
 }
 
 /// Inspect a run store: `slimadam runs <ls|report|compact> [--dir d]`.

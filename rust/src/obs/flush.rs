@@ -11,6 +11,12 @@
 //! final drain, writes a `metrics-<pid>.json` registry snapshot next to
 //! the trace, and appends a trace footer row (span/drop totals) so
 //! saturation is visible in the artifact itself.
+//!
+//! The flusher also rewrites the `metrics-<pid>.json` snapshot *live*
+//! (every [`SNAPSHOT_EVERY_TICKS`] passes, via tmp-file + rename so a
+//! reader never observes a half-written snapshot): a still-running daemon
+//! is reportable with `slimadam obs report` — its trace file simply has no
+//! footer yet, which the report treats as "live", not an error.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -29,6 +35,21 @@ use super::span::Span;
 /// Flusher wake cadence. Rings absorb bursts between passes; see
 /// [`ring::DEFAULT_CAPACITY`] for the resulting drop threshold.
 const FLUSH_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Live metrics-snapshot cadence, in flusher passes (~1 s at the default
+/// interval).
+const SNAPSHOT_EVERY_TICKS: u64 = 20;
+
+/// Write the registry snapshot atomically (tmp + rename): concurrent
+/// readers see either the previous snapshot or the new one, never a torn
+/// file. The `.tmp` suffix keeps it outside the report's `.json` glob.
+fn write_snapshot(dir: &Path) -> Result<()> {
+    let path = dir.join(format!("metrics-{}.json", std::process::id()));
+    let tmp = dir.join(format!("metrics-{}.json.tmp", std::process::id()));
+    std::fs::write(&tmp, super::registry::snapshot().dump_pretty())?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
 
 struct Flusher {
     stop: Arc<AtomicBool>,
@@ -81,13 +102,19 @@ pub fn start_tracing(dir: impl AsRef<Path>) -> Result<()> {
     let mut writer = JsonlWriter::append(&path)?;
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
+    let snap_dir = dir.clone();
     let handle = std::thread::Builder::new()
         .name("obs-flusher".into())
         .spawn(move || {
             let mut buf: Vec<Span> = Vec::new();
             let mut written = 0u64;
+            let mut ticks = 0u64;
             while !stop2.load(Ordering::Acquire) {
                 written += drain_all(&mut writer, &mut buf);
+                ticks += 1;
+                if ticks % SNAPSHOT_EVERY_TICKS == 0 {
+                    let _ = write_snapshot(&snap_dir);
+                }
                 std::thread::sleep(FLUSH_INTERVAL);
             }
             // final pass: spans emitted up to the stop flag land on disk
@@ -117,8 +144,7 @@ pub fn stop_tracing() -> Result<u64> {
     };
     stop.store(true, Ordering::Release);
     let written = handle.join().unwrap_or(0);
-    let snap_path = dir.join(format!("metrics-{}.json", std::process::id()));
-    std::fs::write(&snap_path, super::registry::snapshot().dump_pretty())?;
+    write_snapshot(&dir)?;
     Ok(written)
 }
 

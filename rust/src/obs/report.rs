@@ -7,6 +7,11 @@
 //! snapshot is present) and rolls the `trace-<pid>.jsonl` span streams up
 //! to per-kind counts and total durations. Trace files are read under
 //! [`Tolerance::TornTail`], so a SIGKILLed run still reports.
+//!
+//! The report is **live-tolerant**: a still-running daemon's snapshot may
+//! be mid-rewrite (unparsable for one flusher tick) and its trace has no
+//! `trace_footer` yet. Neither is an error — unreadable snapshots are
+//! skipped and counted, and footer-less traces are reported as live.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -112,21 +117,34 @@ pub fn build(dir: &Path) -> Result<String> {
         bail!("no metrics-*.json or trace-*.jsonl in {dir:?} — run with --trace first");
     }
 
+    // A live daemon rewrites its snapshot via tmp+rename, so a snapshot is
+    // almost always parseable — but a reader racing an old (pre-atomic)
+    // writer, or a snapshot on a filesystem without atomic rename, can
+    // observe a partial file. Skip and count; never fail the report.
     let mut metrics: BTreeMap<String, Value> = BTreeMap::new();
+    let mut partial = 0usize;
     for path in &metric_files {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {path:?}"))?;
-        let snap = Value::parse(&text).with_context(|| format!("parsing {path:?}"))?;
-        merge_into(&mut metrics, &snap);
+        let Ok(text) = std::fs::read_to_string(path) else {
+            partial += 1;
+            continue;
+        };
+        match Value::parse(&text) {
+            Ok(snap) => merge_into(&mut metrics, &snap),
+            Err(_) => partial += 1,
+        }
     }
 
     let mut kinds: BTreeMap<String, KindAgg> = BTreeMap::new();
     let mut torn = 0usize;
+    let mut live = 0usize;
     for path in &trace_files {
         let text = read_stream_file(path)?;
+        let mut footer_seen = false;
         let scan = scan_jsonl(&text, Tolerance::TornTail, |_, row| {
             if let Some(kind) = row.str("kind") {
-                if kind != "trace_footer" {
+                if kind == "trace_footer" {
+                    footer_seen = true;
+                } else {
                     let agg = kinds.entry(kind.to_string()).or_default();
                     agg.count += 1;
                     agg.total_dur_ns += row.f64("dur").unwrap_or(0.0);
@@ -136,18 +154,28 @@ pub fn build(dir: &Path) -> Result<String> {
         })
         .with_context(|| format!("scanning {path:?}"))?;
         torn += scan.torn;
+        if !footer_seen {
+            // no footer: the emitting process is still running (or was
+            // killed) — report it as live rather than erroring
+            live += 1;
+        }
     }
 
+    let mut notes = String::new();
+    if torn > 0 {
+        notes.push_str(&format!(", {torn} torn tail(s) recovered"));
+    }
+    if live > 0 {
+        notes.push_str(&format!(", {live} live (no footer yet)"));
+    }
+    if partial > 0 {
+        notes.push_str(&format!(", {partial} snapshot(s) mid-write skipped"));
+    }
     let mut out = format!(
-        "observability report — {} ({} metrics file(s), {} trace file(s){})\n",
+        "observability report — {} ({} metrics file(s), {} trace file(s){notes})\n",
         dir.display(),
         metric_files.len(),
         trace_files.len(),
-        if torn > 0 {
-            format!(", {torn} torn tail(s) recovered")
-        } else {
-            String::new()
-        }
     );
     if !metrics.is_empty() {
         out.push_str(&format!("\n{:<36} {}\n", "metric", "value"));
@@ -227,6 +255,37 @@ mod tests {
         assert!(!report.contains("trace_footer"), "{report}");
         assert!(report.contains("step"), "{report}");
         assert!(report.contains("3.00 µs"), "total step dur:\n{report}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn live_daemon_dir_reports_instead_of_erroring() {
+        // simulate reporting against a still-running daemon: a half-
+        // written metrics snapshot and a footer-less (live) trace
+        let dir = std::env::temp_dir()
+            .join(format!("slimadam_obs_report_live_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("metrics-7.json"), "{\"serve.submitted\":2,")
+            .unwrap();
+        std::fs::write(
+            dir.join("metrics-8.json"),
+            "{\"serve.submitted\":3,\"serve.rows_streamed\":12}",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("trace-7.jsonl"),
+            "{\"kind\":\"serve_wave\",\"ts\":1.0,\"dur\":5000.0,\"tid\":1}\n\
+             {\"kind\":\"step\",\"ts\":2.0,\"dur\":100.0,\"tid\":1}\n\
+             {\"kind\":\"step\",\"ts\":3.0,\"dur\":100.0,\"ti",
+        )
+        .unwrap();
+        let report = build(&dir).unwrap();
+        assert!(report.contains("1 snapshot(s) mid-write skipped"), "{report}");
+        assert!(report.contains("1 live (no footer yet)"), "{report}");
+        assert!(report.contains("1 torn tail(s) recovered"), "{report}");
+        assert!(report.contains("serve.rows_streamed"), "{report}");
+        assert!(report.contains("serve_wave"), "{report}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

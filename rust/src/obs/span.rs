@@ -48,6 +48,9 @@ pub enum SpanKind {
     /// compressible params, args\[2\] = total params, args\[3\] = f64 bits
     /// of the compressible fraction).
     SnrSummary = 11,
+    /// One serve-daemon dispatch wave (args\[0\] = jobs taken, args\[1\] =
+    /// configs expanded, args\[2\] = adaptive batch cap).
+    ServeWave = 12,
 }
 
 impl SpanKind {
@@ -65,6 +68,7 @@ impl SpanKind {
             SpanKind::IntraopChunk => "intraop_chunk",
             SpanKind::Snr => "snr",
             SpanKind::SnrSummary => "snr_summary",
+            SpanKind::ServeWave => "serve_wave",
         }
     }
 
@@ -82,6 +86,7 @@ impl SpanKind {
             "intraop_chunk" => SpanKind::IntraopChunk,
             "snr" => SpanKind::Snr,
             "snr_summary" => SpanKind::SnrSummary,
+            "serve_wave" => SpanKind::ServeWave,
             _ => return None,
         })
     }
@@ -103,6 +108,7 @@ impl SpanKind {
             SpanKind::SnrSummary => {
                 ["step", "compressible", "total", "f:fraction"]
             }
+            SpanKind::ServeWave => ["jobs", "configs", "batch_cap", ""],
         }
     }
 }
@@ -167,6 +173,7 @@ mod tests {
             SpanKind::IntraopChunk,
             SpanKind::Snr,
             SpanKind::SnrSummary,
+            SpanKind::ServeWave,
         ] {
             assert_eq!(SpanKind::parse(k.as_str()), Some(k));
         }

@@ -1,0 +1,173 @@
+//! Thin daemon client — the library behind `slimadam client …`
+//! (DESIGN.md §16).
+//!
+//! A [`Client`] is one connection: a writer half and a framed reader half
+//! over the same socket. Request/reply traffic ([`Client::request`]) and
+//! streaming subscriptions ([`Client::next_event`]) share the frame
+//! grammar; a subscribed connection should stick to events, since the
+//! daemon interleaves `row` frames with any later replies.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::json::Value;
+
+use super::proto::{self, Addr, Conn, FrameReader, Recv, Request};
+use super::JobSpec;
+
+/// Frames the daemon streams unprompted (vs direct request replies).
+fn is_stream_frame(v: &Value) -> bool {
+    matches!(
+        v.opt("reply").and_then(|r| r.as_str().ok()),
+        Some("row") | Some("job_done") | Some("bye")
+    )
+}
+
+/// One client connection to a serve daemon.
+pub struct Client {
+    writer: Conn,
+    reader: FrameReader<Conn>,
+    /// Stream frames that arrived while waiting for a request's reply —
+    /// a watched job's first rows can race the `queued` reply onto the
+    /// wire. Drained by [`Client::next_event`] before the socket is read.
+    pending: VecDeque<Value>,
+}
+
+impl Client {
+    /// Connect to a daemon address (Unix socket path or `host:port`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let conn = Addr::parse(addr).connect()?;
+        let writer = conn.try_clone()?;
+        Ok(Client {
+            writer,
+            reader: FrameReader::new(conn),
+            pending: VecDeque::new(),
+        })
+    }
+
+    /// Connect, retrying until `timeout` — for racing a daemon that is
+    /// still binding its socket (tests, CI, scripted startup).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Client> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!(
+                            "no daemon answered on {addr} within {timeout:?}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    /// Send one request and read its reply, setting aside any stream
+    /// frames (`row`/`job_done`/`bye`) that land first — they stay queued
+    /// for [`Client::next_event`].
+    pub fn request(&mut self, req: &Request) -> Result<Value> {
+        proto::write_frame(&mut self.writer, &req.to_value())?;
+        loop {
+            match self.reader.read_frame() {
+                Recv::Frame(v) if is_stream_frame(&v) => self.pending.push_back(v),
+                Recv::Frame(v) => return Ok(v),
+                Recv::Bad(reason) => bail!("daemon sent a malformed frame: {reason}"),
+                Recv::Torn => bail!("connection torn mid-reply (daemon killed?)"),
+                Recv::Eof => bail!("daemon closed the connection before replying"),
+            }
+        }
+    }
+
+    /// Liveness probe; `Ok(true)` on a `pong`.
+    pub fn ping(&mut self) -> Result<bool> {
+        let r = self.request(&Request::Ping)?;
+        Ok(r.get("reply")?.as_str()? == "pong")
+    }
+
+    /// Submit one sweep under `tenant`. The reply is `queued` (carrying
+    /// the job id), `overloaded`, `draining`, or `error`. With `watch`,
+    /// an accepted submit also subscribes this connection to the job's
+    /// result stream — follow with [`Client::wait_job`].
+    pub fn submit(&mut self, tenant: &str, spec: &JobSpec, watch: bool) -> Result<Value> {
+        self.request(&Request::Submit {
+            tenant: tenant.to_string(),
+            spec: spec.clone(),
+            watch,
+        })
+    }
+
+    /// Queue/running/done counts plus per-job states.
+    pub fn status(&mut self) -> Result<Value> {
+        self.request(&Request::Status)
+    }
+
+    /// Remove a still-queued job; `Ok(true)` if it was removed.
+    pub fn cancel(&mut self, job: &str) -> Result<bool> {
+        let r = self.request(&Request::Cancel { job: job.to_string() })?;
+        Ok(r.opt("removed").and_then(|b| b.as_bool().ok()).unwrap_or(false))
+    }
+
+    /// Ask the daemon to drain: stop admitting, finish in-flight groups,
+    /// flush, exit 0.
+    pub fn drain(&mut self) -> Result<Value> {
+        self.request(&Request::Drain)
+    }
+
+    /// Turn this connection into a result stream, filtered by tenant
+    /// and/or job id (both `None` = everything).
+    pub fn subscribe(&mut self, tenant: Option<&str>, job: Option<&str>) -> Result<()> {
+        let r = self.request(&Request::Subscribe {
+            tenant: tenant.map(String::from),
+            job: job.map(String::from),
+        })?;
+        let kind = r.get("reply")?.as_str()?;
+        if kind != "subscribed" {
+            bail!("subscribe rejected: {}", r.dump());
+        }
+        Ok(())
+    }
+
+    /// Next streamed event (`row`, `job_done`, `bye`, …); `Ok(None)` when
+    /// the daemon hangs up (clean EOF or a kill mid-frame). Events that
+    /// arrived during a [`Client::request`] are delivered first.
+    pub fn next_event(&mut self) -> Result<Option<Value>> {
+        if let Some(v) = self.pending.pop_front() {
+            return Ok(Some(v));
+        }
+        match self.reader.read_frame() {
+            Recv::Frame(v) => Ok(Some(v)),
+            Recv::Bad(reason) => bail!("daemon sent a malformed frame: {reason}"),
+            Recv::Torn | Recv::Eof => Ok(None),
+        }
+    }
+
+    /// Consume events until `job` completes (requires a subscription
+    /// covering it — e.g. `submit(.., watch=true)`). Each `row` frame is
+    /// handed to `on_row`; returns the `job_done` frame.
+    pub fn wait_job(
+        &mut self,
+        job: &str,
+        mut on_row: impl FnMut(&Value),
+    ) -> Result<Value> {
+        loop {
+            let Some(event) = self.next_event()? else {
+                bail!("daemon hung up before job {job} completed");
+            };
+            let kind = event.get("reply")?.as_str()?.to_string();
+            let for_job = event
+                .opt("job")
+                .and_then(|j| j.as_str().ok())
+                .map_or(false, |j| j == job);
+            match kind.as_str() {
+                "row" if for_job => on_row(&event),
+                "job_done" if for_job => return Ok(event),
+                "bye" => bail!("daemon drained before job {job} completed"),
+                _ => {}
+            }
+        }
+    }
+}

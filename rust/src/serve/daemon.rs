@@ -1,0 +1,1022 @@
+//! The `slimadam serve` daemon (DESIGN.md §16).
+//!
+//! One process owns the warm executable cache and a **persistent** worker
+//! pool: unlike the one-shot scheduler (which spawns scoped workers per
+//! sweep), the daemon's workers live for the daemon's lifetime, so their
+//! thread-local `exec_cache` entries stay warm across every request that
+//! ever shards onto them. Three thread families:
+//!
+//! * **Accept loop** (the caller's thread): nonblocking accept, one
+//!   handler thread per connection, drain supervision.
+//! * **Connection handlers**: frame loop — `submit` journals into the
+//!   [`DurableQueue`] (bounded: at capacity the reply is an explicit
+//!   `overloaded`, nothing is admitted), `subscribe` registers the
+//!   connection as a result sink, `status`/`cancel`/`ping` answer inline,
+//!   `drain` arms the drain state machine. A malformed frame is rejected
+//!   with an `error` reply and the connection continues (resync at the
+//!   next newline); a torn frame ends the connection.
+//! * **Dispatcher**: collects every queued job into a *wave*, expands the
+//!   specs, restores per-tenant resume state, and plans batched dispatch
+//!   groups **across** requests with `coordinator::batch::plan` — two
+//!   tenants' same-artifact jobs share a lockstep dispatch. The batch cap
+//!   adapts to queue depth ([`adaptive_batch`]): an idle daemon runs
+//!   unbatched for latency, a deep queue stacks up to the configured cap
+//!   for throughput. Result rows stream to the tenant's run store and to
+//!   subscribers the moment their group finishes.
+//!
+//! ## Drain state machine
+//!
+//! `running → draining → drained`. `drain` (request or SIGTERM/SIGINT)
+//! stops admission (`draining` replies), lets in-flight dispatch groups
+//! finish, journals their completions, notifies subscribers (`bye`), and
+//! returns from [`run`] — the CLI then flushes traces and exits 0. Jobs
+//! still queued but never dispatched stay journal-pending and replay on
+//! the next start.
+//!
+//! ## Determinism
+//!
+//! Job results are pure functions of their configs; wave composition,
+//! batch grouping, worker count and tenant interleaving affect only
+//! scheduling. Rows are emitted through `SweepScheduler::summary_row` —
+//! the same constructor the CLI sweep path uses — with per-job grid
+//! indices, so a daemon-run sweep is row-for-row byte-identical to the
+//! one-shot CLI run (`rust/tests/serve_daemon.rs`).
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{batch, SweepScheduler, TrainConfig};
+use crate::json::Value;
+use crate::metrics::JsonlWriter;
+use crate::obs::{self, registry, SpanKind};
+use crate::rng::stable_hash64;
+use crate::runstore::{config_key, RunStore, StoreMeta, SCHEMA_VERSION};
+
+use super::proto::{self, Addr, Conn, FrameReader, Recv, Request, ServeListener};
+use super::queue::{Admission, DurableQueue, QueueEntry};
+use super::valid_tenant;
+
+/// Daemon configuration (`slimadam serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Unix socket path or `host:port`.
+    pub addr: String,
+    /// State directory: `queue.jsonl` + `tenants/<ns>/` run stores.
+    pub state_dir: PathBuf,
+    /// Worker threads (0 = one per core, capped at 8).
+    pub workers: usize,
+    /// Upper bound for adaptive batched dispatch (1 = never batch).
+    pub max_batch: usize,
+    /// Bounded-queue capacity in jobs; beyond it submits get `overloaded`.
+    pub queue_cap: usize,
+    /// Suppress per-row progress lines.
+    pub quiet: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            addr: String::new(),
+            state_dir: PathBuf::from("results").join("serve"),
+            workers: 0,
+            max_batch: 8,
+            queue_cap: 64,
+            quiet: false,
+        }
+    }
+}
+
+/// Queue-depth–adaptive dispatch batch size: the backpressure knob. A
+/// near-empty queue dispatches unbatched (lowest submit→complete latency);
+/// deeper queues stack same-artifact jobs for throughput, up to `cap`.
+pub fn adaptive_batch(queued_configs: usize, cap: usize) -> usize {
+    let by_depth = match queued_configs {
+        0..=2 => 1,
+        3..=8 => 2,
+        9..=32 => 4,
+        _ => 8,
+    };
+    by_depth.min(cap.max(1))
+}
+
+/// SIGTERM/SIGINT → drain, latched process-wide. The handler only stores
+/// a relaxed atomic flag (async-signal-safe); the accept loop polls it.
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_drain_signals() {
+    extern "C" fn on_signal(_: i32) {
+        SIGNAL_DRAIN.store(true, Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    let handler = on_signal as extern "C" fn(i32);
+    unsafe {
+        signal(15, handler as usize); // SIGTERM
+        signal(2, handler as usize); // SIGINT
+    }
+}
+
+#[cfg(not(unix))]
+fn install_drain_signals() {}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shard {
+    deque: Mutex<VecDeque<Task>>,
+    wake: Condvar,
+}
+
+/// Long-lived sharded workers. Tasks land on the shard their key selects
+/// (same key → same worker → warm thread-local `exec_cache` across waves
+/// and daemon uptime); idle workers steal from the fullest other shard,
+/// bumping the shared `pool.steals` counter.
+struct WorkerPool {
+    shards: Vec<Arc<Shard>>,
+    stop: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(n: usize) -> WorkerPool {
+        let n = n.max(1);
+        let shards: Vec<Arc<Shard>> = (0..n)
+            .map(|_| {
+                Arc::new(Shard {
+                    deque: Mutex::new(VecDeque::new()),
+                    wake: Condvar::new(),
+                })
+            })
+            .collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handles = (0..n)
+            .map(|w| {
+                let shards = shards.clone();
+                let stop = stop.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || worker_loop(w, &shards, &stop))
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        WorkerPool { shards, stop, handles }
+    }
+
+    fn submit(&self, key: u64, task: Task) {
+        let shard = &self.shards[(key % self.shards.len() as u64) as usize];
+        shard.deque.lock().unwrap().push_back(task);
+        shard.wake.notify_one();
+    }
+
+    fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for s in &self.shards {
+            s.wake.notify_all();
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(me: usize, shards: &[Arc<Shard>], stop: &AtomicBool) {
+    let steals = registry::counter("pool.steals");
+    loop {
+        // Own shard first — shard affinity is what keeps caches warm.
+        // Pop under the lock, run outside it: tasks must never block
+        // submits to (or length probes of) their shard.
+        let own = shards[me].deque.lock().unwrap().pop_front();
+        if let Some(task) = own {
+            task();
+            continue;
+        }
+        // steal a whole group from the fullest other shard
+        let victim = shards
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != me)
+            .max_by_key(|(_, s)| s.deque.lock().unwrap().len());
+        if let Some((_, s)) = victim {
+            let stolen = s.deque.lock().unwrap().pop_back();
+            if let Some(task) = stolen {
+                steals.inc();
+                task();
+                continue;
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let guard = shards[me].deque.lock().unwrap();
+        if guard.is_empty() && !stop.load(Ordering::SeqCst) {
+            let _ = shards[me]
+                .wake
+                .wait_timeout(guard, Duration::from_millis(20));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared daemon state
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct JobState {
+    tenant: String,
+    total: usize,
+    ran: usize,
+    skipped: usize,
+    state: &'static str, // queued | running | done | failed
+}
+
+struct Subscriber {
+    conn: Mutex<Conn>,
+    tenant: Option<String>,
+    job: Option<String>,
+    dead: AtomicBool,
+}
+
+impl Subscriber {
+    fn wants(&self, tenant: &str, job: &str) -> bool {
+        if self.dead.load(Ordering::Relaxed) {
+            return false;
+        }
+        self.tenant.as_deref().map_or(true, |t| t == tenant)
+            && self.job.as_deref().map_or(true, |j| j == job)
+    }
+
+    fn send(&self, frame: &Value) {
+        let mut conn = self.conn.lock().unwrap();
+        if proto::write_frame(&mut *conn, frame).is_err() {
+            self.dead.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+struct Shared {
+    opts: ServeOpts,
+    queue: Mutex<DurableQueue>,
+    /// Dispatcher wake (paired with `queue`).
+    work: Condvar,
+    jobs: Mutex<HashMap<String, JobState>>,
+    subs: Mutex<Vec<Arc<Subscriber>>>,
+    draining: AtomicBool,
+    /// Set once the dispatcher exits; the accept loop then shuts down.
+    dispatcher_done: AtomicBool,
+}
+
+impl Shared {
+    fn publish(&self, tenant: &str, job: &str, frame: &Value) {
+        let subs = self.subs.lock().unwrap();
+        for s in subs.iter() {
+            if s.wants(tenant, job) {
+                s.send(frame);
+            }
+        }
+    }
+
+    fn broadcast(&self, frame: &Value) {
+        let subs = self.subs.lock().unwrap();
+        for s in subs.iter() {
+            if !s.dead.load(Ordering::Relaxed) {
+                s.send(frame);
+            }
+        }
+    }
+
+    fn prune_subs(&self) {
+        self.subs
+            .lock()
+            .unwrap()
+            .retain(|s| !s.dead.load(Ordering::Relaxed));
+    }
+
+    fn set_queue_gauges(&self) {
+        let q = self.queue.lock().unwrap();
+        registry::gauge("serve.queue_depth").set(q.queued() as i64);
+        registry::gauge("serve.queue_configs").set(q.queued_configs() as i64);
+    }
+}
+
+/// Handle on an in-process daemon ([`spawn`]) — tests and benches drive it
+/// through a [`super::Client`] and `join` after draining.
+pub struct ServerHandle {
+    /// The address the daemon is serving on.
+    pub addr: String,
+    thread: JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    /// Wait for the daemon to drain and return its exit result.
+    pub fn join(self) -> Result<()> {
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("serve daemon panicked"),
+        }
+    }
+}
+
+/// Run the daemon on the caller's thread until drained. Exit `Ok(())`
+/// means a graceful drain — the CLI maps it to exit code 0.
+pub fn run(opts: ServeOpts) -> Result<()> {
+    serve_on(Addr::parse(&opts.addr).bind()?, opts)
+}
+
+/// Bind and serve on a background thread (in-process daemon for tests and
+/// benches — same code path as [`run`]).
+pub fn spawn(opts: ServeOpts) -> Result<ServerHandle> {
+    let listener = Addr::parse(&opts.addr).bind()?;
+    let addr = opts.addr.clone();
+    let thread = std::thread::Builder::new()
+        .name("serve-accept".into())
+        .spawn(move || serve_on(listener, opts))?;
+    Ok(ServerHandle { addr, thread })
+}
+
+fn serve_on(listener: ServeListener, opts: ServeOpts) -> Result<()> {
+    install_drain_signals();
+    SIGNAL_DRAIN.store(false, Ordering::Relaxed);
+    let queue = DurableQueue::open(&opts.state_dir, opts.queue_cap)?;
+    let replayed = queue.queued();
+    if !opts.quiet {
+        eprintln!(
+            "serve: listening on {} — state {}, {} job(s) replayed{}",
+            opts.addr,
+            opts.state_dir.display(),
+            replayed,
+            if queue.replay_skipped > 0 {
+                format!(" ({} torn/bad journal row(s) skipped)", queue.replay_skipped)
+            } else {
+                String::new()
+            }
+        );
+    }
+    let workers = if opts.workers == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(8))
+            .unwrap_or(2)
+    } else {
+        opts.workers
+    };
+    let shared = Arc::new(Shared {
+        opts: opts.clone(),
+        queue: Mutex::new(queue),
+        work: Condvar::new(),
+        jobs: Mutex::new(HashMap::new()),
+        subs: Mutex::new(Vec::new()),
+        draining: AtomicBool::new(false),
+        dispatcher_done: AtomicBool::new(false),
+    });
+    // replayed jobs surface in status as queued
+    {
+        let q = shared.queue.lock().unwrap();
+        let mut jobs = shared.jobs.lock().unwrap();
+        for e in q.pending_entries() {
+            jobs.insert(
+                e.id.clone(),
+                JobState {
+                    tenant: e.tenant.clone(),
+                    total: e.spec.n_configs(),
+                    ran: 0,
+                    skipped: 0,
+                    state: "queued",
+                },
+            );
+        }
+    }
+    shared.set_queue_gauges();
+
+    let pool = WorkerPool::new(workers);
+    let dispatcher = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name("serve-dispatch".into())
+            .spawn(move || {
+                dispatcher_loop(&shared, &pool);
+                pool.shutdown();
+            })?
+    };
+
+    listener.set_nonblocking(true)?;
+    let mut handler_seq = 0usize;
+    loop {
+        if SIGNAL_DRAIN.load(Ordering::Relaxed) {
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.work.notify_all();
+        }
+        if shared.dispatcher_done.load(Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok(Some(conn)) => {
+                let shared = shared.clone();
+                handler_seq += 1;
+                let _ = std::thread::Builder::new()
+                    .name(format!("serve-conn-{handler_seq}"))
+                    .spawn(move || handle_conn(&shared, conn));
+            }
+            Ok(None) => std::thread::sleep(Duration::from_millis(10)),
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    dispatcher.join().ok();
+    shared.broadcast(&proto::reply("bye"));
+    // a SIGKILL leaves the socket file behind; a drain cleans it up
+    if let Addr::Unix(path) = Addr::parse(&shared.opts.addr) {
+        drop(listener);
+        let _ = std::fs::remove_file(path);
+    }
+    if !shared.opts.quiet {
+        eprintln!("serve: drained");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Connection handler
+// ---------------------------------------------------------------------------
+
+fn handle_conn(shared: &Arc<Shared>, conn: Conn) {
+    let Ok(write_half) = conn.try_clone() else { return };
+    let write_half = Arc::new(Mutex::new(write_half));
+    let mut reader = FrameReader::new(conn);
+    loop {
+        match reader.read_frame() {
+            Recv::Frame(v) => {
+                let reply = match Request::from_value(&v) {
+                    Ok(req) => handle_request(shared, &write_half, req),
+                    Err(e) => {
+                        let mut r = proto::reply("error");
+                        r.set("error", format!("{e:#}"));
+                        r
+                    }
+                };
+                let mut w = write_half.lock().unwrap();
+                if proto::write_frame(&mut *w, &reply).is_err() {
+                    return;
+                }
+            }
+            // Malformed but complete line: reject the frame, keep the
+            // connection — the stream is already resynced past its \n.
+            Recv::Bad(reason) => {
+                registry::counter("serve.bad_frames").inc();
+                let mut r = proto::reply("error");
+                r.set("error", format!("bad frame: {reason}"));
+                let mut w = write_half.lock().unwrap();
+                if proto::write_frame(&mut *w, &r).is_err() {
+                    return;
+                }
+            }
+            // Torn mid-frame (peer killed) or clean EOF: done.
+            Recv::Torn | Recv::Eof => return,
+        }
+    }
+}
+
+fn handle_request(
+    shared: &Arc<Shared>,
+    write_half: &Arc<Mutex<Conn>>,
+    req: Request,
+) -> Value {
+    match req {
+        Request::Ping => proto::reply("pong"),
+        Request::Drain => {
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.work.notify_all();
+            proto::reply("draining")
+        }
+        Request::Status => status_reply(shared),
+        Request::Cancel { job } => {
+            let cancelled = {
+                let mut q = shared.queue.lock().unwrap();
+                q.cancel(&job).unwrap_or(false)
+            };
+            if cancelled {
+                if let Some(j) = shared.jobs.lock().unwrap().get_mut(&job) {
+                    j.state = "cancelled";
+                }
+                shared.set_queue_gauges();
+            }
+            let mut r = proto::reply("cancelled");
+            r.set("job", job.as_str()).set("removed", cancelled);
+            r
+        }
+        Request::Subscribe { tenant, job } => {
+            let sub = subscribe(shared, write_half, tenant, job);
+            match sub {
+                Ok(()) => proto::reply("subscribed"),
+                Err(e) => {
+                    let mut r = proto::reply("error");
+                    r.set("error", format!("{e:#}"));
+                    r
+                }
+            }
+        }
+        Request::Submit { tenant, spec, watch } => {
+            if !valid_tenant(&tenant) {
+                let mut r = proto::reply("error");
+                r.set(
+                    "error",
+                    format!(
+                        "invalid tenant {tenant:?}: one path-safe segment \
+                         ([A-Za-z0-9_-], ≤64 chars)"
+                    ),
+                );
+                return r;
+            }
+            if let Err(e) = spec.validate() {
+                let mut r = proto::reply("error");
+                r.set("error", format!("invalid job spec: {e:#}"));
+                return r;
+            }
+            if shared.draining.load(Ordering::SeqCst) {
+                return proto::reply("draining");
+            }
+            let admission = {
+                let mut q = shared.queue.lock().unwrap();
+                let adm = q.submit(&tenant, spec);
+                if let Ok(Admission::Queued(entry)) = &adm {
+                    // Register job state and any watch subscription while
+                    // still holding the queue lock: the dispatcher cannot
+                    // take this job (take_all needs the lock) until both
+                    // are visible, so even a microsecond synthetic wave
+                    // can never outrun its own watcher. Stream frames may
+                    // still reach the wire before the queued reply — the
+                    // client buffers them (`Client::request`).
+                    shared.jobs.lock().unwrap().insert(
+                        entry.id.clone(),
+                        JobState {
+                            tenant: entry.tenant.clone(),
+                            total: entry.spec.n_configs(),
+                            ran: 0,
+                            skipped: 0,
+                            state: "queued",
+                        },
+                    );
+                    if watch {
+                        let _ = subscribe(
+                            shared,
+                            write_half,
+                            None,
+                            Some(entry.id.clone()),
+                        );
+                    }
+                }
+                adm
+            };
+            match admission {
+                Err(e) => {
+                    let mut r = proto::reply("error");
+                    r.set("error", format!("journal write failed: {e:#}"));
+                    r
+                }
+                Ok(Admission::Overloaded { queue_depth }) => {
+                    registry::counter("serve.overloaded").inc();
+                    let mut r = proto::reply("overloaded");
+                    r.set("queue_depth", queue_depth)
+                        .set("queue_cap", shared.opts.queue_cap);
+                    r
+                }
+                Ok(Admission::Queued(entry)) => {
+                    registry::counter("serve.submitted").inc();
+                    shared.set_queue_gauges();
+                    shared.work.notify_all();
+                    let mut r = proto::reply("queued");
+                    r.set("job", entry.id.as_str())
+                        .set("tenant", entry.tenant.as_str())
+                        .set("configs", entry.spec.n_configs())
+                        .set("seq", entry.seq as usize);
+                    r
+                }
+            }
+        }
+    }
+}
+
+fn subscribe(
+    shared: &Arc<Shared>,
+    write_half: &Arc<Mutex<Conn>>,
+    tenant: Option<String>,
+    job: Option<String>,
+) -> Result<()> {
+    let conn = write_half.lock().unwrap().try_clone()?;
+    shared.subs.lock().unwrap().push(Arc::new(Subscriber {
+        conn: Mutex::new(conn),
+        tenant,
+        job,
+        dead: AtomicBool::new(false),
+    }));
+    Ok(())
+}
+
+fn status_reply(shared: &Arc<Shared>) -> Value {
+    let (queued, queued_configs, live) = {
+        let q = shared.queue.lock().unwrap();
+        (q.queued(), q.queued_configs(), q.live())
+    };
+    let jobs = shared.jobs.lock().unwrap();
+    let mut running = 0usize;
+    let mut done = 0usize;
+    let mut job_list = Vec::new();
+    for (id, j) in jobs.iter() {
+        match j.state {
+            "running" => running += 1,
+            "done" | "failed" => done += 1,
+            _ => {}
+        }
+        let mut row = Value::obj();
+        row.set("job", id.as_str())
+            .set("tenant", j.tenant.as_str())
+            .set("state", j.state)
+            .set("total", j.total)
+            .set("ran", j.ran)
+            .set("skipped", j.skipped);
+        job_list.push(row);
+    }
+    job_list.sort_by(|a, b| {
+        let key = |v: &Value| {
+            v.opt("job")
+                .and_then(|j| j.as_str().ok().map(String::from))
+                .unwrap_or_default()
+        };
+        key(a).cmp(&key(b))
+    });
+    let mut r = proto::reply("status");
+    r.set("queued", queued)
+        .set("queued_configs", queued_configs)
+        .set("live", live)
+        .set("running", running)
+        .set("done", done)
+        .set("queue_cap", shared.opts.queue_cap)
+        .set("draining", shared.draining.load(Ordering::SeqCst))
+        .set("jobs", Value::Arr(job_list));
+    r
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+fn dispatcher_loop(shared: &Arc<Shared>, pool: &WorkerPool) {
+    loop {
+        // Wait for work or a drain. Guard the queue lock only while
+        // deciding; waves execute lock-free so submits keep landing.
+        let wave: Vec<QueueEntry> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.draining.load(Ordering::SeqCst) {
+                    drop(q);
+                    shared.dispatcher_done.store(true, Ordering::SeqCst);
+                    return;
+                }
+                if q.queued() > 0 {
+                    break q.take_all();
+                }
+                let (guard, _) = shared
+                    .work
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        shared.set_queue_gauges();
+        {
+            let mut jobs = shared.jobs.lock().unwrap();
+            for e in &wave {
+                if let Some(j) = jobs.get_mut(&e.id) {
+                    j.state = "running";
+                }
+            }
+        }
+        if let Err(e) = run_wave(shared, pool, &wave) {
+            // Wave-level failure (store open, journal write): mark every
+            // job failed so clients see a terminal state. Their journal
+            // rows stay pending and replay on the next daemon start.
+            eprintln!("serve: wave failed: {e:#}");
+            let mut jobs = shared.jobs.lock().unwrap();
+            for e in &wave {
+                if let Some(j) = jobs.get_mut(&e.id) {
+                    j.state = "failed";
+                }
+            }
+        }
+        shared.prune_subs();
+    }
+}
+
+struct WaveJob {
+    entry: QueueEntry,
+    /// Indices into the wave's flat config list.
+    flat: std::ops::Range<usize>,
+    skipped: usize,
+    completed: AtomicUsize,
+    failed: AtomicBool,
+    /// Finalize-once latch: the last executed config and the resume-only
+    /// sweep both race toward [`finalize_job`].
+    finalized: AtomicBool,
+}
+
+/// Execute one wave: every job taken from the queue, planned together.
+fn run_wave(shared: &Arc<Shared>, pool: &WorkerPool, wave: &[QueueEntry]) -> Result<()> {
+    let t0 = obs::clock();
+    // --- expand specs into one flat config list -------------------------
+    let mut flat: Vec<TrainConfig> = Vec::new();
+    let mut jobs: Vec<WaveJob> = Vec::new();
+    for entry in wave {
+        let configs = entry
+            .spec
+            .expand()
+            .with_context(|| format!("expanding job {}", entry.id))?;
+        let start = flat.len();
+        flat.extend(configs);
+        jobs.push(WaveJob {
+            entry: entry.clone(),
+            flat: start..flat.len(),
+            skipped: 0,
+            completed: AtomicUsize::new(0),
+            failed: AtomicBool::new(false),
+            finalized: AtomicBool::new(false),
+        });
+    }
+    let keys: Vec<u64> = flat.iter().map(config_key).collect();
+    // flat index → owning wave job
+    let mut owner: Vec<usize> = vec![0; flat.len()];
+    for (j, job) in jobs.iter().enumerate() {
+        for slot in &mut owner[job.flat.clone()] {
+            *slot = j;
+        }
+    }
+
+    // --- per-tenant stores + resume indices -----------------------------
+    // Tenant isolation: each namespace gets a private store directory and
+    // a private resume index — one tenant's completed rows never satisfy
+    // another's lookups, even for identical configs.
+    let tenants_dir = shared.opts.state_dir.join("tenants");
+    let mut stores: HashMap<String, (RunStore, crate::runstore::RunIndex)> =
+        HashMap::new();
+    for job in &jobs {
+        if stores.contains_key(&job.entry.tenant) {
+            continue;
+        }
+        let base = &flat[job.flat.start];
+        let meta = StoreMeta {
+            schema_version: SCHEMA_VERSION,
+            base_seed: job.entry.spec.seed,
+            backend: base.backend.key(),
+        };
+        let store = RunStore::open_with(tenants_dir.join(&job.entry.tenant), &meta)?;
+        store.repair_tails()?;
+        let index = store.index()?;
+        stores.insert(job.entry.tenant.clone(), (store, index));
+    }
+    let mut writers: HashMap<String, Arc<Mutex<JsonlWriter>>> = HashMap::new();
+    for (tenant, (store, _)) in &stores {
+        writers.insert(
+            tenant.clone(),
+            Arc::new(Mutex::new(JsonlWriter::append(store.primary())?)),
+        );
+    }
+
+    // --- resume: skip configs the tenant's store already holds ----------
+    let jobs_skipped = registry::counter("sweep.jobs_skipped");
+    let mut pending: Vec<usize> = Vec::with_capacity(flat.len());
+    for (i, key) in keys.iter().enumerate() {
+        let job = &jobs[owner[i]];
+        let (_, index) = &stores[&job.entry.tenant];
+        if index.contains(*key) {
+            job.completed.fetch_add(1, Ordering::Relaxed);
+            jobs_skipped.inc();
+            obs::emit_instant(SpanKind::ResumeSkip, obs::NO_LABEL, [i as u64, 0, 0, 0]);
+            continue;
+        }
+        pending.push(i);
+    }
+    for job in jobs.iter_mut() {
+        job.skipped = job.completed.load(Ordering::Relaxed);
+    }
+    let jobs = Arc::new(jobs);
+
+    // --- plan dispatch groups across every queued request ---------------
+    let batch = adaptive_batch(pending.len(), shared.opts.max_batch);
+    let groups: Vec<Vec<usize>> = if batch <= 1 {
+        pending.iter().map(|&i| vec![i]).collect()
+    } else {
+        batch::plan(&flat, &pending, batch)
+    };
+    let occupancy = registry::histogram("batch.occupancy");
+    for g in &groups {
+        occupancy.observe(g.len() as u64);
+    }
+    if !shared.opts.quiet {
+        eprintln!(
+            "serve: wave — {} job(s), {} config(s) ({} resumed), {} group(s), batch ≤{batch}",
+            wave.len(),
+            flat.len(),
+            flat.len() - pending.len(),
+            groups.len(),
+        );
+    }
+
+    // --- execute on the persistent pool ---------------------------------
+    struct WaveSync {
+        remaining: Mutex<usize>,
+        done: Condvar,
+    }
+    let sync = Arc::new(WaveSync {
+        remaining: Mutex::new(groups.len()),
+        done: Condvar::new(),
+    });
+    let flat = Arc::new(flat);
+    let keys = Arc::new(keys);
+    let owner = Arc::new(owner);
+    let writers = Arc::new(writers);
+    let jobs_run = registry::counter("sweep.jobs_run");
+    for group in groups {
+        let shard = stable_hash64(
+            SweepScheduler::shard_key(&flat[group[0]]).as_bytes(),
+        );
+        let (flat, keys, owner, writers, jobs, sync, shared) = (
+            flat.clone(),
+            keys.clone(),
+            owner.clone(),
+            writers.clone(),
+            jobs.clone(),
+            sync.clone(),
+            shared.clone(),
+        );
+        let jobs_run = jobs_run.clone();
+        pool.submit(shard, Box::new(move || {
+            match batch::run_group(&flat, &group) {
+                Ok(summaries) => {
+                    for (&i, summary) in group.iter().zip(&summaries) {
+                        let job = &jobs[owner[i]];
+                        let cfg = &flat[i];
+                        // per-job grid index — identical to the row the
+                        // one-shot CLI sweep of this grid would write
+                        let local = i - job.flat.start;
+                        let row = SweepScheduler::summary_row(cfg, summary, local);
+                        debug_assert_eq!(config_key(cfg), keys[i]);
+                        {
+                            let writer = &writers[&job.entry.tenant];
+                            let mut w = writer.lock().unwrap();
+                            let append_t0 = obs::clock();
+                            if let Err(e) = w.write(&row) {
+                                eprintln!(
+                                    "serve: row append failed for {}: {e:#}",
+                                    job.entry.id
+                                );
+                                job.failed.store(true, Ordering::Relaxed);
+                            }
+                            obs::emit_since(
+                                SpanKind::StoreAppend,
+                                obs::NO_LABEL,
+                                append_t0,
+                                [local as u64, 0, 0, 0],
+                            );
+                        }
+                        registry::counter("serve.rows_streamed").inc();
+                        let mut frame = proto::reply("row");
+                        frame
+                            .set("tenant", job.entry.tenant.as_str())
+                            .set("job", job.entry.id.as_str())
+                            .set("row", row);
+                        shared.publish(&job.entry.tenant, &job.entry.id, &frame);
+                        if !shared.opts.quiet {
+                            eprintln!(
+                                "  [{}] {:40} loss={:.4}{}",
+                                job.entry.id,
+                                summary.label,
+                                summary.result.final_train_loss,
+                                if summary.result.diverged { "  DIVERGED" } else { "" }
+                            );
+                        }
+                        finish_one(&shared, job);
+                    }
+                    jobs_run.add(group.len() as u64);
+                }
+                Err(e) => {
+                    eprintln!("serve: group failed: {e:#}");
+                    for &i in &group {
+                        let job = &jobs[owner[i]];
+                        job.failed.store(true, Ordering::Relaxed);
+                        finish_one(&shared, job);
+                    }
+                }
+            }
+            let mut left = sync.remaining.lock().unwrap();
+            *left -= 1;
+            if *left == 0 {
+                sync.done.notify_all();
+            }
+        }));
+    }
+    // resume-only jobs (every config skipped) complete without dispatch
+    for job in jobs.iter() {
+        if job.flat.len() == job.completed.load(Ordering::Relaxed) {
+            finalize_job(shared, job);
+        }
+    }
+    let mut left = sync.remaining.lock().unwrap();
+    while *left > 0 {
+        left = sync.done.wait(left).unwrap();
+    }
+    drop(left);
+    registry::counter("serve.waves").inc();
+    obs::emit_since(
+        SpanKind::ServeWave,
+        obs::NO_LABEL,
+        t0,
+        [wave.len() as u64, jobs.iter().map(|j| j.flat.len()).sum::<usize>() as u64, batch as u64, 0],
+    );
+    Ok(())
+}
+
+/// Count one finished config toward its job; finalize on the last one.
+fn finish_one(shared: &Arc<Shared>, job: &WaveJob) {
+    let done = job.completed.fetch_add(1, Ordering::Relaxed) + 1;
+    if done == job.flat.len() {
+        finalize_job(shared, job);
+    }
+}
+
+/// Journal a job's completion, update status, notify subscribers.
+fn finalize_job(shared: &Arc<Shared>, job: &WaveJob) {
+    if job.finalized.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let failed = job.failed.load(Ordering::Relaxed);
+    let total = job.flat.len();
+    let ran = total - job.skipped;
+    if !failed {
+        let mut q = shared.queue.lock().unwrap();
+        if let Err(e) = q.done(&job.entry.id, ran, job.skipped) {
+            eprintln!("serve: journaling done({}) failed: {e:#}", job.entry.id);
+        }
+    }
+    // a failed job journals nothing: it stays pending (and holds its
+    // capacity slot) and replays — resuming past completed rows — on the
+    // next daemon start
+    registry::counter("serve.jobs_completed").inc();
+    {
+        let mut jobs = shared.jobs.lock().unwrap();
+        if let Some(j) = jobs.get_mut(&job.entry.id) {
+            j.state = if failed { "failed" } else { "done" };
+            j.ran = ran;
+            j.skipped = job.skipped;
+        }
+    }
+    let mut frame = proto::reply("job_done");
+    frame
+        .set("job", job.entry.id.as_str())
+        .set("tenant", job.entry.tenant.as_str())
+        .set("ran", ran)
+        .set("skipped", job.skipped)
+        .set("failed", failed);
+    shared.publish(&job.entry.tenant, &job.entry.id, &frame);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_batch_tracks_depth_and_cap() {
+        assert_eq!(adaptive_batch(1, 8), 1);
+        assert_eq!(adaptive_batch(4, 8), 2);
+        assert_eq!(adaptive_batch(16, 8), 4);
+        assert_eq!(adaptive_batch(64, 8), 8);
+        assert_eq!(adaptive_batch(64, 2), 2, "cap wins");
+        assert_eq!(adaptive_batch(64, 0), 1, "cap 0 means unbatched");
+    }
+
+    #[test]
+    fn worker_pool_runs_tasks_with_shard_affinity_and_stealing() {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for i in 0..32u64 {
+            let hits = hits.clone();
+            // all tasks on one shard: the other worker must steal
+            pool.submit(i % 1, Box::new(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while hits.load(Ordering::SeqCst) < 32 {
+            assert!(std::time::Instant::now() < deadline, "pool stalled");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        pool.shutdown();
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
+    }
+}

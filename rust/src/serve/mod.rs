@@ -1,0 +1,276 @@
+//! Sweep-as-a-service (DESIGN.md §16).
+//!
+//! A long-lived `slimadam serve` daemon owning one warm executable cache
+//! and a persistent worker pool, fed by many concurrent clients:
+//!
+//! * [`proto`] — length-prefixed JSONL wire protocol over a Unix socket or
+//!   TCP (`submit` / `status` / `subscribe` / `cancel` / `drain` / `ping`),
+//!   torn-frame tolerant with the run store's tail discipline.
+//! * [`queue`] — durable FIFO queue journaled through the line-atomic
+//!   JSONL writer: a SIGKILLed daemon restarts, replays `queue.jsonl`, and
+//!   resumes in-flight sweeps through the run-store resume path with zero
+//!   re-execution.
+//! * [`daemon`] — accept loop, per-tenant run stores, the dispatcher that
+//!   plans batched dispatch groups *across* queued requests (queue depth
+//!   drives the batch size — the backpressure knob), streaming result
+//!   subscriptions, and the graceful drain state machine.
+//! * [`client`] — the thin client API behind `slimadam client
+//!   submit|watch|status|drain|cancel`.
+//!
+//! ## Determinism contract
+//!
+//! A job's result rows are a pure function of its expanded
+//! [`TrainConfig`]s — never of arrival order, tenant interleaving, batch
+//! grouping, or which daemon lifetime executed them. A sweep submitted to
+//! the daemon yields rows byte-identical to the one-shot `slimadam sweep`
+//! CLI run of the same grid ([`JobSpec::expand`] mirrors the CLI's config
+//! construction exactly; rows go through the scheduler's shared
+//! `summary_row`). Tenants are isolated: each namespace owns a private run
+//! store directory, and resume lookups never cross namespaces.
+
+pub mod client;
+pub mod daemon;
+pub mod proto;
+pub mod queue;
+
+pub use client::Client;
+pub use daemon::{run, spawn, ServeOpts, ServerHandle};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{DataSpec, EngineKind, TrainConfig};
+use crate::json::Value;
+use crate::rng::job_seed;
+use crate::runtime::backend::BackendSpec;
+
+/// Tenant namespaces key run-store directories, so they are restricted to
+/// one safe path segment.
+pub fn valid_tenant(ns: &str) -> bool {
+    !ns.is_empty()
+        && ns.len() <= 64
+        && ns
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// One submitted sweep: the `(optimizer × lr)` grid a single `slimadam
+/// sweep` invocation would run. Expansion reproduces the CLI's config
+/// construction field for field, which is what makes daemon-run
+/// fingerprints byte-identical to one-shot sweeps of the same grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Model name (artifact or native builtin).
+    pub model: String,
+    /// Backend spec string, e.g. `native`, `native+f32`, `pjrt@cpu:0`.
+    pub backend: String,
+    /// Optimizer presets, grid-major over [`JobSpec::lrs`].
+    pub optimizers: Vec<String>,
+    /// Learning-rate grid.
+    pub lrs: Vec<f64>,
+    /// Training steps per run.
+    pub steps: usize,
+    /// Base seed (shared by every grid point unless `seed_jobs`).
+    pub seed: u64,
+    /// Gradient accumulation steps.
+    pub accum: usize,
+    /// `Some(ruleset)` selects the fused train-step engine.
+    pub fused: Option<String>,
+    /// Derive an independent seed per grid point (`sweep --seed-jobs`).
+    pub seed_jobs: bool,
+}
+
+impl JobSpec {
+    /// A minimal native-backend spec (tests and benches).
+    pub fn native(model: &str, optimizers: &[&str], lrs: &[f64], steps: usize) -> JobSpec {
+        JobSpec {
+            model: model.to_string(),
+            backend: "native".to_string(),
+            optimizers: optimizers.iter().map(|s| s.to_string()).collect(),
+            lrs: lrs.to_vec(),
+            steps,
+            seed: 0,
+            accum: 1,
+            fused: None,
+            seed_jobs: false,
+        }
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("model", self.model.as_str())
+            .set("backend", self.backend.as_str())
+            .set(
+                "optimizers",
+                Value::Arr(self.optimizers.iter().map(|s| s.as_str().into()).collect()),
+            )
+            .set("lrs", Value::Arr(self.lrs.iter().map(|&x| x.into()).collect()))
+            .set("steps", self.steps)
+            .set("seed", format!("{:016x}", self.seed))
+            .set("accum", self.accum);
+        if let Some(ruleset) = &self.fused {
+            v.set("fused", ruleset.as_str());
+        }
+        if self.seed_jobs {
+            v.set("seed_jobs", true);
+        }
+        v
+    }
+
+    pub fn from_value(v: &Value) -> Result<JobSpec> {
+        let optimizers: Vec<String> = v
+            .get("optimizers")?
+            .as_arr()?
+            .iter()
+            .map(|o| o.as_str().map(String::from))
+            .collect::<Result<_>>()?;
+        let lrs: Vec<f64> = v
+            .get("lrs")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_f64())
+            .collect::<Result<_>>()?;
+        let seed_hex = v.get("seed")?.as_str()?;
+        let seed = u64::from_str_radix(seed_hex, 16)
+            .map_err(|e| anyhow::anyhow!("bad seed {seed_hex:?}: {e}"))?;
+        let spec = JobSpec {
+            model: v.get("model")?.as_str()?.to_string(),
+            backend: v.get("backend")?.as_str()?.to_string(),
+            optimizers,
+            lrs,
+            steps: v.get("steps")?.as_usize()?,
+            seed,
+            accum: v.get("accum")?.as_usize()?,
+            fused: v
+                .opt("fused")
+                .and_then(|r| r.as_str().ok().map(String::from)),
+            seed_jobs: v
+                .opt("seed_jobs")
+                .and_then(|b| b.as_bool().ok())
+                .unwrap_or(false),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.optimizers.is_empty() || self.lrs.is_empty() {
+            bail!("job spec needs at least one optimizer and one lr");
+        }
+        if self.steps == 0 {
+            bail!("job spec needs steps >= 1");
+        }
+        if self.optimizers.len() * self.lrs.len() > 4096 {
+            bail!("job spec grid exceeds 4096 points");
+        }
+        BackendSpec::parse(&self.backend)?;
+        Ok(())
+    }
+
+    /// Number of grid points this spec expands to.
+    pub fn n_configs(&self) -> usize {
+        self.optimizers.len() * self.lrs.len()
+    }
+
+    /// Expand to the scheduler's config list: `(optimizer, lr)` row-major,
+    /// exactly the grid `slimadam sweep --optimizers … --lrs …` builds
+    /// (same base-config defaults, same `--seed-jobs` derivation), so the
+    /// two paths share config keys and fingerprints byte for byte.
+    pub fn expand(&self) -> Result<Vec<TrainConfig>> {
+        self.validate()?;
+        let backend = BackendSpec::parse(&self.backend)?;
+        let mut base =
+            TrainConfig::auto(&self.model, &self.optimizers[0], self.lrs[0], self.steps);
+        if !TrainConfig::is_vision(&self.model) {
+            // the sweep CLI's default LM stream (main.rs data_spec)
+            base.data = DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 1234 };
+        }
+        base.backend = backend;
+        base.seed = self.seed;
+        base.accum = self.accum;
+        if let Some(ruleset) = &self.fused {
+            base.engine = EngineKind::Fused(ruleset.clone());
+        }
+        let mut configs = Vec::with_capacity(self.n_configs());
+        for opt in &self.optimizers {
+            for &lr in &self.lrs {
+                let mut cfg = base.clone();
+                cfg.optimizer = opt.clone();
+                cfg.lr = lr;
+                if self.seed_jobs {
+                    cfg.seed = job_seed(self.seed, configs.len() as u64);
+                }
+                configs.push(cfg);
+            }
+        }
+        Ok(configs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runstore::config_key;
+
+    #[test]
+    fn tenant_validation() {
+        assert!(valid_tenant("team-a_1"));
+        assert!(!valid_tenant(""));
+        assert!(!valid_tenant("a/b"));
+        assert!(!valid_tenant("../etc"));
+        assert!(!valid_tenant(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn jobspec_roundtrip() {
+        let mut spec = JobSpec::native("mlp_tiny", &["adam", "slimadam"], &[1e-3, 3e-3], 12);
+        spec.seed = 7;
+        spec.fused = Some("adam".into());
+        spec.seed_jobs = true;
+        let back = JobSpec::from_value(&spec.to_value()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn expand_matches_cli_grid_construction() {
+        // mirror main.rs base_config + LrSweep::build_configs by hand
+        let spec = JobSpec::native("gpt_micro", &["adam", "slimadam"], &[1e-3, 3e-3], 10);
+        let configs = spec.expand().unwrap();
+        assert_eq!(configs.len(), 4);
+
+        let mut base = TrainConfig::auto("gpt_micro", "adam", 1e-3, 10);
+        base.data = DataSpec::Markov { alpha: 1.07, coherence: 0.5, seed: 1234 };
+        base.backend = BackendSpec::native();
+        base.seed = 0;
+        base.accum = 1;
+        let mut expected = Vec::new();
+        for opt in ["adam", "slimadam"] {
+            for lr in [1e-3, 3e-3] {
+                let mut cfg = base.clone();
+                cfg.optimizer = opt.to_string();
+                cfg.lr = lr;
+                expected.push(cfg);
+            }
+        }
+        for (got, want) in configs.iter().zip(&expected) {
+            assert_eq!(config_key(got), config_key(want), "{}", want.label());
+        }
+    }
+
+    #[test]
+    fn seed_jobs_derives_grid_position_seeds() {
+        let mut spec = JobSpec::native("mlp_tiny", &["adam"], &[1e-3, 3e-3], 5);
+        spec.seed = 42;
+        spec.seed_jobs = true;
+        let configs = spec.expand().unwrap();
+        assert_eq!(configs[0].seed, job_seed(42, 0));
+        assert_eq!(configs[1].seed, job_seed(42, 1));
+        assert_ne!(configs[0].seed, configs[1].seed);
+    }
+
+    #[test]
+    fn oversized_grid_rejected() {
+        let lrs: Vec<f64> = (0..5000).map(|i| 1e-4 + i as f64 * 1e-7).collect();
+        let spec = JobSpec::native("mlp_tiny", &["adam"], &lrs, 5);
+        assert!(spec.validate().is_err());
+    }
+}

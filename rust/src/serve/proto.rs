@@ -1,0 +1,499 @@
+//! Wire protocol — length-prefixed JSONL frames over a Unix socket or TCP
+//! (DESIGN.md §16).
+//!
+//! A frame is one line: `<len> <payload>\n`, where `len` is the decimal
+//! byte count of `payload` and `payload` is a single-line JSON object
+//! serialized by [`crate::json::Value::dump`] (which never emits raw
+//! newlines — control characters are `\u`-escaped). The framing is chosen
+//! so that a *torn* frame — a client or daemon killed mid-write — has the
+//! exact signature of a torn run-store JSONL tail: the stream's final line
+//! lacks its `\n`. Recovery therefore reuses the same discipline as
+//! [`crate::runstore::reader::Tolerance::TornTail`]: a malformed line is
+//! rejected as one unit and the connection resynchronizes at the next
+//! newline, never desyncing mid-stream (`rust/tests/serve_protocol.rs`
+//! property-tests every split point).
+//!
+//! The length prefix is a cheap integrity check layered on top: a payload
+//! whose byte count disagrees with its header is rejected before the JSON
+//! parser runs, and a header promising more than [`MAX_FRAME`] bytes drops
+//! the connection instead of buffering unboundedly.
+//!
+//! [`Addr`] abstracts the two transports: anything containing a `:` whose
+//! tail parses as a port is TCP (`host:port`), everything else is a Unix
+//! socket path.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+
+/// Upper bound on one frame's payload bytes. A submit of a full LR grid is
+/// a few KiB; a megabyte means a confused or hostile peer.
+pub const MAX_FRAME: usize = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------------
+
+/// Serialize one frame: `<len> <payload>\n`.
+pub fn encode(v: &Value) -> String {
+    let payload = v.dump();
+    format!("{} {payload}\n", payload.len())
+}
+
+/// Decode one complete line (without its trailing `\n`) into a frame
+/// payload. Errors describe the rejection; the caller's stream position is
+/// already past the line, so rejecting never desyncs the connection.
+pub fn decode_line(line: &str) -> Result<Value> {
+    let Some((len_str, payload)) = line.split_once(' ') else {
+        bail!("frame has no length prefix: {:?}", truncate(line));
+    };
+    let len: usize = len_str
+        .parse()
+        .with_context(|| format!("bad frame length {:?}", truncate(len_str)))?;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds MAX_FRAME {MAX_FRAME}");
+    }
+    if payload.len() != len {
+        bail!(
+            "frame length mismatch: header promises {len} bytes, payload \
+             carries {} — torn or interleaved write",
+            payload.len()
+        );
+    }
+    Value::parse(payload).with_context(|| format!("frame payload is not JSON: {:?}", truncate(payload)))
+}
+
+fn truncate(s: &str) -> String {
+    if s.len() <= 80 {
+        s.to_string()
+    } else {
+        let mut end = 80;
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        format!("{}…", &s[..end])
+    }
+}
+
+/// One read attempt's outcome. `Bad` frames leave the connection usable
+/// (the reader is positioned after the offending line); `Torn` and `Eof`
+/// end it.
+#[derive(Debug)]
+pub enum Recv {
+    /// A complete, well-formed frame.
+    Frame(Value),
+    /// A complete line that failed validation — rejected, stream intact.
+    Bad(String),
+    /// The stream ended mid-line (peer killed mid-write) or errored.
+    Torn,
+    /// Clean end-of-stream at a frame boundary.
+    Eof,
+}
+
+/// Buffered frame reader over any byte stream.
+pub struct FrameReader<R: Read> {
+    inner: BufReader<R>,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(stream: R) -> FrameReader<R> {
+        FrameReader { inner: BufReader::new(stream) }
+    }
+
+    /// Read the next frame. Never blocks past the underlying stream's own
+    /// read timeout; never buffers more than [`MAX_FRAME`] + header bytes
+    /// for one line.
+    pub fn read_frame(&mut self) -> Recv {
+        let mut line: Vec<u8> = Vec::new();
+        // Bounded read_until: a line longer than the frame cap (plus
+        // header slack) is abandoned as hostile.
+        let cap = MAX_FRAME + 32;
+        loop {
+            let mut byte = [0u8; 1];
+            match self.inner.read(&mut byte) {
+                Ok(0) => {
+                    return if line.is_empty() { Recv::Eof } else { Recv::Torn };
+                }
+                Ok(_) => {
+                    if byte[0] == b'\n' {
+                        break;
+                    }
+                    line.push(byte[0]);
+                    if line.len() > cap {
+                        return Recv::Bad(format!(
+                            "line exceeds {cap} bytes without newline"
+                        ));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Recv::Torn,
+            }
+        }
+        let text = match std::str::from_utf8(&line) {
+            Ok(t) => t,
+            Err(_) => return Recv::Bad("frame is not UTF-8".into()),
+        };
+        match decode_line(text) {
+            Ok(v) => Recv::Frame(v),
+            Err(e) => Recv::Bad(format!("{e:#}")),
+        }
+    }
+}
+
+/// Write one frame (single `write_all` + flush, mirroring the run store's
+/// line-atomic appends: a kill tears at most the final line).
+pub fn write_frame<W: Write>(w: &mut W, v: &Value) -> Result<()> {
+    w.write_all(encode(v).as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Transport
+// ---------------------------------------------------------------------------
+
+/// A daemon address: Unix socket path or TCP `host:port`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Addr {
+    /// Filesystem Unix-domain socket.
+    Unix(PathBuf),
+    /// TCP `host:port`.
+    Tcp(String),
+}
+
+impl Addr {
+    /// `host:port` if the tail after the last `:` parses as a port and the
+    /// string is not a path; otherwise a Unix socket path.
+    pub fn parse(s: &str) -> Addr {
+        if !s.contains('/') {
+            if let Some((_, port)) = s.rsplit_once(':') {
+                if port.parse::<u16>().is_ok() {
+                    return Addr::Tcp(s.to_string());
+                }
+            }
+        }
+        Addr::Unix(PathBuf::from(s))
+    }
+
+    /// Bind a listener. A stale Unix socket file (a SIGKILLed daemon never
+    /// unlinks) is detected by a probe connect: if nothing answers, the
+    /// file is removed and the bind retried; if something answers, a
+    /// daemon is already serving there.
+    pub fn bind(&self) -> Result<ServeListener> {
+        match self {
+            Addr::Tcp(hostport) => {
+                let l = TcpListener::bind(hostport)
+                    .with_context(|| format!("binding tcp {hostport}"))?;
+                Ok(ServeListener::Tcp(l))
+            }
+            #[cfg(unix)]
+            Addr::Unix(path) => {
+                if let Some(dir) = path.parent() {
+                    if !dir.as_os_str().is_empty() {
+                        std::fs::create_dir_all(dir)?;
+                    }
+                }
+                match UnixListener::bind(path) {
+                    Ok(l) => Ok(ServeListener::Unix(l)),
+                    Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                        if UnixStream::connect(path).is_ok() {
+                            bail!(
+                                "a daemon is already serving on {}",
+                                path.display()
+                            );
+                        }
+                        std::fs::remove_file(path)?;
+                        let l = UnixListener::bind(path).with_context(|| {
+                            format!("binding unix socket {}", path.display())
+                        })?;
+                        Ok(ServeListener::Unix(l))
+                    }
+                    Err(e) => Err(e).with_context(|| {
+                        format!("binding unix socket {}", path.display())
+                    }),
+                }
+            }
+            #[cfg(not(unix))]
+            Addr::Unix(path) => bail!(
+                "unix socket {:?} unsupported on this platform — use host:port",
+                path
+            ),
+        }
+    }
+
+    /// Connect a client.
+    pub fn connect(&self) -> Result<Conn> {
+        match self {
+            Addr::Tcp(hostport) => {
+                let s = TcpStream::connect(hostport)
+                    .with_context(|| format!("connecting to tcp {hostport}"))?;
+                s.set_nodelay(true).ok();
+                Ok(Conn::Tcp(s))
+            }
+            #[cfg(unix)]
+            Addr::Unix(path) => {
+                let s = UnixStream::connect(path).with_context(|| {
+                    format!("connecting to unix socket {}", path.display())
+                })?;
+                Ok(Conn::Unix(s))
+            }
+            #[cfg(not(unix))]
+            Addr::Unix(path) => bail!(
+                "unix socket {:?} unsupported on this platform — use host:port",
+                path
+            ),
+        }
+    }
+}
+
+/// Bound daemon listener (Unix or TCP).
+pub enum ServeListener {
+    #[cfg(unix)]
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl ServeListener {
+    pub fn set_nonblocking(&self, on: bool) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            ServeListener::Unix(l) => l.set_nonblocking(on)?,
+            ServeListener::Tcp(l) => l.set_nonblocking(on)?,
+        }
+        Ok(())
+    }
+
+    /// Accept one connection; `Ok(None)` when nonblocking and nothing is
+    /// waiting.
+    pub fn accept(&self) -> Result<Option<Conn>> {
+        let res = match self {
+            #[cfg(unix)]
+            ServeListener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            ServeListener::Tcp(l) => l.accept().map(|(s, _)| {
+                s.set_nodelay(true).ok();
+                Conn::Tcp(s)
+            }),
+        };
+        match res {
+            Ok(c) => Ok(Some(c)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// One accepted or dialed connection.
+#[derive(Debug)]
+pub enum Conn {
+    #[cfg(unix)]
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    /// Independent handle on the same socket (reader/writer split, or a
+    /// subscriber sink written from worker threads).
+    pub fn try_clone(&self) -> Result<Conn> {
+        Ok(match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+        })
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(d)?,
+            Conn::Tcp(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+
+    pub fn set_nonblocking(&self, on: bool) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(on)?,
+            Conn::Tcp(s) => s.set_nonblocking(on)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Client → daemon operations. Replies are plain [`Value`] objects tagged
+/// by a `"reply"` field (see [`reply`]); the grammar is documented in
+/// DESIGN.md §16.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Enqueue one sweep under a tenant namespace. `watch` turns the
+    /// connection into a result subscription for the accepted job.
+    Submit {
+        tenant: String,
+        spec: super::JobSpec,
+        watch: bool,
+    },
+    /// Queue/running/done counts plus per-job states.
+    Status,
+    /// Stream result rows as they land, filtered by tenant and/or job id.
+    Subscribe {
+        tenant: Option<String>,
+        job: Option<String>,
+    },
+    /// Remove a still-queued job (best-effort: running jobs finish).
+    Cancel { job: String },
+    /// Stop admitting, finish in-flight dispatch groups, flush, exit 0.
+    Drain,
+    /// Liveness probe.
+    Ping,
+}
+
+impl Request {
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::obj();
+        match self {
+            Request::Submit { tenant, spec, watch } => {
+                v.set("op", "submit")
+                    .set("tenant", tenant.as_str())
+                    .set("spec", spec.to_value());
+                if *watch {
+                    v.set("watch", true);
+                }
+            }
+            Request::Status => {
+                v.set("op", "status");
+            }
+            Request::Subscribe { tenant, job } => {
+                v.set("op", "subscribe");
+                if let Some(t) = tenant {
+                    v.set("tenant", t.as_str());
+                }
+                if let Some(j) = job {
+                    v.set("job", j.as_str());
+                }
+            }
+            Request::Cancel { job } => {
+                v.set("op", "cancel").set("job", job.as_str());
+            }
+            Request::Drain => {
+                v.set("op", "drain");
+            }
+            Request::Ping => {
+                v.set("op", "ping");
+            }
+        }
+        v
+    }
+
+    pub fn from_value(v: &Value) -> Result<Request> {
+        let op = v.get("op")?.as_str()?;
+        Ok(match op {
+            "submit" => Request::Submit {
+                tenant: v.get("tenant")?.as_str()?.to_string(),
+                spec: super::JobSpec::from_value(v.get("spec")?)?,
+                watch: v
+                    .opt("watch")
+                    .and_then(|w| w.as_bool().ok())
+                    .unwrap_or(false),
+            },
+            "status" => Request::Status,
+            "subscribe" => Request::Subscribe {
+                tenant: v
+                    .opt("tenant")
+                    .and_then(|t| t.as_str().ok().map(String::from)),
+                job: v.opt("job").and_then(|j| j.as_str().ok().map(String::from)),
+            },
+            "cancel" => Request::Cancel {
+                job: v.get("job")?.as_str()?.to_string(),
+            },
+            "drain" => Request::Drain,
+            "ping" => Request::Ping,
+            other => bail!("unknown op {other:?}"),
+        })
+    }
+}
+
+/// Start a reply object: `{"reply": kind, ...}`. Reply kinds: `queued`,
+/// `overloaded`, `draining`, `status`, `subscribed`, `cancelled`, `pong`,
+/// `row`, `job_done`, `bye`, `error`.
+pub fn reply(kind: &str) -> Value {
+    let mut v = Value::obj();
+    v.set("reply", kind);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut v = Value::obj();
+        v.set("op", "ping").set("n", 3usize);
+        let framed = encode(&v);
+        assert!(framed.ends_with('\n'));
+        let decoded = decode_line(framed.trim_end_matches('\n')).unwrap();
+        assert_eq!(decoded.get("op").unwrap().as_str().unwrap(), "ping");
+        assert_eq!(decoded.get("n").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let err = decode_line("5 {\"op\":\"ping\"}").unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+        assert!(decode_line("nope").is_err());
+        assert!(decode_line(&format!("{} x", MAX_FRAME + 1)).is_err());
+    }
+
+    #[test]
+    fn addr_parse_discriminates() {
+        assert_eq!(Addr::parse("127.0.0.1:7070"), Addr::Tcp("127.0.0.1:7070".into()));
+        assert_eq!(
+            Addr::parse("results/serve/serve.sock"),
+            Addr::Unix(PathBuf::from("results/serve/serve.sock"))
+        );
+        // a path with a colon is still a path
+        assert_eq!(
+            Addr::parse("/tmp/a:b/serve.sock"),
+            Addr::Unix(PathBuf::from("/tmp/a:b/serve.sock"))
+        );
+    }
+}

@@ -1,0 +1,357 @@
+//! Durable FIFO queue — `queue.jsonl` journal + replay (DESIGN.md §16).
+//!
+//! Every admission decision is journaled through the run store's
+//! line-atomic [`JsonlWriter`] *before* it is acknowledged, so the queue's
+//! durable state is exactly the prefix of acknowledged events: a SIGKILL
+//! tears at most the final line, and [`DurableQueue::open`] replays the
+//! journal under [`Tolerance::SkipBad`] (the torn line is isolated by the
+//! writer's next-append newline repair and skipped as one bad row).
+//!
+//! Journal rows:
+//!
+//! * `{"kind":"submit","seq":N,"id":H,"tenant":T,"spec":{…}}` — admission.
+//! * `{"kind":"done","id":H,"ran":N,"skipped":M}` — all grid points of the
+//!   job are in its tenant's run store.
+//! * `{"kind":"cancel","id":H}` — removed while still queued.
+//!
+//! A job is **pending** iff its submit row has no matching done/cancel row
+//! — including jobs that were mid-execution at kill time. Replayed pending
+//! jobs re-dispatch from the front of the queue in original `seq` order;
+//! zero re-execution is the run store's job (every completed grid point is
+//! a resume hit), not the journal's.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+use crate::metrics::JsonlWriter;
+use crate::rng::stable_hash64;
+use crate::runstore::reader::{read_stream_file, scan_jsonl, Tolerance};
+use crate::serve::JobSpec;
+
+/// One admitted job.
+#[derive(Debug, Clone)]
+pub struct QueueEntry {
+    /// Stable job id: hash of `(tenant, seq, spec)`, hex-rendered.
+    pub id: String,
+    /// Tenant namespace (validated before admission).
+    pub tenant: String,
+    /// The sweep to run.
+    pub spec: JobSpec,
+    /// Admission sequence number — FIFO order across daemon lifetimes.
+    pub seq: u64,
+}
+
+impl QueueEntry {
+    fn to_row(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("kind", "submit")
+            .set("seq", self.seq as usize)
+            .set("id", self.id.as_str())
+            .set("tenant", self.tenant.as_str())
+            .set("spec", self.spec.to_value());
+        v
+    }
+}
+
+/// Outcome of a submit attempt against the bounded queue.
+#[derive(Debug)]
+pub enum Admission {
+    /// Journaled and queued.
+    Queued(QueueEntry),
+    /// The queue is at capacity — explicit backpressure, nothing written.
+    Overloaded { queue_depth: usize },
+}
+
+/// The journaled bounded FIFO queue. All mutation goes through `&mut self`
+/// (the daemon wraps it in a `Mutex`); every mutation journals first.
+pub struct DurableQueue {
+    path: PathBuf,
+    writer: JsonlWriter,
+    pending: VecDeque<QueueEntry>,
+    /// Jobs handed to the dispatcher but not yet journaled done — they
+    /// still count against capacity and replay after a kill.
+    in_flight: usize,
+    next_seq: u64,
+    cap: usize,
+    /// Replay statistics from open (bad rows skipped, rows read).
+    pub replayed_rows: usize,
+    pub replay_skipped: usize,
+}
+
+impl DurableQueue {
+    /// Journal path inside a daemon state directory.
+    pub fn journal_path(state_dir: &Path) -> PathBuf {
+        state_dir.join("queue.jsonl")
+    }
+
+    /// Open (or create) the journal under `state_dir` and replay it.
+    /// `cap` bounds admitted-but-incomplete jobs (`0` = 1).
+    pub fn open(state_dir: &Path, cap: usize) -> Result<DurableQueue> {
+        std::fs::create_dir_all(state_dir)
+            .with_context(|| format!("creating serve state dir {state_dir:?}"))?;
+        let path = Self::journal_path(state_dir);
+        let mut pending: VecDeque<QueueEntry> = VecDeque::new();
+        let mut by_id: HashMap<String, usize> = HashMap::new();
+        let mut next_seq = 0u64;
+        let mut replayed_rows = 0usize;
+        let mut replay_skipped = 0usize;
+        if path.exists() {
+            let text = read_stream_file(&path)?;
+            let stats = scan_jsonl(&text, Tolerance::SkipBad, |_, row| {
+                let Some(kind) = row.str("kind") else { return Ok(()) };
+                match kind {
+                    "submit" => {
+                        let (Some(id), Some(tenant), Some(seq)) =
+                            (row.str("id"), row.str("tenant"), row.usize("seq"))
+                        else {
+                            return Ok(());
+                        };
+                        // re-parse the spec from the raw line: RowView is
+                        // flat, the spec is nested
+                        let Ok(full) = Value::parse(row.line) else {
+                            return Ok(());
+                        };
+                        let Ok(spec) = full
+                            .get("spec")
+                            .and_then(JobSpec::from_value)
+                        else {
+                            return Ok(());
+                        };
+                        let entry = QueueEntry {
+                            id: id.to_string(),
+                            tenant: tenant.to_string(),
+                            spec,
+                            seq: seq as u64,
+                        };
+                        next_seq = next_seq.max(entry.seq + 1);
+                        by_id.insert(entry.id.clone(), pending.len());
+                        pending.push_back(entry);
+                    }
+                    "done" | "cancel" => {
+                        if let Some(id) = row.str("id") {
+                            if let Some(&i) = by_id.get(id) {
+                                // tombstone; compacted below
+                                pending[i].id.clear();
+                                by_id.remove(id);
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                Ok(())
+            })?;
+            replayed_rows = stats.rows;
+            replay_skipped = stats.skipped + stats.torn;
+            pending.retain(|e| !e.id.is_empty());
+        }
+        let writer = JsonlWriter::append(&path)?;
+        Ok(DurableQueue {
+            path,
+            writer,
+            pending,
+            in_flight: 0,
+            next_seq,
+            cap: cap.max(1),
+            replayed_rows,
+            replay_skipped,
+        })
+    }
+
+    pub fn journal(&self) -> &Path {
+        &self.path
+    }
+
+    /// Jobs admitted but not yet done/cancelled (queued + in flight) —
+    /// the figure capacity bounds.
+    pub fn live(&self) -> usize {
+        self.pending.len() + self.in_flight
+    }
+
+    /// Jobs waiting for dispatch.
+    pub fn queued(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Grid points waiting for dispatch (the adaptive-batch signal).
+    pub fn queued_configs(&self) -> usize {
+        self.pending.iter().map(|e| e.spec.n_configs()).sum()
+    }
+
+    pub fn pending_entries(&self) -> impl Iterator<Item = &QueueEntry> {
+        self.pending.iter()
+    }
+
+    /// Admit one job: journal the submit row, then queue it. At capacity,
+    /// nothing is written and the caller replies `overloaded`.
+    pub fn submit(&mut self, tenant: &str, spec: JobSpec) -> Result<Admission> {
+        if self.live() >= self.cap {
+            return Ok(Admission::Overloaded { queue_depth: self.live() });
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let id = format!(
+            "{:016x}",
+            stable_hash64(
+                format!("{tenant}|{seq}|{}", spec.to_value().dump()).as_bytes()
+            )
+        );
+        let entry = QueueEntry { id, tenant: tenant.to_string(), spec, seq };
+        self.writer.write(&entry.to_row())?;
+        self.pending.push_back(entry.clone());
+        Ok(Admission::Queued(entry))
+    }
+
+    /// Hand every queued job to the dispatcher (FIFO). Taken jobs remain
+    /// journal-pending (and capacity-counted) until [`DurableQueue::done`].
+    pub fn take_all(&mut self) -> Vec<QueueEntry> {
+        let wave: Vec<QueueEntry> = self.pending.drain(..).collect();
+        self.in_flight += wave.len();
+        wave
+    }
+
+    /// Journal a job's completion.
+    pub fn done(&mut self, id: &str, ran: usize, skipped: usize) -> Result<()> {
+        let mut v = Value::obj();
+        v.set("kind", "done")
+            .set("id", id)
+            .set("ran", ran)
+            .set("skipped", skipped);
+        self.writer.write(&v)?;
+        self.in_flight = self.in_flight.saturating_sub(1);
+        Ok(())
+    }
+
+    /// Cancel a still-queued job. Returns `false` (and journals nothing)
+    /// if the id is unknown or already dispatched.
+    pub fn cancel(&mut self, id: &str) -> Result<bool> {
+        let Some(pos) = self.pending.iter().position(|e| e.id == id) else {
+            return Ok(false);
+        };
+        let mut v = Value::obj();
+        v.set("kind", "cancel").set("id", id);
+        self.writer.write(&v)?;
+        self.pending.remove(pos);
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "slimadam_serve_queue_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spec(lr: f64) -> JobSpec {
+        JobSpec::native("mlp_tiny", &["adam"], &[lr], 5)
+    }
+
+    #[test]
+    fn submit_replay_done_cycle() {
+        let dir = tmp_dir("cycle");
+        let id = {
+            let mut q = DurableQueue::open(&dir, 8).unwrap();
+            let Admission::Queued(e) = q.submit("alpha", spec(1e-3)).unwrap() else {
+                panic!("should queue");
+            };
+            let Admission::Queued(_) = q.submit("beta", spec(3e-3)).unwrap() else {
+                panic!("should queue");
+            };
+            assert_eq!(q.queued(), 2);
+            e.id
+        };
+        // reopen: both jobs replay in submit order
+        let mut q = DurableQueue::open(&dir, 8).unwrap();
+        let ids: Vec<String> = q.pending_entries().map(|e| e.id.clone()).collect();
+        assert_eq!(q.queued(), 2);
+        assert_eq!(ids[0], id, "FIFO order survives replay");
+        // complete the first; only the second replays
+        let wave = q.take_all();
+        q.done(&wave[0].id, 1, 0).unwrap();
+        drop(q);
+        let q = DurableQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.queued(), 1, "done job must not replay");
+        assert_eq!(q.pending_entries().next().unwrap().tenant, "beta");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn taken_but_unfinished_jobs_replay() {
+        let dir = tmp_dir("inflight");
+        {
+            let mut q = DurableQueue::open(&dir, 8).unwrap();
+            q.submit("alpha", spec(1e-3)).unwrap();
+            let wave = q.take_all();
+            assert_eq!(wave.len(), 1);
+            assert_eq!(q.live(), 1, "in-flight still counts against cap");
+            // no done row: simulate SIGKILL mid-wave by dropping here
+        }
+        let q = DurableQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.queued(), 1, "in-flight job must replay after a kill");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bounded_queue_overloads_without_journaling() {
+        let dir = tmp_dir("cap");
+        let mut q = DurableQueue::open(&dir, 2).unwrap();
+        assert!(matches!(q.submit("a", spec(1e-3)).unwrap(), Admission::Queued(_)));
+        assert!(matches!(q.submit("a", spec(2e-3)).unwrap(), Admission::Queued(_)));
+        let Admission::Overloaded { queue_depth } = q.submit("a", spec(3e-3)).unwrap()
+        else {
+            panic!("third submit must overload");
+        };
+        assert_eq!(queue_depth, 2);
+        drop(q);
+        let q = DurableQueue::open(&dir, 2).unwrap();
+        assert_eq!(q.queued(), 2, "rejected submit must not be journaled");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cancel_removes_only_queued_jobs() {
+        let dir = tmp_dir("cancel");
+        let mut q = DurableQueue::open(&dir, 8).unwrap();
+        let Admission::Queued(a) = q.submit("a", spec(1e-3)).unwrap() else {
+            panic!()
+        };
+        assert!(q.cancel(&a.id).unwrap());
+        assert!(!q.cancel(&a.id).unwrap(), "second cancel is a no-op");
+        assert!(!q.cancel("unknown").unwrap());
+        drop(q);
+        let q = DurableQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.queued(), 0, "cancelled job must not replay");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_journal_tail_is_skipped_on_replay() {
+        let dir = tmp_dir("torn");
+        {
+            let mut q = DurableQueue::open(&dir, 8).unwrap();
+            q.submit("a", spec(1e-3)).unwrap();
+        }
+        // tear the tail: append half a submit row, no newline
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(DurableQueue::journal_path(&dir))
+            .unwrap();
+        f.write_all(b"{\"kind\":\"submit\",\"seq\":1,\"id\":\"dead").unwrap();
+        drop(f);
+        let q = DurableQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.queued(), 1, "intact rows replay");
+        assert_eq!(q.replay_skipped, 1, "torn tail counted, not fatal");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

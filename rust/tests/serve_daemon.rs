@@ -1,0 +1,403 @@
+//! End-to-end daemon tests (ISSUE 8 tentpole): multi-tenant submits are
+//! deterministic regardless of arrival order and byte-identical to a
+//! direct `slimadam sweep`; the bounded queue, cancel, and drain state
+//! machine behave as specified; and a SIGKILLed daemon replays its
+//! durable queue on restart and resumes mid-batch with zero
+//! re-execution.
+//!
+//! All sweeps run synthetically (`SLIMADAM_SYNTH_RUNS=1`) so rows carry
+//! no timing fields and fingerprints are exact. Env mutations are
+//! process-global, so every test serializes on `ENV_LOCK`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use slimadam::coordinator::SweepScheduler;
+use slimadam::json::Value;
+use slimadam::runstore::{config_key, RunStore};
+use slimadam::serve::queue::DurableQueue;
+use slimadam::serve::{spawn, Client, JobSpec, ServeOpts};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_env() -> MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("slimadam_serve_{}_{}", name, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sock(dir: &Path) -> String {
+    dir.join("serve.sock").to_str().unwrap().to_string()
+}
+
+/// Run the spec directly through the scheduler (the one-shot `sweep`
+/// path) and collect sorted `(config_key, fingerprint)` pairs.
+fn direct_pairs(spec: &JobSpec) -> Vec<(u64, u64)> {
+    let configs = spec.expand().unwrap();
+    let summaries = SweepScheduler::new(2).quiet().run(&configs).unwrap();
+    let mut pairs: Vec<(u64, u64)> = configs
+        .iter()
+        .zip(&summaries)
+        .map(|(c, s)| (config_key(c), s.fingerprint()))
+        .collect();
+    pairs.sort_unstable();
+    pairs
+}
+
+/// Sorted `(config_key, fingerprint)` pairs from a tenant run store.
+fn store_pairs(dir: &Path) -> Vec<(u64, u64)> {
+    RunStore::open(dir).unwrap().index().unwrap().fingerprints()
+}
+
+fn sorted_lines(path: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut v: Vec<String> = text.lines().map(String::from).collect();
+    v.sort();
+    v
+}
+
+/// Find `job` in a status reply's `jobs` array.
+fn job_entry<'a>(status: &'a Value, job: &str) -> Option<&'a Value> {
+    status
+        .get("jobs")
+        .ok()?
+        .as_arr()
+        .ok()?
+        .iter()
+        .find(|e| e.get("job").and_then(|j| Ok(j.as_str()? == job)).unwrap_or(false))
+}
+
+/// Poll `status` until `job` reaches `want` state.
+fn wait_state(client: &mut Client, job: &str, want: &str, timeout: Duration) -> Value {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let st = client.status().unwrap();
+        if let Some(entry) = job_entry(&st, job) {
+            if entry.get("state").unwrap().as_str().unwrap() == want {
+                return entry.clone();
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "job {job} never reached state {want}; last status: {}",
+            st.dump()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Submit `spec` on its own connection with `watch`, assert it queues,
+/// and return `(client, job_id)`.
+fn submit_watch(addr: &str, tenant: &str, spec: &JobSpec) -> (Client, String) {
+    let mut client = Client::connect_retry(addr, Duration::from_secs(10)).unwrap();
+    let reply = client.submit(tenant, spec, true).unwrap();
+    assert_eq!(
+        reply.get("reply").unwrap().as_str().unwrap(),
+        "queued",
+        "{}",
+        reply.dump()
+    );
+    let job = reply.get("job").unwrap().as_str().unwrap().to_string();
+    (client, job)
+}
+
+/// Wait for `job` on its watching connection; returns rows seen.
+fn finish(client: &mut Client, job: &str) -> usize {
+    let mut rows = 0usize;
+    let done = client.wait_job(job, |_| rows += 1).unwrap();
+    assert!(
+        !done.opt("failed").and_then(|b| b.as_bool().ok()).unwrap_or(false),
+        "job {job} failed: {}",
+        done.dump()
+    );
+    rows
+}
+
+/// Tentpole determinism invariant: two tenants submitting interleaved
+/// jobs get stores whose fingerprints match a direct one-shot sweep of
+/// the same spec — in either arrival order — and (clean shutdown +
+/// synthetic timing) the store bytes match the direct stream exactly.
+#[test]
+fn two_tenants_interleaved_match_direct_sweeps_in_any_order() {
+    let _env = lock_env();
+    std::env::remove_var("SLIMADAM_SYNTH_MS");
+    std::env::set_var("SLIMADAM_SYNTH_RUNS", "1");
+
+    let alice = JobSpec::native("mlp_tiny", &["adam", "slimadam"], &[1e-3, 3e-3], 12);
+    let mut bob = JobSpec::native("gpt_micro", &["adam"], &[5e-4, 1e-3, 2e-3], 9);
+    bob.seed = 7;
+    let want_alice = direct_pairs(&alice);
+    let want_bob = direct_pairs(&bob);
+
+    for ordering in ["ab", "ba"] {
+        let dir = tmp(&format!("order_{ordering}"));
+        let state = dir.join("state");
+        let addr = sock(&dir);
+        let handle = spawn(ServeOpts {
+            addr: addr.clone(),
+            state_dir: state.clone(),
+            workers: 2,
+            max_batch: 8,
+            queue_cap: 8,
+            quiet: true,
+        })
+        .unwrap();
+
+        let (mut c1, j1, mut c2, j2) = if ordering == "ab" {
+            let (ca, ja) = submit_watch(&addr, "alice", &alice);
+            let (cb, jb) = submit_watch(&addr, "bob", &bob);
+            (ca, ja, cb, jb)
+        } else {
+            let (cb, jb) = submit_watch(&addr, "bob", &bob);
+            let (ca, ja) = submit_watch(&addr, "alice", &alice);
+            (cb, jb, ca, ja)
+        };
+        let rows1 = finish(&mut c1, &j1);
+        let rows2 = finish(&mut c2, &j2);
+        let (alice_rows, bob_rows) =
+            if ordering == "ab" { (rows1, rows2) } else { (rows2, rows1) };
+        assert_eq!(alice_rows, alice.n_configs(), "alice row stream");
+        assert_eq!(bob_rows, bob.n_configs(), "bob row stream");
+
+        let mut admin = Client::connect(&addr).unwrap();
+        let reply = admin.drain().unwrap();
+        assert_eq!(reply.get("reply").unwrap().as_str().unwrap(), "draining");
+        handle.join().unwrap();
+
+        assert_eq!(
+            store_pairs(&state.join("tenants/alice")),
+            want_alice,
+            "ordering {ordering}: alice fingerprints drift from direct sweep"
+        );
+        assert_eq!(
+            store_pairs(&state.join("tenants/bob")),
+            want_bob,
+            "ordering {ordering}: bob fingerprints drift from direct sweep"
+        );
+        assert!(
+            !Path::new(&addr).exists(),
+            "drain must unlink the unix socket"
+        );
+
+        if ordering == "ab" {
+            // Byte-level identity: synthetic rows carry zero timing, so
+            // the daemon's store stream must equal a direct streaming
+            // sweep line for line (order aside).
+            let stream = dir.join("direct.jsonl");
+            SweepScheduler::new(2)
+                .quiet()
+                .stream_to(&stream)
+                .run(&alice.expand().unwrap())
+                .unwrap();
+            assert_eq!(
+                sorted_lines(&state.join("tenants/alice/stream.jsonl")),
+                sorted_lines(&stream),
+                "daemon rows must be byte-identical to one-shot sweep rows"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::env::remove_var("SLIMADAM_SYNTH_RUNS");
+}
+
+/// Queue-discipline tour: status reporting, bounded-queue `overloaded`,
+/// cancel semantics, and drain rejections — all while a slow wave holds
+/// the single worker.
+#[test]
+fn status_overload_cancel_and_draining_rejections() {
+    let _env = lock_env();
+    std::env::set_var("SLIMADAM_SYNTH_RUNS", "1");
+    std::env::set_var("SLIMADAM_SYNTH_MS", "150");
+
+    let dir = tmp("queue");
+    let state = dir.join("state");
+    let addr = sock(&dir);
+    let handle = spawn(ServeOpts {
+        addr: addr.clone(),
+        state_dir: state.clone(),
+        workers: 1,
+        max_batch: 1,
+        queue_cap: 2,
+        quiet: true,
+    })
+    .unwrap();
+    let mut client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    assert!(client.ping().unwrap());
+
+    // 8 configs × 150 ms on one worker ≈ 1.2 s — the wave outlives
+    // everything below.
+    let slow = JobSpec::native(
+        "mlp_tiny",
+        &["adam"],
+        &[1e-4, 2e-4, 3e-4, 4e-4, 5e-4, 6e-4, 7e-4, 8e-4],
+        5,
+    );
+    let r1 = client.submit("alice", &slow, false).unwrap();
+    let job1 = r1.get("job").unwrap().as_str().unwrap().to_string();
+    wait_state(&mut client, &job1, "running", Duration::from_secs(10));
+
+    // worker busy → this one queues; live = running + queued = cap
+    let quick = JobSpec::native("mlp_tiny", &["adam"], &[9e-4], 5);
+    let r2 = client.submit("bob", &quick, false).unwrap();
+    assert_eq!(r2.get("reply").unwrap().as_str().unwrap(), "queued");
+    let job2 = r2.get("job").unwrap().as_str().unwrap().to_string();
+
+    // at capacity → explicit Overloaded, nothing journaled
+    let r3 = client.submit("carol", &quick, false).unwrap();
+    assert_eq!(r3.get("reply").unwrap().as_str().unwrap(), "overloaded");
+    assert_eq!(r3.get("queue_depth").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(r3.get("queue_cap").unwrap().as_usize().unwrap(), 2);
+
+    let st = client.status().unwrap();
+    assert_eq!(st.get("live").unwrap().as_usize().unwrap(), 2);
+    assert!(st.get("queued").unwrap().as_usize().unwrap() >= 1);
+    assert!(!st.get("draining").unwrap().as_bool().unwrap());
+    assert!(job_entry(&st, &job1).is_some());
+    assert!(job_entry(&st, &job2).is_some());
+
+    // cancel is once-only and queued-only
+    assert!(client.cancel(&job2).unwrap(), "queued job must cancel");
+    assert!(!client.cancel(&job2).unwrap(), "second cancel is a no-op");
+    assert!(!client.cancel(&job1).unwrap(), "running job is not cancellable");
+
+    let reply = client.drain().unwrap();
+    assert_eq!(reply.get("reply").unwrap().as_str().unwrap(), "draining");
+    // draining daemon stops admitting but finishes job1
+    let rejected = client.submit("dave", &quick, false).unwrap();
+    assert_eq!(rejected.get("reply").unwrap().as_str().unwrap(), "draining");
+    handle.join().unwrap();
+
+    // journal closed the books: job1 done, job2 tombstoned by cancel
+    let q = DurableQueue::open(&state, 8).unwrap();
+    assert_eq!(q.queued(), 0, "drained daemon must leave an empty queue");
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::env::remove_var("SLIMADAM_SYNTH_MS");
+    std::env::remove_var("SLIMADAM_SYNTH_RUNS");
+}
+
+/// Durability acceptance test: SIGKILL the daemon mid-batch, restart it,
+/// and the replayed queue resumes the job — completed rows are skipped
+/// (zero re-execution), fingerprints match a direct sweep, and a
+/// SIGTERM drain exits 0.
+#[test]
+fn sigkill_mid_batch_replays_and_resumes_with_zero_reexecution() {
+    let _env = lock_env();
+    std::env::set_var("SLIMADAM_SYNTH_RUNS", "1");
+    std::env::remove_var("SLIMADAM_SYNTH_MS");
+
+    let spec = JobSpec::native(
+        "mlp_tiny",
+        &["adam", "slimadam"],
+        &[1e-4, 3e-4, 1e-3, 3e-3],
+        10,
+    );
+    let want = direct_pairs(&spec);
+    assert_eq!(want.len(), 8);
+
+    let dir = tmp("sigkill");
+    let state = dir.join("state");
+    let addr = sock(&dir);
+    let tenant_dir = state.join("tenants/alice");
+    let bin = env!("CARGO_BIN_EXE_slimadam");
+    let serve_args = |a: &str| {
+        vec![
+            "serve".to_string(),
+            "--addr".to_string(),
+            a.to_string(),
+            "--state-dir".to_string(),
+            state.to_str().unwrap().to_string(),
+            "--workers".to_string(),
+            "2".to_string(),
+            "--quiet".to_string(),
+            "--synthetic".to_string(),
+        ]
+    };
+
+    // first daemon: slow synthetic steps so the kill lands mid-batch
+    let mut child1 = Command::new(bin)
+        .args(serve_args(&addr))
+        .env("SLIMADAM_SYNTH_MS", "150")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut client = Client::connect_retry(&addr, Duration::from_secs(15)).unwrap();
+    let reply = client.submit("alice", &spec, false).unwrap();
+    assert_eq!(reply.get("reply").unwrap().as_str().unwrap(), "queued");
+    let job = reply.get("job").unwrap().as_str().unwrap().to_string();
+
+    // wait until at least one row hit the tenant store, then SIGKILL
+    let primary = tenant_dir.join("stream.jsonl");
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let done_rows = std::fs::read(&primary)
+            .map(|b| b.iter().filter(|&&c| c == b'\n').count())
+            .unwrap_or(0);
+        if done_rows >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "no rows before kill");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    child1.kill().unwrap();
+    child1.wait().unwrap();
+    drop(client);
+
+    // complete rows on disk at the moment of death = what the restart
+    // may skip; anything torn re-runs
+    let bytes = std::fs::read(&primary).unwrap();
+    let rows_before = bytes.iter().filter(|&&c| c == b'\n').count();
+    assert!(rows_before >= 1);
+
+    // second daemon: same state dir, full speed — must replay the
+    // journal (the job was never journaled done) and resume
+    let mut child2 = Command::new(bin)
+        .args(serve_args(&addr))
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut client = Client::connect_retry(&addr, Duration::from_secs(15)).unwrap();
+    let entry = wait_state(&mut client, &job, "done", Duration::from_secs(30));
+    assert_eq!(
+        entry.get("skipped").unwrap().as_usize().unwrap(),
+        rows_before,
+        "resume must skip exactly the rows that survived the kill"
+    );
+    assert_eq!(
+        entry.get("ran").unwrap().as_usize().unwrap(),
+        spec.n_configs() - rows_before,
+        "resume must run exactly the remainder"
+    );
+
+    // zero re-execution: 8 unique configs, no duplicate rows, and the
+    // fingerprints are exactly the direct sweep's
+    let store = RunStore::open(&tenant_dir).unwrap();
+    let (_, idx) = store.ls().unwrap();
+    assert_eq!(idx.stats.duplicates, 0, "replay re-executed a config");
+    let pairs = store_pairs(&tenant_dir);
+    assert_eq!(pairs.len(), 8);
+    assert_eq!(pairs, want, "post-crash fingerprints drift from direct sweep");
+
+    // graceful SIGTERM drain: exit 0 with the socket unlinked
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+    assert_eq!(unsafe { kill(child2.id() as i32, SIGTERM) }, 0);
+    let status = child2.wait().unwrap();
+    assert!(status.success(), "SIGTERM drain must exit 0, got {status:?}");
+    assert!(!Path::new(&addr).exists(), "drain must unlink the socket");
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::env::remove_var("SLIMADAM_SYNTH_RUNS");
+}
