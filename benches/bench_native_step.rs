@@ -67,8 +67,11 @@ fn main() {
             },
         );
 
+        // every fused engine variant: the AdamW rulesets plus the
+        // bake-off optimizer kernels (Lion, SGDM, SM3, Adafactor,
+        // rank-4 factored V) — one `fused_step/<token>` row each
         let mut fused_adam_report = None;
-        for &ruleset in native::RULESETS {
+        for &ruleset in native::RULESETS.iter().chain(native::OPTIMIZERS) {
             let mut fused =
                 TrainEngine::new("artifacts", model, ruleset, backend.as_ref(), "mitchell", 5)
                     .expect("native fused engine");

@@ -267,7 +267,7 @@ fn run_fused_group(
             lr: cfg.lr,
             result,
             snr: None,
-            memory: None,
+            memory: memory::report_manifest(&man),
             steps_per_s,
             stored_fingerprint: None,
             metrics: super::obs_metrics(),

@@ -559,7 +559,7 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
                 lr: cfg.lr,
                 result,
                 snr,
-                memory: None,
+                memory: crate::optim::memory::report_manifest(&man),
                 steps_per_s,
                 stored_fingerprint: None,
                 metrics: obs_metrics(),

@@ -18,6 +18,7 @@ use crate::cli::Args;
 use crate::coordinator::{run_config, run_grid, TrainConfig};
 use crate::metrics::{results_dir, CsvWriter};
 use crate::rules::RuleSet;
+use crate::runtime::backend::BackendKind;
 
 use super::{probe, steps_or, workers_or_default, write_summary_md};
 
@@ -66,6 +67,38 @@ const REGIMES: &[Regime] = &[
     },
 ];
 
+/// `--backend native` swaps the regime table for the builtin zoo
+/// (DESIGN.md §13): the same top/bottom panels are produced end to end
+/// offline — no artifacts — over the native GPT, deep-transformer and
+/// conv families. The fine-tuning regime needs a pre-trained PJRT
+/// checkpoint and stays on the artifact path.
+const NATIVE_REGIMES: &[Regime] = &[
+    Regime {
+        id: "gpt",
+        model: "gpt_micro",
+        base: TrainConfig::lm,
+        lrs: &[1e-4, 3e-4, 1e-3, 3e-3, 1e-2],
+        rule_lr: 3e-4,
+        finetune: false,
+    },
+    Regime {
+        id: "deep",
+        model: "gpt_deep",
+        base: TrainConfig::lm,
+        lrs: &[1e-4, 3e-4, 1e-3, 3e-3],
+        rule_lr: 3e-4,
+        finetune: false,
+    },
+    Regime {
+        id: "conv",
+        model: "conv_mini",
+        base: TrainConfig::vision,
+        lrs: &[1e-4, 3e-4, 1e-3, 3e-3],
+        rule_lr: 3e-4,
+        finetune: false,
+    },
+];
+
 const CUTOFFS: &[f64] = &[0.6, 0.8, 1.0, 1.5, 2.0];
 
 const BOTTOM_OPTS: &[&str] = &[
@@ -82,6 +115,12 @@ pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir("fig10")?;
     let only: Option<String> = args.get("regime").map(|s| s.to_string());
     let all = args.flag("all");
+    let backend = super::backend_spec(args)?;
+    let regimes: &[Regime] = if backend.kind == BackendKind::Native {
+        NATIVE_REGIMES
+    } else {
+        REGIMES
+    };
 
     let mut top = CsvWriter::create(
         dir.join("savings_grid.csv"),
@@ -89,7 +128,7 @@ pub fn run(args: &Args) -> Result<()> {
     )?;
     let mut md = String::from("# Fig. 10 — SNR-predicted savings & SlimAdam performance\n\n");
 
-    for regime in REGIMES {
+    for regime in regimes {
         if let Some(o) = &only {
             if o != regime.id {
                 continue;
@@ -101,7 +140,6 @@ pub fn run(args: &Args) -> Result<()> {
             continue;
         }
         println!("== fig10 regime {} ({}) ==", regime.id, regime.model);
-        let backend = super::backend_spec(args)?;
         let man = super::manifest_for(&backend, regime.model)?;
         let warm = if regime.finetune {
             Some(Arc::new(super::fig04_finetune_snr::pretrained_params(

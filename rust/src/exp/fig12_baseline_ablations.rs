@@ -1,13 +1,18 @@
 //! Figure 12 (App. A): baseline hyperparameter ablations — SM3 beta in
 //! {0, 0.95}, Lion, Adafactor v1 vs v2 — against Adam and SlimAdam on the
-//! GPT pre-training task. Paper: SM3 beta=0.95 > beta=0; both Adafactor
-//! variants lag Adam significantly.
+//! GPT pre-training task, extended into the low-memory bake-off: SGDM
+//! and rank-4 factored-V Adam (`lowrank_v`) ride the same LR grid so the
+//! summary pairs each optimizer's best loss with its state memory.
+//! Paper: SM3 beta=0.95 > beta=0; both Adafactor variants lag Adam
+//! significantly. `--backend native` runs the whole grid offline on the
+//! builtin zoo (default model gpt_micro).
 
 use anyhow::Result;
 
 use crate::cli::Args;
 use crate::coordinator::TrainConfig;
 use crate::metrics::results_dir;
+use crate::runtime::backend::BackendKind;
 use crate::sweep::{log_grid, LrSweep};
 
 use super::{steps_or, workers_or_default, write_summary_md};
@@ -20,10 +25,18 @@ const OPTS: &[&str] = &[
     "lion",
     "adafactor",
     "adafactor_v2",
+    "sgdm",
+    "lowrank_v",
 ];
 
 pub fn run(args: &Args) -> Result<()> {
-    let model = args.str_or("model", "gpt_nano").to_string();
+    let backend = super::backend_spec(args)?;
+    let default_model = if backend.kind == BackendKind::Native {
+        "gpt_micro"
+    } else {
+        "gpt_nano"
+    };
+    let model = args.str_or("model", default_model).to_string();
     let steps = steps_or(args, 100);
     let lrs = args.f64_list("lrs", &log_grid(1e-4, 3e-2, 6))?;
     let dir = results_dir("fig12")?;
@@ -40,11 +53,17 @@ pub fn run(args: &Args) -> Result<()> {
 
     let mut md = String::from(
         "# Fig. 12 — baseline hyperparameter ablations\n\n\
-         | optimizer | best lr | best loss |\n|---|---|---|\n",
+         | optimizer | best lr | best loss | state elems | state vs adamw |\n\
+         |---|---|---|---|---|\n",
     );
     for (i, name) in sweep.optimizers.iter().enumerate() {
         let (lr, loss) = sweep.best(i);
-        md.push_str(&format!("| {name} | {lr:.1e} | {loss:.4} |\n"));
+        let (state, saved) = sweep.summaries[i]
+            .iter()
+            .find_map(|s| s.memory.as_ref())
+            .map(|m| (m.state_elems.to_string(), format!("-{:.0}%", 100.0 * m.state_saving)))
+            .unwrap_or_default();
+        md.push_str(&format!("| {name} | {lr:.1e} | {loss:.4} | {state} | {saved} |\n"));
     }
     let best = |name: &str| {
         sweep

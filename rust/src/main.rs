@@ -295,7 +295,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 OptSpec { name: "backend", help: "execution backend: pjrt | native (optionally +f32, e.g. native+f32)", default: Some("pjrt"), is_flag: false },
                 OptSpec { name: "precision", help: "native compute precision: f64 | f32 (overrides the spec suffix)", default: Some("f64"), is_flag: false },
                 OptSpec { name: "intraop", help: "intra-op kernel worker threads per job (native; results invariant)", default: Some("1"), is_flag: false },
-                OptSpec { name: "optimizers", help: "comma-separated optimizer presets", default: Some("adam,slimadam"), is_flag: false },
+                OptSpec { name: "optimizers", help: "comma-separated optimizer presets (bake-off: adam,slimadam,lion,adafactor,sm3,sgdm,lowrank_v)", default: Some("adam,slimadam"), is_flag: false },
                 OptSpec { name: "lrs", help: "comma-separated LR grid", default: Some("log grid 1e-4..1e-2, 4 pts"), is_flag: false },
                 OptSpec { name: "steps", help: "training steps per job", default: Some("100"), is_flag: false },
                 OptSpec { name: "workers", help: "worker threads (0 = one per core)", default: Some("0"), is_flag: false },
@@ -303,6 +303,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 OptSpec { name: "stream", help: "append per-job JSONL rows to this path as jobs finish", default: None, is_flag: false },
                 OptSpec { name: "resume", help: "run store dir: skip jobs already completed there (streams new rows into it unless --stream overrides)", default: None, is_flag: false },
                 OptSpec { name: "csv", help: "write the finished sweep table to this CSV path", default: None, is_flag: false },
+                OptSpec { name: "fused", help: "fused train_step engine: each optimizer token runs its own <model>.train.<token> artifact", default: None, is_flag: true },
                 OptSpec { name: "seed-jobs", help: "derive an independent seed per grid point (default: paired)", default: None, is_flag: true },
                 OptSpec { name: "quiet", help: "suppress per-job progress lines", default: None, is_flag: true },
                 OptSpec { name: "synthetic", help: "deterministic artifact-free synthetic runs (testing; same as SLIMADAM_SYNTH_RUNS=1)", default: None, is_flag: true },
@@ -793,9 +794,10 @@ fn cmd_list() -> Result<()> {
     println!("experiments: {}", slimadam::exp::IDS.join(", "));
     println!("optimizers:  {}", presets::ALL.join(", "));
     println!(
-        "native:      {} (rulesets: {}) — `--backend native`, no artifacts needed",
+        "native:      {} (rulesets: {}; fused optimizers: {}) — `--backend native`, no artifacts needed",
         slimadam::runtime::backend::native::MODELS.join(", "),
-        slimadam::runtime::backend::native::RULESETS.join(", ")
+        slimadam::runtime::backend::native::RULESETS.join(", "),
+        slimadam::runtime::backend::native::OPTIMIZERS.join(", ")
     );
     print!("artifacts:   ");
     let dir = std::path::Path::new("artifacts");

@@ -1,0 +1,375 @@
+//! Low-rank factored second moments in the Adapprox spirit
+//! (arXiv 2403.14958): instead of Adafactor's single rank-1 outer
+//! product `R·Cᵀ/sum(R)`, keep `r` independent column buckets, each
+//! with its own per-row accumulator — a rank-`r` sketch of V.
+//!
+//! Columns of the matrix view are assigned to buckets by a
+//! *deterministic seeded sketch*: bucket(j) is a pure hash of
+//! `(param name, rank, j)`, so the partition is reproducible across
+//! runs, processes, and backends without storing it.
+//!
+//! ```text
+//! b(j)    = H(name, r, j) mod r                   (fixed partition)
+//! Y[i,b] += EMA_beta2 of sum_{j in b} (g_ij^2 + eps1)   (rows x r)
+//! C[j]   += EMA_beta2 of sum_i (g_ij^2 + eps1)          (cols)
+//! v_ij    = Y[i,b(j)] * C[j] / sum_{j' in b(j)} C[j']
+//! ```
+//!
+//! The update itself is AdamW-shaped: full first moment, bias-corrected
+//! `m/(sqrt(v)+eps)`, decoupled weight decay. `r = 1` collapses to
+//! Adafactor's factorization (plus momentum and bias correction);
+//! growing `r` towards the column count interpolates back to per-column
+//! resolution. Vector parameters keep exact per-element moments.
+
+use crate::tensor::Tensor;
+
+use super::{raw_index, Hypers, Optimizer, ParamInfo};
+
+/// Small epsilon added inside g² (Adafactor's epsilon_1) so all-zero
+/// gradients keep the factored reconstruction well-defined.
+const EPS1: f32 = 1e-30;
+
+/// Default sketch rank (the CLI token `lowrank_v` without a suffix).
+pub const DEFAULT_RANK: usize = 4;
+
+/// Deterministic column→bucket assignment: a pure function of the
+/// parameter name, the sketch rank, and the column index. The native
+/// fused kernel uses the same function, so split and fused runs agree
+/// on the partition by construction.
+pub fn bucket_of(name: &str, rank: usize, col: usize) -> usize {
+    let key = format!("lowrank_v|{name}|{rank}|{col}");
+    (crate::rng::stable_hash64(key.as_bytes()) % rank as u64) as usize
+}
+
+/// Canonical optimizer token for a given rank (`lowrank_v` for the
+/// default, `lowrank_v<r>` otherwise).
+pub fn token(rank: usize) -> String {
+    if rank == DEFAULT_RANK {
+        "lowrank_v".to_string()
+    } else {
+        format!("lowrank_v{rank}")
+    }
+}
+
+/// Parse a `lowrank_v` / `lowrank_v<r>` token into its rank.
+pub fn parse_token(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix("lowrank_v")?;
+    if rest.is_empty() {
+        Some(DEFAULT_RANK)
+    } else {
+        rest.parse::<usize>().ok().filter(|&r| r >= 1)
+    }
+}
+
+pub struct LowRankV {
+    metas: Vec<ParamInfo>,
+    name: String,
+    rank: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    weight_decay: f32,
+    state: Vec<Sketch>,
+    m: Vec<Tensor>,
+}
+
+enum Sketch {
+    /// `y` is rows x rank (row-major), `c` is per-column; `buckets[j]`
+    /// caches `bucket_of` for each view column.
+    Factored {
+        y: Vec<f32>,
+        c: Vec<f32>,
+        buckets: Vec<usize>,
+        rows: usize,
+        cols: usize,
+    },
+    Exact(Vec<f32>),
+}
+
+impl LowRankV {
+    pub fn new(metas: Vec<ParamInfo>, rank: usize, hypers: Hypers) -> LowRankV {
+        assert!(rank >= 1, "lowrank_v rank must be >= 1");
+        let state = metas
+            .iter()
+            .map(|p| {
+                let (rows, cols) = p.matrix_dims();
+                if p.is_vector() {
+                    Sketch::Exact(vec![0.0; p.numel()])
+                } else {
+                    let buckets =
+                        (0..cols).map(|j| bucket_of(&p.name, rank, j)).collect();
+                    Sketch::Factored {
+                        y: vec![0.0; rows * rank],
+                        c: vec![0.0; cols],
+                        buckets,
+                        rows,
+                        cols,
+                    }
+                }
+            })
+            .collect();
+        let m = metas.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        LowRankV {
+            name: token(rank),
+            metas,
+            rank,
+            beta1: hypers.beta1 as f32,
+            beta2: hypers.beta2 as f32,
+            eps: hypers.eps as f32,
+            weight_decay: hypers.weight_decay as f32,
+            state,
+            m,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+}
+
+impl Optimizer for LowRankV {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], t: usize, lr: f32) {
+        let bc1 = 1.0 / (1.0 - self.beta1.powi(t as i32));
+        let bc2 = 1.0 / (1.0 - self.beta2.powi(t as i32));
+        for i in 0..params.len() {
+            let info = &self.metas[i];
+            let wd = if info.wd { self.weight_decay } else { 0.0 };
+            let w = &mut params[i].data;
+            let m = &mut self.m[i].data;
+            match &mut self.state[i] {
+                Sketch::Exact(v) => {
+                    let g = &grads[i].data;
+                    for j in 0..w.len() {
+                        m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * g[j];
+                        v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * g[j] * g[j];
+                        let mh = m[j] * bc1;
+                        let vh = v[j] * bc2;
+                        w[j] -= lr * (mh / (vh.sqrt() + self.eps) + wd * w[j]);
+                    }
+                }
+                Sketch::Factored { y, c, buckets, rows, cols } => {
+                    let gmat = grads[i].matrix_view(info.fan_out_axis);
+                    let (rows, cols) = (*rows, *cols);
+                    let rank = self.rank;
+                    // bucketed row sums and column sums of g^2
+                    let mut ysum = vec![0.0f32; rows * rank];
+                    let mut csum = vec![0.0f32; cols];
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let g2 = gmat.at(ri, ci).powi(2) + EPS1;
+                            ysum[ri * rank + buckets[ci]] += g2;
+                            csum[ci] += g2;
+                        }
+                    }
+                    for (yk, s) in y.iter_mut().zip(&ysum) {
+                        *yk = self.beta2 * *yk + (1.0 - self.beta2) * s;
+                    }
+                    for (ck, s) in c.iter_mut().zip(&csum) {
+                        *ck = self.beta2 * *ck + (1.0 - self.beta2) * s;
+                    }
+                    // per-bucket column-mass normalizers
+                    let mut bsum = vec![0.0f32; rank];
+                    for ci in 0..cols {
+                        bsum[buckets[ci]] += c[ci];
+                    }
+                    let is_borrowed =
+                        matches!(gmat.data, std::borrow::Cow::Borrowed(_));
+                    for ri in 0..rows {
+                        for ci in 0..cols {
+                            let b = buckets[ci];
+                            let v = (y[ri * rank + b] * c[ci]
+                                / bsum[b].max(EPS1))
+                            .max(EPS1);
+                            let raw = if is_borrowed {
+                                ri * cols + ci
+                            } else {
+                                raw_index(info, ri, ci)
+                            };
+                            let g = gmat.at(ri, ci);
+                            m[raw] = self.beta1 * m[raw]
+                                + (1.0 - self.beta1) * g;
+                            let mh = m[raw] * bc1;
+                            let vh = v * bc2;
+                            w[raw] -= lr
+                                * (mh / (vh.sqrt() + self.eps) + wd * w[raw]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn second_moment(&self, i: usize) -> Option<Tensor> {
+        let info = &self.metas[i];
+        match &self.state[i] {
+            Sketch::Exact(v) => Some(Tensor::from_vec(&info.shape, v.clone())),
+            Sketch::Factored { y, c, buckets, rows, cols } => {
+                let rank = self.rank;
+                let mut bsum = vec![0.0f32; rank];
+                for ci in 0..*cols {
+                    bsum[buckets[ci]] += c[ci];
+                }
+                let mut full = Tensor::zeros(&info.shape);
+                for ri in 0..*rows {
+                    for ci in 0..*cols {
+                        let b = buckets[ci];
+                        let raw = if info.shape.len() <= 2 {
+                            ri * cols + ci
+                        } else {
+                            raw_index(info, ri, ci)
+                        };
+                        full.data[raw] =
+                            y[ri * rank + b] * c[ci] / bsum[b].max(EPS1);
+                    }
+                }
+                Some(full)
+            }
+        }
+    }
+
+    fn second_moment_elems(&self) -> usize {
+        self.state
+            .iter()
+            .map(|s| match s {
+                Sketch::Exact(v) => v.len(),
+                Sketch::Factored { y, c, .. } => y.len() + c.len(),
+            })
+            .sum()
+    }
+
+    fn first_moment_elems(&self) -> usize {
+        self.m.iter().map(|m| m.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Init;
+
+    fn meta(shape: &[usize]) -> ParamInfo {
+        ParamInfo {
+            name: "w".into(),
+            shape: shape.to_vec(),
+            layer_type: "mlp_up".into(),
+            depth: 0,
+            init_mitchell: Init::Zeros,
+            init_default: Init::Zeros,
+            wd: false,
+            fan_out_axis: 0,
+        }
+    }
+
+    #[test]
+    fn token_roundtrip() {
+        assert_eq!(parse_token("lowrank_v"), Some(DEFAULT_RANK));
+        assert_eq!(parse_token("lowrank_v1"), Some(1));
+        assert_eq!(parse_token("lowrank_v8"), Some(8));
+        assert_eq!(parse_token("lowrank_v0"), None);
+        assert_eq!(parse_token("lowrank"), None);
+        assert_eq!(token(DEFAULT_RANK), "lowrank_v");
+        assert_eq!(token(8), "lowrank_v8");
+    }
+
+    #[test]
+    fn bucket_assignment_is_deterministic_and_covers() {
+        let a: Vec<usize> = (0..64).map(|j| bucket_of("h0.mlp_up", 4, j)).collect();
+        let b: Vec<usize> = (0..64).map(|j| bucket_of("h0.mlp_up", 4, j)).collect();
+        assert_eq!(a, b, "sketch must be a pure function of (name, rank, col)");
+        assert!(a.iter().all(|&x| x < 4));
+        // with 64 columns over 4 buckets, every bucket should be hit
+        for bucket in 0..4 {
+            assert!(a.contains(&bucket), "bucket {bucket} empty");
+        }
+        // different parameter names get different partitions
+        let other: Vec<usize> =
+            (0..64).map(|j| bucket_of("h1.mlp_dn", 4, j)).collect();
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn memory_is_rank_linear() {
+        let opt = LowRankV::new(vec![meta(&[32, 64])], 4, Hypers::default());
+        assert_eq!(opt.second_moment_elems(), 32 * 4 + 64);
+        assert_eq!(opt.first_moment_elems(), 32 * 64);
+        let opt1 = LowRankV::new(vec![meta(&[32, 64])], 1, Hypers::default());
+        assert_eq!(opt1.second_moment_elems(), 32 + 64);
+    }
+
+    #[test]
+    fn same_seed_same_trajectory() {
+        let run = || {
+            let mut opt =
+                LowRankV::new(vec![meta(&[8, 8]), meta(&[8])], 4, Hypers::default());
+            let mut rng = crate::rng::Rng::new(7);
+            let mut p = vec![
+                Tensor::from_vec(&[8, 8], (0..64).map(|_| rng.normal() as f32).collect()),
+                Tensor::from_vec(&[8], (0..8).map(|_| rng.normal() as f32).collect()),
+            ];
+            for t in 1..=10 {
+                let g = vec![
+                    Tensor::from_vec(
+                        &[8, 8],
+                        (0..64).map(|_| rng.normal() as f32).collect(),
+                    ),
+                    Tensor::from_vec(&[8], (0..8).map(|_| rng.normal() as f32).collect()),
+                ];
+                opt.step(&mut p, &g, t, 1e-2);
+            }
+            let mut bits: Vec<u32> = Vec::new();
+            for t in &p {
+                bits.extend(t.data.iter().map(|x| x.to_bits()));
+            }
+            bits
+        };
+        assert_eq!(run(), run(), "same seed must give bit-identical params");
+    }
+
+    #[test]
+    fn rank_one_matches_factored_structure() {
+        // rank-1 gradients: g = a b^T means g^2 is rank-1, so the r=1
+        // sketch reconstructs it exactly up to global scale.
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 1.0, 2.0];
+        let mut g = Tensor::zeros(&[2, 3]);
+        for i in 0..2 {
+            for j in 0..3 {
+                g.data[i * 3 + j] = a[i] * b[j];
+            }
+        }
+        let mut opt = LowRankV::new(vec![meta(&[2, 3])], 1, Hypers::default());
+        let mut p = vec![Tensor::zeros(&[2, 3])];
+        opt.step(&mut p, &[g.clone()], 1, 0.0);
+        let v = opt.second_moment(0).unwrap();
+        let g2: Vec<f32> = g.data.iter().map(|x| x * x).collect();
+        let ratio0 = v.data[0] / g2[0];
+        for j in 1..6 {
+            let r = v.data[j] / g2[j];
+            assert!((r - ratio0).abs() / ratio0 < 1e-3, "{r} vs {ratio0}");
+        }
+    }
+
+    #[test]
+    fn stays_finite_over_steps() {
+        let mut opt =
+            LowRankV::new(vec![meta(&[8, 8]), meta(&[8])], 4, Hypers::default());
+        let mut rng = crate::rng::Rng::new(2);
+        let mut p = vec![
+            Tensor::from_vec(&[8, 8], (0..64).map(|_| rng.normal() as f32).collect()),
+            Tensor::from_vec(&[8], (0..8).map(|_| rng.normal() as f32).collect()),
+        ];
+        for t in 1..=30 {
+            let g = vec![
+                Tensor::from_vec(&[8, 8], (0..64).map(|_| rng.normal() as f32).collect()),
+                Tensor::from_vec(&[8], (0..8).map(|_| rng.normal() as f32).collect()),
+            ];
+            opt.step(&mut p, &g, t, 1e-2);
+        }
+        assert!(p[0].data.iter().all(|x| x.is_finite()));
+        assert!(p[1].data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,7 +1,19 @@
 //! Optimizer-state memory accounting — produces the paper's headline
 //! "fraction of second moments saved" numbers (Fig. 10 top, §5).
+//!
+//! Two entry points:
+//! * [`report`] — exact accounting over a live [`Optimizer`] instance
+//!   (the split-engine path). Each optimizer reports its *own* state
+//!   elements through the trait, so Lion (no V), Adafactor (factored
+//!   row+col accumulators, no momentum in v1) and SM3 (cover sets) all
+//!   come out right rather than being assumed AdamW-shaped.
+//! * [`report_manifest`] — the same numbers derived from a fused
+//!   train-step manifest's `m_shapes`/`v_shapes`, for runs where the
+//!   optimizer state lives in backend literals and no `Optimizer`
+//!   object exists.
 
 use super::Optimizer;
+use crate::runtime::manifest::Manifest;
 
 /// Exact state accounting for one optimizer instance.
 #[derive(Debug, Clone, PartialEq)]
@@ -14,23 +26,61 @@ pub struct MemoryReport {
     pub v_fraction: f64,
     /// 1 - v_fraction: the "saves X% of second moments" headline.
     pub v_saving: f64,
+    /// m_elems + v_elems: everything the optimizer stores beyond the
+    /// parameters themselves.
+    pub state_elems: usize,
+    /// 1 - state_elems / (2 * param_elems): total optimizer-state saving
+    /// relative to AdamW's full m + full v. Lion saves 0.5 (momentum
+    /// only); SGD-M likewise; Adafactor v1 approaches 1.0.
+    pub state_saving: f64,
 }
 
-pub fn report(opt: &dyn Optimizer, param_elems: usize) -> MemoryReport {
-    let v_elems = opt.second_moment_elems();
+fn assemble(name: String, param_elems: usize, m_elems: usize, v_elems: usize) -> MemoryReport {
     let v_fraction = if param_elems == 0 {
         0.0
     } else {
         v_elems as f64 / param_elems as f64
     };
+    let state_elems = m_elems + v_elems;
+    let state_saving = if param_elems == 0 {
+        0.0
+    } else {
+        1.0 - state_elems as f64 / (2.0 * param_elems as f64)
+    };
     MemoryReport {
-        name: opt.name().to_string(),
+        name,
         param_elems,
-        m_elems: opt.first_moment_elems(),
+        m_elems,
         v_elems,
         v_fraction,
         v_saving: 1.0 - v_fraction,
+        state_elems,
+        state_saving,
     }
+}
+
+pub fn report(opt: &dyn Optimizer, param_elems: usize) -> MemoryReport {
+    assemble(
+        opt.name().to_string(),
+        param_elems,
+        opt.first_moment_elems(),
+        opt.second_moment_elems(),
+    )
+}
+
+/// Accounting for a fused train-step artifact: state element counts are
+/// read off the manifest's stored-shape lists (`m_shapes` defaults to
+/// one full moment per parameter, matching the engine's state layout).
+/// Returns `None` for non-fused (grad-step) manifests.
+pub fn report_manifest(man: &Manifest) -> Option<MemoryReport> {
+    let v_shapes = man.v_shapes.as_ref()?;
+    let v_elems = v_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    let m_elems = (0..man.n_params()).map(|i| man.m_shape(i).iter().product::<usize>()).sum();
+    let name = match &man.optimizer {
+        Some(opt) => opt.clone(),
+        None => format!("adamw[{}]", man.ruleset.as_deref().unwrap_or("adam")),
+    };
+    Some(assemble(name, man.total_param_elems(), m_elems, v_elems))
 }
 
 impl MemoryReport {
@@ -41,19 +91,22 @@ impl MemoryReport {
             .set("m_elems", self.m_elems)
             .set("v_elems", self.v_elems)
             .set("v_fraction", self.v_fraction)
-            .set("v_saving", self.v_saving);
+            .set("v_saving", self.v_saving)
+            .set("state_elems", self.state_elems)
+            .set("state_saving", self.state_saving);
         v
     }
 
     pub fn row(&self) -> String {
         format!(
-            "{:16} params={:>9} m={:>9} v={:>9} v/param={:>7.4} saving={:>6.2}%",
+            "{:16} params={:>9} m={:>9} v={:>9} v/param={:>7.4} saving={:>6.2}% state={:>6.2}%",
             self.name,
             self.param_elems,
             self.m_elems,
             self.v_elems,
             self.v_fraction,
-            100.0 * self.v_saving
+            100.0 * self.v_saving,
+            100.0 * self.state_saving
         )
     }
 }
@@ -91,6 +144,8 @@ mod tests {
         assert_eq!(r.v_elems, 80);
         assert!((r.v_fraction - 1.0).abs() < 1e-12);
         assert!(r.v_saving.abs() < 1e-12);
+        assert_eq!(r.state_elems, 160);
+        assert!(r.state_saving.abs() < 1e-12);
     }
 
     #[test]
@@ -100,5 +155,54 @@ mod tests {
         let r = report(&opt, 4096);
         assert_eq!(r.v_elems, 64);
         assert!(r.v_saving > 0.98);
+    }
+
+    #[test]
+    fn per_optimizer_shapes_are_not_assumed_adamw() {
+        let man = crate::runtime::backend::native::grad_manifest("mlp_tiny").unwrap();
+        let total = man.total_param_elems();
+
+        // Lion: momentum only, no V at all.
+        let lion = crate::optim::presets::build("lion", &man, Hypers::default()).unwrap();
+        let r = report(lion.as_ref(), total);
+        assert_eq!(r.v_elems, 0);
+        assert_eq!(r.m_elems, total);
+        assert!((r.v_saving - 1.0).abs() < 1e-12);
+        assert!((r.state_saving - 0.5).abs() < 1e-12);
+
+        // Adafactor v1: factored row+col accumulators, no momentum.
+        let af = crate::optim::presets::build("adafactor", &man, Hypers::default()).unwrap();
+        let r = report(af.as_ref(), total);
+        assert_eq!(r.m_elems, 0);
+        assert!(r.v_elems < total / 4, "factored V should be sublinear");
+        assert!(r.state_saving > 0.9);
+
+        // SM3: cover sets for matrices, full momentum buffer.
+        let sm3 = crate::optim::presets::build("sm3", &man, Hypers::default()).unwrap();
+        let r = report(sm3.as_ref(), total);
+        assert_eq!(r.m_elems, total);
+        assert!(r.v_elems < total / 4, "cover sets should be sublinear");
+    }
+
+    #[test]
+    fn manifest_report_matches_engine_state_layout() {
+        // AdamW fused artifact: full m, ruleset-reduced v.
+        let man = crate::runtime::backend::native::train_manifest("mlp_tiny", "slimadam").unwrap();
+        let r = report_manifest(&man).unwrap();
+        assert_eq!(r.param_elems, man.total_param_elems());
+        assert_eq!(r.m_elems, man.total_param_elems());
+        let v_total: usize = man
+            .v_shapes
+            .as_ref()
+            .unwrap()
+            .iter()
+            .map(|s| s.iter().product::<usize>())
+            .sum();
+        assert_eq!(r.v_elems, v_total);
+        assert!(r.v_saving > 0.9);
+
+        // Grad-step manifests carry no optimizer state.
+        let grad = crate::runtime::backend::native::grad_manifest("mlp_tiny").unwrap();
+        assert!(report_manifest(&grad).is_none());
     }
 }

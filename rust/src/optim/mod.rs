@@ -14,6 +14,7 @@
 pub mod adafactor;
 pub mod adamk;
 pub mod lion;
+pub mod lowrank_v;
 pub mod memory;
 pub mod presets;
 pub mod sgdm;
@@ -58,6 +59,14 @@ pub(crate) fn raw_index(info: &ParamInfo, row: usize, col: usize) -> usize {
 
 /// Global-norm gradient clipping (paper: max norm 1.0). Returns the
 /// pre-clip norm.
+///
+/// Degenerate steps are contained here rather than propagated into
+/// optimizer state: a non-finite norm (any NaN/Inf gradient element)
+/// zeroes the gradients — `g * (max_norm / inf)` would still leave
+/// NaNs in place and a NaN norm fails every comparison, so without the
+/// guard one overflowed batch poisons V for the rest of the run. An
+/// all-zero gradient passes through untouched (no division by the zero
+/// norm).
 pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f64) -> f64 {
     let mut sq = 0.0f64;
     for g in grads.iter() {
@@ -66,7 +75,13 @@ pub fn clip_global_norm(grads: &mut [Tensor], max_norm: f64) -> f64 {
         }
     }
     let norm = sq.sqrt();
-    if norm > max_norm && norm > 0.0 {
+    if !norm.is_finite() {
+        for g in grads.iter_mut() {
+            for x in &mut g.data {
+                *x = 0.0;
+            }
+        }
+    } else if norm > max_norm && norm > 0.0 {
         let scale = (max_norm / norm) as f32;
         for g in grads.iter_mut() {
             for x in &mut g.data {
@@ -92,6 +107,35 @@ mod tests {
         let mut small = vec![Tensor::from_vec(&[2], vec![0.3, 0.4])];
         clip_global_norm(&mut small, 1.0);
         assert!((small[0].data[0] - 0.3).abs() < 1e-7);
+    }
+
+    #[test]
+    fn clip_zero_gradients_pass_through() {
+        let mut g = vec![Tensor::zeros(&[4]), Tensor::zeros(&[2, 2])];
+        let n = clip_global_norm(&mut g, 1.0);
+        assert_eq!(n, 0.0);
+        for t in &g {
+            assert!(t.data.iter().all(|&x| x == 0.0 && x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn clip_nonfinite_gradients_clip_to_zero() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut g = vec![
+                Tensor::from_vec(&[2], vec![3.0, 4.0]),
+                Tensor::from_vec(&[2], vec![bad, 1.0]),
+            ];
+            let n = clip_global_norm(&mut g, 1.0);
+            assert!(!n.is_finite(), "norm should report the blow-up: {n}");
+            for t in &g {
+                assert!(
+                    t.data.iter().all(|&x| x == 0.0),
+                    "degenerate step must clip to zero, got {:?}",
+                    t.data
+                );
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::rules::RuleSet;
 use super::adafactor::Adafactor;
 use super::adamk::AdamK;
 use super::lion::Lion;
+use super::lowrank_v::{self, LowRankV};
 use super::sgdm::SgdM;
 use super::sm3::Sm3;
 use super::{Hypers, KMode, Optimizer, ParamInfo};
@@ -49,6 +50,8 @@ fn n_heads(man: &Manifest) -> usize {
 /// * `lion` — Chen et al. 2023
 /// * `adafactor` / `adafactor_v2` — Shazeer & Stern 2018
 /// * `sgdm` — SGD + momentum 0.9
+/// * `lowrank_v` / `lowrank_v<r>` — rank-r sketched second moments in
+///   the Adapprox spirit (default rank 4)
 ///
 /// Works over any manifest — PJRT artifacts and the native model zoo
 /// alike (conv weights compress per output filter under `slimadam`):
@@ -139,7 +142,31 @@ pub fn build(name: &str, man: &Manifest, hypers: Hypers) -> Result<Box<dyn Optim
         "adafactor" => Box::new(Adafactor::new(metas, false, hypers.weight_decay)),
         "adafactor_v2" => Box::new(Adafactor::new(metas, true, hypers.weight_decay)),
         "sgdm" => Box::new(SgdM::new(metas, 0.9, hypers.weight_decay)),
-        other => bail!("unknown optimizer {other:?}"),
+        other => match lowrank_v::parse_token(other) {
+            Some(rank) => Box::new(LowRankV::new(metas, rank, hypers)),
+            None => bail!("unknown optimizer {other:?}"),
+        },
+    })
+}
+
+/// The resolved hyperparameter spec behind a preset name, for run
+/// identity (`runstore::config_key`). Presets that bake in their own
+/// constants — betas, momentum, rank — return a canonical spec string;
+/// the AdamW family returns `None` because its hyperparameters already
+/// travel in the config's [`Hypers`]. Keys for adam/slimadam/adalayer
+/// configs therefore stay byte-identical to earlier schema versions.
+pub fn spec_key(name: &str) -> Option<String> {
+    Some(match name {
+        "sm3" => "sm3:b=0.95,mom=0.9,eps=1e-8".to_string(),
+        "sm3_b0" => "sm3:b=0,mom=0.9,eps=1e-8".to_string(),
+        "lion" => "lion:b1=0.9,b2=0.95".to_string(),
+        "adafactor" => "adafactor:v1,d=1".to_string(),
+        "adafactor_v2" => "adafactor:v2,b1=0.9,d=1".to_string(),
+        "sgdm" => "sgdm:mom=0.9".to_string(),
+        other => {
+            let rank = lowrank_v::parse_token(other)?;
+            format!("lowrank_v:r={rank}")
+        }
     })
 }
 
@@ -167,6 +194,7 @@ pub const ALL: &[&str] = &[
     "adafactor",
     "adafactor_v2",
     "sgdm",
+    "lowrank_v",
 ];
 
 #[cfg(test)]
@@ -236,6 +264,35 @@ mod tests {
         let v2 = build("adam_mini_v2", &man, Hypers::default()).unwrap();
         // tok per row (64) + q per head (4) + ln compressed (1)
         assert_eq!(v2.second_moment_elems(), 64 + 4 + 1);
+    }
+
+    #[test]
+    fn lowrank_tokens_build_with_rank() {
+        let man = manifest();
+        let opt = build("lowrank_v", &man, Hypers::default()).unwrap();
+        assert_eq!(opt.name(), "lowrank_v");
+        let opt8 = build("lowrank_v8", &man, Hypers::default()).unwrap();
+        assert_eq!(opt8.name(), "lowrank_v8");
+        assert!(
+            opt8.second_moment_elems() > opt.second_moment_elems(),
+            "higher rank stores more sketch state"
+        );
+        assert!(build("lowrank_v0", &man, Hypers::default()).is_err());
+    }
+
+    #[test]
+    fn spec_keys_cover_hardcoded_presets_only() {
+        // AdamW-family names: hypers travel in the config, no spec key.
+        for name in ["adam", "slimadam", "adalayer", "adalayer_ln_tl"] {
+            assert!(spec_key(name).is_none(), "{name}");
+        }
+        // Baselines with baked-in constants get a canonical spec.
+        for name in ["sm3", "sm3_b0", "lion", "adafactor", "adafactor_v2", "sgdm"] {
+            assert!(spec_key(name).is_some(), "{name}");
+        }
+        assert_eq!(spec_key("lowrank_v").as_deref(), Some("lowrank_v:r=4"));
+        assert_eq!(spec_key("lowrank_v2").as_deref(), Some("lowrank_v:r=2"));
+        assert_ne!(spec_key("sm3"), spec_key("sm3_b0"));
     }
 
     #[test]

@@ -88,6 +88,19 @@ pub fn config_key(cfg: &TrainConfig) -> u64 {
         cfg.probe,
         cfg.hypers,
     );
+    // Bake-off optimizers carry identity beyond their preset name and
+    // `cfg.hypers`: Lion's betas, SM3's beta/momentum, Adafactor's
+    // variant and lowrank_v's rank are hardcoded behind the token. Fold
+    // the canonical spec in so e.g. `sm3` and `sm3_b0` rows can never
+    // alias. The segment is appended only when a spec exists, so
+    // adam/slimadam/adalayer keys keep their historical bytes.
+    let token = match &cfg.engine {
+        EngineKind::Split => cfg.optimizer.as_str(),
+        EngineKind::Fused(ruleset) => ruleset.as_str(),
+    };
+    if let Some(spec) = crate::optim::presets::spec_key(token) {
+        let _ = write!(s, "|opt:{spec}");
+    }
     stable_hash64(s.as_bytes())
 }
 
@@ -432,6 +445,36 @@ mod tests {
         let mut fused = base.clone();
         fused.engine = EngineKind::Fused("slimadam".into());
         assert_ne!(config_key(&base), config_key(&fused));
+    }
+
+    /// Bake-off optimizer identity: the canonical spec segment pins each
+    /// token's *behavior* (hardcoded betas, variant, rank), not just its
+    /// name, so a future change to a hardcoded hyper changes the key and
+    /// stale rows can never be served for the new behavior. The AdamW
+    /// family gets no segment and keeps its historical key bytes.
+    #[test]
+    fn config_key_folds_optimizer_spec_in() {
+        use crate::optim::presets::spec_key;
+        let mk = |opt: &str| TrainConfig::lm("gpt_nano", opt, 1e-3, 100);
+        // same hypers struct, different hardcoded behavior
+        assert_ne!(config_key(&mk("sm3")), config_key(&mk("sm3_b0")));
+        assert_ne!(config_key(&mk("adafactor")), config_key(&mk("adafactor_v2")));
+        assert_ne!(config_key(&mk("lowrank_v")), config_key(&mk("lowrank_v8")));
+        // the default-rank alias and its explicit spelling are the same
+        // algorithm: their spec segments agree (the engine segment still
+        // carries the spelled token)
+        assert_eq!(spec_key("lowrank_v"), spec_key("lowrank_v4"));
+        // the AdamW family carries no spec segment: keys stay bytewise
+        // what they were before the segment existed
+        for tok in ["adam", "slimadam", "adalayer"] {
+            assert_eq!(spec_key(tok), None, "{tok} must not grow a spec segment");
+        }
+        // fused bake-off tokens key separately per rank too
+        let mut fa = mk("adam");
+        fa.engine = EngineKind::Fused("lowrank_v".into());
+        let mut fb = mk("adam");
+        fb.engine = EngineKind::Fused("lowrank_v8".into());
+        assert_ne!(config_key(&fa), config_key(&fb));
     }
 
     #[test]

@@ -87,6 +87,13 @@ pub const MODELS: &[&str] = &["mlp_tiny", "gpt_micro", "gpt_deep", "conv_mini"];
 /// manifests (K modes per tensor).
 pub const RULESETS: &[&str] = &["adam", "slimadam", "adalayer"];
 
+/// Non-AdamW fused update rules the native interpreter can bake into
+/// `train_step` manifests — the optimizer bake-off. Each token selects a
+/// dedicated lane kernel with its own stored-state layout (see the
+/// `fused_optim_update_l` dispatcher); `lowrank_v<r>` tokens with an
+/// explicit rank (e.g. `lowrank_v8`) are accepted too.
+pub const OPTIMIZERS: &[&str] = &["lion", "sgdm", "sm3", "adafactor", "lowrank_v"];
+
 const RMS_EPS: f64 = 1e-5;
 
 /// Conv-family kernel side (`valid` convolutions) and pooling window.
@@ -403,6 +410,35 @@ pub fn grad_manifest(model: &str) -> Result<Manifest> {
     Ok(artifact(&format!("{model}.grad"))?.manifest)
 }
 
+/// Builtin `train_step` manifest for a native model and fused-update
+/// token — a ruleset from [`RULESETS`] or an optimizer from
+/// [`OPTIMIZERS`].
+///
+/// ```
+/// use slimadam::runtime::backend::native;
+///
+/// let man = native::train_manifest("mlp_tiny", "lion").unwrap();
+/// assert_eq!(man.optimizer_name(), "lion");
+/// // Lion stores no second moment: every baked V shape is empty
+/// let v: usize = man
+///     .v_shapes
+///     .as_ref()
+///     .unwrap()
+///     .iter()
+///     .map(|s| s.iter().product::<usize>())
+///     .sum();
+/// assert_eq!(v, 0);
+/// ```
+pub fn train_manifest(model: &str, token: &str) -> Result<Manifest> {
+    Ok(artifact(&format!("{model}.train.{token}"))?.manifest)
+}
+
+/// Does this train token select a bake-off optimizer kernel (as opposed
+/// to a K-moded AdamW ruleset)?
+fn is_optimizer_token(token: &str) -> bool {
+    crate::optim::lowrank_v::parse_token(token).is_some() || OPTIMIZERS.contains(&token)
+}
+
 /// Per-tensor K modes baked into a fused native manifest.
 fn ruleset_modes(man: &Manifest, ruleset: &str) -> Result<Vec<KMode>> {
     Ok(match ruleset {
@@ -410,8 +446,10 @@ fn ruleset_modes(man: &Manifest, ruleset: &str) -> Result<Vec<KMode>> {
         "adalayer" => vec![KMode::Both; man.n_params()],
         "slimadam" => crate::rules::RuleSet::table3_default(man).modes_for(man),
         other => bail!(
-            "unknown native ruleset {other:?} — builtin rulesets: {}",
-            RULESETS.join(", ")
+            "unknown native ruleset {other:?} — builtin rulesets: {}; \
+             optimizer tokens: {}",
+            RULESETS.join(", "),
+            OPTIMIZERS.join(", ")
         ),
     })
 }
@@ -427,6 +465,61 @@ fn v_shape(info: &crate::runtime::manifest::ParamInfo, k: KMode) -> Vec<usize> {
         KMode::Both => vec![1],
         KMode::Blocks(n) => vec![n],
     }
+}
+
+/// Bake a bake-off optimizer's state layout into a train manifest: the
+/// `optimizer` field, all-`none` K modes (these rules don't use Eq. 2
+/// sharing), each rule's own stored-V layout in `v_shapes`, and
+/// `m_shapes` when the first moment is not one full tensor per
+/// parameter. Stored layouts, matching the lane kernels:
+///
+/// * `lion` / `sgdm` — no V at all (`[0]` per tensor), full momentum;
+/// * `sm3` — matrices store row+col cover accumulators stacked
+///   `[rows..][cols..]`, vectors stay exact; full momentum;
+/// * `adafactor` — matrices store factored row+col EMAs stacked
+///   `[rows..][cols..]`, vectors stay exact; no momentum (v1);
+/// * `lowrank_v<r>` — matrices store the rank-r sketch `Y (rows×r)`
+///   row-major followed by `C (cols)`, vectors stay exact; full
+///   momentum.
+fn bake_optimizer_shapes(
+    root: &mut crate::json::Value,
+    base: &Manifest,
+    token: &str,
+) -> Result<()> {
+    // The kernels address matrix-view element (ri, ci) as raw index
+    // ri*cols+ci; that identity needs fan_out_axis 0, which every native
+    // builtin parameter has.
+    anyhow::ensure!(
+        base.params.iter().all(|p| p.fan_out_axis == 0),
+        "native optimizer kernels require fan_out_axis 0"
+    );
+    let rank = crate::optim::lowrank_v::parse_token(token);
+    let v_shapes: Vec<crate::json::Value> = base
+        .params
+        .iter()
+        .map(|p| {
+            let (rows, cols) = p.matrix_dims();
+            let shape: Vec<usize> = match (token, rank) {
+                ("lion" | "sgdm", _) => vec![0],
+                ("sm3" | "adafactor", _) if p.is_vector() => p.shape.clone(),
+                ("sm3" | "adafactor", _) => vec![rows + cols],
+                (_, Some(_)) if p.is_vector() => p.shape.clone(),
+                (_, Some(r)) => vec![rows * r + cols],
+                other => unreachable!("unvetted optimizer token {other:?}"),
+            };
+            crate::json::Value::from(shape)
+        })
+        .collect();
+    root.set("optimizer", token);
+    root.set("k_modes", vec!["none".to_string(); base.n_params()]);
+    root.set("v_shapes", crate::json::Value::Arr(v_shapes));
+    if token == "adafactor" {
+        let m_shapes: Vec<crate::json::Value> = (0..base.n_params())
+            .map(|_| crate::json::Value::from(vec![0usize]))
+            .collect();
+        root.set("m_shapes", crate::json::Value::Arr(m_shapes));
+    }
+    Ok(())
 }
 
 thread_local! {
@@ -483,6 +576,10 @@ fn generate_artifact(name: &str) -> Result<Artifact> {
         let base = Manifest::parse(&root.dump()).map_err(|e| {
             anyhow!("internal: native train manifest bootstrap failed: {e}")
         })?;
+        if is_optimizer_token(ruleset.unwrap()) {
+            bake_optimizer_shapes(&mut root, &base, ruleset.unwrap())?;
+            return finish_artifact(name, root);
+        }
         let modes = ruleset_modes(&base, ruleset.unwrap())?;
         // Manifest k_modes strings can carry none/fan_in/fan_out/both only
         // (KMode::parse has no "blocksN" spelling) — refuse early rather
@@ -508,6 +605,13 @@ fn generate_artifact(name: &str) -> Result<Artifact> {
         root.set("v_shapes", crate::json::Value::Arr(v_shapes));
     }
 
+    finish_artifact(name, root)
+}
+
+/// Serialize, re-parse and validate a generated manifest, producing the
+/// builtin [`Artifact`] whose hash digests the same bytes a file would
+/// hold.
+fn finish_artifact(name: &str, root: crate::json::Value) -> Result<Artifact> {
     let text = root.dump();
     let manifest = Manifest::parse(&text)
         .with_context(|| format!("parsing generated native manifest {name:?}"))?;
@@ -869,7 +973,7 @@ impl NativeExecutable {
             w_l.push(read(&inputs[i], man.params[i].numel(), "param")?);
         }
         for i in 0..n {
-            m_l.push(read(&inputs[n + i], man.params[i].numel(), "m")?);
+            m_l.push(read(&inputs[n + i], man.m_shape(i).iter().product(), "m")?);
         }
         for (i, vs) in v_shapes.iter().enumerate() {
             v_l.push(read(&inputs[2 * n + i], vs.iter().product(), "v")?);
@@ -896,10 +1000,10 @@ impl NativeExecutable {
             .map(|g| g.iter().map(|&x| x.to_f32()).collect())
             .collect();
         let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, 1);
-        fused_update_l(
+        fused_optim_update_l(
             man, k_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &[t],
             &[lr], 1,
-        );
+        )?;
 
         let mut out = Vec::with_capacity(2 + 3 * n);
         out.push(scalar_f32(losses[0] as f32));
@@ -908,7 +1012,7 @@ impl NativeExecutable {
             out.push(tensor_to_literal(&Tensor::from_vec(&man.params[i].shape, s))?);
         }
         for (i, s) in m_l.into_iter().enumerate() {
-            out.push(tensor_to_literal(&Tensor::from_vec(&man.params[i].shape, s))?);
+            out.push(tensor_to_literal(&Tensor::from_vec(man.m_shape(i), s))?);
         }
         for (i, s) in v_l.into_iter().enumerate() {
             out.push(tensor_to_literal(&Tensor::from_vec(&v_shapes[i], s))?);
@@ -1002,7 +1106,8 @@ impl NativeExecutable {
             w_l.push(self.stack_slot(jobs, i, man.params[i].numel(), "param")?);
         }
         for i in 0..n {
-            m_l.push(self.stack_slot(jobs, n + i, man.params[i].numel(), "m")?);
+            let m_len = man.m_shape(i).iter().product();
+            m_l.push(self.stack_slot(jobs, n + i, m_len, "m")?);
         }
         for (i, vs) in v_shapes.iter().enumerate() {
             v_l.push(self.stack_slot(jobs, 2 * n + i, vs.iter().product(), "v")?);
@@ -1029,10 +1134,10 @@ impl NativeExecutable {
             .map(|g| g.iter().map(|&x| x.to_f32()).collect())
             .collect();
         let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, lanes);
-        fused_update_l(
+        fused_optim_update_l(
             man, k_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &ts, &lrs,
             lanes,
-        );
+        )?;
 
         let unstack = |stacked: &[f32], b: usize| -> Vec<f32> {
             stacked[b..].iter().step_by(lanes).copied().collect()
@@ -1050,7 +1155,7 @@ impl NativeExecutable {
             }
             for (i, s) in m_l.iter().enumerate() {
                 job_out.push(tensor_to_literal(&Tensor::from_vec(
-                    &man.params[i].shape,
+                    man.m_shape(i),
                     unstack(s, b),
                 ))?);
             }
@@ -2411,8 +2516,26 @@ pub fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Ve
         );
     }
     let norms: Vec<f64> = sq.iter().map(|s| s.sqrt()).collect();
+    rescale_lanes(grads, &norms, max_norm, l);
+    norms
+}
+
+/// Post-norm rescale sweep shared by the SIMD and scalar-order clip
+/// paths, elementwise and bit-exact in both. A non-finite lane norm
+/// (some gradient element overflowed to NaN/Inf) clips that lane to
+/// zero: rescaling cannot repair it — `g * (max_norm / inf)` leaves
+/// NaNs in place — and without the guard one degenerate lane poisons
+/// its optimizer state for the rest of the run (mirrors
+/// `optim::clip_global_norm`).
+fn rescale_lanes(grads: &mut [Vec<f32>], norms: &[f64], max_norm: f64, l: usize) {
     for (b, &norm) in norms.iter().enumerate() {
-        if norm > max_norm && norm > 0.0 {
+        if !norm.is_finite() {
+            for g in grads.iter_mut() {
+                for x in g[b..].iter_mut().step_by(l) {
+                    *x = 0.0;
+                }
+            }
+        } else if norm > max_norm && norm > 0.0 {
             let scale = (max_norm / norm) as f32;
             for g in grads.iter_mut() {
                 for x in g[b..].iter_mut().step_by(l) {
@@ -2421,7 +2544,6 @@ pub fn clip_global_norm_l(grads: &mut [Vec<f32>], max_norm: f64, l: usize) -> Ve
             }
         }
     }
-    norms
 }
 
 /// Scalar-order global-norm clip: the pre-SIMD body (squares accumulate
@@ -2443,16 +2565,7 @@ pub fn clip_global_norm_ref_l(
         }
     }
     let norms: Vec<f64> = sq.iter().map(|s| s.sqrt()).collect();
-    for (b, &norm) in norms.iter().enumerate() {
-        if norm > max_norm && norm > 0.0 {
-            let scale = (max_norm / norm) as f32;
-            for g in grads.iter_mut() {
-                for x in g[b..].iter_mut().step_by(l) {
-                    *x *= scale;
-                }
-            }
-        }
-    }
+    rescale_lanes(grads, &norms, max_norm, l);
     norms
 }
 
@@ -2616,6 +2729,429 @@ pub fn fused_update_l(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Optimizer bake-off lane kernels
+//
+// One fused kernel per non-AdamW update rule, mirroring the split
+// optimizers in `crate::optim` op for op (same FP op sequence in the
+// same order, so split-vs-fused trajectories agree exactly on vector
+// parameters and on 2-D matrices where view index == raw index — native
+// builtins always, since every parameter has fan_out_axis 0, which
+// manifest generation enforces). Each kernel follows the lane contract:
+// element j of lane b lives at j*l + b, the per-lane op sequence depends
+// only on the logical shape, and no operation mixes lanes — so `run` is
+// the lanes = 1 instantiation and `run_batch` is bit-identical to
+// sequential runs by construction.
+// ---------------------------------------------------------------------------
+
+/// Adafactor's epsilon_1 (inside g²) and RMS clip threshold d — shared
+/// by the `adafactor` and `lowrank_v` lane kernels, matching the split
+/// optimizers' constants.
+const AF_EPS1: f32 = 1e-30;
+const AF_CLIP_D: f32 = 1.0;
+
+/// SM3's denominator epsilon, matching `optim::sm3::Sm3`.
+const SM3_EPS: f32 = 1e-8;
+
+/// Dispatch the fused per-lane update for this manifest's baked update
+/// rule: the K-moded AdamW family when no `optimizer` field is present,
+/// else the matching bake-off kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_optim_update_l(
+    man: &Manifest,
+    k_modes: &[KMode],
+    h: &Hypers,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    ts: &[usize],
+    lrs: &[f32],
+    l: usize,
+) -> Result<()> {
+    match man.optimizer_name() {
+        "adamw" => fused_update_l(man, k_modes, h, w, m, v, g, ts, lrs, l),
+        "lion" => lion_update_l(man, h, w, m, v, g, lrs, l),
+        "sgdm" => sgdm_update_l(man, h, w, m, v, g, lrs, l),
+        "sm3" => sm3_update_l(man, h, w, m, v, g, lrs, l),
+        "adafactor" => adafactor_update_l(man, h, w, m, v, g, ts, lrs, l),
+        other => match crate::optim::lowrank_v::parse_token(other) {
+            Some(rank) => lowrank_update_l(man, h, rank, w, m, v, g, ts, lrs, l),
+            None => bail!("native backend cannot execute fused optimizer {other:?}"),
+        },
+    }
+    Ok(())
+}
+
+/// Distribute independent per-tensor updates across intra-op workers.
+/// Every kernel body passed here runs strict scalar order inside a
+/// tensor, so results are bitwise invariant in the worker count;
+/// [`KernelMode::ScalarRef`] simply forces one worker.
+fn per_tensor_update<F>(
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    span: &'static str,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32], &mut [f32], &[f32]) + Sync,
+{
+    let workers = match kernel_mode() {
+        KernelMode::Simd => crate::pool::intraop_workers(),
+        KernelMode::ScalarRef => 1,
+    };
+    let elems: usize = w.iter().map(|wi| wi.len()).sum();
+    let mut items: Vec<(usize, &mut [f32], &mut [f32], &mut [f32], &[f32])> = w
+        .iter_mut()
+        .zip(m.iter_mut())
+        .zip(v.iter_mut())
+        .zip(g.iter())
+        .enumerate()
+        .map(|(i, (((wi, mi), vi), gi))| {
+            (
+                i,
+                wi.as_mut_slice(),
+                mi.as_mut_slice(),
+                vi.as_mut_slice(),
+                gi.as_slice(),
+            )
+        })
+        .collect();
+    let t0 = crate::obs::clock();
+    let n_tensors = items.len();
+    crate::pool::parallel_chunks(&mut items, workers, |_, item| {
+        f(item.0, &mut *item.1, &mut *item.2, &mut *item.3, item.4)
+    });
+    if crate::obs::enabled() {
+        crate::obs::emit_since(
+            crate::obs::SpanKind::IntraopChunk,
+            crate::obs::intern(span),
+            t0,
+            [n_tensors as u64, elems as u64, 0, 0],
+        );
+    }
+}
+
+/// Per-lane fused Lion update (mirrors `optim::lion::Lion`): sign of the
+/// beta1 interpolation, decoupled weight decay, beta2 momentum EMA. No
+/// second moment — `v` slices are zero-length.
+#[allow(clippy::too_many_arguments)]
+pub fn lion_update_l(
+    man: &Manifest,
+    h: &Hypers,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    lrs: &[f32],
+    l: usize,
+) {
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    per_tensor_update(w, m, v, g, "lion_update", |i, wi, mi, _vi, gi| {
+        let info = &man.params[i];
+        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+        for j in 0..info.numel() {
+            for b in 0..l {
+                let s = j * l + b;
+                let gj = gi[s];
+                let interp = b1 * mi[s] + (1.0 - b1) * gj;
+                let u = if interp > 0.0 {
+                    1.0
+                } else if interp < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+                wi[s] -= lrs[b] * (u + wd * wi[s]);
+                mi[s] = b2 * mi[s] + (1.0 - b2) * gj;
+            }
+        }
+    });
+}
+
+/// Per-lane fused SGD-momentum update (mirrors `optim::sgdm::SgdM`,
+/// momentum = `hypers.beta1`). No second moment — `v` slices are
+/// zero-length.
+#[allow(clippy::too_many_arguments)]
+pub fn sgdm_update_l(
+    man: &Manifest,
+    h: &Hypers,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    lrs: &[f32],
+    l: usize,
+) {
+    let mom = h.beta1 as f32;
+    per_tensor_update(w, m, v, g, "sgdm_update", |i, wi, mi, _vi, gi| {
+        let info = &man.params[i];
+        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+        for j in 0..info.numel() {
+            for b in 0..l {
+                let s = j * l + b;
+                mi[s] = mom * mi[s] + gi[s];
+                wi[s] -= lrs[b] * (mi[s] + wd * wi[s]);
+            }
+        }
+    });
+}
+
+/// Per-lane fused SM3 update (mirrors `optim::sm3::Sm3`, beta =
+/// `hypers.beta2`, momentum = `hypers.beta1`): matrices store row+col
+/// cover accumulators stacked `[rows..][cols..]` in `v`, vectors keep
+/// exact accumulators; `m` is the momentum buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn sm3_update_l(
+    man: &Manifest,
+    h: &Hypers,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    lrs: &[f32],
+    l: usize,
+) {
+    let beta = h.beta2 as f32;
+    let mom = h.beta1 as f32;
+    per_tensor_update(w, m, v, g, "sm3_update", |i, wi, mi, vi, gi| {
+        let info = &man.params[i];
+        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+        if info.is_vector() {
+            for j in 0..info.numel() {
+                for b in 0..l {
+                    let s = j * l + b;
+                    let gj = gi[s];
+                    vi[s] = beta * vi[s] + (1.0 - beta) * gj * gj;
+                    let pg = gj / (vi[s].sqrt() + SM3_EPS);
+                    mi[s] = mom * mi[s] + (1.0 - mom) * pg;
+                    wi[s] -= lrs[b] * (mi[s] + wd * wi[s]);
+                }
+            }
+            return;
+        }
+        let (rows, cols) = info.matrix_dims();
+        let (racc, cacc) = vi.split_at_mut(rows * l);
+        let mut new_rows = vec![0.0f32; rows * l];
+        let mut new_cols = vec![0.0f32; cols * l];
+        for ri in 0..rows {
+            for ci in 0..cols {
+                for b in 0..l {
+                    let s = (ri * cols + ci) * l + b;
+                    let gj = gi[s];
+                    let nu = beta * racc[ri * l + b].min(cacc[ci * l + b])
+                        + (1.0 - beta) * gj * gj;
+                    new_rows[ri * l + b] = new_rows[ri * l + b].max(nu);
+                    new_cols[ci * l + b] = new_cols[ci * l + b].max(nu);
+                    let pg = gj / (nu.sqrt() + SM3_EPS);
+                    mi[s] = mom * mi[s] + (1.0 - mom) * pg;
+                    wi[s] -= lrs[b] * (mi[s] + wd * wi[s]);
+                }
+            }
+        }
+        racc.copy_from_slice(&new_rows);
+        cacc.copy_from_slice(&new_cols);
+    });
+}
+
+/// Per-lane fused Adafactor-v1 update (mirrors `optim::adafactor` with
+/// `use_momentum = false`): factored row+col EMAs stacked
+/// `[rows..][cols..]` in `v`, time-dependent decay `1 - t^-0.8`, RMS
+/// update clipping with f64 square accumulation. No momentum — `m`
+/// slices are zero-length.
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_update_l(
+    man: &Manifest,
+    h: &Hypers,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    ts: &[usize],
+    lrs: &[f32],
+    l: usize,
+) {
+    let beta2t: Vec<f32> = ts.iter().map(|&t| 1.0 - (t as f32).powf(-0.8)).collect();
+    per_tensor_update(w, m, v, g, "adafactor_update", |i, wi, _mi, vi, gi| {
+        let info = &man.params[i];
+        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+        let numel = info.numel();
+        let mut u = vec![0.0f32; numel * l];
+        if info.is_vector() {
+            for j in 0..numel {
+                for b in 0..l {
+                    let s = j * l + b;
+                    let g2 = gi[s] * gi[s] + AF_EPS1;
+                    vi[s] = beta2t[b] * vi[s] + (1.0 - beta2t[b]) * g2;
+                    u[s] = gi[s] / vi[s].sqrt();
+                }
+            }
+        } else {
+            let (rows, cols) = info.matrix_dims();
+            let (racc, cacc) = vi.split_at_mut(rows * l);
+            let mut rsum = vec![0.0f32; rows * l];
+            let mut csum = vec![0.0f32; cols * l];
+            for ri in 0..rows {
+                for ci in 0..cols {
+                    for b in 0..l {
+                        let gj = gi[(ri * cols + ci) * l + b];
+                        let g2 = gj * gj + AF_EPS1;
+                        rsum[ri * l + b] += g2;
+                        csum[ci * l + b] += g2;
+                    }
+                }
+            }
+            for k in 0..rows {
+                for b in 0..l {
+                    let s = k * l + b;
+                    racc[s] = beta2t[b] * racc[s] + (1.0 - beta2t[b]) * rsum[s];
+                }
+            }
+            for k in 0..cols {
+                for b in 0..l {
+                    let s = k * l + b;
+                    cacc[s] = beta2t[b] * cacc[s] + (1.0 - beta2t[b]) * csum[s];
+                }
+            }
+            let mut rtot = vec![0.0f32; l];
+            for k in 0..rows {
+                for b in 0..l {
+                    rtot[b] += racc[k * l + b];
+                }
+            }
+            for ri in 0..rows {
+                for ci in 0..cols {
+                    for b in 0..l {
+                        let s = (ri * cols + ci) * l + b;
+                        let vv = (racc[ri * l + b] * cacc[ci * l + b]
+                            / rtot[b].max(AF_EPS1))
+                        .max(AF_EPS1);
+                        u[s] = gi[s] / vv.sqrt();
+                    }
+                }
+            }
+        }
+        // RMS clipping per lane: u /= max(1, RMS(u)/d). Squares stay in
+        // f32 before the f64 accumulation, matching the split optimizer.
+        let mut sums = vec![0.0f64; l];
+        for j in 0..numel {
+            for b in 0..l {
+                let x = u[j * l + b];
+                sums[b] += (x * x) as f64;
+            }
+        }
+        let scale: Vec<f32> = sums
+            .iter()
+            .map(|&s| {
+                let rms = (s / numel as f64).sqrt() as f32;
+                1.0 / (rms / AF_CLIP_D).max(1.0)
+            })
+            .collect();
+        for j in 0..numel {
+            for b in 0..l {
+                let s = j * l + b;
+                wi[s] -= lrs[b] * (u[s] * scale[b] + wd * wi[s]);
+            }
+        }
+    });
+}
+
+/// Per-lane fused low-rank-V update (mirrors `optim::lowrank_v::LowRankV`):
+/// matrices store the rank-r sketch `Y (rows×r)` row-major then `C (cols)`
+/// stacked in `v`, with the deterministic column buckets shared with the
+/// split optimizer via [`crate::optim::lowrank_v::bucket_of`]; vectors run
+/// exact AdamW. Full bias-corrected momentum in `m`.
+#[allow(clippy::too_many_arguments)]
+pub fn lowrank_update_l(
+    man: &Manifest,
+    h: &Hypers,
+    rank: usize,
+    w: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    g: &[Vec<f32>],
+    ts: &[usize],
+    lrs: &[f32],
+    l: usize,
+) {
+    let b1 = h.beta1 as f32;
+    let b2 = h.beta2 as f32;
+    let eps = h.eps as f32;
+    let bc1: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b1.powi(t as i32))).collect();
+    let bc2: Vec<f32> = ts.iter().map(|&t| 1.0 / (1.0 - b2.powi(t as i32))).collect();
+    per_tensor_update(w, m, v, g, "lowrank_update", |i, wi, mi, vi, gi| {
+        let info = &man.params[i];
+        let wd = if info.wd { h.weight_decay as f32 } else { 0.0 };
+        if info.is_vector() {
+            for j in 0..info.numel() {
+                for b in 0..l {
+                    let s = j * l + b;
+                    let gj = gi[s];
+                    mi[s] = b1 * mi[s] + (1.0 - b1) * gj;
+                    vi[s] = b2 * vi[s] + (1.0 - b2) * gj * gj;
+                    let mh = mi[s] * bc1[b];
+                    let vh = vi[s] * bc2[b];
+                    wi[s] -= lrs[b] * (mh / (vh.sqrt() + eps) + wd * wi[s]);
+                }
+            }
+            return;
+        }
+        let (rows, cols) = info.matrix_dims();
+        let buckets: Vec<usize> = (0..cols)
+            .map(|j| crate::optim::lowrank_v::bucket_of(&info.name, rank, j))
+            .collect();
+        let (yacc, cacc) = vi.split_at_mut(rows * rank * l);
+        let mut ysum = vec![0.0f32; rows * rank * l];
+        let mut csum = vec![0.0f32; cols * l];
+        for ri in 0..rows {
+            for ci in 0..cols {
+                for b in 0..l {
+                    let gj = gi[(ri * cols + ci) * l + b];
+                    let g2 = gj * gj + AF_EPS1;
+                    ysum[(ri * rank + buckets[ci]) * l + b] += g2;
+                    csum[ci * l + b] += g2;
+                }
+            }
+        }
+        for k in 0..rows * rank {
+            for b in 0..l {
+                let s = k * l + b;
+                yacc[s] = b2 * yacc[s] + (1.0 - b2) * ysum[s];
+            }
+        }
+        for k in 0..cols {
+            for b in 0..l {
+                let s = k * l + b;
+                cacc[s] = b2 * cacc[s] + (1.0 - b2) * csum[s];
+            }
+        }
+        let mut bsum = vec![0.0f32; rank * l];
+        for ci in 0..cols {
+            for b in 0..l {
+                bsum[buckets[ci] * l + b] += cacc[ci * l + b];
+            }
+        }
+        for ri in 0..rows {
+            for ci in 0..cols {
+                for b in 0..l {
+                    let s = (ri * cols + ci) * l + b;
+                    let bk = buckets[ci];
+                    let vv = (yacc[(ri * rank + bk) * l + b] * cacc[ci * l + b]
+                        / bsum[bk * l + b].max(AF_EPS1))
+                    .max(AF_EPS1);
+                    let gj = gi[s];
+                    mi[s] = b1 * mi[s] + (1.0 - b1) * gj;
+                    let mh = mi[s] * bc1[b];
+                    let vh = vv * bc2[b];
+                    wi[s] -= lrs[b] * (mh / (vh.sqrt() + eps) + wd * wi[s]);
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2680,13 +3216,51 @@ mod tests {
                 let train = artifact(&format!("{model}.train.{ruleset}")).unwrap();
                 assert_eq!(train.manifest.kind, "train_step");
                 assert_eq!(train.manifest.ruleset.as_deref(), Some(*ruleset));
+                // AdamW family: no optimizer field, full-shape moments
+                assert_eq!(train.manifest.optimizer_name(), "adamw");
+                assert!(train.manifest.m_shapes.is_none());
                 // grad and train agree on params/batch, differ in hash
                 assert_eq!(train.manifest.n_params(), grad.manifest.n_params());
                 assert_ne!(train.manifest_hash, grad.manifest_hash);
             }
+            for opt in OPTIMIZERS {
+                let train = artifact(&format!("{model}.train.{opt}")).unwrap();
+                assert_eq!(train.manifest.kind, "train_step");
+                assert_eq!(train.manifest.optimizer_name(), *opt);
+                assert_eq!(train.manifest.n_params(), grad.manifest.n_params());
+            }
         }
         assert!(artifact("mlp_tiny.nonsense").is_err());
         assert!(artifact("no_such_model.grad").is_err());
+        // explicit-rank lowrank tokens parse too
+        let man = train_manifest("mlp_tiny", "lowrank_v2").unwrap();
+        assert_eq!(man.optimizer_name(), "lowrank_v2");
+    }
+
+    /// Baked optimizer state layouts match the split optimizers' exact
+    /// element counts — `optim::memory::report` over the live optimizer
+    /// and `report_manifest` over the fused artifact must agree, for
+    /// every model and bake-off token.
+    #[test]
+    fn optimizer_manifest_state_matches_split_accounting() {
+        for model in MODELS {
+            let grad = grad_manifest(model).unwrap();
+            let total = grad.total_param_elems();
+            for opt in OPTIMIZERS {
+                let man = train_manifest(model, opt).unwrap();
+                let fused = crate::optim::memory::report_manifest(&man).unwrap();
+                let split =
+                    crate::optim::presets::build(opt, &grad, man.hypers.unwrap_or_default())
+                        .unwrap();
+                let split = crate::optim::memory::report(split.as_ref(), total);
+                assert_eq!(
+                    (fused.m_elems, fused.v_elems),
+                    (split.m_elems, split.v_elems),
+                    "{model}.{opt}: fused state layout disagrees with split"
+                );
+                assert_eq!(fused.param_elems, total, "{model}.{opt}");
+            }
+        }
     }
 
     #[test]
@@ -2874,6 +3448,123 @@ mod tests {
         }
     }
 
+    /// Split-vs-fused optimizer identity: each bake-off lane kernel
+    /// mirrors its split optimizer op for op, so feeding both the same
+    /// clipped gradients must produce bit-identical parameters (native
+    /// builtins all have fan_out_axis 0, where matrix-view index == raw
+    /// index).
+    #[test]
+    fn fused_optimizer_kernels_match_split_optimizers() {
+        for token in ["lion", "sgdm", "sm3", "adafactor", "lowrank_v", "lowrank_v2"] {
+            let man = train_manifest("gpt_micro", token).unwrap();
+            let hypers = man.hypers.unwrap_or_default();
+            let k_modes = man.k_modes.clone().unwrap();
+            let mut split = crate::optim::presets::build(token, &man, hypers).unwrap();
+            let mut params = init_params(&man, 41);
+            let mut w_l: Vec<Vec<f32>> = params.iter().map(|t| t.data.clone()).collect();
+            let n = man.n_params();
+            let mut m_l: Vec<Vec<f32>> = (0..n)
+                .map(|i| vec![0.0; man.m_shape(i).iter().product()])
+                .collect();
+            let mut v_l: Vec<Vec<f32>> = man
+                .v_shapes
+                .as_ref()
+                .unwrap()
+                .iter()
+                .map(|s| vec![0.0; s.iter().product()])
+                .collect();
+            let mut rng = Rng::new(43);
+            for t in 1..=5usize {
+                let mut grads: Vec<Tensor> = man
+                    .params
+                    .iter()
+                    .map(|p| {
+                        Tensor::from_vec(
+                            &p.shape,
+                            (0..p.numel()).map(|_| rng.normal() as f32).collect(),
+                        )
+                    })
+                    .collect();
+                crate::optim::clip_global_norm(&mut grads, hypers.clip_norm);
+                let g_l: Vec<Vec<f32>> = grads.iter().map(|g| g.data.clone()).collect();
+                split.step(&mut params, &grads, t, 1e-3);
+                fused_optim_update_l(
+                    &man,
+                    &k_modes,
+                    &hypers,
+                    &mut w_l,
+                    &mut m_l,
+                    &mut v_l,
+                    &g_l,
+                    &[t],
+                    &[1e-3],
+                    1,
+                )
+                .unwrap();
+                for (i, (p, wl)) in params.iter().zip(&w_l).enumerate() {
+                    let a: Vec<u32> = p.data.iter().map(|x| x.to_bits()).collect();
+                    let b: Vec<u32> = wl.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(a, b, "{token} t={t} param {i} ({})", man.params[i].name);
+                }
+            }
+        }
+    }
+
+    /// Every bake-off optimizer trains end-to-end through the fused
+    /// engine on one repeated batch.
+    #[test]
+    fn bakeoff_optimizers_train_fused() {
+        use crate::runtime::engine::{BatchData, TrainEngine};
+        let dims = dims_for("mlp_tiny").unwrap();
+        let b = match sample_batch(&dims, 8) {
+            BatchIn::Tokens { x, y } => vec![BatchData::I32(x), BatchData::I32(y)],
+            BatchIn::Images { x, y } => vec![BatchData::F32(x), BatchData::I32(y)],
+        };
+        for token in OPTIMIZERS {
+            let backend = NativeBackend::default();
+            let art = artifact(&format!("mlp_tiny.train.{token}")).unwrap();
+            let compiled = std::rc::Rc::new(art.compile(&backend).unwrap());
+            let mut eng = TrainEngine::with_compiled(compiled, "mitchell", 7).unwrap();
+            // Lion's sign updates move every weight by the full LR; give
+            // it the customary ~10x smaller step.
+            let lr = if *token == "lion" { 3e-4 } else { 3e-3 };
+            let first = eng.step(&b, lr).unwrap();
+            let mut last = first;
+            for _ in 0..40 {
+                last = eng.step(&b, lr).unwrap();
+            }
+            assert!(first.loss.is_finite() && last.grad_norm.is_finite(), "{token}");
+            assert!(
+                last.loss < first.loss,
+                "{token}: fused step did not reduce loss: {} -> {}",
+                first.loss,
+                last.loss
+            );
+        }
+    }
+
+    /// The lowrank_v sketch is a pure function of (name, rank, col):
+    /// same seed, same trajectory, bit for bit.
+    #[test]
+    fn lowrank_fused_same_seed_is_bit_identical() {
+        use crate::runtime::engine::{BatchData, TrainEngine};
+        let dims = dims_for("mlp_tiny").unwrap();
+        let b = match sample_batch(&dims, 9) {
+            BatchIn::Tokens { x, y } => vec![BatchData::I32(x), BatchData::I32(y)],
+            BatchIn::Images { x, y } => vec![BatchData::F32(x), BatchData::I32(y)],
+        };
+        let run = || {
+            let backend = NativeBackend::default();
+            let art = artifact("mlp_tiny.train.lowrank_v").unwrap();
+            let compiled = std::rc::Rc::new(art.compile(&backend).unwrap());
+            let mut eng = TrainEngine::with_compiled(compiled, "mitchell", 11).unwrap();
+            (0..10)
+                .map(|_| eng.step(&b, 1e-3).unwrap().loss.to_bits())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "same seed must give a bit-identical trajectory");
+    }
+
     /// The lane-stacked batched interpreter must be bit-for-bit identical
     /// to sequential `run` calls — for every model family, both manifest
     /// kinds and every ruleset, with per-lane step/lr scalars differing.
@@ -2923,10 +3614,11 @@ mod tests {
             let bat = exe.run_batch(&jobs).unwrap();
             assert_jobs_eq(&seq, &bat, &format!("{model}.grad"));
 
-            // train_step × every ruleset, lanes at different t / lr and
-            // non-zero moments so per-lane bias corrections matter
-            for ruleset in RULESETS {
-                let art = artifact(&format!("{model}.train.{ruleset}")).unwrap();
+            // train_step × every ruleset and bake-off optimizer, lanes at
+            // different t / lr and non-zero moments so per-lane bias
+            // corrections matter
+            for token in RULESETS.iter().chain(OPTIMIZERS.iter()) {
+                let art = artifact(&format!("{model}.train.{token}")).unwrap();
                 let exe = backend.compile(&art).unwrap();
                 let man = art.manifest.clone();
                 let v_shapes = man.v_shapes.clone().unwrap();
@@ -2942,10 +3634,10 @@ mod tests {
                                 .unwrap(),
                             );
                         }
-                        for p in &man.params {
+                        for i in 0..man.n_params() {
                             inputs.push(
                                 tensor_to_literal(&Tensor::full(
-                                    &p.shape,
+                                    man.m_shape(i),
                                     0.01 * (jj + 1) as f32,
                                 ))
                                 .unwrap(),
@@ -2969,7 +3661,7 @@ mod tests {
                 let seq: Vec<Vec<Literal>> =
                     jobs.iter().map(|j| exe.run(j).unwrap()).collect();
                 let bat = exe.run_batch(&jobs).unwrap();
-                assert_jobs_eq(&seq, &bat, &format!("{model}.train.{ruleset}"));
+                assert_jobs_eq(&seq, &bat, &format!("{model}.train.{token}"));
             }
         }
     }

@@ -317,8 +317,8 @@ impl TrainEngine {
             };
             state.push(tensor_to_literal(&init.materialize(&p.shape, &mut rng))?);
         }
-        for p in &man.params {
-            state.push(tensor_to_literal(&Tensor::zeros(&p.shape))?);
+        for i in 0..man.n_params() {
+            state.push(tensor_to_literal(&Tensor::zeros(man.m_shape(i)))?);
         }
         let v_shapes = man
             .v_shapes

@@ -157,6 +157,15 @@ pub struct Manifest {
     pub v_shapes: Option<Vec<Vec<usize>>>,
     pub hypers: Option<Hypers>,
     pub ruleset: Option<String>,
+    /// Fused update rule baked into the artifact. Absent means the
+    /// K-moded AdamW family (`adam` / `slimadam` / `adalayer` rulesets);
+    /// the native optimizer bake-off sets `lion`, `sgdm`, `sm3`,
+    /// `adafactor`, or `lowrank_v<r>` here.
+    pub optimizer: Option<String>,
+    /// Stored first-moment shapes, when they differ from the parameter
+    /// shapes (e.g. Adafactor v1 carries no momentum: `[0]` per tensor).
+    /// Absent means one full-shape moment per parameter.
+    pub m_shapes: Option<Vec<Vec<usize>>>,
 }
 
 impl Manifest {
@@ -203,20 +212,24 @@ impl Manifest {
             ),
             None => None,
         };
-        let v_shapes = match v.opt("v_shapes") {
-            Some(arr) => Some(
-                arr.as_arr()?
-                    .iter()
-                    .map(|x| {
-                        x.as_arr()?
-                            .iter()
-                            .map(|d| d.as_usize())
-                            .collect::<Result<Vec<_>>>()
-                    })
-                    .collect::<Result<Vec<_>>>()?,
-            ),
-            None => None,
+        let shape_list = |key: &str| -> Result<Option<Vec<Vec<usize>>>> {
+            match v.opt(key) {
+                Some(arr) => Ok(Some(
+                    arr.as_arr()?
+                        .iter()
+                        .map(|x| {
+                            x.as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<Vec<_>>>()
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                )),
+                None => Ok(None),
+            }
         };
+        let v_shapes = shape_list("v_shapes")?;
+        let m_shapes = shape_list("m_shapes")?;
         let hypers = match v.opt("hypers") {
             Some(h) => Some(Hypers {
                 beta1: h.get("beta1")?.as_f64()?,
@@ -243,6 +256,10 @@ impl Manifest {
             ruleset: v
                 .opt("ruleset")
                 .and_then(|r| r.as_str().ok().map(|s| s.to_string())),
+            optimizer: v
+                .opt("optimizer")
+                .and_then(|r| r.as_str().ok().map(|s| s.to_string())),
+            m_shapes,
         })
     }
 
@@ -278,6 +295,22 @@ impl Manifest {
         self.inputs.len()
     }
 
+    /// Stored first-moment shape of parameter `i` (fused artifacts):
+    /// the explicit `m_shapes` entry when present, else the parameter
+    /// shape (one full-shape moment per tensor, the AdamW layout).
+    pub fn m_shape(&self, i: usize) -> &[usize] {
+        match &self.m_shapes {
+            Some(shapes) => &shapes[i],
+            None => &self.params[i].shape,
+        }
+    }
+
+    /// Fused update rule this artifact bakes in (`adamw` when the
+    /// manifest predates the optimizer bake-off).
+    pub fn optimizer_name(&self) -> &str {
+        self.optimizer.as_deref().unwrap_or("adamw")
+    }
+
     /// Sanity-check input/output layout against the manifest kind.
     pub fn validate(&self) -> Result<()> {
         let n = self.n_params();
@@ -303,6 +336,9 @@ impl Manifest {
                 );
                 anyhow::ensure!(self.k_modes.as_ref().map(|k| k.len()) == Some(n));
                 anyhow::ensure!(self.v_shapes.as_ref().map(|v| v.len()) == Some(n));
+                if let Some(m) = &self.m_shapes {
+                    anyhow::ensure!(m.len() == n, "m_shapes length mismatch");
+                }
             }
             k => bail!("unknown manifest kind {k:?}"),
         }

@@ -195,6 +195,11 @@ impl JobSpec {
             for &lr in &self.lrs {
                 let mut cfg = base.clone();
                 cfg.optimizer = opt.clone();
+                if self.fused.is_some() {
+                    // mirror LrSweep::build_configs: a fused grid routes
+                    // each optimizer token to its own fused artifact
+                    cfg.engine = EngineKind::Fused(opt.clone());
+                }
                 cfg.lr = lr;
                 if self.seed_jobs {
                     cfg.seed = job_seed(self.seed, configs.len() as u64);

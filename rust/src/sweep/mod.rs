@@ -20,7 +20,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{RunSummary, SweepScheduler, TrainConfig};
+use crate::coordinator::{EngineKind, RunSummary, SweepScheduler, TrainConfig};
 use crate::json::Value;
 use crate::metrics::{ascii_chart, CsvWriter};
 
@@ -44,6 +44,14 @@ pub struct LrSweep {
 impl LrSweep {
     /// Flatten the `(optimizer × lr)` grid into scheduler jobs,
     /// row-major: job index = `opt_idx * lrs.len() + lr_idx`.
+    ///
+    /// A fused base engine routes each optimizer token to **its own**
+    /// fused artifact (`EngineKind::Fused(token)`): a fused bake-off
+    /// sweeps real per-optimizer kernels. The old behavior — every row
+    /// silently re-running the single `base` ruleset while labeled with
+    /// a different optimizer name — also aliased run-store config keys
+    /// (identity never saw the row's optimizer), so resumed fused sweeps
+    /// could skip rows that never actually ran.
     fn build_configs(
         base: &TrainConfig,
         optimizers: &[&str],
@@ -54,6 +62,9 @@ impl LrSweep {
             for &lr in lrs {
                 let mut cfg = base.clone();
                 cfg.optimizer = opt.to_string();
+                if matches!(base.engine, EngineKind::Fused(_)) {
+                    cfg.engine = EngineKind::Fused(opt.to_string());
+                }
                 cfg.lr = lr;
                 configs.push(cfg);
             }

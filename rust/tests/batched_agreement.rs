@@ -106,12 +106,14 @@ fn batched_split_sweep_matches_sequential_every_model() {
 }
 
 /// Fused engine (single-dispatch train_step), every builtin model ×
-/// ruleset.
+/// ruleset — and every bake-off optimizer token (Lion, SGDM, SM3,
+/// Adafactor, rank-4 factored V), whose lane kernels ride the same
+/// `run_batch ≡ run` contract.
 #[test]
 fn batched_fused_sweep_matches_sequential_every_ruleset() {
     for model in native::MODELS {
         let steps = if *model == "mlp_tiny" { 10 } else { 5 };
-        for ruleset in native::RULESETS {
+        for ruleset in native::RULESETS.iter().chain(native::OPTIMIZERS) {
             let configs = fused_grid(model, ruleset, steps);
             assert_batched_matches_sequential(
                 &configs,
@@ -119,6 +121,24 @@ fn batched_fused_sweep_matches_sequential_every_ruleset() {
             );
         }
     }
+}
+
+/// Split engine over the bake-off presets: the Rust optimizers (Lion,
+/// SGDM, SM3, Adafactor, rank-4 factored V) stepped by batched
+/// grad-dispatch must match sequential bit for bit, same as adam /
+/// slimadam above.
+#[test]
+fn batched_split_bakeoff_matches_sequential() {
+    let mut configs = Vec::new();
+    for opt in ["lion", "sgdm", "sm3", "adafactor", "lowrank_v"] {
+        for lr in [1e-3, 3e-3] {
+            let mut cfg = TrainConfig::auto("mlp_tiny", opt, lr, 10);
+            cfg.backend = BackendSpec::native();
+            cfg.eval_batches = 2;
+            configs.push(cfg);
+        }
+    }
+    assert_batched_matches_sequential(&configs, "mlp_tiny split bake-off");
 }
 
 /// Resume-after-kill with batched dispatch: a partial batched sweep

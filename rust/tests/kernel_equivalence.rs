@@ -354,6 +354,59 @@ fn clip_matches_reference_and_is_bitwise_worker_invariant() {
     });
 }
 
+/// Regression for the clip guard (optim::clip_global_norm mirror): an
+/// all-zero gradient lane passes through untouched (no 0/0 NaN), and a
+/// lane whose norm is non-finite is clipped to zero — in both kernel
+/// modes, bit-identically.
+#[test]
+fn clip_zeroes_nonfinite_lanes_and_passes_zero_gradients() {
+    let _g = ModeGuard;
+    let l = 2usize;
+    // lane 0: norm 5.02 (> max_norm, rescaled); lane 1: carries a NaN
+    let mut grads = vec![vec![0.0f32; 3 * l]];
+    for (j, v) in [3.0f32, 4.0, 0.5].iter().enumerate() {
+        grads[0][j * l] = *v;
+        grads[0][j * l + 1] = if j == 1 { f32::NAN } else { 1.0 };
+    }
+    let run = |mode: KernelMode, grads: &[Vec<f32>]| {
+        native::set_kernel_mode(mode);
+        let mut g = grads.to_vec();
+        let norms = match mode {
+            KernelMode::Simd => native::clip_global_norm_l(&mut g, 1.0, l),
+            KernelMode::ScalarRef => native::clip_global_norm_ref_l(&mut g, 1.0, l),
+        };
+        (g, norms)
+    };
+    for mode in [KernelMode::Simd, KernelMode::ScalarRef] {
+        let (g, norms) = run(mode, &grads);
+        assert!(norms[0].is_finite() && norms[0] > 1.0, "{mode:?}: {norms:?}");
+        assert!(!norms[1].is_finite(), "{mode:?}: {norms:?}");
+        for j in 0..3 {
+            let a = g[0][j * l];
+            assert!(
+                a.is_finite() && a.abs() < grads[0][j * l].abs(),
+                "{mode:?}: lane 0 elem {j} not rescaled finitely: {a}"
+            );
+            assert_eq!(
+                g[0][j * l + 1].to_bits(),
+                0.0f32.to_bits(),
+                "{mode:?}: non-finite lane must clip to zero (elem {j})"
+            );
+        }
+    }
+
+    // all-zero gradients: norm 0, grads pass through bit-identically
+    let zeros = vec![vec![0.0f32; 4 * l]];
+    for mode in [KernelMode::Simd, KernelMode::ScalarRef] {
+        let (g, norms) = run(mode, &zeros);
+        assert_eq!(norms, vec![0.0f64; l], "{mode:?}");
+        assert!(
+            g[0].iter().all(|x| x.to_bits() == 0.0f32.to_bits()),
+            "{mode:?}: zero grads must pass through"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Fused AdamW update: bitwise across modes AND worker counts, for every
 // model family × ruleset (the k_modes geometry differs per pair)
@@ -441,6 +494,95 @@ fn fused_update_is_bitwise_invariant_for_every_model_and_ruleset() {
     }
 }
 
+/// The bake-off lane kernels (Lion, SGDM, SM3, Adafactor, rank-4
+/// factored V) are scalar-order in both kernel modes and distribute
+/// whole tensors across intra-op workers — so, like the fused AdamW
+/// update, every state output must be bit-identical across ScalarRef /
+/// Simd and 1 / 2 / 8 workers on every native model.
+#[test]
+fn fused_optimizer_kernels_are_bitwise_invariant_across_modes_and_workers() {
+    let _g = ModeGuard;
+    for model in native::MODELS {
+        for token in native::OPTIMIZERS {
+            let art = native::artifact(&format!("{model}.train.{token}")).unwrap();
+            let man = &art.manifest;
+            let k_modes = man.k_modes.as_ref().unwrap();
+            let v_shapes = man.v_shapes.as_ref().unwrap();
+            let hypers = man.hypers.unwrap_or_default();
+            let l = 2usize;
+            let mut rng = Rng::new(0xBA5E);
+            let mut draw = |n: usize| -> Vec<f32> {
+                (0..n).map(|_| (rng.normal() * 0.1) as f32).collect()
+            };
+            let w0: Vec<Vec<f32>> =
+                man.params.iter().map(|p| draw(p.numel() * l)).collect();
+            let m0: Vec<Vec<f32>> = (0..man.params.len())
+                .map(|i| draw(man.m_shape(i).iter().product::<usize>() * l))
+                .collect();
+            let v0: Vec<Vec<f32>> = v_shapes
+                .iter()
+                .map(|vs| {
+                    draw(vs.iter().product::<usize>() * l)
+                        .iter()
+                        .map(|x| x.abs())
+                        .collect()
+                })
+                .collect();
+            let g0: Vec<Vec<f32>> =
+                man.params.iter().map(|p| draw(p.numel() * l)).collect();
+
+            let run = |mode: KernelMode, workers: usize| {
+                native::set_kernel_mode(mode);
+                slimadam::pool::set_intraop_workers(workers);
+                let (mut w, mut m, mut v) = (w0.clone(), m0.clone(), v0.clone());
+                native::fused_optim_update_l(
+                    man,
+                    k_modes,
+                    &hypers,
+                    &mut w,
+                    &mut m,
+                    &mut v,
+                    &g0,
+                    &[3, 7],
+                    &[1e-3, 2e-3],
+                    l,
+                )
+                .unwrap();
+                (w, m, v)
+            };
+            let base = run(KernelMode::ScalarRef, 1);
+            for (mode, workers) in [
+                (KernelMode::Simd, 1),
+                (KernelMode::Simd, 2),
+                (KernelMode::Simd, 8),
+            ] {
+                let got = run(mode, workers);
+                for (which, (state, want)) in [
+                    (&got.0, &base.0),
+                    (&got.1, &base.1),
+                    (&got.2, &base.2),
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    for (ti, (a, r)) in state.iter().zip(want.iter()).enumerate() {
+                        for (i, (x, y)) in a.iter().zip(r).enumerate() {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "{model}×{token}: fused {token} state {which} \
+                                 tensor {ti} elem {i} differs \
+                                 ({mode:?}, {workers} workers)"
+                            );
+                        }
+                    }
+                }
+            }
+            slimadam::pool::set_intraop_workers(1);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // End to end: every model × ruleset through the whole fused train step
 // ---------------------------------------------------------------------------
@@ -454,8 +596,12 @@ fn train_inputs(man: &Manifest, seed: u64) -> Vec<xla::Literal> {
         let t = p.init_mitchell.materialize(&p.shape, &mut rng);
         inputs.push(tensor_to_literal(&t).unwrap());
     }
-    for p in &man.params {
-        let t = Tensor::from_vec(&p.shape, vec![0.0; p.numel()]);
+    for i in 0..man.params.len() {
+        // first-moment state is per-optimizer shaped (Adafactor carries
+        // none), exactly like the engine's init
+        let ms = man.m_shape(i).to_vec();
+        let n: usize = ms.iter().product();
+        let t = Tensor::from_vec(&ms, vec![0.0; n]);
         inputs.push(tensor_to_literal(&t).unwrap());
     }
     for vs in man.v_shapes.as_ref().unwrap() {
@@ -503,7 +649,7 @@ fn train_step_batches_are_bit_identical_for_every_model_and_ruleset() {
     let _g = ModeGuard;
     let backend = backend_for(&BackendSpec::native()).unwrap();
     for model in native::MODELS {
-        for ruleset in native::RULESETS {
+        for ruleset in native::RULESETS.iter().chain(native::OPTIMIZERS) {
             let name = format!("{model}.train.{ruleset}");
             let art = backend
                 .load_artifact(std::path::Path::new("artifacts"), &name)
