@@ -10,8 +10,10 @@
 use slimadam::benchkit::{check_native_regression, write_native_summary, Bencher};
 use slimadam::coordinator::{make_data, DataSpec};
 use slimadam::json::Value;
-use slimadam::optim::adamk::AdamK;
+use slimadam::optim::adamk::{effective_k, AdamK};
 use slimadam::optim::{clip_global_norm, KMode, Optimizer};
+use slimadam::rules::adaptive::{AdaptivePolicy, Controller};
+use slimadam::snr::snr_of_view;
 use slimadam::runtime::backend::native::KernelMode;
 use slimadam::runtime::backend::{backend_for, native, Backend, BackendSpec};
 use slimadam::runtime::engine::{GradEngine, TrainEngine};
@@ -71,6 +73,7 @@ fn main() {
         // bake-off optimizer kernels (Lion, SGDM, SM3, Adafactor,
         // rank-4 factored V) — one `fused_step/<token>` row each
         let mut fused_adam_report = None;
+        let mut fused_slim_report = None;
         for &ruleset in native::RULESETS.iter().chain(native::OPTIMIZERS) {
             let mut fused =
                 TrainEngine::new("artifacts", model, ruleset, backend.as_ref(), "mitchell", 5)
@@ -86,8 +89,63 @@ fn main() {
             );
             if ruleset == "adam" {
                 fused_adam_report = Some(report);
+            } else if ruleset == "slimadam" {
+                fused_slim_report = Some(report);
             }
         }
+
+        // Self-tuning controller overhead (DESIGN.md §18): the fused
+        // slimadam step with the SNR controller evaluating every step —
+        // worst-case telemetry cadence, never-fire thresholds, so no
+        // migrations run and the row isolates the pure eval cost
+        // (first-moment read + SNR of m² per ruled tensor).
+        let mut fused_adaptive =
+            TrainEngine::new("artifacts", model, "slimadam", backend.as_ref(), "mitchell", 5)
+                .expect("native fused engine");
+        let aman = fused_adaptive.manifest().clone();
+        let targets = aman.k_modes.clone().expect("slimadam artifact bakes k_modes");
+        let mut policy = AdaptivePolicy::never_fire();
+        policy.every = 1;
+        let mut ctl = Controller::slim_start(
+            policy,
+            aman.params.iter().map(|p| p.name.clone()).collect(),
+            targets.clone(),
+        );
+        let mut at = 0usize;
+        println!("== {model}: fused train_step + adaptive SNR eval ==");
+        let adaptive_report = b.bench_with_units(
+            &format!("native/{model}/fused_step_adaptive"),
+            units,
+            unit_label,
+            || {
+                at += 1;
+                fused_adaptive.step(&batch, 1e-4).unwrap();
+                let ms = fused_adaptive.first_moments().unwrap();
+                let snrs: Vec<f64> = ms
+                    .iter()
+                    .enumerate()
+                    .map(|(i, m)| {
+                        if ctl.is_inert(i) {
+                            return f64::NAN;
+                        }
+                        let info = &aman.params[i];
+                        let m2 = Tensor::from_vec(
+                            &info.shape,
+                            m.data.iter().map(|&x| x * x).collect(),
+                        );
+                        let view = m2.matrix_view(info.fan_out_axis);
+                        snr_of_view(
+                            view.rows,
+                            view.cols,
+                            &view.data,
+                            effective_k(info, targets[i]),
+                        )
+                    })
+                    .collect();
+                let fired = ctl.observe(at, &snrs);
+                assert!(fired.is_empty(), "never-fire policy must not migrate");
+            },
+        );
 
         // Flight-recorder overhead (DESIGN.md §15): the identical fused
         // step with span tracing live. The enabled path adds clock reads
@@ -220,6 +278,17 @@ fn main() {
                     - 1.0,
             )
             .set("fused_steps_per_s_f32", step_s(f32_report.median_ns))
+            .set("adaptive_steps_per_s", step_s(adaptive_report.median_ns))
+            .set(
+                "adaptive_eval_overhead",
+                adaptive_report.median_ns
+                    / fused_slim_report
+                        .as_ref()
+                        .map(|r| r.median_ns)
+                        .unwrap_or(f64::MAX)
+                        .max(1e-12)
+                    - 1.0,
+            )
             .set(
                 "fused_simd_speedup",
                 scalar_report.median_ns

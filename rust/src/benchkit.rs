@@ -181,6 +181,7 @@ pub const REGRESSION_METRICS: &[&str] = &[
     "grad_units_per_s",
     "split_steps_per_s",
     "fused_steps_per_s",
+    "adaptive_steps_per_s",
     "fused_jobs_per_s_batch4",
     "serve_jobs_per_s_depth1",
     "serve_jobs_per_s_depth8",

@@ -53,6 +53,14 @@ pub fn group_key(cfg: &TrainConfig) -> String {
         // probed configs never batch (run_config owns SNR probing)
         key.push_str("|probe");
     }
+    if let Some(p) = &cfg.adaptive {
+        // adaptive configs never batch either (mid-run V migrations break
+        // the shared-shape contract of lane stacking); the policy still
+        // lands in the key so a mixed group is rejected loudly, not
+        // silently merged
+        key.push_str("|adaptive:");
+        key.push_str(&p.key());
+    }
     key
 }
 
@@ -89,7 +97,7 @@ pub fn plan(configs: &[TrainConfig], indices: &[usize], max_batch: usize) -> Vec
     let mut memo: HashMap<String, u64> = HashMap::new();
     for &i in indices {
         let cfg = &configs[i];
-        if max == 1 || cfg.probe.is_some() {
+        if max == 1 || cfg.probe.is_some() || cfg.adaptive.is_some() {
             groups.push(vec![i]);
             continue;
         }
@@ -137,6 +145,11 @@ pub fn run_group(configs: &[TrainConfig], idxs: &[usize]) -> Result<Vec<RunSumma
         first.probe.is_none(),
         "batched groups cannot record SNR probes (the planner routes \
          probed configs through run_config)"
+    );
+    anyhow::ensure!(
+        first.adaptive.is_none(),
+        "batched groups cannot run adaptive configs (the planner routes \
+         them through run_config as singletons)"
     );
     let result = match &first.engine {
         EngineKind::Split => run_split_group(configs, idxs),
@@ -226,6 +239,7 @@ fn run_split_group(configs: &[TrainConfig], idxs: &[usize]) -> Result<Vec<RunSum
             steps_per_s,
             stored_fingerprint: None,
             metrics: super::obs_metrics(),
+            adaptive: None,
         });
     }
     Ok(out)
@@ -271,6 +285,7 @@ fn run_fused_group(
             steps_per_s,
             stored_fingerprint: None,
             metrics: super::obs_metrics(),
+            adaptive: None,
         });
     }
     Ok(out)

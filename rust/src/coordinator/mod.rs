@@ -40,12 +40,13 @@ use crate::data::markov::MarkovLm;
 use crate::data::DataSource;
 use crate::optim::memory::MemoryReport;
 use crate::optim::{presets, Hypers};
+use crate::rules::adaptive::{AdaptivePolicy, AdaptiveReport};
 use crate::rules::RuleSet;
-use crate::runtime::backend::BackendSpec;
+use crate::runtime::backend::{BackendKind, BackendSpec};
 use crate::runtime::engine::TrainEngine;
 use crate::snr::{ProbeSchedule, SnrSummary};
 use crate::tensor::Tensor;
-use crate::train::{train_fused, train_split, RunResult, Schedule};
+use crate::train::{train_fused, train_fused_adaptive, train_split, RunResult, Schedule};
 
 /// Which execution engine to use.
 #[derive(Debug, Clone, PartialEq)]
@@ -133,6 +134,11 @@ pub struct TrainConfig {
     pub accum: usize,
     /// Warm-start parameters (fine-tuning): loaded before training.
     pub warm_start: Option<Arc<Vec<Tensor>>>,
+    /// Self-tuning rule switching (DESIGN.md §18). Only valid with a
+    /// fused engine on the native backend; part of the run's identity
+    /// (`runstore::config_key` appends the policy's bit-exact key) and
+    /// forces the batch planner to a singleton group.
+    pub adaptive: Option<AdaptivePolicy>,
 }
 
 impl TrainConfig {
@@ -155,6 +161,7 @@ impl TrainConfig {
             eval_batches: 8,
             accum: 1,
             warm_start: None,
+            adaptive: None,
         }
     }
 
@@ -208,14 +215,18 @@ impl TrainConfig {
 
     pub fn label(&self) -> String {
         format!(
-            "{}/{}@lr{:.0e}{}",
+            "{}/{}@lr{:.0e}{}{}",
             self.model,
             match &self.engine {
                 EngineKind::Split => self.optimizer.clone(),
                 EngineKind::Fused(r) => format!("fused:{r}"),
             },
             self.lr,
-            if self.init == "default" { "/definit" } else { "" }
+            if self.init == "default" { "/definit" } else { "" },
+            match &self.adaptive {
+                Some(p) => format!("+ad[{}]", p.spec()),
+                None => String::new(),
+            }
         )
     }
 }
@@ -241,6 +252,11 @@ pub struct RunSummary {
     /// byte-identical to pre-observability output; never part of the
     /// fingerprint.
     pub metrics: Option<crate::json::Value>,
+    /// Adaptive-controller report (DESIGN.md §18): the decision log,
+    /// memory timeline and final compression state. `Some` only for
+    /// adaptive runs; streamed into the run-store row (decisions replay
+    /// deterministically on resume) but never part of the fingerprint.
+    pub adaptive: Option<AdaptiveReport>,
 }
 
 /// Registry snapshot for a completing run — `Some` only when the flight
@@ -289,6 +305,9 @@ impl RunSummary {
         }
         if let Some(m) = &self.metrics {
             v.set("metrics", m.clone());
+        }
+        if let Some(a) = &self.adaptive {
+            v.set("adaptive", a.to_json());
         }
         v
     }
@@ -483,6 +502,22 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
     if synthetic_runs_enabled() {
         return Ok(synthetic_run(cfg));
     }
+    if let Some(policy) = &cfg.adaptive {
+        policy.validate().map_err(|e| anyhow::anyhow!("{}: {e}", cfg.label()))?;
+        anyhow::ensure!(
+            matches!(cfg.engine, EngineKind::Fused(_)),
+            "{}: --adaptive needs a fused engine (the controller migrates \
+             fused V state in place)",
+            cfg.label()
+        );
+        anyhow::ensure!(
+            cfg.backend.kind == BackendKind::Native,
+            "{}: --adaptive is native-only (the native backend infers the \
+             effective K mode from stored V lengths; PJRT executables bake \
+             fixed shapes)",
+            cfg.label()
+        );
+    }
     let schedule = Schedule::new(cfg.lr, cfg.warmup, cfg.steps);
 
     match &cfg.engine {
@@ -533,6 +568,7 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
                 steps_per_s,
                 stored_fingerprint: None,
                 metrics: obs_metrics(),
+                adaptive: None,
             })
         }
         EngineKind::Fused(ruleset) => {
@@ -545,7 +581,23 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
             }
             let man = engine.manifest().clone();
             let mut data = make_data(&man, &cfg.data, cfg.seed)?;
-            let result = train_fused(&mut engine, data.as_mut(), &schedule, cfg.steps, cfg.probe)?;
+            let (result, adaptive) = match &cfg.adaptive {
+                Some(policy) => {
+                    let (r, rep) = train_fused_adaptive(
+                        &mut engine,
+                        data.as_mut(),
+                        &schedule,
+                        cfg.steps,
+                        cfg.probe,
+                        *policy,
+                    )?;
+                    (r, Some(rep))
+                }
+                None => (
+                    train_fused(&mut engine, data.as_mut(), &schedule, cfg.steps, cfg.probe)?,
+                    None,
+                ),
+            };
             let snr = if cfg.probe.is_some() {
                 Some(result.probe.summary(&man.params))
             } else {
@@ -563,6 +615,7 @@ pub fn run_config(cfg: &TrainConfig) -> Result<RunSummary> {
                 steps_per_s,
                 stored_fingerprint: None,
                 metrics: obs_metrics(),
+                adaptive,
             })
         }
     }
@@ -640,6 +693,7 @@ fn synthetic_run(cfg: &TrainConfig) -> RunSummary {
         steps_per_s: 0.0,
         stored_fingerprint: None,
         metrics: None,
+        adaptive: None,
     }
 }
 

@@ -1,0 +1,129 @@
+//! `exp fig_adaptive` — self-tuning SlimAdam vs the static endpoints
+//! (DESIGN.md §18; ROADMAP "Next directions" §4).
+//!
+//! Trains the same model three ways at one learning rate: fused full-V
+//! Adam, fused static SlimAdam, and the adaptive controller switching
+//! per-tensor between the two mid-run. Produces the memory-over-time
+//! trace (second-moment elements after every fired controller eval)
+//! against each run's final loss: the adaptive line should start at the
+//! SlimAdam floor, possibly excursion toward Adam where SNR sags, and
+//! land within noise of static Adam's loss while holding most of the
+//! compression.
+//!
+//! Native-only (the controller migrates fused V state in place, which
+//! PJRT's fixed-shape executables cannot express).
+//!
+//! Outputs under `results/fig_adaptive/`:
+//! * `rows.csv` — one row per run: final loss, V elements, saved fraction
+//! * `timeline.csv` — adaptive memory-over-time (step, v_elems, saved)
+//! * `decisions.jsonl` — the controller's full decision log
+//! * `summary.md` — the comparison table for EXPERIMENTS.md
+
+use anyhow::{ensure, Result};
+
+use crate::cli::Args;
+use crate::coordinator::{run_config, EngineKind, TrainConfig};
+use crate::metrics::{results_dir, CsvWriter, JsonlWriter};
+use crate::rules::adaptive::AdaptivePolicy;
+use crate::runtime::backend::{BackendKind, BackendSpec};
+
+pub fn run(args: &Args) -> Result<()> {
+    let backend = BackendSpec::parse(args.str_or("backend", "native"))?;
+    ensure!(
+        backend.kind == BackendKind::Native,
+        "fig_adaptive is native-only (adaptive V migration; DESIGN.md §18)"
+    );
+    let model = args.str_or("model", "gpt_micro").to_string();
+    let lr = args.f64_or("lr", 1e-3)?;
+    let steps = super::steps_or(args, 300);
+    let policy = AdaptivePolicy::parse(args.str_or("adaptive", ""))?;
+    let dir = results_dir("fig_adaptive")?;
+
+    let mk = |engine: &str, adaptive: Option<AdaptivePolicy>| {
+        let mut cfg = TrainConfig::auto(&model, "adam", lr, steps);
+        cfg.backend = backend;
+        cfg.engine = EngineKind::Fused(engine.to_string());
+        cfg.adaptive = adaptive;
+        cfg
+    };
+
+    println!(
+        "fig_adaptive: {model} @ lr {lr:.0e}, {steps} steps, policy {}",
+        policy.spec()
+    );
+    let adam = run_config(&mk("adam", None))?;
+    let slim = run_config(&mk("slimadam", None))?;
+    let adaptive = run_config(&mk("slimadam", Some(policy)))?;
+    let report = adaptive
+        .adaptive
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("adaptive run produced no report"))?;
+
+    let full = report.full_v_elems as f64;
+    let v_of = |s: &crate::coordinator::RunSummary| {
+        s.memory.as_ref().map(|m| m.v_elems).unwrap_or(0)
+    };
+
+    let mut rows = CsvWriter::create(
+        dir.join("rows.csv"),
+        &["run", "final_train_loss", "diverged", "v_elems", "saved_frac"],
+    )?;
+    let mut md = String::from("# fig_adaptive — self-tuning SlimAdam\n\n");
+    md.push_str(&format!(
+        "{model} @ lr {lr:.0e}, {steps} steps; policy `{}` \
+         ({} evals, {} switches)\n\n",
+        policy.spec(),
+        report.evals,
+        report.decisions.len()
+    ));
+    md.push_str("| run | final loss | V elems | saved |\n|---|---|---|---|\n");
+    for (name, s, v) in [
+        ("adam", &adam, v_of(&adam)),
+        ("slimadam", &slim, v_of(&slim)),
+        ("adaptive", &adaptive, report.final_v_elems),
+    ] {
+        let saved = 1.0 - v as f64 / full.max(1.0);
+        rows.row(&[
+            name.to_string(),
+            format!("{:.5}", s.result.final_train_loss),
+            s.result.diverged.to_string(),
+            v.to_string(),
+            format!("{saved:.4}"),
+        ])?;
+        md.push_str(&format!(
+            "| {name} | {} | {v} | {:.0}% |\n",
+            if s.result.diverged {
+                "div".to_string()
+            } else {
+                format!("{:.4}", s.result.final_train_loss)
+            },
+            100.0 * saved
+        ));
+    }
+    md.push_str(&format!(
+        "\nfinal compressed element fraction: {:.0}%\n",
+        100.0 * report.compressed_frac
+    ));
+
+    let mut tl = CsvWriter::create(
+        dir.join("timeline.csv"),
+        &["step", "v_elems", "saved_frac"],
+    )?;
+    for &(step, v) in &report.timeline {
+        tl.row(&[
+            step.to_string(),
+            v.to_string(),
+            format!("{:.4}", 1.0 - v as f64 / full.max(1.0)),
+        ])?;
+    }
+
+    let mut log = JsonlWriter::create(dir.join("decisions.jsonl"))?;
+    for d in &report.decisions {
+        log.write(&d.to_json())?;
+    }
+
+    super::save_summaries("fig_adaptive", &[&adam, &slim, &adaptive])?;
+    println!("{md}");
+    super::write_summary_md(&dir, &md)?;
+    Ok(())
+}

@@ -23,6 +23,7 @@ pub mod fig11_stability;
 pub mod fig12_baseline_ablations;
 pub mod fig27_ft_loss;
 pub mod fig30_mean_rules;
+pub mod fig_adaptive;
 pub mod tables;
 
 use anyhow::{bail, Result};
@@ -53,6 +54,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "fig12" => fig12_baseline_ablations::run(args),
         "fig27" | "fig28" => fig27_ft_loss::run(args),
         "fig30" => fig30_mean_rules::run(args),
+        "fig_adaptive" | "adaptive" => fig_adaptive::run(args),
         "table1" => tables::table1(args),
         "table2" => tables::table2(args),
         "table3" => tables::table3(args),
@@ -86,8 +88,8 @@ pub fn run_all(args: &Args) -> Result<()> {
 
 pub const IDS: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
-    "fig10", "fig11", "fig12", "fig27", "fig30", "table1", "table2",
-    "table3", "appc1", "appc3", "all",
+    "fig10", "fig11", "fig12", "fig27", "fig30", "fig_adaptive", "table1",
+    "table2", "table3", "appc1", "appc3", "all",
 ];
 
 // ---------------------------------------------------------------------------

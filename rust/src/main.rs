@@ -58,6 +58,9 @@ const FLAGS: &[&str] = &[
     "trace",
     "chrome",
     "watch",
+    // bare `--adaptive` selects the default policy; `--adaptive=e:x:p[:n]`
+    // (the `=` form routes around flag parsing) overrides it
+    "adaptive",
 ];
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
@@ -242,6 +245,14 @@ fn base_config(args: &Args) -> Result<TrainConfig> {
     if let Some(path) = args.get("rules") {
         cfg.ruleset = Some(RuleSet::load(path)?);
     }
+    if args.flag("adaptive") || args.get("adaptive").is_some() {
+        cfg.adaptive = Some(slimadam::rules::adaptive::AdaptivePolicy::parse(
+            args.str_or("adaptive", ""),
+        )?);
+        if !args.flag("fused") {
+            bail!("--adaptive needs --fused (the controller migrates fused V state; try --fused --ruleset slimadam)");
+        }
+    }
     Ok(cfg)
 }
 
@@ -260,6 +271,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 OptSpec { name: "rules", help: "SlimAdam rules JSON path", default: None, is_flag: false },
                 OptSpec { name: "fused", help: "use the fused train_step artifact", default: None, is_flag: true },
                 OptSpec { name: "ruleset", help: "fused artifact ruleset", default: Some("adam"), is_flag: false },
+                OptSpec { name: "adaptive", help: "online SNR-driven rule switching (native fused only): bare flag for defaults, or --adaptive=enter:exit:patience[:every]", default: Some("1:0.25:3:25"), is_flag: true },
                 OptSpec { name: "corpus", help: "train on the repo-source corpus", default: None, is_flag: true },
                 OptSpec { name: "default-init", help: "PyTorch-default init instead of Mitchell", default: None, is_flag: true },
                 OptSpec { name: "trace", help: "record flight-recorder spans to results/trace/", default: None, is_flag: true },
@@ -304,6 +316,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 OptSpec { name: "resume", help: "run store dir: skip jobs already completed there (streams new rows into it unless --stream overrides)", default: None, is_flag: false },
                 OptSpec { name: "csv", help: "write the finished sweep table to this CSV path", default: None, is_flag: false },
                 OptSpec { name: "fused", help: "fused train_step engine: each optimizer token runs its own <model>.train.<token> artifact", default: None, is_flag: true },
+                OptSpec { name: "adaptive", help: "online SNR-driven rule switching per job (native fused only): bare flag or --adaptive=enter:exit:patience[:every]", default: Some("1:0.25:3:25"), is_flag: true },
                 OptSpec { name: "seed-jobs", help: "derive an independent seed per grid point (default: paired)", default: None, is_flag: true },
                 OptSpec { name: "quiet", help: "suppress per-job progress lines", default: None, is_flag: true },
                 OptSpec { name: "synthetic", help: "deterministic artifact-free synthetic runs (testing; same as SLIMADAM_SYNTH_RUNS=1)", default: None, is_flag: true },
@@ -434,6 +447,11 @@ fn job_spec(args: &Args) -> Result<slimadam::serve::JobSpec> {
             None
         },
         seed_jobs: args.flag("seed-jobs"),
+        adaptive: if args.flag("adaptive") || args.get("adaptive").is_some() {
+            Some(args.str_or("adaptive", "").to_string())
+        } else {
+            None
+        },
     };
     spec.validate()?;
     Ok(spec)
@@ -460,6 +478,7 @@ fn cmd_client(args: &Args) -> Result<()> {
                 OptSpec { name: "accum", help: "submit: gradient accumulation steps", default: Some("1"), is_flag: false },
                 OptSpec { name: "fused", help: "submit: use the fused train_step artifact", default: None, is_flag: true },
                 OptSpec { name: "ruleset", help: "submit: fused artifact ruleset", default: Some("adam"), is_flag: false },
+                OptSpec { name: "adaptive", help: "submit: online SNR-driven rule switching (native fused only)", default: None, is_flag: true },
                 OptSpec { name: "seed-jobs", help: "submit: derive an independent seed per grid point", default: None, is_flag: true },
             ])
         );

@@ -51,6 +51,15 @@ pub enum SpanKind {
     /// One serve-daemon dispatch wave (args\[0\] = jobs taken, args\[1\] =
     /// configs expanded, args\[2\] = adaptive batch cap).
     ServeWave = 12,
+    /// One adaptive-controller eval (DESIGN.md §18; label = model;
+    /// args\[0\] = step, args\[1\] = tensors in reduced mode, args\[2\] =
+    /// ruled tensors, args\[3\] = f64 bits of the compressed element
+    /// fraction).
+    AdaptiveEval = 13,
+    /// One adaptive mode switch (label = param name; args\[0\] = step,
+    /// args\[1\] = direction, 0 = compress / 1 = decompress, args\[2\] =
+    /// f64 bits of the triggering SNR).
+    AdaptiveSwitch = 14,
 }
 
 impl SpanKind {
@@ -69,6 +78,8 @@ impl SpanKind {
             SpanKind::Snr => "snr",
             SpanKind::SnrSummary => "snr_summary",
             SpanKind::ServeWave => "serve_wave",
+            SpanKind::AdaptiveEval => "adaptive_eval",
+            SpanKind::AdaptiveSwitch => "adaptive_switch",
         }
     }
 
@@ -87,6 +98,8 @@ impl SpanKind {
             "snr" => SpanKind::Snr,
             "snr_summary" => SpanKind::SnrSummary,
             "serve_wave" => SpanKind::ServeWave,
+            "adaptive_eval" => SpanKind::AdaptiveEval,
+            "adaptive_switch" => SpanKind::AdaptiveSwitch,
             _ => return None,
         })
     }
@@ -109,6 +122,10 @@ impl SpanKind {
                 ["step", "compressible", "total", "f:fraction"]
             }
             SpanKind::ServeWave => ["jobs", "configs", "batch_cap", ""],
+            SpanKind::AdaptiveEval => {
+                ["step", "compressed", "ruled", "f:fraction"]
+            }
+            SpanKind::AdaptiveSwitch => ["step", "direction", "f:snr", ""],
         }
     }
 }
@@ -174,6 +191,8 @@ mod tests {
             SpanKind::Snr,
             SpanKind::SnrSummary,
             SpanKind::ServeWave,
+            SpanKind::AdaptiveEval,
+            SpanKind::AdaptiveSwitch,
         ] {
             assert_eq!(SpanKind::parse(k.as_str()), Some(k));
         }

@@ -69,6 +69,62 @@ pub fn v_len(info: &ParamInfo, k: KMode) -> usize {
     effective_k(info, k).v_elems(r, c)
 }
 
+/// Group id of raw element `idx` under mode `k` (the shared O(1) mapping
+/// the optimizer, the native kernels, and the migration helpers agree on).
+#[inline(always)]
+fn group_of(geom: &Geom, k: KMode, idx: usize) -> usize {
+    match k {
+        KMode::None => idx,
+        KMode::FanIn => geom.row(idx),
+        KMode::FanOut => geom.col(idx),
+        KMode::Both => 0,
+        KMode::Blocks(n) => geom.row(idx) * n / geom.fo,
+    }
+}
+
+/// Collapse a full-shape second moment to the reduced storage of mode `k`
+/// by the paper's rule: each stored value is the *mean* of the full-V
+/// elements in its sharing group (Eq. 2's E_K applied to V itself). This
+/// is the compress half of an adaptive mode switch (DESIGN.md §18); it is
+/// exact when the full V is already group-constant (e.g. right after
+/// [`expand_v`]) up to the usual float-summation rounding.
+pub fn collapse_v(info: &ParamInfo, k: KMode, full: &[f32]) -> Vec<f32> {
+    let k = effective_k(info, k);
+    if k == KMode::None {
+        return full.to_vec();
+    }
+    let geom = Geom::new(info);
+    let len = v_len(info, k);
+    let mut sums = vec![0.0f64; len];
+    let mut counts = vec![0u32; len];
+    for (j, &vj) in full.iter().enumerate() {
+        let g = group_of(&geom, k, j);
+        sums[g] += vj as f64;
+        counts[g] += 1;
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(&s, &n)| (s / n.max(1) as f64) as f32)
+        .collect()
+}
+
+/// Expand a reduced second moment back to the full parameter shape by
+/// broadcast: every element gets its group's stored value. The decompress
+/// half of an adaptive mode switch; `collapse_v(expand_v(v)) == v` up to
+/// summation rounding (locked by tests below and `kernel_equivalence.rs`).
+pub fn expand_v(info: &ParamInfo, k: KMode, reduced: &[f32]) -> Vec<f32> {
+    let k = effective_k(info, k);
+    if k == KMode::None {
+        return reduced.to_vec();
+    }
+    let geom = Geom::new(info);
+    let numel: usize = info.shape.iter().product();
+    debug_assert_eq!(reduced.len(), v_len(info, k));
+    (0..numel)
+        .map(|j| reduced[group_of(&geom, k, j)])
+        .collect()
+}
+
 pub struct AdamK {
     label: String,
     pub hypers: Hypers,
@@ -129,13 +185,7 @@ impl AdamK {
     /// Group id of raw element `idx` under mode `k`.
     #[inline(always)]
     fn group(geom: &Geom, k: KMode, idx: usize) -> usize {
-        match k {
-            KMode::None => idx,
-            KMode::FanIn => geom.row(idx),
-            KMode::FanOut => geom.col(idx),
-            KMode::Both => 0,
-            KMode::Blocks(n) => geom.row(idx) * n / geom.fo,
-        }
+        group_of(geom, k, idx)
     }
 
     fn group_size(geom: &Geom, k: KMode) -> f32 {
@@ -511,6 +561,82 @@ mod tests {
         for &x in &v.data {
             assert!((x - 0.05).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn expand_then_collapse_is_identity() {
+        // expanded V is group-constant, so collapsing it back is exact up
+        // to summation rounding — including degenerate 1×N / N×1 shapes
+        let mut rng = crate::rng::Rng::new(3);
+        for shape in [&[6usize, 8][..], &[1, 8], &[8, 1], &[1, 1]] {
+            let meta = info("w", shape, 0);
+            for k in [KMode::FanIn, KMode::FanOut, KMode::Both, KMode::Blocks(2)] {
+                if let KMode::Blocks(n) = k {
+                    // Blocks stores `n` slots regardless of rows; with
+                    // fewer rows than blocks some slots are unreachable
+                    // and round-tripping them is meaningless
+                    if shape[0] < n {
+                        continue;
+                    }
+                }
+                let reduced: Vec<f32> =
+                    (0..v_len(&meta, k)).map(|_| rng.normal().abs() as f32).collect();
+                let full = expand_v(&meta, k, &reduced);
+                assert_eq!(full.len(), shape.iter().product::<usize>());
+                let back = collapse_v(&meta, k, &full);
+                assert_eq!(back.len(), reduced.len(), "shape {shape:?} K={k:?}");
+                for (a, b) in back.iter().zip(&reduced) {
+                    assert!(
+                        (a - b).abs() <= 1e-6 * (1.0 + b.abs()),
+                        "shape {shape:?} K={k:?}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collapse_matches_group_means() {
+        // 2×3 fan_in: stored value per row = mean of the row
+        let meta = info("w", &[2, 3], 0);
+        let full = vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let red = collapse_v(&meta, KMode::FanIn, &full);
+        assert_eq!(red.len(), 2);
+        assert!((red[0] - 2.0).abs() < 1e-6);
+        assert!((red[1] - 20.0).abs() < 1e-6);
+        // fan_out: per column = mean over rows
+        let red = collapse_v(&meta, KMode::FanOut, &full);
+        assert_eq!(red.len(), 3);
+        assert!((red[0] - 5.5).abs() < 1e-6);
+        // both: global mean
+        let red = collapse_v(&meta, KMode::Both, &full);
+        assert_eq!(red, vec![11.0]);
+        // None: identity
+        assert_eq!(collapse_v(&meta, KMode::None, &full), full);
+        assert_eq!(expand_v(&meta, KMode::None, &full), full);
+    }
+
+    #[test]
+    fn migration_respects_conv_fan_out_axis() {
+        // HWIO (1,1,2,3), fan_out_axis=3: fan_in groups one V per output
+        // channel o, elements laid out [i0o0 i0o1 i0o2 i1o0 i1o1 i1o2]
+        let meta = info("c", &[1, 1, 2, 3], 3);
+        let full = vec![1.0, 2.0, 3.0, 5.0, 6.0, 7.0];
+        let red = collapse_v(&meta, KMode::FanIn, &full);
+        assert_eq!(red.len(), 3);
+        assert!((red[0] - 3.0).abs() < 1e-6); // mean(1, 5)
+        assert!((red[1] - 4.0).abs() < 1e-6); // mean(2, 6)
+        assert!((red[2] - 5.0).abs() < 1e-6); // mean(3, 7)
+        let back = expand_v(&meta, KMode::FanIn, &red);
+        assert_eq!(back, vec![3.0, 4.0, 5.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn vector_migration_degenerates_to_both() {
+        let meta = info("ln", &[8], 0);
+        let red = collapse_v(&meta, KMode::FanOut, &[2.0; 8]);
+        assert_eq!(red, vec![2.0]); // effective K = Both
+        assert_eq!(expand_v(&meta, KMode::FanOut, &red), vec![2.0; 8]);
     }
 
     #[test]

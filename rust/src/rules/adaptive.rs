@@ -1,0 +1,674 @@
+//! Self-tuning SlimAdam: the online SNR-driven rule-switching controller
+//! (DESIGN.md §18).
+//!
+//! The paper derives *static* rules from an SNR probe run; ROADMAP "Next
+//! directions" §4 asks for the online version — monitor per-tensor SNR
+//! during training and switch each tensor between full-V Adam and
+//! reduced-V SlimAdam mid-run. The controller here is a per-tensor
+//! hysteresis state machine:
+//!
+//! ```text
+//!            snr >= enter for `patience` consecutive evals
+//!      Full ──────────────────────────────────────────────▶ Reduced
+//!           ◀──────────────────────────────────────────────
+//!            snr < exit for `patience` consecutive evals
+//! ```
+//!
+//! with `exit <= enter`, so readings inside the band `[exit, enter)`
+//! reset the streak and can never cause a transition — modes cannot flap
+//! however noisy the signal is inside the band. Tensors whose target rule
+//! is `K = ∅` (vectors, unruled params) are *inert*: they stay full-V and
+//! the controller never logs a decision for them.
+//!
+//! The controller is a pure function of the observation trace: feeding the
+//! same `(step, snr[])` sequence to a fresh controller reproduces the
+//! identical decision log (the replay-determinism contract the resume and
+//! serve paths rely on; locked by `rust/tests/adaptive_rules.rs`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::optim::KMode;
+
+/// Default enter threshold: the paper's compression cutoff (signal must
+/// dominate noise before we drop precision on it).
+pub const DEFAULT_ENTER: f64 = 1.0;
+/// Default exit threshold: well below enter so ordinary SNR jitter around
+/// the cutoff cannot bounce a tensor back out of reduced mode.
+pub const DEFAULT_EXIT: f64 = 0.25;
+/// Default consecutive-eval patience before either transition.
+pub const DEFAULT_PATIENCE: usize = 3;
+/// Default controller eval cadence in optimizer steps.
+pub const DEFAULT_EVERY: usize = 25;
+
+/// Controller thresholds + cadence. Parsed from `--adaptive
+/// [enter:exit:patience[:every]]`; all four fields are part of run
+/// identity (see [`AdaptivePolicy::key`] and `runstore::config_key`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptivePolicy {
+    /// compress when windowed SNR stays `>= enter` for `patience` evals
+    pub enter: f64,
+    /// decompress when it falls `< exit` (the lower hysteresis edge)
+    pub exit: f64,
+    /// consecutive evals required before either transition fires
+    pub patience: usize,
+    /// eval cadence in optimizer steps
+    pub every: usize,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        AdaptivePolicy {
+            enter: DEFAULT_ENTER,
+            exit: DEFAULT_EXIT,
+            patience: DEFAULT_PATIENCE,
+            every: DEFAULT_EVERY,
+        }
+    }
+}
+
+impl AdaptivePolicy {
+    /// Parse `enter:exit:patience[:every]`. The empty string (a bare
+    /// `--adaptive` flag) yields the defaults.
+    pub fn parse(spec: &str) -> Result<AdaptivePolicy> {
+        if spec.is_empty() {
+            return Ok(AdaptivePolicy::default());
+        }
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() < 3 || parts.len() > 4 {
+            bail!(
+                "adaptive spec {spec:?}: want enter:exit:patience[:every], \
+                 e.g. 1.0:0.25:3 or 1.0:0.25:3:25"
+            );
+        }
+        let p = AdaptivePolicy {
+            enter: parts[0]
+                .parse()
+                .with_context(|| format!("adaptive enter threshold {:?}", parts[0]))?,
+            exit: parts[1]
+                .parse()
+                .with_context(|| format!("adaptive exit threshold {:?}", parts[1]))?,
+            patience: parts[2]
+                .parse()
+                .with_context(|| format!("adaptive patience {:?}", parts[2]))?,
+            every: match parts.get(3) {
+                Some(s) => s
+                    .parse()
+                    .with_context(|| format!("adaptive eval cadence {:?}", s))?,
+                None => DEFAULT_EVERY,
+            },
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        // Infinities are legal — the never-fire differential policy pins
+        // `enter = +inf, exit = -inf` — but NaN would make every band
+        // comparison vacuously false, so reject it outright.
+        if self.enter.is_nan() || self.exit.is_nan() {
+            bail!("adaptive thresholds must not be NaN");
+        }
+        if self.exit > self.enter {
+            bail!(
+                "adaptive exit threshold {} must be <= enter threshold {} \
+                 (the hysteresis band would be inverted)",
+                self.exit,
+                self.enter
+            );
+        }
+        if self.patience == 0 {
+            bail!("adaptive patience must be >= 1");
+        }
+        if self.every == 0 {
+            bail!("adaptive eval cadence must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Never-fire policy for differential testing: thresholds pinned so no
+    /// finite SNR can ever cross either edge (`enter = +inf`, `exit = -inf`).
+    pub fn never_fire() -> AdaptivePolicy {
+        AdaptivePolicy {
+            enter: f64::INFINITY,
+            exit: f64::NEG_INFINITY,
+            patience: 1,
+            every: DEFAULT_EVERY,
+        }
+    }
+
+    /// Bit-exact identity segment for `runstore::config_key`: thresholds
+    /// as raw f64 bits so `0.25` and `0.250000001` never collide.
+    pub fn key(&self) -> String {
+        format!(
+            "{:x}:{:x}:{}:{}",
+            self.enter.to_bits(),
+            self.exit.to_bits(),
+            self.patience,
+            self.every
+        )
+    }
+
+    /// Inverse of [`AdaptivePolicy::key`] (used when deserializing run
+    /// rows; exact for every policy, including non-finite thresholds).
+    pub fn from_key(s: &str) -> Result<AdaptivePolicy> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 4 {
+            bail!("adaptive policy key {s:?}: want enterbits:exitbits:patience:every");
+        }
+        let bits = |t: &str| -> Result<f64> {
+            Ok(f64::from_bits(
+                u64::from_str_radix(t, 16).with_context(|| format!("policy key bits {t:?}"))?,
+            ))
+        };
+        Ok(AdaptivePolicy {
+            enter: bits(parts[0])?,
+            exit: bits(parts[1])?,
+            patience: parts[2].parse().context("policy key patience")?,
+            every: parts[3].parse().context("policy key cadence")?,
+        })
+    }
+
+    /// Human-readable spec (round-trips through [`AdaptivePolicy::parse`]
+    /// for finite thresholds); used in run labels.
+    pub fn spec(&self) -> String {
+        format!("{}:{}:{}:{}", self.enter, self.exit, self.patience, self.every)
+    }
+}
+
+/// Which way a tensor switched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// full-V Adam → reduced-V SlimAdam (collapse V by the mean rule)
+    Compress,
+    /// reduced-V SlimAdam → full-V Adam (expand V by broadcast)
+    Decompress,
+}
+
+impl Direction {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Direction::Compress => "compress",
+            Direction::Decompress => "decompress",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Direction> {
+        match s {
+            "compress" => Ok(Direction::Compress),
+            "decompress" => Ok(Direction::Decompress),
+            _ => bail!("unknown adaptive direction {s:?}"),
+        }
+    }
+}
+
+/// One logged mode switch. The full decision log is serialized into the
+/// run-store summary row (it IS part of the run's observable output), so
+/// resume restores it byte-identically without re-execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    /// optimizer step at which the eval fired
+    pub step: usize,
+    /// manifest parameter index
+    pub tensor: usize,
+    /// parameter name (redundant with `tensor`; kept for log readability)
+    pub name: String,
+    pub dir: Direction,
+    /// the SNR reading that completed the patience streak
+    pub snr: f64,
+}
+
+impl Decision {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("step", self.step)
+            .set("tensor", self.tensor)
+            .set("name", self.name.clone())
+            .set("dir", self.dir.as_str())
+            .set("snr", self.snr);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Decision> {
+        Ok(Decision {
+            step: v.get("step")?.as_f64()? as usize,
+            tensor: v.get("tensor")?.as_f64()? as usize,
+            name: v.get("name")?.as_str()?.to_string(),
+            dir: Direction::parse(v.get("dir")?.as_str()?)?,
+            snr: v.get("snr")?.as_f64()?,
+        })
+    }
+}
+
+/// Current storage mode of one tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// V at full parameter shape (exact AdamW)
+    Full,
+    /// V at the target rule's reduced shape
+    Reduced,
+}
+
+#[derive(Debug, Clone)]
+struct TensorState {
+    mode: Mode,
+    /// consecutive out-of-band evals toward the pending transition
+    streak: usize,
+}
+
+/// Per-tensor hysteresis controller. Construct once per run, call
+/// [`Controller::observe`] at every eval point, apply the returned
+/// switches to the engine.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    policy: AdaptivePolicy,
+    names: Vec<String>,
+    /// target reduced mode per tensor; `KMode::None` marks the tensor
+    /// inert (never compressed, never observed)
+    target: Vec<KMode>,
+    state: Vec<TensorState>,
+    log: Vec<Decision>,
+    evals: usize,
+}
+
+impl Controller {
+    /// `targets[i]` is tensor i's reduced mode under the static rule set
+    /// the run was launched with; `start[i]` its storage mode at step 0.
+    /// Adaptive runs start from the static SlimAdam artifact, so ruled
+    /// tensors begin `Reduced` — see [`Controller::slim_start`].
+    pub fn new(
+        policy: AdaptivePolicy,
+        names: Vec<String>,
+        target: Vec<KMode>,
+        start: Vec<Mode>,
+    ) -> Controller {
+        assert_eq!(names.len(), target.len());
+        assert_eq!(names.len(), start.len());
+        let state = target
+            .iter()
+            .zip(&start)
+            .map(|(&k, &mode)| TensorState {
+                mode: if k == KMode::None { Mode::Full } else { mode },
+                streak: 0,
+            })
+            .collect();
+        Controller {
+            policy,
+            names,
+            target,
+            state,
+            log: Vec::new(),
+            evals: 0,
+        }
+    }
+
+    /// The standard start state: every ruled tensor compressed (the run
+    /// boots from the static SlimAdam artifact), inert tensors full.
+    pub fn slim_start(
+        policy: AdaptivePolicy,
+        names: Vec<String>,
+        target: Vec<KMode>,
+    ) -> Controller {
+        let start = target
+            .iter()
+            .map(|&k| if k == KMode::None { Mode::Full } else { Mode::Reduced })
+            .collect();
+        Controller::new(policy, names, target, start)
+    }
+
+    pub fn policy(&self) -> &AdaptivePolicy {
+        &self.policy
+    }
+
+    /// Current storage mode of tensor `i`.
+    pub fn mode(&self, i: usize) -> Mode {
+        self.state[i].mode
+    }
+
+    /// Effective K of tensor `i` right now: the target rule while
+    /// `Reduced`, `K = ∅` while `Full`.
+    pub fn current_k(&self, i: usize) -> KMode {
+        match self.state[i].mode {
+            Mode::Reduced => self.target[i],
+            Mode::Full => KMode::None,
+        }
+    }
+
+    pub fn is_inert(&self, i: usize) -> bool {
+        self.target[i] == KMode::None
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.target.len()
+    }
+
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    pub fn log(&self) -> &[Decision] {
+        &self.log
+    }
+
+    /// Whether `step` (1-based optimizer step) is an eval point.
+    pub fn due(&self, step: usize) -> bool {
+        step % self.policy.every == 0
+    }
+
+    /// Feed one eval's per-tensor SNR readings; returns the switches that
+    /// fired, in tensor order. `snrs[i]` for inert tensors is ignored.
+    /// Non-finite readings (NaN) count as in-band: they reset the streak.
+    pub fn observe(&mut self, step: usize, snrs: &[f64]) -> Vec<Decision> {
+        assert_eq!(snrs.len(), self.state.len());
+        self.evals += 1;
+        let mut fired = Vec::new();
+        for i in 0..self.state.len() {
+            if self.is_inert(i) {
+                continue;
+            }
+            let snr = snrs[i];
+            let st = &mut self.state[i];
+            let out_of_band = match st.mode {
+                Mode::Reduced => snr < self.policy.exit,
+                Mode::Full => snr >= self.policy.enter,
+            };
+            if !out_of_band {
+                st.streak = 0;
+                continue;
+            }
+            st.streak += 1;
+            if st.streak < self.policy.patience {
+                continue;
+            }
+            st.streak = 0;
+            let dir = match st.mode {
+                Mode::Reduced => {
+                    st.mode = Mode::Full;
+                    Direction::Decompress
+                }
+                Mode::Full => {
+                    st.mode = Mode::Reduced;
+                    Direction::Compress
+                }
+            };
+            let d = Decision {
+                step,
+                tensor: i,
+                name: self.names[i].clone(),
+                dir,
+                snr,
+            };
+            self.log.push(d.clone());
+            fired.push(d);
+        }
+        fired
+    }
+
+    /// Count of ruled tensors currently in `Reduced` mode.
+    pub fn n_compressed(&self) -> usize {
+        (0..self.state.len())
+            .filter(|&i| !self.is_inert(i) && self.state[i].mode == Mode::Reduced)
+            .count()
+    }
+
+    /// Decision log as a JSON array (the run-store checkpoint form).
+    pub fn log_json(&self) -> Value {
+        Value::Arr(self.log.iter().map(|d| d.to_json()).collect())
+    }
+}
+
+/// Everything an adaptive run reports beyond its losses: the decision
+/// log, the second-moment-memory timeline, and the final compression
+/// state. Serialized into the run-store summary row (`"adaptive"` field)
+/// so `--resume` restores it without re-execution and `exp::fig_adaptive`
+/// can plot memory-over-time straight from stored rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveReport {
+    pub policy: AdaptivePolicy,
+    /// controller evals that actually ran (divergence can cut them short)
+    pub evals: usize,
+    pub decisions: Vec<Decision>,
+    /// `(step, stored V elements)` — step 0 start plus one point after
+    /// every eval at which at least one switch fired
+    pub timeline: Vec<(usize, usize)>,
+    /// stored V elements at the end of the run
+    pub final_v_elems: usize,
+    /// full-V Adam baseline (= total parameter elements)
+    pub full_v_elems: usize,
+    /// fraction of Adam's second-moment elements living in compressed
+    /// (reduced-V) tensors at the end of the run
+    pub compressed_frac: f64,
+}
+
+impl AdaptiveReport {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        let timeline: Vec<Value> = self
+            .timeline
+            .iter()
+            .map(|&(step, elems)| {
+                let mut p = Value::obj();
+                p.set("step", step).set("v_elems", elems);
+                p
+            })
+            .collect();
+        v.set("policy", self.policy.key())
+            .set("spec", self.policy.spec())
+            .set("evals", self.evals)
+            .set(
+                "decisions",
+                Value::Arr(self.decisions.iter().map(|d| d.to_json()).collect()),
+            )
+            .set("timeline", Value::Arr(timeline))
+            .set("final_v_elems", self.final_v_elems)
+            .set("full_v_elems", self.full_v_elems)
+            .set("compressed_frac", self.compressed_frac);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<AdaptiveReport> {
+        let decisions = v
+            .get("decisions")?
+            .as_arr()?
+            .iter()
+            .map(Decision::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let timeline = v
+            .get("timeline")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok((
+                    p.get("step")?.as_usize()?,
+                    p.get("v_elems")?.as_usize()?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AdaptiveReport {
+            policy: AdaptivePolicy::from_key(v.get("policy")?.as_str()?)?,
+            evals: v.get("evals")?.as_usize()?,
+            decisions,
+            timeline,
+            final_v_elems: v.get("final_v_elems")?.as_usize()?,
+            full_v_elems: v.get("full_v_elems")?.as_usize()?,
+            compressed_frac: v.get("compressed_frac")?.as_f64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(policy: AdaptivePolicy) -> Controller {
+        Controller::slim_start(
+            policy,
+            vec!["w".into(), "ln".into()],
+            vec![KMode::FanIn, KMode::None],
+        )
+    }
+
+    #[test]
+    fn parse_roundtrip_and_defaults() {
+        assert_eq!(AdaptivePolicy::parse("").unwrap(), AdaptivePolicy::default());
+        let p = AdaptivePolicy::parse("2.0:0.5:4:10").unwrap();
+        assert_eq!(p.enter, 2.0);
+        assert_eq!(p.exit, 0.5);
+        assert_eq!(p.patience, 4);
+        assert_eq!(p.every, 10);
+        let back = AdaptivePolicy::parse(&p.spec()).unwrap();
+        assert_eq!(back, p);
+        // three-field form defaults the cadence
+        assert_eq!(AdaptivePolicy::parse("1:0.1:2").unwrap().every, DEFAULT_EVERY);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(AdaptivePolicy::parse("1.0").is_err());
+        assert!(AdaptivePolicy::parse("0.1:1.0:3").is_err()); // exit > enter
+        assert!(AdaptivePolicy::parse("1.0:0.1:0").is_err()); // patience 0
+        assert!(AdaptivePolicy::parse("1.0:0.1:3:0").is_err()); // every 0
+        assert!(AdaptivePolicy::parse("nan:0.1:3").is_err());
+    }
+
+    #[test]
+    fn hysteresis_band_never_switches() {
+        let p = AdaptivePolicy {
+            enter: 1.0,
+            exit: 0.25,
+            patience: 1,
+            every: 1,
+        };
+        let mut c = ctl(p);
+        // readings inside [exit, enter) forever: no decision either way
+        for step in 1..=50 {
+            let fired = c.observe(step, &[0.5, 0.0]);
+            assert!(fired.is_empty());
+        }
+        assert_eq!(c.mode(0), Mode::Reduced);
+        assert!(c.log().is_empty());
+    }
+
+    #[test]
+    fn patience_gates_both_directions() {
+        let p = AdaptivePolicy {
+            enter: 1.0,
+            exit: 0.25,
+            patience: 3,
+            every: 1,
+        };
+        let mut c = ctl(p);
+        // two lows, an in-band reset, then three lows -> decompress on the
+        // third consecutive low only
+        assert!(c.observe(1, &[0.1, 0.0]).is_empty());
+        assert!(c.observe(2, &[0.1, 0.0]).is_empty());
+        assert!(c.observe(3, &[0.5, 0.0]).is_empty()); // reset
+        assert!(c.observe(4, &[0.1, 0.0]).is_empty());
+        assert!(c.observe(5, &[0.1, 0.0]).is_empty());
+        let fired = c.observe(6, &[0.1, 0.0]);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].dir, Direction::Decompress);
+        assert_eq!(c.mode(0), Mode::Full);
+        // now three highs -> compress again
+        assert!(c.observe(7, &[2.0, 0.0]).is_empty());
+        assert!(c.observe(8, &[2.0, 0.0]).is_empty());
+        let fired = c.observe(9, &[2.0, 0.0]);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].dir, Direction::Compress);
+        assert_eq!(c.mode(0), Mode::Reduced);
+        assert_eq!(c.log().len(), 2);
+    }
+
+    #[test]
+    fn inert_tensors_never_fire() {
+        let p = AdaptivePolicy {
+            enter: 1.0,
+            exit: 0.25,
+            patience: 1,
+            every: 1,
+        };
+        let mut c = ctl(p);
+        for step in 1..=10 {
+            // wild swings on the inert tensor's slot
+            let fired = c.observe(step, &[0.5, if step % 2 == 0 { 100.0 } else { -5.0 }]);
+            assert!(fired.is_empty());
+        }
+        assert_eq!(c.mode(1), Mode::Full);
+        assert_eq!(c.current_k(1), KMode::None);
+    }
+
+    #[test]
+    fn never_fire_policy_is_inert_everywhere() {
+        let mut c = ctl(AdaptivePolicy::never_fire());
+        for step in 1..=20 {
+            let fired = c.observe(step, &[f64::INFINITY, 0.0]);
+            assert!(fired.is_empty());
+            let fired = c.observe(step, &[-1e300, 0.0]);
+            assert!(fired.is_empty());
+        }
+        assert!(c.log().is_empty());
+        assert_eq!(c.n_compressed(), 1);
+    }
+
+    #[test]
+    fn nan_readings_reset_streaks() {
+        let p = AdaptivePolicy {
+            enter: 1.0,
+            exit: 0.25,
+            patience: 2,
+            every: 1,
+        };
+        let mut c = ctl(p);
+        assert!(c.observe(1, &[0.1, 0.0]).is_empty());
+        assert!(c.observe(2, &[f64::NAN, 0.0]).is_empty()); // reset
+        assert!(c.observe(3, &[0.1, 0.0]).is_empty());
+        assert_eq!(c.observe(4, &[0.1, 0.0]).len(), 1);
+    }
+
+    #[test]
+    fn decision_json_roundtrip() {
+        let d = Decision {
+            step: 75,
+            tensor: 2,
+            name: "h0.attn_q".into(),
+            dir: Direction::Compress,
+            snr: 1.75,
+        };
+        let back = Decision::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn key_is_bit_exact() {
+        let a = AdaptivePolicy::default();
+        let mut b = a;
+        b.exit = 0.25 + 1e-12;
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.key(), AdaptivePolicy::default().key());
+        // key round-trips exactly, including non-finite thresholds
+        let nf = AdaptivePolicy::never_fire();
+        assert_eq!(AdaptivePolicy::from_key(&nf.key()).unwrap(), nf);
+        assert_eq!(AdaptivePolicy::from_key(&a.key()).unwrap(), a);
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let report = AdaptiveReport {
+            policy: AdaptivePolicy::default(),
+            evals: 7,
+            decisions: vec![Decision {
+                step: 50,
+                tensor: 1,
+                name: "w".into(),
+                dir: Direction::Decompress,
+                snr: 0.125,
+            }],
+            timeline: vec![(0, 100), (50, 164)],
+            final_v_elems: 164,
+            full_v_elems: 200,
+            compressed_frac: 0.5,
+        };
+        let back = AdaptiveReport::from_json(&report.to_json()).unwrap();
+        assert_eq!(back, report);
+    }
+}

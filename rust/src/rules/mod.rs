@@ -14,6 +14,8 @@
 //! * [`RuleSet::table3_default`] — the paper's Table 3 recommendations,
 //!   usable without running an SNR probe.
 
+pub mod adaptive;
+
 use std::collections::BTreeMap;
 use std::path::Path;
 

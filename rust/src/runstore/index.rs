@@ -90,6 +90,7 @@ impl RunEntry {
             steps_per_s: 0.0,
             stored_fingerprint: Some(self.fingerprint),
             metrics: None,
+            adaptive: None,
         }
     }
 }

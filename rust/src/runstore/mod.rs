@@ -101,6 +101,14 @@ pub fn config_key(cfg: &TrainConfig) -> u64 {
     if let Some(spec) = crate::optim::presets::spec_key(token) {
         let _ = write!(s, "|opt:{spec}");
     }
+    // Adaptive rule switching changes the computation (DESIGN.md §18):
+    // the policy's bit-exact key joins the identity, appended only when
+    // set so non-adaptive keys keep their historical bytes. Telemetry
+    // cadence and tracing stay OUT of the key — observation never forks
+    // a run's identity, only decisions do.
+    if let Some(policy) = &cfg.adaptive {
+        let _ = write!(s, "|adaptive:{}", policy.key());
+    }
     stable_hash64(s.as_bytes())
 }
 
@@ -475,6 +483,30 @@ mod tests {
         let mut fb = mk("adam");
         fb.engine = EngineKind::Fused("lowrank_v8".into());
         assert_ne!(config_key(&fa), config_key(&fb));
+    }
+
+    /// Adaptive identity (DESIGN.md §18): the policy is part of the key —
+    /// adaptive rows can never be served for static configs or for a
+    /// different policy — but a `None` policy keeps the historical bytes.
+    #[test]
+    fn config_key_folds_adaptive_policy_in() {
+        use crate::rules::adaptive::AdaptivePolicy;
+        let mut base = TrainConfig::lm("gpt_nano", "adam", 1e-3, 100);
+        base.engine = EngineKind::Fused("slimadam".into());
+        let mut adaptive = base.clone();
+        adaptive.adaptive = Some(AdaptivePolicy::default());
+        assert_ne!(config_key(&base), config_key(&adaptive));
+        // every policy field is identity: thresholds bit-exactly, and
+        // patience/cadence because they change which evals can fire
+        let mut other = adaptive.clone();
+        other.adaptive.as_mut().unwrap().enter += 1e-12;
+        assert_ne!(config_key(&adaptive), config_key(&other));
+        let mut cadence = adaptive.clone();
+        cadence.adaptive.as_mut().unwrap().every = 7;
+        assert_ne!(config_key(&adaptive), config_key(&cadence));
+        // same policy spelled twice → same key
+        let again = adaptive.clone();
+        assert_eq!(config_key(&adaptive), config_key(&again));
     }
 
     #[test]

@@ -975,8 +975,19 @@ impl NativeExecutable {
         for i in 0..n {
             m_l.push(read(&inputs[n + i], man.m_shape(i).iter().product(), "m")?);
         }
+        // Second moments accept either the baked reduced length or the
+        // full parameter length (an adaptive decompression — DESIGN.md
+        // §18); the effective K per tensor follows from the stored length.
+        let mut eff_modes: Vec<KMode> = Vec::with_capacity(n);
+        let mut v_out_shapes: Vec<&[usize]> = Vec::with_capacity(n);
         for (i, vs) in v_shapes.iter().enumerate() {
-            v_l.push(read(&inputs[2 * n + i], vs.iter().product(), "v")?);
+            let vals = inputs[2 * n + i]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("reading v: {e}"))?;
+            let (k, shape) = effective_v_mode(man, k_modes, vs, i, vals.len())?;
+            eff_modes.push(k);
+            v_out_shapes.push(shape);
+            v_l.push(vals);
         }
         let batch = self.read_batch(&inputs[3 * n], &inputs[3 * n + 1])?;
         let step = crate::runtime::literal::scalar_value(&inputs[3 * n + 2])?;
@@ -1001,7 +1012,7 @@ impl NativeExecutable {
             .collect();
         let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, 1);
         fused_optim_update_l(
-            man, k_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &[t],
+            man, &eff_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &[t],
             &[lr], 1,
         )?;
 
@@ -1015,7 +1026,7 @@ impl NativeExecutable {
             out.push(tensor_to_literal(&Tensor::from_vec(man.m_shape(i), s))?);
         }
         for (i, s) in v_l.into_iter().enumerate() {
-            out.push(tensor_to_literal(&Tensor::from_vec(&v_shapes[i], s))?);
+            out.push(tensor_to_literal(&Tensor::from_vec(v_out_shapes[i], s))?);
         }
         Ok(out)
     }
@@ -1109,8 +1120,20 @@ impl NativeExecutable {
             let m_len = man.m_shape(i).iter().product();
             m_l.push(self.stack_slot(jobs, n + i, m_len, "m")?);
         }
+        // As in the sequential path, the V slot accepts the baked reduced
+        // length or the full parameter length; all lanes must agree (the
+        // batch planner keeps adaptive configs out of mixed groups, and
+        // `stack_slot` rejects any straggler lane).
+        let mut eff_modes: Vec<KMode> = Vec::with_capacity(n);
+        let mut v_out_shapes: Vec<&[usize]> = Vec::with_capacity(n);
         for (i, vs) in v_shapes.iter().enumerate() {
-            v_l.push(self.stack_slot(jobs, 2 * n + i, vs.iter().product(), "v")?);
+            let lane0 = jobs[0][2 * n + i]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("job 0 v: {e}"))?;
+            let (k, shape) = effective_v_mode(man, k_modes, vs, i, lane0.len())?;
+            eff_modes.push(k);
+            v_out_shapes.push(shape);
+            v_l.push(self.stack_slot(jobs, 2 * n + i, lane0.len(), "v")?);
         }
         let mut batches = Vec::with_capacity(lanes);
         let mut ts = Vec::with_capacity(lanes);
@@ -1135,7 +1158,7 @@ impl NativeExecutable {
             .collect();
         let norms = clip_global_norm_l(&mut grads_l, hypers.clip_norm, lanes);
         fused_optim_update_l(
-            man, k_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &ts, &lrs,
+            man, &eff_modes, &hypers, &mut w_l, &mut m_l, &mut v_l, &grads_l, &ts, &lrs,
             lanes,
         )?;
 
@@ -1161,7 +1184,7 @@ impl NativeExecutable {
             }
             for (i, s) in v_l.iter().enumerate() {
                 job_out.push(tensor_to_literal(&Tensor::from_vec(
-                    &v_shapes[i],
+                    v_out_shapes[i],
                     unstack(s, b),
                 ))?);
             }
@@ -2567,6 +2590,36 @@ pub fn clip_global_norm_ref_l(
     let norms: Vec<f64> = sq.iter().map(|s| s.sqrt()).collect();
     rescale_lanes(grads, &norms, max_norm, l);
     norms
+}
+
+/// Resolve tensor `i`'s effective K and output V shape from the stored
+/// second-moment length (DESIGN.md §18). The baked reduced length runs
+/// the baked mode; the full parameter length — produced by an adaptive
+/// decompression — runs exact AdamW (`K = ∅`). Only the AdamW family
+/// migrates: the bake-off kernels own their V layouts and accept exactly
+/// the baked length. When the two lengths coincide (e.g. fan_out on a
+/// 1×N view) the baked branch wins, which is exact anyway — every
+/// sharing group has one element, so the grouped update *is* AdamW.
+fn effective_v_mode<'a>(
+    man: &'a Manifest,
+    k_modes: &[KMode],
+    baked: &'a [usize],
+    i: usize,
+    got_len: usize,
+) -> Result<(KMode, &'a [usize])> {
+    let baked_len: usize = baked.iter().product();
+    if got_len == baked_len {
+        return Ok((k_modes[i], baked));
+    }
+    let full_len = man.params[i].numel();
+    if got_len == full_len && k_modes[i] != KMode::None && man.optimizer_name() == "adamw" {
+        return Ok((KMode::None, man.params[i].shape.as_slice()));
+    }
+    bail!(
+        "v for {:?} has {got_len} elements, want {baked_len} (baked K) or \
+         {full_len} (decompressed full V)",
+        man.params[i].name
+    )
 }
 
 /// One tensor's fused reduced-V AdamW update: the body of the pre-PR

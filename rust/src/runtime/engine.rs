@@ -465,6 +465,84 @@ impl TrainEngine {
             .map(literal_to_tensor)
             .collect()
     }
+
+    /// Snapshot current first moments to host tensors. M is always stored
+    /// at the full parameter shape, so unlike [`Self::second_moments`] the
+    /// result is mode-independent — which is exactly why the adaptive
+    /// controller reads its SNR signal from m² (DESIGN.md §18).
+    pub fn first_moments(&self) -> Result<Vec<Tensor>> {
+        let n = self.compiled.manifest.n_params();
+        self.state[n..2 * n].iter().map(literal_to_tensor).collect()
+    }
+
+    /// Stored second-moment element count per tensor — reflects adaptive
+    /// migrations, unlike the manifest's baked `v_shapes`.
+    pub fn v_elem_counts(&self) -> Result<Vec<usize>> {
+        let n = self.compiled.manifest.n_params();
+        self.state[2 * n..3 * n]
+            .iter()
+            .map(|lit| Ok(literal_to_tensor(lit)?.numel()))
+            .collect()
+    }
+
+    /// Migrate tensor `i`'s second moment between storage modes
+    /// (DESIGN.md §18): `from_k -> to_k` where one side is `K = ∅` (full)
+    /// and the other the tensor's reduced rule. Compression collapses the
+    /// full V by the paper's mean rule; decompression expands the reduced
+    /// V by broadcast. A no-op when the stored length already matches the
+    /// target. Only meaningful on the native AdamW fused engines — the
+    /// backend infers the per-tensor effective K from the stored length
+    /// on the next dispatch.
+    pub fn migrate_v(
+        &mut self,
+        i: usize,
+        from_k: crate::optim::KMode,
+        to_k: crate::optim::KMode,
+    ) -> Result<()> {
+        use crate::optim::adamk::{collapse_v, expand_v, v_len};
+        let man = &self.compiled.manifest;
+        anyhow::ensure!(i < man.n_params(), "migrate_v: tensor {i} out of range");
+        let info = man.params[i].clone();
+        let n = man.n_params();
+        let cur = literal_to_tensor(&self.state[2 * n + i])?;
+        anyhow::ensure!(
+            cur.numel() == v_len(&info, from_k),
+            "migrate_v {:?}: stored v has {} elements, from-mode wants {}",
+            info.name,
+            cur.numel(),
+            v_len(&info, from_k)
+        );
+        let to_len = v_len(&info, to_k);
+        if cur.numel() == to_len {
+            return Ok(()); // degenerate geometry: both modes share a layout
+        }
+        let (data, shape): (Vec<f32>, Vec<usize>) =
+            if to_len == info.numel() {
+                // decompress: reduced -> full by broadcast
+                (expand_v(&info, from_k, &cur.data), info.shape.clone())
+            } else {
+                // compress: full -> reduced by the mean rule; keep the
+                // manifest's baked V shape so engine state matches what a
+                // from-scratch reduced run would carry
+                let vs = self
+                    .compiled
+                    .manifest
+                    .v_shapes
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("train_step manifest missing v_shapes"))?;
+                anyhow::ensure!(
+                    vs[i].iter().product::<usize>() == to_len,
+                    "migrate_v {:?}: target mode stores {} elements but the \
+                     artifact bakes {:?} — compress only to the baked rule",
+                    info.name,
+                    to_len,
+                    vs[i]
+                );
+                (collapse_v(&info, to_k, &cur.data), vs[i].clone())
+            };
+        self.state[2 * n + i] = tensor_to_literal(&Tensor::from_vec(&shape, data))?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

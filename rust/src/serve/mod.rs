@@ -77,6 +77,10 @@ pub struct JobSpec {
     pub fused: Option<String>,
     /// Derive an independent seed per grid point (`sweep --seed-jobs`).
     pub seed_jobs: bool,
+    /// Adaptive rule-switching policy spec (`--adaptive`, DESIGN.md §18):
+    /// `enter:exit:patience[:every]`, or `""` for the defaults. Requires
+    /// `fused` on the native backend.
+    pub adaptive: Option<String>,
 }
 
 impl JobSpec {
@@ -92,6 +96,7 @@ impl JobSpec {
             accum: 1,
             fused: None,
             seed_jobs: false,
+            adaptive: None,
         }
     }
 
@@ -112,6 +117,11 @@ impl JobSpec {
         }
         if self.seed_jobs {
             v.set("seed_jobs", true);
+        }
+        // written only when present, so pre-adaptive daemons and queue
+        // files keep reading/writing byte-identical specs
+        if let Some(spec) = &self.adaptive {
+            v.set("adaptive", spec.as_str());
         }
         v
     }
@@ -147,6 +157,9 @@ impl JobSpec {
                 .opt("seed_jobs")
                 .and_then(|b| b.as_bool().ok())
                 .unwrap_or(false),
+            adaptive: v
+                .opt("adaptive")
+                .and_then(|a| a.as_str().ok().map(String::from)),
         };
         spec.validate()?;
         Ok(spec)
@@ -163,6 +176,12 @@ impl JobSpec {
             bail!("job spec grid exceeds 4096 points");
         }
         BackendSpec::parse(&self.backend)?;
+        if let Some(spec) = &self.adaptive {
+            crate::rules::adaptive::AdaptivePolicy::parse(spec)?;
+            if self.fused.is_none() {
+                bail!("adaptive job specs need a fused engine (set \"fused\")");
+            }
+        }
         Ok(())
     }
 
@@ -189,6 +208,9 @@ impl JobSpec {
         base.accum = self.accum;
         if let Some(ruleset) = &self.fused {
             base.engine = EngineKind::Fused(ruleset.clone());
+        }
+        if let Some(spec) = &self.adaptive {
+            base.adaptive = Some(crate::rules::adaptive::AdaptivePolicy::parse(spec)?);
         }
         let mut configs = Vec::with_capacity(self.n_configs());
         for opt in &self.optimizers {
@@ -233,6 +255,16 @@ mod tests {
         spec.seed_jobs = true;
         let back = JobSpec::from_value(&spec.to_value()).unwrap();
         assert_eq!(spec, back);
+        // adaptive is written only when present (wire back-compat) and
+        // round-trips verbatim; an adaptive spec without a fused engine
+        // is rejected at validation
+        assert!(spec.to_value().opt("adaptive").is_none());
+        spec.adaptive = Some("1.0:0.25:3".into());
+        let back = JobSpec::from_value(&spec.to_value()).unwrap();
+        assert_eq!(spec, back);
+        assert!(back.expand().unwrap().iter().all(|c| c.adaptive.is_some()));
+        spec.fused = None;
+        assert!(spec.validate().is_err());
     }
 
     #[test]

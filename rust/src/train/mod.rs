@@ -8,7 +8,8 @@ use anyhow::Result;
 
 use crate::data::DataSource;
 use crate::obs::{self, registry, telemetry, SpanKind};
-use crate::optim::{clip_global_norm, Optimizer};
+use crate::optim::{clip_global_norm, KMode, Optimizer};
+use crate::rules::adaptive::{AdaptivePolicy, AdaptiveReport, Controller, Direction};
 use crate::runtime::engine::{BatchData, GradEngine, TrainEngine};
 use crate::snr::{ProbeSchedule, SnrProbe};
 use crate::tensor::Tensor;
@@ -289,6 +290,181 @@ pub fn train_fused(
     // eval via extra fused steps at lr=0 would perturb state; instead use
     // the final training-loss tail as the comparable metric for fused runs.
     Ok(finalize(losses, f64::NAN, diverged, probe, t0))
+}
+
+/// Self-tuning fused loop (DESIGN.md §18): [`train_fused`] plus the
+/// adaptive controller. At the policy cadence the controller reads each
+/// ruled tensor's SNR and may migrate its second moment between the
+/// artifact's baked reduced mode and full-V Adam; the native backend
+/// infers the effective K from the stored length on the next dispatch.
+///
+/// The controller's signal is the SNR of m⊙m under the tensor's target
+/// K. M is always stored at the full parameter shape in *both* storage
+/// modes, so the signal — and therefore the whole decision sequence — is
+/// a pure function of the training trajectory, never of the controller's
+/// own past decisions' storage layout. (V-based SNR would degenerate the
+/// moment a tensor compresses: reduced V is constant within each sharing
+/// group by construction.) m and v track the same g/g² streams through
+/// matching EMAs, so m² ranks tensors the way the paper's V-based probe
+/// does.
+///
+/// With a policy that never fires (e.g. [`AdaptivePolicy::never_fire`])
+/// this loop is bit-identical to [`train_fused`] on the same engine:
+/// controller reads don't touch engine state
+/// (`rust/tests/batched_agreement.rs` locks this differentially).
+#[allow(clippy::too_many_arguments)]
+pub fn train_fused_adaptive(
+    engine: &mut TrainEngine,
+    data: &mut dyn DataSource,
+    schedule: &Schedule,
+    steps: usize,
+    probe_schedule: Option<ProbeSchedule>,
+    policy: AdaptivePolicy,
+) -> Result<(RunResult, AdaptiveReport)> {
+    let t0 = std::time::Instant::now();
+    let man = engine.manifest().clone();
+    let label = obs_label(&man.model_name);
+    let target = man
+        .k_modes
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("adaptive training needs a train_step manifest with k_modes"))?;
+    anyhow::ensure!(
+        man.optimizer_name() == "adamw",
+        "adaptive rule switching is defined for the AdamW family, not {:?}",
+        man.optimizer_name()
+    );
+    let names: Vec<String> = man.params.iter().map(|p| p.name.clone()).collect();
+    let mut ctl = Controller::slim_start(policy, names, target.clone());
+    let ruled = (0..ctl.n_tensors()).filter(|&i| !ctl.is_inert(i)).count();
+    let full_v_elems = man.total_param_elems();
+    let mut timeline = vec![(0usize, engine.v_elem_counts()?.iter().sum::<usize>())];
+
+    let mut probe = SnrProbe::new();
+    let mut losses = Vec::with_capacity(steps);
+    let mut initial = f32::NAN;
+    let mut diverged = false;
+
+    for t in 1..=steps {
+        let step_t0 = obs::clock();
+        let batch = data.next_batch();
+        let stats = engine.step(&batch, schedule.lr(t) as f32)?;
+        obs::emit_since(SpanKind::Step, label, step_t0, [t as u64, 0, 0, 0]);
+        if t == 1 {
+            initial = stats.loss;
+        }
+        losses.push((t, stats.loss));
+        if is_diverged(stats.loss, initial) {
+            diverged = true;
+            note_divergence();
+            break;
+        }
+        if ctl.due(t) {
+            let eval_t0 = obs::clock();
+            let ms = engine.first_moments()?;
+            let snrs: Vec<f64> = ms
+                .iter()
+                .enumerate()
+                .map(|(i, m)| {
+                    if ctl.is_inert(i) {
+                        return f64::NAN;
+                    }
+                    let info = &man.params[i];
+                    let m2 = Tensor::from_vec(
+                        &info.shape,
+                        m.data.iter().map(|&x| x * x).collect(),
+                    );
+                    let view = m2.matrix_view(info.fan_out_axis);
+                    crate::snr::snr_of_view(
+                        view.rows,
+                        view.cols,
+                        &view.data,
+                        crate::optim::adamk::effective_k(info, target[i]),
+                    )
+                })
+                .collect();
+            let fired = ctl.observe(t, &snrs);
+            for d in &fired {
+                let (from_k, to_k) = match d.dir {
+                    Direction::Compress => (KMode::None, target[d.tensor]),
+                    Direction::Decompress => (target[d.tensor], KMode::None),
+                };
+                engine.migrate_v(d.tensor, from_k, to_k)?;
+                registry::counter(match d.dir {
+                    Direction::Compress => "adaptive.switches.compress",
+                    Direction::Decompress => "adaptive.switches.decompress",
+                })
+                .inc();
+                if obs::enabled() {
+                    obs::emit(obs::Span {
+                        kind: SpanKind::AdaptiveSwitch,
+                        start_ns: obs::clock(),
+                        dur_ns: 0,
+                        label: obs::intern(&d.name),
+                        args: [
+                            t as u64,
+                            matches!(d.dir, Direction::Decompress) as u64,
+                            d.snr.to_bits(),
+                            0,
+                        ],
+                    });
+                }
+            }
+            if !fired.is_empty() {
+                timeline.push((t, engine.v_elem_counts()?.iter().sum::<usize>()));
+            }
+            registry::counter("adaptive.evals").inc();
+            obs::emit_since(
+                SpanKind::AdaptiveEval,
+                label,
+                eval_t0,
+                [
+                    t as u64,
+                    ctl.n_compressed() as u64,
+                    ruled as u64,
+                    compressed_frac(&ctl, &man).to_bits(),
+                ],
+            );
+        }
+        if telemetry::active(t) {
+            let vs = engine.second_moments()?;
+            telemetry::record_tensors(t, label, &vs, &man.params);
+        }
+        if let Some(ps) = &probe_schedule {
+            if ps.should_probe(t) {
+                let vs = engine.second_moments()?;
+                probe.record_tensors(t, &vs, &man.params);
+            }
+        }
+    }
+
+    let final_v_elems = engine.v_elem_counts()?.iter().sum::<usize>();
+    let report = AdaptiveReport {
+        policy,
+        evals: ctl.evals(),
+        decisions: ctl.log().to_vec(),
+        timeline,
+        final_v_elems,
+        full_v_elems,
+        compressed_frac: compressed_frac(&ctl, &man),
+    };
+    Ok((finalize(losses, f64::NAN, diverged, probe, t0), report))
+}
+
+/// Fraction of Adam's second-moment elements stored compressed: the sum
+/// of `numel` over tensors currently in reduced mode, over the total.
+fn compressed_frac(
+    ctl: &Controller,
+    man: &crate::runtime::manifest::Manifest,
+) -> f64 {
+    let total = man.total_param_elems();
+    if total == 0 {
+        return 0.0;
+    }
+    let compressed: usize = (0..ctl.n_tensors())
+        .filter(|&i| !ctl.is_inert(i) && ctl.mode(i) == crate::rules::adaptive::Mode::Reduced)
+        .map(|i| man.params[i].numel())
+        .sum();
+    compressed as f64 / total as f64
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,448 @@
+//! Property layer for the adaptive rule-switching controller
+//! (DESIGN.md §18): arbitrary SNR traces through the in-repo property
+//! harness must never violate the hysteresis/patience contract, and the
+//! decision sequence must be a pure function of the trace — the
+//! replay-determinism guarantee the resume and serve paths rely on.
+
+use slimadam::optim::KMode;
+use slimadam::proptest::{check, prop_assert, Gen};
+use slimadam::rules::adaptive::{
+    AdaptivePolicy, Controller, Decision, Direction, Mode,
+};
+
+/// A random valid policy with a non-degenerate hysteresis band and
+/// `every = 1` (traces index evals directly; cadence is exercised by
+/// `due` separately).
+fn arbitrary_policy(g: &mut Gen) -> AdaptivePolicy {
+    let enter = g.f64(0.5, 2.0);
+    let p = AdaptivePolicy {
+        enter,
+        exit: enter * g.f64(0.0, 0.9),
+        patience: g.usize(1, 4),
+        every: 1,
+    };
+    p.validate().expect("generated policy must be valid");
+    p
+}
+
+/// Random per-tensor targets: a mix of ruled modes and inert (`None`)
+/// slots, at least one of each where the size allows.
+fn arbitrary_targets(g: &mut Gen, n: usize) -> Vec<KMode> {
+    (0..n)
+        .map(|i| {
+            if i == 0 {
+                KMode::None // always at least one inert tensor
+            } else {
+                *g.choice(&[KMode::None, KMode::FanIn, KMode::FanOut, KMode::Both])
+            }
+        })
+        .collect()
+}
+
+fn names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("t{i}")).collect()
+}
+
+/// One random SNR reading: below the exit edge, inside the band, above
+/// the enter edge, or NaN (which the controller treats as in-band).
+fn arbitrary_reading(g: &mut Gen, p: &AdaptivePolicy) -> f64 {
+    match g.usize(0, 9) {
+        0 => f64::NAN,
+        1..=3 => p.exit - g.f64(1e-3, 1.0),                    // out: decompress side
+        4..=6 => p.enter + g.f64(0.0, 1.0),                    // out: compress side
+        _ => p.exit + (p.enter - p.exit) * g.f64(0.0, 0.95),   // in-band
+    }
+}
+
+fn arbitrary_trace(g: &mut Gen, p: &AdaptivePolicy, n: usize, evals: usize) -> Vec<Vec<f64>> {
+    (0..evals)
+        .map(|_| (0..n).map(|_| arbitrary_reading(g, p)).collect())
+        .collect()
+}
+
+/// Run a fresh controller over a trace (eval `e` observes at step `e+1`).
+fn drive(p: AdaptivePolicy, targets: &[KMode], trace: &[Vec<f64>]) -> Controller {
+    let mut c = Controller::slim_start(p, names(targets.len()), targets.to_vec());
+    for (e, snrs) in trace.iter().enumerate() {
+        c.observe(e + 1, snrs);
+    }
+    c
+}
+
+/// Was `snr` out-of-band for a tensor sitting in `mode`?
+fn out_of_band(p: &AdaptivePolicy, mode: Mode, snr: f64) -> bool {
+    match mode {
+        Mode::Reduced => snr < p.exit,
+        Mode::Full => snr >= p.enter,
+    }
+}
+
+/// Readings confined to the hysteresis band `[exit, enter)` can never
+/// switch anything, however long the run and whatever the patience.
+#[test]
+fn no_flapping_inside_the_band() {
+    check(60, |g| {
+        let p = arbitrary_policy(g);
+        let n = g.usize(1, 8);
+        let targets = arbitrary_targets(g, n);
+        let evals = g.usize(1, 60);
+        let trace: Vec<Vec<f64>> = (0..evals)
+            .map(|_| {
+                (0..n)
+                    .map(|_| {
+                        if g.usize(0, 9) == 0 {
+                            f64::NAN // NaN counts as in-band by contract
+                        } else {
+                            p.exit + (p.enter - p.exit) * g.f64(0.0, 0.95)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let c = drive(p, &targets, &trace);
+        prop_assert(c.log().is_empty(), format!("{:?}", c.log()))?;
+        for (i, &k) in targets.iter().enumerate() {
+            let want = if k == KMode::None { Mode::Full } else { Mode::Reduced };
+            prop_assert(c.mode(i) == want, format!("tensor {i} moved"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Every logged decision was earned: the `patience` evals ending at the
+/// decision were all out-of-band for the mode the tensor held, and none
+/// of that window overlaps a previous decision on the same tensor. This
+/// is checked purely against the trace — no controller internals.
+#[test]
+fn decisions_require_full_patience_streaks() {
+    check(80, |g| {
+        let p = arbitrary_policy(g);
+        let n = g.usize(1, 8);
+        let targets = arbitrary_targets(g, n);
+        let trace = arbitrary_trace(g, &p, n, g.usize(1, 60));
+        let c = drive(p, &targets, &trace);
+
+        let mut prev_eval = vec![0usize; n]; // last decision eval per tensor
+        for d in c.log() {
+            let before = match d.dir {
+                Direction::Compress => Mode::Full,
+                Direction::Decompress => Mode::Reduced,
+            };
+            prop_assert(
+                d.step >= p.patience,
+                format!("decision at eval {} before patience {}", d.step, p.patience),
+            )?;
+            let window = d.step - p.patience + 1..=d.step;
+            prop_assert(
+                *window.start() > prev_eval[d.tensor],
+                format!("streak for {} spans a previous decision", d.name),
+            )?;
+            for e in window {
+                prop_assert(
+                    out_of_band(&p, before, trace[e - 1][d.tensor]),
+                    format!(
+                        "eval {e} reading {} was in-band yet counted toward a \
+                         {:?} at eval {}",
+                        trace[e - 1][d.tensor],
+                        d.dir,
+                        d.step
+                    ),
+                )?;
+            }
+            prev_eval[d.tensor] = d.step;
+        }
+        Ok(())
+    });
+}
+
+/// Per-tensor decisions strictly alternate direction, starting opposite
+/// the start mode (ruled tensors boot Reduced, so their first switch is
+/// always a Decompress), and consecutive switches on one tensor are at
+/// least `patience` evals apart — the no-flapping guarantee.
+#[test]
+fn directions_alternate_with_min_gap() {
+    check(80, |g| {
+        let p = arbitrary_policy(g);
+        let n = g.usize(1, 8);
+        let targets = arbitrary_targets(g, n);
+        let trace = arbitrary_trace(g, &p, n, g.usize(1, 80));
+        let c = drive(p, &targets, &trace);
+
+        for i in 0..n {
+            let mine: Vec<&Decision> = c.log().iter().filter(|d| d.tensor == i).collect();
+            if targets[i] == KMode::None {
+                prop_assert(mine.is_empty(), format!("inert tensor {i} fired"))?;
+                continue;
+            }
+            for (j, d) in mine.iter().enumerate() {
+                let want = if j % 2 == 0 {
+                    Direction::Decompress // slim_start: Reduced first
+                } else {
+                    Direction::Compress
+                };
+                prop_assert(d.dir == want, format!("tensor {i} switch {j}: {:?}", d.dir))?;
+                if j > 0 {
+                    let gap = d.step - mine[j - 1].step;
+                    prop_assert(
+                        gap >= p.patience,
+                        format!("tensor {i} flapped: gap {gap} < patience {}", p.patience),
+                    )?;
+                }
+            }
+            // final mode consistent with the switch count
+            let want = if mine.len() % 2 == 0 { Mode::Reduced } else { Mode::Full };
+            prop_assert(c.mode(i) == want, format!("tensor {i} mode vs log parity"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Replay determinism: the decision log, final modes, and compression
+/// count are a pure function of the observation trace. A second fresh
+/// controller fed the same trace reproduces all of it exactly — the
+/// contract `--resume` relies on to restore adaptive state without
+/// re-executing steps.
+#[test]
+fn decision_sequence_is_pure_function_of_trace() {
+    check(60, |g| {
+        let p = arbitrary_policy(g);
+        let n = g.usize(1, 8);
+        let targets = arbitrary_targets(g, n);
+        let trace = arbitrary_trace(g, &p, n, g.usize(1, 60));
+        let a = drive(p, &targets, &trace);
+        let b = drive(p, &targets, &trace);
+        prop_assert(a.log() == b.log(), "replayed log differs")?;
+        prop_assert(a.evals() == b.evals(), "replayed eval count differs")?;
+        prop_assert(a.n_compressed() == b.n_compressed(), "replayed n_compressed differs")?;
+        for i in 0..n {
+            prop_assert(a.mode(i) == b.mode(i), format!("tensor {i} mode differs"))?;
+            prop_assert(
+                a.current_k(i) == b.current_k(i),
+                format!("tensor {i} current_k differs"),
+            )?;
+        }
+        // and the serialized checkpoint form round-trips the same log
+        let dumped = a.log_json().dump();
+        let parsed = slimadam::json::Value::parse(&dumped).map_err(|e| format!("{e:#}"))?;
+        let back: Vec<Decision> = parsed
+            .as_arr()
+            .map_err(|e| format!("{e:#}"))?
+            .iter()
+            .map(|v| Decision::from_json(v).map_err(|e| format!("{e:#}")))
+            .collect::<Result<_, String>>()?;
+        prop_assert(back == a.log(), "log JSON roundtrip differs")
+    });
+}
+
+/// Deterministic square-wave trace: a hand-computable decision schedule.
+/// Low for `patience` evals → decompress exactly then; high for
+/// `patience` evals → compress exactly then; repeat. Locks the exact
+/// firing step arithmetic (off-by-one regressions show up here first).
+#[test]
+fn square_wave_switches_on_schedule() {
+    let p = AdaptivePolicy { enter: 1.0, exit: 0.25, patience: 3, every: 1 };
+    let mut c = Controller::slim_start(p, names(1), vec![KMode::FanOut]);
+    let mut step = 0;
+    let mut expect = Vec::new();
+    for cycle in 0..4 {
+        let (snr, dir) = if cycle % 2 == 0 {
+            (0.1, Direction::Decompress)
+        } else {
+            (2.0, Direction::Compress)
+        };
+        for j in 1..=p.patience {
+            step += 1;
+            let fired = c.observe(step, &[snr]);
+            if j < p.patience {
+                assert!(fired.is_empty(), "early fire at step {step}");
+            } else {
+                assert_eq!(fired.len(), 1, "no fire at step {step}");
+                assert_eq!(fired[0].dir, dir);
+                expect.push((step, dir));
+            }
+        }
+    }
+    let got: Vec<(usize, Direction)> = c.log().iter().map(|d| (d.step, d.dir)).collect();
+    assert_eq!(got, expect);
+    assert_eq!(c.evals(), 4 * p.patience);
+}
+
+/// `due` honors the cadence for any `every`, and policy specs round-trip
+/// through parse for arbitrary valid values.
+#[test]
+fn cadence_and_spec_roundtrip() {
+    check(60, |g| {
+        let mut p = arbitrary_policy(g);
+        p.every = g.usize(1, 50);
+        let c = Controller::slim_start(p, names(1), vec![KMode::Both]);
+        for step in 1..=200 {
+            prop_assert(
+                c.due(step) == (step % p.every == 0),
+                format!("due({step}) with every={}", p.every),
+            )?;
+        }
+        let back = AdaptivePolicy::parse(&p.spec()).map_err(|e| format!("{e:#}"))?;
+        prop_assert(back == p, format!("{} reparsed as {}", p.spec(), back.spec()))?;
+        let back = AdaptivePolicy::from_key(&p.key()).map_err(|e| format!("{e:#}"))?;
+        prop_assert(back == p, "key roundtrip")
+    });
+}
+
+/// Kill-and-resume with live mode switches (the runstore_resume.rs
+/// cycle, on real native training — this binary never enables synthetic
+/// mode, so the adaptive reports are real): an interrupted adaptive
+/// sweep resumes with zero re-execution, the re-executed job's
+/// controller replays to the identical decision log, and the stored
+/// rows' "adaptive" payloads match the uninterrupted reference byte for
+/// byte. Uses the always-decompress policy (`exit = +inf`: any finite
+/// SNR reading is below it; `enter = +inf`: compression can never
+/// re-fire) so a mode switch is guaranteed at the first eval.
+#[test]
+fn killed_adaptive_sweep_resumes_with_replayed_decisions() {
+    use slimadam::coordinator::{EngineKind, SweepScheduler, TrainConfig};
+    use slimadam::json::Value;
+    use slimadam::runstore::{config_key, RunStore};
+    use slimadam::runtime::backend::BackendSpec;
+
+    assert!(!slimadam::coordinator::synthetic_runs_enabled());
+    let policy = AdaptivePolicy {
+        enter: f64::INFINITY,
+        exit: f64::INFINITY,
+        patience: 1,
+        every: 2,
+    };
+    let configs: Vec<TrainConfig> = [8e-4, 1e-3, 2e-3]
+        .iter()
+        .map(|&lr| {
+            let mut cfg = TrainConfig::auto("gpt_micro", "adam", lr, 6);
+            cfg.backend = BackendSpec::native();
+            cfg.engine = EngineKind::Fused("slimadam".to_string());
+            cfg.adaptive = Some(policy);
+            cfg
+        })
+        .collect();
+
+    let tmpdir = |name: &str| {
+        let dir = std::env::temp_dir().join(format!("slimadam_adaptive_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    };
+    // the "adaptive" payload of the stored row for one config key
+    let stored_adaptive = |store: &RunStore, key: u64| -> String {
+        let hex = format!("{key:016x}");
+        let text = std::fs::read_to_string(store.primary()).unwrap();
+        for line in text.lines() {
+            let Ok(row) = Value::parse(line) else { continue };
+            if row.get("config_key").and_then(|k| k.as_str().map(String::from)).ok()
+                == Some(hex.clone())
+            {
+                return row.get("adaptive").expect("adaptive row payload").dump();
+            }
+        }
+        panic!("no stored row for {hex}");
+    };
+
+    // --- reference: uninterrupted sweep ---
+    let ref_dir = tmpdir("reference");
+    let ref_store = RunStore::open(&ref_dir).unwrap();
+    let reference = SweepScheduler::new(1)
+        .quiet()
+        .stream_to(ref_store.primary())
+        .run(&configs)
+        .unwrap();
+    for s in &reference {
+        let rep = s.adaptive.as_ref().expect("adaptive report");
+        assert!(!rep.decisions.is_empty(), "{}: no switch fired", s.label);
+        assert!(
+            rep.decisions.iter().all(|d| d.dir == Direction::Decompress),
+            "{}: {:?}",
+            s.label,
+            rep.decisions
+        );
+        // everything decompressed: storage is back at the Adam baseline
+        assert_eq!(rep.final_v_elems, rep.full_v_elems, "{}", s.label);
+        assert_eq!(rep.compressed_frac, 0.0, "{}", s.label);
+        assert!(rep.timeline.len() >= 2, "{}: {:?}", s.label, rep.timeline);
+    }
+
+    // --- interrupted: 2 of 3 jobs complete, then a kill tears the tail ---
+    let dir = tmpdir("interrupted");
+    let store = RunStore::open(&dir).unwrap();
+    SweepScheduler::new(1)
+        .quiet()
+        .stream_to(store.primary())
+        .run(&configs[..2])
+        .unwrap();
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(store.primary())
+            .unwrap();
+        f.write_all(b"{\"label\":\"gpt_micro/adam@lr2e-3+ad\",\"adaptive\":{\"dec")
+            .unwrap();
+    }
+
+    // --- resume over the full grid: zero re-execution of stored jobs ---
+    let resumed = SweepScheduler::new(1)
+        .quiet()
+        .resume_from(&store)
+        .unwrap()
+        .stream_to(store.primary())
+        .run(&configs)
+        .unwrap();
+    assert_eq!(resumed.iter().filter(|s| s.restored()).count(), 2);
+    for (r, s) in resumed.iter().zip(&reference) {
+        assert_eq!(r.fingerprint(), s.fingerprint(), "{}", s.label);
+    }
+    let idx = store.index().unwrap();
+    assert_eq!(idx.len(), configs.len());
+    assert_eq!(idx.stats.torn + idx.stats.skipped, 0, "torn tail repaired");
+    for cfg in &configs {
+        assert!(idx.contains(config_key(cfg)));
+    }
+
+    // the re-executed job replayed the controller to the identical state
+    let live = resumed[2].adaptive.as_ref().expect("live adaptive report");
+    assert_eq!(live, reference[2].adaptive.as_ref().unwrap());
+
+    // and its stored row carries the same decision payload byte for byte
+    let key = config_key(&configs[2]);
+    assert_eq!(
+        stored_adaptive(&store, key),
+        stored_adaptive(&ref_store, key),
+        "stored adaptive payloads must replay identically"
+    );
+
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The never-fire differential policy is inert for every finite or
+/// non-finite reading pattern — the guarantee that makes `--adaptive`
+/// with it bit-identical to static SlimAdam.
+#[test]
+fn never_fire_policy_never_fires() {
+    check(40, |g| {
+        let n = g.usize(1, 6);
+        let targets = arbitrary_targets(g, n);
+        let evals = g.usize(1, 40);
+        let trace: Vec<Vec<f64>> = (0..evals)
+            .map(|_| {
+                (0..n)
+                    .map(|_| match g.usize(0, 4) {
+                        0 => f64::NAN,
+                        1 => f64::INFINITY,
+                        2 => f64::NEG_INFINITY,
+                        _ => g.f64(-1e6, 1e6),
+                    })
+                    .collect()
+            })
+            .collect();
+        let c = drive(AdaptivePolicy::never_fire(), &targets, &trace);
+        prop_assert(c.log().is_empty(), format!("{:?}", c.log()))?;
+        let ruled = targets.iter().filter(|&&k| k != KMode::None).count();
+        prop_assert(c.n_compressed() == ruled, "ruled tensors must stay compressed")
+    });
+}

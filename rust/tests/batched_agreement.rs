@@ -220,6 +220,211 @@ fn batched_sweep_resumes_after_kill_byte_identical() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+// ---------------------------------------------------------------------------
+// Adaptive rule-switching differentials (DESIGN.md §18): the controller
+// must be free when it does nothing, and forced V migrations must be
+// exact state transformations, not approximations of training.
+// ---------------------------------------------------------------------------
+
+use slimadam::coordinator::{make_data, DataSpec};
+use slimadam::optim::KMode;
+use slimadam::rules::adaptive::AdaptivePolicy;
+use slimadam::runtime::backend::backend_for;
+use slimadam::runtime::engine::TrainEngine;
+
+/// `--adaptive` with the never-fire policy is bit-identical to the
+/// static SlimAdam run it boots from, on every native model: the
+/// controller evaluates (cadence 2) but can never cross an infinite
+/// threshold, and evaluation itself is read-only. Checked through the
+/// scheduler both unbatched and with `--batch 4` (the planner forces
+/// adaptive configs into singleton groups, so batching must not change
+/// anything either).
+#[test]
+fn adaptive_never_fire_matches_static_slimadam_bit_exact() {
+    let mut never = AdaptivePolicy::never_fire();
+    never.every = 2;
+    for model in native::MODELS {
+        let steps = if *model == "mlp_tiny" { 10 } else { 5 };
+        let static_cfgs: Vec<TrainConfig> = fused_grid(model, "slimadam", steps)
+            .into_iter()
+            .take(4)
+            .collect();
+        let baseline = SweepScheduler::new(1).quiet().run(&static_cfgs).unwrap();
+        let mut adaptive_cfgs = static_cfgs;
+        for cfg in &mut adaptive_cfgs {
+            cfg.adaptive = Some(never);
+        }
+        for (batch, workers) in [(1usize, 2usize), (4, 1)] {
+            let got = SweepScheduler::new(workers)
+                .quiet()
+                .batch(batch)
+                .run(&adaptive_cfgs)
+                .unwrap();
+            assert_eq!(
+                fingerprints(&got),
+                fingerprints(&baseline),
+                "{model}: never-fire adaptive diverged from static slimadam \
+                 (batch {batch})"
+            );
+            for (s, b) in got.iter().zip(&baseline) {
+                assert_eq!(s.result.losses, b.result.losses, "{model}: {}", s.label);
+                let rep = s
+                    .adaptive
+                    .as_ref()
+                    .expect("adaptive summary must carry a report");
+                assert!(rep.decisions.is_empty(), "{model}: {:?}", rep.decisions);
+                assert!(rep.evals > 0, "{model}: controller never evaluated");
+                assert_eq!(
+                    rep.timeline.len(),
+                    1,
+                    "{model}: no switches means the start point only"
+                );
+            }
+        }
+    }
+}
+
+/// Decompressing every ruled tensor at init turns the fused SlimAdam
+/// engine into exact full-V AdamW: expanding all-zero reduced state is
+/// exact, and the kernels infer per-tensor mode from the stored V
+/// length, so the loss stream is bit-identical to a from-scratch fused
+/// Adam engine fed the same batches.
+#[test]
+fn decompress_at_init_matches_full_v_adam_bit_exact() {
+    let backend = backend_for(&BackendSpec::native()).unwrap();
+    for model in ["mlp_tiny", "gpt_micro"] {
+        let mut slim =
+            TrainEngine::new("artifacts", model, "slimadam", backend.as_ref(), "mitchell", 5)
+                .unwrap();
+        let mut adam =
+            TrainEngine::new("artifacts", model, "adam", backend.as_ref(), "mitchell", 5)
+                .unwrap();
+        let man = slim.manifest().clone();
+        let k_modes = man.k_modes.clone().expect("slimadam bakes k_modes");
+        for (i, &k) in k_modes.iter().enumerate() {
+            if k != KMode::None {
+                slim.migrate_v(i, k, KMode::None).unwrap();
+            }
+        }
+        assert_eq!(
+            slim.v_elem_counts().unwrap().iter().sum::<usize>(),
+            man.total_param_elems(),
+            "{model}: decompressed engine must store full V"
+        );
+        let mut data = make_data(&man, &DataSpec::default_for(&man), 11).unwrap();
+        for t in 0..8 {
+            let batch = data.next_batch();
+            let a = slim.step(&batch, 1e-3).unwrap();
+            let b = adam.step(&batch, 1e-3).unwrap();
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{model} step {t}: decompressed slimadam != full-V adam"
+            );
+        }
+    }
+}
+
+/// The forced round trip on live state: train reduced, expand every
+/// ruled tensor, train full, collapse back, train reduced again. A
+/// collapse immediately after an expand must give back each reduced
+/// entry to f32 summation tolerance (the broadcast made every group
+/// constant — DESIGN.md §18's documented tolerance), the engine keeps
+/// stepping through both migrations, and the whole forced schedule is
+/// deterministic: a twin engine driven identically reproduces losses
+/// and final V state bit for bit.
+#[test]
+fn forced_compress_decompress_round_trip() {
+    let backend = backend_for(&BackendSpec::native()).unwrap();
+    let model = "gpt_micro";
+    let mk = || {
+        TrainEngine::new("artifacts", model, "slimadam", backend.as_ref(), "mitchell", 9)
+            .unwrap()
+    };
+    let mut a = mk();
+    let mut b = mk();
+    let man = a.manifest().clone();
+    let k_modes = man.k_modes.clone().unwrap();
+    let ruled: Vec<usize> = k_modes
+        .iter()
+        .enumerate()
+        .filter(|&(_, &k)| k != KMode::None)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!ruled.is_empty(), "{model} slimadam rules no tensor?");
+
+    // tolerance leg: a third engine expands then immediately collapses —
+    // the group mean of a broadcast must reproduce the reduced entries
+    let mut c = mk();
+    let mut data_c = make_data(&man, &DataSpec::default_for(&man), 23).unwrap();
+    for _ in 0..4 {
+        let batch = data_c.next_batch();
+        c.step(&batch, 1e-3).unwrap();
+    }
+    let v0 = c.second_moments().unwrap();
+    for &i in &ruled {
+        c.migrate_v(i, k_modes[i], KMode::None).unwrap();
+        c.migrate_v(i, KMode::None, k_modes[i]).unwrap();
+    }
+    let v1 = c.second_moments().unwrap();
+    for &i in &ruled {
+        for (j, (x, y)) in v0[i].data.iter().zip(&v1[i].data).enumerate() {
+            let tol = 1e-6 * x.abs().max(1e-12) + 1e-9;
+            assert!(
+                (x - y).abs() <= tol,
+                "{}[{j}]: {x} -> {y} after expand+collapse",
+                man.params[i].name
+            );
+        }
+    }
+    let batch = data_c.next_batch();
+    assert!(c.step(&batch, 1e-3).unwrap().loss.is_finite());
+
+    // determinism leg: twin engines through the full forced schedule
+    let mut data = make_data(&man, &DataSpec::default_for(&man), 23).unwrap();
+    let mut losses_a = Vec::new();
+    let mut losses_b = Vec::new();
+    for phase in 0..3 {
+        if phase == 1 {
+            for &i in &ruled {
+                a.migrate_v(i, k_modes[i], KMode::None).unwrap();
+                b.migrate_v(i, k_modes[i], KMode::None).unwrap();
+            }
+        }
+        if phase == 2 {
+            for &i in &ruled {
+                a.migrate_v(i, KMode::None, k_modes[i]).unwrap();
+                b.migrate_v(i, KMode::None, k_modes[i]).unwrap();
+            }
+        }
+        for _ in 0..4 {
+            let batch = data.next_batch();
+            losses_a.push(a.step(&batch, 1e-3).unwrap().loss);
+            losses_b.push(b.step(&batch, 1e-3).unwrap().loss);
+        }
+    }
+    assert!(losses_a.iter().all(|l| l.is_finite()), "{losses_a:?}");
+    assert_eq!(
+        losses_a.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        losses_b.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+        "forced migration schedule must be deterministic"
+    );
+    let va = a.second_moments().unwrap();
+    let vb = b.second_moments().unwrap();
+    for &i in &ruled {
+        assert_eq!(va[i].data, vb[i].data, "{}", man.params[i].name);
+    }
+    // and storage ended reduced again, at the baked shapes
+    let baked: Vec<usize> = man
+        .v_shapes
+        .as_ref()
+        .unwrap()
+        .iter()
+        .map(|s| s.iter().product())
+        .collect();
+    assert_eq!(a.v_elem_counts().unwrap(), baked);
+}
+
 /// Batched rows must be byte-compatible with unbatched rows: resuming a
 /// store written by a batched sweep with an *unbatched* scheduler (and
 /// vice versa) restores every job.

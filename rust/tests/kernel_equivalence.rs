@@ -24,8 +24,12 @@
 //! fused train step at batch 1/2/4/8 (bit-identity) and compares Simd
 //! vs ScalarRef whole-step outputs within the f32 state tolerance.
 
+use slimadam::json::Value;
+use slimadam::optim::adamk::{v_len, AdamK};
+use slimadam::optim::{Hypers, KMode, Optimizer};
 use slimadam::proptest::{check, prop_assert};
 use slimadam::rng::Rng;
+use slimadam::runtime::manifest::ParamInfo;
 use slimadam::runtime::backend::native::{self, KernelMode};
 use slimadam::runtime::backend::{backend_for, Backend, BackendSpec, Executable};
 use slimadam::runtime::literal::{
@@ -33,7 +37,7 @@ use slimadam::runtime::literal::{
     tensor_to_literal,
 };
 use slimadam::runtime::Manifest;
-use slimadam::tensor::Tensor;
+use slimadam::tensor::{Init, Tensor};
 
 /// Restores the thread's kernel mode (and the global intra-op worker
 /// count) when a test body exits, pass or fail.
@@ -713,6 +717,271 @@ fn train_step_scalar_reference_agrees_within_f32_tolerance() {
                     "{model}: state tensor {i} elem {j}: Simd {x} vs ScalarRef {y}"
                 );
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate reduced-V geometry: 1×N, N×1, 1×1 and vector tensors push
+// the sharing-group geometry to its edges — group size 1 (the reduced
+// update degenerates to exact Adam), group count 1 (V is a single
+// scalar), and row-block partitions on tiny matrices. None of these
+// shapes occur in the builtin model manifests, so the model × ruleset
+// sweep above can never reach them; a hand-built manifest drives them
+// through the same bitwise contract, the lane contract, and a
+// split-optimizer oracle.
+// ---------------------------------------------------------------------------
+
+fn degenerate_cases() -> Vec<(Vec<usize>, KMode)> {
+    vec![
+        (vec![1, 5], KMode::FanIn),  // one row: V collapses to a scalar
+        (vec![1, 5], KMode::FanOut), // group size 1: reduced V ≡ full V
+        (vec![1, 5], KMode::Both),
+        (vec![5, 1], KMode::FanOut), // one column: V collapses to a scalar
+        (vec![5, 1], KMode::FanIn),  // group size 1: reduced V ≡ full V
+        (vec![1, 1], KMode::Both),   // scalar tensor, scalar V
+        (vec![1, 1], KMode::None),
+        (vec![7], KMode::FanIn), // vector: effective K degenerates to Both
+        (vec![7], KMode::None),
+        (vec![3, 4], KMode::Blocks(3)), // one row per block
+        (vec![1, 5], KMode::Blocks(1)), // single block on a 1×N view
+        (vec![4, 3], KMode::Blocks(2)),
+    ]
+}
+
+/// Hand-built fused train-step manifest over the degenerate shapes
+/// (`fused_update_l` reads only `params` + the k_modes argument, so the
+/// batch/io sections stay empty). Weight decay alternates per tensor to
+/// exercise both wd branches of the update body.
+fn degenerate_manifest() -> (Manifest, Vec<KMode>) {
+    let cases = degenerate_cases();
+    let params: Vec<ParamInfo> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (shape, _))| ParamInfo {
+            name: format!("p{i}"),
+            shape: shape.clone(),
+            layer_type: "mlp_up".into(),
+            depth: 0,
+            init_mitchell: Init::Normal { std: 0.02 },
+            init_default: Init::Normal { std: 0.02 },
+            wd: i % 2 == 0,
+            fan_out_axis: 0,
+        })
+        .collect();
+    let k_modes: Vec<KMode> = cases.iter().map(|(_, k)| *k).collect();
+    let v_shapes: Vec<Vec<usize>> = params
+        .iter()
+        .zip(&k_modes)
+        .map(|(p, &k)| vec![v_len(p, k)])
+        .collect();
+    let man = Manifest {
+        kind: "train_step".into(),
+        model_name: "degenerate".into(),
+        family: "test".into(),
+        meta: Value::obj(),
+        params,
+        batch: Vec::new(),
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+        k_modes: Some(k_modes.clone()),
+        v_shapes: Some(v_shapes),
+        hypers: Some(Hypers::default()),
+        ruleset: Some("slimadam".into()),
+        optimizer: None,
+        m_shapes: None,
+    };
+    (man, k_modes)
+}
+
+#[test]
+fn degenerate_reduced_v_geometries_are_bitwise_invariant() {
+    let _g = ModeGuard;
+    let (man, k_modes) = degenerate_manifest();
+    let hypers = man.hypers.unwrap_or_default();
+    let v_shapes = man.v_shapes.clone().unwrap();
+    let l = 3usize;
+    let ts = [3usize, 7, 1];
+    let lrs = [1e-3f32, 2e-3, 5e-4];
+    let mut rng = Rng::new(0xDE6E);
+    let mut draw =
+        |n: usize| -> Vec<f32> { (0..n).map(|_| (rng.normal() * 0.1) as f32).collect() };
+    let w0: Vec<Vec<f32>> = man.params.iter().map(|p| draw(p.numel() * l)).collect();
+    let m0: Vec<Vec<f32>> = man.params.iter().map(|p| draw(p.numel() * l)).collect();
+    let v0: Vec<Vec<f32>> = v_shapes
+        .iter()
+        .map(|vs| {
+            draw(vs.iter().product::<usize>() * l)
+                .iter()
+                .map(|x| x.abs())
+                .collect()
+        })
+        .collect();
+    let g0: Vec<Vec<f32>> = man.params.iter().map(|p| draw(p.numel() * l)).collect();
+
+    let run = |mode: KernelMode, workers: usize| {
+        native::set_kernel_mode(mode);
+        slimadam::pool::set_intraop_workers(workers);
+        let (mut w, mut m, mut v) = (w0.clone(), m0.clone(), v0.clone());
+        native::fused_update_l(
+            &man, &k_modes, &hypers, &mut w, &mut m, &mut v, &g0, &ts, &lrs, l,
+        );
+        (w, m, v)
+    };
+    let base = run(KernelMode::ScalarRef, 1);
+    for (mode, workers) in [
+        (KernelMode::Simd, 1),
+        (KernelMode::Simd, 2),
+        (KernelMode::Simd, 8),
+    ] {
+        let got = run(mode, workers);
+        for (which, (state, want)) in
+            [(&got.0, &base.0), (&got.1, &base.1), (&got.2, &base.2)]
+                .into_iter()
+                .enumerate()
+        {
+            for (ti, (a, r)) in state.iter().zip(want.iter()).enumerate() {
+                for (i, (x, y)) in a.iter().zip(r).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "degenerate geometry {:?}×{:?}: state {which} elem {i} \
+                         differs ({mode:?}, {workers} workers)",
+                        man.params[ti].shape,
+                        k_modes[ti],
+                    );
+                }
+            }
+        }
+    }
+    slimadam::pool::set_intraop_workers(1);
+
+    // Lane contract on the same geometry: lane b of the l = 3 run is
+    // bit-identical to an independent l = 1 run at (t_b, lr_b).
+    let lane = |src: &[Vec<f32>], b: usize| -> Vec<Vec<f32>> {
+        src.iter()
+            .map(|t| t.iter().skip(b).step_by(l).copied().collect())
+            .collect()
+    };
+    native::set_kernel_mode(KernelMode::Simd);
+    for b in 0..l {
+        let (mut w, mut m, mut v) = (lane(&w0, b), lane(&m0, b), lane(&v0, b));
+        let g1 = lane(&g0, b);
+        native::fused_update_l(
+            &man,
+            &k_modes,
+            &hypers,
+            &mut w,
+            &mut m,
+            &mut v,
+            &g1,
+            &[ts[b]],
+            &[lrs[b]],
+            1,
+        );
+        for (which, (state, want)) in [
+            (&w, lane(&base.0, b)),
+            (&m, lane(&base.1, b)),
+            (&v, lane(&base.2, b)),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            for (ti, (a, r)) in state.iter().zip(want.iter()).enumerate() {
+                for (i, (x, y)) in a.iter().zip(r).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "lane {b}: state {which} tensor {ti} elem {i} differs \
+                         from the stacked run"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The fused kernel against the split `AdamK` optimizer over three
+/// sequential steps from zero state on every degenerate shape. The two
+/// implementations reassociate the group reductions differently (AdamK's
+/// fast paths hoist per-group denominators), so agreement is within f32
+/// tolerance, not bitwise.
+#[test]
+fn degenerate_geometries_match_split_adamk_oracle() {
+    let _g = ModeGuard;
+    let (man, k_modes) = degenerate_manifest();
+    let hypers = man.hypers.unwrap_or_default();
+    let v_shapes = man.v_shapes.clone().unwrap();
+    let mut rng = Rng::new(0x0DDC);
+    let mut draw =
+        |n: usize| -> Vec<f32> { (0..n).map(|_| (rng.normal() * 0.1) as f32).collect() };
+    let w_init: Vec<Vec<f32>> = man.params.iter().map(|p| draw(p.numel())).collect();
+    let grads: Vec<Vec<Vec<f32>>> = (0..3)
+        .map(|_| man.params.iter().map(|p| draw(p.numel())).collect())
+        .collect();
+
+    native::set_kernel_mode(KernelMode::ScalarRef);
+    let mut w = w_init.clone();
+    let mut m: Vec<Vec<f32>> = man.params.iter().map(|p| vec![0.0; p.numel()]).collect();
+    let mut v: Vec<Vec<f32>> = v_shapes
+        .iter()
+        .map(|vs| vec![0.0; vs.iter().product()])
+        .collect();
+    for (step, g) in grads.iter().enumerate() {
+        native::fused_update_l(
+            &man,
+            &k_modes,
+            &hypers,
+            &mut w,
+            &mut m,
+            &mut v,
+            g,
+            &[step + 1],
+            &[1e-3],
+            1,
+        );
+    }
+
+    let mut opt = AdamK::new("degenerate", man.params.clone(), k_modes.clone(), hypers);
+    let mut params: Vec<Tensor> = man
+        .params
+        .iter()
+        .zip(&w_init)
+        .map(|(p, d)| Tensor::from_vec(&p.shape, d.clone()))
+        .collect();
+    for (step, g) in grads.iter().enumerate() {
+        let gt: Vec<Tensor> = man
+            .params
+            .iter()
+            .zip(g)
+            .map(|(p, d)| Tensor::from_vec(&p.shape, d.clone()))
+            .collect();
+        opt.step(&mut params, &gt, step + 1, 1e-3);
+    }
+
+    for (ti, (fused, split)) in w.iter().zip(&params).enumerate() {
+        for (i, (x, y)) in fused.iter().zip(&split.data).enumerate() {
+            assert!(
+                ((*x as f64) - (*y as f64)).abs() <= 1e-6 + 1e-4 * (*y as f64).abs(),
+                "{:?}×{:?} tensor {ti} elem {i}: fused {x} vs split {y}",
+                man.params[ti].shape,
+                k_modes[ti],
+            );
+        }
+    }
+    // The reduced V storages must agree too — compare through the shared
+    // broadcast expansion so group order is normalized.
+    for (ti, vi) in v.iter().enumerate() {
+        let full = opt.second_moment(ti).unwrap();
+        let expanded =
+            slimadam::optim::adamk::expand_v(&man.params[ti], k_modes[ti], vi);
+        for (i, (x, y)) in expanded.iter().zip(&full.data).enumerate() {
+            assert!(
+                ((*x as f64) - (*y as f64)).abs() <= 1e-9 + 1e-4 * (*y as f64).abs(),
+                "{:?}×{:?} V elem {i}: fused {x} vs split {y}",
+                man.params[ti].shape,
+                k_modes[ti],
+            );
         }
     }
 }
